@@ -1,0 +1,62 @@
+//! Ablation (DESIGN.md design-choice): the paper's shared-key random
+//! subset vs Top-K (must ship indices: 2x wire cost per kept element) vs
+//! uniform quantization, all under the same VARCO linear schedule.
+//!
+//!     cargo run --release --example ablation_compressors -- [--nodes N]
+//!         [--epochs E] [--q Q]
+
+use varco::config::{build_trainer_with_dataset, TrainConfig};
+use varco::experiments::ExperimentScale;
+use varco::graph::Dataset;
+
+fn main() -> varco::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut scale = ExperimentScale { epochs: 120, ..Default::default() };
+    let rest = scale.apply_cli(&args)?;
+    let mut q = 8usize;
+    let mut i = 0;
+    while i < rest.len() {
+        match rest[i].as_str() {
+            "--q" => {
+                i += 1;
+                q = rest[i].parse()?;
+            }
+            other => anyhow::bail!("unknown flag {other:?}"),
+        }
+        i += 1;
+    }
+    let ds = Dataset::load("synth-arxiv", scale.nodes_arxiv, scale.seed)?;
+    println!(
+        "# compressor ablation — synth-arxiv n={} q={q} epochs={} (VARCO linear:5)",
+        ds.n(),
+        scale.epochs
+    );
+    println!("{:<12} {:>10} {:>14} {:>16}", "compressor", "final_acc", "acc@best_val", "floats");
+    for comp in ["subset", "topk", "quantize"] {
+        let cfg = TrainConfig {
+            dataset: "synth-arxiv".into(),
+            nodes: scale.nodes_arxiv,
+            q,
+            partitioner: "random".into(),
+            comm: "linear:5".into(),
+            compressor: comp.into(),
+            engine: scale.engine.clone(),
+            epochs: scale.epochs,
+            hidden: scale.hidden,
+            lr: scale.lr,
+            seed: scale.seed,
+            eval_every: scale.eval_every,
+            ..Default::default()
+        };
+        let mut trainer = build_trainer_with_dataset(&cfg, &ds)?;
+        let report = trainer.run()?;
+        println!(
+            "{:<12} {:>10.4} {:>14.4} {:>16}",
+            comp,
+            report.final_test_accuracy(),
+            report.test_at_best_val(),
+            report.total_floats()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Robustness study: how does VARCO degrade when the fabric drops or
+//! staleness-replays boundary messages?  (The compression channel's
+//! zeros-for-missing semantics makes drops look like extra compression,
+//! so modest drop rates should be survivable — staleness is gentler.)
+//!
+//!     cargo run --release --example failure_injection -- [--nodes N]
+//!         [--epochs E] [--q Q]
+
+use varco::config::{build_trainer_with_dataset, TrainConfig};
+use varco::experiments::ExperimentScale;
+use varco::graph::Dataset;
+
+fn main() -> varco::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut scale = ExperimentScale { epochs: 120, ..Default::default() };
+    let rest = scale.apply_cli(&args)?;
+    let mut q = 8usize;
+    let mut i = 0;
+    while i < rest.len() {
+        match rest[i].as_str() {
+            "--q" => {
+                i += 1;
+                q = rest[i].parse()?;
+            }
+            other => anyhow::bail!("unknown flag {other:?}"),
+        }
+        i += 1;
+    }
+    let ds = Dataset::load("synth-arxiv", scale.nodes_arxiv, scale.seed)?;
+    println!(
+        "# failure injection — synth-arxiv n={} q={q} epochs={} (VARCO linear:5)",
+        ds.n(),
+        scale.epochs
+    );
+    println!(
+        "{:<22} {:>10} {:>14} {:>9} {:>9}",
+        "policy", "final_acc", "acc@best_val", "dropped", "staled"
+    );
+    for (label, drop, stale) in [
+        ("clean", 0.0, 0.0),
+        ("drop 1%", 0.01, 0.0),
+        ("drop 10%", 0.10, 0.0),
+        ("drop 30%", 0.30, 0.0),
+        ("stale 10%", 0.0, 0.10),
+        ("stale 30%", 0.0, 0.30),
+        ("drop 10% + stale 10%", 0.10, 0.10),
+    ] {
+        let cfg = TrainConfig {
+            dataset: "synth-arxiv".into(),
+            nodes: scale.nodes_arxiv,
+            q,
+            partitioner: "random".into(),
+            comm: "linear:5".into(),
+            engine: scale.engine.clone(),
+            epochs: scale.epochs,
+            hidden: scale.hidden,
+            lr: scale.lr,
+            seed: scale.seed,
+            eval_every: scale.eval_every,
+            drop_prob: drop,
+            stale_prob: stale,
+            ..Default::default()
+        };
+        let mut trainer = build_trainer_with_dataset(&cfg, &ds)?;
+        let report = trainer.run()?;
+        println!(
+            "{:<22} {:>10.4} {:>14.4} {:>9} {:>9}",
+            label,
+            report.final_test_accuracy(),
+            report.test_at_best_val(),
+            trainer.fabric().dropped,
+            trainer.fabric().staled
+        );
+    }
+    Ok(())
+}

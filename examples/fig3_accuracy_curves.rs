@@ -1,0 +1,49 @@
+//! Reproduce paper Figure 3: test accuracy per epoch for random
+//! partitioning with 16 servers, both datasets, algorithms
+//! {FullComm, NoComm, VARCO slope 5, Fixed 2, Fixed 4}.
+//!
+//!     cargo run --release --example fig3_accuracy_curves -- [--nodes N]
+//!         [--epochs E] [--q Q] [--dataset D]
+
+use varco::experiments::{figures, ExperimentScale};
+
+fn main() -> varco::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut scale = ExperimentScale { eval_every: 1, ..Default::default() };
+    let rest = scale.apply_cli(&args)?;
+    let mut q = 16usize;
+    let mut datasets = vec!["synth-arxiv".to_string(), "synth-products".to_string()];
+    let mut i = 0;
+    while i < rest.len() {
+        match rest[i].as_str() {
+            "--q" => {
+                i += 1;
+                q = rest[i].parse()?;
+            }
+            "--dataset" => {
+                i += 1;
+                datasets = vec![rest[i].clone()];
+            }
+            other => anyhow::bail!("unknown flag {other:?}"),
+        }
+        i += 1;
+    }
+    std::fs::create_dir_all("runs").ok();
+    for dataset in &datasets {
+        let (csv, reports) = figures::fig3(&scale, dataset, q)?;
+        let path = format!("runs/fig3_{dataset}_q{q}.csv");
+        std::fs::write(&path, &csv)?;
+        println!("# Figure 3 — {dataset}, random partitioning, q={q}");
+        println!("{:<22} {:>10} {:>14}", "algorithm", "final_acc", "acc@best_val");
+        for r in &reports {
+            println!(
+                "{:<22} {:>10.4} {:>14.4}",
+                r.algorithm,
+                r.final_test_accuracy(),
+                r.test_at_best_val()
+            );
+        }
+        println!("full series -> {path}\n");
+    }
+    Ok(())
+}

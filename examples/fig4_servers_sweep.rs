@@ -1,0 +1,27 @@
+//! Reproduce paper Figure 4 (a–d): final accuracy as a function of the
+//! number of servers, panels = {random, metis-like} × {arxiv, products}.
+//!
+//!     cargo run --release --example fig4_servers_sweep -- [--nodes N]
+//!         [--epochs E] [--jobs J]
+
+use varco::experiments::{figures, ExperimentScale};
+
+fn main() -> varco::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut scale = ExperimentScale::default();
+    let rest = scale.apply_cli(&args)?;
+    anyhow::ensure!(rest.is_empty(), "unknown flags {rest:?}");
+    std::fs::create_dir_all("runs").ok();
+    let mut all = String::new();
+    for dataset in ["synth-arxiv", "synth-products"] {
+        for partitioner in ["random", "metis-like"] {
+            let (panel, _) = figures::fig4(&scale, dataset, partitioner)?;
+            print!("{panel}\n");
+            all.push_str(&panel);
+            all.push('\n');
+        }
+    }
+    std::fs::write("runs/fig4_panels.txt", &all)?;
+    eprintln!("wrote runs/fig4_panels.txt");
+    Ok(())
+}

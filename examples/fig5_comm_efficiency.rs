@@ -1,0 +1,63 @@
+//! Reproduce paper Figure 5: test accuracy per floating-point number
+//! communicated (random partitioning, 16 servers).  The claim: the VARCO
+//! curve dominates — for any communication budget it achieves the best
+//! accuracy.
+//!
+//!     cargo run --release --example fig5_comm_efficiency -- [--nodes N]
+//!         [--epochs E] [--q Q] [--dataset D]
+
+use varco::experiments::{figures, ExperimentScale};
+
+fn main() -> varco::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut scale = ExperimentScale { eval_every: 1, ..Default::default() };
+    let rest = scale.apply_cli(&args)?;
+    let mut q = 16usize;
+    let mut datasets = vec!["synth-arxiv".to_string(), "synth-products".to_string()];
+    let mut i = 0;
+    while i < rest.len() {
+        match rest[i].as_str() {
+            "--q" => {
+                i += 1;
+                q = rest[i].parse()?;
+            }
+            "--dataset" => {
+                i += 1;
+                datasets = vec![rest[i].clone()];
+            }
+            other => anyhow::bail!("unknown flag {other:?}"),
+        }
+        i += 1;
+    }
+    std::fs::create_dir_all("runs").ok();
+    for dataset in &datasets {
+        let (series, reports) = figures::fig5(&scale, dataset, q)?;
+        let path = format!("runs/fig5_{dataset}_q{q}.csv");
+        std::fs::write(&path, &series)?;
+        // the same runs are Figure 3's accuracy-per-epoch series; write
+        // that CSV too so one invocation covers both figures
+        let mut fig3csv = String::from("epoch");
+        for r in &reports {
+            fig3csv.push_str(&format!(",{}", r.algorithm.replace(',', ";")));
+        }
+        fig3csv.push('\n');
+        for e in 0..scale.epochs {
+            fig3csv.push_str(&format!("{e}"));
+            for r in &reports {
+                fig3csv.push_str(&format!(",{:.4}", r.records[e].test_acc));
+            }
+            fig3csv.push('\n');
+        }
+        std::fs::write(format!("runs/fig3_{dataset}_q{q}.csv"), &fig3csv)?;
+        println!("# Figure 3 series (same runs):");
+        println!("{:<22} {:>10} {:>14}", "algorithm", "final_acc", "acc@best_val");
+        for r in &reports {
+            println!("{:<22} {:>10.4} {:>14.4}", r.algorithm, r.final_test_accuracy(), r.test_at_best_val());
+        }
+        println!("# Figure 5 — {dataset}, q={q}: best accuracy within budget");
+        let budgets = figures::budget_comparison(&reports);
+        println!("{budgets}");
+        println!("full series -> {path}\n");
+    }
+    Ok(())
+}

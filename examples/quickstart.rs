@@ -1,0 +1,41 @@
+//! Quickstart: train a 3-layer GraphSAGE across 2 simulated workers with
+//! the VARCO linear compression schedule, on a 64-node demo dataset.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Add `--engine pjrt` to run through the AOT JAX/Pallas artifacts
+//! (requires `make artifacts` first).
+
+use varco::config::{build_trainer, TrainConfig};
+
+fn main() -> varco::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cfg = TrainConfig::default_quickstart();
+    cfg.comm = "linear:5".into();
+    cfg.apply_cli(&args)?;
+    println!("config: {}", cfg.describe());
+
+    let mut trainer = build_trainer(&cfg)?;
+    let report = trainer.run()?;
+
+    println!("\nepoch  loss    rate   test_acc  floats_cum");
+    for r in report.records.iter().step_by(10.max(report.records.len() / 10)) {
+        println!(
+            "{:<6} {:<7.4} {:<6} {:<9.4} {}",
+            r.epoch,
+            r.loss,
+            r.rate.map_or("-".into(), |x| format!("{x:.0}")),
+            r.test_acc,
+            r.floats_cum
+        );
+    }
+    let last = report.records.last().unwrap();
+    println!(
+        "\nfinal: test accuracy {:.3} (test@best-val {:.3}), {} floats communicated",
+        last.test_acc,
+        report.test_at_best_val(),
+        report.total_floats()
+    );
+    println!("communication breakdown: {:?}", trainer.ledger().breakdown_by_kind());
+    Ok(())
+}

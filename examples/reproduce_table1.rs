@@ -1,0 +1,19 @@
+//! Reproduce paper Table I: self/cross edge counts for METIS-like vs
+//! random partitioning, Q ∈ {2,4,8,16}, both datasets.
+//!
+//!     cargo run --release --example reproduce_table1 -- [--nodes N] [--seed S]
+
+use varco::experiments::{tables, ExperimentScale};
+
+fn main() -> varco::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut scale = ExperimentScale::default();
+    let rest = scale.apply_cli(&args)?;
+    anyhow::ensure!(rest.is_empty(), "unknown flags {rest:?}");
+    let out = tables::table1(&scale)?;
+    print!("{out}");
+    std::fs::create_dir_all("runs").ok();
+    std::fs::write("runs/table1.txt", &out)?;
+    eprintln!("wrote runs/table1.txt");
+    Ok(())
+}

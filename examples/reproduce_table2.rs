@@ -1,0 +1,31 @@
+//! Reproduce paper Table II: final test accuracy under **random
+//! partitioning** for the full 10-algorithm roster × Q ∈ {2,4,8,16} ×
+//! both datasets (80 training runs — scale with --nodes/--epochs/--jobs).
+//!
+//!     cargo run --release --example reproduce_table2 -- [--nodes N]
+//!         [--epochs E] [--hidden H] [--jobs J]
+
+use varco::experiments::{tables, ExperimentScale};
+
+fn main() -> varco::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut scale = ExperimentScale::default();
+    let rest = scale.apply_cli(&args)?;
+    anyhow::ensure!(rest.is_empty(), "unknown flags {rest:?}");
+    let (out, reports) = tables::table_accuracy(&scale, "random")?;
+    print!("{out}");
+    std::fs::create_dir_all("runs").ok();
+    std::fs::write("runs/table2.txt", &out)?;
+    for r in &reports {
+        let name = format!(
+            "runs/table2_{}_{}_q{}_{}.json",
+            r.dataset,
+            r.partitioner,
+            r.q,
+            r.algorithm.replace([' ', '.', '(', ')'], "_")
+        );
+        r.write_json(std::path::Path::new(&name))?;
+    }
+    eprintln!("wrote runs/table2.txt and {} run jsons", reports.len());
+    Ok(())
+}

@@ -1,0 +1,21 @@
+//! Reproduce paper Table III: final test accuracy under **METIS-like
+//! partitioning** for the full 10-algorithm roster × Q ∈ {2,4,8,16} ×
+//! both datasets.
+//!
+//!     cargo run --release --example reproduce_table3 -- [--nodes N]
+//!         [--epochs E] [--hidden H] [--jobs J]
+
+use varco::experiments::{tables, ExperimentScale};
+
+fn main() -> varco::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut scale = ExperimentScale::default();
+    let rest = scale.apply_cli(&args)?;
+    anyhow::ensure!(rest.is_empty(), "unknown flags {rest:?}");
+    let (out, reports) = tables::table_accuracy(&scale, "metis-like")?;
+    print!("{out}");
+    std::fs::create_dir_all("runs").ok();
+    std::fs::write("runs/table3.txt", &out)?;
+    eprintln!("wrote runs/table3.txt ({} runs)", reports.len());
+    Ok(())
+}

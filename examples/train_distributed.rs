@@ -1,0 +1,76 @@
+//! End-to-end driver (DESIGN.md §4): the full three-layer stack on a real
+//! small workload.
+//!
+//! Trains the paper's 3-layer GraphSAGE on `synth-arxiv` (n=2048,
+//! f_in=128, 40 classes, hidden=128 — ~76k params at this width) across
+//! Q=4 simulated workers with the VARCO linear-slope-5 schedule, running
+//! every forward/backward through the **PJRT artifacts** compiled from
+//! the JAX/Pallas model (`make artifacts`), and logs the loss curve +
+//! communication ledger.  Recorded in EXPERIMENTS.md.
+//!
+//!     cargo run --release --example train_distributed -- [--epochs N]
+//!         [--engine native] [--comm full|none|fixed:R|linear:A] [--q 4]
+
+use std::path::Path;
+use varco::config::{build_trainer, TrainConfig};
+
+fn main() -> varco::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cfg = TrainConfig {
+        dataset: "synth-arxiv".into(),
+        nodes: 2048,
+        q: 4,
+        partitioner: "random".into(),
+        comm: "linear:5".into(),
+        engine: "pjrt".into(),
+        epochs: 120,
+        hidden: 128,
+        lr: 0.01,
+        eval_every: 5,
+        ..Default::default()
+    };
+    cfg.apply_cli(&args)?;
+    println!("end-to-end driver: {}", cfg.describe());
+
+    let t0 = std::time::Instant::now();
+    let mut trainer = build_trainer(&cfg)?;
+    println!("setup in {:.1}s (engine={})", t0.elapsed().as_secs_f64(), cfg.engine);
+
+    let t1 = std::time::Instant::now();
+    let report = trainer.run()?;
+    let train_s = t1.elapsed().as_secs_f64();
+
+    println!("\nloss curve (every 10 epochs):");
+    println!("{:<6} {:>8} {:>7} {:>9} {:>9} {:>14}", "epoch", "loss", "rate", "train_acc", "test_acc", "floats_cum");
+    for r in report.records.iter().filter(|r| r.epoch % 10 == 0 || r.epoch + 1 == cfg.epochs) {
+        println!(
+            "{:<6} {:>8.4} {:>7} {:>9.4} {:>9.4} {:>14}",
+            r.epoch,
+            r.loss,
+            r.rate.map_or("-".into(), |x| format!("{x:.0}")),
+            r.train_acc,
+            r.test_acc,
+            r.floats_cum
+        );
+    }
+    let last = report.records.last().unwrap();
+    println!(
+        "\nfinal: loss {:.4}, test acc {:.4} (test@best-val {:.4})",
+        last.loss,
+        last.test_acc,
+        report.test_at_best_val()
+    );
+    println!(
+        "training wall time: {train_s:.1}s ({:.2}s/epoch); comm: {:?}",
+        train_s / cfg.epochs as f64,
+        trainer.ledger().breakdown_by_kind()
+    );
+
+    std::fs::create_dir_all("runs").ok();
+    let json = Path::new("runs/e2e_train_distributed.json");
+    let csv = Path::new("runs/e2e_train_distributed.csv");
+    report.write_json(json)?;
+    report.write_csv(csv)?;
+    println!("wrote {json:?} and {csv:?}");
+    Ok(())
+}

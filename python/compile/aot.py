@@ -1,0 +1,177 @@
+"""AOT compile path: lower the L2/L1 model to HLO text artifacts.
+
+This is the only place Python touches the system; it runs once at
+``make artifacts``.  For each ShapeConfig we lower, per GNN layer,
+
+    layer{l}_forward, layer{l}_backward, and one loss_grad head,
+
+to **HLO text** (NOT serialized HloModuleProto: jax >= 0.5 emits protos
+with 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md) plus a manifest.json the rust runtime uses to
+validate shapes and locate files.
+
+Usage: python -m compile.aot --out ../artifacts [--configs a,b,c]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+from typing import Callable, List, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .shapes import CONFIGS, DEFAULT_CONFIGS, ShapeConfig
+
+MANIFEST_VERSION = 2
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape: int, dtype=jnp.float32) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shape_list(specs: Sequence[jax.ShapeDtypeStruct]) -> List[dict]:
+    return [{"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs]
+
+
+def make_layer_forward(relu: bool) -> Callable:
+    def fn(h_local, h_bnd, s_ll, s_lb, w_self, w_neigh, bias):
+        return model.layer_forward(
+            h_local, h_bnd, s_ll, s_lb, w_self, w_neigh, bias, relu=relu
+        )
+
+    return fn
+
+
+def make_layer_backward(relu: bool) -> Callable:
+    # Non-relu layers take no `pre` argument: XLA prunes unused parameters,
+    # so the AOT signature must match what survives lowering.
+    if relu:
+        def fn(h_local, s_ll, s_lb, w_self, w_neigh, pre, agg, g_out):
+            return model.layer_backward(
+                h_local, s_ll, s_lb, w_self, w_neigh, pre, agg, g_out, relu=True
+            )
+    else:
+        def fn(h_local, s_ll, s_lb, w_self, w_neigh, agg, g_out):
+            return model.layer_backward(
+                h_local, s_ll, s_lb, w_self, w_neigh, None, agg, g_out, relu=False
+            )
+
+    return fn
+
+
+def lower_config(cfg: ShapeConfig, out_dir: str) -> dict:
+    """Lower every artifact for one shape config; returns its manifest entry."""
+    os.makedirs(out_dir, exist_ok=True)
+    n, b = cfg.n_local, cfg.n_bnd
+    entry = cfg.to_json()
+    entry["artifacts"] = {}
+
+    def emit(name: str, fn: Callable, in_specs: List[jax.ShapeDtypeStruct], n_out: int):
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry["artifacts"][name] = {
+            "file": fname,
+            "inputs": _shape_list(in_specs),
+            "n_outputs": n_out,
+        }
+
+    dims = cfg.layer_dims()
+    for l, (fi, fo) in enumerate(dims):
+        relu = l < cfg.layers - 1
+        fwd_specs = [
+            _spec(n, fi),  # h_local
+            _spec(b, fi),  # h_bnd
+            _spec(n, n),  # s_ll
+            _spec(n, b),  # s_lb
+            _spec(fi, fo),  # w_self
+            _spec(fi, fo),  # w_neigh
+            _spec(fo),  # bias
+        ]
+        emit(f"layer{l}_forward", make_layer_forward(relu), fwd_specs, 3)
+        bwd_specs = [
+            _spec(n, fi),  # h_local
+            _spec(n, n),  # s_ll
+            _spec(n, b),  # s_lb
+            _spec(fi, fo),  # w_self
+            _spec(fi, fo),  # w_neigh
+        ]
+        if relu:
+            bwd_specs.append(_spec(n, fo))  # pre (relu mask)
+        bwd_specs.extend([
+            _spec(n, fi),  # agg (aggregation of the layer INPUT)
+            _spec(n, fo),  # g_out
+        ])
+        emit(f"layer{l}_backward", make_layer_backward(relu), bwd_specs, 5)
+
+    loss_specs = [
+        _spec(n, cfg.classes),  # logits
+        _spec(n, dtype=jnp.int32),  # y
+        _spec(n),  # m_train
+        _spec(n),  # m_val
+        _spec(n),  # m_test
+    ]
+    emit("loss_grad", model.loss_grad, loss_specs, 5)
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--configs",
+        default=",".join(DEFAULT_CONFIGS),
+        help="comma-separated ShapeConfig tags (see compile/shapes.py)",
+    )
+    args = ap.parse_args()
+
+    tags = [t for t in args.configs.split(",") if t]
+    unknown = [t for t in tags if t not in CONFIGS]
+    if unknown:
+        raise SystemExit(f"unknown config tags {unknown}; known: {sorted(CONFIGS)}")
+
+    manifest = {"version": MANIFEST_VERSION, "configs": {}}
+    manifest_path = os.path.join(args.out, "manifest.json")
+    # Merge with an existing manifest so incremental --configs runs add to it.
+    if os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                old = json.load(f)
+            if old.get("version") == MANIFEST_VERSION:
+                manifest["configs"].update(old.get("configs", {}))
+        except (json.JSONDecodeError, OSError):
+            pass
+
+    for tag in tags:
+        cfg = CONFIGS[tag]
+        print(f"[aot] lowering {tag}: n_local={cfg.n_local} n_bnd={cfg.n_bnd} "
+              f"f_in={cfg.f_in} hidden={cfg.hidden} classes={cfg.classes} "
+              f"params={cfg.param_count()}")
+        manifest["configs"][tag] = lower_config(cfg, os.path.join(args.out, tag))
+
+    os.makedirs(args.out, exist_ok=True)
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] wrote {manifest_path} ({len(manifest['configs'])} configs)")
+
+
+if __name__ == "__main__":
+    main()

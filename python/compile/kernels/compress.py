@@ -1,0 +1,56 @@
+"""L1 Pallas kernels: random-subset compression channel (paper Appendix A).
+
+The encoder keeps ``m = ceil(n / r)`` elements of the flattened payload,
+chosen by a shared-seed index vector known to both endpoints; the decoder
+scatters the received values back and writes zeros at the positions that
+were not communicated.  ``decompress(compress(x)) == mask ⊙ x`` — the lossy
+channel of Definition 1 with E[x̃ - x] proportional to the dropped mass.
+
+On a real TPU these run in VMEM over whole boundary-activation tiles; here
+they run interpret=True (CPU PJRT cannot execute Mosaic custom-calls).  The
+rust coordinator implements the same mechanism natively on the hot path
+(shared xoshiro seed); these kernels are the TPU expression of it and the
+pytest oracle cross-checks both against ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _compress_kernel(x_ref, idx_ref, o_ref):
+    """Gather the kept elements: o[i] = x[idx[i]]."""
+    x = x_ref[...]
+    o_ref[...] = x[idx_ref[...]]
+
+
+def _decompress_kernel(vals_ref, idx_ref, o_ref):
+    """Scatter kept values, zeros elsewhere."""
+    o_ref[...] = (
+        jnp.zeros(o_ref.shape, o_ref.dtype).at[idx_ref[...]].set(vals_ref[...])
+    )
+
+
+@jax.jit
+def compress(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Keep x[idx]; x is the flattened payload, idx the shared-seed indices."""
+    (m,) = idx.shape
+    return pl.pallas_call(
+        _compress_kernel,
+        out_shape=jax.ShapeDtypeStruct((m,), x.dtype),
+        interpret=True,
+    )(x, idx)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def decompress(vals: jnp.ndarray, idx: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Inverse of compress up to the dropped (zeroed) elements."""
+    return pl.pallas_call(
+        _decompress_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), vals.dtype),
+        interpret=True,
+    )(vals, idx)

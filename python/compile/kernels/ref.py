@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+(python/tests/) asserts allclose between kernel and oracle across a
+hypothesis-driven shape/dtype sweep.  The oracles are also what the L2
+model would use on a backend without Pallas.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def agg_matmul_ref(s: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """Dense aggregation: S @ H with f32 accumulation."""
+    return jnp.dot(s, h, preferred_element_type=jnp.float32)
+
+
+def compress_ref(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Random-subset compression (paper Appendix A): gather kept elements.
+
+    ``x`` is the flattened payload, ``idx`` the shared-seed kept indices.
+    """
+    return x[idx]
+
+
+def decompress_ref(vals: jnp.ndarray, idx: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Scatter kept values back; zeros at non-communicated positions."""
+    return jnp.zeros((n,), dtype=vals.dtype).at[idx].set(vals)
+
+
+def roundtrip_ref(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """decompress(compress(x)) == mask ⊙ x; the paper's lossy channel."""
+    return decompress_ref(compress_ref(x, idx), idx, x.shape[0])

@@ -1,0 +1,125 @@
+"""L1 Pallas kernel: tiled dense aggregation matmul (the compute hot-spot).
+
+The paper's AGGREGATE step is a sparse gather-scatter on GPU/CPU.  For the
+TPU we rethink it (DESIGN.md §Hardware-Adaptation) as a dense
+partition-block matmul ``S_block @ H`` tiled for the MXU systolic array:
+
+  * grid = (M/bm, N/bn, K/bk), K innermost so each (i, j) output tile is
+    produced by a running f32 accumulator held in VMEM scratch,
+  * BlockSpec expresses the HBM->VMEM schedule the paper's CUDA kernels
+    express with threadblocks,
+  * canonical tile 128x128x128 (one MXU pass per grid step); smaller
+    shapes fall back to the largest divisor tile.
+
+Pallas MUST run interpret=True here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls.  Real-TPU perf is estimated in EXPERIMENTS.md §Perf
+from the VMEM footprint + MXU utilization of these BlockSpecs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Canonical MXU-shaped tile.
+_TILE = 128
+
+
+def _pick_block(dim: int, cap: int = _TILE) -> int:
+    """Largest divisor of `dim` that is <= cap (prefers the MXU tile)."""
+    if dim <= cap:
+        return dim
+    if dim % cap == 0:
+        return cap
+    best = 1
+    for b in range(cap, 0, -1):
+        if dim % b == 0:
+            best = b
+            break
+    return best
+
+
+def _agg_kernel(s_ref, h_ref, o_ref, acc_ref, *, nk: int):
+    """One grid step: acc += S_tile @ H_tile; flush on the last K step."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        s_ref[...], h_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def agg_matmul(
+    s: jnp.ndarray,
+    h: jnp.ndarray,
+    *,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+) -> jnp.ndarray:
+    """Tiled ``S @ H`` with f32 VMEM accumulation.
+
+    s: (M, K) row-normalized adjacency block; h: (K, N) activations.
+    Returns (M, N) f32.
+    """
+    m, k = s.shape
+    k2, n = h.shape
+    if k != k2:
+        raise ValueError(f"shape mismatch: S is {s.shape}, H is {h.shape}")
+    bm = bm or _pick_block(m)
+    bn = bn or _pick_block(n)
+    bk = bk or _pick_block(k)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"blocks ({bm},{bn},{bk}) do not tile ({m},{k},{n})")
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_agg_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[_vmem_scratch(bm, bn)],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(s, h)
+
+
+def _vmem_scratch(bm: int, bn: int):
+    """VMEM scratch allocation, version-portable across jax releases."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.VMEM((bm, bn), jnp.float32)
+    except Exception:  # pragma: no cover - interpret fallback
+        return pl.MemorySpace.ANY  # type: ignore[attr-defined]
+
+
+def vmem_footprint_bytes(bm: int = _TILE, bn: int = _TILE, bk: int = _TILE) -> int:
+    """Static VMEM estimate for one grid step (perf model input).
+
+    Two input tiles + output tile + f32 accumulator, double-buffered inputs.
+    """
+    f32 = 4
+    inputs = 2 * (bm * bk + bk * bn) * f32  # double-buffered S and H tiles
+    out = bm * bn * f32
+    acc = bm * bn * f32
+    return inputs + out + acc
+
+
+def mxu_macs_per_step(bm: int = _TILE, bn: int = _TILE, bk: int = _TILE) -> int:
+    """MACs issued to the MXU per grid step (perf model input)."""
+    return bm * bn * bk

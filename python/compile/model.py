@@ -1,0 +1,187 @@
+"""L2: the paper's model — 3-layer GraphSAGE over partition-block operators.
+
+Per-worker view of the graph (DESIGN.md §1):
+
+  * ``s_ll``  (n_local, n_local)  local->local  normalized adjacency block
+  * ``s_lb``  (n_local, n_bnd)    local->boundary block (zero-padded)
+
+Mean aggregation over the full neighborhood is ``s_ll @ h_local +
+s_lb @ h_bnd`` when both blocks are normalized by the *total* degree; the
+rust coordinator owns the normalization so the same artifacts serve
+full-comm, no-comm (s_lb = 0, local renormalization) and every compression
+scheme in between.
+
+Three function families are AOT-lowered per layer (aot.py):
+
+  layer_forward   (h_local, h_bnd, s_ll, s_lb, w_self, w_neigh, b)
+                   -> (out, pre, agg)          # pre/agg saved for backward
+  layer_backward  (h_local, s_ll, s_lb, w_self, w_neigh, pre, agg, g_out)
+                   -> (g_h_local, g_h_bnd, g_w_self, g_w_neigh, g_b)
+  loss_grad       (logits, y, m_train, m_val, m_test)
+                   -> (loss, g_logits, c_train, c_val, c_test)
+
+The aggregation matmuls are the L1 Pallas kernel (kernels.sage_agg), so
+they lower into the same HLO the rust runtime executes.  The VARCO
+compression channel sits *between* layer artifacts and is applied by the
+rust coordinator; its backward is the same index mask applied to the
+gradient (decompress∘compress is a fixed elementwise mask per message), so
+compressing the returned ``g_h_bnd`` with the shared-seed indices is
+exactly back-propagation "through the differentiable compression routine"
+of Algorithm 1.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.sage_agg import agg_matmul
+from .shapes import ShapeConfig
+
+Array = jnp.ndarray
+
+
+# --------------------------------------------------------------------------
+# Single SAGE layer
+# --------------------------------------------------------------------------
+
+
+def layer_forward(
+    h_local: Array,
+    h_bnd: Array,
+    s_ll: Array,
+    s_lb: Array,
+    w_self: Array,
+    w_neigh: Array,
+    bias: Array,
+    *,
+    relu: bool,
+) -> Tuple[Array, Array, Array]:
+    """One SAGE layer; returns (out, pre_activation, aggregated)."""
+    agg = agg_matmul(s_ll, h_local) + agg_matmul(s_lb, h_bnd)
+    pre = h_local @ w_self + agg @ w_neigh + bias
+    out = jax.nn.relu(pre) if relu else pre
+    return out, pre, agg
+
+
+def layer_backward(
+    h_local: Array,
+    s_ll: Array,
+    s_lb: Array,
+    w_self: Array,
+    w_neigh: Array,
+    pre: Array | None,
+    agg: Array,
+    g_out: Array,
+    *,
+    relu: bool,
+) -> Tuple[Array, Array, Array, Array, Array]:
+    """Manual VJP of layer_forward w.r.t. (h_local, h_bnd, weights).
+
+    ``h_bnd`` itself is not needed: its cotangent is s_lbᵀ @ g_agg and its
+    value only enters through ``agg`` (saved from the forward).  ``pre`` is
+    only consumed by the ReLU mask; non-relu (last) layers take ``None``,
+    and their AOT artifact has no ``pre`` parameter (XLA would prune the
+    unused buffer and break the call arity otherwise).
+    """
+    if relu:
+        assert pre is not None, "relu backward needs the pre-activation"
+        g_pre = g_out * (pre > 0)
+    else:
+        g_pre = g_out
+    g_w_self = h_local.T @ g_pre
+    g_w_neigh = agg.T @ g_pre
+    g_b = jnp.sum(g_pre, axis=0)
+    g_agg = g_pre @ w_neigh.T
+    # sᵀ @ g via the same tiled kernel (transpose is free in HLO layout).
+    g_h_local = g_pre @ w_self.T + agg_matmul(s_ll.T, g_agg)
+    g_h_bnd = agg_matmul(s_lb.T, g_agg)
+    return g_h_local, g_h_bnd, g_w_self, g_w_neigh, g_b
+
+
+# --------------------------------------------------------------------------
+# Loss head
+# --------------------------------------------------------------------------
+
+
+def loss_grad(
+    logits: Array,
+    y: Array,
+    m_train: Array,
+    m_val: Array,
+    m_test: Array,
+) -> Tuple[Array, Array, Array, Array, Array]:
+    """Masked softmax cross-entropy + argmax correct-counts per split.
+
+    y: int32 labels (n,); masks: f32 {0,1} vectors (n,).  The loss is the
+    sum over local train nodes divided by the *local* train count; the
+    coordinator weights per-worker gradients by their train counts when
+    averaging so the global objective matches centralized ERM.
+    """
+    n, c = logits.shape
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(y, c, dtype=logits.dtype)
+    per_node = -jnp.sum(onehot * logp, axis=-1)
+    count = jnp.maximum(jnp.sum(m_train), 1.0)
+    loss = jnp.sum(per_node * m_train) / count
+    g_logits = (jnp.exp(logp) - onehot) * (m_train / count)[:, None]
+    preds = jnp.argmax(logits, axis=-1).astype(y.dtype)
+    hit = (preds == y).astype(logits.dtype)
+    c_train = jnp.sum(hit * m_train)
+    c_val = jnp.sum(hit * m_val)
+    c_test = jnp.sum(hit * m_test)
+    return loss, g_logits, c_train, c_val, c_test
+
+
+# --------------------------------------------------------------------------
+# Whole-model helpers (used by tests and by aot example-arg construction)
+# --------------------------------------------------------------------------
+
+
+def init_weights(cfg: ShapeConfig, key: jax.Array) -> List[Array]:
+    """Glorot-uniform weights in the manifest layout [w_self, w_neigh, b]*L."""
+    ws: List[Array] = []
+    for fi, fo in cfg.layer_dims():
+        key, k1, k2 = jax.random.split(key, 3)
+        lim = (6.0 / (fi + fo)) ** 0.5
+        ws.append(jax.random.uniform(k1, (fi, fo), jnp.float32, -lim, lim))
+        ws.append(jax.random.uniform(k2, (fi, fo), jnp.float32, -lim, lim))
+        ws.append(jnp.zeros((fo,), jnp.float32))
+    return ws
+
+
+def forward_all_layers(
+    cfg: ShapeConfig,
+    x_local: Array,
+    x_bnds: Sequence[Array],
+    s_ll: Array,
+    s_lb: Array,
+    weights: Sequence[Array],
+) -> Array:
+    """Full per-worker forward given boundary activations for every layer.
+
+    ``x_bnds[l]`` is the (possibly lossy) boundary activation entering
+    layer l.  Used by tests to check distributed == centralized at r=1.
+    """
+    h = x_local
+    n_layers = cfg.layers
+    for l in range(n_layers):
+        w_self, w_neigh, b = weights[3 * l], weights[3 * l + 1], weights[3 * l + 2]
+        h, _, _ = layer_forward(
+            h, x_bnds[l], s_ll, s_lb, w_self, w_neigh, b, relu=(l < n_layers - 1)
+        )
+    return h
+
+
+def centralized_forward(
+    cfg: ShapeConfig, x: Array, s: Array, weights: Sequence[Array]
+) -> Array:
+    """Single-machine full-graph forward (the paper's (ERM) objective)."""
+    h = x
+    for l in range(cfg.layers):
+        w_self, w_neigh, b = weights[3 * l], weights[3 * l + 1], weights[3 * l + 2]
+        pre = h @ w_self + jnp.dot(s, h) @ w_neigh + b
+        h = jax.nn.relu(pre) if l < cfg.layers - 1 else pre
+    return h

@@ -1,0 +1,103 @@
+"""Static shape configurations for AOT artifact generation.
+
+Every HLO artifact is compiled for a fixed (n_local, n_boundary, f_in,
+hidden, classes, layers) tuple.  The rust runtime loads the manifest emitted
+by aot.py and refuses to run a workload whose shapes do not match, telling
+the user which config tag to rebuild.
+
+The boundary dimension is the worst case ``n_total - n_local``: under random
+partitioning almost every remote node with an edge into the partition is a
+boundary node, so a tighter bound would depend on the partition seed and
+break AOT staticness.  The rust side zero-pads the boundary blocks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One AOT compilation target: a (dataset, Q) pair's per-worker shapes."""
+
+    tag: str
+    n_total: int  # nodes in the full graph
+    q: int  # number of workers; n_total % q == 0
+    f_in: int  # input feature dimension
+    hidden: int  # hidden width (paper: 256)
+    classes: int  # output classes
+    layers: int = 3  # paper: 3-layer SAGE
+
+    def __post_init__(self) -> None:
+        if self.n_total % self.q != 0:
+            raise ValueError(
+                f"{self.tag}: n_total={self.n_total} not divisible by q={self.q}"
+            )
+        if self.layers < 2:
+            raise ValueError(f"{self.tag}: need >= 2 layers, got {self.layers}")
+
+    @property
+    def n_local(self) -> int:
+        return self.n_total // self.q
+
+    @property
+    def n_bnd(self) -> int:
+        """Worst-case boundary size (all non-local nodes)."""
+        return self.n_total - self.n_local
+
+    def layer_dims(self) -> List[tuple]:
+        """[(f_in, f_out)] per layer: f_in -> hidden -> ... -> classes."""
+        dims = [self.f_in] + [self.hidden] * (self.layers - 1) + [self.classes]
+        return list(zip(dims[:-1], dims[1:]))
+
+    def weight_shapes(self) -> List[tuple]:
+        """Flat weight layout: per layer [w_self, w_neigh, bias]."""
+        shapes = []
+        for fi, fo in self.layer_dims():
+            shapes.extend([(fi, fo), (fi, fo), (fo,)])
+        return shapes
+
+    def param_count(self) -> int:
+        n = 0
+        for s in self.weight_shapes():
+            c = 1
+            for d in s:
+                c *= d
+            n += c
+        return n
+
+    def to_json(self) -> dict:
+        return {
+            "tag": self.tag,
+            "n_total": self.n_total,
+            "q": self.q,
+            "n_local": self.n_local,
+            "n_bnd": self.n_bnd,
+            "f_in": self.f_in,
+            "hidden": self.hidden,
+            "classes": self.classes,
+            "layers": self.layers,
+            "weight_shapes": [list(s) for s in self.weight_shapes()],
+            "param_count": self.param_count(),
+        }
+
+
+# Registry of compile targets.  `make artifacts` builds DEFAULT_CONFIGS;
+# harnesses that need more pass --configs to aot.py.
+CONFIGS: Dict[str, ShapeConfig] = {
+    cfg.tag: cfg
+    for cfg in [
+        # Tiny config: fast to compile and run; used by quickstart and by
+        # the rust integration tests that cross-check PJRT vs native.
+        # Shapes match the `karate-like` rust dataset (n=64, f=8, c=2).
+        ShapeConfig("quickstart", n_total=64, q=2, f_in=8, hidden=8, classes=2),
+        # End-to-end driver config: synth-arxiv at reduced node count,
+        # paper feature dim / class count, Q=4.
+        ShapeConfig("e2e-arxiv-q4", n_total=2048, q=4, f_in=128, hidden=128, classes=40),
+        # Wider variant for the Q=16 HLO-path demonstration.
+        ShapeConfig("e2e-arxiv-q16", n_total=2048, q=16, f_in=128, hidden=128, classes=40),
+    ]
+}
+
+DEFAULT_CONFIGS = ["quickstart", "e2e-arxiv-q4", "e2e-arxiv-q16"]

@@ -1,0 +1,75 @@
+"""Pallas compression channel vs oracle + the paper's channel invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.compress import compress, decompress
+
+
+def _payload_and_idx(n, rate, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    m = max(1, int(np.ceil(n / rate)))
+    idx = jnp.asarray(rng.permutation(n)[:m].astype(np.int32))
+    return x, idx
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 2048),
+    rate=st.sampled_from([1, 2, 4, 8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_compress_matches_ref(n, rate, seed):
+    x, idx = _payload_and_idx(n, rate, seed)
+    np.testing.assert_array_equal(
+        np.asarray(compress(x, idx)), np.asarray(ref.compress_ref(x, idx))
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 2048),
+    rate=st.sampled_from([1, 2, 4, 8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_roundtrip_is_masked_identity(n, rate, seed):
+    """decompress∘compress == mask ⊙ x (Definition 1's channel)."""
+    x, idx = _payload_and_idx(n, rate, seed)
+    got = np.asarray(decompress(compress(x, idx), idx, n))
+    mask = np.zeros(n, bool)
+    mask[np.asarray(idx)] = True
+    want = np.where(mask, np.asarray(x), 0.0)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_rate_one_is_lossless():
+    """r=1 communicates everything: the channel is the identity (δ=0)."""
+    x, idx = _payload_and_idx(512, 1, 7)
+    assert idx.shape[0] == 512
+    got = np.asarray(decompress(compress(x, idx), idx, 512))
+    np.testing.assert_array_equal(got, np.asarray(x))
+
+
+@settings(max_examples=10, deadline=None)
+@given(rate=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**31 - 1))
+def test_error_norm_bounded_by_dropped_mass(rate, seed):
+    """E[||x̃-x||²] equals the mass at dropped indices ≤ ||x||² (ε of Def. 1)."""
+    n = 1024
+    x, idx = _payload_and_idx(n, rate, seed)
+    xt = np.asarray(decompress(compress(x, idx), idx, n))
+    err = ((xt - np.asarray(x)) ** 2).sum()
+    mask = np.zeros(n, bool)
+    mask[np.asarray(idx)] = True
+    dropped = (np.asarray(x)[~mask] ** 2).sum()
+    np.testing.assert_allclose(err, dropped, rtol=1e-6)
+    assert err <= (np.asarray(x) ** 2).sum() + 1e-6
+
+
+def test_kept_count_ceil_division():
+    for n, r in [(100, 3), (128, 128), (5, 2), (7, 7)]:
+        m = max(1, int(np.ceil(n / r)))
+        x, idx = _payload_and_idx(n, r, 0)
+        assert compress(x, idx).shape == (m,)

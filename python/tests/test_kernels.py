@@ -1,0 +1,96 @@
+"""L1 kernel vs pure-jnp oracle: the core correctness signal.
+
+hypothesis sweeps shapes (including non-MXU-aligned dims that exercise the
+divisor-tile fallback) and dtypes; assert_allclose against ref.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.sage_agg import (
+    _pick_block,
+    agg_matmul,
+    mxu_macs_per_step,
+    vmem_footprint_bytes,
+)
+
+DIMS = st.sampled_from([1, 2, 3, 4, 7, 8, 16, 32, 50, 100, 128, 160, 256])
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape).astype(dtype))
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_agg_matmul_matches_ref_f32(m, k, n, seed):
+    s = _rand((m, k), np.float32, seed)
+    h = _rand((k, n), np.float32, seed + 1)
+    out = agg_matmul(s, h)
+    want = ref.agg_matmul_ref(s, h)
+    # K-tiling changes summation order; tolerances account for that.
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_agg_matmul_bf16_inputs_accumulate_f32(m, k, n, seed):
+    s = _rand((m, k), np.float32, seed).astype(jnp.bfloat16)
+    h = _rand((k, n), np.float32, seed + 1).astype(jnp.bfloat16)
+    out = agg_matmul(s, h)
+    assert out.dtype == jnp.float32
+    want = jnp.dot(s, h, preferred_element_type=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(want), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_agg_matmul_mxu_aligned_exact_tiles():
+    s = _rand((256, 384), np.float32, 0)
+    h = _rand((384, 128), np.float32, 1)
+    out = agg_matmul(s, h, bm=128, bn=128, bk=128)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.agg_matmul_ref(s, h)), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_agg_matmul_rejects_mismatched_shapes():
+    with pytest.raises(ValueError, match="shape mismatch"):
+        agg_matmul(jnp.zeros((4, 5)), jnp.zeros((6, 3)))
+
+
+def test_agg_matmul_rejects_bad_blocks():
+    with pytest.raises(ValueError, match="do not tile"):
+        agg_matmul(jnp.zeros((8, 8)), jnp.zeros((8, 8)), bm=3)
+
+
+@given(dim=st.integers(1, 4096))
+@settings(max_examples=60, deadline=None)
+def test_pick_block_divides_and_caps(dim):
+    b = _pick_block(dim)
+    assert 1 <= b <= 128
+    assert dim % b == 0
+
+
+def test_pick_block_prefers_mxu_tile():
+    assert _pick_block(128) == 128
+    assert _pick_block(1024) == 128
+    assert _pick_block(100) == 100
+    assert _pick_block(200) == 100
+
+
+def test_perf_model_is_static_and_sane():
+    # one 128^3 grid step: 2 double-buffered input tiles + out + acc < 1 MiB
+    assert vmem_footprint_bytes() == (2 * 2 * 128 * 128 + 2 * 128 * 128) * 4
+    assert vmem_footprint_bytes() < (1 << 20)
+    assert mxu_macs_per_step() == 128**3
+
+
+def test_zero_matrix_aggregation():
+    s = jnp.zeros((16, 32), jnp.float32)
+    h = _rand((32, 8), np.float32, 3)
+    np.testing.assert_array_equal(np.asarray(agg_matmul(s, h)), 0.0)

@@ -1,0 +1,50 @@
+"""ShapeConfig registry invariants: the AOT shapes must agree with what
+the rust datasets produce, or the PJRT engine refuses to run."""
+
+import pytest
+
+from compile.shapes import CONFIGS, DEFAULT_CONFIGS, ShapeConfig
+
+
+def test_quickstart_matches_karate_like_dataset():
+    cfg = CONFIGS["quickstart"]
+    # rust graph::datasets::tiny_demo: n=64, f=8, 2 classes
+    assert (cfg.n_total, cfg.f_in, cfg.classes) == (64, 8, 2)
+    assert cfg.q == 2 and cfg.n_local == 32
+
+
+def test_e2e_configs_match_synth_arxiv():
+    for tag in ["e2e-arxiv-q4", "e2e-arxiv-q16"]:
+        cfg = CONFIGS[tag]
+        # rust graph::datasets::synth_citation("synth-arxiv", ...): 128-d, 40 classes
+        assert (cfg.f_in, cfg.classes) == (128, 40), tag
+        assert cfg.n_total == 2048, tag
+        assert cfg.n_local * cfg.q == cfg.n_total
+
+
+def test_boundary_is_worst_case():
+    for cfg in CONFIGS.values():
+        assert cfg.n_bnd == cfg.n_total - cfg.n_local
+
+
+def test_weight_shapes_layout():
+    cfg = ShapeConfig("t", n_total=8, q=2, f_in=3, hidden=5, classes=2)
+    shapes = cfg.weight_shapes()
+    # [w_self, w_neigh, bias] x 3 layers
+    assert shapes == [
+        (3, 5), (3, 5), (5,),
+        (5, 5), (5, 5), (5,),
+        (5, 2), (5, 2), (2,),
+    ]
+    assert cfg.param_count() == (15 + 15 + 5) + (25 + 25 + 5) + (10 + 10 + 2)
+
+
+def test_invalid_configs_rejected():
+    with pytest.raises(ValueError, match="divisible"):
+        ShapeConfig("bad", n_total=10, q=3, f_in=4, hidden=4, classes=2)
+    with pytest.raises(ValueError, match="layers"):
+        ShapeConfig("bad", n_total=8, q=2, f_in=4, hidden=4, classes=2, layers=1)
+
+
+def test_default_configs_subset_of_registry():
+    assert set(DEFAULT_CONFIGS) <= set(CONFIGS)

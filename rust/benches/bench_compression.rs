@@ -1,0 +1,39 @@
+//! L3 micro-bench: compression channel throughput vs rate and mechanism.
+//! Informs the per-message overhead budget in EXPERIMENTS.md §Perf.
+
+#[path = "harness.rs"]
+mod harness;
+
+use varco::compress::by_name;
+use varco::util::Rng;
+
+fn main() {
+    let budget = harness::budget();
+    let mut rng = Rng::new(0);
+    let payload: Vec<f32> = (0..262_144).map(|_| rng.next_normal()).collect();
+
+    harness::section("compress: 256k-float payload (boundary activations)");
+    for name in ["subset", "topk", "quantize"] {
+        let comp = by_name(name).unwrap();
+        for rate in [1.0f32, 4.0, 32.0, 128.0] {
+            let label = format!("{name} r={rate}");
+            let m = harness::bench(&label, budget, || {
+                let p = comp.compress(&payload, rate, 42);
+                std::hint::black_box(p.values.len());
+            });
+            let mfloats = payload.len() as f64 / 1e6;
+            println!("    -> {:.1} Mfloat/s", m.throughput(mfloats) * 1.0);
+        }
+    }
+
+    harness::section("roundtrip (compress + decompress), subset");
+    let comp = by_name("subset").unwrap();
+    let mut out = vec![0.0f32; payload.len()];
+    for rate in [1.0f32, 8.0, 128.0] {
+        harness::bench(&format!("subset roundtrip r={rate}"), budget, || {
+            let p = comp.compress(&payload, rate, 7);
+            comp.decompress(&p, &mut out);
+            std::hint::black_box(out[0]);
+        });
+    }
+}

@@ -1,0 +1,67 @@
+//! End-to-end per-epoch latency: native vs PJRT engines, per comm mode.
+//! This is the bench behind every accuracy table's wall-clock column and
+//! the §Perf L3 target ("coordinator overhead < 10% of step time").
+
+#[path = "harness.rs"]
+mod harness;
+
+use varco::compress::{CommMode, Scheduler};
+use varco::config::{build_trainer_with_dataset, TrainConfig};
+use varco::graph::Dataset;
+
+fn bench_engine(engine: &str, dataset: &Dataset, nodes: usize, q: usize, hidden: usize) {
+    let budget = harness::budget();
+    for (label, comm) in [
+        ("full", CommMode::Full),
+        ("none", CommMode::None),
+        ("fixed:8", CommMode::Compressed(Scheduler::Fixed { rate: 8.0 })),
+    ] {
+        let cfg = TrainConfig {
+            dataset: dataset.name.clone(),
+            nodes,
+            q,
+            partitioner: "random".into(),
+            comm: "full".into(),
+            engine: engine.into(),
+            epochs: 1,
+            hidden,
+            eval_every: usize::MAX - 1,
+            ..Default::default()
+        };
+        let Ok(mut trainer) = build_trainer_with_dataset(&cfg, dataset) else {
+            println!("    (skip {engine}: artifacts not built for this shape)");
+            return;
+        };
+        trainer.set_comm_mode(comm);
+        let mut epoch = 0usize;
+        harness::bench(&format!("{engine} {label} epoch"), budget, || {
+            trainer.train_epoch(epoch).unwrap();
+            epoch += 1;
+        });
+    }
+}
+
+fn main() {
+    // small config: both engines comparable head-to-head
+    let ds_small = Dataset::load("karate-like", 0, 3).unwrap();
+    harness::section("karate-like n=64 q=2 hidden=8 (quickstart artifact shape)");
+    bench_engine("native", &ds_small, 0, 2, 8);
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        bench_engine("pjrt", &ds_small, 0, 2, 8);
+    } else {
+        println!("    (pjrt skipped: run `make artifacts`)");
+    }
+
+    // experiment-scale config: native engine (the grid path)
+    let ds = Dataset::load("synth-arxiv", 4096, 0).unwrap();
+    harness::section("synth-arxiv n=4096 q=16 hidden=64 (grid scale, native)");
+    bench_engine("native", &ds, 4096, 16, 64);
+
+    // e2e artifact shape: pjrt at n=2048 q=4 hidden=128
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let ds2 = Dataset::load("synth-arxiv", 2048, 0).unwrap();
+        harness::section("synth-arxiv n=2048 q=4 hidden=128 (e2e artifact shape, pjrt)");
+        bench_engine("pjrt", &ds2, 2048, 4, 128);
+        bench_engine("native", &ds2, 2048, 4, 128);
+    }
+}

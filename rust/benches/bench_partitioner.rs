@@ -1,0 +1,38 @@
+//! Partitioner bench: wall time and cut quality, METIS-like vs random vs
+//! hash (ablation for the Table I substrate).
+
+#[path = "harness.rs"]
+mod harness;
+
+use varco::graph::Dataset;
+use varco::partition::{by_name, PartitionStats};
+
+fn main() {
+    let budget = harness::budget();
+    for (name, nodes) in [("synth-arxiv", 4096usize), ("synth-products", 4096)] {
+        let ds = Dataset::load(name, nodes, 0).unwrap();
+        harness::section(&format!(
+            "partition {} (n={}, m={})",
+            name,
+            ds.n(),
+            ds.graph.num_edges()
+        ));
+        for pname in ["random", "hash", "metis-like"] {
+            for q in [4usize, 16] {
+                let p = by_name(pname, 0).unwrap();
+                harness::bench(&format!("{pname} q={q}"), budget, || {
+                    let part = p.partition(&ds.graph, q).unwrap();
+                    std::hint::black_box(part.assignment.len());
+                });
+                let part = p.partition(&ds.graph, q).unwrap();
+                let stats = PartitionStats::compute(&ds.graph, &part);
+                println!(
+                    "    -> cut {:.2}% ({} edges), max boundary {}",
+                    stats.cross_pct(),
+                    stats.cross_edges,
+                    stats.max_boundary
+                );
+            }
+        }
+    }
+}

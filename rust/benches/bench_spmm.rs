@@ -1,0 +1,43 @@
+//! Aggregation micro-bench: CSR spmm (native hot path) vs dense matmul
+//! (what the PJRT artifact computes) — the §Hardware-Adaptation trade.
+
+#[path = "harness.rs"]
+mod harness;
+
+use varco::graph::Dataset;
+use varco::partition::{by_name, WorkerGraph};
+use varco::tensor::Matrix;
+use varco::util::Rng;
+
+fn main() {
+    let budget = harness::budget();
+    let ds = Dataset::load("synth-arxiv", 4096, 0).unwrap();
+    let part = by_name("random", 0).unwrap().partition(&ds.graph, 4).unwrap();
+    let wgs = WorkerGraph::build_all(&ds.graph, &part).unwrap();
+    let wg = &wgs[0];
+    let mut rng = Rng::new(1);
+
+    for f in [64usize, 128, 256] {
+        harness::section(&format!("S_ll @ H  (n_local={}, F={f})", wg.n_local()));
+        let x = Matrix::from_fn(wg.s_ll.cols, f, |_, _| rng.next_normal());
+        let mut out = Matrix::zeros(wg.s_ll.rows, f);
+        let m_sparse = harness::bench("sparse spmm", budget, || {
+            out.data.fill(0.0);
+            wg.s_ll.spmm_into(&x, &mut out);
+            std::hint::black_box(out.data[0]);
+        });
+        let dense = wg.s_ll.to_dense();
+        let m_dense = harness::bench("dense matmul", budget, || {
+            let o = dense.matmul(&x);
+            std::hint::black_box(o.data[0]);
+        });
+        let nnz = wg.s_ll.values.len();
+        println!(
+            "    -> sparse {:.2} GFLOP/s ({} nnz), dense {:.2} GFLOP/s, speedup {:.1}x",
+            m_sparse.throughput(2.0 * nnz as f64 * f as f64) / 1e9,
+            nnz,
+            m_dense.throughput(2.0 * (dense.rows * dense.cols * f) as f64) / 1e9,
+            m_dense.median.as_secs_f64() / m_sparse.median.as_secs_f64()
+        );
+    }
+}

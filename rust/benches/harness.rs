@@ -1,0 +1,71 @@
+//! Minimal benchmarking harness (criterion is unavailable offline).
+//!
+//! Measures wall-clock over warmup + timed iterations, reports
+//! median / mean / p90 per iteration plus derived throughput.  Used by
+//! every `cargo bench` target via `#[path = "harness.rs"] mod harness;`.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p90: Duration,
+}
+
+impl Measurement {
+    pub fn per_iter_us(&self) -> f64 {
+        self.median.as_secs_f64() * 1e6
+    }
+
+    /// items/sec given items processed per iteration.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.median.as_secs_f64()
+    }
+}
+
+/// Time `f` with auto-scaled iteration counts (~`budget` of wall time).
+pub fn bench(name: &str, budget: Duration, mut f: impl FnMut()) -> Measurement {
+    // warmup + calibration
+    let cal_start = Instant::now();
+    f();
+    let once = cal_start.elapsed().max(Duration::from_nanos(100));
+    let iters = ((budget.as_secs_f64() / once.as_secs_f64()).ceil() as usize).clamp(5, 10_000);
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let median = samples[samples.len() / 2];
+    let p90 = samples[samples.len() * 9 / 10];
+    let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+    let m = Measurement { name: name.to_string(), iters, median, mean, p90 };
+    println!(
+        "{:<44} {:>10.1} us/iter   (mean {:>10.1}, p90 {:>10.1}, n={})",
+        m.name,
+        m.median.as_secs_f64() * 1e6,
+        m.mean.as_secs_f64() * 1e6,
+        m.p90.as_secs_f64() * 1e6,
+        m.iters
+    );
+    m
+}
+
+/// Default per-case budget; override with VARCO_BENCH_BUDGET_MS.
+pub fn budget() -> Duration {
+    let ms = std::env::var("VARCO_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(300u64);
+    Duration::from_millis(ms)
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

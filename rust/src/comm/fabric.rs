@@ -1,0 +1,195 @@
+//! In-process mailbox fabric between simulated workers.
+//!
+//! Deterministic delivery with optional failure injection: messages can be
+//! dropped (receiver sees zeros — the compression mechanism's natural
+//! missing-value semantics) or replaced by the previous epoch's payload
+//! (staleness, as in historical-embedding systems).
+
+use super::CommLedger;
+use crate::compress::Payload;
+use crate::util::Rng;
+
+/// What a message carries (tags the ledger and the failure policy).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MessageKind {
+    /// boundary activations entering layer `l`
+    Activation { layer: usize },
+    /// gradients w.r.t. activations sent back for layer `l`
+    Gradient { layer: usize },
+    /// model weights to/from the parameter server
+    Weights,
+}
+
+impl MessageKind {
+    pub fn ledger_tag(&self) -> &'static str {
+        match self {
+            MessageKind::Activation { .. } => "activation",
+            MessageKind::Gradient { .. } => "gradient",
+            MessageKind::Weights => "weights",
+        }
+    }
+}
+
+/// A tagged payload in flight.
+#[derive(Clone, Debug)]
+pub struct Message {
+    pub from: usize,
+    pub to: usize,
+    pub kind: MessageKind,
+    pub payload: Payload,
+}
+
+/// Failure injection policy.
+#[derive(Clone, Debug, Default)]
+pub struct FailurePolicy {
+    /// probability a data message is dropped entirely
+    pub drop_prob: f64,
+    /// probability a data message is replaced by last epoch's copy
+    pub stale_prob: f64,
+    /// seed for the failure coin flips
+    pub seed: u64,
+}
+
+/// Mailbox grid: `inbox[to]` holds undelivered messages.
+pub struct Fabric {
+    q: usize,
+    inbox: Vec<Vec<Message>>,
+    ledger: CommLedger,
+    policy: FailurePolicy,
+    rng: Rng,
+    /// last delivered payload per (from, to, kind) for staleness injection
+    history: std::collections::HashMap<(usize, usize, MessageKind), Payload>,
+    pub dropped: usize,
+    pub staled: usize,
+}
+
+impl Fabric {
+    pub fn new(q: usize) -> Fabric {
+        Fabric::with_policy(q, FailurePolicy::default())
+    }
+
+    pub fn with_policy(q: usize, policy: FailurePolicy) -> Fabric {
+        let rng = Rng::new(policy.seed ^ 0xFAB);
+        Fabric {
+            q,
+            inbox: vec![Vec::new(); q],
+            ledger: CommLedger::new(),
+            policy,
+            rng,
+            history: std::collections::HashMap::new(),
+            dropped: 0,
+            staled: 0,
+        }
+    }
+
+    pub fn q(&self) -> usize {
+        self.q
+    }
+
+    /// Send a message; ledger records its wire cost, failures may mutate it.
+    pub fn send(&mut self, epoch: usize, mut msg: Message) {
+        assert!(msg.to < self.q && msg.from < self.q, "bad endpoint");
+        self.ledger.record(
+            epoch,
+            msg.from,
+            msg.to,
+            msg.kind.ledger_tag(),
+            msg.payload.wire_floats(),
+        );
+        let key = (msg.from, msg.to, msg.kind);
+        if msg.kind != MessageKind::Weights {
+            let roll = self.rng.next_f64();
+            if roll < self.policy.drop_prob {
+                self.dropped += 1;
+                // dropped: receiver reconstructs zeros (empty value set)
+                msg.payload.values.iter_mut().for_each(|v| *v = 0.0);
+            } else if roll < self.policy.drop_prob + self.policy.stale_prob {
+                if let Some(prev) = self.history.get(&key) {
+                    if prev.n == msg.payload.n && prev.values.len() == msg.payload.values.len() {
+                        self.staled += 1;
+                        msg.payload = prev.clone();
+                    }
+                }
+            }
+        }
+        self.history.insert(key, msg.payload.clone());
+        self.inbox[msg.to].push(msg);
+    }
+
+    /// Drain all messages waiting for `to` (delivery order = send order).
+    pub fn recv_all(&mut self, to: usize) -> Vec<Message> {
+        std::mem::take(&mut self.inbox[to])
+    }
+
+    /// All mailboxes empty? (end-of-round invariant)
+    pub fn is_quiescent(&self) -> bool {
+        self.inbox.iter().all(|m| m.is_empty())
+    }
+
+    pub fn ledger(&self) -> &CommLedger {
+        &self.ledger
+    }
+
+    pub fn ledger_mut(&mut self) -> &mut CommLedger {
+        &mut self.ledger
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn payload(vals: &[f32]) -> Payload {
+        Payload { n: vals.len(), values: vals.to_vec(), indices: None, key: 0, side: vec![], wire_override: None }
+    }
+
+    #[test]
+    fn send_recv_roundtrip_and_ledger() {
+        let mut f = Fabric::new(2);
+        f.send(0, Message { from: 0, to: 1, kind: MessageKind::Activation { layer: 0 }, payload: payload(&[1.0, 2.0]) });
+        assert!(!f.is_quiescent());
+        let msgs = f.recv_all(1);
+        assert_eq!(msgs.len(), 1);
+        assert_eq!(msgs[0].payload.values, vec![1.0, 2.0]);
+        assert!(f.is_quiescent());
+        assert_eq!(f.ledger().total_floats(), 2);
+    }
+
+    #[test]
+    fn drop_policy_zeroes_payload_but_still_charges_wire() {
+        let mut f = Fabric::with_policy(2, FailurePolicy { drop_prob: 1.0, stale_prob: 0.0, seed: 1 });
+        f.send(0, Message { from: 0, to: 1, kind: MessageKind::Activation { layer: 0 }, payload: payload(&[3.0, 4.0]) });
+        let msgs = f.recv_all(1);
+        assert_eq!(msgs[0].payload.values, vec![0.0, 0.0]);
+        assert_eq!(f.dropped, 1);
+        assert_eq!(f.ledger().total_floats(), 2);
+    }
+
+    #[test]
+    fn stale_policy_replays_previous_epoch() {
+        let mut f = Fabric::with_policy(2, FailurePolicy { drop_prob: 0.0, stale_prob: 1.0, seed: 2 });
+        let kind = MessageKind::Activation { layer: 1 };
+        f.send(0, Message { from: 0, to: 1, kind, payload: payload(&[1.0]) });
+        let _ = f.recv_all(1); // first message has no history: delivered as-is
+        f.send(1, Message { from: 0, to: 1, kind, payload: payload(&[9.0]) });
+        let msgs = f.recv_all(1);
+        assert_eq!(msgs[0].payload.values, vec![1.0]);
+        assert_eq!(f.staled, 1);
+    }
+
+    #[test]
+    fn weights_messages_exempt_from_failures() {
+        let mut f = Fabric::with_policy(2, FailurePolicy { drop_prob: 1.0, stale_prob: 0.0, seed: 3 });
+        f.send(0, Message { from: 0, to: 1, kind: MessageKind::Weights, payload: payload(&[5.0]) });
+        let msgs = f.recv_all(1);
+        assert_eq!(msgs[0].payload.values, vec![5.0]);
+        assert_eq!(f.dropped, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad endpoint")]
+    fn bad_endpoint_panics() {
+        let mut f = Fabric::new(2);
+        f.send(0, Message { from: 0, to: 5, kind: MessageKind::Weights, payload: payload(&[]) });
+    }
+}

@@ -1,0 +1,112 @@
+//! Communication accounting: the x-axis of Figure 5.
+
+/// One accounting record: a message's float-equivalents on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LedgerEntry {
+    pub epoch: usize,
+    pub from: usize,
+    pub to: usize,
+    /// forward-activation, backward-gradient, or weight-sync round
+    pub kind: &'static str,
+    pub floats: usize,
+}
+
+/// Append-only ledger; aggregation helpers answer the paper's questions.
+#[derive(Clone, Debug, Default)]
+pub struct CommLedger {
+    entries: Vec<LedgerEntry>,
+    /// running total, so hot-path queries are O(1)
+    total: usize,
+    per_epoch: Vec<usize>,
+}
+
+impl CommLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, epoch: usize, from: usize, to: usize, kind: &'static str, floats: usize) {
+        if self.per_epoch.len() <= epoch {
+            self.per_epoch.resize(epoch + 1, 0);
+        }
+        self.per_epoch[epoch] += floats;
+        self.total += floats;
+        self.entries.push(LedgerEntry { epoch, from, to, kind, floats });
+    }
+
+    /// Total floats communicated so far.
+    pub fn total_floats(&self) -> usize {
+        self.total
+    }
+
+    pub fn floats_in_epoch(&self, epoch: usize) -> usize {
+        self.per_epoch.get(epoch).copied().unwrap_or(0)
+    }
+
+    /// Cumulative floats after each epoch (Figure 5's x-series).
+    pub fn cumulative_by_epoch(&self) -> Vec<usize> {
+        let mut acc = 0;
+        self.per_epoch
+            .iter()
+            .map(|&f| {
+                acc += f;
+                acc
+            })
+            .collect()
+    }
+
+    pub fn entries(&self) -> &[LedgerEntry] {
+        &self.entries
+    }
+
+    /// Conservation check: per-epoch sums equal entry sums (property test).
+    pub fn verify_conservation(&self) -> bool {
+        let from_entries: usize = self.entries.iter().map(|e| e.floats).sum();
+        from_entries == self.total && self.per_epoch.iter().sum::<usize>() == self.total
+    }
+
+    pub fn breakdown_by_kind(&self) -> std::collections::BTreeMap<&'static str, usize> {
+        let mut map = std::collections::BTreeMap::new();
+        for e in &self.entries {
+            *map.entry(e.kind).or_insert(0) += e.floats;
+        }
+        map
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_and_cumulative() {
+        let mut l = CommLedger::new();
+        l.record(0, 0, 1, "fwd", 100);
+        l.record(0, 1, 0, "fwd", 50);
+        l.record(2, 0, 1, "bwd", 25);
+        assert_eq!(l.total_floats(), 175);
+        assert_eq!(l.floats_in_epoch(0), 150);
+        assert_eq!(l.floats_in_epoch(1), 0);
+        assert_eq!(l.cumulative_by_epoch(), vec![150, 150, 175]);
+        assert!(l.verify_conservation());
+    }
+
+    #[test]
+    fn breakdown_by_kind() {
+        let mut l = CommLedger::new();
+        l.record(0, 0, 1, "fwd", 10);
+        l.record(0, 0, 1, "weights", 7);
+        l.record(1, 1, 0, "fwd", 3);
+        let b = l.breakdown_by_kind();
+        assert_eq!(b["fwd"], 13);
+        assert_eq!(b["weights"], 7);
+    }
+
+    #[test]
+    fn empty_ledger() {
+        let l = CommLedger::new();
+        assert_eq!(l.total_floats(), 0);
+        assert!(l.cumulative_by_epoch().is_empty());
+        assert!(l.verify_conservation());
+    }
+}

@@ -1,0 +1,15 @@
+//! Simulated inter-worker communication fabric with exact accounting.
+//!
+//! The paper's efficiency metric (Figure 5) is accuracy per float
+//! communicated; the `Ledger` counts exactly those floats per message.
+//! The fabric is an in-process mailbox grid — deterministic, inspectable,
+//! and instrumentable with failure injection (dropped or stale messages)
+//! for robustness tests.
+
+pub mod fabric;
+pub mod ledger;
+pub mod time_model;
+
+pub use fabric::{Fabric, FailurePolicy, Message, MessageKind};
+pub use ledger::{CommLedger, LedgerEntry};
+pub use time_model::LinkModel;

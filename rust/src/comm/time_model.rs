@@ -1,0 +1,85 @@
+//! Analytic communication-time model: converts the ledger's float counts
+//! into estimated wall-clock on a parameterized interconnect, so the
+//! communication *savings* the paper claims in bytes can be stated in
+//! seconds for a given cluster (the authors' testbed is unavailable —
+//! DESIGN.md §2).
+
+use super::CommLedger;
+
+/// A simple α-β interconnect: per-message latency α, inverse bandwidth β.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkModel {
+    /// per-message latency, seconds
+    pub alpha: f64,
+    /// seconds per byte (1/bandwidth)
+    pub beta: f64,
+}
+
+impl LinkModel {
+    /// 10 GbE with ~50us software latency (DistDGL-class cluster).
+    pub fn ten_gbe() -> LinkModel {
+        LinkModel { alpha: 50e-6, beta: 8.0 / 10e9 }
+    }
+
+    /// 100 Gb InfiniBand-class fabric.
+    pub fn hundred_gb() -> LinkModel {
+        LinkModel { alpha: 5e-6, beta: 8.0 / 100e9 }
+    }
+
+    /// Datacenter WAN / federated edge (the paper's FL motivation).
+    pub fn wan() -> LinkModel {
+        LinkModel { alpha: 20e-3, beta: 8.0 / 100e6 }
+    }
+
+    /// Seconds to transmit one message of `floats` f32 values.
+    pub fn message_seconds(&self, floats: usize) -> f64 {
+        self.alpha + self.beta * (floats as f64) * 4.0
+    }
+
+    /// Total serialized communication seconds for a ledger.
+    /// `parallel_links` > 1 models concurrent pairwise links (per-round
+    /// time = max over links is workload-dependent; uniform split is the
+    /// standard α-β approximation).
+    pub fn ledger_seconds(&self, ledger: &CommLedger, parallel_links: usize) -> f64 {
+        let total: f64 =
+            ledger.entries().iter().map(|e| self.message_seconds(e.floats)).sum();
+        total / parallel_links.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn message_time_scales_with_size() {
+        let m = LinkModel::ten_gbe();
+        let small = m.message_seconds(1_000);
+        let big = m.message_seconds(1_000_000);
+        // small messages are latency-bound, big ones bandwidth-bound
+        assert!(big > 50.0 * small, "{big} vs {small}");
+        // latency floor dominates tiny messages
+        assert!(m.message_seconds(1) >= m.alpha);
+    }
+
+    #[test]
+    fn ledger_total_and_parallelism() {
+        let mut l = CommLedger::new();
+        l.record(0, 0, 1, "activation", 1000);
+        l.record(0, 1, 0, "activation", 1000);
+        let m = LinkModel::hundred_gb();
+        let serial = m.ledger_seconds(&l, 1);
+        let par = m.ledger_seconds(&l, 2);
+        assert!((serial - 2.0 * par).abs() < 1e-12);
+        assert!((serial - 2.0 * m.message_seconds(1000)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wan_much_slower_than_ib() {
+        let floats = 100_000;
+        assert!(
+            LinkModel::wan().message_seconds(floats)
+                > 100.0 * LinkModel::hundred_gb().message_seconds(floats)
+        );
+    }
+}

@@ -1,0 +1,123 @@
+//! Compression channel (paper §III-A, Definition 1, Appendix A) and the
+//! compression-rate schedulers that make VARCO "variable" (§IV).
+//!
+//! The mechanism of record is `RandomSubsetCompressor`: keep
+//! ``m = ceil(len / r)`` elements of the flattened payload at positions
+//! drawn from a **shared key** (both endpoints derive the same index set,
+//! nothing but the kept values travels); the decoder scatters them and
+//! zeros the rest.  `TopK` and `Quantize` are baselines for the ablation
+//! benches.
+
+pub mod error_feedback;
+pub mod quantize;
+pub mod scheduler;
+pub mod subset;
+pub mod topk;
+
+pub use error_feedback::ErrorFeedback;
+pub use scheduler::{CommMode, Scheduler};
+pub use subset::RandomSubsetCompressor;
+
+use crate::Result;
+
+/// A compressed payload on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Payload {
+    /// original (uncompressed) length
+    pub n: usize,
+    /// kept / encoded values
+    pub values: Vec<f32>,
+    /// explicit indices (only for mechanisms that must transmit them)
+    pub indices: Option<Vec<u32>>,
+    /// shared key the endpoints use to derive implicit indices
+    pub key: u64,
+    /// extra scalar side-channel (e.g. quantizer min/max)
+    pub side: Vec<f32>,
+    /// wire cost override in float-equivalents, for mechanisms whose
+    /// simulated representation differs from what travels (e.g. the
+    /// quantizer keeps codes as f32 but ships b-bit words)
+    pub wire_override: Option<usize>,
+}
+
+impl Payload {
+    /// Floats-equivalent on the wire: what Figure 5's x-axis counts.
+    /// Indices cost one 4-byte word each, i.e. one float-equivalent.
+    pub fn wire_floats(&self) -> usize {
+        if let Some(w) = self.wire_override {
+            return w;
+        }
+        self.values.len()
+            + self.indices.as_ref().map_or(0, |i| i.len())
+            + self.side.len()
+    }
+}
+
+/// A lossy compression mechanism per Definition 1.
+pub trait Compressor: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Compress `x` at rate `rate >= 1`; `key` is the shared random key.
+    fn compress(&self, x: &[f32], rate: f32, key: u64) -> Payload;
+
+    /// Reconstruct into `out` (length `payload.n`), zeros where dropped.
+    fn decompress(&self, payload: &Payload, out: &mut [f32]);
+}
+
+/// Number of kept elements for a payload of `n` at rate `r` (>= 1 kept).
+pub fn kept_count(n: usize, rate: f32) -> usize {
+    assert!(rate >= 1.0, "rate {rate} < 1");
+    ((n as f64 / rate as f64).ceil() as usize).clamp(1.min(n), n)
+}
+
+/// Look up a compressor by config name.
+pub fn by_name(name: &str) -> Result<Box<dyn Compressor>> {
+    match name {
+        "subset" | "random-subset" => Ok(Box::new(subset::RandomSubsetCompressor)),
+        "topk" => Ok(Box::new(topk::TopKCompressor)),
+        "quantize" => Ok(Box::new(quantize::QuantizeCompressor)),
+        _ => anyhow::bail!("unknown compressor {name}; known: subset, topk, quantize"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kept_count_ceil_and_bounds() {
+        assert_eq!(kept_count(100, 1.0), 100);
+        assert_eq!(kept_count(100, 3.0), 34);
+        assert_eq!(kept_count(100, 128.0), 1);
+        assert_eq!(kept_count(5, 2.0), 3);
+        assert_eq!(kept_count(0, 2.0), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "rate")]
+    fn kept_count_rejects_sub_one_rate() {
+        kept_count(10, 0.5);
+    }
+
+    #[test]
+    fn by_name_resolves() {
+        for n in ["subset", "topk", "quantize"] {
+            assert!(by_name(n).is_ok());
+        }
+        assert!(by_name("zip").is_err());
+    }
+
+    #[test]
+    fn wire_floats_accounts_indices_and_side() {
+        let mut p = Payload {
+            n: 10,
+            values: vec![1.0; 4],
+            indices: Some(vec![0, 1, 2, 3]),
+            key: 0,
+            side: vec![0.5, 2.0],
+            wire_override: None,
+        };
+        assert_eq!(p.wire_floats(), 10);
+        p.wire_override = Some(3);
+        assert_eq!(p.wire_floats(), 3);
+    }
+}

@@ -1,0 +1,95 @@
+//! Uniform scalar quantization baseline (the "quantization" family of
+//! related work, §Related Work).  Rate r maps to b = 32/r bits per
+//! element; wire cost is n*b/32 float-equivalents plus the (min, max)
+//! side channel.  Lossy but full-support (no zeros), so its error profile
+//! differs from subset masking — useful contrast in the ablation bench.
+
+use super::{Compressor, Payload};
+
+pub struct QuantizeCompressor;
+
+fn bits_for_rate(rate: f32) -> u32 {
+    ((32.0 / rate).round() as u32).clamp(1, 32)
+}
+
+impl Compressor for QuantizeCompressor {
+    fn name(&self) -> &'static str {
+        "quantize"
+    }
+
+    fn compress(&self, x: &[f32], rate: f32, key: u64) -> Payload {
+        let bits = bits_for_rate(rate);
+        if x.is_empty() {
+            return Payload { n: 0, values: vec![], indices: None, key, side: vec![0.0, 0.0, bits as f32], wire_override: None };
+        }
+        let lo = x.iter().copied().fold(f32::INFINITY, f32::min);
+        let hi = x.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let levels = ((1u64 << bits) - 1) as f32;
+        let scale = if hi > lo { levels / (hi - lo) } else { 0.0 };
+        // Quantized codes stay f32 in simulation; the wire accounting
+        // charges `bits` per element + the (min, max) side channel.
+        let values: Vec<f32> = x.iter().map(|&v| ((v - lo) * scale).round()).collect();
+        let wire = (x.len() * bits as usize).div_ceil(32) + 2;
+        Payload {
+            n: x.len(),
+            values,
+            indices: None,
+            key,
+            side: vec![lo, hi, bits as f32],
+            wire_override: Some(wire),
+        }
+    }
+
+    fn decompress(&self, payload: &Payload, out: &mut [f32]) {
+        assert_eq!(out.len(), payload.n);
+        let [lo, hi, bits] = payload.side[..] else { panic!("quantize side channel") };
+        let levels = ((1u64 << bits as u32) - 1) as f32;
+        let step = if levels > 0.0 { (hi - lo) / levels } else { 0.0 };
+        for (o, &c) in out.iter_mut().zip(&payload.values) {
+            *o = lo + c * step;
+        }
+    }
+}
+
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_error_within_step() {
+        let x: Vec<f32> = (0..100).map(|i| (i as f32) / 10.0 - 5.0).collect();
+        let p = QuantizeCompressor.compress(&x, 4.0, 0); // 8 bits
+        let mut out = vec![0.0; 100];
+        QuantizeCompressor.decompress(&p, &mut out);
+        let step = 10.0 / 255.0;
+        for (a, b) in x.iter().zip(&out) {
+            assert!((a - b).abs() <= step / 2.0 + 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn bits_mapping() {
+        assert_eq!(bits_for_rate(1.0), 32);
+        assert_eq!(bits_for_rate(4.0), 8);
+        assert_eq!(bits_for_rate(32.0), 1);
+        assert_eq!(bits_for_rate(128.0), 1);
+    }
+
+    #[test]
+    fn wire_cost_scales_with_bits() {
+        let x = vec![1.0; 64];
+        let p = QuantizeCompressor.compress(&x, 4.0, 0); // 8 bits
+        assert_eq!(p.wire_floats(), 16 + 2);
+    }
+
+    #[test]
+    fn constant_signal_exact() {
+        let x = vec![2.5; 10];
+        let p = QuantizeCompressor.compress(&x, 8.0, 0);
+        let mut out = vec![0.0; 10];
+        QuantizeCompressor.decompress(&p, &mut out);
+        assert_eq!(out, x);
+    }
+}

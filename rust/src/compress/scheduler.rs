@@ -1,0 +1,197 @@
+//! Compression-rate schedulers (paper §IV + Appendix A, eq. (8)).
+//!
+//! A scheduler maps the epoch t to a compression rate r(t) >= 1, strictly
+//! non-increasing (Proposition 2's condition: the compression error must
+//! decrease every step).  The paper's experiments use the linear family
+//!
+//! ```text
+//! c(k) = clamp(c_max - a * (c_max - c_min) / K * k,  c_min, c_max)
+//! ```
+//!
+//! with slopes a ∈ {2..7}, c_max = 128, c_min = 1.
+
+use crate::Result;
+
+/// How a run communicates.  FullComm / NoComm are the paper's baselines.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CommMode {
+    /// exchange uncompressed boundary activations every layer
+    Full,
+    /// never exchange; aggregate over local neighbors only
+    None,
+    /// exchange compressed with the rate given by the scheduler
+    Compressed(Scheduler),
+}
+
+impl CommMode {
+    /// Rate at epoch t; `None` means "do not communicate at all".
+    pub fn rate_at(&self, epoch: usize) -> Option<f32> {
+        match self {
+            CommMode::Full => Some(1.0),
+            CommMode::None => None,
+            CommMode::Compressed(s) => Some(s.rate_at(epoch)),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            CommMode::Full => "full-comm".into(),
+            CommMode::None => "no-comm".into(),
+            CommMode::Compressed(s) => s.label(),
+        }
+    }
+}
+
+/// Rate schedulers; all clamp to [c_min, c_max] and are non-increasing.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Scheduler {
+    /// constant rate (Proposition 1's regime)
+    Fixed { rate: f32 },
+    /// paper eq. (8): linear descent with slope `a` over `total` epochs
+    Linear { slope: f32, c_max: f32, c_min: f32, total: usize },
+    /// geometric descent from c_max to c_min over `total` epochs
+    Exponential { c_max: f32, c_min: f32, total: usize },
+    /// halve every `every` epochs from c_max, floor at c_min
+    Step { c_max: f32, c_min: f32, every: usize, factor: f32 },
+}
+
+impl Scheduler {
+    /// The paper's experimental configuration: linear, c_max=128, c_min=1.
+    pub fn paper_linear(slope: f32, total: usize) -> Scheduler {
+        Scheduler::Linear { slope, c_max: 128.0, c_min: 1.0, total }
+    }
+
+    pub fn rate_at(&self, epoch: usize) -> f32 {
+        match *self {
+            Scheduler::Fixed { rate } => rate.max(1.0),
+            Scheduler::Linear { slope, c_max, c_min, total } => {
+                let k = epoch as f32;
+                let t = total.max(1) as f32;
+                (c_max - slope * (c_max - c_min) / t * k).clamp(c_min.max(1.0), c_max)
+            }
+            Scheduler::Exponential { c_max, c_min, total } => {
+                let t = (total.max(2) - 1) as f32;
+                let frac = (epoch as f32 / t).min(1.0);
+                let lo = c_min.max(1.0);
+                (c_max * (lo / c_max).powf(frac)).clamp(lo, c_max)
+            }
+            Scheduler::Step { c_max, c_min, every, factor } => {
+                let steps = epoch / every.max(1);
+                (c_max / factor.max(1.0).powi(steps as i32)).clamp(c_min.max(1.0), c_max)
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            Scheduler::Fixed { rate } => format!("fixed-r{rate}"),
+            Scheduler::Linear { slope, .. } => format!("varco-linear-s{slope}"),
+            Scheduler::Exponential { .. } => "varco-exp".into(),
+            Scheduler::Step { every, factor, .. } => format!("varco-step-{every}x{factor}"),
+        }
+    }
+
+    /// Parse config strings like "fixed:4", "linear:5", "exp", "step:30:2".
+    pub fn parse(s: &str, total_epochs: usize) -> Result<Scheduler> {
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts.as_slice() {
+            ["fixed", r] => Ok(Scheduler::Fixed { rate: r.parse()? }),
+            ["linear", a] => Ok(Scheduler::paper_linear(a.parse()?, total_epochs)),
+            ["exp"] => Ok(Scheduler::Exponential { c_max: 128.0, c_min: 1.0, total: total_epochs }),
+            ["step", every, factor] => Ok(Scheduler::Step {
+                c_max: 128.0,
+                c_min: 1.0,
+                every: every.parse()?,
+                factor: factor.parse()?,
+            }),
+            _ => anyhow::bail!("bad scheduler spec {s:?}; use fixed:R | linear:A | exp | step:E:F"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_non_increasing(s: &Scheduler, total: usize) {
+        let mut prev = f32::INFINITY;
+        for t in 0..total {
+            let r = s.rate_at(t);
+            assert!(r >= 1.0, "{s:?} rate {r} < 1 at {t}");
+            assert!(r <= prev + 1e-6, "{s:?} increased at {t}: {prev} -> {r}");
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn all_schedulers_non_increasing_and_clamped() {
+        let total = 300;
+        for s in [
+            Scheduler::Fixed { rate: 4.0 },
+            Scheduler::paper_linear(5.0, total),
+            Scheduler::Exponential { c_max: 128.0, c_min: 1.0, total },
+            Scheduler::Step { c_max: 128.0, c_min: 1.0, every: 25, factor: 2.0 },
+        ] {
+            assert_non_increasing(&s, total);
+        }
+    }
+
+    #[test]
+    fn paper_linear_hits_floor_at_total_over_slope() {
+        let s = Scheduler::paper_linear(5.0, 300);
+        assert_eq!(s.rate_at(0), 128.0);
+        // reaches c_min ≈ at k = K/a = 60 (128 - 5*127/300*60 = 1.0)
+        assert!(s.rate_at(60) <= 1.5);
+        assert_eq!(s.rate_at(100), 1.0);
+        assert_eq!(s.rate_at(299), 1.0);
+    }
+
+    #[test]
+    fn larger_slope_descends_faster() {
+        let s2 = Scheduler::paper_linear(2.0, 300);
+        let s7 = Scheduler::paper_linear(7.0, 300);
+        assert!(s7.rate_at(30) < s2.rate_at(30));
+    }
+
+    #[test]
+    fn exponential_endpoints() {
+        let s = Scheduler::Exponential { c_max: 128.0, c_min: 1.0, total: 100 };
+        assert!((s.rate_at(0) - 128.0).abs() < 1e-3);
+        assert!((s.rate_at(99) - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn step_halves() {
+        let s = Scheduler::Step { c_max: 16.0, c_min: 1.0, every: 10, factor: 2.0 };
+        assert_eq!(s.rate_at(0), 16.0);
+        assert_eq!(s.rate_at(10), 8.0);
+        assert_eq!(s.rate_at(45), 1.0);
+    }
+
+    #[test]
+    fn comm_mode_rates() {
+        assert_eq!(CommMode::Full.rate_at(5), Some(1.0));
+        assert_eq!(CommMode::None.rate_at(5), None);
+        let m = CommMode::Compressed(Scheduler::Fixed { rate: 2.0 });
+        assert_eq!(m.rate_at(5), Some(2.0));
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(
+            Scheduler::parse("fixed:4", 10).unwrap(),
+            Scheduler::Fixed { rate: 4.0 }
+        );
+        assert!(matches!(
+            Scheduler::parse("linear:5", 100).unwrap(),
+            Scheduler::Linear { total: 100, .. }
+        ));
+        assert!(Scheduler::parse("bogus", 10).is_err());
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(CommMode::Full.label(), "full-comm");
+        assert_eq!(Scheduler::paper_linear(5.0, 10).label(), "varco-linear-s5");
+    }
+}

@@ -1,0 +1,135 @@
+//! The paper's compression mechanism (Appendix A): random element subset
+//! with a shared key.
+//!
+//! "Which values of the vectors to communicate are chosen at random at the
+//! encoder's end.  For the decoder to know which element of the vector
+//! corresponds to the true values, a random key generator is shared a
+//! priori.  The decoder simply places the values communicated in the
+//! corresponding position and sets a 0 on the rest."
+//!
+//! Backward pass: the gradient w.r.t. the *sent* activation is the
+//! received cotangent masked by the same index set, so the coordinator
+//! compresses the error message **with the same key** — identical to
+//! back-propagating through the (fixed-mask) compression routine.
+
+use super::{kept_count, Compressor, Payload};
+use crate::util::Rng;
+
+pub struct RandomSubsetCompressor;
+
+impl RandomSubsetCompressor {
+    /// The shared-seed index set both endpoints derive.
+    pub fn indices(n: usize, rate: f32, key: u64) -> Vec<u32> {
+        let m = kept_count(n, rate);
+        Rng::new(key).sample_indices(n, m)
+    }
+}
+
+impl Compressor for RandomSubsetCompressor {
+    fn name(&self) -> &'static str {
+        "random-subset"
+    }
+
+    fn compress(&self, x: &[f32], rate: f32, key: u64) -> Payload {
+        // r = 1 keeps everything: skip the permutation entirely (hot path
+        // for FullComm and the late epochs of every VARCO schedule).
+        if rate <= 1.0 {
+            return Payload { n: x.len(), values: x.to_vec(), indices: None, key, side: vec![], wire_override: None };
+        }
+        let idx = Self::indices(x.len(), rate, key);
+        let values = idx.iter().map(|&i| x[i as usize]).collect();
+        Payload { n: x.len(), values, indices: None, key, side: vec![], wire_override: None }
+    }
+
+    fn decompress(&self, payload: &Payload, out: &mut [f32]) {
+        assert_eq!(out.len(), payload.n);
+        let m = payload.values.len();
+        if m == payload.n {
+            // lossless fast path (rate 1)
+            out.copy_from_slice(&payload.values);
+            return;
+        }
+        out.fill(0.0);
+        // re-derive the index set from the shared key; use the payload
+        // length directly (kept_count rounding already happened encode-side)
+        let idx = Rng::new(payload.key).sample_indices(payload.n, m.min(payload.n));
+        for (&i, &v) in idx.iter().zip(&payload.values) {
+            out[i as usize] = v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn payload(n: usize, rate: f32, key: u64) -> (Vec<f32>, Payload) {
+        let mut rng = Rng::new(99);
+        let x: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+        let p = RandomSubsetCompressor.compress(&x, rate, key);
+        (x, p)
+    }
+
+    #[test]
+    fn roundtrip_is_masked_identity() {
+        let (x, p) = payload(200, 4.0, 7);
+        let mut out = vec![0.0; 200];
+        RandomSubsetCompressor.decompress(&p, &mut out);
+        let idx = RandomSubsetCompressor::indices(200, 4.0, 7);
+        let kept: std::collections::HashSet<u32> = idx.into_iter().collect();
+        for i in 0..200 {
+            if kept.contains(&(i as u32)) {
+                assert_eq!(out[i], x[i]);
+            } else {
+                assert_eq!(out[i], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn rate_one_lossless() {
+        let (x, p) = payload(64, 1.0, 3);
+        assert_eq!(p.wire_floats(), 64);
+        let mut out = vec![0.0; 64];
+        RandomSubsetCompressor.decompress(&p, &mut out);
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn wire_size_is_ceil_n_over_r() {
+        let (_, p) = payload(100, 3.0, 1);
+        assert_eq!(p.wire_floats(), 34);
+        let (_, p) = payload(100, 128.0, 1);
+        assert_eq!(p.wire_floats(), 1);
+    }
+
+    #[test]
+    fn both_endpoints_agree_on_indices() {
+        let a = RandomSubsetCompressor::indices(1000, 8.0, 42);
+        let b = RandomSubsetCompressor::indices(1000, 8.0, 42);
+        assert_eq!(a, b);
+        let c = RandomSubsetCompressor::indices(1000, 8.0, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn error_mass_equals_dropped_mass() {
+        // E||x̃-x||² = Σ_{dropped} x_i² (Definition 1's ε characterization)
+        let (x, p) = payload(500, 5.0, 11);
+        let mut out = vec![0.0; 500];
+        RandomSubsetCompressor.decompress(&p, &mut out);
+        let err: f32 = x.iter().zip(&out).map(|(a, b)| (a - b).powi(2)).sum();
+        let total: f32 = x.iter().map(|a| a * a).sum();
+        let kept: f32 = out.iter().map(|a| a * a).sum();
+        assert!((err - (total - kept)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn empty_payload_roundtrip() {
+        let p = RandomSubsetCompressor.compress(&[], 2.0, 0);
+        assert_eq!(p.wire_floats(), 0);
+        let mut out = vec![];
+        RandomSubsetCompressor.decompress(&p, &mut out);
+    }
+}

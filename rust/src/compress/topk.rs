@@ -1,0 +1,64 @@
+//! Top-K magnitude compression baseline (ablation): keeps the largest
+//! |x_i| but must transmit explicit indices, doubling per-element wire
+//! cost relative to the paper's shared-key subset at equal K.
+
+use super::{kept_count, Compressor, Payload};
+use crate::util::argsort_desc;
+
+pub struct TopKCompressor;
+
+impl Compressor for TopKCompressor {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn compress(&self, x: &[f32], rate: f32, key: u64) -> Payload {
+        let m = kept_count(x.len(), rate);
+        let mags: Vec<f32> = x.iter().map(|v| v.abs()).collect();
+        let mut idx: Vec<u32> = argsort_desc(&mags)[..m].iter().map(|&i| i as u32).collect();
+        idx.sort_unstable(); // canonical order for determinism
+        let values = idx.iter().map(|&i| x[i as usize]).collect();
+        Payload { n: x.len(), values, indices: Some(idx), key, side: vec![], wire_override: None }
+    }
+
+    fn decompress(&self, payload: &Payload, out: &mut [f32]) {
+        assert_eq!(out.len(), payload.n);
+        out.fill(0.0);
+        let idx = payload.indices.as_ref().expect("topk payload carries indices");
+        for (&i, &v) in idx.iter().zip(&payload.values) {
+            out[i as usize] = v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_largest_magnitudes() {
+        let x = [0.1, -5.0, 0.2, 3.0, -0.05];
+        let p = TopKCompressor.compress(&x, 2.5, 0);
+        assert_eq!(p.values.len(), 2);
+        let mut out = vec![0.0; 5];
+        TopKCompressor.decompress(&p, &mut out);
+        assert_eq!(out, vec![0.0, -5.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn wire_cost_includes_indices() {
+        let x = vec![1.0; 100];
+        let p = TopKCompressor.compress(&x, 4.0, 0);
+        assert_eq!(p.wire_floats(), 50); // 25 values + 25 indices
+    }
+
+    #[test]
+    fn error_is_minimal_among_masks() {
+        let x = [3.0, 1.0, -4.0, 0.5];
+        let p = TopKCompressor.compress(&x, 2.0, 0);
+        let mut out = vec![0.0; 4];
+        TopKCompressor.decompress(&p, &mut out);
+        let err: f32 = x.iter().zip(&out).map(|(a, b)| (a - b).powi(2)).sum();
+        assert!((err - (1.0 + 0.25)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,359 @@
+//! Experiment configuration: a flat key=value format (file and CLI share
+//! the same keys) plus the factory that wires a `Trainer` from it.
+//!
+//! Example file (examples/configs/quickstart.cfg):
+//!
+//! ```text
+//! dataset     = karate-like
+//! q           = 2
+//! partitioner = random
+//! comm        = linear:5        # full | none | fixed:R | linear:A | exp | step:E:F
+//! engine      = native          # native | pjrt
+//! epochs      = 100
+//! lr          = 0.02
+//! ```
+
+use crate::compress::{CommMode, Scheduler};
+use crate::coordinator::{Trainer, TrainerOptions};
+use crate::engine::{ModelDims, WorkerEngine};
+use crate::graph::Dataset;
+use crate::partition::WorkerGraph;
+use crate::Result;
+use std::path::Path;
+
+/// A full training-run configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainConfig {
+    pub dataset: String,
+    /// 0 = dataset default size
+    pub nodes: usize,
+    pub q: usize,
+    pub partitioner: String,
+    /// comm spec: full | none | fixed:R | linear:A | exp | step:E:F
+    pub comm: String,
+    pub compressor: String,
+    pub engine: String,
+    /// artifact tag for the pjrt engine ("" = infer from dataset+q)
+    pub artifact_tag: String,
+    pub artifacts_dir: String,
+    pub epochs: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub optimizer: String,
+    pub lr: f32,
+    pub weight_decay: f32,
+    pub seed: u64,
+    pub eval_every: usize,
+    pub drop_prob: f64,
+    pub stale_prob: f64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            dataset: "synth-arxiv".into(),
+            nodes: 0,
+            q: 4,
+            partitioner: "random".into(),
+            comm: "linear:5".into(),
+            compressor: "subset".into(),
+            engine: "native".into(),
+            artifact_tag: String::new(),
+            artifacts_dir: "artifacts".into(),
+            epochs: 300,
+            hidden: 256,
+            layers: 3,
+            optimizer: "adam".into(),
+            lr: 0.01,
+            weight_decay: 2e-3,
+            seed: 0,
+            eval_every: 1,
+            drop_prob: 0.0,
+            stale_prob: 0.0,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Small configuration used by the quickstart example and doctests.
+    pub fn default_quickstart() -> TrainConfig {
+        TrainConfig {
+            dataset: "karate-like".into(),
+            q: 2,
+            hidden: 8,
+            epochs: 60,
+            lr: 0.02,
+            ..Default::default()
+        }
+    }
+
+    /// Apply one `key=value` assignment.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "dataset" => self.dataset = value.into(),
+            "nodes" => self.nodes = value.parse()?,
+            "q" => self.q = value.parse()?,
+            "partitioner" => self.partitioner = value.into(),
+            "comm" => self.comm = value.into(),
+            "compressor" => self.compressor = value.into(),
+            "engine" => self.engine = value.into(),
+            "artifact_tag" => self.artifact_tag = value.into(),
+            "artifacts_dir" => self.artifacts_dir = value.into(),
+            "epochs" => self.epochs = value.parse()?,
+            "hidden" => self.hidden = value.parse()?,
+            "layers" => self.layers = value.parse()?,
+            "optimizer" => self.optimizer = value.into(),
+            "lr" => self.lr = value.parse()?,
+            "weight_decay" | "wd" => self.weight_decay = value.parse()?,
+            "seed" => self.seed = value.parse()?,
+            "eval_every" => self.eval_every = value.parse::<usize>()?.max(1),
+            "drop_prob" => self.drop_prob = value.parse()?,
+            "stale_prob" => self.stale_prob = value.parse()?,
+            _ => anyhow::bail!("unknown config key {key:?}"),
+        }
+        Ok(())
+    }
+
+    /// Parse a `key = value` config file (# comments, blank lines ok).
+    pub fn from_file(path: &Path) -> Result<TrainConfig> {
+        let mut cfg = TrainConfig::default();
+        let text = std::fs::read_to_string(path)?;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("{path:?}:{}: expected key = value", lineno + 1))?;
+            cfg.set(k.trim(), v.trim())
+                .map_err(|e| anyhow::anyhow!("{path:?}:{}: {e}", lineno + 1))?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply `--key value` / `--key=value` CLI overrides.
+    pub fn apply_cli(&mut self, args: &[String]) -> Result<()> {
+        let mut i = 0;
+        while i < args.len() {
+            let arg = &args[i];
+            let key = arg
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow::anyhow!("expected --key, got {arg:?}"))?;
+            if let Some((k, v)) = key.split_once('=') {
+                self.set(k, v)?;
+            } else {
+                i += 1;
+                let v = args
+                    .get(i)
+                    .ok_or_else(|| anyhow::anyhow!("missing value for --{key}"))?;
+                self.set(key, v)?;
+            }
+            i += 1;
+        }
+        Ok(())
+    }
+
+    pub fn comm_mode(&self) -> Result<CommMode> {
+        match self.comm.as_str() {
+            "full" => Ok(CommMode::Full),
+            "none" => Ok(CommMode::None),
+            spec => Ok(CommMode::Compressed(Scheduler::parse(spec, self.epochs)?)),
+        }
+    }
+
+    /// Default artifact tag for (dataset, q) when not set explicitly.
+    pub fn resolved_artifact_tag(&self) -> String {
+        if !self.artifact_tag.is_empty() {
+            return self.artifact_tag.clone();
+        }
+        match (self.dataset.as_str(), self.q) {
+            ("karate-like", _) => "quickstart".into(),
+            (ds, q) => format!("e2e-{}-q{q}", ds.trim_start_matches("synth-")),
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "{} q={} part={} comm={} engine={} epochs={} hidden={} lr={} seed={}",
+            self.dataset,
+            self.q,
+            self.partitioner,
+            self.comm,
+            self.engine,
+            self.epochs,
+            self.hidden,
+            self.lr,
+            self.seed
+        )
+    }
+}
+
+/// Build a ready-to-run trainer from a config (the main factory).
+pub fn build_trainer(cfg: &TrainConfig) -> Result<Trainer> {
+    let dataset = Dataset::load(&cfg.dataset, cfg.nodes, cfg.seed)?;
+    build_trainer_with_dataset(cfg, &dataset)
+}
+
+/// Same, with a caller-provided dataset (harnesses reuse one dataset
+/// across the whole algorithm grid).
+pub fn build_trainer_with_dataset(cfg: &TrainConfig, dataset: &Dataset) -> Result<Trainer> {
+    let partitioner = crate::partition::by_name(&cfg.partitioner, cfg.seed)?;
+    let partition = partitioner.partition(&dataset.graph, cfg.q)?;
+    let worker_graphs = WorkerGraph::build_all(&dataset.graph, &partition)?;
+    let dims = ModelDims {
+        f_in: dataset.f_in(),
+        hidden: cfg.hidden,
+        classes: dataset.classes,
+        layers: cfg.layers,
+    };
+
+    let engines: Vec<Box<dyn WorkerEngine>> = match cfg.engine.as_str() {
+        "native" => worker_graphs
+            .iter()
+            .map(|w| {
+                Box::new(crate::engine::native::NativeWorkerEngine::new(w.clone(), dims))
+                    as Box<dyn WorkerEngine>
+            })
+            .collect(),
+        "pjrt" => {
+            let manifest = crate::runtime::Manifest::load(Path::new(&cfg.artifacts_dir))?;
+            let tag = cfg.resolved_artifact_tag();
+            let mcfg = manifest.config(&tag)?;
+            anyhow::ensure!(
+                mcfg.n_total == dataset.n() && mcfg.q == cfg.q,
+                "artifact {tag} is for n={} q={}, run has n={} q={}",
+                mcfg.n_total,
+                mcfg.q,
+                dataset.n(),
+                cfg.q
+            );
+            anyhow::ensure!(
+                mcfg.hidden == cfg.hidden && mcfg.layers == cfg.layers,
+                "artifact {tag} width/depth mismatch"
+            );
+            let runtime = crate::runtime::Runtime::cpu()?;
+            let arts = std::rc::Rc::new(runtime.load_config(&manifest, &tag)?);
+            worker_graphs
+                .iter()
+                .map(|w| {
+                    Ok(Box::new(crate::engine::pjrt::PjrtWorkerEngine::new(
+                        arts.clone(),
+                        w.clone(),
+                    )?) as Box<dyn WorkerEngine>)
+                })
+                .collect::<Result<Vec<_>>>()?
+        }
+        other => anyhow::bail!("unknown engine {other:?}; known: native, pjrt"),
+    };
+
+    let opts = TrainerOptions {
+        comm_mode: cfg.comm_mode()?,
+        compressor: crate::compress::by_name(&cfg.compressor)?,
+        optimizer: crate::optim::by_name(&cfg.optimizer, cfg.lr, cfg.weight_decay)?,
+        epochs: cfg.epochs,
+        seed: cfg.seed,
+        eval_every: cfg.eval_every,
+        failure: crate::comm::FailurePolicy {
+            drop_prob: cfg.drop_prob,
+            stale_prob: cfg.stale_prob,
+            seed: cfg.seed,
+        },
+        ledger_weights: true,
+        track_grad_norm: false,
+    };
+    let mut trainer = Trainer::new(dataset, &partition, &worker_graphs, engines, dims, opts)?;
+    trainer.report.partitioner = cfg.partitioner.clone();
+    Ok(trainer)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::TempDir;
+
+    #[test]
+    fn set_and_cli_overrides() {
+        let mut cfg = TrainConfig::default();
+        cfg.apply_cli(&[
+            "--q".into(),
+            "8".into(),
+            "--comm=fixed:4".into(),
+            "--lr".into(),
+            "0.1".into(),
+        ])
+        .unwrap();
+        assert_eq!(cfg.q, 8);
+        assert_eq!(cfg.comm, "fixed:4");
+        assert_eq!(cfg.lr, 0.1);
+        assert!(cfg.apply_cli(&["--bogus".into(), "1".into()]).is_err());
+        assert!(cfg.apply_cli(&["positional".into()]).is_err());
+    }
+
+    #[test]
+    fn config_file_parsing_with_comments() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("run.cfg");
+        std::fs::write(
+            &path,
+            "# comment\ndataset = karate-like\nq=2\n\ncomm = none # trailing\n",
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_file(&path).unwrap();
+        assert_eq!(cfg.dataset, "karate-like");
+        assert_eq!(cfg.q, 2);
+        assert_eq!(cfg.comm, "none");
+    }
+
+    #[test]
+    fn config_file_errors_carry_line_numbers() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("bad.cfg");
+        std::fs::write(&path, "dataset = karate-like\nnot a kv line\n").unwrap();
+        let err = TrainConfig::from_file(&path).unwrap_err().to_string();
+        assert!(err.contains(":2"), "{err}");
+    }
+
+    #[test]
+    fn comm_mode_parsing() {
+        let mut cfg = TrainConfig::default();
+        cfg.comm = "full".into();
+        assert_eq!(cfg.comm_mode().unwrap(), CommMode::Full);
+        cfg.comm = "none".into();
+        assert_eq!(cfg.comm_mode().unwrap(), CommMode::None);
+        cfg.comm = "linear:5".into();
+        assert!(matches!(cfg.comm_mode().unwrap(), CommMode::Compressed(_)));
+        cfg.comm = "garbage".into();
+        assert!(cfg.comm_mode().is_err());
+    }
+
+    #[test]
+    fn artifact_tag_resolution() {
+        let mut cfg = TrainConfig::default();
+        cfg.dataset = "synth-arxiv".into();
+        cfg.q = 4;
+        assert_eq!(cfg.resolved_artifact_tag(), "e2e-arxiv-q4");
+        cfg.artifact_tag = "custom".into();
+        assert_eq!(cfg.resolved_artifact_tag(), "custom");
+        cfg.artifact_tag.clear();
+        cfg.dataset = "karate-like".into();
+        assert_eq!(cfg.resolved_artifact_tag(), "quickstart");
+    }
+
+    #[test]
+    fn build_trainer_native_end_to_end() {
+        let mut cfg = TrainConfig::default_quickstart();
+        cfg.epochs = 3;
+        let mut t = build_trainer(&cfg).unwrap();
+        let report = t.run().unwrap();
+        assert_eq!(report.records.len(), 3);
+        assert_eq!(report.partitioner, "random");
+    }
+
+    #[test]
+    fn build_trainer_rejects_unknown_engine() {
+        let mut cfg = TrainConfig::default_quickstart();
+        cfg.engine = "gpu".into();
+        assert!(build_trainer(&cfg).is_err());
+    }
+}

@@ -1,0 +1,142 @@
+//! Checkpointing: save / load model weights + training position, so long
+//! grid runs survive interruption and trained models can be evaluated or
+//! served later (`varco eval`).
+//!
+//! Format: versioned little-endian binary — magic, version, epoch, seed,
+//! dims, then the flat f32 parameter vector in manifest layout.
+
+use crate::engine::{ModelDims, Weights};
+use crate::Result;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"VARCOCK\x01";
+
+/// A saved training state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub epoch: usize,
+    pub seed: u64,
+    pub dims: ModelDims,
+    pub flat_weights: Vec<f32>,
+}
+
+impl Checkpoint {
+    pub fn from_weights(dims: &ModelDims, weights: &Weights, epoch: usize, seed: u64) -> Self {
+        Checkpoint { epoch, seed, dims: *dims, flat_weights: weights.flatten() }
+    }
+
+    /// Rebuild a Weights container (version reset; engines re-upload).
+    pub fn to_weights(&self) -> Result<Weights> {
+        let mut w = Weights::glorot(&self.dims, 0).zeros_like();
+        anyhow::ensure!(
+            w.param_count() == self.flat_weights.len(),
+            "checkpoint has {} params, dims say {}",
+            self.flat_weights.len(),
+            w.param_count()
+        );
+        w.set_from_flat(&self.flat_weights);
+        Ok(w)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut w = BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(MAGIC)?;
+        for v in [
+            self.epoch as u64,
+            self.seed,
+            self.dims.f_in as u64,
+            self.dims.hidden as u64,
+            self.dims.classes as u64,
+            self.dims.layers as u64,
+            self.flat_weights.len() as u64,
+        ] {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        for &x in &self.flat_weights {
+            w.write_all(&x.to_le_bytes())?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut r = BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "{path:?} is not a varco checkpoint");
+        let mut u64s = [0u64; 7];
+        for v in u64s.iter_mut() {
+            let mut b = [0u8; 8];
+            r.read_exact(&mut b)?;
+            *v = u64::from_le_bytes(b);
+        }
+        let [epoch, seed, f_in, hidden, classes, layers, n_params] = u64s;
+        let dims = ModelDims {
+            f_in: f_in as usize,
+            hidden: hidden as usize,
+            classes: classes as usize,
+            layers: layers as usize,
+        };
+        anyhow::ensure!(
+            dims.param_count() == n_params as usize,
+            "corrupt checkpoint: dims imply {} params, header says {n_params}",
+            dims.param_count()
+        );
+        let mut buf = vec![0u8; n_params as usize * 4];
+        r.read_exact(&mut buf)?;
+        let flat_weights =
+            buf.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+        Ok(Checkpoint { epoch: epoch as usize, seed, dims, flat_weights })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::TempDir;
+
+    const DIMS: ModelDims = ModelDims { f_in: 6, hidden: 9, classes: 4, layers: 3 };
+
+    #[test]
+    fn round_trip_preserves_weights() {
+        let w = Weights::glorot(&DIMS, 11);
+        let ck = Checkpoint::from_weights(&DIMS, &w, 42, 11);
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("model.ckpt");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.epoch, 42);
+        assert_eq!(back.dims, DIMS);
+        let w2 = back.to_weights().unwrap();
+        assert_eq!(w.flatten(), w2.flatten());
+    }
+
+    #[test]
+    fn rejects_non_checkpoint_files() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("junk");
+        std::fs::write(&path, b"hello world padding").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let w = Weights::glorot(&DIMS, 1);
+        let ck = Checkpoint::from_weights(&DIMS, &w, 0, 1);
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("model.ckpt");
+        ck.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn dims_param_mismatch_detected() {
+        let w = Weights::glorot(&DIMS, 1);
+        let mut ck = Checkpoint::from_weights(&DIMS, &w, 0, 1);
+        ck.flat_weights.pop();
+        assert!(ck.to_weights().is_err());
+    }
+}

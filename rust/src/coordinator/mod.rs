@@ -1,0 +1,12 @@
+//! The VARCO coordinator (paper Algorithm 1): drives per-worker engines
+//! through forward/backward with compressed boundary exchanges, averages
+//! gradients (the FedAverage-style server step), applies the optimizer,
+//! and evaluates.
+
+pub mod checkpoint;
+pub mod eval;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use eval::FullGraphEval;
+pub use trainer::{Trainer, TrainerOptions};

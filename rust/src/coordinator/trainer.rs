@@ -1,0 +1,554 @@
+//! The VARCO training loop (paper Algorithm 1, per-layer halo exchange).
+//!
+//! Per epoch:
+//!   1. **Forward**: for each GNN layer, every worker ships the rows of its
+//!      activation matrix that are boundary to other partitions — through
+//!      the compression channel at the scheduler's current rate — then
+//!      computes the layer locally from exact local + lossy remote rows.
+//!   2. **Loss**: masked cross-entropy per worker, gradients scaled by the
+//!      worker's train-node share so the global objective is centralized
+//!      ERM.
+//!   3. **Backward**: reverse per-layer exchange — the cotangents of the
+//!      *received* boundary rows are compressed **with the same shared key
+//!      as the forward message** (identical mask, i.e. exact backprop
+//!      through the compression routine) and returned to the owners.
+//!   4. **Server step**: gradients are summed across workers (equal-size
+//!      parts make FedAverage equal to gradient averaging here), one
+//!      optimizer step updates the replicated weights.
+//!
+//! At rate 1 (FullComm) this computes the exact centralized gradient, for
+//! any partition — asserted by the integration tests.
+
+use crate::comm::{Fabric, FailurePolicy, Message, MessageKind};
+use crate::compress::{CommMode, Compressor};
+use crate::coordinator::eval::FullGraphEval;
+use crate::engine::{ModelDims, Weights, WorkerEngine};
+use crate::graph::Dataset;
+use crate::metrics::{EpochRecord, RunReport};
+use crate::optim::Optimizer;
+use crate::partition::{Partition, SendPlan, WorkerGraph};
+use crate::tensor::Matrix;
+use crate::Result;
+
+/// Everything the trainer needs beyond the engines.
+pub struct TrainerOptions {
+    pub comm_mode: CommMode,
+    pub compressor: Box<dyn Compressor>,
+    pub optimizer: Box<dyn Optimizer>,
+    pub epochs: usize,
+    pub seed: u64,
+    /// evaluate every k epochs (1 = every epoch)
+    pub eval_every: usize,
+    pub failure: FailurePolicy,
+    /// count weight-sync floats in the ledger (same constant for every
+    /// algorithm; Figure 5 includes it)
+    pub ledger_weights: bool,
+    /// record ||grad||² each epoch (Prop. 1/2 diagnostics)
+    pub track_grad_norm: bool,
+}
+
+impl Default for TrainerOptions {
+    fn default() -> Self {
+        TrainerOptions {
+            comm_mode: CommMode::Full,
+            compressor: Box::new(crate::compress::RandomSubsetCompressor),
+            optimizer: Box::new(crate::optim::Adam::new(0.01)),
+            epochs: 100,
+            seed: 0,
+            eval_every: 1,
+            failure: FailurePolicy::default(),
+            ledger_weights: true,
+            track_grad_norm: false,
+        }
+    }
+}
+
+/// Per-worker immutable training data.
+struct WorkerData {
+    x: Matrix,
+    labels: Vec<u32>,
+    m_train: Vec<f32>,
+    m_val: Vec<f32>,
+    m_test: Vec<f32>,
+    count_train: f32,
+    plans: Vec<SendPlan>,
+    n_boundary: usize,
+}
+
+/// The distributed trainer.
+pub struct Trainer {
+    engines: Vec<Box<dyn WorkerEngine>>,
+    data: Vec<WorkerData>,
+    pub weights: Weights,
+    dims: ModelDims,
+    opts: TrainerOptions,
+    fabric: Fabric,
+    eval: FullGraphEval,
+    total_train: f32,
+    pub grad_norm_trace: Vec<f32>,
+    pub report: RunReport,
+}
+
+impl Trainer {
+    /// Assemble from already-built engines (engine-agnostic path; see
+    /// `config::build_trainer` for the config-file front door).
+    pub fn new(
+        dataset: &Dataset,
+        partition: &Partition,
+        worker_graphs: &[WorkerGraph],
+        engines: Vec<Box<dyn WorkerEngine>>,
+        dims: ModelDims,
+        opts: TrainerOptions,
+    ) -> Result<Trainer> {
+        anyhow::ensure!(engines.len() == partition.q, "engine count != q");
+        anyhow::ensure!(dims.f_in == dataset.f_in(), "f_in mismatch");
+        anyhow::ensure!(dims.classes == dataset.classes, "classes mismatch");
+        let (m_train, m_val, m_test) = dataset.split.as_f32();
+        let mut data = Vec::with_capacity(partition.q);
+        for wg in worker_graphs {
+            let nl = wg.n_local();
+            let mut x = Matrix::zeros(nl, dataset.f_in());
+            let mut labels = Vec::with_capacity(nl);
+            let (mut tr, mut va, mut te) = (vec![0.0; nl], vec![0.0; nl], vec![0.0; nl]);
+            for (li, &gid) in wg.nodes.iter().enumerate() {
+                x.row_mut(li).copy_from_slice(dataset.features.row(gid as usize));
+                labels.push(dataset.labels[gid as usize]);
+                tr[li] = m_train[gid as usize];
+                va[li] = m_val[gid as usize];
+                te[li] = m_test[gid as usize];
+            }
+            let count_train = tr.iter().sum();
+            data.push(WorkerData {
+                x,
+                labels,
+                m_train: tr,
+                m_val: va,
+                m_test: te,
+                count_train,
+                plans: wg.send_plans.clone(),
+                n_boundary: wg.n_boundary(),
+            });
+        }
+        let total_train: f32 = data.iter().map(|d| d.count_train).sum();
+        let fabric = Fabric::with_policy(partition.q, opts.failure.clone());
+        let eval = FullGraphEval::new(dataset);
+        let weights = Weights::glorot(&dims, opts.seed);
+        let report = RunReport {
+            algorithm: opts.comm_mode.label(),
+            dataset: dataset.name.clone(),
+            partitioner: String::new(),
+            q: partition.q,
+            seed: opts.seed,
+            engine: engines.first().map(|e| e.name().to_string()).unwrap_or_default(),
+            records: Vec::new(),
+        };
+        Ok(Trainer {
+            engines,
+            data,
+            weights,
+            dims,
+            opts,
+            fabric,
+            eval,
+            total_train: total_train.max(1.0),
+            grad_norm_trace: Vec::new(),
+            report,
+        })
+    }
+
+    pub fn q(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// Override the communication mode after construction (diagnostics
+    /// harnesses sweep modes over one trainer setup).
+    pub fn set_comm_mode(&mut self, mode: CommMode) {
+        self.report.algorithm = mode.label();
+        self.opts.comm_mode = mode;
+    }
+
+    /// Toggle per-epoch ||grad|| recording (Prop. 1/2 diagnostics).
+    pub fn set_track_grad_norm(&mut self, on: bool) {
+        self.opts.track_grad_norm = on;
+    }
+
+    /// Replace the model weights (checkpoint restore).  The version stamp
+    /// is bumped so PJRT engines re-upload their cached device copies.
+    pub fn restore_weights(&mut self, weights: &Weights) -> crate::Result<()> {
+        anyhow::ensure!(
+            weights.param_count() == self.weights.param_count(),
+            "checkpoint has {} params, model {}",
+            weights.param_count(),
+            self.weights.param_count()
+        );
+        let flat = weights.flatten();
+        self.weights.set_from_flat(&flat);
+        Ok(())
+    }
+
+    /// Current model dimensions.
+    pub fn dims(&self) -> ModelDims {
+        self.dims
+    }
+
+    /// Evaluate the current weights (exact centralized inference).
+    pub fn evaluate(&self) -> crate::Result<crate::coordinator::eval::EvalResult> {
+        self.eval.evaluate(&self.dims, &self.weights)
+    }
+
+    pub fn ledger(&self) -> &crate::comm::CommLedger {
+        self.fabric.ledger()
+    }
+
+    pub fn fabric(&self) -> &Fabric {
+        &self.fabric
+    }
+
+    /// Shared key for the (epoch, layer, from, to) channel; both the
+    /// forward compression and the backward error compression derive the
+    /// same index mask from it.
+    fn msg_key(&self, epoch: usize, layer: usize, from: usize, to: usize) -> u64 {
+        let mut k = self.opts.seed ^ 0x5EED_C0DE;
+        for (mult, v) in [
+            (0x9E37_79B9_7F4A_7C15u64, epoch as u64),
+            (0xC2B2_AE3D_27D4_EB4Fu64, layer as u64),
+            (0x1656_67B1_9E37_79F9u64, from as u64),
+            (0x27D4_EB2F_1656_67C5u64, to as u64),
+        ] {
+            k = (k ^ v.wrapping_mul(mult)).rotate_left(23).wrapping_mul(mult | 1);
+        }
+        k
+    }
+
+    /// Forward halo exchange for layer `l`: returns each worker's
+    /// boundary-activation matrix (zeros where not communicated).
+    fn exchange_forward(
+        &mut self,
+        epoch: usize,
+        layer: usize,
+        h: &[Matrix],
+        rate: f32,
+        f: usize,
+    ) -> Result<Vec<Matrix>> {
+        // send
+        for q in 0..self.q() {
+            for plan in &self.data[q].plans {
+                let mut payload = Vec::with_capacity(plan.local_rows.len() * f);
+                for &row in &plan.local_rows {
+                    payload.extend_from_slice(h[q].row(row as usize));
+                }
+                let key = self.msg_key(epoch, layer, q, plan.to);
+                let compressed = self.opts.compressor.compress(&payload, rate, key);
+                self.fabric.send(
+                    epoch,
+                    Message {
+                        from: q,
+                        to: plan.to,
+                        kind: MessageKind::Activation { layer },
+                        payload: compressed,
+                    },
+                );
+            }
+        }
+        // receive + scatter into boundary buffers
+        let mut out: Vec<Matrix> = (0..self.q())
+            .map(|p| Matrix::zeros(self.data[p].n_boundary, f))
+            .collect();
+        for p in 0..self.q() {
+            for msg in self.fabric.recv_all(p) {
+                let from = msg.from;
+                let plan = self.data[from]
+                    .plans
+                    .iter()
+                    .find(|pl| pl.to == p)
+                    .ok_or_else(|| anyhow::anyhow!("message without plan {from}->{p}"))?;
+                let mut flat = vec![0.0f32; msg.payload.n];
+                self.opts.compressor.decompress(&msg.payload, &mut flat);
+                for (i, &slot) in plan.dst_slots.iter().enumerate() {
+                    out[p].row_mut(slot as usize).copy_from_slice(&flat[i * f..(i + 1) * f]);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Backward halo exchange for layer `l`: ships each worker's boundary
+    /// cotangents back to the owners (same key => same mask as forward)
+    /// and accumulates them into the owners' local cotangents.
+    fn exchange_backward(
+        &mut self,
+        epoch: usize,
+        layer: usize,
+        mut g_local: Vec<Matrix>,
+        g_bnd: Vec<Matrix>,
+        rate: f32,
+        f: usize,
+    ) -> Result<Vec<Matrix>> {
+        // send: worker p returns gradients for rows owned by q, in the
+        // exact element order of the forward message q->p
+        for p in 0..self.q() {
+            for q in 0..self.q() {
+                if q == p {
+                    continue;
+                }
+                let Some(plan) = self.data[q].plans.iter().find(|pl| pl.to == p) else {
+                    continue;
+                };
+                let mut payload = Vec::with_capacity(plan.dst_slots.len() * f);
+                for &slot in &plan.dst_slots {
+                    payload.extend_from_slice(g_bnd[p].row(slot as usize));
+                }
+                // SAME key as the forward message q->p at this layer
+                let key = self.msg_key(epoch, layer, q, p);
+                let compressed = self.opts.compressor.compress(&payload, rate, key);
+                self.fabric.send(
+                    epoch,
+                    Message {
+                        from: p,
+                        to: q,
+                        kind: MessageKind::Gradient { layer },
+                        payload: compressed,
+                    },
+                );
+            }
+        }
+        // receive + accumulate into local cotangents
+        for q in 0..self.q() {
+            for msg in self.fabric.recv_all(q) {
+                let from = msg.from; // = p, the consumer
+                let plan = self.data[q]
+                    .plans
+                    .iter()
+                    .find(|pl| pl.to == from)
+                    .ok_or_else(|| anyhow::anyhow!("gradient without plan {q}->{from}"))?;
+                let mut flat = vec![0.0f32; msg.payload.n];
+                self.opts.compressor.decompress(&msg.payload, &mut flat);
+                for (i, &row) in plan.local_rows.iter().enumerate() {
+                    let dst = g_local[q].row_mut(row as usize);
+                    for (d, &v) in dst.iter_mut().zip(&flat[i * f..(i + 1) * f]) {
+                        *d += v;
+                    }
+                }
+            }
+        }
+        Ok(g_local)
+    }
+
+    /// One training epoch; returns (mean train loss, grad container).
+    pub fn train_epoch(&mut self, epoch: usize) -> Result<(f32, Weights)> {
+        let rate = self.opts.comm_mode.rate_at(epoch);
+        let local_norm = rate.is_none();
+        let layer_dims = self.dims.layer_dims();
+        let q = self.q();
+
+        // ---- forward ----
+        let mut h: Vec<Matrix> = (0..q).map(|i| self.data[i].x.clone()).collect();
+        for (l, &(fi, _fo)) in layer_dims.iter().enumerate() {
+            let h_bnd = match rate {
+                Some(r) => self.exchange_forward(epoch, l, &h, r, fi)?,
+                None => (0..q).map(|p| Matrix::zeros(self.data[p].n_boundary, fi)).collect(),
+            };
+            for i in 0..q {
+                h[i] = self.engines[i].forward_layer(l, &self.weights, &h[i], &h_bnd[i], local_norm)?;
+            }
+        }
+
+        // ---- loss ----
+        let mut g: Vec<Matrix> = Vec::with_capacity(q);
+        let mut loss_weighted = 0.0f32;
+        for i in 0..q {
+            let d = &self.data[i];
+            let out = self.engines[i].loss_grad(&h[i], &d.labels, &d.m_train, &d.m_val, &d.m_test)?;
+            loss_weighted += out.loss * out.count_train;
+            let mut gl = out.g_logits;
+            gl.scale(out.count_train / self.total_train);
+            g.push(gl);
+        }
+        let mean_loss = loss_weighted / self.total_train;
+
+        // ---- backward ----
+        let mut grad_acc = self.weights.zeros_like();
+        for l in (0..layer_dims.len()).rev() {
+            let fi = layer_dims[l].0;
+            let mut g_locals = Vec::with_capacity(q);
+            let mut g_bnds = Vec::with_capacity(q);
+            for i in 0..q {
+                let (gl, gb, lg) = self.engines[i].backward_layer(l, &self.weights, &g[i], local_norm)?;
+                grad_acc.layers[l].w_self.add_assign(&lg.w_self);
+                grad_acc.layers[l].w_neigh.add_assign(&lg.w_neigh);
+                for (a, b) in grad_acc.layers[l].bias.iter_mut().zip(&lg.bias) {
+                    *a += b;
+                }
+                g_locals.push(gl);
+                g_bnds.push(gb);
+            }
+            g = match rate {
+                Some(r) => self.exchange_backward(epoch, l, g_locals, g_bnds, r, fi)?,
+                None => g_locals,
+            };
+        }
+
+        // ---- server step ----
+        if self.opts.ledger_weights {
+            let p = self.weights.param_count();
+            for i in 0..q {
+                // worker -> server gradients, server -> worker weights
+                self.fabric.ledger_mut().record(epoch, i, 0, "weights", p);
+                self.fabric.ledger_mut().record(epoch, 0, i, "weights", p);
+            }
+        }
+        if self.opts.track_grad_norm {
+            self.grad_norm_trace.push(grad_acc.norm());
+        }
+        let mut flat_w = self.weights.flatten();
+        let flat_g = grad_acc.flatten();
+        self.opts.optimizer.step(&mut flat_w, &flat_g);
+        self.weights.set_from_flat(&flat_w);
+        Ok((mean_loss, grad_acc))
+    }
+
+    /// Full training run with per-epoch evaluation; returns the report.
+    pub fn run(&mut self) -> Result<RunReport> {
+        for epoch in 0..self.opts.epochs {
+            let t0 = std::time::Instant::now();
+            let (loss, _) = self.train_epoch(epoch)?;
+            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let do_eval = epoch % self.opts.eval_every == 0 || epoch + 1 == self.opts.epochs;
+            let ev = if do_eval {
+                self.eval.evaluate(&self.dims, &self.weights)?
+            } else if let Some(last) = self.report.records.last() {
+                crate::coordinator::eval::EvalResult {
+                    train_acc: last.train_acc,
+                    val_acc: last.val_acc,
+                    test_acc: last.test_acc,
+                    loss: last.loss,
+                }
+            } else {
+                self.eval.evaluate(&self.dims, &self.weights)?
+            };
+            self.report.records.push(EpochRecord {
+                epoch,
+                loss,
+                train_acc: ev.train_acc,
+                val_acc: ev.val_acc,
+                test_acc: ev.test_acc,
+                rate: self.opts.comm_mode.rate_at(epoch),
+                floats_cum: self.fabric.ledger().total_floats(),
+                wall_ms,
+            });
+        }
+        Ok(self.report.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Scheduler;
+    use crate::engine::native::NativeWorkerEngine;
+    use crate::partition::random::RandomPartitioner;
+    use crate::partition::Partitioner;
+
+    fn build(
+        comm: CommMode,
+        q: usize,
+        seed: u64,
+        epochs: usize,
+    ) -> (Trainer, Dataset) {
+        let ds = Dataset::load("karate-like", 0, seed).unwrap();
+        let dims = ModelDims { f_in: ds.f_in(), hidden: 8, classes: ds.classes, layers: 3 };
+        let part = RandomPartitioner { seed }.partition(&ds.graph, q).unwrap();
+        let wgs = WorkerGraph::build_all(&ds.graph, &part).unwrap();
+        let engines: Vec<Box<dyn WorkerEngine>> = wgs
+            .iter()
+            .map(|w| Box::new(NativeWorkerEngine::new(w.clone(), dims)) as Box<dyn WorkerEngine>)
+            .collect();
+        let opts = TrainerOptions {
+            comm_mode: comm,
+            epochs,
+            seed,
+            optimizer: Box::new(crate::optim::Adam::new(0.02)),
+            track_grad_norm: true,
+            ..Default::default()
+        };
+        let t = Trainer::new(&ds, &part, &wgs, engines, dims, opts).unwrap();
+        (t, ds)
+    }
+
+    #[test]
+    fn fullcomm_learns_karate() {
+        let (mut t, _) = build(CommMode::Full, 2, 1, 60);
+        let report = t.run().unwrap();
+        assert!(
+            report.final_test_accuracy() > 0.8,
+            "acc {}",
+            report.final_test_accuracy()
+        );
+        // loss decreased
+        let first = report.records.first().unwrap().loss;
+        let last = report.records.last().unwrap().loss;
+        assert!(last < first * 0.7, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn nocomm_trains_but_communicates_nothing_but_weights() {
+        let (mut t, _) = build(CommMode::None, 2, 2, 10);
+        let report = t.run().unwrap();
+        let breakdown = t.ledger().breakdown_by_kind();
+        assert!(breakdown.get("activation").is_none());
+        assert!(breakdown.get("gradient").is_none());
+        assert!(breakdown.get("weights").is_some());
+        assert!(report.records.len() == 10);
+    }
+
+    #[test]
+    fn compressed_communicates_fewer_floats_than_full() {
+        let (mut tf, _) = build(CommMode::Full, 2, 3, 3);
+        tf.run().unwrap();
+        let full = tf.ledger().breakdown_by_kind()["activation"];
+        let (mut tc, _) = build(
+            CommMode::Compressed(Scheduler::Fixed { rate: 4.0 }),
+            2,
+            3,
+            3,
+        );
+        tc.run().unwrap();
+        let comp = tc.ledger().breakdown_by_kind()["activation"];
+        assert!(
+            (comp as f64) < 0.3 * full as f64,
+            "compressed {comp} vs full {full}"
+        );
+    }
+
+    #[test]
+    fn varco_rate_decreases_over_epochs() {
+        let sched = Scheduler::Linear { slope: 1.0, c_max: 8.0, c_min: 1.0, total: 10 };
+        let (mut t, _) = build(CommMode::Compressed(sched), 2, 4, 10);
+        let report = t.run().unwrap();
+        let rates: Vec<f32> = report.records.iter().filter_map(|r| r.rate).collect();
+        assert_eq!(rates.len(), 10);
+        assert!(rates.windows(2).all(|w| w[1] <= w[0]));
+        assert!(rates[0] > rates[9]);
+        // per-epoch activation floats should grow as the rate drops
+        let cum = t.ledger().cumulative_by_epoch();
+        let early = cum[1] - cum[0];
+        let late = cum[9] - cum[8];
+        assert!(late > early, "late {late} !> early {early}");
+    }
+
+    #[test]
+    fn grad_norm_trace_recorded() {
+        let (mut t, _) = build(CommMode::Full, 2, 5, 5);
+        t.run().unwrap();
+        assert_eq!(t.grad_norm_trace.len(), 5);
+        assert!(t.grad_norm_trace.iter().all(|x| x.is_finite() && *x >= 0.0));
+    }
+
+    #[test]
+    fn ledger_conservation_holds_after_training() {
+        let (mut t, _) = build(CommMode::Compressed(Scheduler::Fixed { rate: 2.0 }), 4, 6, 4);
+        t.run().unwrap();
+        assert!(t.ledger().verify_conservation());
+        assert!(t.fabric().is_quiescent());
+    }
+}

@@ -1,0 +1,276 @@
+//! Compute engines: the per-worker forward/backward/loss primitives the
+//! coordinator drives.
+//!
+//! Two interchangeable backends implement `WorkerEngine`:
+//!   * `native`  — pure-rust CSR sparse math (fast CPU path; also the
+//!     differentiable oracle the integration tests check PJRT against);
+//!   * `pjrt`    — executes the AOT JAX/Pallas artifacts through the PJRT
+//!     C API (the three-layer paper stack).
+
+pub mod native;
+pub mod pjrt;
+
+use crate::tensor::Matrix;
+use crate::util::Rng;
+use crate::Result;
+
+/// Model dimensions (mirrors python/compile/shapes.py).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelDims {
+    pub f_in: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub layers: usize,
+}
+
+impl ModelDims {
+    /// Per-layer (f_in, f_out) pairs.
+    pub fn layer_dims(&self) -> Vec<(usize, usize)> {
+        let mut dims = vec![self.f_in];
+        dims.extend(std::iter::repeat(self.hidden).take(self.layers - 1));
+        dims.push(self.classes);
+        dims.windows(2).map(|w| (w[0], w[1])).collect()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.layer_dims().iter().map(|(fi, fo)| 2 * fi * fo + fo).sum()
+    }
+}
+
+/// One layer's parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerWeights {
+    pub w_self: Matrix,
+    pub w_neigh: Matrix,
+    pub bias: Vec<f32>,
+}
+
+/// Full model parameters; also used as the gradient container.
+#[derive(Clone, Debug)]
+pub struct Weights {
+    pub layers: Vec<LayerWeights>,
+    /// bumped on every update; lets engines cache device-resident copies
+    pub version: u64,
+}
+
+// version is a cache stamp, not part of value identity
+impl PartialEq for Weights {
+    fn eq(&self, other: &Self) -> bool {
+        self.layers == other.layers
+    }
+}
+
+impl Weights {
+    /// Glorot-uniform init (matches python model.init_weights layout).
+    pub fn glorot(dims: &ModelDims, seed: u64) -> Weights {
+        let mut rng = Rng::new(seed);
+        let layers = dims
+            .layer_dims()
+            .iter()
+            .map(|&(fi, fo)| {
+                let lim = (6.0 / (fi + fo) as f32).sqrt();
+                LayerWeights {
+                    w_self: Matrix::from_fn(fi, fo, |_, _| rng.next_range(-lim, lim)),
+                    w_neigh: Matrix::from_fn(fi, fo, |_, _| rng.next_range(-lim, lim)),
+                    bias: vec![0.0; fo],
+                }
+            })
+            .collect();
+        Weights { layers, version: 0 }
+    }
+
+    /// All-zero gradient container with the same shapes.
+    pub fn zeros_like(&self) -> Weights {
+        Weights {
+            layers: self
+                .layers
+                .iter()
+                .map(|l| LayerWeights {
+                    w_self: Matrix::zeros(l.w_self.rows, l.w_self.cols),
+                    w_neigh: Matrix::zeros(l.w_neigh.rows, l.w_neigh.cols),
+                    bias: vec![0.0; l.bias.len()],
+                })
+                .collect(),
+            version: 0,
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.w_self.data.len() + l.w_neigh.data.len() + l.bias.len())
+            .sum()
+    }
+
+    /// Flatten in the manifest layout [w_self, w_neigh, bias] per layer.
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.param_count());
+        for l in &self.layers {
+            out.extend_from_slice(&l.w_self.data);
+            out.extend_from_slice(&l.w_neigh.data);
+            out.extend_from_slice(&l.bias);
+        }
+        out
+    }
+
+    /// Inverse of flatten.
+    pub fn set_from_flat(&mut self, flat: &[f32]) {
+        assert_eq!(flat.len(), self.param_count());
+        self.version += 1;
+        let mut off = 0;
+        for l in self.layers.iter_mut() {
+            let n = l.w_self.data.len();
+            l.w_self.data.copy_from_slice(&flat[off..off + n]);
+            off += n;
+            let n = l.w_neigh.data.len();
+            l.w_neigh.data.copy_from_slice(&flat[off..off + n]);
+            off += n;
+            let n = l.bias.len();
+            l.bias.copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+    }
+
+    /// self += other (gradient accumulation across workers).
+    pub fn add_assign(&mut self, other: &Weights) {
+        for (a, b) in self.layers.iter_mut().zip(&other.layers) {
+            a.w_self.add_assign(&b.w_self);
+            a.w_neigh.add_assign(&b.w_neigh);
+            for (x, y) in a.bias.iter_mut().zip(&b.bias) {
+                *x += y;
+            }
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for l in self.layers.iter_mut() {
+            l.w_self.scale(s);
+            l.w_neigh.scale(s);
+            for b in l.bias.iter_mut() {
+                *b *= s;
+            }
+        }
+    }
+
+    /// L2 norm over all parameters (gradient-norm diagnostics, Prop. 1/2).
+    pub fn norm(&self) -> f32 {
+        self.flatten().iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+}
+
+/// Output of the loss head.
+#[derive(Clone, Debug)]
+pub struct LossOut {
+    pub loss: f32,
+    pub g_logits: Matrix,
+    pub correct_train: f32,
+    pub correct_val: f32,
+    pub correct_test: f32,
+    pub count_train: f32,
+}
+
+/// Per-layer gradients returned by `backward_layer`.
+#[derive(Clone, Debug)]
+pub struct LayerGrads {
+    pub w_self: Matrix,
+    pub w_neigh: Matrix,
+    pub bias: Vec<f32>,
+}
+
+/// The per-worker compute interface the coordinator drives.
+///
+/// Calling convention per epoch (per worker):
+///   1. `forward_layer(l, ...)` for l = 0..L (caches activations),
+///   2. `loss_grad(...)` on the last output,
+///   3. `backward_layer(l, ...)` for l = L-1..0, each returning the
+///      cotangents to propagate locally (`g_h_local`) and to ship to the
+///      boundary owners (`g_h_bnd`).
+// Not `Send`: the PJRT engine holds C-API handles.  Workers are driven
+// sequentially by the coordinator; parallelism lives inside the ops.
+pub trait WorkerEngine {
+    fn name(&self) -> &'static str;
+    fn n_local(&self) -> usize;
+    fn n_boundary(&self) -> usize;
+
+    /// One SAGE layer forward.  `h_bnd` must have `n_boundary()` rows;
+    /// `local_norm` selects the locally-renormalized operator (NoComm).
+    fn forward_layer(
+        &mut self,
+        layer: usize,
+        weights: &Weights,
+        h_local: &Matrix,
+        h_bnd: &Matrix,
+        local_norm: bool,
+    ) -> Result<Matrix>;
+
+    /// VJP of layer `layer` given the cotangent of its output.
+    /// Returns (g_h_local, g_h_bnd, layer weight grads).
+    fn backward_layer(
+        &mut self,
+        layer: usize,
+        weights: &Weights,
+        g_out: &Matrix,
+        local_norm: bool,
+    ) -> Result<(Matrix, Matrix, LayerGrads)>;
+
+    /// Masked cross-entropy + correct counts.
+    fn loss_grad(
+        &mut self,
+        logits: &Matrix,
+        labels: &[u32],
+        m_train: &[f32],
+        m_val: &[f32],
+        m_test: &[f32],
+    ) -> Result<LossOut>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DIMS: ModelDims = ModelDims { f_in: 8, hidden: 12, classes: 5, layers: 3 };
+
+    #[test]
+    fn layer_dims_and_param_count() {
+        assert_eq!(DIMS.layer_dims(), vec![(8, 12), (12, 12), (12, 5)]);
+        // 2*(8*12)+12 + 2*(12*12)+12 + 2*(12*5)+5
+        assert_eq!(DIMS.param_count(), 204 + 300 + 125);
+    }
+
+    #[test]
+    fn glorot_matches_dims_and_is_deterministic() {
+        let w1 = Weights::glorot(&DIMS, 7);
+        let w2 = Weights::glorot(&DIMS, 7);
+        assert_eq!(w1, w2);
+        assert_eq!(w1.param_count(), DIMS.param_count());
+        assert_eq!(w1.layers[0].w_self.shape(), (8, 12));
+        assert!(w1.layers.iter().all(|l| l.bias.iter().all(|&b| b == 0.0)));
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let w = Weights::glorot(&DIMS, 3);
+        let flat = w.flatten();
+        let mut w2 = w.zeros_like();
+        w2.set_from_flat(&flat);
+        assert_eq!(w, w2);
+    }
+
+    #[test]
+    fn add_assign_and_scale() {
+        let w = Weights::glorot(&DIMS, 1);
+        let mut acc = w.zeros_like();
+        acc.add_assign(&w);
+        acc.add_assign(&w);
+        acc.scale(0.5);
+        for (a, b) in acc.flatten().iter().zip(w.flatten()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn norm_of_zero_is_zero() {
+        let w = Weights::glorot(&DIMS, 1).zeros_like();
+        assert_eq!(w.norm(), 0.0);
+    }
+}

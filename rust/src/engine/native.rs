@@ -1,0 +1,354 @@
+//! Native worker engine: CSR-sparse SAGE forward/backward in pure rust.
+//!
+//! Mathematically identical to the L2 JAX model (python/compile/model.py);
+//! the integration tests assert PJRT == native to a few ulps.  This is the
+//! fast path for the large experiment grids (sparse aggregation is O(mF)
+//! vs the dense artifact's O(n² F)).
+
+use super::{LayerGrads, LossOut, ModelDims, Weights, WorkerEngine};
+use crate::partition::WorkerGraph;
+use crate::tensor::Matrix;
+use crate::Result;
+
+/// Per-layer cached context for the backward pass.
+struct LayerCache {
+    h_local_in: Matrix,
+    pre: Matrix,
+    agg: Matrix,
+}
+
+/// Sparse per-worker engine.
+pub struct NativeWorkerEngine {
+    wg: WorkerGraph,
+    dims: ModelDims,
+    cache: Vec<Option<LayerCache>>,
+}
+
+impl NativeWorkerEngine {
+    pub fn new(wg: WorkerGraph, dims: ModelDims) -> NativeWorkerEngine {
+        NativeWorkerEngine { cache: (0..dims.layers).map(|_| None).collect(), wg, dims }
+    }
+
+    pub fn worker_graph(&self) -> &WorkerGraph {
+        &self.wg
+    }
+
+    fn relu_layer(&self, layer: usize) -> bool {
+        layer + 1 < self.dims.layers
+    }
+}
+
+impl WorkerEngine for NativeWorkerEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn n_local(&self) -> usize {
+        self.wg.n_local()
+    }
+
+    fn n_boundary(&self) -> usize {
+        self.wg.n_boundary()
+    }
+
+    fn forward_layer(
+        &mut self,
+        layer: usize,
+        weights: &Weights,
+        h_local: &Matrix,
+        h_bnd: &Matrix,
+        local_norm: bool,
+    ) -> Result<Matrix> {
+        anyhow::ensure!(layer < self.dims.layers, "layer {layer} out of range");
+        let lw = &weights.layers[layer];
+        let (fi, fo) = (lw.w_self.rows, lw.w_self.cols);
+        anyhow::ensure!(
+            h_local.shape() == (self.n_local(), fi),
+            "h_local shape {:?} != ({}, {fi})",
+            h_local.shape(),
+            self.n_local()
+        );
+        // agg = S_ll @ h_local (+ S_lb @ h_bnd unless local-only)
+        let mut agg = Matrix::zeros(self.n_local(), fi);
+        if local_norm {
+            self.wg.s_ll_localnorm.spmm_into(h_local, &mut agg);
+        } else {
+            anyhow::ensure!(
+                h_bnd.shape() == (self.n_boundary(), fi),
+                "h_bnd shape {:?} != ({}, {fi})",
+                h_bnd.shape(),
+                self.n_boundary()
+            );
+            self.wg.s_ll.spmm_into(h_local, &mut agg);
+            if self.n_boundary() > 0 {
+                self.wg.s_lb.spmm_into(h_bnd, &mut agg);
+            }
+        }
+        // pre = h W_self + agg W_neigh + b
+        let mut pre = h_local.matmul(&lw.w_self);
+        pre.add_assign(&agg.matmul(&lw.w_neigh));
+        pre.add_row_broadcast(&lw.bias);
+        let mut out = pre.clone();
+        if self.relu_layer(layer) {
+            out.relu();
+        }
+        let _ = fo;
+        self.cache[layer] = Some(LayerCache { h_local_in: h_local.clone(), pre, agg });
+        Ok(out)
+    }
+
+    fn backward_layer(
+        &mut self,
+        layer: usize,
+        weights: &Weights,
+        g_out: &Matrix,
+        local_norm: bool,
+    ) -> Result<(Matrix, Matrix, LayerGrads)> {
+        let cache = self.cache[layer]
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("backward_layer({layer}) before forward"))?;
+        let lw = &weights.layers[layer];
+        // g_pre = g_out ⊙ relu'(pre)
+        let mut g_pre = g_out.clone();
+        if self.relu_layer(layer) {
+            for (g, &p) in g_pre.data.iter_mut().zip(&cache.pre.data) {
+                if p <= 0.0 {
+                    *g = 0.0;
+                }
+            }
+        }
+        let g_w_self = cache.h_local_in.t_matmul(&g_pre);
+        let g_w_neigh = cache.agg.t_matmul(&g_pre);
+        let mut g_bias = vec![0.0f32; lw.bias.len()];
+        for r in 0..g_pre.rows {
+            for (b, &g) in g_bias.iter_mut().zip(g_pre.row(r)) {
+                *b += g;
+            }
+        }
+        let g_agg = g_pre.matmul(&lw.w_neigh.transpose());
+        let mut g_h_local = g_pre.matmul(&lw.w_self.transpose());
+        let mut g_h_bnd = Matrix::zeros(self.n_boundary(), lw.w_self.rows);
+        if local_norm {
+            self.wg.s_ll_localnorm.spmm_t_into(&g_agg, &mut g_h_local);
+        } else {
+            self.wg.s_ll.spmm_t_into(&g_agg, &mut g_h_local);
+            if self.n_boundary() > 0 {
+                self.wg.s_lb.spmm_t_into(&g_agg, &mut g_h_bnd);
+            }
+        }
+        Ok((g_h_local, g_h_bnd, LayerGrads { w_self: g_w_self, w_neigh: g_w_neigh, bias: g_bias }))
+    }
+
+    fn loss_grad(
+        &mut self,
+        logits: &Matrix,
+        labels: &[u32],
+        m_train: &[f32],
+        m_val: &[f32],
+        m_test: &[f32],
+    ) -> Result<LossOut> {
+        loss_grad_dense(logits, labels, m_train, m_val, m_test)
+    }
+}
+
+/// Masked softmax cross-entropy; shared by native engine and tests.
+/// Matches python model.loss_grad: loss = Σ_train ce / count_train, the
+/// gradient carries the same 1/count scaling.
+pub fn loss_grad_dense(
+    logits: &Matrix,
+    labels: &[u32],
+    m_train: &[f32],
+    m_val: &[f32],
+    m_test: &[f32],
+) -> Result<LossOut> {
+    let (n, c) = logits.shape();
+    anyhow::ensure!(labels.len() == n && m_train.len() == n, "label/mask length");
+    let count: f32 = m_train.iter().sum::<f32>().max(1.0);
+    let mut loss = 0.0f32;
+    let mut g = Matrix::zeros(n, c);
+    let (mut c_tr, mut c_va, mut c_te) = (0.0f32, 0.0f32, 0.0f32);
+    for i in 0..n {
+        let row = logits.row(i);
+        let y = labels[i] as usize;
+        anyhow::ensure!(y < c, "label {y} out of range {c}");
+        let maxv = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let sum_exp: f32 = row.iter().map(|&v| (v - maxv).exp()).sum();
+        let log_z = maxv + sum_exp.ln();
+        let logp_y = row[y] - log_z;
+        loss += -logp_y * m_train[i];
+        let g_row = g.row_mut(i);
+        let w = m_train[i] / count;
+        if w != 0.0 {
+            for (j, gj) in g_row.iter_mut().enumerate() {
+                let p = (row[j] - log_z).exp();
+                *gj = (p - if j == y { 1.0 } else { 0.0 }) * w;
+            }
+        }
+        // argmax prediction
+        let mut best = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = j;
+            }
+        }
+        let hit = (best == y) as u32 as f32;
+        c_tr += hit * m_train[i];
+        c_va += hit * m_val[i];
+        c_te += hit * m_test[i];
+    }
+    Ok(LossOut {
+        loss: loss / count,
+        g_logits: g,
+        correct_train: c_tr,
+        correct_val: c_va,
+        correct_test: c_te,
+        count_train: count,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::sbm;
+    use crate::partition::random::RandomPartitioner;
+    use crate::partition::Partitioner;
+    use crate::util::Rng;
+
+    const DIMS: ModelDims = ModelDims { f_in: 6, hidden: 9, classes: 4, layers: 3 };
+
+    fn setup(seed: u64) -> NativeWorkerEngine {
+        let (g, _) = sbm(48, 2, 0.25, 0.05, seed);
+        let p = RandomPartitioner { seed }.partition(&g, 2).unwrap();
+        let wgs = WorkerGraph::build_all(&g, &p).unwrap();
+        NativeWorkerEngine::new(wgs[0].clone(), DIMS)
+    }
+
+    fn randm(r: usize, c: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(r, c, |_, _| rng.next_normal())
+    }
+
+    #[test]
+    fn forward_shapes_and_relu() {
+        let mut e = setup(1);
+        let w = Weights::glorot(&DIMS, 0);
+        let h = randm(e.n_local(), 6, 2);
+        let hb = randm(e.n_boundary(), 6, 3);
+        let out = e.forward_layer(0, &w, &h, &hb, false).unwrap();
+        assert_eq!(out.shape(), (e.n_local(), 9));
+        assert!(out.data.iter().all(|&x| x >= 0.0), "relu layer has negatives");
+        // last layer produces raw logits (no relu): negatives appear
+        let h2 = randm(e.n_local(), 9, 4);
+        let hb2 = randm(e.n_boundary(), 9, 5);
+        let out2 = e.forward_layer(2, &w, &h2, &hb2, false).unwrap();
+        assert_eq!(out2.shape(), (e.n_local(), 4));
+        assert!(out2.data.iter().any(|&x| x < 0.0));
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        let mut e = setup(3);
+        let w = Weights::glorot(&DIMS, 5);
+        let h = randm(e.n_local(), 6, 6);
+        let hb = randm(e.n_boundary(), 6, 7);
+        let g_out = randm(e.n_local(), 9, 8);
+        let _ = e.forward_layer(0, &w, &h, &hb, false).unwrap();
+        let (g_h, g_hb, grads) = e.backward_layer(0, &w, &g_out, false).unwrap();
+
+        let scalar = |e: &mut NativeWorkerEngine, w: &Weights, h: &Matrix, hb: &Matrix| -> f32 {
+            let out = e.forward_layer(0, w, h, hb, false).unwrap();
+            out.data.iter().zip(&g_out.data).map(|(a, b)| a * b).sum()
+        };
+        let eps = 1e-3f32;
+        // check a few coordinates of every gradient
+        for (k, (analytic, perturb)) in [
+            (0usize, g_h.get(2, 3)),
+            (1, g_hb.get(1, 2)),
+            (2, grads.w_self.get(4, 5)),
+            (3, grads.w_neigh.get(0, 1)),
+            (4, grads.bias[2]),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let mut h2 = h.clone();
+            let mut hb2 = hb.clone();
+            let mut w2 = w.clone();
+            match k {
+                0 => h2.set(2, 3, h2.get(2, 3) + eps),
+                1 => hb2.set(1, 2, hb2.get(1, 2) + eps),
+                2 => {
+                    let v = w2.layers[0].w_self.get(4, 5);
+                    w2.layers[0].w_self.set(4, 5, v + eps)
+                }
+                3 => {
+                    let v = w2.layers[0].w_neigh.get(0, 1);
+                    w2.layers[0].w_neigh.set(0, 1, v + eps)
+                }
+                _ => w2.layers[0].bias[2] += eps,
+            }
+            let f_plus = scalar(&mut e, &w2, &h2, &hb2);
+            let f_base = scalar(&mut e, &w, &h, &hb);
+            let numeric = (f_plus - f_base) / eps;
+            assert!(
+                (numeric - perturb).abs() < 0.05 * (1.0 + perturb.abs()),
+                "coord {k}: numeric {numeric} vs analytic {perturb} ({analytic:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn local_norm_ignores_boundary() {
+        let mut e = setup(5);
+        let w = Weights::glorot(&DIMS, 2);
+        let h = randm(e.n_local(), 6, 9);
+        let hb1 = randm(e.n_boundary(), 6, 10);
+        let hb2 = randm(e.n_boundary(), 6, 11);
+        let o1 = e.forward_layer(0, &w, &h, &hb1, true).unwrap();
+        let o2 = e.forward_layer(0, &w, &h, &hb2, true).unwrap();
+        assert_eq!(o1.data, o2.data);
+    }
+
+    #[test]
+    fn loss_grad_matches_reference_values() {
+        let logits = Matrix::from_vec(2, 2, vec![2.0, 0.0, 0.0, 2.0]);
+        let labels = [0u32, 0u32];
+        let ones = [1.0f32, 1.0];
+        let zeros = [0.0f32, 0.0];
+        let out = loss_grad_dense(&logits, &labels, &ones, &zeros, &zeros).unwrap();
+        // node 0 correct (p=0.88), node 1 wrong; ce = ln(1+e^-2) + ln(1+e^2)
+        let want = ((1.0f32 + (-2.0f32).exp()).ln() + (1.0f32 + 2.0f32.exp()).ln()) / 2.0;
+        assert!((out.loss - want).abs() < 1e-5, "{} vs {want}", out.loss);
+        assert_eq!(out.correct_train, 1.0);
+        // gradient sums to zero per row scaled: columns sum to 0
+        let s: f32 = out.g_logits.data.iter().sum();
+        assert!(s.abs() < 1e-6);
+    }
+
+    #[test]
+    fn loss_grad_finite_differences() {
+        let mut rng = Rng::new(4);
+        let logits = Matrix::from_fn(5, 3, |_, _| rng.next_normal());
+        let labels = [0u32, 1, 2, 1, 0];
+        let m_tr = [1.0f32, 0.0, 1.0, 1.0, 0.0];
+        let zeros = [0.0f32; 5];
+        let base = loss_grad_dense(&logits, &labels, &m_tr, &zeros, &zeros).unwrap();
+        let eps = 1e-3f32;
+        for (i, j) in [(0, 1), (2, 2), (3, 0)] {
+            let mut l2 = logits.clone();
+            l2.set(i, j, l2.get(i, j) + eps);
+            let plus = loss_grad_dense(&l2, &labels, &m_tr, &zeros, &zeros).unwrap();
+            let numeric = (plus.loss - base.loss) / eps;
+            let analytic = base.g_logits.get(i, j);
+            assert!((numeric - analytic).abs() < 1e-2, "({i},{j}): {numeric} vs {analytic}");
+        }
+    }
+
+    #[test]
+    fn backward_before_forward_errors() {
+        let mut e = setup(7);
+        let w = Weights::glorot(&DIMS, 1);
+        let g = randm(e.n_local(), 9, 1);
+        assert!(e.backward_layer(1, &w, &g, false).is_err());
+    }
+}

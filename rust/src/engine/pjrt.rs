@@ -1,0 +1,244 @@
+//! PJRT worker engine: the three-layer paper stack.
+//!
+//! Executes the AOT-compiled JAX/Pallas artifacts (layer forward/backward,
+//! loss head) through the PJRT C API.  Boundary blocks are zero-padded to
+//! the manifest's static `n_bnd = n_total - n_local`; the trainer works
+//! with the actual boundary size and this engine pads/trims at the edge.
+//!
+//! Perf (EXPERIMENTS.md §Perf): the adjacency blocks — by far the largest
+//! operands — are uploaded to the device **once** at construction, and the
+//! model weights once **per optimizer step** (cached by `Weights.version`);
+//! per-call uploads are only the activations/cotangents.
+
+use super::{LayerGrads, LossOut, Weights, WorkerEngine};
+use crate::partition::WorkerGraph;
+use crate::runtime::{
+    buffer_from_labels, buffer_from_matrix, buffer_from_vec, matrix_from_literal,
+    scalar_from_literal, ArtifactSet,
+};
+use crate::tensor::Matrix;
+use crate::Result;
+use std::rc::Rc;
+
+struct LayerCache {
+    h_local_in: Matrix,
+    pre: Matrix,
+    agg: Matrix,
+}
+
+struct WeightBuffers {
+    version: u64,
+    /// per layer: (w_self, w_neigh, bias)
+    layers: Vec<(xla::PjRtBuffer, xla::PjRtBuffer, xla::PjRtBuffer)>,
+}
+
+/// Per-worker engine over a shared compiled artifact set.
+pub struct PjrtWorkerEngine {
+    arts: Rc<ArtifactSet>,
+    wg: WorkerGraph,
+    /// device-resident dense blocks (uploaded once)
+    s_ll: xla::PjRtBuffer,
+    s_lb: xla::PjRtBuffer,
+    s_ll_local: xla::PjRtBuffer,
+    s_lb_zero: xla::PjRtBuffer,
+    wbufs: Option<WeightBuffers>,
+    cache: Vec<Option<LayerCache>>,
+}
+
+impl PjrtWorkerEngine {
+    pub fn new(arts: Rc<ArtifactSet>, wg: WorkerGraph) -> Result<PjrtWorkerEngine> {
+        let cfg = &arts.cfg;
+        anyhow::ensure!(
+            wg.n_local() == cfg.n_local,
+            "partition size {} != artifact n_local {}; rebuild artifacts for this (dataset, q)",
+            wg.n_local(),
+            cfg.n_local
+        );
+        anyhow::ensure!(
+            wg.n_boundary() <= cfg.n_bnd,
+            "boundary {} exceeds artifact padding {}",
+            wg.n_boundary(),
+            cfg.n_bnd
+        );
+        let client = arts.loss_grad.client().clone();
+        let s_ll = buffer_from_matrix(&client, &wg.s_ll.to_dense())?;
+        let s_lb = buffer_from_matrix(&client, &wg.s_lb.to_dense_padded(cfg.n_bnd))?;
+        let s_ll_local = buffer_from_matrix(&client, &wg.s_ll_localnorm.to_dense())?;
+        let s_lb_zero = buffer_from_matrix(&client, &Matrix::zeros(cfg.n_local, cfg.n_bnd))?;
+        Ok(PjrtWorkerEngine {
+            cache: (0..cfg.layers).map(|_| None).collect(),
+            arts,
+            wg,
+            s_ll,
+            s_lb,
+            s_ll_local,
+            s_lb_zero,
+            wbufs: None,
+        })
+    }
+
+    pub fn worker_graph(&self) -> &WorkerGraph {
+        &self.wg
+    }
+
+    fn client(&self) -> &xla::PjRtClient {
+        self.arts.loss_grad.client()
+    }
+
+    /// Pad an (n_boundary, f) matrix to the static (n_bnd, f) shape.
+    fn pad_boundary(&self, h_bnd: &Matrix, f: usize) -> Matrix {
+        let n_bnd_cfg = self.arts.cfg.n_bnd;
+        let mut padded = Matrix::zeros(n_bnd_cfg, f);
+        padded.data[..h_bnd.data.len()].copy_from_slice(&h_bnd.data);
+        padded
+    }
+
+    /// Upload weights if the cached device copy is stale.
+    fn ensure_weights(&mut self, weights: &Weights) -> Result<()> {
+        if self.wbufs.as_ref().is_some_and(|w| w.version == weights.version) {
+            return Ok(());
+        }
+        let client = self.client().clone();
+        let mut layers = Vec::with_capacity(weights.layers.len());
+        for lw in &weights.layers {
+            layers.push((
+                buffer_from_matrix(&client, &lw.w_self)?,
+                buffer_from_matrix(&client, &lw.w_neigh)?,
+                buffer_from_vec(&client, &lw.bias)?,
+            ));
+        }
+        self.wbufs = Some(WeightBuffers { version: weights.version, layers });
+        Ok(())
+    }
+}
+
+impl WorkerEngine for PjrtWorkerEngine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn n_local(&self) -> usize {
+        self.wg.n_local()
+    }
+
+    fn n_boundary(&self) -> usize {
+        self.wg.n_boundary()
+    }
+
+    fn forward_layer(
+        &mut self,
+        layer: usize,
+        weights: &Weights,
+        h_local: &Matrix,
+        h_bnd: &Matrix,
+        local_norm: bool,
+    ) -> Result<Matrix> {
+        let lw = &weights.layers[layer];
+        let f = lw.w_self.rows;
+        anyhow::ensure!(h_local.shape() == (self.n_local(), f), "h_local shape");
+        let padded = if local_norm {
+            Matrix::zeros(self.arts.cfg.n_bnd, f)
+        } else {
+            anyhow::ensure!(h_bnd.shape() == (self.n_boundary(), f), "h_bnd shape");
+            self.pad_boundary(h_bnd, f)
+        };
+        self.ensure_weights(weights)?;
+        let client = self.client().clone();
+        let h_buf = buffer_from_matrix(&client, h_local)?;
+        let hb_buf = buffer_from_matrix(&client, &padded)?;
+        let (s_ll, s_lb) = if local_norm {
+            (&self.s_ll_local, &self.s_lb_zero)
+        } else {
+            (&self.s_ll, &self.s_lb)
+        };
+        let wb = &self.wbufs.as_ref().unwrap().layers[layer];
+        let inputs = [&h_buf, &hb_buf, s_ll, s_lb, &wb.0, &wb.1, &wb.2];
+        let outs = self.arts.layer_forward[layer].run_b(&inputs)?;
+        anyhow::ensure!(outs.len() == 3, "layer_forward arity {}", outs.len());
+        let out = matrix_from_literal(&outs[0])?;
+        let pre = matrix_from_literal(&outs[1])?;
+        let agg = matrix_from_literal(&outs[2])?;
+        self.cache[layer] = Some(LayerCache { h_local_in: h_local.clone(), pre, agg });
+        Ok(out)
+    }
+
+    fn backward_layer(
+        &mut self,
+        layer: usize,
+        weights: &Weights,
+        g_out: &Matrix,
+        local_norm: bool,
+    ) -> Result<(Matrix, Matrix, LayerGrads)> {
+        self.ensure_weights(weights)?;
+        let cache = self.cache[layer]
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("backward_layer({layer}) before forward"))?;
+        let lw = &weights.layers[layer];
+        let client = self.client().clone();
+        let (s_ll, s_lb) = if local_norm {
+            (&self.s_ll_local, &self.s_lb_zero)
+        } else {
+            (&self.s_ll, &self.s_lb)
+        };
+        let h_buf = buffer_from_matrix(&client, &cache.h_local_in)?;
+        let agg_buf = buffer_from_matrix(&client, &cache.agg)?;
+        let g_buf = buffer_from_matrix(&client, g_out)?;
+        let wb = &self.wbufs.as_ref().unwrap().layers[layer];
+        let pre_buf;
+        let mut inputs: Vec<&xla::PjRtBuffer> = vec![&h_buf, s_ll, s_lb, &wb.0, &wb.1];
+        // relu layers consume `pre` for the mask; the last layer's
+        // artifact has no such parameter (see python/compile/aot.py)
+        if layer + 1 < self.arts.cfg.layers {
+            pre_buf = buffer_from_matrix(&client, &cache.pre)?;
+            inputs.push(&pre_buf);
+        }
+        inputs.push(&agg_buf);
+        inputs.push(&g_buf);
+        let outs = self.arts.layer_backward[layer].run_b(&inputs)?;
+        anyhow::ensure!(outs.len() == 5, "layer_backward arity {}", outs.len());
+        let g_h_local = matrix_from_literal(&outs[0])?;
+        let g_h_bnd_padded = matrix_from_literal(&outs[1])?;
+        let g_w_self = matrix_from_literal(&outs[2])?;
+        let g_w_neigh = matrix_from_literal(&outs[3])?;
+        let g_bias = outs[4].to_vec::<f32>().map_err(|e| anyhow::anyhow!("gb: {e:?}"))?;
+        // trim the zero padding back to the actual boundary
+        let nb = self.n_boundary();
+        let f = lw.w_self.rows;
+        let g_h_bnd = Matrix::from_vec(nb, f, g_h_bnd_padded.data[..nb * f].to_vec());
+        Ok((
+            g_h_local,
+            g_h_bnd,
+            LayerGrads { w_self: g_w_self, w_neigh: g_w_neigh, bias: g_bias },
+        ))
+    }
+
+    fn loss_grad(
+        &mut self,
+        logits: &Matrix,
+        labels: &[u32],
+        m_train: &[f32],
+        m_val: &[f32],
+        m_test: &[f32],
+    ) -> Result<LossOut> {
+        let client = self.client().clone();
+        let logits_buf = buffer_from_matrix(&client, logits)?;
+        let y_buf = buffer_from_labels(&client, labels)?;
+        let tr_buf = buffer_from_vec(&client, m_train)?;
+        let va_buf = buffer_from_vec(&client, m_val)?;
+        let te_buf = buffer_from_vec(&client, m_test)?;
+        let inputs = [&logits_buf, &y_buf, &tr_buf, &va_buf, &te_buf];
+        let outs = self.arts.loss_grad.run_b(&inputs)?;
+        anyhow::ensure!(outs.len() == 5, "loss_grad arity {}", outs.len());
+        Ok(LossOut {
+            loss: scalar_from_literal(&outs[0])?,
+            g_logits: matrix_from_literal(&outs[1])?,
+            correct_train: scalar_from_literal(&outs[2])?,
+            correct_val: scalar_from_literal(&outs[3])?,
+            correct_test: scalar_from_literal(&outs[4])?,
+            count_train: m_train.iter().sum::<f32>().max(1.0),
+        })
+    }
+}
+
+// Integration tests live in rust/tests/pjrt_vs_native.rs (they need the
+// artifacts built by `make artifacts`).

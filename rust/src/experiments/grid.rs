@@ -1,0 +1,287 @@
+//! Shared grid-running machinery for the table/figure harnesses.
+//!
+//! The paper's algorithm roster (Tables II/III):
+//!   Full Comm · No Comm · Variable Comp. slopes 2–7 (VARCO, ours) ·
+//!   Fixed Comp rates 2 and 4.
+
+
+use crate::config::{build_trainer_with_dataset, TrainConfig};
+use crate::graph::Dataset;
+use crate::metrics::RunReport;
+use crate::Result;
+
+/// Scale knobs shared by all harnesses; the defaults reproduce the paper's
+/// *shape* on one CPU box.  `--nodes/--epochs/--hidden` scale up.
+#[derive(Clone, Debug)]
+pub struct ExperimentScale {
+    pub nodes_arxiv: usize,
+    pub nodes_products: usize,
+    pub epochs: usize,
+    pub hidden: usize,
+    pub lr: f32,
+    pub weight_decay: f32,
+    pub seed: u64,
+    pub eval_every: usize,
+    pub engine: String,
+    /// parallel runs (0 = auto)
+    pub jobs: usize,
+}
+
+impl Default for ExperimentScale {
+    fn default() -> Self {
+        ExperimentScale {
+            nodes_arxiv: 2048,
+            nodes_products: 2560,
+            epochs: 250,
+            hidden: 64,
+            lr: 0.02,
+            weight_decay: 2e-3,
+            seed: 0,
+            eval_every: 5,
+            engine: "native".into(),
+            jobs: 0,
+        }
+    }
+}
+
+impl ExperimentScale {
+    /// Parse common harness flags; returns unrecognized args.
+    pub fn apply_cli(&mut self, args: &[String]) -> Result<Vec<String>> {
+        let mut rest = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            match args[i].as_str() {
+                "--nodes" => {
+                    i += 1;
+                    let n: usize = args[i].parse()?;
+                    self.nodes_arxiv = n;
+                    self.nodes_products = n;
+                }
+                "--epochs" => {
+                    i += 1;
+                    self.epochs = args[i].parse()?;
+                }
+                "--hidden" => {
+                    i += 1;
+                    self.hidden = args[i].parse()?;
+                }
+                "--lr" => {
+                    i += 1;
+                    self.lr = args[i].parse()?;
+                }
+                "--seed" => {
+                    i += 1;
+                    self.seed = args[i].parse()?;
+                }
+                "--engine" => {
+                    i += 1;
+                    self.engine = args[i].clone();
+                }
+                "--jobs" => {
+                    i += 1;
+                    self.jobs = args[i].parse()?;
+                }
+                "--eval-every" => {
+                    i += 1;
+                    self.eval_every = args[i].parse()?;
+                }
+                other => rest.push(other.to_string()),
+            }
+            i += 1;
+        }
+        Ok(rest)
+    }
+
+    pub fn nodes_for(&self, dataset: &str) -> usize {
+        if dataset.contains("products") {
+            self.nodes_products
+        } else {
+            self.nodes_arxiv
+        }
+    }
+}
+
+/// One training run in a grid.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub dataset: String,
+    pub partitioner: String,
+    pub q: usize,
+    pub algorithm: AlgorithmSpec,
+}
+
+/// Paper algorithm roster entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AlgorithmSpec {
+    pub label: String,
+    pub comm: String, // TrainConfig comm spec
+}
+
+/// The ten algorithms of Tables II/III.
+pub fn paper_algorithms() -> Vec<AlgorithmSpec> {
+    let mut algos = vec![
+        AlgorithmSpec { label: "Full Comm".into(), comm: "full".into() },
+        AlgorithmSpec { label: "No Comm".into(), comm: "none".into() },
+    ];
+    for slope in 2..=7 {
+        algos.push(AlgorithmSpec {
+            label: format!("Variable Comp. Slope {slope}(ours)"),
+            comm: format!("linear:{slope}"),
+        });
+    }
+    algos.push(AlgorithmSpec { label: "Fixed Comp Rate 2".into(), comm: "fixed:2".into() });
+    algos.push(AlgorithmSpec { label: "Fixed Comp Rate 4".into(), comm: "fixed:4".into() });
+    algos
+}
+
+/// Subset used by the figure harnesses (Fig. 3/5 roster).
+pub fn figure_algorithms() -> Vec<AlgorithmSpec> {
+    vec![
+        AlgorithmSpec { label: "Full Comm".into(), comm: "full".into() },
+        AlgorithmSpec { label: "No Comm".into(), comm: "none".into() },
+        AlgorithmSpec { label: "VARCO slope 5".into(), comm: "linear:5".into() },
+        AlgorithmSpec { label: "Fixed Rate 2".into(), comm: "fixed:2".into() },
+        AlgorithmSpec { label: "Fixed Rate 4".into(), comm: "fixed:4".into() },
+    ]
+}
+
+/// Materialize a TrainConfig for one run.
+pub fn config_for(scale: &ExperimentScale, spec: &RunSpec) -> TrainConfig {
+    TrainConfig {
+        dataset: spec.dataset.clone(),
+        nodes: scale.nodes_for(&spec.dataset),
+        q: spec.q,
+        partitioner: spec.partitioner.clone(),
+        comm: spec.algorithm.comm.clone(),
+        engine: scale.engine.clone(),
+        epochs: scale.epochs,
+        hidden: scale.hidden,
+        lr: scale.lr,
+        weight_decay: scale.weight_decay,
+        seed: scale.seed,
+        eval_every: scale.eval_every,
+        ..Default::default()
+    }
+}
+
+/// Run one spec against a prebuilt dataset.
+pub fn run_one(scale: &ExperimentScale, spec: &RunSpec, dataset: &Dataset) -> Result<RunReport> {
+    let cfg = config_for(scale, spec);
+    let mut trainer = build_trainer_with_dataset(&cfg, dataset)?;
+    let mut report = trainer.run()?;
+    report.algorithm = spec.algorithm.label.clone();
+    Ok(report)
+}
+
+/// Run a whole grid with bounded parallelism; reports come back in spec
+/// order.  Datasets are built once per (name, nodes) pair.
+pub fn run_grid(scale: &ExperimentScale, specs: &[RunSpec]) -> Result<Vec<RunReport>> {
+    // build datasets up front (keyed by name; nodes fixed per name)
+    let mut datasets: std::collections::BTreeMap<String, Dataset> = Default::default();
+    for spec in specs {
+        if !datasets.contains_key(&spec.dataset) {
+            let ds = Dataset::load(&spec.dataset, scale.nodes_for(&spec.dataset), scale.seed)?;
+            datasets.insert(spec.dataset.clone(), ds);
+        }
+    }
+    let jobs = if scale.jobs > 0 {
+        scale.jobs
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(specs.len().max(1))
+    };
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let results: Vec<std::sync::Mutex<Option<Result<RunReport>>>> =
+        specs.iter().map(|_| std::sync::Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..jobs {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= specs.len() {
+                    break;
+                }
+                let spec = &specs[i];
+                let ds = &datasets[&spec.dataset];
+                let started = std::time::Instant::now();
+                let out = run_one(scale, spec, ds);
+                eprintln!(
+                    "[grid {}/{}] {} {} q={} {} -> {} ({:.1}s)",
+                    i + 1,
+                    specs.len(),
+                    spec.dataset,
+                    spec.partitioner,
+                    spec.q,
+                    spec.algorithm.label,
+                    out.as_ref()
+                        .map(|r| format!("test {:.4}", r.final_test_accuracy()))
+                        .unwrap_or_else(|e| format!("ERROR {e}")),
+                    started.elapsed().as_secs_f64()
+                );
+                *results[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker finished"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roster_matches_paper() {
+        let algos = paper_algorithms();
+        assert_eq!(algos.len(), 10);
+        assert_eq!(algos[0].comm, "full");
+        assert_eq!(algos[1].comm, "none");
+        assert!(algos[2..8].iter().enumerate().all(|(i, a)| a.comm == format!("linear:{}", i + 2)));
+        assert_eq!(algos[8].comm, "fixed:2");
+        assert_eq!(algos[9].comm, "fixed:4");
+    }
+
+    #[test]
+    fn scale_cli_parsing() {
+        let mut s = ExperimentScale::default();
+        let rest = s
+            .apply_cli(&[
+                "--nodes".into(),
+                "512".into(),
+                "--epochs".into(),
+                "7".into(),
+                "--custom".into(),
+            ])
+            .unwrap();
+        assert_eq!(s.nodes_arxiv, 512);
+        assert_eq!(s.nodes_products, 512);
+        assert_eq!(s.epochs, 7);
+        assert_eq!(rest, vec!["--custom"]);
+    }
+
+    #[test]
+    fn tiny_grid_runs_in_order() {
+        let scale = ExperimentScale {
+            nodes_arxiv: 128,
+            epochs: 2,
+            hidden: 8,
+            eval_every: 2,
+            jobs: 2,
+            ..Default::default()
+        };
+        let specs: Vec<RunSpec> = [("full", "Full Comm"), ("none", "No Comm")]
+            .iter()
+            .map(|(comm, label)| RunSpec {
+                dataset: "synth-arxiv".into(),
+                partitioner: "random".into(),
+                q: 2,
+                algorithm: AlgorithmSpec { label: label.to_string(), comm: comm.to_string() },
+            })
+            .collect();
+        let reports = run_grid(&scale, &specs).unwrap();
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].algorithm, "Full Comm");
+        assert_eq!(reports[1].algorithm, "No Comm");
+        assert_eq!(reports[0].records.len(), 2);
+    }
+}

@@ -1,0 +1,9 @@
+//! Experiment harnesses: one function per paper table/figure (DESIGN.md
+//! §3).  The `examples/` binaries are thin CLIs over these, so the grid
+//! logic itself is unit-testable.
+
+pub mod figures;
+pub mod grid;
+pub mod tables;
+
+pub use grid::{paper_algorithms, run_one, ExperimentScale, RunSpec};

@@ -1,0 +1,116 @@
+//! Table harnesses: regenerate the paper's Tables I, II, III.
+
+use super::grid::{paper_algorithms, run_grid, ExperimentScale, RunSpec};
+use crate::graph::Dataset;
+use crate::metrics::RunReport;
+use crate::partition::PartitionStats;
+use crate::Result;
+
+pub const TABLE_QS: [usize; 4] = [2, 4, 8, 16];
+pub const TABLE_DATASETS: [&str; 2] = ["synth-products", "synth-arxiv"];
+
+/// Table I: self/cross edge counts per (dataset, partitioner, q).
+pub fn table1(scale: &ExperimentScale) -> Result<String> {
+    let mut out = String::new();
+    out.push_str("TABLE I: number of self-edges and cross-edges\n");
+    out.push_str(&format!(
+        "{:<6} {:<12} {:<16} {:>3}  {:>45}\n",
+        "edge", "partitioner", "dataset", "q", "count(%)"
+    ));
+    for dataset in TABLE_DATASETS {
+        let ds = Dataset::load(dataset, scale.nodes_for(dataset), scale.seed)?;
+        for pname in ["metis-like", "random"] {
+            let mut rows = Vec::new();
+            for q in TABLE_QS {
+                let p = crate::partition::by_name(pname, scale.seed)?.partition(&ds.graph, q)?;
+                rows.push(PartitionStats::compute(&ds.graph, &p));
+            }
+            for (kind, pick) in [("Self", true), ("Cross", false)] {
+                for (q, st) in TABLE_QS.iter().zip(&rows) {
+                    let (cnt, pct) = if pick {
+                        (st.self_edges, st.self_pct())
+                    } else {
+                        (st.cross_edges, st.cross_pct())
+                    };
+                    out.push_str(&format!(
+                        "{:<6} {:<12} {:<16} {:>3}  {:>12}({:5.2}%)\n",
+                        kind, pname, dataset, q, cnt, pct
+                    ));
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Tables II (random) / III (metis-like): final test accuracy for the full
+/// algorithm grid.  Returns (formatted table, raw reports).
+pub fn table_accuracy(
+    scale: &ExperimentScale,
+    partitioner: &str,
+) -> Result<(String, Vec<RunReport>)> {
+    let algos = paper_algorithms();
+    let mut specs = Vec::new();
+    for dataset in TABLE_DATASETS {
+        for q in TABLE_QS {
+            for algo in &algos {
+                specs.push(RunSpec {
+                    dataset: dataset.into(),
+                    partitioner: partitioner.into(),
+                    q,
+                    algorithm: algo.clone(),
+                });
+            }
+        }
+    }
+    let reports = run_grid(scale, &specs)?;
+
+    // format: one row per algorithm, one column per (dataset, q)
+    let mut out = String::new();
+    let which = if partitioner == "random" { "II (random partitioning)" } else { "III (METIS-like partitioning)" };
+    out.push_str(&format!("TABLE {which}: test accuracy (%)\n"));
+    out.push_str(&format!("{:<30}", "Algorithm"));
+    for dataset in TABLE_DATASETS {
+        for q in TABLE_QS {
+            out.push_str(&format!(" {:>9}", format!("{}/q{}", &dataset[6..9], q)));
+        }
+    }
+    out.push('\n');
+    let n_cells = TABLE_DATASETS.len() * TABLE_QS.len();
+    for (ai, algo) in algos.iter().enumerate() {
+        out.push_str(&format!("{:<30}", algo.label));
+        for cell in 0..n_cells {
+            let idx = cell * algos.len() + ai;
+            out.push_str(&format!(" {:>9.2}", reports[idx].test_at_best_val() * 100.0));
+        }
+        out.push('\n');
+    }
+    Ok((out, reports))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_all_rows() {
+        let scale = ExperimentScale {
+            nodes_arxiv: 256,
+            nodes_products: 256,
+            ..Default::default()
+        };
+        let t = table1(&scale).unwrap();
+        // 2 datasets * 2 partitioners * 2 kinds * 4 qs = 32 data rows
+        assert_eq!(t.lines().count(), 2 + 32, "{t}");
+        assert!(t.contains("Self") && t.contains("Cross"));
+        assert!(t.contains("metis-like") && t.contains("random"));
+    }
+
+    #[test]
+    fn accuracy_table_layout() {
+        // tiny smoke: 1 dataset x 1 q via a shrunken grid is exercised in
+        // the examples; here just check the full spec construction count.
+        let algos = paper_algorithms();
+        assert_eq!(algos.len() * TABLE_QS.len() * TABLE_DATASETS.len(), 80);
+    }
+}

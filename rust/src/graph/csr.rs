@@ -1,0 +1,153 @@
+//! Compressed sparse row graph storage (undirected, unweighted).
+
+/// Undirected graph in CSR form.  Neighbor lists are sorted; no self-loops,
+/// no parallel edges.  `indptr.len() == n + 1`, `indices.len() == 2m`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub n: usize,
+    pub indptr: Vec<u64>,
+    pub indices: Vec<u32>,
+}
+
+impl Csr {
+    /// Build from an undirected edge list; dedups, drops self-loops,
+    /// symmetrizes.
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> Csr {
+        let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for &(u, v) in edges {
+            if u == v {
+                continue;
+            }
+            assert!((u as usize) < n && (v as usize) < n, "edge ({u},{v}) out of range n={n}");
+            adj[u as usize].push(v);
+            adj[v as usize].push(u);
+        }
+        let mut indptr = Vec::with_capacity(n + 1);
+        let mut indices = Vec::new();
+        indptr.push(0u64);
+        for list in adj.iter_mut() {
+            list.sort_unstable();
+            list.dedup();
+            indices.extend_from_slice(list);
+            indptr.push(indices.len() as u64);
+        }
+        Csr { n, indptr, indices }
+    }
+
+    /// Number of undirected edges.
+    pub fn num_edges(&self) -> usize {
+        self.indices.len() / 2
+    }
+
+    #[inline]
+    pub fn neighbors(&self, u: usize) -> &[u32] {
+        &self.indices[self.indptr[u] as usize..self.indptr[u + 1] as usize]
+    }
+
+    #[inline]
+    pub fn degree(&self, u: usize) -> usize {
+        (self.indptr[u + 1] - self.indptr[u]) as usize
+    }
+
+    pub fn degrees(&self) -> Vec<u32> {
+        (0..self.n).map(|u| self.degree(u) as u32).collect()
+    }
+
+    pub fn avg_degree(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.indices.len() as f64 / self.n as f64
+    }
+
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.neighbors(u).binary_search(&(v as u32)).is_ok()
+    }
+
+    /// Structural invariants; used by tests and after IO round trips.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.indptr.len() == self.n + 1, "indptr length");
+        anyhow::ensure!(
+            *self.indptr.last().unwrap_or(&0) as usize == self.indices.len(),
+            "indptr tail != indices len"
+        );
+        for u in 0..self.n {
+            anyhow::ensure!(self.indptr[u] <= self.indptr[u + 1], "indptr not monotone at {u}");
+            let nb = self.neighbors(u);
+            for w in nb.windows(2) {
+                anyhow::ensure!(w[0] < w[1], "neighbors of {u} not strictly sorted");
+            }
+            for &v in nb {
+                anyhow::ensure!((v as usize) < self.n, "neighbor {v} out of range");
+                anyhow::ensure!(v as usize != u, "self-loop at {u}");
+                anyhow::ensure!(self.has_edge(v as usize, u), "asymmetric edge {u}->{v}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Connected-component count (BFS) — used by generator tests.
+    pub fn num_components(&self) -> usize {
+        let mut seen = vec![false; self.n];
+        let mut count = 0;
+        let mut queue = std::collections::VecDeque::new();
+        for s in 0..self.n {
+            if seen[s] {
+                continue;
+            }
+            count += 1;
+            seen[s] = true;
+            queue.push_back(s);
+            while let Some(u) = queue.pop_front() {
+                for &v in self.neighbors(u) {
+                    if !seen[v as usize] {
+                        seen[v as usize] = true;
+                        queue.push_back(v as usize);
+                    }
+                }
+            }
+        }
+        count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_edges_symmetrizes_and_dedups() {
+        let g = Csr::from_edges(4, &[(0, 1), (1, 0), (1, 2), (2, 2), (3, 1)]);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.neighbors(1), &[0, 2, 3]);
+        assert!(g.has_edge(2, 1) && !g.has_edge(2, 2));
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn degrees_and_avg() {
+        let g = Csr::from_edges(3, &[(0, 1), (1, 2)]);
+        assert_eq!(g.degrees(), vec![1, 2, 1]);
+        assert!((g.avg_degree() - 4.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_graph_is_valid() {
+        let g = Csr::from_edges(5, &[]);
+        assert_eq!(g.num_edges(), 0);
+        g.validate().unwrap();
+        assert_eq!(g.num_components(), 5);
+    }
+
+    #[test]
+    fn components_counted() {
+        let g = Csr::from_edges(6, &[(0, 1), (1, 2), (3, 4)]);
+        assert_eq!(g.num_components(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_edge_panics() {
+        Csr::from_edges(2, &[(0, 5)]);
+    }
+}

@@ -1,0 +1,246 @@
+//! Synthetic graph generators: Erdős–Rényi, Barabási–Albert, stochastic
+//! block model, R-MAT.  All deterministic given a seed.
+
+use super::Csr;
+use crate::util::Rng;
+
+/// G(n, p) Erdős–Rényi via geometric edge skipping (O(m)).
+pub fn erdos_renyi(n: usize, p: f64, seed: u64) -> Csr {
+    assert!((0.0..=1.0).contains(&p));
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::new();
+    if p > 0.0 && n > 1 {
+        let lq = (1.0 - p).ln();
+        let total = n * (n - 1) / 2;
+        let mut k: i64 = -1;
+        loop {
+            let r = rng.next_f64().max(1e-300);
+            let skip = if p >= 1.0 { 1 } else { 1 + (r.ln() / lq).floor() as i64 };
+            k += skip.max(1);
+            if k as usize >= total {
+                break;
+            }
+            let (u, v) = pair_from_index(k as usize);
+            edges.push((u as u32, v as u32));
+        }
+    }
+    Csr::from_edges(n, &edges)
+}
+
+/// Map linear index k in [0, n(n-1)/2) to the k-th (u < v) pair.
+fn pair_from_index(k: usize) -> (usize, usize) {
+    // Solve v(v-1)/2 <= k: v = floor((1 + sqrt(1+8k)) / 2)
+    let v = ((1.0 + (1.0 + 8.0 * k as f64).sqrt()) / 2.0).floor() as usize;
+    let v = if v * (v - 1) / 2 > k { v - 1 } else { v };
+    let u = k - v * (v - 1) / 2;
+    (u, v)
+}
+
+/// Barabási–Albert preferential attachment with `m` edges per new node.
+pub fn barabasi_albert(n: usize, m: usize, seed: u64) -> Csr {
+    assert!(m >= 1 && n > m, "need n > m >= 1");
+    let mut rng = Rng::new(seed);
+    let mut targets: Vec<u32> = Vec::new(); // repeated-node list ∝ degree
+    let mut edges = Vec::new();
+    // Seed clique over the first m+1 nodes.
+    for u in 0..=m {
+        for v in (u + 1)..=m {
+            edges.push((u as u32, v as u32));
+            targets.push(u as u32);
+            targets.push(v as u32);
+        }
+    }
+    for u in (m + 1)..n {
+        let mut picked = std::collections::HashSet::new();
+        while picked.len() < m {
+            let t = targets[rng.next_below(targets.len())];
+            picked.insert(t);
+        }
+        for &t in &picked {
+            edges.push((u as u32, t));
+            targets.push(u as u32);
+            targets.push(t);
+        }
+    }
+    Csr::from_edges(n, &edges)
+}
+
+/// Stochastic block model: `blocks` communities of equal size, intra-block
+/// probability `p_in`, inter-block `p_out`.  Returns (graph, block id per
+/// node).  Block assignment is contiguous then shuffled so node ids carry
+/// no community information (matters for random partitioning realism).
+pub fn sbm(n: usize, blocks: usize, p_in: f64, p_out: f64, seed: u64) -> (Csr, Vec<u32>) {
+    assert!(blocks >= 1 && n >= blocks);
+    let mut rng = Rng::new(seed);
+    let mut assignment: Vec<u32> = (0..n).map(|i| (i % blocks) as u32).collect();
+    rng.shuffle(&mut assignment);
+    let mut edges = Vec::new();
+    // Group nodes by block for O(within) + bernoulli sampling across pairs
+    // of blocks via ER-style skipping on the pair index.
+    let mut members: Vec<Vec<u32>> = vec![Vec::new(); blocks];
+    for (i, &b) in assignment.iter().enumerate() {
+        members[b as usize].push(i as u32);
+    }
+    for a in 0..blocks {
+        for b in a..blocks {
+            let p = if a == b { p_in } else { p_out };
+            if p <= 0.0 {
+                continue;
+            }
+            sample_block_pair(&members[a], &members[b], a == b, p, &mut rng, &mut edges);
+        }
+    }
+    (Csr::from_edges(n, &edges), assignment)
+}
+
+fn sample_block_pair(
+    xs: &[u32],
+    ys: &[u32],
+    same: bool,
+    p: f64,
+    rng: &mut Rng,
+    edges: &mut Vec<(u32, u32)>,
+) {
+    let total = if same { xs.len() * (xs.len().saturating_sub(1)) / 2 } else { xs.len() * ys.len() };
+    if total == 0 {
+        return;
+    }
+    let lq = (1.0 - p).ln();
+    let mut k: i64 = -1;
+    loop {
+        let r = rng.next_f64().max(1e-300);
+        let skip = if p >= 1.0 { 1 } else { 1 + (r.ln() / lq).floor() as i64 };
+        k += skip.max(1);
+        if k as usize >= total {
+            break;
+        }
+        let (i, j) = if same {
+            let (u, v) = super::generate::pair_from_index(k as usize);
+            (xs[u], xs[v])
+        } else {
+            let idx = k as usize;
+            (xs[idx / ys.len()], ys[idx % ys.len()])
+        };
+        edges.push((i, j));
+    }
+}
+
+/// R-MAT power-law generator (Chakrabarti et al.): 2^scale nodes,
+/// `edge_factor * n` directed samples symmetrized.
+pub fn rmat(scale: u32, edge_factor: usize, seed: u64) -> Csr {
+    let n = 1usize << scale;
+    let (a, b, c) = (0.57, 0.19, 0.19); // Graph500 parameters
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::with_capacity(edge_factor * n);
+    for _ in 0..edge_factor * n {
+        let (mut u, mut v) = (0usize, 0usize);
+        for _ in 0..scale {
+            u <<= 1;
+            v <<= 1;
+            let r = rng.next_f64();
+            if r < a {
+            } else if r < a + b {
+                v |= 1;
+            } else if r < a + b + c {
+                u |= 1;
+            } else {
+                u |= 1;
+                v |= 1;
+            }
+        }
+        if u != v {
+            edges.push((u as u32, v as u32));
+        }
+    }
+    Csr::from_edges(n, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn er_density_close_to_p() {
+        let n = 500;
+        let p = 0.05;
+        let g = erdos_renyi(n, p, 1);
+        let expected = p * (n * (n - 1) / 2) as f64;
+        let got = g.num_edges() as f64;
+        assert!((got - expected).abs() < 0.15 * expected, "{got} vs {expected}");
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn er_deterministic() {
+        assert_eq!(erdos_renyi(100, 0.1, 7), erdos_renyi(100, 0.1, 7));
+        assert_ne!(erdos_renyi(100, 0.1, 7), erdos_renyi(100, 0.1, 8));
+    }
+
+    #[test]
+    fn er_p_zero_and_edge_cases() {
+        assert_eq!(erdos_renyi(10, 0.0, 1).num_edges(), 0);
+        assert_eq!(erdos_renyi(1, 0.5, 1).num_edges(), 0);
+        assert_eq!(erdos_renyi(0, 0.5, 1).n, 0);
+    }
+
+    #[test]
+    fn pair_index_bijective_prefix() {
+        let mut seen = std::collections::HashSet::new();
+        for k in 0..45 {
+            let (u, v) = pair_from_index(k);
+            assert!(u < v && v < 10, "k={k} -> ({u},{v})");
+            assert!(seen.insert((u, v)));
+        }
+    }
+
+    #[test]
+    fn ba_has_expected_edge_count_and_hubs() {
+        let g = barabasi_albert(300, 3, 2);
+        // clique(4)=6 edges + 3 per node for 296 nodes
+        assert_eq!(g.num_edges(), 6 + 3 * 296);
+        let mut degs = g.degrees();
+        degs.sort_unstable_by(|a, b| b.cmp(a));
+        assert!(degs[0] as f64 > 3.0 * g.avg_degree(), "hub degree {}", degs[0]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn sbm_intra_vs_inter_density() {
+        let (g, blocks) = sbm(600, 3, 0.05, 0.005, 3);
+        g.validate().unwrap();
+        let mut intra = 0usize;
+        let mut inter = 0usize;
+        for u in 0..g.n {
+            for &v in g.neighbors(u) {
+                if u < v as usize {
+                    if blocks[u] == blocks[v as usize] {
+                        intra += 1;
+                    } else {
+                        inter += 1;
+                    }
+                }
+            }
+        }
+        // intra pairs ≈ 3 * C(200,2) * 0.05 ≈ 2985; inter ≈ 3*200*200*0.005 = 600
+        assert!(intra > 3 * inter, "intra={intra} inter={inter}");
+    }
+
+    #[test]
+    fn sbm_balanced_blocks() {
+        let (_, blocks) = sbm(100, 4, 0.1, 0.01, 5);
+        let mut counts = [0usize; 4];
+        for &b in &blocks {
+            counts[b as usize] += 1;
+        }
+        assert_eq!(counts, [25, 25, 25, 25]);
+    }
+
+    #[test]
+    fn rmat_is_skewed_and_valid() {
+        let g = rmat(9, 8, 11);
+        g.validate().unwrap();
+        let mut degs = g.degrees();
+        degs.sort_unstable_by(|a, b| b.cmp(a));
+        assert!((degs[0] as f64) > 4.0 * g.avg_degree());
+    }
+}

@@ -1,0 +1,167 @@
+//! Binary dataset/graph serialization (little-endian, versioned header).
+//!
+//! Lets expensive dataset builds be cached on disk and shared between the
+//! experiment harnesses (`varco dataset build` / `--cache`).
+
+use super::{Csr, Dataset, Split};
+use crate::tensor::Matrix;
+use crate::Result;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"VARCODS\x01";
+
+fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn write_u32s(w: &mut impl Write, xs: &[u32]) -> Result<()> {
+    write_u64(w, xs.len() as u64)?;
+    for &x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_u32s(r: &mut impl Read) -> Result<Vec<u32>> {
+    let n = read_u64(r)? as usize;
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    write_u64(w, xs.len() as u64)?;
+    for &x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
+    let n = read_u64(r)? as usize;
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+fn write_bools(w: &mut impl Write, xs: &[bool]) -> Result<()> {
+    write_u64(w, xs.len() as u64)?;
+    let bytes: Vec<u8> = xs.iter().map(|&b| b as u8).collect();
+    w.write_all(&bytes)?;
+    Ok(())
+}
+
+fn read_bools(r: &mut impl Read) -> Result<Vec<bool>> {
+    let n = read_u64(r)? as usize;
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(buf.into_iter().map(|b| b != 0).collect())
+}
+
+pub fn save_dataset(ds: &Dataset, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(MAGIC)?;
+    let name = ds.name.as_bytes();
+    write_u64(&mut w, name.len() as u64)?;
+    w.write_all(name)?;
+    write_u64(&mut w, ds.graph.n as u64)?;
+    write_u64(&mut w, ds.classes as u64)?;
+    // indptr as u64
+    write_u64(&mut w, ds.graph.indptr.len() as u64)?;
+    for &p in &ds.graph.indptr {
+        w.write_all(&p.to_le_bytes())?;
+    }
+    write_u32s(&mut w, &ds.graph.indices)?;
+    write_u64(&mut w, ds.features.rows as u64)?;
+    write_u64(&mut w, ds.features.cols as u64)?;
+    write_f32s(&mut w, &ds.features.data)?;
+    write_u32s(&mut w, &ds.labels)?;
+    write_bools(&mut w, &ds.split.train)?;
+    write_bools(&mut w, &ds.split.val)?;
+    write_bools(&mut w, &ds.split.test)?;
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load_dataset(path: &Path) -> Result<Dataset> {
+    let mut r = BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "bad magic in {path:?}: not a varco dataset");
+    let name_len = read_u64(&mut r)? as usize;
+    let mut name_buf = vec![0u8; name_len];
+    r.read_exact(&mut name_buf)?;
+    let n = read_u64(&mut r)? as usize;
+    let classes = read_u64(&mut r)? as usize;
+    let indptr_len = read_u64(&mut r)? as usize;
+    let mut indptr = Vec::with_capacity(indptr_len);
+    for _ in 0..indptr_len {
+        indptr.push(read_u64(&mut r)?);
+    }
+    let indices = read_u32s(&mut r)?;
+    let rows = read_u64(&mut r)? as usize;
+    let cols = read_u64(&mut r)? as usize;
+    let data = read_f32s(&mut r)?;
+    let labels = read_u32s(&mut r)?;
+    let train = read_bools(&mut r)?;
+    let val = read_bools(&mut r)?;
+    let test = read_bools(&mut r)?;
+    let ds = Dataset {
+        name: String::from_utf8(name_buf)?,
+        graph: Csr { n, indptr, indices },
+        features: Matrix::from_vec(rows, cols, data),
+        labels,
+        classes,
+        split: Split { train, val, test },
+    };
+    ds.validate()?;
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_preserves_everything() {
+        let ds = Dataset::load("karate-like", 0, 5).unwrap();
+        let dir = crate::util::testing::TempDir::new().unwrap();
+        let path = dir.path().join("ds.bin");
+        save_dataset(&ds, &path).unwrap();
+        let back = load_dataset(&path).unwrap();
+        assert_eq!(ds.name, back.name);
+        assert_eq!(ds.graph, back.graph);
+        assert_eq!(ds.features, back.features);
+        assert_eq!(ds.labels, back.labels);
+        assert_eq!(ds.split, back.split);
+        assert_eq!(ds.classes, back.classes);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = crate::util::testing::TempDir::new().unwrap();
+        let path = dir.path().join("junk.bin");
+        std::fs::write(&path, b"notadataset....").unwrap();
+        let err = load_dataset(&path).unwrap_err();
+        assert!(err.to_string().contains("bad magic"));
+    }
+
+    #[test]
+    fn truncated_file_errors_cleanly() {
+        let ds = Dataset::load("karate-like", 0, 5).unwrap();
+        let dir = crate::util::testing::TempDir::new().unwrap();
+        let path = dir.path().join("ds.bin");
+        save_dataset(&ds, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load_dataset(&path).is_err());
+    }
+}

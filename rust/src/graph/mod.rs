@@ -1,0 +1,17 @@
+//! Graph substrate: CSR storage, synthetic generators, datasets, IO.
+//!
+//! The paper trains on OGBN-Arxiv / OGBN-Products; those datasets are not
+//! available here, so `datasets` provides SBM-based synthetic equivalents
+//! (`synth-arxiv`, `synth-products`) that preserve what VARCO's claims
+//! depend on: community structure (partition cross-edge profiles, Table I)
+//! and feature–label correlation recoverable through aggregation
+//! (DESIGN.md §2).
+
+pub mod csr;
+pub mod datasets;
+pub mod features;
+pub mod generate;
+pub mod io;
+
+pub use csr::Csr;
+pub use datasets::{Dataset, Split};

@@ -1,0 +1,42 @@
+//! # VARCO — Distributed GNN Training with Variable Communication Rates
+//!
+//! Rust + JAX + Pallas reproduction of Cerviño et al., *"Distributed
+//! Training of Large Graph Neural Networks with Variable Communication
+//! Rates"* (cs.LG 2024).
+//!
+//! This crate is the L3 coordinator of the three-layer stack (see
+//! DESIGN.md): it owns the graph store, partitioner, compression channel
+//! and schedulers, the simulated multi-worker fabric with its byte
+//! ledger, the optimizer, and two interchangeable compute engines — a
+//! pure-rust CSR engine and a PJRT engine that executes the AOT-compiled
+//! JAX/Pallas artifacts (`artifacts/*.hlo.txt`).
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use varco::config::{build_trainer, TrainConfig};
+//!
+//! let cfg = TrainConfig::default_quickstart();
+//! let mut trainer = build_trainer(&cfg).unwrap();
+//! let report = trainer.run().unwrap();
+//! println!("test acc {:.3}", report.final_test_accuracy());
+//! ```
+
+pub mod comm;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod experiments;
+pub mod graph;
+pub mod metrics;
+pub mod optim;
+pub mod partition;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide error type.
+pub type Error = anyhow::Error;
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,278 @@
+//! `varco` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   varco train [--config file.cfg] [--key value ...]      run one training job
+//!   varco partition-stats --dataset D --partitioner P ...  Table-I style stats
+//!   varco inspect-artifacts [--artifacts-dir DIR]          list compiled configs
+//!   varco datasets                                         list registered datasets
+
+use std::path::Path;
+use varco::config::{build_trainer, TrainConfig};
+use varco::graph::Dataset;
+use varco::partition::PartitionStats;
+use varco::Result;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> Result<()> {
+    match args.first().map(String::as_str) {
+        Some("train") => cmd_train(&args[1..]),
+        Some("eval") => cmd_eval(&args[1..]),
+        Some("partition-stats") => cmd_partition_stats(&args[1..]),
+        Some("inspect-artifacts") => cmd_inspect_artifacts(&args[1..]),
+        Some("datasets") => cmd_datasets(),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => {
+            print_help();
+            anyhow::bail!("unknown subcommand {other:?}")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "varco — distributed GNN training with variable communication rates\n\
+         \n\
+         USAGE:\n\
+         \x20 varco train [--config FILE] [--key value ...] [--save-ckpt F]\n\
+         \x20 varco eval  --ckpt FILE --dataset D [--nodes N] [--seed S]\n\
+         \x20 varco partition-stats --dataset D [--q N] [--partitioner P] [--nodes N]\n\
+         \x20 varco inspect-artifacts [--artifacts_dir DIR]\n\
+         \x20 varco datasets\n\
+         \n\
+         TRAIN KEYS (file and CLI share names):\n\
+         \x20 dataset nodes q partitioner comm compressor engine artifact_tag\n\
+         \x20 artifacts_dir epochs hidden layers optimizer lr seed eval_every\n\
+         \x20 drop_prob stale_prob\n\
+         \n\
+         comm spec: full | none | fixed:R | linear:A | exp | step:E:F"
+    );
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let mut cfg = TrainConfig::default();
+    let mut rest: Vec<String> = Vec::new();
+    let mut out_json: Option<String> = None;
+    let mut out_csv: Option<String> = None;
+    let mut save_ckpt: Option<String> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--config" => {
+                i += 1;
+                cfg = TrainConfig::from_file(Path::new(&args[i]))?;
+            }
+            "--out-json" => {
+                i += 1;
+                out_json = Some(args[i].clone());
+            }
+            "--out-csv" => {
+                i += 1;
+                out_csv = Some(args[i].clone());
+            }
+            "--save-ckpt" => {
+                i += 1;
+                save_ckpt = Some(args[i].clone());
+            }
+            other => rest.push(other.to_string()),
+        }
+        i += 1;
+    }
+    cfg.apply_cli(&rest)?;
+    eprintln!("[varco] {}", cfg.describe());
+    let mut trainer = build_trainer(&cfg)?;
+    let t0 = std::time::Instant::now();
+    let report = trainer.run()?;
+    let total_s = t0.elapsed().as_secs_f64();
+    let last = report
+        .records
+        .last()
+        .ok_or_else(|| anyhow::anyhow!("no epochs were run"))?;
+    println!(
+        "algorithm={} final: loss={:.4} train={:.4} val={:.4} test={:.4} \
+         test@best-val={:.4} floats={} wall={:.1}s",
+        report.algorithm,
+        last.loss,
+        last.train_acc,
+        last.val_acc,
+        last.test_acc,
+        report.test_at_best_val(),
+        report.total_floats(),
+        total_s
+    );
+    if let Some(path) = out_json {
+        report.write_json(Path::new(&path))?;
+        eprintln!("[varco] wrote {path}");
+    }
+    if let Some(path) = out_csv {
+        report.write_csv(Path::new(&path))?;
+        eprintln!("[varco] wrote {path}");
+    }
+    if let Some(path) = save_ckpt {
+        let dims = varco::engine::ModelDims {
+            f_in: trainer.weights.layers[0].w_self.rows,
+            hidden: cfg.hidden,
+            classes: trainer.weights.layers.last().unwrap().bias.len(),
+            layers: cfg.layers,
+        };
+        varco::coordinator::Checkpoint::from_weights(&dims, &trainer.weights, cfg.epochs, cfg.seed)
+            .save(Path::new(&path))?;
+        eprintln!("[varco] wrote checkpoint {path}");
+    }
+    Ok(())
+}
+
+/// Evaluate a saved checkpoint on a dataset with exact centralized inference.
+fn cmd_eval(args: &[String]) -> Result<()> {
+    let mut ckpt_path = String::new();
+    let mut dataset = "synth-arxiv".to_string();
+    let mut nodes = 0usize;
+    let mut seed = 0u64;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--ckpt" => {
+                i += 1;
+                ckpt_path = args[i].clone();
+            }
+            "--dataset" => {
+                i += 1;
+                dataset = args[i].clone();
+            }
+            "--nodes" => {
+                i += 1;
+                nodes = args[i].parse()?;
+            }
+            "--seed" => {
+                i += 1;
+                seed = args[i].parse()?;
+            }
+            other => anyhow::bail!("unknown flag {other:?}"),
+        }
+        i += 1;
+    }
+    anyhow::ensure!(!ckpt_path.is_empty(), "--ckpt is required");
+    let ck = varco::coordinator::Checkpoint::load(Path::new(&ckpt_path))?;
+    let ds = Dataset::load(&dataset, nodes, seed)?;
+    anyhow::ensure!(
+        ds.f_in() == ck.dims.f_in && ds.classes == ck.dims.classes,
+        "checkpoint dims {:?} incompatible with dataset ({} features, {} classes)",
+        ck.dims,
+        ds.f_in(),
+        ds.classes
+    );
+    let weights = ck.to_weights()?;
+    let ev = varco::coordinator::FullGraphEval::new(&ds);
+    let r = ev.evaluate(&ck.dims, &weights)?;
+    println!(
+        "checkpoint {} (epoch {}): loss={:.4} train={:.4} val={:.4} test={:.4}",
+        ckpt_path, ck.epoch, r.loss, r.train_acc, r.val_acc, r.test_acc
+    );
+    Ok(())
+}
+
+fn cmd_partition_stats(args: &[String]) -> Result<()> {
+    let mut dataset = "synth-arxiv".to_string();
+    let mut nodes = 0usize;
+    let mut seed = 0u64;
+    let mut qs = vec![2usize, 4, 8, 16];
+    let mut partitioners = vec!["metis-like".to_string(), "random".to_string()];
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--dataset" => {
+                i += 1;
+                dataset = args[i].clone();
+            }
+            "--nodes" => {
+                i += 1;
+                nodes = args[i].parse()?;
+            }
+            "--seed" => {
+                i += 1;
+                seed = args[i].parse()?;
+            }
+            "--q" => {
+                i += 1;
+                qs = args[i].split(',').map(|s| s.parse()).collect::<std::result::Result<_, _>>()?;
+            }
+            "--partitioner" => {
+                i += 1;
+                partitioners = args[i].split(',').map(String::from).collect();
+            }
+            other => anyhow::bail!("unknown flag {other:?}"),
+        }
+        i += 1;
+    }
+    let ds = Dataset::load(&dataset, nodes, seed)?;
+    println!(
+        "# {} n={} m={} avg_deg={:.1}",
+        ds.name,
+        ds.n(),
+        ds.graph.num_edges(),
+        ds.graph.avg_degree()
+    );
+    println!("{:<12} {:<4} {:>45} {:>12}", "partitioner", "q", "self(%) / cross(%)", "max_boundary");
+    for pname in &partitioners {
+        for &q in &qs {
+            let p = varco::partition::by_name(pname, seed)?.partition(&ds.graph, q)?;
+            let stats = PartitionStats::compute(&ds.graph, &p);
+            println!("{:<12} {:<4} {:>45} {:>12}", pname, q, stats.table_row(), stats.max_boundary);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_inspect_artifacts(args: &[String]) -> Result<()> {
+    let mut dir = "artifacts".to_string();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--artifacts_dir" | "--artifacts-dir" => {
+                i += 1;
+                dir = args[i].clone();
+            }
+            other => anyhow::bail!("unknown flag {other:?}"),
+        }
+        i += 1;
+    }
+    let manifest = varco::runtime::Manifest::load(Path::new(&dir))?;
+    println!("{:<16} {:>7} {:>3} {:>8} {:>6} {:>7} {:>7} {:>9}", "tag", "n", "q", "n_local", "f_in", "hidden", "classes", "params");
+    for (tag, c) in &manifest.configs {
+        println!(
+            "{:<16} {:>7} {:>3} {:>8} {:>6} {:>7} {:>7} {:>9}",
+            tag, c.n_total, c.q, c.n_local, c.f_in, c.hidden, c.classes, c.param_count
+        );
+    }
+    Ok(())
+}
+
+fn cmd_datasets() -> Result<()> {
+    for name in ["synth-arxiv", "synth-products", "karate-like"] {
+        let ds = Dataset::load(name, if name == "karate-like" { 0 } else { 1024 }, 0)?;
+        println!(
+            "{:<16} default_n={:<6} f_in={:<4} classes={:<3} (sampled at n={}: m={}, avg_deg={:.1})",
+            name,
+            if name == "karate-like" { 64 } else if name == "synth-arxiv" { 8192 } else { 16384 },
+            ds.f_in(),
+            ds.classes,
+            ds.n(),
+            ds.graph.num_edges(),
+            ds.graph.avg_degree()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,212 @@
+//! Training metrics: per-epoch records, run reports, CSV/JSON export.
+
+use crate::util::Json;
+use std::io::Write;
+use std::path::Path;
+
+/// One epoch's measurements (one row of Figure 3 / Figure 5 series).
+#[derive(Clone, Debug, PartialEq)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub loss: f32,
+    pub train_acc: f32,
+    pub val_acc: f32,
+    pub test_acc: f32,
+    /// compression rate in effect (None = no communication)
+    pub rate: Option<f32>,
+    /// cumulative floats communicated after this epoch
+    pub floats_cum: usize,
+    pub wall_ms: f64,
+}
+
+/// A full training run's record.
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    pub algorithm: String,
+    pub dataset: String,
+    pub partitioner: String,
+    pub q: usize,
+    pub seed: u64,
+    pub engine: String,
+    pub records: Vec<EpochRecord>,
+}
+
+impl RunReport {
+    pub fn final_test_accuracy(&self) -> f32 {
+        self.records.last().map(|r| r.test_acc).unwrap_or(0.0)
+    }
+
+    /// Best test accuracy at the epoch with best validation accuracy
+    /// (standard OGB protocol).
+    pub fn test_at_best_val(&self) -> f32 {
+        self.records
+            .iter()
+            .max_by(|a, b| a.val_acc.partial_cmp(&b.val_acc).unwrap())
+            .map(|r| r.test_acc)
+            .unwrap_or(0.0)
+    }
+
+    pub fn total_floats(&self) -> usize {
+        self.records.last().map(|r| r.floats_cum).unwrap_or(0)
+    }
+
+    /// (cumulative floats, test acc) series — Figure 5.
+    pub fn efficiency_curve(&self) -> Vec<(usize, f32)> {
+        self.records.iter().map(|r| (r.floats_cum, r.test_acc)).collect()
+    }
+
+    pub fn write_csv(&self, path: &Path) -> crate::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "epoch,loss,train_acc,val_acc,test_acc,rate,floats_cum,wall_ms")?;
+        for r in &self.records {
+            writeln!(
+                f,
+                "{},{},{},{},{},{},{},{}",
+                r.epoch,
+                r.loss,
+                r.train_acc,
+                r.val_acc,
+                r.test_acc,
+                r.rate.map_or("inf".into(), |x| x.to_string()),
+                r.floats_cum,
+                r.wall_ms
+            )?;
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("algorithm", Json::str(self.algorithm.clone())),
+            ("dataset", Json::str(self.dataset.clone())),
+            ("partitioner", Json::str(self.partitioner.clone())),
+            ("q", Json::num(self.q as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("engine", Json::str(self.engine.clone())),
+            (
+                "records",
+                Json::Arr(
+                    self.records
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("epoch", Json::num(r.epoch as f64)),
+                                ("loss", Json::num(r.loss as f64)),
+                                ("train_acc", Json::num(r.train_acc as f64)),
+                                ("val_acc", Json::num(r.val_acc as f64)),
+                                ("test_acc", Json::num(r.test_acc as f64)),
+                                ("rate", r.rate.map_or(Json::Null, |x| Json::num(x as f64))),
+                                ("floats_cum", Json::num(r.floats_cum as f64)),
+                                ("wall_ms", Json::num(r.wall_ms)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<RunReport> {
+        let str_of = |k: &str| -> crate::Result<String> {
+            Ok(j.require(k)?.as_str().unwrap_or_default().to_string())
+        };
+        let mut report = RunReport {
+            algorithm: str_of("algorithm")?,
+            dataset: str_of("dataset")?,
+            partitioner: str_of("partitioner")?,
+            q: j.require("q")?.as_usize().unwrap_or(0),
+            seed: j.require("seed")?.as_f64().unwrap_or(0.0) as u64,
+            engine: str_of("engine")?,
+            records: Vec::new(),
+        };
+        for r in j.require("records")?.as_arr().unwrap_or(&[]) {
+            report.records.push(EpochRecord {
+                epoch: r.require("epoch")?.as_usize().unwrap_or(0),
+                loss: r.require("loss")?.as_f64().unwrap_or(0.0) as f32,
+                train_acc: r.require("train_acc")?.as_f64().unwrap_or(0.0) as f32,
+                val_acc: r.require("val_acc")?.as_f64().unwrap_or(0.0) as f32,
+                test_acc: r.require("test_acc")?.as_f64().unwrap_or(0.0) as f32,
+                rate: r.require("rate")?.as_f64().map(|x| x as f32),
+                floats_cum: r.require("floats_cum")?.as_usize().unwrap_or(0),
+                wall_ms: r.require("wall_ms")?.as_f64().unwrap_or(0.0),
+            });
+        }
+        Ok(report)
+    }
+
+    pub fn write_json(&self, path: &Path) -> crate::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn read_json(path: &Path) -> crate::Result<RunReport> {
+        Self::from_json(&Json::parse(&std::fs::read_to_string(path)?)?)
+    }
+}
+
+/// Accuracy from correct-count + denominators.
+pub fn accuracy(correct: f32, total: usize) -> f32 {
+    if total == 0 {
+        0.0
+    } else {
+        correct / total as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(epoch: usize, val: f32, test: f32, floats: usize) -> EpochRecord {
+        EpochRecord {
+            epoch,
+            loss: 1.0,
+            train_acc: 0.5,
+            val_acc: val,
+            test_acc: test,
+            rate: Some(2.0),
+            floats_cum: floats,
+            wall_ms: 1.0,
+        }
+    }
+
+    #[test]
+    fn report_accessors() {
+        let mut r = RunReport::default();
+        r.records = vec![rec(0, 0.6, 0.55, 100), rec(1, 0.8, 0.75, 200), rec(2, 0.7, 0.9, 300)];
+        assert_eq!(r.final_test_accuracy(), 0.9);
+        assert_eq!(r.test_at_best_val(), 0.75);
+        assert_eq!(r.total_floats(), 300);
+        assert_eq!(r.efficiency_curve()[1], (200, 0.75));
+    }
+
+    #[test]
+    fn csv_and_json_roundtrip() {
+        let mut r = RunReport { algorithm: "varco".into(), q: 4, ..Default::default() };
+        r.records = vec![rec(0, 0.1, 0.2, 10)];
+        let dir = crate::util::testing::TempDir::new().unwrap();
+        let csv = dir.path().join("run.csv");
+        let json = dir.path().join("run.json");
+        r.write_csv(&csv).unwrap();
+        r.write_json(&json).unwrap();
+        let text = std::fs::read_to_string(&csv).unwrap();
+        assert!(text.starts_with("epoch,loss"));
+        assert_eq!(text.lines().count(), 2);
+        let back = RunReport::read_json(&json).unwrap();
+        assert_eq!(back.q, 4);
+        assert_eq!(back.records, r.records);
+    }
+
+    #[test]
+    fn accuracy_handles_zero_total() {
+        assert_eq!(accuracy(5.0, 0), 0.0);
+        assert_eq!(accuracy(5.0, 10), 0.5);
+    }
+
+    #[test]
+    fn empty_report_defaults() {
+        let r = RunReport::default();
+        assert_eq!(r.final_test_accuracy(), 0.0);
+        assert_eq!(r.test_at_best_val(), 0.0);
+    }
+}

@@ -1,0 +1,199 @@
+//! Optimizers over flat f32 parameter vectors (SGD, momentum, Adam).
+//!
+//! The coordinator averages per-worker gradients (FedAverage-style weight
+//! sync in the paper reduces to gradient averaging for equal-size parts
+//! with one local step per round — see coordinator::trainer), then applies
+//! one of these updates identically on every worker.
+
+use crate::Result;
+
+/// Optimizer state + update rule over a flat parameter vector.
+pub trait Optimizer: Send {
+    fn name(&self) -> &'static str;
+    /// In-place update: w <- w - step(g).
+    fn step(&mut self, w: &mut [f32], g: &[f32]);
+    fn lr(&self) -> f32;
+    fn set_lr(&mut self, lr: f32);
+}
+
+/// Plain SGD with optional momentum and weight decay.
+pub struct Sgd {
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    velocity: Vec<f32>,
+}
+
+impl Sgd {
+    pub fn new(lr: f32, momentum: f32, weight_decay: f32) -> Sgd {
+        Sgd { lr, momentum, weight_decay, velocity: Vec::new() }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn step(&mut self, w: &mut [f32], g: &[f32]) {
+        assert_eq!(w.len(), g.len());
+        if self.momentum != 0.0 && self.velocity.len() != w.len() {
+            self.velocity = vec![0.0; w.len()];
+        }
+        for i in 0..w.len() {
+            let grad = g[i] + self.weight_decay * w[i];
+            let update = if self.momentum != 0.0 {
+                let v = self.momentum * self.velocity[i] + grad;
+                self.velocity[i] = v;
+                v
+            } else {
+                grad
+            };
+            w[i] -= self.lr * update;
+        }
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+}
+
+/// Adam (Kingma & Ba) with bias correction.
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u32,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Adam {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.0, m: vec![], v: vec![], t: 0 }
+    }
+}
+
+impl Optimizer for Adam {
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+
+    fn step(&mut self, w: &mut [f32], g: &[f32]) {
+        assert_eq!(w.len(), g.len());
+        if self.m.len() != w.len() {
+            self.m = vec![0.0; w.len()];
+            self.v = vec![0.0; w.len()];
+            self.t = 0;
+        }
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..w.len() {
+            let grad = g[i] + self.weight_decay * w[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grad;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * grad * grad;
+            let mhat = self.m[i] / b1t;
+            let vhat = self.v[i] / b2t;
+            w[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+}
+
+/// Build an optimizer from a config name with weight decay.
+pub fn by_name(name: &str, lr: f32, weight_decay: f32) -> Result<Box<dyn Optimizer>> {
+    match name {
+        "sgd" => Ok(Box::new(Sgd::new(lr, 0.0, weight_decay))),
+        "momentum" => Ok(Box::new(Sgd::new(lr, 0.9, weight_decay))),
+        "adam" => {
+            let mut a = Adam::new(lr);
+            a.weight_decay = weight_decay;
+            Ok(Box::new(a))
+        }
+        _ => anyhow::bail!("unknown optimizer {name}; known: sgd, momentum, adam"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quadratic_grad(w: &[f32]) -> Vec<f32> {
+        // f(w) = 0.5 ||w - 3||², grad = w - 3
+        w.iter().map(|&x| x - 3.0).collect()
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        let mut w = vec![0.0; 4];
+        let mut opt = Sgd::new(0.2, 0.0, 0.0);
+        for _ in 0..100 {
+            let g = quadratic_grad(&w);
+            opt.step(&mut w, &g);
+        }
+        assert!(w.iter().all(|&x| (x - 3.0).abs() < 1e-3), "{w:?}");
+    }
+
+    #[test]
+    fn momentum_faster_than_plain_on_illconditioned() {
+        // f = 0.5(w0² + 100 w1²); compare loss after fixed steps
+        let grad = |w: &[f32]| vec![w[0], 100.0 * w[1]];
+        let run = |mut opt: Box<dyn Optimizer>| {
+            let mut w = vec![10.0, 1.0];
+            for _ in 0..60 {
+                let g = grad(&w);
+                opt.step(&mut w, &g);
+            }
+            0.5 * (w[0] * w[0] + 100.0 * w[1] * w[1])
+        };
+        let plain = run(Box::new(Sgd::new(0.008, 0.0, 0.0)));
+        let mom = run(Box::new(Sgd::new(0.008, 0.9, 0.0)));
+        assert!(mom < plain, "momentum {mom} !< plain {plain}");
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        let mut w = vec![-5.0; 3];
+        let mut opt = Adam::new(0.3);
+        for _ in 0..300 {
+            let g = quadratic_grad(&w);
+            opt.step(&mut w, &g);
+        }
+        assert!(w.iter().all(|&x| (x - 3.0).abs() < 1e-2), "{w:?}");
+    }
+
+    #[test]
+    fn weight_decay_shrinks_solution() {
+        let mut w = vec![0.0f32];
+        let mut opt = Sgd::new(0.1, 0.0, 1.0);
+        for _ in 0..500 {
+            let g = quadratic_grad(&w);
+            opt.step(&mut w, &g);
+        }
+        // minimizer of 0.5(w-3)² + 0.5 w² is 1.5
+        assert!((w[0] - 1.5).abs() < 1e-2, "{w:?}");
+    }
+
+    #[test]
+    fn by_name_and_lr_accessors() {
+        let mut o = by_name("adam", 0.01, 0.0).unwrap();
+        assert_eq!(o.lr(), 0.01);
+        o.set_lr(0.02);
+        assert_eq!(o.lr(), 0.02);
+        assert!(by_name("lbfgs", 0.1, 0.0).is_err());
+    }
+}

@@ -1,0 +1,407 @@
+//! From-scratch multilevel edge-cut partitioner (METIS-style).
+//!
+//! Three phases, as in Karypis & Kumar (1998):
+//!   1. **Coarsening** — heavy-edge matching merges matched endpoints until
+//!      the graph is small (≤ max(COARSE_TARGET, 8q) nodes), tracking node
+//!      weights and parallel-edge weights.
+//!   2. **Initial partitioning** — greedy weighted region growing on the
+//!      coarsest graph under a capacity constraint.
+//!   3. **Uncoarsening + refinement** — project the assignment back level
+//!      by level; at each level run bounded Kernighan–Lin-style passes of
+//!      gain-ordered *balance-preserving swaps*, then a final exact
+//!      rebalance so every part has exactly n/q nodes.
+
+use super::{Partition, Partitioner};
+use crate::graph::Csr;
+use crate::util::Rng;
+use crate::Result;
+
+const COARSE_TARGET: usize = 256;
+const KL_PASSES: usize = 4;
+
+pub struct MetisLike {
+    pub seed: u64,
+    /// KL refinement passes per level (exposed for ablation benches).
+    pub passes: usize,
+}
+
+impl MetisLike {
+    pub fn new(seed: u64) -> Self {
+        MetisLike { seed, passes: KL_PASSES }
+    }
+}
+
+/// Weighted graph used through the multilevel hierarchy.
+#[derive(Clone, Debug)]
+struct WGraph {
+    n: usize,
+    indptr: Vec<u64>,
+    indices: Vec<u32>,
+    eweights: Vec<u32>,
+    nweights: Vec<u32>,
+}
+
+impl WGraph {
+    fn from_csr(g: &Csr) -> WGraph {
+        WGraph {
+            n: g.n,
+            indptr: g.indptr.clone(),
+            indices: g.indices.clone(),
+            eweights: vec![1; g.indices.len()],
+            nweights: vec![1; g.n],
+        }
+    }
+
+    fn neighbors(&self, u: usize) -> (&[u32], &[u32]) {
+        let lo = self.indptr[u] as usize;
+        let hi = self.indptr[u + 1] as usize;
+        (&self.indices[lo..hi], &self.eweights[lo..hi])
+    }
+}
+
+/// Heavy-edge matching: returns (coarse graph, fine->coarse map).
+fn coarsen(g: &WGraph, rng: &mut Rng) -> (WGraph, Vec<u32>) {
+    let mut order: Vec<u32> = (0..g.n as u32).collect();
+    rng.shuffle(&mut order);
+    let mut matched = vec![u32::MAX; g.n];
+    let mut coarse_of = vec![u32::MAX; g.n];
+    let mut next = 0u32;
+    for &u in &order {
+        let u = u as usize;
+        if matched[u] != u32::MAX {
+            continue;
+        }
+        // heaviest unmatched neighbor
+        let (nbrs, ws) = g.neighbors(u);
+        let mut best: Option<(u32, u32)> = None;
+        for (&v, &w) in nbrs.iter().zip(ws) {
+            if matched[v as usize] == u32::MAX && v as usize != u {
+                if best.map_or(true, |(_, bw)| w > bw) {
+                    best = Some((v, w));
+                }
+            }
+        }
+        match best {
+            Some((v, _)) => {
+                matched[u] = v;
+                matched[v as usize] = u as u32;
+                coarse_of[u] = next;
+                coarse_of[v as usize] = next;
+            }
+            None => {
+                matched[u] = u as u32;
+                coarse_of[u] = next;
+            }
+        }
+        next += 1;
+    }
+    // Build coarse adjacency with summed weights.
+    let cn = next as usize;
+    let mut agg: Vec<std::collections::HashMap<u32, u32>> =
+        vec![std::collections::HashMap::new(); cn];
+    let mut nweights = vec![0u32; cn];
+    for u in 0..g.n {
+        nweights[coarse_of[u] as usize] += g.nweights[u];
+        let cu = coarse_of[u];
+        let (nbrs, ws) = g.neighbors(u);
+        for (&v, &w) in nbrs.iter().zip(ws) {
+            let cv = coarse_of[v as usize];
+            if cu != cv {
+                *agg[cu as usize].entry(cv).or_insert(0) += w;
+            }
+        }
+    }
+    let mut indptr = Vec::with_capacity(cn + 1);
+    let mut indices = Vec::new();
+    let mut eweights = Vec::new();
+    indptr.push(0u64);
+    for map in &agg {
+        let mut entries: Vec<(u32, u32)> = map.iter().map(|(&v, &w)| (v, w)).collect();
+        entries.sort_unstable();
+        for (v, w) in entries {
+            indices.push(v);
+            eweights.push(w);
+        }
+        indptr.push(indices.len() as u64);
+    }
+    (WGraph { n: cn, indptr, indices, eweights, nweights }, coarse_of)
+}
+
+/// Greedy weighted region growing on the coarsest graph.
+fn initial_partition(g: &WGraph, q: usize, rng: &mut Rng) -> Vec<u32> {
+    let total_w: u64 = g.nweights.iter().map(|&w| w as u64).sum();
+    let cap = (total_w as f64 / q as f64).ceil() as u64;
+    let mut assignment = vec![u32::MAX; g.n];
+    let mut load = vec![0u64; q];
+    let mut order: Vec<u32> = (0..g.n as u32).collect();
+    order.sort_by_key(|&u| std::cmp::Reverse(g.nweights[u as usize]));
+    let _ = rng;
+    for part in 0..q {
+        // seed: heaviest unassigned node
+        let seed = match order.iter().find(|&&u| assignment[u as usize] == u32::MAX) {
+            Some(&u) => u as usize,
+            None => break,
+        };
+        let mut frontier = std::collections::BinaryHeap::new();
+        assignment[seed] = part as u32;
+        load[part] += g.nweights[seed] as u64;
+        let (nbrs, ws) = g.neighbors(seed);
+        for (&v, &w) in nbrs.iter().zip(ws) {
+            frontier.push((w, v));
+        }
+        while load[part] < cap {
+            let Some((_, v)) = frontier.pop() else { break };
+            let v = v as usize;
+            if assignment[v] != u32::MAX {
+                continue;
+            }
+            if load[part] + g.nweights[v] as u64 > cap + cap / 8 {
+                continue;
+            }
+            assignment[v] = part as u32;
+            load[part] += g.nweights[v] as u64;
+            let (nbrs, ws) = g.neighbors(v);
+            for (&x, &w) in nbrs.iter().zip(ws) {
+                if assignment[x as usize] == u32::MAX {
+                    frontier.push((w, x));
+                }
+            }
+        }
+    }
+    // leftover nodes -> least-loaded part
+    for u in 0..g.n {
+        if assignment[u] == u32::MAX {
+            let part = (0..q).min_by_key(|&p| load[p]).unwrap();
+            assignment[u] = part as u32;
+            load[part] += g.nweights[u] as u64;
+        }
+    }
+    assignment
+}
+
+/// Gain of moving u to `to`: (cut weight to `to`) - (cut weight within own).
+fn move_gain(g: &WGraph, assignment: &[u32], u: usize, to: u32) -> i64 {
+    let own = assignment[u];
+    let (nbrs, ws) = g.neighbors(u);
+    let mut internal = 0i64;
+    let mut external = 0i64;
+    for (&v, &w) in nbrs.iter().zip(ws) {
+        let a = assignment[v as usize];
+        if a == own {
+            internal += w as i64;
+        } else if a == to {
+            external += w as i64;
+        }
+    }
+    external - internal
+}
+
+/// One KL pass of gain-ordered swap refinement (balance-preserving:
+/// only swaps of equal node weight across a part pair are applied).
+fn kl_swap_pass(g: &WGraph, assignment: &mut [u32], q: usize) -> i64 {
+    // Boundary nodes grouped by part (swap partners are searched here).
+    let mut boundary: Vec<u32> = (0..g.n as u32)
+        .filter(|&u| {
+            let (nbrs, _) = g.neighbors(u as usize);
+            nbrs.iter().any(|&v| assignment[v as usize] != assignment[u as usize])
+        })
+        .collect();
+    let mut by_part: Vec<Vec<u32>> = vec![Vec::new(); q];
+    for &u in &boundary {
+        by_part[assignment[u as usize] as usize].push(u);
+    }
+    const PARTNER_SCAN: usize = 128;
+
+    let mut total_gain = 0i64;
+    boundary.sort_by_key(|&u| std::cmp::Reverse(g.nweights[u as usize]));
+    for &u in &boundary {
+        let u = u as usize;
+        let own = assignment[u];
+        // best move target among neighboring parts
+        let mut best: Option<(i64, u32)> = None;
+        let (nbrs, _) = g.neighbors(u);
+        let mut cands: Vec<u32> = nbrs.iter().map(|&v| assignment[v as usize]).collect();
+        cands.sort_unstable();
+        cands.dedup();
+        for &t in cands.iter().filter(|&&t| t != own) {
+            let gain = move_gain(g, assignment, u, t);
+            if best.map_or(true, |(bg, _)| gain > bg) {
+                best = Some((gain, t));
+            }
+        }
+        let Some((gain_u, target)) = best else { continue };
+        if gain_u <= 0 {
+            continue;
+        }
+        // equal-weight swap partner in `target` (bounded scan keeps the
+        // pass O(boundary * PARTNER_SCAN))
+        let mut partner: Option<(i64, usize)> = None;
+        for &v in by_part[target as usize].iter().take(PARTNER_SCAN) {
+            let v = v as usize;
+            if assignment[v] != target || g.nweights[v] != g.nweights[u] || v == u {
+                continue;
+            }
+            let gain_v = move_gain(g, assignment, v, own);
+            // joint gain correcting for a shared u-v edge counted twice
+            let uv_w = {
+                let (nbrs, ws) = g.neighbors(u);
+                nbrs.iter()
+                    .zip(ws)
+                    .find(|(&x, _)| x as usize == v)
+                    .map(|(_, &w)| w as i64)
+                    .unwrap_or(0)
+            };
+            let joint = gain_u + gain_v - 2 * uv_w;
+            if joint > 0 && partner.map_or(true, |(bg, _)| joint > bg) {
+                partner = Some((joint, v));
+            }
+        }
+        if let Some((joint, v)) = partner {
+            assignment[u] = target;
+            assignment[v] = own;
+            total_gain += joint;
+        }
+    }
+    total_gain
+}
+
+/// Force exactly n/q nodes per part by moving lowest-damage boundary nodes
+/// from overfull to underfull parts (only used at the finest level, where
+/// all node weights are 1).
+fn exact_rebalance(g: &WGraph, assignment: &mut [u32], q: usize) {
+    let n = g.n;
+    let want = n / q;
+    loop {
+        let mut counts = vec![0usize; q];
+        for &a in assignment.iter() {
+            counts[a as usize] += 1;
+        }
+        let Some(over) = (0..q).find(|&p| counts[p] > want) else { break };
+        let under = (0..q).find(|&p| counts[p] < want).expect("some part underfull");
+        // pick the node in `over` with max gain (least damage) toward `under`
+        let mut best: Option<(i64, usize)> = None;
+        for u in 0..n {
+            if assignment[u] as usize != over {
+                continue;
+            }
+            let gain = move_gain(g, assignment, u, under as u32);
+            if best.map_or(true, |(bg, _)| gain > bg) {
+                best = Some((gain, u));
+            }
+        }
+        assignment[best.expect("overfull part nonempty").1] = under as u32;
+    }
+}
+
+impl Partitioner for MetisLike {
+    fn name(&self) -> &'static str {
+        "metis-like"
+    }
+
+    fn partition(&self, g: &Csr, q: usize) -> Result<Partition> {
+        anyhow::ensure!(g.n % q == 0, "n={} not divisible by q={q}", g.n);
+        anyhow::ensure!(g.n >= q, "fewer nodes than parts");
+        let mut rng = Rng::new(self.seed);
+        // Phase 1: coarsen
+        let mut levels: Vec<WGraph> = vec![WGraph::from_csr(g)];
+        let mut maps: Vec<Vec<u32>> = Vec::new();
+        let target = COARSE_TARGET.max(8 * q);
+        while levels.last().unwrap().n > target {
+            let (coarse, map) = coarsen(levels.last().unwrap(), &mut rng);
+            // matching can stall on star graphs; stop if shrink < 10%
+            if coarse.n as f64 > 0.9 * levels.last().unwrap().n as f64 {
+                break;
+            }
+            levels.push(coarse);
+            maps.push(map);
+        }
+        // Phase 2: initial partition at the coarsest level
+        let mut assignment = initial_partition(levels.last().unwrap(), q, &mut rng);
+        // Phase 3: refine + project back
+        for lvl in (0..levels.len()).rev() {
+            for _ in 0..self.passes {
+                if kl_swap_pass(&levels[lvl], &mut assignment, q) == 0 {
+                    break;
+                }
+            }
+            if lvl > 0 {
+                let map = &maps[lvl - 1];
+                let mut fine = vec![0u32; levels[lvl - 1].n];
+                for (u, &cu) in map.iter().enumerate() {
+                    fine[u] = assignment[cu as usize];
+                }
+                assignment = fine;
+            }
+        }
+        exact_rebalance(&levels[0], &mut assignment, q);
+        for _ in 0..self.passes {
+            if kl_swap_pass(&levels[0], &mut assignment, q) == 0 {
+                break;
+            }
+        }
+        Partition::new(q, assignment)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::{erdos_renyi, sbm};
+    use crate::partition::random::RandomPartitioner;
+
+    #[test]
+    fn balanced_exactly() {
+        let (g, _) = sbm(256, 4, 0.2, 0.01, 1);
+        let p = MetisLike::new(7).partition(&g, 4).unwrap();
+        assert_eq!(p.part_size(), 64);
+    }
+
+    #[test]
+    fn beats_random_on_community_graphs() {
+        let (g, _) = sbm(512, 8, 0.15, 0.01, 2);
+        let metis = MetisLike::new(3).partition(&g, 8).unwrap();
+        let rand = RandomPartitioner { seed: 3 }.partition(&g, 8).unwrap();
+        let (cm, cr) = (metis.edge_cut(&g), rand.edge_cut(&g));
+        assert!(
+            (cm as f64) < 0.6 * cr as f64,
+            "metis-like cut {cm} not clearly better than random {cr}"
+        );
+    }
+
+    #[test]
+    fn recovers_obvious_two_blocks() {
+        let (g, blocks) = sbm(128, 2, 0.4, 0.005, 5);
+        let p = MetisLike::new(1).partition(&g, 2).unwrap();
+        // partition should align with blocks up to relabeling
+        let mut agree = 0;
+        for i in 0..128 {
+            if (p.assignment[i] == 0) == (blocks[i] == 0) {
+                agree += 1;
+            }
+        }
+        let agree = agree.max(128 - agree);
+        assert!(agree > 115, "agreement {agree}/128");
+    }
+
+    #[test]
+    fn works_on_er_graphs_and_deterministic() {
+        let g = erdos_renyi(300, 0.04, 4);
+        let p1 = MetisLike::new(9).partition(&g, 4).unwrap();
+        let p2 = MetisLike::new(9).partition(&g, 4).unwrap();
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn handles_disconnected_graph() {
+        let g = Csr::from_edges(8, &[(0, 1), (2, 3), (4, 5), (6, 7)]);
+        let p = MetisLike::new(0).partition(&g, 2).unwrap();
+        assert_eq!(p.part_size(), 4);
+    }
+
+    #[test]
+    fn q_equals_one_trivial() {
+        let g = erdos_renyi(32, 0.2, 0);
+        let p = MetisLike::new(0).partition(&g, 1).unwrap();
+        assert_eq!(p.edge_cut(&g), 0);
+    }
+}

@@ -1,0 +1,67 @@
+//! Random equal-size partitioning (the paper's hardest setting).
+
+use super::{Partition, Partitioner};
+use crate::graph::Csr;
+use crate::util::Rng;
+use crate::Result;
+
+/// Shuffle node ids, deal them round-robin-free into equal chunks.
+pub struct RandomPartitioner {
+    pub seed: u64,
+}
+
+impl Partitioner for RandomPartitioner {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn partition(&self, g: &Csr, q: usize) -> Result<Partition> {
+        anyhow::ensure!(g.n % q == 0, "n={} not divisible by q={q}", g.n);
+        let mut order: Vec<u32> = (0..g.n as u32).collect();
+        Rng::new(self.seed).shuffle(&mut order);
+        let size = g.n / q;
+        let mut assignment = vec![0u32; g.n];
+        for (rank, &node) in order.iter().enumerate() {
+            assignment[node as usize] = (rank / size) as u32;
+        }
+        Partition::new(q, assignment)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::erdos_renyi;
+
+    #[test]
+    fn balanced_and_deterministic() {
+        let g = erdos_renyi(120, 0.05, 1);
+        let p1 = RandomPartitioner { seed: 9 }.partition(&g, 4).unwrap();
+        let p2 = RandomPartitioner { seed: 9 }.partition(&g, 4).unwrap();
+        assert_eq!(p1, p2);
+        assert_eq!(p1.part_size(), 30);
+    }
+
+    #[test]
+    fn different_seed_differs() {
+        let g = erdos_renyi(120, 0.05, 1);
+        let p1 = RandomPartitioner { seed: 1 }.partition(&g, 4).unwrap();
+        let p2 = RandomPartitioner { seed: 2 }.partition(&g, 4).unwrap();
+        assert_ne!(p1, p2);
+    }
+
+    #[test]
+    fn indivisible_n_rejected() {
+        let g = erdos_renyi(10, 0.3, 1);
+        assert!(RandomPartitioner { seed: 0 }.partition(&g, 3).is_err());
+    }
+
+    #[test]
+    fn random_cut_near_expectation() {
+        // random q-way cut crosses ~ (1 - 1/q) of edges
+        let g = erdos_renyi(400, 0.05, 3);
+        let p = RandomPartitioner { seed: 5 }.partition(&g, 4).unwrap();
+        let frac = p.edge_cut(&g) as f64 / g.num_edges() as f64;
+        assert!((frac - 0.75).abs() < 0.05, "cut fraction {frac}");
+    }
+}

@@ -1,0 +1,108 @@
+//! Partition quality statistics — regenerates the paper's Table I
+//! (self-edges vs cross-edges per partitioner and server count).
+
+use super::Partition;
+use crate::graph::Csr;
+
+/// Self/cross edge profile of one partitioning.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PartitionStats {
+    pub q: usize,
+    pub self_edges: usize,
+    pub cross_edges: usize,
+    /// max boundary size across parts (drives AOT padding waste)
+    pub max_boundary: usize,
+    /// per-part local edge counts (balance diagnostics)
+    pub edges_per_part: Vec<usize>,
+}
+
+impl PartitionStats {
+    pub fn compute(g: &Csr, p: &Partition) -> PartitionStats {
+        let mut self_edges = 0usize;
+        let mut cross = 0usize;
+        let mut per_part = vec![0usize; p.q];
+        for u in 0..g.n {
+            for &v in g.neighbors(u) {
+                if u < v as usize {
+                    if p.assignment[u] == p.assignment[v as usize] {
+                        self_edges += 1;
+                        per_part[p.assignment[u] as usize] += 1;
+                    } else {
+                        cross += 1;
+                    }
+                }
+            }
+        }
+        let workers = super::WorkerGraph::build_all(g, p).expect("valid partition");
+        let max_boundary = workers.iter().map(|w| w.n_boundary()).max().unwrap_or(0);
+        PartitionStats {
+            q: p.q,
+            self_edges,
+            cross_edges: cross,
+            max_boundary,
+            edges_per_part: per_part,
+        }
+    }
+
+    pub fn total_edges(&self) -> usize {
+        self.self_edges + self.cross_edges
+    }
+
+    pub fn self_pct(&self) -> f64 {
+        100.0 * self.self_edges as f64 / self.total_edges().max(1) as f64
+    }
+
+    pub fn cross_pct(&self) -> f64 {
+        100.0 * self.cross_edges as f64 / self.total_edges().max(1) as f64
+    }
+
+    /// One Table-I-style row: "self 12345 (96.7%)  cross 678 (3.3%)".
+    pub fn table_row(&self) -> String {
+        format!(
+            "{:>10}({:5.2}%) {:>10}({:5.2}%)",
+            self.self_edges,
+            self.self_pct(),
+            self.cross_edges,
+            self.cross_pct()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::sbm;
+    use crate::partition::{metis_like::MetisLike, random::RandomPartitioner, Partitioner};
+
+    #[test]
+    fn totals_conserved() {
+        let (g, _) = sbm(128, 4, 0.2, 0.02, 0);
+        let p = RandomPartitioner { seed: 1 }.partition(&g, 4).unwrap();
+        let s = PartitionStats::compute(&g, &p);
+        assert_eq!(s.total_edges(), g.num_edges());
+        assert!((s.self_pct() + s.cross_pct() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn metis_like_has_more_self_edges_than_random() {
+        // the Table I qualitative shape
+        let (g, _) = sbm(512, 8, 0.15, 0.01, 2);
+        let pr = RandomPartitioner { seed: 3 }.partition(&g, 8).unwrap();
+        let pm = MetisLike::new(3).partition(&g, 8).unwrap();
+        let sr = PartitionStats::compute(&g, &pr);
+        let sm = PartitionStats::compute(&g, &pm);
+        assert!(sm.self_pct() > sr.self_pct() + 20.0, "{} vs {}", sm.self_pct(), sr.self_pct());
+    }
+
+    #[test]
+    fn cross_fraction_grows_with_q() {
+        let (g, _) = sbm(256, 4, 0.2, 0.03, 1);
+        let mut prev = -1.0;
+        for q in [2usize, 4, 8] {
+            let p = RandomPartitioner { seed: 7 }.partition(&g, q).unwrap();
+            let s = PartitionStats::compute(&g, &p);
+            assert!(s.cross_pct() > prev, "q={q}: {} <= {prev}", s.cross_pct());
+            prev = s.cross_pct();
+        }
+    }
+}

@@ -1,0 +1,353 @@
+//! Per-worker view of a partitioned graph: local subgraph, boundary set,
+//! normalized aggregation blocks, and send plans for halo exchange.
+
+use super::Partition;
+use crate::graph::Csr;
+use crate::tensor::Matrix;
+use crate::Result;
+
+/// What worker `q` sends to worker `p` each exchange: rows of q's local
+/// activation matrix, and the slots in p's boundary buffer they land in.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SendPlan {
+    pub to: usize,
+    /// local row indices (into this worker's activation matrix)
+    pub local_rows: Vec<u32>,
+    /// destination rows in the receiver's boundary buffer
+    pub dst_slots: Vec<u32>,
+}
+
+/// Sparse local->X aggregation operator in CSR form with f32 weights.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseBlock {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<u64>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl SparseBlock {
+    /// Dense materialization (for the PJRT path and tests).
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let lo = self.indptr[r] as usize;
+            let hi = self.indptr[r + 1] as usize;
+            for (idx, &c) in self.indices[lo..hi].iter().enumerate() {
+                m.set(r, c as usize, self.values[lo + idx]);
+            }
+        }
+        m
+    }
+
+    /// Dense padded to `cols_padded` columns (static AOT boundary shape).
+    pub fn to_dense_padded(&self, cols_padded: usize) -> Matrix {
+        assert!(cols_padded >= self.cols);
+        let mut m = Matrix::zeros(self.rows, cols_padded);
+        for r in 0..self.rows {
+            let lo = self.indptr[r] as usize;
+            let hi = self.indptr[r + 1] as usize;
+            for (idx, &c) in self.indices[lo..hi].iter().enumerate() {
+                m.set(r, c as usize, self.values[lo + idx]);
+            }
+        }
+        m
+    }
+
+    /// y += alpha * (self @ x), the native engine's aggregation primitive.
+    pub fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
+        assert_eq!(self.cols, x.rows, "spmm {}x{} @ {}x{}", self.rows, self.cols, x.rows, x.cols);
+        assert_eq!(out.shape(), (self.rows, x.cols));
+        let f = x.cols;
+        crate::util::parallel::par_chunks_mut(&mut out.data, f, |r, out_row| {
+            let lo = self.indptr[r] as usize;
+            let hi = self.indptr[r + 1] as usize;
+            for (k, &c) in self.indices[lo..hi].iter().enumerate() {
+                let w = self.values[lo + k];
+                let x_row = x.row(c as usize);
+                for (o, &xv) in out_row.iter_mut().zip(x_row) {
+                    *o += w * xv;
+                }
+            }
+        });
+    }
+
+    /// out += selfᵀ @ x (gradient flow back through aggregation).
+    pub fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
+        assert_eq!(self.rows, x.rows);
+        assert_eq!(out.shape(), (self.cols, x.cols));
+        for r in 0..self.rows {
+            let lo = self.indptr[r] as usize;
+            let hi = self.indptr[r + 1] as usize;
+            let x_row = x.row(r);
+            for (k, &c) in self.indices[lo..hi].iter().enumerate() {
+                let w = self.values[lo + k];
+                let out_row = out.row_mut(c as usize);
+                for (o, &xv) in out_row.iter_mut().zip(x_row) {
+                    *o += w * xv;
+                }
+            }
+        }
+    }
+}
+
+/// Everything a worker needs about its shard.
+#[derive(Clone, Debug)]
+pub struct WorkerGraph {
+    pub part: usize,
+    /// global ids of local nodes, sorted ascending; local index = position
+    pub nodes: Vec<u32>,
+    /// global ids of remote neighbors, sorted ascending; boundary slot = position
+    pub boundary: Vec<u32>,
+    /// which part owns each boundary node
+    pub boundary_owner: Vec<u32>,
+    /// local->local aggregation, normalized by TOTAL degree (mean agg)
+    pub s_ll: SparseBlock,
+    /// local->boundary aggregation, normalized by TOTAL degree
+    pub s_lb: SparseBlock,
+    /// local->local aggregation normalized by LOCAL degree (NoComm mode)
+    pub s_ll_localnorm: SparseBlock,
+    /// what to send to every other worker (index = receiving part id)
+    pub send_plans: Vec<SendPlan>,
+}
+
+impl WorkerGraph {
+    pub fn n_local(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn n_boundary(&self) -> usize {
+        self.boundary.len()
+    }
+
+    /// Build per-worker views for all parts.
+    pub fn build_all(g: &Csr, partition: &Partition) -> Result<Vec<WorkerGraph>> {
+        anyhow::ensure!(partition.n() == g.n, "partition size mismatch");
+        let q = partition.q;
+        let parts = partition.parts();
+        // global -> (part, local index)
+        let mut local_of = vec![0u32; g.n];
+        for nodes in &parts {
+            for (li, &node) in nodes.iter().enumerate() {
+                local_of[node as usize] = li as u32;
+            }
+        }
+        let assignment = &partition.assignment;
+
+        let mut workers = Vec::with_capacity(q);
+        for (part, nodes) in parts.iter().enumerate() {
+            // boundary = sorted unique remote neighbors
+            let mut boundary: Vec<u32> = nodes
+                .iter()
+                .flat_map(|&u| g.neighbors(u as usize).iter().copied())
+                .filter(|&v| assignment[v as usize] as usize != part)
+                .collect();
+            boundary.sort_unstable();
+            boundary.dedup();
+            let slot_of: std::collections::HashMap<u32, u32> = boundary
+                .iter()
+                .enumerate()
+                .map(|(s, &v)| (v, s as u32))
+                .collect();
+            let boundary_owner: Vec<u32> =
+                boundary.iter().map(|&v| assignment[v as usize]).collect();
+
+            // aggregation blocks
+            let nl = nodes.len();
+            let mut ll = SparseBlock {
+                rows: nl,
+                cols: nl,
+                indptr: vec![0],
+                indices: vec![],
+                values: vec![],
+            };
+            let mut lb = SparseBlock {
+                rows: nl,
+                cols: boundary.len(),
+                indptr: vec![0],
+                indices: vec![],
+                values: vec![],
+            };
+            let mut ll_local = ll.clone();
+            for &u in nodes.iter() {
+                let nbrs = g.neighbors(u as usize);
+                let deg_total = nbrs.len().max(1) as f32;
+                let local_nbrs: Vec<u32> = nbrs
+                    .iter()
+                    .copied()
+                    .filter(|&v| assignment[v as usize] as usize == part)
+                    .collect();
+                let deg_local = local_nbrs.len().max(1) as f32;
+                for &v in nbrs {
+                    if assignment[v as usize] as usize == part {
+                        ll.indices.push(local_of[v as usize]);
+                        ll.values.push(1.0 / deg_total);
+                    } else {
+                        lb.indices.push(slot_of[&v]);
+                        lb.values.push(1.0 / deg_total);
+                    }
+                }
+                for &v in &local_nbrs {
+                    ll_local.indices.push(local_of[v as usize]);
+                    ll_local.values.push(1.0 / deg_local);
+                }
+                ll.indptr.push(ll.indices.len() as u64);
+                lb.indptr.push(lb.indices.len() as u64);
+                ll_local.indptr.push(ll_local.indices.len() as u64);
+            }
+
+            workers.push(WorkerGraph {
+                part,
+                nodes: nodes.clone(),
+                boundary,
+                boundary_owner,
+                s_ll: ll,
+                s_lb: lb,
+                s_ll_localnorm: ll_local,
+                send_plans: Vec::new(),
+            });
+        }
+
+        // send plans: worker p's boundary slots owned by q -> q's plan to p
+        for p in 0..q {
+            let recv = &workers[p];
+            let mut per_sender: Vec<(Vec<u32>, Vec<u32>)> = vec![(vec![], vec![]); q];
+            for (slot, (&gid, &owner)) in
+                recv.boundary.iter().zip(&recv.boundary_owner).enumerate()
+            {
+                per_sender[owner as usize].0.push(local_of[gid as usize]);
+                per_sender[owner as usize].1.push(slot as u32);
+            }
+            for (sender, (rows, slots)) in per_sender.into_iter().enumerate() {
+                if !rows.is_empty() {
+                    workers[sender].send_plans.push(SendPlan {
+                        to: p,
+                        local_rows: rows,
+                        dst_slots: slots,
+                    });
+                }
+            }
+        }
+        Ok(workers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::sbm;
+    use crate::partition::random::RandomPartitioner;
+    use crate::partition::Partitioner;
+
+    fn setup(n: usize, q: usize, seed: u64) -> (Csr, Vec<WorkerGraph>) {
+        let (g, _) = sbm(n, 4, 0.2, 0.03, seed);
+        let p = RandomPartitioner { seed }.partition(&g, q).unwrap();
+        let w = WorkerGraph::build_all(&g, &p).unwrap();
+        (g, w)
+    }
+
+    #[test]
+    fn rows_of_s_blocks_sum_to_one() {
+        let (g, workers) = setup(64, 4, 1);
+        for w in &workers {
+            for r in 0..w.n_local() {
+                let gid = w.nodes[r] as usize;
+                if g.degree(gid) == 0 {
+                    continue;
+                }
+                let sum_ll: f32 = (w.s_ll.indptr[r]..w.s_ll.indptr[r + 1])
+                    .map(|i| w.s_ll.values[i as usize])
+                    .sum();
+                let sum_lb: f32 = (w.s_lb.indptr[r]..w.s_lb.indptr[r + 1])
+                    .map(|i| w.s_lb.values[i as usize])
+                    .sum();
+                assert!((sum_ll + sum_lb - 1.0).abs() < 1e-5, "row {r}: {}", sum_ll + sum_lb);
+                // local-norm rows also sum to 1 when a local neighbor exists
+                let lo = w.s_ll_localnorm.indptr[r] as usize;
+                let hi = w.s_ll_localnorm.indptr[r + 1] as usize;
+                if hi > lo {
+                    let s: f32 = w.s_ll_localnorm.values[lo..hi].iter().sum();
+                    assert!((s - 1.0).abs() < 1e-5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn boundary_covers_exactly_cross_neighbors() {
+        let (g, workers) = setup(64, 4, 2);
+        for w in &workers {
+            let local_set: std::collections::HashSet<u32> = w.nodes.iter().copied().collect();
+            let mut expect: Vec<u32> = w
+                .nodes
+                .iter()
+                .flat_map(|&u| g.neighbors(u as usize).iter().copied())
+                .filter(|v| !local_set.contains(v))
+                .collect();
+            expect.sort_unstable();
+            expect.dedup();
+            assert_eq!(w.boundary, expect);
+        }
+    }
+
+    #[test]
+    fn send_plans_cover_all_boundary_slots() {
+        let (_, workers) = setup(64, 4, 3);
+        for p in 0..workers.len() {
+            let mut covered = vec![false; workers[p].n_boundary()];
+            for w in &workers {
+                for plan in &w.send_plans {
+                    if plan.to == p {
+                        assert_eq!(plan.local_rows.len(), plan.dst_slots.len());
+                        for (&row, &slot) in plan.local_rows.iter().zip(&plan.dst_slots) {
+                            // the row sent is the global node sitting in that slot
+                            assert_eq!(w.nodes[row as usize], workers[p].boundary[slot as usize]);
+                            assert!(!covered[slot as usize], "slot {slot} double-covered");
+                            covered[slot as usize] = true;
+                        }
+                    }
+                }
+            }
+            assert!(covered.iter().all(|&c| c), "uncovered boundary slot at part {p}");
+        }
+    }
+
+    #[test]
+    fn dense_blocks_match_sparse() {
+        let (_, workers) = setup(32, 2, 4);
+        let w = &workers[0];
+        let dense = w.s_ll.to_dense();
+        for r in 0..w.s_ll.rows {
+            let lo = w.s_ll.indptr[r] as usize;
+            let hi = w.s_ll.indptr[r + 1] as usize;
+            let row_sum: f32 = dense.row(r).iter().sum();
+            let sparse_sum: f32 = w.s_ll.values[lo..hi].iter().sum();
+            assert!((row_sum - sparse_sum).abs() < 1e-6);
+        }
+        let padded = w.s_lb.to_dense_padded(w.s_lb.cols + 5);
+        assert_eq!(padded.cols, w.s_lb.cols + 5);
+    }
+
+    #[test]
+    fn spmm_matches_dense_matmul() {
+        let (_, workers) = setup(48, 3, 5);
+        let w = &workers[1];
+        let mut rng = crate::util::Rng::new(0);
+        let x = Matrix::from_fn(w.s_lb.cols, 7, |_, _| rng.next_normal());
+        let mut out = Matrix::zeros(w.s_lb.rows, 7);
+        w.s_lb.spmm_into(&x, &mut out);
+        let want = w.s_lb.to_dense().matmul(&x);
+        for (a, b) in out.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        // transpose path
+        let y = Matrix::from_fn(w.s_lb.rows, 5, |_, _| rng.next_normal());
+        let mut out_t = Matrix::zeros(w.s_lb.cols, 5);
+        w.s_lb.spmm_t_into(&y, &mut out_t);
+        let want_t = w.s_lb.to_dense().t_matmul(&y);
+        for (a, b) in out_t.data.iter().zip(&want_t.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,317 @@
+//! PJRT runtime: load AOT HLO-text artifacts (built by `make artifacts`)
+//! and execute them on the CPU PJRT client.
+//!
+//! Interchange is HLO **text** — jax >= 0.5 emits serialized protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod hlo_stats;
+
+use crate::tensor::Matrix;
+use crate::util::Json;
+use crate::Result;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+pub const MANIFEST_VERSION: u64 = 2;
+
+/// One shape config from the manifest (mirrors python ShapeConfig).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ManifestConfig {
+    pub tag: String,
+    pub n_total: usize,
+    pub q: usize,
+    pub n_local: usize,
+    pub n_bnd: usize,
+    pub f_in: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub layers: usize,
+    pub param_count: usize,
+    /// artifact name -> file name
+    pub files: BTreeMap<String, String>,
+}
+
+impl ManifestConfig {
+    pub fn model_dims(&self) -> crate::engine::ModelDims {
+        crate::engine::ModelDims {
+            f_in: self.f_in,
+            hidden: self.hidden,
+            classes: self.classes,
+            layers: self.layers,
+        }
+    }
+}
+
+/// Parsed artifacts/manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub configs: BTreeMap<String, ManifestConfig>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {path:?}: {e}; run `make artifacts`"))?;
+        let j = Json::parse(&text)?;
+        let version = j.require("version")?.as_usize().unwrap_or(0) as u64;
+        anyhow::ensure!(
+            version == MANIFEST_VERSION,
+            "manifest version {version} != {MANIFEST_VERSION}; re-run `make artifacts`"
+        );
+        let mut configs = BTreeMap::new();
+        for (tag, cfg) in j.require("configs")?.as_obj().into_iter().flatten() {
+            let u = |k: &str| -> Result<usize> {
+                cfg.require(k)?
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("{tag}.{k} not a usize"))
+            };
+            let mut files = BTreeMap::new();
+            for (name, art) in cfg.require("artifacts")?.as_obj().into_iter().flatten() {
+                files.insert(
+                    name.clone(),
+                    art.require("file")?
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("{tag}.{name}.file"))?
+                        .to_string(),
+                );
+            }
+            configs.insert(
+                tag.clone(),
+                ManifestConfig {
+                    tag: tag.clone(),
+                    n_total: u("n_total")?,
+                    q: u("q")?,
+                    n_local: u("n_local")?,
+                    n_bnd: u("n_bnd")?,
+                    f_in: u("f_in")?,
+                    hidden: u("hidden")?,
+                    classes: u("classes")?,
+                    layers: u("layers")?,
+                    param_count: u("param_count")?,
+                    files,
+                },
+            );
+        }
+        Ok(Manifest { root: dir.to_path_buf(), configs })
+    }
+
+    pub fn config(&self, tag: &str) -> Result<&ManifestConfig> {
+        self.configs.get(tag).ok_or_else(|| {
+            anyhow::anyhow!(
+                "config {tag:?} not in manifest (have: {:?}); add it to python/compile/shapes.py and re-run `make artifacts`",
+                self.configs.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+/// A compiled executable plus its expected output arity.
+pub struct Artifact {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute with literal inputs; unpacks the tuple output.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("{}: execute failed: {e:?}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{}: to_literal: {e:?}", self.name))?;
+        lit.to_tuple().map_err(|e| anyhow::anyhow!("{}: to_tuple: {e:?}", self.name))
+    }
+
+    /// Execute with device-resident buffers (hot path: static operands like
+    /// the adjacency blocks are uploaded once and reused every epoch).
+    pub fn run_b(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute_b(inputs)
+            .map_err(|e| anyhow::anyhow!("{}: execute_b failed: {e:?}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{}: to_literal: {e:?}", self.name))?;
+        lit.to_tuple().map_err(|e| anyhow::anyhow!("{}: to_tuple: {e:?}", self.name))
+    }
+
+    /// The PJRT client this executable was compiled for.
+    pub fn client(&self) -> &xla::PjRtClient {
+        self.exe.client()
+    }
+}
+
+/// Upload a matrix to the device.
+pub fn buffer_from_matrix(client: &xla::PjRtClient, m: &Matrix) -> Result<xla::PjRtBuffer> {
+    client
+        .buffer_from_host_buffer(&m.data, &[m.rows, m.cols], None)
+        .map_err(|e| anyhow::anyhow!("buffer upload: {e:?}"))
+}
+
+/// Upload a vector to the device.
+pub fn buffer_from_vec(client: &xla::PjRtClient, v: &[f32]) -> Result<xla::PjRtBuffer> {
+    client
+        .buffer_from_host_buffer(v, &[v.len()], None)
+        .map_err(|e| anyhow::anyhow!("buffer upload: {e:?}"))
+}
+
+/// Upload labels as i32.
+pub fn buffer_from_labels(client: &xla::PjRtClient, labels: &[u32]) -> Result<xla::PjRtBuffer> {
+    let as_i32: Vec<i32> = labels.iter().map(|&x| x as i32).collect();
+    client
+        .buffer_from_host_buffer(&as_i32, &[as_i32.len()], None)
+        .map_err(|e| anyhow::anyhow!("buffer upload: {e:?}"))
+}
+
+/// All executables for one shape config.
+pub struct ArtifactSet {
+    pub cfg: ManifestConfig,
+    pub layer_forward: Vec<Artifact>,
+    pub layer_backward: Vec<Artifact>,
+    pub loss_grad: Artifact,
+}
+
+/// PJRT client + artifact loader.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile_file(&self, path: &Path, name: &str) -> Result<Artifact> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        Ok(Artifact { name: name.to_string(), exe })
+    }
+
+    /// Load + compile every artifact of a config.
+    pub fn load_config(&self, manifest: &Manifest, tag: &str) -> Result<ArtifactSet> {
+        let cfg = manifest.config(tag)?.clone();
+        let dir = manifest.root.join(tag);
+        let get = |name: &str| -> Result<Artifact> {
+            let file = cfg
+                .files
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("artifact {name} missing from manifest"))?;
+            self.compile_file(&dir.join(file), name)
+        };
+        let mut layer_forward = Vec::new();
+        let mut layer_backward = Vec::new();
+        for l in 0..cfg.layers {
+            layer_forward.push(get(&format!("layer{l}_forward"))?);
+            layer_backward.push(get(&format!("layer{l}_backward"))?);
+        }
+        let loss_grad = get("loss_grad")?;
+        Ok(ArtifactSet { cfg, layer_forward, layer_backward, loss_grad })
+    }
+}
+
+// ----------------- literal <-> tensor marshalling -----------------
+
+/// f32 matrix -> rank-2 literal.
+pub fn literal_from_matrix(m: &Matrix) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(&m.data)
+        .reshape(&[m.rows as i64, m.cols as i64])
+        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?)
+}
+
+/// f32 slice -> rank-1 literal.
+pub fn literal_from_vec(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// u32 labels -> i32 rank-1 literal.
+pub fn literal_from_labels(labels: &[u32]) -> xla::Literal {
+    let as_i32: Vec<i32> = labels.iter().map(|&x| x as i32).collect();
+    xla::Literal::vec1(&as_i32)
+}
+
+/// rank-2 f32 literal -> matrix.
+pub fn matrix_from_literal(lit: &xla::Literal) -> Result<Matrix> {
+    let shape = lit.array_shape().map_err(|e| anyhow::anyhow!("shape: {e:?}"))?;
+    let dims = shape.dims();
+    anyhow::ensure!(dims.len() == 2, "expected rank-2, got {dims:?}");
+    let data = lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+    Ok(Matrix::from_vec(dims[0] as usize, dims[1] as usize, data))
+}
+
+/// scalar f32 literal.
+pub fn scalar_from_literal(lit: &xla::Literal) -> Result<f32> {
+    lit.to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?
+        .first()
+        .copied()
+        .ok_or_else(|| anyhow::anyhow!("empty literal"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::TempDir;
+
+    #[test]
+    fn literal_matrix_roundtrip() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let lit = literal_from_matrix(&m).unwrap();
+        let back = matrix_from_literal(&lit).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn manifest_parse_and_validation() {
+        let dir = TempDir::new().unwrap();
+        let text = r#"{
+          "version": 2,
+          "configs": {
+            "t": {
+              "tag": "t", "n_total": 8, "q": 2, "n_local": 4, "n_bnd": 4,
+              "f_in": 3, "hidden": 5, "classes": 2, "layers": 3,
+              "param_count": 99, "weight_shapes": [],
+              "artifacts": {"layer0_forward": {"file": "f.hlo.txt", "inputs": [], "n_outputs": 3}}
+            }
+          }
+        }"#;
+        std::fs::write(dir.path().join("manifest.json"), text).unwrap();
+        let m = Manifest::load(dir.path()).unwrap();
+        let c = m.config("t").unwrap();
+        assert_eq!(c.n_local, 4);
+        assert_eq!(c.files["layer0_forward"], "f.hlo.txt");
+        let err = m.config("missing").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn manifest_version_mismatch_rejected() {
+        let dir = TempDir::new().unwrap();
+        std::fs::write(dir.path().join("manifest.json"), r#"{"version": 1, "configs": {}}"#)
+            .unwrap();
+        let err = Manifest::load(dir.path()).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let dir = TempDir::new().unwrap();
+        let err = Manifest::load(dir.path()).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,247 @@
+//! Minimal dense f32 matrix used by the native engine and the PJRT
+//! marshalling layer.  Row-major, rayon-parallel matmul.
+//!
+//! Deliberately tiny: the heavy lifting on the artifact path happens in
+//! XLA; the native engine's hot loops are the sparse aggregations in
+//! `engine::native`, which operate on raw slices.
+
+use crate::util::parallel;
+
+/// Row-major dense f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "data length {} != {rows}x{cols}", data.len());
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// self @ other, rayon-parallel over output rows, k-inner loop kept
+    /// contiguous over `other` rows for cache friendliness.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul {}x{} @ {}x{}", self.rows, self.cols, other.rows, other.cols);
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        let oc = other.cols;
+        parallel::par_chunks_mut(&mut out.data, oc, |i, out_row| {
+            let a_row = self.row(i);
+            for (k, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = &other.data[k * oc..(k + 1) * oc];
+                for (o, &b) in out_row.iter_mut().zip(b_row) {
+                    *o += a * b;
+                }
+            }
+        });
+        out
+    }
+
+    /// selfᵀ @ other without materializing the transpose.
+    pub fn t_matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "t_matmul {}x{} @ {}x{}", self.rows, self.cols, other.rows, other.cols);
+        let (k, m, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        // Accumulate thread-local partials over row slabs of k, then reduce.
+        let nt = parallel::num_threads().min(k.max(1));
+        let partials: Vec<Matrix> = parallel::par_map(nt, |t| {
+            let mut acc = Matrix::zeros(m, n);
+            let lo = k * t / nt;
+            let hi = k * (t + 1) / nt;
+            for r in lo..hi {
+                let a_row = self.row(r);
+                let b_row = other.row(r);
+                for (i, &a) in a_row.iter().enumerate() {
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let acc_row = acc.row_mut(i);
+                    for (o, &b) in acc_row.iter_mut().zip(b_row) {
+                        *o += a * b;
+                    }
+                }
+            }
+            acc
+        });
+        for p in partials {
+            for (o, v) in out.data.iter_mut().zip(p.data) {
+                *o += v;
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    pub fn add_assign(&mut self, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    /// Add a row vector to every row (bias broadcast).
+    pub fn add_row_broadcast(&mut self, bias: &[f32]) {
+        assert_eq!(bias.len(), self.cols);
+        for i in 0..self.rows {
+            for (a, &b) in self.row_mut(i).iter_mut().zip(bias) {
+                *a += b;
+            }
+        }
+    }
+
+    pub fn relu(&mut self) {
+        for a in self.data.iter_mut() {
+            if *a < 0.0 {
+                *a = 0.0;
+            }
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Row-wise argmax (predictions from logits).
+    pub fn argmax_rows(&self) -> Vec<u32> {
+        (0..self.rows)
+            .map(|i| {
+                let row = self.row(i);
+                let mut best = 0usize;
+                for (j, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = j;
+                    }
+                }
+                best as u32
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(rows: usize, cols: usize, vals: &[f32]) -> Matrix {
+        Matrix::from_vec(rows, cols, vals.to_vec())
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        let a = m(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let b = m(2, 2, &[1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.matmul(&b).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_rectangular() {
+        let a = m(1, 3, &[1.0, 2.0, 3.0]);
+        let b = m(3, 2, &[1.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.matmul(&b).data, vec![4.0, 5.0]);
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit_transpose() {
+        let mut rng = crate::util::Rng::new(1);
+        let a = Matrix::from_fn(7, 5, |_, _| rng.next_normal());
+        let b = Matrix::from_fn(7, 3, |_, _| rng.next_normal());
+        let want = a.transpose().matmul(&b);
+        let got = a.t_matmul(&b);
+        for (x, y) in got.data.iter().zip(&want.data) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let a = m(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn relu_clamps_negatives() {
+        let mut a = m(1, 4, &[-1.0, 0.0, 2.0, -3.0]);
+        a.relu();
+        assert_eq!(a.data, vec![0.0, 0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn bias_broadcast() {
+        let mut a = Matrix::zeros(2, 3);
+        a.add_row_broadcast(&[1.0, 2.0, 3.0]);
+        assert_eq!(a.data, vec![1., 2., 3., 1., 2., 3.]);
+    }
+
+    #[test]
+    fn argmax_rows_picks_first_max() {
+        let a = m(2, 3, &[0.1, 0.9, 0.9, 1.0, -1.0, 0.5]);
+        assert_eq!(a.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul")]
+    fn matmul_shape_mismatch_panics() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 3);
+        a.matmul(&b);
+    }
+}

@@ -1,0 +1,41 @@
+//! Small shared utilities: deterministic RNG, argsort helpers.
+
+pub mod json;
+pub mod parallel;
+pub mod rng;
+pub mod testing;
+
+pub use json::Json;
+pub use rng::Rng;
+
+/// Indices that would sort `vals` descending (stable).
+pub fn argsort_desc(vals: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..vals.len()).collect();
+    idx.sort_by(|&a, &b| {
+        vals[b]
+            .partial_cmp(&vals[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argsort_desc_orders_descending() {
+        assert_eq!(argsort_desc(&[1.0, 3.0, 2.0]), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn argsort_desc_is_stable_on_ties() {
+        assert_eq!(argsort_desc(&[2.0, 2.0, 1.0]), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn argsort_desc_empty() {
+        assert!(argsort_desc(&[]).is_empty());
+    }
+}

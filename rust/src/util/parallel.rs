@@ -1,0 +1,122 @@
+//! Scoped-thread data parallelism (rayon is not available offline).
+//!
+//! `par_chunks_mut` splits a mutable slice into per-thread chunk groups and
+//! runs the body on `std::thread::scope` threads.  Thread count defaults to
+//! available parallelism, overridable with VARCO_THREADS.
+
+use std::sync::OnceLock;
+
+/// Number of worker threads to use.
+pub fn num_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(v) = std::env::var("VARCO_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    })
+}
+
+/// Run `f(chunk_index, chunk)` over `data.chunks_mut(chunk)` using scoped
+/// threads.  `chunk_index` is the index of the chunk (i.e. row when
+/// `chunk == row_len`), chunks are distributed contiguously.
+pub fn par_chunks_mut<T: Send, F>(data: &mut [T], chunk: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk > 0);
+    let n_chunks = data.len().div_ceil(chunk);
+    let threads = num_threads().min(n_chunks.max(1));
+    if threads <= 1 || n_chunks <= 1 {
+        for (i, c) in data.chunks_mut(chunk).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    // Split the slice into `threads` contiguous groups of whole chunks.
+    let chunks_per_thread = n_chunks.div_ceil(threads);
+    let group = chunks_per_thread * chunk;
+    std::thread::scope(|s| {
+        for (t, slab) in data.chunks_mut(group).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                for (i, c) in slab.chunks_mut(chunk).enumerate() {
+                    f(t * chunks_per_thread + i, c);
+                }
+            });
+        }
+    });
+}
+
+/// Map over index range [0, n) in parallel, collecting results in order.
+pub fn par_map<T: Send, F>(n: usize, f: F) -> Vec<T>
+where
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = num_threads().min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let per = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, slab) in out.chunks_mut(per).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                for (i, slot) in slab.iter_mut().enumerate() {
+                    *slot = Some(f(t * per + i));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("all slots filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_chunks_mut_touches_every_chunk_once() {
+        let mut data = vec![0u32; 103];
+        par_chunks_mut(&mut data, 10, |i, c| {
+            for x in c.iter_mut() {
+                *x += 1 + i as u32;
+            }
+        });
+        // chunk 0 -> +1, chunk 10 (last, 3 elems) -> +11
+        assert_eq!(data[0], 1);
+        assert_eq!(data[100], 11);
+        assert!(data.iter().all(|&x| x > 0));
+    }
+
+    #[test]
+    fn par_chunks_mut_matches_serial() {
+        let mut a = vec![0f32; 997];
+        let mut b = a.clone();
+        let body = |i: usize, c: &mut [f32]| {
+            for (j, x) in c.iter_mut().enumerate() {
+                *x = (i * 31 + j) as f32;
+            }
+        };
+        par_chunks_mut(&mut a, 13, body);
+        for (i, c) in b.chunks_mut(13).enumerate() {
+            body(i, c);
+        }
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn par_map_in_order() {
+        let out = par_map(57, |i| i * i);
+        assert_eq!(out, (0..57).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_zero_and_one() {
+        assert!(par_map(0, |i| i).is_empty());
+        assert_eq!(par_map(1, |i| i + 9), vec![9]);
+    }
+}

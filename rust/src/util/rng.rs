@@ -1,0 +1,210 @@
+//! Deterministic xoshiro256** RNG (no external deps).
+//!
+//! Both compression endpoints derive the *same* index stream from a shared
+//! seed (paper Appendix A: "a random key generator is shared a priori"), so
+//! reproducibility across the whole crate matters more than raw speed.
+
+/// xoshiro256** seeded via splitmix64.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed deterministically from a single u64 (splitmix64 expansion).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^ (z >> 31)
+        };
+        Rng { s: [next(), next(), next(), next()] }
+    }
+
+    /// Derive an independent stream for a sub-component (worker, layer, ...).
+    pub fn derive(&self, tag: u64) -> Rng {
+        // Mix the tag into a fresh splitmix seed from our state.
+        Rng::new(self.s[0] ^ self.s[2].rotate_left(17) ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform in [0, 1) with f64 precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n) (Lemire rejection-free approximation is
+    /// fine at our n << 2^64 scales).
+    #[inline]
+    pub fn next_below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn next_normal(&mut self) -> f32 {
+        let u1 = (self.next_f64()).max(1e-12);
+        let u2 = self.next_f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn next_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f32()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// `m` distinct uniform indices from [0, n): the shared-seed kept-index
+    /// set of the paper's compression mechanism.  Deterministic in
+    /// (state, n, m).
+    pub fn sample_indices(&mut self, n: usize, m: usize) -> Vec<u32> {
+        let mut out = Vec::with_capacity(m);
+        self.sample_indices_into(n, m, &mut out);
+        out
+    }
+
+    /// Allocation-light variant (the compression hot path runs this for
+    /// every message, twice per direction): Floyd's sampling over a
+    /// thread-local bitset — O(m) expected work + O(n/64) clear, instead
+    /// of materializing an O(n) permutation.
+    pub fn sample_indices_into(&mut self, n: usize, m: usize, out: &mut Vec<u32>) {
+        assert!(m <= n, "cannot sample {m} from {n}");
+        out.clear();
+        if m == 0 {
+            return;
+        }
+        if m == n {
+            out.extend(0..n as u32);
+            return;
+        }
+        thread_local! {
+            static BITS: std::cell::RefCell<Vec<u64>> = const { std::cell::RefCell::new(Vec::new()) };
+        }
+        BITS.with(|cell| {
+            let mut bits = cell.borrow_mut();
+            let words = n.div_ceil(64);
+            bits.clear();
+            bits.resize(words, 0);
+            // Floyd's algorithm: for i in n-m..n, draw j in [0, i]; take j
+            // unless already taken, else take i.  Uniform over m-subsets.
+            for i in (n - m)..n {
+                let j = self.next_below(i + 1);
+                let pick = if bits[j / 64] >> (j % 64) & 1 == 0 { j } else { i };
+                bits[pick / 64] |= 1 << (pick % 64);
+                out.push(pick as u32);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn derive_streams_are_independent_and_deterministic() {
+        let root = Rng::new(7);
+        let mut a1 = root.derive(1);
+        let mut a2 = root.derive(1);
+        let mut b = root.derive(2);
+        assert_eq!(a1.next_u64(), a2.next_u64());
+        assert_ne!(a1.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..1000 {
+            let x = r.next_f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_has_sane_moments() {
+        let mut r = Rng::new(9);
+        let xs: Vec<f32> = (0..20_000).map(|_| r.next_normal()).collect();
+        let mean = xs.iter().sum::<f32>() / xs.len() as f32;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / xs.len() as f32;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn sample_indices_unique_and_in_range() {
+        let mut r = Rng::new(11);
+        let idx = r.sample_indices(100, 40);
+        assert_eq!(idx.len(), 40);
+        let mut seen = std::collections::HashSet::new();
+        for &i in &idx {
+            assert!((i as usize) < 100);
+            assert!(seen.insert(i), "duplicate index {i}");
+        }
+    }
+
+    #[test]
+    fn sample_indices_full_is_permutation() {
+        let mut r = Rng::new(13);
+        let mut idx = r.sample_indices(50, 50);
+        idx.sort_unstable();
+        assert_eq!(idx, (0..50).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn shuffle_preserves_multiset() {
+        let mut r = Rng::new(5);
+        let mut xs: Vec<u32> = (0..64).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..64).collect::<Vec<u32>>());
+    }
+}

@@ -1,0 +1,94 @@
+//! Test utilities: a TempDir (tempfile crate is unavailable offline) and a
+//! tiny property-testing driver (proptest substitute).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Self-cleaning temporary directory.
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    pub fn new() -> std::io::Result<TempDir> {
+        static COUNTER: AtomicU64 = AtomicU64::new(0);
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let pid = std::process::id();
+        let t = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos();
+        let path = std::env::temp_dir().join(format!("varco-test-{pid}-{t}-{n}"));
+        std::fs::create_dir_all(&path)?;
+        Ok(TempDir { path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+/// Property-test driver: runs `body(rng)` for `cases` seeded cases and
+/// reports the failing seed (re-run a single seed by passing it to
+/// `check_property_seeded`).
+pub fn check_property(name: &str, cases: u64, body: impl Fn(&mut crate::util::Rng)) {
+    for case in 0..cases {
+        let seed = 0xABCD_0000 + case;
+        check_property_seeded(name, seed, &body);
+    }
+}
+
+/// One case with an explicit seed (panics annotate the seed for replay).
+pub fn check_property_seeded(name: &str, seed: u64, body: impl Fn(&mut crate::util::Rng)) {
+    let mut rng = crate::util::Rng::new(seed);
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut rng)));
+    if let Err(e) = result {
+        let msg = e
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_else(|| "<non-string panic>".into());
+        panic!("property {name:?} failed with seed {seed:#x}: {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tempdir_creates_and_cleans() {
+        let p;
+        {
+            let d = TempDir::new().unwrap();
+            p = d.path().to_path_buf();
+            std::fs::write(d.path().join("x"), "1").unwrap();
+            assert!(p.exists());
+        }
+        assert!(!p.exists());
+    }
+
+    #[test]
+    fn property_driver_runs_all_cases() {
+        let count = std::sync::atomic::AtomicU64::new(0);
+        check_property("counts", 10, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn property_driver_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check_property("fails", 1, |_| panic!("boom"));
+        });
+        let msg = format!("{:?}", r.unwrap_err().downcast_ref::<String>().unwrap());
+        assert!(msg.contains("seed") && msg.contains("boom"), "{msg}");
+    }
+}

@@ -1,0 +1,169 @@
+//! Three-layer stack integration: the PJRT engine (executing the AOT
+//! JAX/Pallas artifacts) must agree with the native oracle to float
+//! tolerance, op by op and over a whole training run.
+//!
+//! Requires `make artifacts` (skips with a loud message otherwise so bare
+//! `cargo test` still passes).
+
+use std::path::Path;
+use std::rc::Rc;
+use varco::compress::{CommMode, Scheduler};
+use varco::coordinator::{Trainer, TrainerOptions};
+use varco::engine::native::NativeWorkerEngine;
+use varco::engine::pjrt::PjrtWorkerEngine;
+use varco::engine::{ModelDims, Weights, WorkerEngine};
+use varco::graph::Dataset;
+use varco::partition::{Partitioner, WorkerGraph};
+use varco::runtime::{Manifest, Runtime};
+use varco::tensor::Matrix;
+
+const TAG: &str = "quickstart";
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+        None
+    }
+}
+
+fn setup() -> Option<(Dataset, Vec<WorkerGraph>, ModelDims, Rc<varco::runtime::ArtifactSet>)> {
+    let dir = artifacts_dir()?;
+    let manifest = Manifest::load(dir).unwrap();
+    let runtime = Runtime::cpu().unwrap();
+    let arts = Rc::new(runtime.load_config(&manifest, TAG).unwrap());
+    let cfg = &arts.cfg;
+    let ds = Dataset::load("karate-like", 0, 3).unwrap();
+    assert_eq!(ds.n(), cfg.n_total, "dataset/artifact mismatch");
+    let part = varco::partition::random::RandomPartitioner { seed: 1 }
+        .partition(&ds.graph, cfg.q)
+        .unwrap();
+    let wgs = WorkerGraph::build_all(&ds.graph, &part).unwrap();
+    let dims = cfg.model_dims();
+    Some((ds, wgs, dims, arts))
+}
+
+fn randm(r: usize, c: usize, seed: u64) -> Matrix {
+    let mut rng = varco::util::Rng::new(seed);
+    Matrix::from_fn(r, c, |_, _| rng.next_normal())
+}
+
+fn assert_close(a: &Matrix, b: &Matrix, tol: f32, ctx: &str) {
+    assert_eq!(a.shape(), b.shape(), "{ctx}: shape");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert!(
+            (x - y).abs() < tol * (1.0 + x.abs()),
+            "{ctx}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn engine_parity_layer_by_layer() {
+    let Some((_, wgs, dims, arts)) = setup() else { return };
+    let wg = wgs[0].clone();
+    let mut native = NativeWorkerEngine::new(wg.clone(), dims);
+    let mut pjrt = PjrtWorkerEngine::new(arts, wg).unwrap();
+    let weights = Weights::glorot(&dims, 5);
+
+    for local_norm in [false, true] {
+        let layer_dims = dims.layer_dims();
+        for (l, &(fi, fo)) in layer_dims.iter().enumerate() {
+            let h = randm(native.n_local(), fi, 10 + l as u64);
+            let hb = randm(native.n_boundary(), fi, 20 + l as u64);
+            let out_n = native.forward_layer(l, &weights, &h, &hb, local_norm).unwrap();
+            let out_p = pjrt.forward_layer(l, &weights, &h, &hb, local_norm).unwrap();
+            assert_close(&out_n, &out_p, 1e-4, &format!("fwd l={l} local={local_norm}"));
+
+            let g_out = randm(native.n_local(), fo, 30 + l as u64);
+            let (gl_n, gb_n, gw_n) = native.backward_layer(l, &weights, &g_out, local_norm).unwrap();
+            let (gl_p, gb_p, gw_p) = pjrt.backward_layer(l, &weights, &g_out, local_norm).unwrap();
+            assert_close(&gl_n, &gl_p, 1e-4, &format!("g_h_local l={l}"));
+            assert_close(&gb_n, &gb_p, 1e-4, &format!("g_h_bnd l={l}"));
+            assert_close(&gw_n.w_self, &gw_p.w_self, 1e-4, &format!("g_w_self l={l}"));
+            assert_close(&gw_n.w_neigh, &gw_p.w_neigh, 1e-4, &format!("g_w_neigh l={l}"));
+            for (a, b) in gw_n.bias.iter().zip(&gw_p.bias) {
+                assert!((a - b).abs() < 1e-4, "g_bias l={l}: {a} vs {b}");
+            }
+        }
+    }
+}
+
+#[test]
+fn loss_head_parity() {
+    let Some((ds, wgs, dims, arts)) = setup() else { return };
+    let wg = wgs[0].clone();
+    let nl = wg.n_local();
+    let mut native = NativeWorkerEngine::new(wg.clone(), dims);
+    let mut pjrt = PjrtWorkerEngine::new(arts, wg.clone()) .unwrap();
+    let logits = randm(nl, dims.classes, 7);
+    let labels: Vec<u32> = wg.nodes.iter().map(|&g| ds.labels[g as usize]).collect();
+    let (m_tr, m_va, m_te) = ds.split.as_f32();
+    let pick = |m: &Vec<f32>| -> Vec<f32> { wg.nodes.iter().map(|&g| m[g as usize]).collect() };
+    let (tr, va, te) = (pick(&m_tr), pick(&m_va), pick(&m_te));
+    let out_n = native.loss_grad(&logits, &labels, &tr, &va, &te).unwrap();
+    let out_p = pjrt.loss_grad(&logits, &labels, &tr, &va, &te).unwrap();
+    assert!((out_n.loss - out_p.loss).abs() < 1e-5, "{} vs {}", out_n.loss, out_p.loss);
+    assert_close(&out_n.g_logits, &out_p.g_logits, 1e-5, "g_logits");
+    assert_eq!(out_n.correct_train, out_p.correct_train);
+    assert_eq!(out_n.correct_val, out_p.correct_val);
+    assert_eq!(out_n.correct_test, out_p.correct_test);
+}
+
+#[test]
+fn full_training_run_parity() {
+    let Some((ds, wgs, dims, arts)) = setup() else { return };
+    let part = varco::partition::random::RandomPartitioner { seed: 1 }
+        .partition(&ds.graph, arts.cfg.q)
+        .unwrap();
+    let comm = CommMode::Compressed(Scheduler::Linear {
+        slope: 3.0,
+        c_max: 16.0,
+        c_min: 1.0,
+        total: 8,
+    });
+    let build = |engines: Vec<Box<dyn WorkerEngine>>| {
+        let opts = TrainerOptions {
+            comm_mode: comm.clone(),
+            seed: 9,
+            epochs: 8,
+            optimizer: Box::new(varco::optim::Sgd::new(0.05, 0.0, 0.0)),
+            ..Default::default()
+        };
+        Trainer::new(&ds, &part, &wgs, engines, dims, opts).unwrap()
+    };
+    let native_engines: Vec<Box<dyn WorkerEngine>> = wgs
+        .iter()
+        .map(|w| Box::new(NativeWorkerEngine::new(w.clone(), dims)) as Box<dyn WorkerEngine>)
+        .collect();
+    let pjrt_engines: Vec<Box<dyn WorkerEngine>> = wgs
+        .iter()
+        .map(|w| {
+            Box::new(PjrtWorkerEngine::new(arts.clone(), w.clone()).unwrap())
+                as Box<dyn WorkerEngine>
+        })
+        .collect();
+    let mut tn = build(native_engines);
+    let mut tp = build(pjrt_engines);
+    let rn = tn.run().unwrap();
+    let rp = tp.run().unwrap();
+    // same ledger (communication is engine-independent)
+    assert_eq!(tn.ledger().total_floats(), tp.ledger().total_floats());
+    // loss curves match closely; weights drift only by float noise
+    for (a, b) in rn.records.iter().zip(&rp.records) {
+        assert!(
+            (a.loss - b.loss).abs() < 1e-3 * (1.0 + a.loss.abs()),
+            "epoch {}: loss {} vs {}",
+            a.epoch,
+            a.loss,
+            b.loss
+        );
+    }
+    let wn = tn.weights.flatten();
+    let wp = tp.weights.flatten();
+    for (i, (a, b)) in wn.iter().zip(&wp).enumerate() {
+        assert!((a - b).abs() < 5e-3 * (1.0 + a.abs()), "w[{i}]: {a} vs {b}");
+    }
+}

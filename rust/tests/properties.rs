@@ -1,0 +1,197 @@
+//! Randomized property tests over the DESIGN.md §5 invariants, driven by
+//! the in-crate property harness (proptest is unavailable offline; failing
+//! seeds are reported for replay).
+
+use varco::compress::{kept_count, Compressor, RandomSubsetCompressor, Scheduler};
+use varco::graph::generate::{erdos_renyi, sbm};
+use varco::partition::{Partitioner, WorkerGraph};
+use varco::tensor::Matrix;
+use varco::util::testing::check_property;
+use varco::util::Rng;
+
+#[test]
+fn prop_partitioners_produce_balanced_permutations() {
+    check_property("partition-balance", 12, |rng| {
+        let q = [2usize, 4, 8][rng.next_below(3)];
+        let n = q * (8 + rng.next_below(24));
+        let g = erdos_renyi(n, 0.08, rng.next_u64());
+        for name in ["random", "hash", "metis-like"] {
+            let p = varco::partition::by_name(name, rng.next_u64())
+                .unwrap()
+                .partition(&g, q)
+                .unwrap();
+            assert_eq!(p.assignment.len(), n, "{name}");
+            let parts = p.parts();
+            assert!(parts.iter().all(|pt| pt.len() == n / q), "{name} unbalanced");
+            let total: usize = parts.iter().map(|pt| pt.len()).sum();
+            assert_eq!(total, n);
+        }
+    });
+}
+
+#[test]
+fn prop_block_rows_sum_to_one() {
+    check_property("block-normalization", 10, |rng| {
+        let q = 2 + rng.next_below(3);
+        let n = q * (10 + rng.next_below(20));
+        let (g, _) = sbm(n, 3.min(n), 0.2, 0.05, rng.next_u64());
+        let p = varco::partition::random::RandomPartitioner { seed: rng.next_u64() }
+            .partition(&g, q)
+            .unwrap();
+        let wgs = WorkerGraph::build_all(&g, &p).unwrap();
+        for w in &wgs {
+            for r in 0..w.n_local() {
+                let gid = w.nodes[r] as usize;
+                if g.degree(gid) == 0 {
+                    continue;
+                }
+                let s1: f32 = (w.s_ll.indptr[r]..w.s_ll.indptr[r + 1])
+                    .map(|i| w.s_ll.values[i as usize])
+                    .sum();
+                let s2: f32 = (w.s_lb.indptr[r]..w.s_lb.indptr[r + 1])
+                    .map(|i| w.s_lb.values[i as usize])
+                    .sum();
+                assert!((s1 + s2 - 1.0).abs() < 1e-5, "row {r}: {}", s1 + s2);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_compress_roundtrip_masked_identity() {
+    check_property("compress-roundtrip", 30, |rng| {
+        let n = 1 + rng.next_below(4000);
+        let rate = [1.0f32, 2.0, 3.7, 16.0, 128.0][rng.next_below(5)];
+        let key = rng.next_u64();
+        let x: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+        let c = RandomSubsetCompressor;
+        let payload = c.compress(&x, rate, key);
+        assert_eq!(payload.values.len(), kept_count(n, rate));
+        let mut out = vec![0.0; n];
+        c.decompress(&payload, &mut out);
+        let idx = RandomSubsetCompressor::indices(n, rate, key);
+        let kept: std::collections::HashSet<u32> = idx.into_iter().collect();
+        for i in 0..n {
+            if kept.contains(&(i as u32)) {
+                assert_eq!(out[i], x[i], "kept {i}");
+            } else {
+                assert_eq!(out[i], 0.0, "dropped {i}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_schedulers_monotone_non_increasing() {
+    check_property("scheduler-monotone", 25, |rng| {
+        let total = 10 + rng.next_below(500);
+        let c_max = 2.0 + rng.next_f32() * 200.0;
+        let scheds = [
+            Scheduler::Linear {
+                slope: 1.0 + rng.next_f32() * 9.0,
+                c_max,
+                c_min: 1.0,
+                total,
+            },
+            Scheduler::Exponential { c_max, c_min: 1.0, total },
+            Scheduler::Step {
+                c_max,
+                c_min: 1.0,
+                every: 1 + rng.next_below(50),
+                factor: 1.5 + rng.next_f32() * 3.0,
+            },
+        ];
+        for s in scheds {
+            let mut prev = f32::INFINITY;
+            for t in 0..total {
+                let r = s.rate_at(t);
+                assert!(r >= 1.0 && r <= c_max + 1e-4, "{s:?} out of range: {r}");
+                assert!(r <= prev + 1e-5, "{s:?} increased at {t}");
+                prev = r;
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_spmm_matches_dense() {
+    check_property("spmm-dense", 10, |rng| {
+        let q = 2 + rng.next_below(2);
+        let n = q * (8 + rng.next_below(12));
+        let (g, _) = sbm(n, 2, 0.3, 0.1, rng.next_u64());
+        let p = varco::partition::random::RandomPartitioner { seed: rng.next_u64() }
+            .partition(&g, q)
+            .unwrap();
+        let wgs = WorkerGraph::build_all(&g, &p).unwrap();
+        let w = &wgs[rng.next_below(q)];
+        let f = 1 + rng.next_below(9);
+        let x = Matrix::from_fn(w.s_ll.cols, f, |_, _| rng.next_normal());
+        let mut out = Matrix::zeros(w.s_ll.rows, f);
+        w.s_ll.spmm_into(&x, &mut out);
+        let want = w.s_ll.to_dense().matmul(&x);
+        for (a, b) in out.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    });
+}
+
+#[test]
+fn prop_send_plans_are_consistent() {
+    check_property("send-plans", 10, |rng| {
+        let q = 2 + rng.next_below(4);
+        let n = q * (6 + rng.next_below(14));
+        let g = erdos_renyi(n, 0.15, rng.next_u64());
+        let p = varco::partition::random::RandomPartitioner { seed: rng.next_u64() }
+            .partition(&g, q)
+            .unwrap();
+        let wgs = WorkerGraph::build_all(&g, &p).unwrap();
+        for recv in 0..q {
+            let mut covered = vec![false; wgs[recv].n_boundary()];
+            for w in &wgs {
+                for plan in w.send_plans.iter().filter(|pl| pl.to == recv) {
+                    for (&row, &slot) in plan.local_rows.iter().zip(&plan.dst_slots) {
+                        assert_eq!(w.nodes[row as usize], wgs[recv].boundary[slot as usize]);
+                        assert!(!covered[slot as usize]);
+                        covered[slot as usize] = true;
+                    }
+                }
+            }
+            assert!(covered.iter().all(|&c| c));
+        }
+    });
+}
+
+#[test]
+fn prop_matrix_matmul_associativity_with_identity() {
+    check_property("matmul-identity", 10, |rng| {
+        let n = 1 + rng.next_below(24);
+        let m = 1 + rng.next_below(24);
+        let a = Matrix::from_fn(n, m, |_, _| rng.next_normal());
+        let eye = Matrix::from_fn(m, m, |i, j| if i == j { 1.0 } else { 0.0 });
+        let prod = a.matmul(&eye);
+        for (x, y) in prod.data.iter().zip(&a.data) {
+            assert_eq!(x, y);
+        }
+    });
+}
+
+#[test]
+fn prop_rng_sample_indices_unbiased_coverage() {
+    // each index should be kept roughly m/n of the time across keys
+    let n = 64;
+    let m = 16;
+    let trials = 2000;
+    let mut counts = vec![0u32; n];
+    for key in 0..trials {
+        for &i in &Rng::new(key).sample_indices(n, m) {
+            counts[i as usize] += 1;
+        }
+    }
+    let expect = trials as f64 * m as f64 / n as f64; // 500
+    for (i, &c) in counts.iter().enumerate() {
+        assert!(
+            (c as f64) > 0.7 * expect && (c as f64) < 1.3 * expect,
+            "index {i} kept {c} times (expect ~{expect})"
+        );
+    }
+}

@@ -1,0 +1,234 @@
+//! The paper's correctness anchors, on the native engine:
+//!
+//!  * FullComm distributed gradients == centralized (q=1) gradients, for
+//!    any partitioning (paper contribution 2 / §III-A).
+//!  * VARCO at fixed rate 1 == FullComm exactly (Definition 1, δ=0).
+//!  * NoComm == FullComm on a graph with zero cross edges.
+
+use varco::compress::{CommMode, Scheduler};
+use varco::coordinator::{Trainer, TrainerOptions};
+use varco::engine::native::NativeWorkerEngine;
+use varco::engine::{ModelDims, WorkerEngine};
+use varco::graph::Dataset;
+use varco::partition::{Partition, Partitioner, WorkerGraph};
+
+fn make_trainer(ds: &Dataset, part: &Partition, comm: CommMode, seed: u64) -> Trainer {
+    let dims = ModelDims { f_in: ds.f_in(), hidden: 8, classes: ds.classes, layers: 3 };
+    let wgs = WorkerGraph::build_all(&ds.graph, part).unwrap();
+    let engines: Vec<Box<dyn WorkerEngine>> = wgs
+        .iter()
+        .map(|w| Box::new(NativeWorkerEngine::new(w.clone(), dims)) as Box<dyn WorkerEngine>)
+        .collect();
+    let opts = TrainerOptions {
+        comm_mode: comm,
+        seed,
+        epochs: 1,
+        optimizer: Box::new(varco::optim::Sgd::new(0.05, 0.0, 0.0)),
+        ..Default::default()
+    };
+    Trainer::new(ds, part, &wgs, engines, dims, opts).unwrap()
+}
+
+fn grads_close(a: &varco::engine::Weights, b: &varco::engine::Weights, tol: f32, ctx: &str) {
+    let fa = a.flatten();
+    let fb = b.flatten();
+    let scale = 1.0 + fa.iter().map(|x| x.abs()).fold(0.0f32, f32::max);
+    for (i, (x, y)) in fa.iter().zip(&fb).enumerate() {
+        assert!(
+            (x - y).abs() < tol * scale,
+            "{ctx}: grad[{i}] {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[test]
+fn fullcomm_equals_centralized_for_any_partition() {
+    let ds = Dataset::load("karate-like", 0, 11).unwrap();
+    let central = Partition::new(1, vec![0; ds.n()]).unwrap();
+    let mut t1 = make_trainer(&ds, &central, CommMode::Full, 42);
+    let (loss1, g1) = t1.train_epoch(0).unwrap();
+
+    for q in [2usize, 4, 8] {
+        let part = varco::partition::random::RandomPartitioner { seed: q as u64 }
+            .partition(&ds.graph, q)
+            .unwrap();
+        let mut tq = make_trainer(&ds, &part, CommMode::Full, 42);
+        let (lossq, gq) = tq.train_epoch(0).unwrap();
+        assert!(
+            (loss1 - lossq).abs() < 1e-4,
+            "q={q}: loss {loss1} vs {lossq}"
+        );
+        grads_close(&g1, &gq, 2e-3, &format!("q={q}"));
+    }
+}
+
+#[test]
+fn metis_partition_also_matches_centralized() {
+    let ds = Dataset::load("karate-like", 0, 13).unwrap();
+    let central = Partition::new(1, vec![0; ds.n()]).unwrap();
+    let mut t1 = make_trainer(&ds, &central, CommMode::Full, 7);
+    let (_, g1) = t1.train_epoch(0).unwrap();
+    let part = varco::partition::metis_like::MetisLike::new(1)
+        .partition(&ds.graph, 4)
+        .unwrap();
+    let mut tm = make_trainer(&ds, &part, CommMode::Full, 7);
+    let (_, gm) = tm.train_epoch(0).unwrap();
+    grads_close(&g1, &gm, 2e-3, "metis q=4");
+}
+
+#[test]
+fn rate_one_compression_is_exactly_fullcomm() {
+    let ds = Dataset::load("karate-like", 0, 17).unwrap();
+    let part = varco::partition::random::RandomPartitioner { seed: 3 }
+        .partition(&ds.graph, 4)
+        .unwrap();
+    let mut tf = make_trainer(&ds, &part, CommMode::Full, 5);
+    let mut tc = make_trainer(
+        &ds,
+        &part,
+        CommMode::Compressed(Scheduler::Fixed { rate: 1.0 }),
+        5,
+    );
+    let (lf, gf) = tf.train_epoch(0).unwrap();
+    let (lc, gc) = tc.train_epoch(0).unwrap();
+    assert_eq!(lf, lc, "losses must be bit-identical at r=1");
+    assert_eq!(gf.flatten(), gc.flatten(), "grads must be bit-identical at r=1");
+}
+
+#[test]
+fn heavier_compression_increases_gradient_error() {
+    // ||g_r - g_full|| should grow with the compression rate (Def. 1: the
+    // error ε grows with r).
+    let ds = Dataset::load("karate-like", 0, 19).unwrap();
+    let part = varco::partition::random::RandomPartitioner { seed: 9 }
+        .partition(&ds.graph, 4)
+        .unwrap();
+    let (_, g_full) = make_trainer(&ds, &part, CommMode::Full, 21).train_epoch(0).unwrap();
+    let mut errs = Vec::new();
+    for rate in [2.0f32, 8.0, 64.0] {
+        let (_, g) = make_trainer(
+            &ds,
+            &part,
+            CommMode::Compressed(Scheduler::Fixed { rate }),
+            21,
+        )
+        .train_epoch(0)
+        .unwrap();
+        let err: f32 = g
+            .flatten()
+            .iter()
+            .zip(g_full.flatten())
+            .map(|(a, b)| (a - b).powi(2))
+            .sum::<f32>()
+            .sqrt();
+        errs.push(err);
+    }
+    assert!(errs[0] < errs[1] && errs[1] < errs[2], "errors not monotone: {errs:?}");
+    assert!(errs[0] > 0.0, "rate 2 should not be exact");
+}
+
+#[test]
+fn nocomm_equals_fullcomm_on_disconnected_partition() {
+    // two disjoint cliques split exactly along the component boundary:
+    // no cross edges => NoComm == FullComm
+    let mut edges = Vec::new();
+    for a in 0..8u32 {
+        for b in (a + 1)..8 {
+            edges.push((a, b));
+            edges.push((a + 8, b + 8));
+        }
+    }
+    let g = varco::graph::Csr::from_edges(16, &edges);
+    let mut rng = varco::util::Rng::new(1);
+    let features = varco::tensor::Matrix::from_fn(16, 4, |_, _| rng.next_normal());
+    let labels: Vec<u32> = (0..16).map(|i| (i / 8) as u32).collect();
+    let split = varco::graph::Split {
+        train: (0..16).map(|i| i % 2 == 0).collect(),
+        val: (0..16).map(|i| i % 4 == 1).collect(),
+        test: (0..16).map(|i| i % 4 == 3).collect(),
+    };
+    let ds = Dataset { name: "cliques".into(), graph: g, features, labels, classes: 2, split };
+    ds.validate().unwrap();
+    let part = Partition::new(2, (0..16).map(|i| (i / 8) as u32).collect()).unwrap();
+    let (lf, gf) = make_trainer(&ds, &part, CommMode::Full, 2).train_epoch(0).unwrap();
+    let (ln, gn) = make_trainer(&ds, &part, CommMode::None, 2).train_epoch(0).unwrap();
+    assert!((lf - ln).abs() < 1e-6, "{lf} vs {ln}");
+    grads_close(&gf, &gn, 1e-5, "disconnected");
+}
+
+#[test]
+fn varco_beats_fixed_heavy_compression_on_accuracy() {
+    // the paper's headline: a decreasing schedule recovers accuracy a
+    // heavy fixed rate cannot
+    let ds = Dataset::load("karate-like", 0, 23).unwrap();
+    let part = varco::partition::random::RandomPartitioner { seed: 5 }
+        .partition(&ds.graph, 4)
+        .unwrap();
+    let epochs = 60;
+    let run = |comm: CommMode| {
+        let dims = ModelDims { f_in: ds.f_in(), hidden: 8, classes: ds.classes, layers: 3 };
+        let wgs = WorkerGraph::build_all(&ds.graph, &part).unwrap();
+        let engines: Vec<Box<dyn WorkerEngine>> = wgs
+            .iter()
+            .map(|w| Box::new(NativeWorkerEngine::new(w.clone(), dims)) as Box<dyn WorkerEngine>)
+            .collect();
+        let opts = TrainerOptions {
+            comm_mode: comm,
+            seed: 31,
+            epochs,
+            optimizer: Box::new(varco::optim::Adam::new(0.02)),
+            ..Default::default()
+        };
+        let mut t = Trainer::new(&ds, &part, &wgs, engines, dims, opts).unwrap();
+        t.run().unwrap()
+    };
+    let varco_rep = run(CommMode::Compressed(Scheduler::Linear {
+        slope: 5.0,
+        c_max: 64.0,
+        c_min: 1.0,
+        total: epochs,
+    }));
+    let fixed_rep = run(CommMode::Compressed(Scheduler::Fixed { rate: 64.0 }));
+    let full_rep = run(CommMode::Full);
+    let (va, fa, fu) = (
+        varco_rep.final_test_accuracy(),
+        fixed_rep.final_test_accuracy(),
+        full_rep.final_test_accuracy(),
+    );
+    assert!(va + 0.05 >= fu, "varco {va} far below full {fu}");
+    assert!(va >= fa - 0.02, "varco {va} below heavy fixed {fa}");
+    // varco must also be cheaper than full on activations
+    let varco_floats = varco_rep.total_floats();
+    let full_floats = full_rep.total_floats();
+    assert!(varco_floats < full_floats, "{varco_floats} !< {full_floats}");
+}
+
+#[test]
+fn checkpoint_restore_preserves_model_exactly() {
+    use varco::coordinator::Checkpoint;
+    let ds = Dataset::load("karate-like", 0, 29).unwrap();
+    let part = varco::partition::random::RandomPartitioner { seed: 2 }
+        .partition(&ds.graph, 2)
+        .unwrap();
+    let mut t = make_trainer(&ds, &part, CommMode::Full, 8);
+    for e in 0..5 {
+        t.train_epoch(e).unwrap();
+    }
+    let before = t.evaluate().unwrap();
+    let ck = Checkpoint::from_weights(&t.dims(), &t.weights, 5, 8);
+    let dir = varco::util::testing::TempDir::new().unwrap();
+    let path = dir.path().join("m.ckpt");
+    ck.save(&path).unwrap();
+
+    // fresh trainer, restore, same evaluation
+    let mut t2 = make_trainer(&ds, &part, CommMode::Full, 999); // different init seed
+    let loaded = Checkpoint::load(&path).unwrap();
+    t2.restore_weights(&loaded.to_weights().unwrap()).unwrap();
+    let after = t2.evaluate().unwrap();
+    assert_eq!(before, after);
+
+    // and training continues from the restored point identically
+    let (l1, _) = t.train_epoch(5).unwrap();
+    let (l2, _) = t2.train_epoch(5).unwrap();
+    assert!((l1 - l2).abs() < 1e-6, "{l1} vs {l2}");
+}
