@@ -68,8 +68,8 @@ fn main() -> varco::Result<()> {
             label,
             report.final_test_accuracy(),
             report.test_at_best_val(),
-            trainer.fabric().dropped,
-            trainer.fabric().staled
+            trainer.fabric().dropped(),
+            trainer.fabric().staled()
         );
     }
     Ok(())

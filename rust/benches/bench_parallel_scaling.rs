@@ -1,0 +1,86 @@
+//! Thread-scaling of the parallel worker runtime: epoch wall-time at
+//! VARCO_THREADS ∈ {1, 2, 4} on a q=4 partition, plus the sequential
+//! oracle as the zero-concurrency baseline.
+//!
+//! The intra-op pool is pinned to one thread (VARCO_THREADS=1 before any
+//! tensor op runs) so the only variable is how many workers the epoch
+//! program's gate lets compute concurrently — the `threads` option is the
+//! programmatic form of the VARCO_THREADS knob.
+//!
+//! Criterion-free: epochs are timed by the trainer itself (EpochRecord
+//! wall_ms excludes evaluation).
+
+#[path = "harness.rs"]
+#[allow(dead_code)]
+mod harness;
+
+use varco::config::{build_trainer_with_dataset, TrainConfig};
+use varco::coordinator::RunMode;
+use varco::graph::Dataset;
+
+const Q: usize = 4;
+const HIDDEN: usize = 64;
+const NODES: usize = 4096;
+
+fn epoch_ms(run_mode: &str, threads: usize, ds: &Dataset, epochs: usize) -> f64 {
+    let cfg = TrainConfig {
+        dataset: ds.name.clone(),
+        nodes: NODES,
+        q: Q,
+        partitioner: "random".into(),
+        comm: "fixed:8".into(),
+        engine: "native".into(),
+        epochs,
+        hidden: HIDDEN,
+        eval_every: usize::MAX - 1,
+        run_mode: run_mode.into(),
+        threads,
+        ..Default::default()
+    };
+    let mut trainer = build_trainer_with_dataset(&cfg, ds).unwrap();
+    let report = trainer.run().unwrap();
+    // skip the first epoch (cold caches / thread spawn) when possible
+    let timed: Vec<f64> = report.records.iter().skip(1).map(|r| r.wall_ms).collect();
+    let timed = if timed.is_empty() {
+        report.records.iter().map(|r| r.wall_ms).collect()
+    } else {
+        timed
+    };
+    timed.iter().sum::<f64>() / timed.len() as f64
+}
+
+fn main() {
+    // pin intra-op parallelism before the first tensor op caches it
+    std::env::set_var("VARCO_THREADS", "1");
+    let epochs = std::env::var("VARCO_BENCH_EPOCHS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(6usize);
+
+    let ds = Dataset::load("synth-arxiv", NODES, 0).unwrap();
+    harness::section(&format!(
+        "synth-arxiv n={NODES} q={Q} hidden={HIDDEN} comm=fixed:8 — parallel worker runtime"
+    ));
+
+    let seq = epoch_ms(RunMode::Sequential.label(), 0, &ds, epochs);
+    println!("{:<44} {:>10.1} ms/epoch", "sequential (oracle)", seq);
+
+    let mut prev: Option<(usize, f64)> = None;
+    for threads in [1usize, 2, 4] {
+        let ms = epoch_ms(RunMode::Parallel.label(), threads, &ds, epochs);
+        let speedup = seq / ms;
+        println!(
+            "{:<44} {:>10.1} ms/epoch   ({speedup:>5.2}x vs sequential)",
+            format!("parallel VARCO_THREADS={threads}"),
+            ms
+        );
+        if let Some((pt, pms)) = prev {
+            if ms >= pms {
+                println!(
+                    "    WARNING: no scaling {pt} -> {threads} threads ({pms:.1} -> {ms:.1} ms)"
+                );
+            }
+        }
+        prev = Some((threads, ms));
+    }
+}

@@ -1,13 +1,26 @@
 //! In-process mailbox fabric between simulated workers.
 //!
+//! Concurrency model: the [`Fabric`] is a coordinator-side handle over
+//! shared state (one mutexed mailbox per worker, one ledger shard per
+//! sender, atomic counters); each worker thread owns an [`Endpoint`] that
+//! can send and drain without `&mut` access to any global object.  The
+//! sequential trainer path drives the same endpoints from one thread, so
+//! both run modes share identical delivery semantics.
+//!
 //! Deterministic delivery with optional failure injection: messages can be
 //! dropped (receiver sees zeros — the compression mechanism's natural
 //! missing-value semantics) or replaced by the previous epoch's payload
-//! (staleness, as in historical-embedding systems).
+//! (staleness, as in historical-embedding systems).  The failure coin is
+//! derived from the *message key* (shared compression key + endpoints +
+//! kind), never from shared RNG call order, so injection is reproducible
+//! for a given seed regardless of thread interleaving.
 
 use super::CommLedger;
 use crate::compress::Payload;
 use crate::util::Rng;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// What a message carries (tags the ledger and the failure policy).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -26,6 +39,16 @@ impl MessageKind {
             MessageKind::Activation { .. } => "activation",
             MessageKind::Gradient { .. } => "gradient",
             MessageKind::Weights => "weights",
+        }
+    }
+
+    /// Total order used to sort drained mailboxes into a deterministic,
+    /// interleaving-independent delivery order.
+    fn sort_key(&self) -> (u8, usize) {
+        match *self {
+            MessageKind::Activation { layer } => (0, layer),
+            MessageKind::Gradient { layer } => (1, layer),
+            MessageKind::Weights => (2, 0),
         }
     }
 }
@@ -50,17 +73,38 @@ pub struct FailurePolicy {
     pub seed: u64,
 }
 
-/// Mailbox grid: `inbox[to]` holds undelivered messages.
-pub struct Fabric {
+/// Uniform coin in [0, 1) hashed from the policy seed and the message's
+/// identity.  Forward and backward messages of one exchange share the same
+/// compression key by design, so the kind and endpoints are mixed in to
+/// keep their coins independent.
+fn failure_coin(policy_seed: u64, msg: &Message) -> f64 {
+    let (kind, layer) = msg.kind.sort_key();
+    let mix = policy_seed
+        ^ 0xFAB
+        ^ msg.payload.key.rotate_left(17)
+        ^ (msg.from as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (msg.to as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F)
+        ^ ((kind as u64) << 32 | layer as u64).wrapping_mul(0x1656_67B1_9E37_79F9);
+    Rng::new(mix).next_f64()
+}
+
+/// State shared by the fabric handle and every endpoint.
+struct Shared {
     q: usize,
-    inbox: Vec<Vec<Message>>,
-    ledger: CommLedger,
     policy: FailurePolicy,
-    rng: Rng,
-    /// last delivered payload per (from, to, kind) for staleness injection
-    history: std::collections::HashMap<(usize, usize, MessageKind), Payload>,
-    pub dropped: usize,
-    pub staled: usize,
+    /// `mailboxes[to]` holds undelivered messages
+    mailboxes: Vec<Mutex<Vec<Message>>>,
+    /// `q` per-sender ledger shards plus one coordinator shard (index `q`)
+    shards: Vec<Mutex<CommLedger>>,
+    total: AtomicUsize,
+    dropped: AtomicUsize,
+    staled: AtomicUsize,
+}
+
+/// Coordinator-side handle: accounting queries, coordinator-shard records,
+/// and the factory for per-worker endpoints.
+pub struct Fabric {
+    shared: Arc<Shared>,
 }
 
 impl Fabric {
@@ -69,69 +113,138 @@ impl Fabric {
     }
 
     pub fn with_policy(q: usize, policy: FailurePolicy) -> Fabric {
-        let rng = Rng::new(policy.seed ^ 0xFAB);
-        Fabric {
+        let shared = Shared {
             q,
-            inbox: vec![Vec::new(); q],
-            ledger: CommLedger::new(),
             policy,
-            rng,
-            history: std::collections::HashMap::new(),
-            dropped: 0,
-            staled: 0,
-        }
+            mailboxes: (0..q).map(|_| Mutex::new(Vec::new())).collect(),
+            shards: (0..q + 1).map(|_| Mutex::new(CommLedger::new())).collect(),
+            total: AtomicUsize::new(0),
+            dropped: AtomicUsize::new(0),
+            staled: AtomicUsize::new(0),
+        };
+        Fabric { shared: Arc::new(shared) }
     }
 
     pub fn q(&self) -> usize {
-        self.q
+        self.shared.q
     }
 
-    /// Send a message; ledger records its wire cost, failures may mutate it.
+    /// One endpoint per worker.  Create them once per run: the staleness
+    /// history is endpoint-local, so a fresh endpoint forgets previous
+    /// epochs' payloads.
+    pub fn endpoints(&self) -> Vec<Endpoint> {
+        (0..self.shared.q)
+            .map(|rank| Endpoint {
+                rank,
+                shared: self.shared.clone(),
+                history: HashMap::new(),
+            })
+            .collect()
+    }
+
+    /// Record a coordinator-originated wire cost (weight sync rounds) into
+    /// the coordinator shard.
+    pub fn record(&self, epoch: usize, from: usize, to: usize, kind: &'static str, floats: usize) {
+        let q = self.shared.q;
+        self.shared.shards[q].lock().unwrap().record(epoch, from, to, kind, floats);
+        self.shared.total.fetch_add(floats, Ordering::Relaxed);
+    }
+
+    /// Total floats on the wire so far (O(1), hot-path safe).
+    pub fn total_floats(&self) -> usize {
+        self.shared.total.load(Ordering::Relaxed)
+    }
+
+    /// Messages mutated to zeros by the drop policy so far.
+    pub fn dropped(&self) -> usize {
+        self.shared.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Messages replaced by a previous epoch's payload so far.
+    pub fn staled(&self) -> usize {
+        self.shared.staled.load(Ordering::Relaxed)
+    }
+
+    /// Merge every shard (workers in rank order, then the coordinator
+    /// shard) into one ledger.  Deterministic given deterministic per-shard
+    /// contents, which sender-sharded recording guarantees.
+    pub fn merged_ledger(&self) -> CommLedger {
+        let mut out = CommLedger::new();
+        for shard in &self.shared.shards {
+            out.merge_from(&shard.lock().unwrap());
+        }
+        out
+    }
+
+    /// All mailboxes empty? (end-of-round invariant)
+    pub fn is_quiescent(&self) -> bool {
+        self.shared.mailboxes.iter().all(|m| m.lock().unwrap().is_empty())
+    }
+}
+
+/// A worker's private handle onto the fabric.  `send` and `recv_all` take
+/// `&mut self` only for the sender-local staleness history — all shared
+/// state is behind its own lock, so endpoints move freely across threads.
+pub struct Endpoint {
+    rank: usize,
+    shared: Arc<Shared>,
+    /// last payload per (from, to, kind) for staleness injection; keys are
+    /// written only by their sender, so sender-local storage is exact
+    history: HashMap<(usize, usize, MessageKind), Payload>,
+}
+
+impl Endpoint {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Send a message; the sender's ledger shard records its wire cost,
+    /// failures may mutate it.
     pub fn send(&mut self, epoch: usize, mut msg: Message) {
-        assert!(msg.to < self.q && msg.from < self.q, "bad endpoint");
-        self.ledger.record(
+        let shared = &self.shared;
+        assert!(msg.to < shared.q && msg.from < shared.q, "bad endpoint");
+        assert!(msg.from == self.rank, "endpoint {} cannot send as {}", self.rank, msg.from);
+        shared.shards[self.rank].lock().unwrap().record(
             epoch,
             msg.from,
             msg.to,
             msg.kind.ledger_tag(),
             msg.payload.wire_floats(),
         );
-        let key = (msg.from, msg.to, msg.kind);
-        if msg.kind != MessageKind::Weights {
-            let roll = self.rng.next_f64();
-            if roll < self.policy.drop_prob {
-                self.dropped += 1;
+        shared.total.fetch_add(msg.payload.wire_floats(), Ordering::Relaxed);
+        let policy = &shared.policy;
+        let injectable = msg.kind != MessageKind::Weights;
+        if injectable && policy.drop_prob + policy.stale_prob > 0.0 {
+            let roll = failure_coin(policy.seed, &msg);
+            if roll < policy.drop_prob {
+                shared.dropped.fetch_add(1, Ordering::Relaxed);
                 // dropped: receiver reconstructs zeros (empty value set)
                 msg.payload.values.iter_mut().for_each(|v| *v = 0.0);
-            } else if roll < self.policy.drop_prob + self.policy.stale_prob {
+            } else if roll < policy.drop_prob + policy.stale_prob {
+                let key = (msg.from, msg.to, msg.kind);
                 if let Some(prev) = self.history.get(&key) {
                     if prev.n == msg.payload.n && prev.values.len() == msg.payload.values.len() {
-                        self.staled += 1;
+                        shared.staled.fetch_add(1, Ordering::Relaxed);
                         msg.payload = prev.clone();
                     }
                 }
             }
         }
-        self.history.insert(key, msg.payload.clone());
-        self.inbox[msg.to].push(msg);
+        // history holds the post-failure payload (stale chains compound);
+        // skip the clone entirely when staleness can never trigger
+        if policy.stale_prob > 0.0 {
+            self.history.insert((msg.from, msg.to, msg.kind), msg.payload.clone());
+        }
+        shared.mailboxes[msg.to].lock().unwrap().push(msg);
     }
 
-    /// Drain all messages waiting for `to` (delivery order = send order).
-    pub fn recv_all(&mut self, to: usize) -> Vec<Message> {
-        std::mem::take(&mut self.inbox[to])
-    }
-
-    /// All mailboxes empty? (end-of-round invariant)
-    pub fn is_quiescent(&self) -> bool {
-        self.inbox.iter().all(|m| m.is_empty())
-    }
-
-    pub fn ledger(&self) -> &CommLedger {
-        &self.ledger
-    }
-
-    pub fn ledger_mut(&mut self) -> &mut CommLedger {
-        &mut self.ledger
+    /// Drain all messages waiting for this endpoint, sorted into the
+    /// deterministic (sender, kind, layer) order so concurrent senders
+    /// cannot perturb downstream float accumulation order.
+    pub fn recv_all(&mut self) -> Vec<Message> {
+        let mut msgs = std::mem::take(&mut *self.shared.mailboxes[self.rank].lock().unwrap());
+        msgs.sort_by_key(|m| (m.from, m.kind.sort_key()));
+        msgs
     }
 }
 
@@ -139,57 +252,137 @@ impl Fabric {
 mod tests {
     use super::*;
 
-    fn payload(vals: &[f32]) -> Payload {
-        Payload { n: vals.len(), values: vals.to_vec(), indices: None, key: 0, side: vec![], wire_override: None }
+    fn payload(vals: &[f32], key: u64) -> Payload {
+        Payload {
+            n: vals.len(),
+            values: vals.to_vec(),
+            indices: None,
+            key,
+            side: vec![],
+            wire_override: None,
+        }
+    }
+
+    fn msg(from: usize, to: usize, kind: MessageKind, vals: &[f32], key: u64) -> Message {
+        Message { from, to, kind, payload: payload(vals, key) }
     }
 
     #[test]
     fn send_recv_roundtrip_and_ledger() {
-        let mut f = Fabric::new(2);
-        f.send(0, Message { from: 0, to: 1, kind: MessageKind::Activation { layer: 0 }, payload: payload(&[1.0, 2.0]) });
+        let f = Fabric::new(2);
+        let mut eps = f.endpoints();
+        eps[0].send(0, msg(0, 1, MessageKind::Activation { layer: 0 }, &[1.0, 2.0], 7));
         assert!(!f.is_quiescent());
-        let msgs = f.recv_all(1);
+        let msgs = eps[1].recv_all();
         assert_eq!(msgs.len(), 1);
         assert_eq!(msgs[0].payload.values, vec![1.0, 2.0]);
         assert!(f.is_quiescent());
-        assert_eq!(f.ledger().total_floats(), 2);
+        assert_eq!(f.total_floats(), 2);
+        assert_eq!(f.merged_ledger().total_floats(), 2);
     }
 
     #[test]
     fn drop_policy_zeroes_payload_but_still_charges_wire() {
-        let mut f = Fabric::with_policy(2, FailurePolicy { drop_prob: 1.0, stale_prob: 0.0, seed: 1 });
-        f.send(0, Message { from: 0, to: 1, kind: MessageKind::Activation { layer: 0 }, payload: payload(&[3.0, 4.0]) });
-        let msgs = f.recv_all(1);
+        let f = Fabric::with_policy(2, FailurePolicy { drop_prob: 1.0, stale_prob: 0.0, seed: 1 });
+        let mut eps = f.endpoints();
+        eps[0].send(0, msg(0, 1, MessageKind::Activation { layer: 0 }, &[3.0, 4.0], 9));
+        let msgs = eps[1].recv_all();
         assert_eq!(msgs[0].payload.values, vec![0.0, 0.0]);
-        assert_eq!(f.dropped, 1);
-        assert_eq!(f.ledger().total_floats(), 2);
+        assert_eq!(f.dropped(), 1);
+        assert_eq!(f.total_floats(), 2);
     }
 
     #[test]
     fn stale_policy_replays_previous_epoch() {
-        let mut f = Fabric::with_policy(2, FailurePolicy { drop_prob: 0.0, stale_prob: 1.0, seed: 2 });
+        let f = Fabric::with_policy(2, FailurePolicy { drop_prob: 0.0, stale_prob: 1.0, seed: 2 });
+        let mut eps = f.endpoints();
         let kind = MessageKind::Activation { layer: 1 };
-        f.send(0, Message { from: 0, to: 1, kind, payload: payload(&[1.0]) });
-        let _ = f.recv_all(1); // first message has no history: delivered as-is
-        f.send(1, Message { from: 0, to: 1, kind, payload: payload(&[9.0]) });
-        let msgs = f.recv_all(1);
+        eps[0].send(0, msg(0, 1, kind, &[1.0], 3));
+        let _ = eps[1].recv_all(); // first message has no history: delivered as-is
+        eps[0].send(1, msg(0, 1, kind, &[9.0], 4));
+        let msgs = eps[1].recv_all();
         assert_eq!(msgs[0].payload.values, vec![1.0]);
-        assert_eq!(f.staled, 1);
+        assert_eq!(f.staled(), 1);
     }
 
     #[test]
     fn weights_messages_exempt_from_failures() {
-        let mut f = Fabric::with_policy(2, FailurePolicy { drop_prob: 1.0, stale_prob: 0.0, seed: 3 });
-        f.send(0, Message { from: 0, to: 1, kind: MessageKind::Weights, payload: payload(&[5.0]) });
-        let msgs = f.recv_all(1);
+        let f = Fabric::with_policy(2, FailurePolicy { drop_prob: 1.0, stale_prob: 0.0, seed: 3 });
+        let mut eps = f.endpoints();
+        eps[0].send(0, msg(0, 1, MessageKind::Weights, &[5.0], 1));
+        let msgs = eps[1].recv_all();
         assert_eq!(msgs[0].payload.values, vec![5.0]);
-        assert_eq!(f.dropped, 0);
+        assert_eq!(f.dropped(), 0);
     }
 
     #[test]
     #[should_panic(expected = "bad endpoint")]
     fn bad_endpoint_panics() {
-        let mut f = Fabric::new(2);
-        f.send(0, Message { from: 0, to: 5, kind: MessageKind::Weights, payload: payload(&[]) });
+        let f = Fabric::new(2);
+        let mut eps = f.endpoints();
+        eps[0].send(0, msg(0, 5, MessageKind::Weights, &[], 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot send as")]
+    fn spoofed_sender_panics() {
+        let f = Fabric::new(2);
+        let mut eps = f.endpoints();
+        eps[0].send(0, msg(1, 0, MessageKind::Weights, &[], 0));
+    }
+
+    #[test]
+    fn failure_coins_depend_on_key_not_call_order() {
+        let policy = FailurePolicy { drop_prob: 0.5, stale_prob: 0.0, seed: 17 };
+        // same messages sent in two different orders: identical outcomes
+        let run = |order: &[usize]| -> Vec<Vec<f32>> {
+            let f = Fabric::with_policy(2, policy.clone());
+            let mut eps = f.endpoints();
+            for &k in order {
+                eps[0].send(0, msg(0, 1, MessageKind::Activation { layer: k }, &[k as f32 + 1.0], k as u64));
+            }
+            eps[1].recv_all().into_iter().map(|m| m.payload.values).collect()
+        };
+        // recv_all sorts by (from, kind, layer), so both orders compare equal
+        assert_eq!(run(&[0, 1, 2, 3, 4, 5, 6, 7]), run(&[7, 3, 5, 1, 6, 0, 2, 4]));
+    }
+
+    #[test]
+    fn forward_and_backward_coins_differ_for_shared_key() {
+        // forward q->p and backward p->q reuse one compression key; their
+        // failure coins must still be independent
+        let m_fwd = msg(0, 1, MessageKind::Activation { layer: 2 }, &[1.0], 0xABCD);
+        let m_bwd = msg(1, 0, MessageKind::Gradient { layer: 2 }, &[1.0], 0xABCD);
+        assert_ne!(failure_coin(5, &m_fwd), failure_coin(5, &m_bwd));
+    }
+
+    #[test]
+    fn concurrent_sends_preserve_totals_and_determinism() {
+        let f = Fabric::new(4);
+        let eps = f.endpoints();
+        std::thread::scope(|s| {
+            for mut ep in eps {
+                s.spawn(move || {
+                    let from = ep.rank();
+                    for to in 0..4 {
+                        if to != from {
+                            ep.send(0, msg(from, to, MessageKind::Activation { layer: 0 }, &[from as f32; 3], from as u64));
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(f.total_floats(), 4 * 3 * 3);
+        let mut eps = f.endpoints();
+        for ep in eps.iter_mut() {
+            let msgs = ep.recv_all();
+            let froms: Vec<usize> = msgs.iter().map(|m| m.from).collect();
+            let mut sorted = froms.clone();
+            sorted.sort_unstable();
+            assert_eq!(froms, sorted, "drained order must be sender-sorted");
+            assert_eq!(msgs.len(), 3);
+        }
+        assert!(f.is_quiescent());
+        assert!(f.merged_ledger().verify_conservation());
     }
 }

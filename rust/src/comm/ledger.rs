@@ -72,6 +72,14 @@ impl CommLedger {
         }
         map
     }
+
+    /// Append every entry of `other` (the sharded fabric merges per-worker
+    /// ledgers through this; totals and per-epoch sums stay consistent).
+    pub fn merge_from(&mut self, other: &CommLedger) {
+        for e in other.entries() {
+            self.record(e.epoch, e.from, e.to, e.kind, e.floats);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -100,6 +108,21 @@ mod tests {
         let b = l.breakdown_by_kind();
         assert_eq!(b["fwd"], 13);
         assert_eq!(b["weights"], 7);
+    }
+
+    #[test]
+    fn merge_from_preserves_totals_and_epochs() {
+        let mut a = CommLedger::new();
+        a.record(0, 0, 1, "fwd", 10);
+        let mut b = CommLedger::new();
+        b.record(0, 1, 0, "fwd", 5);
+        b.record(2, 1, 0, "bwd", 7);
+        a.merge_from(&b);
+        assert_eq!(a.total_floats(), 22);
+        assert_eq!(a.floats_in_epoch(0), 15);
+        assert_eq!(a.floats_in_epoch(2), 7);
+        assert_eq!(a.entries().len(), 3);
+        assert!(a.verify_conservation());
     }
 
     #[test]

@@ -10,6 +10,6 @@ pub mod fabric;
 pub mod ledger;
 pub mod time_model;
 
-pub use fabric::{Fabric, FailurePolicy, Message, MessageKind};
+pub use fabric::{Endpoint, Fabric, FailurePolicy, Message, MessageKind};
 pub use ledger::{CommLedger, LedgerEntry};
 pub use time_model::LinkModel;

@@ -91,21 +91,71 @@ impl Scheduler {
         }
     }
 
+    /// Reject configurations that violate the paper's scheduler contract
+    /// (rates must be >= 1 and non-increasing in the epoch, Prop. 2) —
+    /// previously e.g. `fixed:0.5` or `linear:-3` were clamped silently.
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            Scheduler::Fixed { rate } => {
+                anyhow::ensure!(
+                    rate.is_finite() && rate >= 1.0,
+                    "fixed scheduler rate {rate} violates the rate >= 1 requirement"
+                );
+            }
+            Scheduler::Linear { slope, c_max, c_min, total } => {
+                anyhow::ensure!(
+                    slope.is_finite() && slope > 0.0,
+                    "linear scheduler slope {slope} must be > 0 (rates must be non-increasing)"
+                );
+                anyhow::ensure!(c_min >= 1.0, "linear scheduler c_min {c_min} must be >= 1");
+                anyhow::ensure!(
+                    c_max >= c_min,
+                    "linear scheduler c_max {c_max} must be >= c_min {c_min}"
+                );
+                anyhow::ensure!(total >= 1, "linear scheduler needs total >= 1 epochs");
+            }
+            Scheduler::Exponential { c_max, c_min, total } => {
+                anyhow::ensure!(c_min >= 1.0, "exp scheduler c_min {c_min} must be >= 1");
+                anyhow::ensure!(
+                    c_max >= c_min,
+                    "exp scheduler c_max {c_max} must be >= c_min {c_min}"
+                );
+                anyhow::ensure!(total >= 1, "exp scheduler needs total >= 1 epochs");
+            }
+            Scheduler::Step { c_max, c_min, every, factor } => {
+                anyhow::ensure!(
+                    factor.is_finite() && factor > 1.0,
+                    "step scheduler factor {factor} must be > 1 (rates must decrease)"
+                );
+                anyhow::ensure!(every >= 1, "step scheduler interval must be >= 1");
+                anyhow::ensure!(c_min >= 1.0, "step scheduler c_min {c_min} must be >= 1");
+                anyhow::ensure!(
+                    c_max >= c_min,
+                    "step scheduler c_max {c_max} must be >= c_min {c_min}"
+                );
+            }
+        }
+        Ok(())
+    }
+
     /// Parse config strings like "fixed:4", "linear:5", "exp", "step:30:2".
+    /// Specs that violate the non-increasing / >= 1 contract are rejected.
     pub fn parse(s: &str, total_epochs: usize) -> Result<Scheduler> {
         let parts: Vec<&str> = s.split(':').collect();
-        match parts.as_slice() {
-            ["fixed", r] => Ok(Scheduler::Fixed { rate: r.parse()? }),
-            ["linear", a] => Ok(Scheduler::paper_linear(a.parse()?, total_epochs)),
-            ["exp"] => Ok(Scheduler::Exponential { c_max: 128.0, c_min: 1.0, total: total_epochs }),
-            ["step", every, factor] => Ok(Scheduler::Step {
+        let sched = match parts.as_slice() {
+            ["fixed", r] => Scheduler::Fixed { rate: r.parse()? },
+            ["linear", a] => Scheduler::paper_linear(a.parse()?, total_epochs),
+            ["exp"] => Scheduler::Exponential { c_max: 128.0, c_min: 1.0, total: total_epochs },
+            ["step", every, factor] => Scheduler::Step {
                 c_max: 128.0,
                 c_min: 1.0,
                 every: every.parse()?,
                 factor: factor.parse()?,
-            }),
+            },
             _ => anyhow::bail!("bad scheduler spec {s:?}; use fixed:R | linear:A | exp | step:E:F"),
-        }
+        };
+        sched.validate()?;
+        Ok(sched)
     }
 }
 
@@ -187,6 +237,42 @@ mod tests {
             Scheduler::Linear { total: 100, .. }
         ));
         assert!(Scheduler::parse("bogus", 10).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_contract_violations() {
+        // sub-one fixed rate: silently clamped before, now an error
+        let err = Scheduler::parse("fixed:0.5", 10).unwrap_err().to_string();
+        assert!(err.contains(">= 1"), "{err}");
+        // negative slope would make the rate schedule non-decreasing
+        let err = Scheduler::parse("linear:-3", 100).unwrap_err().to_string();
+        assert!(err.contains("non-increasing"), "{err}");
+        assert!(Scheduler::parse("linear:0", 100).is_err());
+        // step factor must strictly decrease the rate
+        assert!(Scheduler::parse("step:10:1", 100).is_err());
+        assert!(Scheduler::parse("step:0:2", 100).is_err());
+        // valid specs still parse
+        assert!(Scheduler::parse("fixed:1", 10).is_ok());
+        assert!(Scheduler::parse("linear:5", 100).is_ok());
+        assert!(Scheduler::parse("exp", 100).is_ok());
+        assert!(Scheduler::parse("step:10:2", 100).is_ok());
+    }
+
+    #[test]
+    fn validate_checks_direct_constructions() {
+        assert!(Scheduler::Fixed { rate: 0.5 }.validate().is_err());
+        assert!(Scheduler::Fixed { rate: f32::NAN }.validate().is_err());
+        assert!(Scheduler::Fixed { rate: 4.0 }.validate().is_ok());
+        assert!(Scheduler::Linear { slope: 5.0, c_max: 0.5, c_min: 0.1, total: 10 }
+            .validate()
+            .is_err());
+        assert!(Scheduler::Linear { slope: 5.0, c_max: 64.0, c_min: 1.0, total: 10 }
+            .validate()
+            .is_ok());
+        assert!(Scheduler::Exponential { c_max: 1.0, c_min: 2.0, total: 10 }.validate().is_err());
+        assert!(Scheduler::Step { c_max: 16.0, c_min: 1.0, every: 5, factor: 2.0 }
+            .validate()
+            .is_ok());
     }
 
     #[test]

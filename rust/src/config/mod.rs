@@ -14,7 +14,7 @@
 //! ```
 
 use crate::compress::{CommMode, Scheduler};
-use crate::coordinator::{Trainer, TrainerOptions};
+use crate::coordinator::{RunMode, Trainer, TrainerOptions};
 use crate::engine::{ModelDims, WorkerEngine};
 use crate::graph::Dataset;
 use crate::partition::WorkerGraph;
@@ -46,6 +46,11 @@ pub struct TrainConfig {
     pub eval_every: usize,
     pub drop_prob: f64,
     pub stale_prob: f64,
+    /// epoch execution: parallel (thread-per-worker) | sequential
+    pub run_mode: String,
+    /// max concurrently-computing workers in parallel mode (0 = auto /
+    /// VARCO_THREADS)
+    pub threads: usize,
 }
 
 impl Default for TrainConfig {
@@ -70,6 +75,8 @@ impl Default for TrainConfig {
             eval_every: 1,
             drop_prob: 0.0,
             stale_prob: 0.0,
+            run_mode: "parallel".into(),
+            threads: 0,
         }
     }
 }
@@ -109,6 +116,8 @@ impl TrainConfig {
             "eval_every" => self.eval_every = value.parse::<usize>()?.max(1),
             "drop_prob" => self.drop_prob = value.parse()?,
             "stale_prob" => self.stale_prob = value.parse()?,
+            "run_mode" => self.run_mode = value.into(),
+            "threads" => self.threads = value.parse()?,
             _ => anyhow::bail!("unknown config key {key:?}"),
         }
         Ok(())
@@ -216,6 +225,12 @@ pub fn build_trainer_with_dataset(cfg: &TrainConfig, dataset: &Dataset) -> Resul
                     as Box<dyn WorkerEngine>
             })
             .collect(),
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => anyhow::bail!(
+            "this build does not include the pjrt engine; rebuild with `--features pjrt` \
+             (requires the xla bindings crate, see README.md)"
+        ),
+        #[cfg(feature = "pjrt")]
         "pjrt" => {
             let manifest = crate::runtime::Manifest::load(Path::new(&cfg.artifacts_dir))?;
             let tag = cfg.resolved_artifact_tag();
@@ -233,7 +248,7 @@ pub fn build_trainer_with_dataset(cfg: &TrainConfig, dataset: &Dataset) -> Resul
                 "artifact {tag} width/depth mismatch"
             );
             let runtime = crate::runtime::Runtime::cpu()?;
-            let arts = std::rc::Rc::new(runtime.load_config(&manifest, &tag)?);
+            let arts = std::sync::Arc::new(runtime.load_config(&manifest, &tag)?);
             worker_graphs
                 .iter()
                 .map(|w| {
@@ -261,6 +276,8 @@ pub fn build_trainer_with_dataset(cfg: &TrainConfig, dataset: &Dataset) -> Resul
         },
         ledger_weights: true,
         track_grad_norm: false,
+        run_mode: RunMode::parse(&cfg.run_mode)?,
+        threads: cfg.threads,
     };
     let mut trainer = Trainer::new(dataset, &partition, &worker_graphs, engines, dims, opts)?;
     trainer.report.partitioner = cfg.partitioner.clone();
@@ -338,6 +355,18 @@ mod tests {
         cfg.artifact_tag.clear();
         cfg.dataset = "karate-like".into();
         assert_eq!(cfg.resolved_artifact_tag(), "quickstart");
+    }
+
+    #[test]
+    fn run_mode_and_threads_keys() {
+        let mut cfg = TrainConfig::default();
+        cfg.set("run_mode", "sequential").unwrap();
+        cfg.set("threads", "2").unwrap();
+        assert_eq!(cfg.run_mode, "sequential");
+        assert_eq!(cfg.threads, 2);
+        // parse is deferred to build_trainer; bad modes fail there
+        cfg.set("run_mode", "bogus").unwrap();
+        assert!(RunMode::parse(&cfg.run_mode).is_err());
     }
 
     #[test]

@@ -2,6 +2,11 @@
 //! through forward/backward with compressed boundary exchanges, averages
 //! gradients (the FedAverage-style server step), applies the optimizer,
 //! and evaluates.
+//!
+//! Execution is thread-per-worker by default (`RunMode::Parallel`):
+//! worker compute proceeds concurrently and meets only at the per-layer
+//! exchange barriers, mirroring how real distributed full-graph training
+//! overlaps per-machine compute with boundary communication.
 
 pub mod checkpoint;
 pub mod eval;
@@ -9,4 +14,4 @@ pub mod trainer;
 
 pub use checkpoint::Checkpoint;
 pub use eval::FullGraphEval;
-pub use trainer::{Trainer, TrainerOptions};
+pub use trainer::{RunMode, Trainer, TrainerOptions};

@@ -16,19 +16,67 @@
 //!      parts make FedAverage equal to gradient averaging here), one
 //!      optimizer step updates the replicated weights.
 //!
+//! # Execution model
+//!
+//! Two run modes share one set of per-worker primitives ([`WorkerCtx`]):
+//!
+//! * [`RunMode::Parallel`] (default) — `run` spawns one persistent thread
+//!   per worker for the whole training run.  Workers compute forward,
+//!   loss, and backward locally, synchronizing only at the per-layer
+//!   exchange barriers; the coordinator thread performs just the server
+//!   step (gradient reduction + optimizer) and evaluation between epochs.
+//!   A counting gate bounds how many workers compute at once (the
+//!   `threads` option / `VARCO_THREADS` environment knob), so wall-clock
+//!   scales with the permitted parallelism while results stay bit-stable:
+//!   mailbox drains are sender-sorted, failure coins are key-derived, and
+//!   gradient reduction always sums in worker-rank order.
+//! * [`RunMode::Sequential`] — the historical single-thread loop, kept as
+//!   the bit-for-bit oracle (`tests/parallel_equivalence.rs` pins the two
+//!   modes to identical weights and ledger totals).
+//!
 //! At rate 1 (FullComm) this computes the exact centralized gradient, for
 //! any partition — asserted by the integration tests.
 
-use crate::comm::{Fabric, FailurePolicy, Message, MessageKind};
+use crate::comm::{Endpoint, Fabric, FailurePolicy, Message, MessageKind};
 use crate::compress::{CommMode, Compressor};
 use crate::coordinator::eval::FullGraphEval;
-use crate::engine::{ModelDims, Weights, WorkerEngine};
+use crate::engine::{LayerGrads, ModelDims, Weights, WorkerEngine};
 use crate::graph::Dataset;
 use crate::metrics::{EpochRecord, RunReport};
 use crate::optim::Optimizer;
 use crate::partition::{Partition, SendPlan, WorkerGraph};
 use crate::tensor::Matrix;
+use crate::util::parallel::Gate;
 use crate::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Barrier, Mutex, RwLock};
+
+/// How the epoch program executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunMode {
+    /// one persistent thread per worker, meeting at exchange barriers
+    Parallel,
+    /// the historical single-thread loop (equivalence oracle)
+    Sequential,
+}
+
+impl RunMode {
+    pub fn parse(s: &str) -> Result<RunMode> {
+        match s {
+            "parallel" => Ok(RunMode::Parallel),
+            "sequential" | "seq" => Ok(RunMode::Sequential),
+            _ => anyhow::bail!("unknown run mode {s:?}; known: parallel, sequential"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            RunMode::Parallel => "parallel",
+            RunMode::Sequential => "sequential",
+        }
+    }
+}
 
 /// Everything the trainer needs beyond the engines.
 pub struct TrainerOptions {
@@ -45,6 +93,11 @@ pub struct TrainerOptions {
     pub ledger_weights: bool,
     /// record ||grad||² each epoch (Prop. 1/2 diagnostics)
     pub track_grad_norm: bool,
+    /// thread-per-worker runtime or the sequential oracle
+    pub run_mode: RunMode,
+    /// max workers computing concurrently in parallel mode
+    /// (0 = `VARCO_THREADS` env var, else available parallelism)
+    pub threads: usize,
 }
 
 impl Default for TrainerOptions {
@@ -59,6 +112,8 @@ impl Default for TrainerOptions {
             failure: FailurePolicy::default(),
             ledger_weights: true,
             track_grad_norm: false,
+            run_mode: RunMode::Parallel,
+            threads: 0,
         }
     }
 }
@@ -75,9 +130,348 @@ struct WorkerData {
     n_boundary: usize,
 }
 
+/// Shared key for the (epoch, layer, from, to) channel; both the forward
+/// compression and the backward error compression derive the same index
+/// mask from it.
+fn msg_key(seed: u64, epoch: usize, layer: usize, from: usize, to: usize) -> u64 {
+    let mut k = seed ^ 0x5EED_C0DE;
+    for (mult, v) in [
+        (0x9E37_79B9_7F4A_7C15u64, epoch as u64),
+        (0xC2B2_AE3D_27D4_EB4Fu64, layer as u64),
+        (0x1656_67B1_9E37_79F9u64, from as u64),
+        (0x27D4_EB2F_1656_67C5u64, to as u64),
+    ] {
+        k = (k ^ v.wrapping_mul(mult)).rotate_left(23).wrapping_mul(mult | 1);
+    }
+    k
+}
+
+/// One worker's borrowed view of the shared immutable run state.  Both run
+/// modes drive these primitives, so the parallel path cannot drift from
+/// the sequential oracle.
+struct WorkerCtx<'a> {
+    rank: usize,
+    data: &'a [WorkerData],
+    /// (from, to) -> index into `data[from].plans`, built once in
+    /// `Trainer::new` (replaces the old O(q) scan per received message)
+    plan_idx: &'a HashMap<(usize, usize), usize>,
+    compressor: &'a dyn Compressor,
+    seed: u64,
+}
+
+impl<'a> WorkerCtx<'a> {
+    fn plan(&self, from: usize, to: usize) -> Result<&'a SendPlan> {
+        let i = *self
+            .plan_idx
+            .get(&(from, to))
+            .ok_or_else(|| anyhow::anyhow!("message without plan {from}->{to}"))?;
+        Ok(&self.data[from].plans[i])
+    }
+
+    /// Compress + send this worker's boundary rows of `h` for `layer`.
+    fn send_forward(
+        &self,
+        ep: &mut Endpoint,
+        epoch: usize,
+        layer: usize,
+        h: &Matrix,
+        rate: f32,
+        f: usize,
+    ) {
+        let q = self.rank;
+        for plan in &self.data[q].plans {
+            let mut payload = Vec::with_capacity(plan.local_rows.len() * f);
+            for &row in &plan.local_rows {
+                payload.extend_from_slice(h.row(row as usize));
+            }
+            let key = msg_key(self.seed, epoch, layer, q, plan.to);
+            let compressed = self.compressor.compress(&payload, rate, key);
+            ep.send(
+                epoch,
+                Message {
+                    from: q,
+                    to: plan.to,
+                    kind: MessageKind::Activation { layer },
+                    payload: compressed,
+                },
+            );
+        }
+    }
+
+    /// Decompress + scatter received activations into this worker's
+    /// boundary buffer (zeros where not communicated).
+    fn recv_forward(&self, msgs: Vec<Message>, f: usize) -> Result<Matrix> {
+        let p = self.rank;
+        let mut out = Matrix::zeros(self.data[p].n_boundary, f);
+        for msg in msgs {
+            let plan = self.plan(msg.from, p)?;
+            let mut flat = vec![0.0f32; msg.payload.n];
+            self.compressor.decompress(&msg.payload, &mut flat);
+            for (i, &slot) in plan.dst_slots.iter().enumerate() {
+                out.row_mut(slot as usize).copy_from_slice(&flat[i * f..(i + 1) * f]);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Return the cotangents of the received boundary rows to their owners,
+    /// in the exact element order of the forward message owner->self and
+    /// compressed with the SAME key (identical mask).
+    fn send_backward(
+        &self,
+        ep: &mut Endpoint,
+        epoch: usize,
+        layer: usize,
+        g_bnd: &Matrix,
+        rate: f32,
+        f: usize,
+    ) {
+        let p = self.rank;
+        for q in 0..self.data.len() {
+            if q == p {
+                continue;
+            }
+            let Some(&i) = self.plan_idx.get(&(q, p)) else {
+                continue;
+            };
+            let plan = &self.data[q].plans[i];
+            let mut payload = Vec::with_capacity(plan.dst_slots.len() * f);
+            for &slot in &plan.dst_slots {
+                payload.extend_from_slice(g_bnd.row(slot as usize));
+            }
+            let key = msg_key(self.seed, epoch, layer, q, p);
+            let compressed = self.compressor.compress(&payload, rate, key);
+            ep.send(
+                epoch,
+                Message {
+                    from: p,
+                    to: q,
+                    kind: MessageKind::Gradient { layer },
+                    payload: compressed,
+                },
+            );
+        }
+    }
+
+    /// Accumulate returned cotangents into this worker's local cotangent.
+    fn recv_backward(&self, msgs: Vec<Message>, g_local: &mut Matrix, f: usize) -> Result<()> {
+        let q = self.rank;
+        for msg in msgs {
+            let plan = self.plan(q, msg.from)?;
+            let mut flat = vec![0.0f32; msg.payload.n];
+            self.compressor.decompress(&msg.payload, &mut flat);
+            for (i, &row) in plan.local_rows.iter().enumerate() {
+                let dst = g_local.row_mut(row as usize);
+                for (d, &v) in dst.iter_mut().zip(&flat[i * f..(i + 1) * f]) {
+                    *d += v;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// What a worker thread hands the coordinator at the end of an epoch.
+struct WorkerOut {
+    loss_weighted: f32,
+    /// per-layer weight-gradient contribution (empty when `error`)
+    grads: Vec<LayerGrads>,
+    error: Option<crate::Error>,
+}
+
+/// Convert panics inside worker compute into ordinary errors, so a failing
+/// worker still walks the fixed barrier schedule instead of deadlocking
+/// its peers.
+fn guard<T>(f: impl FnOnce() -> Result<T>) -> Result<T> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(r) => r,
+        Err(p) => {
+            let msg = p
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            Err(anyhow::anyhow!("worker panic: {msg}"))
+        }
+    }
+}
+
+/// Run one compute section: admitted by the gate, intra-op parallelism
+/// capped to this worker's share of the thread budget, panics downgraded
+/// to errors.  Barrier waits never happen inside.
+fn compute<T>(gate: &Gate, intra: usize, f: impl FnOnce() -> Result<T>) -> Result<T> {
+    gate.with(|| crate::util::parallel::with_thread_limit(intra, || guard(f)))
+}
+
+/// One worker's epoch program (parallel mode).  The barrier schedule is a
+/// pure function of (rate, layer count) — identical on every worker, and
+/// walked to completion even after an error so the others never stall.
+#[allow(clippy::too_many_arguments)]
+fn worker_epoch(
+    epoch: usize,
+    total_train: f32,
+    ctx: &WorkerCtx<'_>,
+    engine: &mut dyn WorkerEngine,
+    endpoint: &mut Endpoint,
+    weights: &Weights,
+    comm_mode: &CommMode,
+    layer_dims: &[(usize, usize)],
+    xchg: &Barrier,
+    gate: &Gate,
+    intra: usize,
+) -> WorkerOut {
+    let rate = comm_mode.rate_at(epoch);
+    let local_norm = rate.is_none();
+    let d = &ctx.data[ctx.rank];
+    let mut err: Option<crate::Error> = None;
+    let mut lgrads: Vec<Option<LayerGrads>> = (0..layer_dims.len()).map(|_| None).collect();
+    let mut loss_weighted = 0.0f32;
+
+    // ---- forward ----
+    let mut h = d.x.clone();
+    for (l, &(fi, _fo)) in layer_dims.iter().enumerate() {
+        let h_bnd = if let Some(r) = rate {
+            if err.is_none() {
+                // an errored worker sends nothing; receivers just see fewer
+                // rows (the epoch is discarded by the coordinator anyway)
+                if let Err(e) =
+                    compute(gate, intra, || Ok(ctx.send_forward(endpoint, epoch, l, &h, r, fi)))
+                {
+                    err = Some(e);
+                }
+            }
+            xchg.wait();
+            let msgs = endpoint.recv_all(); // always drain: keeps quiescence
+            let hb = if err.is_none() {
+                match compute(gate, intra, || ctx.recv_forward(msgs, fi)) {
+                    Ok(m) => m,
+                    Err(e) => {
+                        err = Some(e);
+                        Matrix::zeros(d.n_boundary, fi)
+                    }
+                }
+            } else {
+                Matrix::zeros(d.n_boundary, fi)
+            };
+            xchg.wait();
+            hb
+        } else {
+            Matrix::zeros(d.n_boundary, fi)
+        };
+        if err.is_none() {
+            match compute(gate, intra, || engine.forward_layer(l, weights, &h, &h_bnd, local_norm))
+            {
+                Ok(next) => h = next,
+                Err(e) => err = Some(e),
+            }
+        }
+    }
+
+    // ---- loss ----
+    let mut g = Matrix::zeros(0, 0);
+    if err.is_none() {
+        match compute(gate, intra, || {
+            engine.loss_grad(&h, &d.labels, &d.m_train, &d.m_val, &d.m_test)
+        }) {
+            Ok(out) => {
+                loss_weighted = out.loss * out.count_train;
+                let mut gl = out.g_logits;
+                gl.scale(out.count_train / total_train);
+                g = gl;
+            }
+            Err(e) => err = Some(e),
+        }
+    }
+
+    // ---- backward ----
+    for l in (0..layer_dims.len()).rev() {
+        let fi = layer_dims[l].0;
+        let mut g_local = Matrix::zeros(0, 0);
+        let mut g_bnd = Matrix::zeros(0, 0);
+        if err.is_none() {
+            match compute(gate, intra, || engine.backward_layer(l, weights, &g, local_norm)) {
+                Ok((gl, gb, lg)) => {
+                    g_local = gl;
+                    g_bnd = gb;
+                    lgrads[l] = Some(lg);
+                }
+                Err(e) => err = Some(e),
+            }
+        }
+        if let Some(r) = rate {
+            if err.is_none() {
+                if let Err(e) =
+                    compute(gate, intra, || Ok(ctx.send_backward(endpoint, epoch, l, &g_bnd, r, fi)))
+                {
+                    err = Some(e);
+                }
+            }
+            xchg.wait();
+            let msgs = endpoint.recv_all();
+            if err.is_none() {
+                if let Err(e) = compute(gate, intra, || ctx.recv_backward(msgs, &mut g_local, fi))
+                {
+                    err = Some(e);
+                }
+            }
+            xchg.wait();
+        }
+        g = g_local;
+    }
+
+    let grads = if err.is_none() {
+        lgrads.into_iter().map(|o| o.expect("grads complete")).collect()
+    } else {
+        Vec::new()
+    };
+    WorkerOut { loss_weighted, grads, error: err }
+}
+
+/// Evaluate (respecting `eval_every`) and append one epoch record.
+#[allow(clippy::too_many_arguments)]
+fn push_record(
+    report: &mut RunReport,
+    eval: &FullGraphEval,
+    dims: &ModelDims,
+    weights: &Weights,
+    eval_every: usize,
+    epochs: usize,
+    comm_mode: &CommMode,
+    floats_cum: usize,
+    epoch: usize,
+    loss: f32,
+    wall_ms: f64,
+) -> Result<()> {
+    let do_eval = epoch % eval_every == 0 || epoch + 1 == epochs;
+    let ev = if do_eval {
+        eval.evaluate(dims, weights)?
+    } else if let Some(last) = report.records.last() {
+        crate::coordinator::eval::EvalResult {
+            train_acc: last.train_acc,
+            val_acc: last.val_acc,
+            test_acc: last.test_acc,
+            loss: last.loss,
+        }
+    } else {
+        eval.evaluate(dims, weights)?
+    };
+    report.records.push(EpochRecord {
+        epoch,
+        loss,
+        train_acc: ev.train_acc,
+        val_acc: ev.val_acc,
+        test_acc: ev.test_acc,
+        rate: comm_mode.rate_at(epoch),
+        floats_cum,
+        wall_ms,
+    });
+    Ok(())
+}
+
 /// The distributed trainer.
 pub struct Trainer {
     engines: Vec<Box<dyn WorkerEngine>>,
+    endpoints: Vec<Endpoint>,
     data: Vec<WorkerData>,
     pub weights: Weights,
     dims: ModelDims,
@@ -85,6 +479,7 @@ pub struct Trainer {
     fabric: Fabric,
     eval: FullGraphEval,
     total_train: f32,
+    plan_idx: HashMap<(usize, usize), usize>,
     pub grad_norm_trace: Vec<f32>,
     pub report: RunReport,
 }
@@ -103,6 +498,9 @@ impl Trainer {
         anyhow::ensure!(engines.len() == partition.q, "engine count != q");
         anyhow::ensure!(dims.f_in == dataset.f_in(), "f_in mismatch");
         anyhow::ensure!(dims.classes == dataset.classes, "classes mismatch");
+        if let CommMode::Compressed(sched) = &opts.comm_mode {
+            sched.validate()?;
+        }
         let (m_train, m_val, m_test) = dataset.split.as_f32();
         let mut data = Vec::with_capacity(partition.q);
         for wg in worker_graphs {
@@ -129,8 +527,19 @@ impl Trainer {
                 n_boundary: wg.n_boundary(),
             });
         }
+        let mut plan_idx = HashMap::new();
+        for (from, d) in data.iter().enumerate() {
+            for (i, plan) in d.plans.iter().enumerate() {
+                anyhow::ensure!(
+                    plan_idx.insert((from, plan.to), i).is_none(),
+                    "duplicate send plan {from}->{}",
+                    plan.to
+                );
+            }
+        }
         let total_train: f32 = data.iter().map(|d| d.count_train).sum();
         let fabric = Fabric::with_policy(partition.q, opts.failure.clone());
+        let endpoints = fabric.endpoints();
         let eval = FullGraphEval::new(dataset);
         let weights = Weights::glorot(&dims, opts.seed);
         let report = RunReport {
@@ -144,6 +553,7 @@ impl Trainer {
         };
         Ok(Trainer {
             engines,
+            endpoints,
             data,
             weights,
             dims,
@@ -151,6 +561,7 @@ impl Trainer {
             fabric,
             eval,
             total_train: total_train.max(1.0),
+            plan_idx,
             grad_norm_trace: Vec::new(),
             report,
         })
@@ -165,6 +576,11 @@ impl Trainer {
     pub fn set_comm_mode(&mut self, mode: CommMode) {
         self.report.algorithm = mode.label();
         self.opts.comm_mode = mode;
+    }
+
+    /// Override the run mode after construction (benches sweep it).
+    pub fn set_run_mode(&mut self, mode: RunMode) {
+        self.opts.run_mode = mode;
     }
 
     /// Toggle per-epoch ||grad|| recording (Prop. 1/2 diagnostics).
@@ -196,160 +612,62 @@ impl Trainer {
         self.eval.evaluate(&self.dims, &self.weights)
     }
 
-    pub fn ledger(&self) -> &crate::comm::CommLedger {
-        self.fabric.ledger()
+    /// Merged snapshot of every ledger shard (worker shards in rank order,
+    /// then the coordinator's weight-sync shard).
+    pub fn ledger(&self) -> crate::comm::CommLedger {
+        self.fabric.merged_ledger()
     }
 
     pub fn fabric(&self) -> &Fabric {
         &self.fabric
     }
 
-    /// Shared key for the (epoch, layer, from, to) channel; both the
-    /// forward compression and the backward error compression derive the
-    /// same index mask from it.
-    fn msg_key(&self, epoch: usize, layer: usize, from: usize, to: usize) -> u64 {
-        let mut k = self.opts.seed ^ 0x5EED_C0DE;
-        for (mult, v) in [
-            (0x9E37_79B9_7F4A_7C15u64, epoch as u64),
-            (0xC2B2_AE3D_27D4_EB4Fu64, layer as u64),
-            (0x1656_67B1_9E37_79F9u64, from as u64),
-            (0x27D4_EB2F_1656_67C5u64, to as u64),
-        ] {
-            k = (k ^ v.wrapping_mul(mult)).rotate_left(23).wrapping_mul(mult | 1);
-        }
-        k
-    }
-
-    /// Forward halo exchange for layer `l`: returns each worker's
-    /// boundary-activation matrix (zeros where not communicated).
-    fn exchange_forward(
-        &mut self,
-        epoch: usize,
-        layer: usize,
-        h: &[Matrix],
-        rate: f32,
-        f: usize,
-    ) -> Result<Vec<Matrix>> {
-        // send
-        for q in 0..self.q() {
-            for plan in &self.data[q].plans {
-                let mut payload = Vec::with_capacity(plan.local_rows.len() * f);
-                for &row in &plan.local_rows {
-                    payload.extend_from_slice(h[q].row(row as usize));
-                }
-                let key = self.msg_key(epoch, layer, q, plan.to);
-                let compressed = self.opts.compressor.compress(&payload, rate, key);
-                self.fabric.send(
-                    epoch,
-                    Message {
-                        from: q,
-                        to: plan.to,
-                        kind: MessageKind::Activation { layer },
-                        payload: compressed,
-                    },
-                );
-            }
-        }
-        // receive + scatter into boundary buffers
-        let mut out: Vec<Matrix> = (0..self.q())
-            .map(|p| Matrix::zeros(self.data[p].n_boundary, f))
-            .collect();
-        for p in 0..self.q() {
-            for msg in self.fabric.recv_all(p) {
-                let from = msg.from;
-                let plan = self.data[from]
-                    .plans
-                    .iter()
-                    .find(|pl| pl.to == p)
-                    .ok_or_else(|| anyhow::anyhow!("message without plan {from}->{p}"))?;
-                let mut flat = vec![0.0f32; msg.payload.n];
-                self.opts.compressor.decompress(&msg.payload, &mut flat);
-                for (i, &slot) in plan.dst_slots.iter().enumerate() {
-                    out[p].row_mut(slot as usize).copy_from_slice(&flat[i * f..(i + 1) * f]);
-                }
-            }
-        }
-        Ok(out)
-    }
-
-    /// Backward halo exchange for layer `l`: ships each worker's boundary
-    /// cotangents back to the owners (same key => same mask as forward)
-    /// and accumulates them into the owners' local cotangents.
-    fn exchange_backward(
-        &mut self,
-        epoch: usize,
-        layer: usize,
-        mut g_local: Vec<Matrix>,
-        g_bnd: Vec<Matrix>,
-        rate: f32,
-        f: usize,
-    ) -> Result<Vec<Matrix>> {
-        // send: worker p returns gradients for rows owned by q, in the
-        // exact element order of the forward message q->p
-        for p in 0..self.q() {
-            for q in 0..self.q() {
-                if q == p {
-                    continue;
-                }
-                let Some(plan) = self.data[q].plans.iter().find(|pl| pl.to == p) else {
-                    continue;
-                };
-                let mut payload = Vec::with_capacity(plan.dst_slots.len() * f);
-                for &slot in &plan.dst_slots {
-                    payload.extend_from_slice(g_bnd[p].row(slot as usize));
-                }
-                // SAME key as the forward message q->p at this layer
-                let key = self.msg_key(epoch, layer, q, p);
-                let compressed = self.opts.compressor.compress(&payload, rate, key);
-                self.fabric.send(
-                    epoch,
-                    Message {
-                        from: p,
-                        to: q,
-                        kind: MessageKind::Gradient { layer },
-                        payload: compressed,
-                    },
-                );
-            }
-        }
-        // receive + accumulate into local cotangents
-        for q in 0..self.q() {
-            for msg in self.fabric.recv_all(q) {
-                let from = msg.from; // = p, the consumer
-                let plan = self.data[q]
-                    .plans
-                    .iter()
-                    .find(|pl| pl.to == from)
-                    .ok_or_else(|| anyhow::anyhow!("gradient without plan {q}->{from}"))?;
-                let mut flat = vec![0.0f32; msg.payload.n];
-                self.opts.compressor.decompress(&msg.payload, &mut flat);
-                for (i, &row) in plan.local_rows.iter().enumerate() {
-                    let dst = g_local[q].row_mut(row as usize);
-                    for (d, &v) in dst.iter_mut().zip(&flat[i * f..(i + 1) * f]) {
-                        *d += v;
-                    }
-                }
-            }
-        }
-        Ok(g_local)
-    }
-
-    /// One training epoch; returns (mean train loss, grad container).
+    /// One training epoch on the sequential path; returns (mean train
+    /// loss, grad container).  Public so benches and single-step harnesses
+    /// can drive epochs directly; `run` dispatches on `RunMode`.
     pub fn train_epoch(&mut self, epoch: usize) -> Result<(f32, Weights)> {
-        let rate = self.opts.comm_mode.rate_at(epoch);
+        let Trainer {
+            engines,
+            endpoints,
+            data,
+            weights,
+            dims,
+            opts,
+            fabric,
+            grad_norm_trace,
+            total_train,
+            plan_idx,
+            ..
+        } = self;
+        let data: &[WorkerData] = data;
+        let plan_idx: &HashMap<(usize, usize), usize> = plan_idx;
+        let q = engines.len();
+        let rate = opts.comm_mode.rate_at(epoch);
         let local_norm = rate.is_none();
-        let layer_dims = self.dims.layer_dims();
-        let q = self.q();
+        let layer_dims = dims.layer_dims();
+        let seed = opts.seed;
+        let compressor: &dyn Compressor = opts.compressor.as_ref();
+        let ctx = |rank: usize| WorkerCtx { rank, data, plan_idx, compressor, seed };
 
         // ---- forward ----
-        let mut h: Vec<Matrix> = (0..q).map(|i| self.data[i].x.clone()).collect();
+        let mut h: Vec<Matrix> = (0..q).map(|i| data[i].x.clone()).collect();
         for (l, &(fi, _fo)) in layer_dims.iter().enumerate() {
-            let h_bnd = match rate {
-                Some(r) => self.exchange_forward(epoch, l, &h, r, fi)?,
-                None => (0..q).map(|p| Matrix::zeros(self.data[p].n_boundary, fi)).collect(),
+            let h_bnd: Vec<Matrix> = match rate {
+                Some(r) => {
+                    for i in 0..q {
+                        ctx(i).send_forward(&mut endpoints[i], epoch, l, &h[i], r, fi);
+                    }
+                    let mut out = Vec::with_capacity(q);
+                    for p in 0..q {
+                        let msgs = endpoints[p].recv_all();
+                        out.push(ctx(p).recv_forward(msgs, fi)?);
+                    }
+                    out
+                }
+                None => (0..q).map(|p| Matrix::zeros(data[p].n_boundary, fi)).collect(),
             };
             for i in 0..q {
-                h[i] = self.engines[i].forward_layer(l, &self.weights, &h[i], &h_bnd[i], local_norm)?;
+                h[i] = engines[i].forward_layer(l, weights, &h[i], &h_bnd[i], local_norm)?;
             }
         }
 
@@ -357,23 +675,23 @@ impl Trainer {
         let mut g: Vec<Matrix> = Vec::with_capacity(q);
         let mut loss_weighted = 0.0f32;
         for i in 0..q {
-            let d = &self.data[i];
-            let out = self.engines[i].loss_grad(&h[i], &d.labels, &d.m_train, &d.m_val, &d.m_test)?;
+            let d = &data[i];
+            let out = engines[i].loss_grad(&h[i], &d.labels, &d.m_train, &d.m_val, &d.m_test)?;
             loss_weighted += out.loss * out.count_train;
             let mut gl = out.g_logits;
-            gl.scale(out.count_train / self.total_train);
+            gl.scale(out.count_train / *total_train);
             g.push(gl);
         }
-        let mean_loss = loss_weighted / self.total_train;
+        let mean_loss = loss_weighted / *total_train;
 
         // ---- backward ----
-        let mut grad_acc = self.weights.zeros_like();
+        let mut grad_acc = weights.zeros_like();
         for l in (0..layer_dims.len()).rev() {
             let fi = layer_dims[l].0;
             let mut g_locals = Vec::with_capacity(q);
             let mut g_bnds = Vec::with_capacity(q);
             for i in 0..q {
-                let (gl, gb, lg) = self.engines[i].backward_layer(l, &self.weights, &g[i], local_norm)?;
+                let (gl, gb, lg) = engines[i].backward_layer(l, weights, &g[i], local_norm)?;
                 grad_acc.layers[l].w_self.add_assign(&lg.w_self);
                 grad_acc.layers[l].w_neigh.add_assign(&lg.w_neigh);
                 for (a, b) in grad_acc.layers[l].bias.iter_mut().zip(&lg.bias) {
@@ -382,62 +700,262 @@ impl Trainer {
                 g_locals.push(gl);
                 g_bnds.push(gb);
             }
-            g = match rate {
-                Some(r) => self.exchange_backward(epoch, l, g_locals, g_bnds, r, fi)?,
-                None => g_locals,
-            };
+            if let Some(r) = rate {
+                for p in 0..q {
+                    ctx(p).send_backward(&mut endpoints[p], epoch, l, &g_bnds[p], r, fi);
+                }
+                for i in 0..q {
+                    let msgs = endpoints[i].recv_all();
+                    ctx(i).recv_backward(msgs, &mut g_locals[i], fi)?;
+                }
+            }
+            g = g_locals;
         }
 
         // ---- server step ----
-        if self.opts.ledger_weights {
-            let p = self.weights.param_count();
+        if opts.ledger_weights {
+            let p = weights.param_count();
             for i in 0..q {
                 // worker -> server gradients, server -> worker weights
-                self.fabric.ledger_mut().record(epoch, i, 0, "weights", p);
-                self.fabric.ledger_mut().record(epoch, 0, i, "weights", p);
+                fabric.record(epoch, i, 0, "weights", p);
+                fabric.record(epoch, 0, i, "weights", p);
             }
         }
-        if self.opts.track_grad_norm {
-            self.grad_norm_trace.push(grad_acc.norm());
+        if opts.track_grad_norm {
+            grad_norm_trace.push(grad_acc.norm());
         }
-        let mut flat_w = self.weights.flatten();
+        let mut flat_w = weights.flatten();
         let flat_g = grad_acc.flatten();
-        self.opts.optimizer.step(&mut flat_w, &flat_g);
-        self.weights.set_from_flat(&flat_w);
+        opts.optimizer.step(&mut flat_w, &flat_g);
+        weights.set_from_flat(&flat_w);
         Ok((mean_loss, grad_acc))
     }
 
     /// Full training run with per-epoch evaluation; returns the report.
     pub fn run(&mut self) -> Result<RunReport> {
+        match self.opts.run_mode {
+            RunMode::Sequential => self.run_sequential(),
+            RunMode::Parallel => self.run_parallel(),
+        }
+    }
+
+    fn run_sequential(&mut self) -> Result<RunReport> {
         for epoch in 0..self.opts.epochs {
             let t0 = std::time::Instant::now();
             let (loss, _) = self.train_epoch(epoch)?;
             let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-            let do_eval = epoch % self.opts.eval_every == 0 || epoch + 1 == self.opts.epochs;
-            let ev = if do_eval {
-                self.eval.evaluate(&self.dims, &self.weights)?
-            } else if let Some(last) = self.report.records.last() {
-                crate::coordinator::eval::EvalResult {
-                    train_acc: last.train_acc,
-                    val_acc: last.val_acc,
-                    test_acc: last.test_acc,
-                    loss: last.loss,
-                }
-            } else {
-                self.eval.evaluate(&self.dims, &self.weights)?
-            };
-            self.report.records.push(EpochRecord {
+            push_record(
+                &mut self.report,
+                &self.eval,
+                &self.dims,
+                &self.weights,
+                self.opts.eval_every,
+                self.opts.epochs,
+                &self.opts.comm_mode,
+                self.fabric.total_floats(),
                 epoch,
                 loss,
-                train_acc: ev.train_acc,
-                val_acc: ev.val_acc,
-                test_acc: ev.test_acc,
-                rate: self.opts.comm_mode.rate_at(epoch),
-                floats_cum: self.fabric.ledger().total_floats(),
                 wall_ms,
-            });
+            )?;
         }
         Ok(self.report.clone())
+    }
+
+    /// The fork/join epoch program: q persistent worker threads plus this
+    /// coordinator thread.  Workers meet at `xchg` (workers only) inside
+    /// an epoch and at `sync` (workers + coordinator) on epoch edges.
+    fn run_parallel(&mut self) -> Result<RunReport> {
+        let q = self.q();
+        let epochs = self.opts.epochs;
+        if q == 0 || epochs == 0 {
+            return Ok(self.report.clone());
+        }
+        let Trainer {
+            engines,
+            endpoints,
+            data,
+            weights,
+            dims,
+            opts,
+            fabric,
+            eval,
+            total_train,
+            plan_idx,
+            grad_norm_trace,
+            report,
+        } = self;
+        let data: &[WorkerData] = data;
+        let plan_idx: &HashMap<(usize, usize), usize> = plan_idx;
+        let compressor: &dyn Compressor = opts.compressor.as_ref();
+        let seed = opts.seed;
+        let total_train = *total_train;
+        let comm_mode = opts.comm_mode.clone();
+        let layer_dims = dims.layer_dims();
+        let threads = if opts.threads == 0 {
+            crate::util::parallel::num_threads()
+        } else {
+            opts.threads
+        };
+        // engines that share non-concurrency-safe state (PJRT artifact
+        // sets) force one permit: compute serializes, threads still overlap
+        // at the exchange edges
+        let permits = if engines.iter().all(|e| e.supports_concurrency()) {
+            threads.clamp(1, q)
+        } else {
+            1
+        };
+        let gate = Gate::new(permits);
+        // split the thread budget: `permits` workers compute at once, each
+        // op fanning out to at most its share (avoids permits x threads
+        // oversubscription from nested par_chunks_mut)
+        let intra = (crate::util::parallel::num_threads() / permits).max(1);
+        let weights_lock = RwLock::new(weights.clone());
+        let slots: Vec<Mutex<Option<WorkerOut>>> = (0..q).map(|_| Mutex::new(None)).collect();
+        let sync = Barrier::new(q + 1);
+        let xchg = Barrier::new(q);
+        let abort = AtomicBool::new(false);
+
+        let run_result: Result<()> = std::thread::scope(|s| {
+            for (rank, (engine, endpoint)) in
+                engines.iter_mut().zip(endpoints.iter_mut()).enumerate()
+            {
+                let ctx = WorkerCtx { rank, data, plan_idx, compressor, seed };
+                let (sync, xchg, gate, abort, slots, weights_lock, comm_mode, layer_dims) = (
+                    &sync,
+                    &xchg,
+                    &gate,
+                    &abort,
+                    &slots,
+                    &weights_lock,
+                    &comm_mode,
+                    &layer_dims,
+                );
+                s.spawn(move || {
+                    for epoch in 0..epochs {
+                        sync.wait();
+                        if abort.load(Ordering::Acquire) {
+                            break;
+                        }
+                        let out = {
+                            let w = weights_lock.read().unwrap();
+                            worker_epoch(
+                                epoch,
+                                total_train,
+                                &ctx,
+                                &mut **engine,
+                                endpoint,
+                                &w,
+                                comm_mode,
+                                layer_dims,
+                                xchg,
+                                gate,
+                                intra,
+                            )
+                        };
+                        *slots[rank].lock().unwrap() = Some(out);
+                        sync.wait();
+                    }
+                });
+            }
+
+            // release workers still parked at the next epoch-start barrier
+            // before propagating an error (scope would deadlock otherwise)
+            let bail_early = |epoch: usize, err: crate::Error| -> crate::Error {
+                if epoch + 1 < epochs {
+                    abort.store(true, Ordering::Release);
+                    sync.wait();
+                }
+                err
+            };
+
+            for epoch in 0..epochs {
+                sync.wait(); // workers enter the epoch
+                let t0 = std::time::Instant::now();
+                sync.wait(); // workers done
+
+                let mut outs = Vec::with_capacity(q);
+                for (i, slot) in slots.iter().enumerate() {
+                    match slot.lock().unwrap().take() {
+                        Some(out) => outs.push(out),
+                        None => {
+                            return Err(bail_early(
+                                epoch,
+                                anyhow::anyhow!("worker {i} produced no result at epoch {epoch}"),
+                            ))
+                        }
+                    }
+                }
+                for (i, out) in outs.iter_mut().enumerate() {
+                    if let Some(e) = out.error.take() {
+                        return Err(bail_early(
+                            epoch,
+                            anyhow::anyhow!("worker {i} failed at epoch {epoch}: {e:#}"),
+                        ));
+                    }
+                }
+
+                // ---- server step (coordinator only) ----
+                let mut w = weights_lock.write().unwrap();
+                let mut grad_acc = w.zeros_like();
+                let mut loss_weighted = 0.0f32;
+                for out in &outs {
+                    loss_weighted += out.loss_weighted;
+                }
+                // same reduction order as the sequential oracle: per layer,
+                // worker contributions in rank order
+                for l in 0..layer_dims.len() {
+                    for out in &outs {
+                        let lg = &out.grads[l];
+                        grad_acc.layers[l].w_self.add_assign(&lg.w_self);
+                        grad_acc.layers[l].w_neigh.add_assign(&lg.w_neigh);
+                        for (a, b) in grad_acc.layers[l].bias.iter_mut().zip(&lg.bias) {
+                            *a += b;
+                        }
+                    }
+                }
+                let mean_loss = loss_weighted / total_train;
+                if opts.ledger_weights {
+                    let p = w.param_count();
+                    for i in 0..q {
+                        // worker -> server gradients, server -> worker weights
+                        fabric.record(epoch, i, 0, "weights", p);
+                        fabric.record(epoch, 0, i, "weights", p);
+                    }
+                }
+                if opts.track_grad_norm {
+                    grad_norm_trace.push(grad_acc.norm());
+                }
+                let mut flat_w = w.flatten();
+                let flat_g = grad_acc.flatten();
+                opts.optimizer.step(&mut flat_w, &flat_g);
+                w.set_from_flat(&flat_w);
+                // same timing scope as the sequential path: the whole epoch
+                // including reduction and the optimizer, excluding eval
+                let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+                let res = push_record(
+                    report,
+                    eval,
+                    dims,
+                    &w,
+                    opts.eval_every,
+                    epochs,
+                    &comm_mode,
+                    fabric.total_floats(),
+                    epoch,
+                    mean_loss,
+                    wall_ms,
+                );
+                drop(w);
+                if let Err(e) = res {
+                    return Err(bail_early(epoch, e));
+                }
+            }
+            Ok(())
+        });
+
+        *weights = weights_lock.into_inner().unwrap_or_else(|p| p.into_inner());
+        run_result?;
+        Ok(report.clone())
     }
 }
 
@@ -449,12 +967,7 @@ mod tests {
     use crate::partition::random::RandomPartitioner;
     use crate::partition::Partitioner;
 
-    fn build(
-        comm: CommMode,
-        q: usize,
-        seed: u64,
-        epochs: usize,
-    ) -> (Trainer, Dataset) {
+    fn build(comm: CommMode, q: usize, seed: u64, epochs: usize) -> (Trainer, Dataset) {
         let ds = Dataset::load("karate-like", 0, seed).unwrap();
         let dims = ModelDims { f_in: ds.f_in(), hidden: 8, classes: ds.classes, layers: 3 };
         let part = RandomPartitioner { seed }.partition(&ds.graph, q).unwrap();
@@ -550,5 +1063,39 @@ mod tests {
         t.run().unwrap();
         assert!(t.ledger().verify_conservation());
         assert!(t.fabric().is_quiescent());
+    }
+
+    #[test]
+    fn sequential_mode_still_runs() {
+        let (mut t, _) = build(CommMode::Full, 2, 8, 4);
+        t.set_run_mode(RunMode::Sequential);
+        let report = t.run().unwrap();
+        assert_eq!(report.records.len(), 4);
+        assert!(t.fabric().is_quiescent());
+    }
+
+    #[test]
+    fn trainer_rejects_invalid_scheduler() {
+        let ds = Dataset::load("karate-like", 0, 1).unwrap();
+        let dims = ModelDims { f_in: ds.f_in(), hidden: 8, classes: ds.classes, layers: 3 };
+        let part = RandomPartitioner { seed: 1 }.partition(&ds.graph, 2).unwrap();
+        let wgs = WorkerGraph::build_all(&ds.graph, &part).unwrap();
+        let engines: Vec<Box<dyn WorkerEngine>> = wgs
+            .iter()
+            .map(|w| Box::new(NativeWorkerEngine::new(w.clone(), dims)) as Box<dyn WorkerEngine>)
+            .collect();
+        let opts = TrainerOptions {
+            comm_mode: CommMode::Compressed(Scheduler::Fixed { rate: 0.5 }),
+            ..Default::default()
+        };
+        assert!(Trainer::new(&ds, &part, &wgs, engines, dims, opts).is_err());
+    }
+
+    #[test]
+    fn run_mode_parse() {
+        assert_eq!(RunMode::parse("parallel").unwrap(), RunMode::Parallel);
+        assert_eq!(RunMode::parse("sequential").unwrap(), RunMode::Sequential);
+        assert_eq!(RunMode::parse("seq").unwrap(), RunMode::Sequential);
+        assert!(RunMode::parse("turbo").is_err());
     }
 }

@@ -8,6 +8,7 @@
 //!     C API (the three-layer paper stack).
 
 pub mod native;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 use crate::tensor::Matrix;
@@ -185,12 +186,22 @@ pub struct LayerGrads {
 ///   3. `backward_layer(l, ...)` for l = L-1..0, each returning the
 ///      cotangents to propagate locally (`g_h_local`) and to ship to the
 ///      boundary owners (`g_h_bnd`).
-// Not `Send`: the PJRT engine holds C-API handles.  Workers are driven
-// sequentially by the coordinator; parallelism lives inside the ops.
-pub trait WorkerEngine {
+// `Send` so the parallel runtime can move each engine onto its worker
+// thread for the duration of a run.  Every engine is still owned (and
+// exclusively driven) by exactly one thread at a time.
+pub trait WorkerEngine: Send {
     fn name(&self) -> &'static str;
     fn n_local(&self) -> usize;
     fn n_boundary(&self) -> usize;
+
+    /// Whether several engines of this kind may run compute at the same
+    /// instant.  The parallel runtime serializes compute (one gate permit)
+    /// when any engine answers false — e.g. PJRT engines sharing one
+    /// compiled artifact set whose C-API handles are not proven
+    /// concurrency-safe.
+    fn supports_concurrency(&self) -> bool {
+        true
+    }
 
     /// One SAGE layer forward.  `h_bnd` must have `n_boundary()` rows;
     /// `local_norm` selects the locally-renormalized operator (NoComm).

@@ -18,7 +18,7 @@ use crate::runtime::{
 };
 use crate::tensor::Matrix;
 use crate::Result;
-use std::rc::Rc;
+use std::sync::Arc;
 
 struct LayerCache {
     h_local_in: Matrix,
@@ -34,7 +34,7 @@ struct WeightBuffers {
 
 /// Per-worker engine over a shared compiled artifact set.
 pub struct PjrtWorkerEngine {
-    arts: Rc<ArtifactSet>,
+    arts: Arc<ArtifactSet>,
     wg: WorkerGraph,
     /// device-resident dense blocks (uploaded once)
     s_ll: xla::PjRtBuffer,
@@ -45,8 +45,18 @@ pub struct PjrtWorkerEngine {
     cache: Vec<Option<LayerCache>>,
 }
 
+// SAFETY: Send only asserts the engine may *move* across threads.  Each
+// engine is owned and driven by exactly one thread at a time (the parallel
+// runtime pins it to its worker thread for a whole run), and the PJRT C
+// API contract makes client/executable calls thread-safe.  Concurrent use
+// of the *shared* `Arc<ArtifactSet>` is additionally ruled out at the
+// coordinator level: `supports_concurrency` below returns false, so the
+// parallel runtime's gate serializes all engine compute when any PJRT
+// engine is present — no two threads ever execute artifacts at once.
+unsafe impl Send for PjrtWorkerEngine {}
+
 impl PjrtWorkerEngine {
-    pub fn new(arts: Rc<ArtifactSet>, wg: WorkerGraph) -> Result<PjrtWorkerEngine> {
+    pub fn new(arts: Arc<ArtifactSet>, wg: WorkerGraph) -> Result<PjrtWorkerEngine> {
         let cfg = &arts.cfg;
         anyhow::ensure!(
             wg.n_local() == cfg.n_local,
@@ -115,6 +125,11 @@ impl PjrtWorkerEngine {
 impl WorkerEngine for PjrtWorkerEngine {
     fn name(&self) -> &'static str {
         "pjrt"
+    }
+
+    // the workers share one compiled artifact set; serialize compute
+    fn supports_concurrency(&self) -> bool {
+        false
     }
 
     fn n_local(&self) -> usize {

@@ -7,6 +7,7 @@
 
 pub mod hlo_stats;
 
+#[cfg(feature = "pjrt")]
 use crate::tensor::Matrix;
 use crate::util::Json;
 use crate::Result;
@@ -109,11 +110,13 @@ impl Manifest {
 }
 
 /// A compiled executable plus its expected output arity.
+#[cfg(feature = "pjrt")]
 pub struct Artifact {
     pub name: String,
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 impl Artifact {
     /// Execute with literal inputs; unpacks the tuple output.
     pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
@@ -147,6 +150,7 @@ impl Artifact {
 }
 
 /// Upload a matrix to the device.
+#[cfg(feature = "pjrt")]
 pub fn buffer_from_matrix(client: &xla::PjRtClient, m: &Matrix) -> Result<xla::PjRtBuffer> {
     client
         .buffer_from_host_buffer(&m.data, &[m.rows, m.cols], None)
@@ -154,6 +158,7 @@ pub fn buffer_from_matrix(client: &xla::PjRtClient, m: &Matrix) -> Result<xla::P
 }
 
 /// Upload a vector to the device.
+#[cfg(feature = "pjrt")]
 pub fn buffer_from_vec(client: &xla::PjRtClient, v: &[f32]) -> Result<xla::PjRtBuffer> {
     client
         .buffer_from_host_buffer(v, &[v.len()], None)
@@ -161,6 +166,7 @@ pub fn buffer_from_vec(client: &xla::PjRtClient, v: &[f32]) -> Result<xla::PjRtB
 }
 
 /// Upload labels as i32.
+#[cfg(feature = "pjrt")]
 pub fn buffer_from_labels(client: &xla::PjRtClient, labels: &[u32]) -> Result<xla::PjRtBuffer> {
     let as_i32: Vec<i32> = labels.iter().map(|&x| x as i32).collect();
     client
@@ -169,6 +175,7 @@ pub fn buffer_from_labels(client: &xla::PjRtClient, labels: &[u32]) -> Result<xl
 }
 
 /// All executables for one shape config.
+#[cfg(feature = "pjrt")]
 pub struct ArtifactSet {
     pub cfg: ManifestConfig,
     pub layer_forward: Vec<Artifact>,
@@ -177,10 +184,12 @@ pub struct ArtifactSet {
 }
 
 /// PJRT client + artifact loader.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     pub fn cpu() -> Result<Runtime> {
         let client =
@@ -228,6 +237,7 @@ impl Runtime {
 // ----------------- literal <-> tensor marshalling -----------------
 
 /// f32 matrix -> rank-2 literal.
+#[cfg(feature = "pjrt")]
 pub fn literal_from_matrix(m: &Matrix) -> Result<xla::Literal> {
     Ok(xla::Literal::vec1(&m.data)
         .reshape(&[m.rows as i64, m.cols as i64])
@@ -235,17 +245,20 @@ pub fn literal_from_matrix(m: &Matrix) -> Result<xla::Literal> {
 }
 
 /// f32 slice -> rank-1 literal.
+#[cfg(feature = "pjrt")]
 pub fn literal_from_vec(v: &[f32]) -> xla::Literal {
     xla::Literal::vec1(v)
 }
 
 /// u32 labels -> i32 rank-1 literal.
+#[cfg(feature = "pjrt")]
 pub fn literal_from_labels(labels: &[u32]) -> xla::Literal {
     let as_i32: Vec<i32> = labels.iter().map(|&x| x as i32).collect();
     xla::Literal::vec1(&as_i32)
 }
 
 /// rank-2 f32 literal -> matrix.
+#[cfg(feature = "pjrt")]
 pub fn matrix_from_literal(lit: &xla::Literal) -> Result<Matrix> {
     let shape = lit.array_shape().map_err(|e| anyhow::anyhow!("shape: {e:?}"))?;
     let dims = shape.dims();
@@ -255,6 +268,7 @@ pub fn matrix_from_literal(lit: &xla::Literal) -> Result<Matrix> {
 }
 
 /// scalar f32 literal.
+#[cfg(feature = "pjrt")]
 pub fn scalar_from_literal(lit: &xla::Literal) -> Result<f32> {
     lit.to_vec::<f32>()
         .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?
@@ -268,6 +282,7 @@ mod tests {
     use super::*;
     use crate::util::testing::TempDir;
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_matrix_roundtrip() {
         let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);

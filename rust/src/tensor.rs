@@ -86,7 +86,7 @@ impl Matrix {
         let (k, m, n) = (self.rows, self.cols, other.cols);
         let mut out = Matrix::zeros(m, n);
         // Accumulate thread-local partials over row slabs of k, then reduce.
-        let nt = parallel::num_threads().min(k.max(1));
+        let nt = parallel::effective_threads().min(k.max(1));
         let partials: Vec<Matrix> = parallel::par_map(nt, |t| {
             let mut acc = Matrix::zeros(m, n);
             let lo = k * t / nt;

@@ -2,9 +2,11 @@
 //!
 //! `par_chunks_mut` splits a mutable slice into per-thread chunk groups and
 //! runs the body on `std::thread::scope` threads.  Thread count defaults to
-//! available parallelism, overridable with VARCO_THREADS.
+//! available parallelism, overridable with VARCO_THREADS.  `Gate` is the
+//! counting semaphore the parallel worker runtime uses to bound how many
+//! workers *compute* at once (threads stay parked, not destroyed).
 
-use std::sync::OnceLock;
+use std::sync::{Condvar, Mutex, OnceLock};
 
 /// Number of worker threads to use.
 pub fn num_threads() -> usize {
@@ -19,6 +21,42 @@ pub fn num_threads() -> usize {
     })
 }
 
+thread_local! {
+    /// Per-thread intra-op cap; 0 means "no override, use the global".
+    static THREAD_LIMIT: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+}
+
+/// Thread budget the data-parallel helpers actually use on this thread:
+/// the `with_thread_limit` override when set, else `num_threads`.
+pub fn effective_threads() -> usize {
+    let limit = THREAD_LIMIT.with(|c| c.get());
+    if limit == 0 {
+        num_threads()
+    } else {
+        limit
+    }
+}
+
+struct LimitGuard(usize);
+
+impl Drop for LimitGuard {
+    fn drop(&mut self) {
+        THREAD_LIMIT.with(|c| c.set(self.0));
+    }
+}
+
+/// Run `f` with this thread's intra-op parallelism capped at `limit`.
+///
+/// The parallel trainer runs several workers' tensor ops concurrently;
+/// without a cap each op would fan out to `num_threads` scoped threads and
+/// the machine would host workers x threads compute threads.  Wrapping a
+/// worker's compute section here splits the global budget instead.
+pub fn with_thread_limit<T>(limit: usize, f: impl FnOnce() -> T) -> T {
+    let prev = THREAD_LIMIT.with(|c| c.replace(limit.max(1)));
+    let _restore = LimitGuard(prev);
+    f()
+}
+
 /// Run `f(chunk_index, chunk)` over `data.chunks_mut(chunk)` using scoped
 /// threads.  `chunk_index` is the index of the chunk (i.e. row when
 /// `chunk == row_len`), chunks are distributed contiguously.
@@ -28,7 +66,7 @@ where
 {
     assert!(chunk > 0);
     let n_chunks = data.len().div_ceil(chunk);
-    let threads = num_threads().min(n_chunks.max(1));
+    let threads = effective_threads().min(n_chunks.max(1));
     if threads <= 1 || n_chunks <= 1 {
         for (i, c) in data.chunks_mut(chunk).enumerate() {
             f(i, c);
@@ -55,7 +93,7 @@ pub fn par_map<T: Send, F>(n: usize, f: F) -> Vec<T>
 where
     F: Fn(usize) -> T + Sync,
 {
-    let threads = num_threads().min(n.max(1));
+    let threads = effective_threads().min(n.max(1));
     if threads <= 1 || n <= 1 {
         return (0..n).map(f).collect();
     }
@@ -72,6 +110,48 @@ where
         }
     });
     out.into_iter().map(|o| o.expect("all slots filled")).collect()
+}
+
+/// Counting semaphore bounding concurrent compute sections.
+///
+/// The thread-per-worker trainer keeps all `q` worker threads alive for
+/// barrier synchronization but lets only `permits` of them execute compute
+/// at any instant (the `VARCO_THREADS` / `threads` knob).  Callers must
+/// never hold a permit across a barrier wait — `with` encloses exactly one
+/// compute closure, so the invariant holds by construction.
+pub struct Gate {
+    permits: Mutex<usize>,
+    cv: Condvar,
+}
+
+/// RAII permit: returned to the gate on drop (including unwinds).
+struct Permit<'a>(&'a Gate);
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        let mut p = self.0.permits.lock().unwrap();
+        *p += 1;
+        self.0.cv.notify_one();
+    }
+}
+
+impl Gate {
+    pub fn new(permits: usize) -> Gate {
+        assert!(permits >= 1, "gate needs at least one permit");
+        Gate { permits: Mutex::new(permits), cv: Condvar::new() }
+    }
+
+    /// Run `f` while holding one permit.
+    pub fn with<T>(&self, f: impl FnOnce() -> T) -> T {
+        let mut p = self.permits.lock().unwrap();
+        while *p == 0 {
+            p = self.cv.wait(p).unwrap();
+        }
+        *p -= 1;
+        drop(p);
+        let _permit = Permit(self);
+        f()
+    }
 }
 
 #[cfg(test)]
@@ -118,5 +198,67 @@ mod tests {
     fn par_map_zero_and_one() {
         assert!(par_map(0, |i| i).is_empty());
         assert_eq!(par_map(1, |i| i + 9), vec![9]);
+    }
+
+    #[test]
+    fn thread_limit_overrides_and_restores() {
+        assert_eq!(effective_threads(), num_threads());
+        let inner = with_thread_limit(2, || {
+            // nested override narrows further, then restores to 2
+            let nested = with_thread_limit(1, effective_threads);
+            assert_eq!(nested, 1);
+            effective_threads()
+        });
+        assert_eq!(inner, 2);
+        assert_eq!(effective_threads(), num_threads());
+        // zero is clamped to one, not "no override"
+        assert_eq!(with_thread_limit(0, effective_threads), 1);
+    }
+
+    #[test]
+    fn thread_limit_is_per_thread() {
+        with_thread_limit(1, || {
+            let seen = std::thread::scope(|s| {
+                s.spawn(effective_threads).join().unwrap()
+            });
+            // a fresh thread is not affected by this thread's cap
+            assert_eq!(seen, num_threads());
+            assert_eq!(effective_threads(), 1);
+        });
+    }
+
+    #[test]
+    fn gate_bounds_concurrency() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let gate = Gate::new(2);
+        let live = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let (gate, live, peak) = (&gate, &live, &peak);
+                s.spawn(move || {
+                    for _ in 0..50 {
+                        gate.with(|| {
+                            let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                            peak.fetch_max(now, Ordering::SeqCst);
+                            std::thread::yield_now();
+                            live.fetch_sub(1, Ordering::SeqCst);
+                        });
+                    }
+                });
+            }
+        });
+        assert!(peak.load(Ordering::SeqCst) <= 2, "peak {}", peak.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn gate_returns_permit_on_unwind() {
+        let gate = Gate::new(1);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            gate.with(|| panic!("boom"));
+        }));
+        assert!(r.is_err());
+        // permit restored: this would deadlock otherwise
+        assert_eq!(gate.with(|| 42), 42);
     }
 }

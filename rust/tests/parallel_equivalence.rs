@@ -1,0 +1,156 @@
+//! The thread-per-worker runtime is a pure performance refactor: for any
+//! communication mode, failure policy, and thread budget it must reproduce
+//! the sequential oracle's training trajectory — same weights, same ledger
+//! float totals, same failure-injection counts — because
+//!
+//!  * mailbox drains are sorted into sender order,
+//!  * failure coins are derived from message keys, not RNG call order,
+//!  * gradient reduction always sums worker contributions in rank order.
+
+use varco::comm::FailurePolicy;
+use varco::compress::{CommMode, Scheduler};
+use varco::coordinator::{RunMode, Trainer, TrainerOptions};
+use varco::engine::native::NativeWorkerEngine;
+use varco::engine::{ModelDims, WorkerEngine};
+use varco::graph::Dataset;
+use varco::partition::{Partitioner, WorkerGraph};
+
+fn build(
+    comm: CommMode,
+    mode: RunMode,
+    threads: usize,
+    failure: FailurePolicy,
+    q: usize,
+    epochs: usize,
+) -> Trainer {
+    let ds = Dataset::load("karate-like", 0, 7).unwrap();
+    let dims = ModelDims { f_in: ds.f_in(), hidden: 8, classes: ds.classes, layers: 3 };
+    let part = varco::partition::random::RandomPartitioner { seed: 3 }
+        .partition(&ds.graph, q)
+        .unwrap();
+    let wgs = WorkerGraph::build_all(&ds.graph, &part).unwrap();
+    let engines: Vec<Box<dyn WorkerEngine>> = wgs
+        .iter()
+        .map(|w| Box::new(NativeWorkerEngine::new(w.clone(), dims)) as Box<dyn WorkerEngine>)
+        .collect();
+    let opts = TrainerOptions {
+        comm_mode: comm,
+        epochs,
+        seed: 11,
+        optimizer: Box::new(varco::optim::Adam::new(0.02)),
+        run_mode: mode,
+        threads,
+        failure,
+        ..Default::default()
+    };
+    Trainer::new(&ds, &part, &wgs, engines, dims, opts).unwrap()
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn parallel_matches_sequential_weights_and_ledger() {
+    let modes = [
+        CommMode::Full,
+        CommMode::None,
+        CommMode::Compressed(Scheduler::Fixed { rate: 4.0 }),
+        CommMode::Compressed(Scheduler::Linear {
+            slope: 2.0,
+            c_max: 16.0,
+            c_min: 1.0,
+            total: 8,
+        }),
+    ];
+    for comm in modes {
+        let label = comm.label();
+        let mut ts = build(comm.clone(), RunMode::Sequential, 0, FailurePolicy::default(), 4, 8);
+        let mut tp = build(comm, RunMode::Parallel, 0, FailurePolicy::default(), 4, 8);
+        let rs = ts.run().unwrap();
+        let rp = tp.run().unwrap();
+
+        let diff = max_abs_diff(&ts.weights.flatten(), &tp.weights.flatten());
+        assert!(diff <= 1e-6, "{label}: weight divergence {diff}");
+        for (a, b) in rs.records.iter().zip(&rp.records) {
+            assert!(
+                (a.loss - b.loss).abs() <= 1e-6,
+                "{label} epoch {}: loss {} vs {}",
+                a.epoch,
+                a.loss,
+                b.loss
+            );
+            assert_eq!(a.floats_cum, b.floats_cum, "{label} epoch {}", a.epoch);
+        }
+        // identical ledger float totals, overall and per kind
+        assert_eq!(
+            ts.ledger().total_floats(),
+            tp.ledger().total_floats(),
+            "{label}: ledger totals"
+        );
+        assert_eq!(
+            ts.ledger().breakdown_by_kind(),
+            tp.ledger().breakdown_by_kind(),
+            "{label}: ledger breakdown"
+        );
+        assert_eq!(
+            ts.ledger().cumulative_by_epoch(),
+            tp.ledger().cumulative_by_epoch(),
+            "{label}: per-epoch ledger"
+        );
+        assert!(ts.fabric().is_quiescent() && tp.fabric().is_quiescent());
+    }
+}
+
+#[test]
+fn thread_budget_does_not_change_results() {
+    let comm = CommMode::Compressed(Scheduler::Fixed { rate: 2.0 });
+    let mut base = build(comm.clone(), RunMode::Parallel, 1, FailurePolicy::default(), 4, 6);
+    base.run().unwrap();
+    let w1 = base.weights.flatten();
+    for threads in [2usize, 4, 16] {
+        let mut t = build(comm.clone(), RunMode::Parallel, threads, FailurePolicy::default(), 4, 6);
+        t.run().unwrap();
+        // bit-for-bit: the reduction order is fixed regardless of interleaving
+        assert_eq!(w1, t.weights.flatten(), "threads={threads}");
+        assert_eq!(base.ledger().total_floats(), t.ledger().total_floats());
+    }
+}
+
+#[test]
+fn failure_injection_is_deterministic_under_concurrency() {
+    let comm = CommMode::Compressed(Scheduler::Fixed { rate: 2.0 });
+    let failure = FailurePolicy { drop_prob: 0.3, stale_prob: 0.3, seed: 5 };
+
+    let mut ts = build(comm.clone(), RunMode::Sequential, 0, failure.clone(), 4, 8);
+    ts.run().unwrap();
+    assert!(
+        ts.fabric().dropped() > 0 && ts.fabric().staled() > 0,
+        "policy should trigger: dropped {} staled {}",
+        ts.fabric().dropped(),
+        ts.fabric().staled()
+    );
+
+    // parallel run: same coins land on the same messages, any interleaving
+    for _ in 0..2 {
+        let mut tp = build(comm.clone(), RunMode::Parallel, 0, failure.clone(), 4, 8);
+        tp.run().unwrap();
+        assert_eq!(ts.fabric().dropped(), tp.fabric().dropped(), "drop count");
+        assert_eq!(ts.fabric().staled(), tp.fabric().staled(), "stale count");
+        let diff = max_abs_diff(&ts.weights.flatten(), &tp.weights.flatten());
+        assert!(diff <= 1e-6, "weights diverged under failures: {diff}");
+        assert_eq!(ts.ledger().total_floats(), tp.ledger().total_floats());
+    }
+}
+
+#[test]
+fn parallel_full_comm_still_learns() {
+    let mut t = build(CommMode::Full, RunMode::Parallel, 0, FailurePolicy::default(), 2, 60);
+    let report = t.run().unwrap();
+    assert!(
+        report.final_test_accuracy() > 0.8,
+        "acc {}",
+        report.final_test_accuracy()
+    );
+}

@@ -6,7 +6,7 @@
 //! `cargo test` still passes).
 
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::Arc;
 use varco::compress::{CommMode, Scheduler};
 use varco::coordinator::{Trainer, TrainerOptions};
 use varco::engine::native::NativeWorkerEngine;
@@ -29,11 +29,11 @@ fn artifacts_dir() -> Option<&'static Path> {
     }
 }
 
-fn setup() -> Option<(Dataset, Vec<WorkerGraph>, ModelDims, Rc<varco::runtime::ArtifactSet>)> {
+fn setup() -> Option<(Dataset, Vec<WorkerGraph>, ModelDims, Arc<varco::runtime::ArtifactSet>)> {
     let dir = artifacts_dir()?;
     let manifest = Manifest::load(dir).unwrap();
     let runtime = Runtime::cpu().unwrap();
-    let arts = Rc::new(runtime.load_config(&manifest, TAG).unwrap());
+    let arts = Arc::new(runtime.load_config(&manifest, TAG).unwrap());
     let cfg = &arts.cfg;
     let ds = Dataset::load("karate-like", 0, 3).unwrap();
     assert_eq!(ds.n(), cfg.n_total, "dataset/artifact mismatch");

@@ -1,0 +1,155 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The registry is unreachable in this tree, so this shim implements exactly
+//! the subset `varco` uses: [`Error`], [`Result`], and the `anyhow!` /
+//! `bail!` / `ensure!` macros, with a blanket `From<E: std::error::Error>`
+//! so `?` works on std error types.  Like the real `anyhow::Error`, this
+//! type deliberately does **not** implement `std::error::Error` — that is
+//! what keeps the blanket `From` impl coherent with `impl From<T> for T`.
+//!
+//! Swap for the real `anyhow = "1"` in Cargo.toml when a registry is
+//! reachable; no call site changes are required.
+
+use std::fmt;
+
+/// A string-backed error with a pre-rendered cause chain.
+pub struct Error {
+    msg: String,
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build from any displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string(), chain: Vec::new() }
+    }
+
+    /// The error chain, outermost message first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        std::iter::once(self.msg.as_str()).chain(self.chain.iter().map(String::as_str))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        // `{:#}` renders the whole chain, matching real anyhow
+        if f.alternate() {
+            for cause in &self.chain {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if !self.chain.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let msg = e.to_string();
+        let mut chain = Vec::new();
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { msg, chain }
+    }
+}
+
+/// `anyhow`-style result alias with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::Error::msg(format!($($arg)*)) };
+}
+
+/// Return early with an [`Error`] built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_err() -> Result<i32> {
+        let n: i32 = "not-a-number".parse()?;
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = parse_err().unwrap_err();
+        assert!(e.to_string().contains("invalid digit"), "{e}");
+    }
+
+    #[test]
+    fn macros_format_and_bail() {
+        fn inner(x: i32) -> Result<()> {
+            ensure!(x > 0, "x {x} must be positive");
+            if x > 10 {
+                bail!("x {x} too large");
+            }
+            Ok(())
+        }
+        assert!(inner(5).is_ok());
+        assert_eq!(inner(-1).unwrap_err().to_string(), "x -1 must be positive");
+        assert_eq!(inner(11).unwrap_err().to_string(), "x 11 too large");
+        let e = anyhow!("code {}", 7);
+        assert_eq!(e.to_string(), "code 7");
+    }
+
+    #[test]
+    fn ensure_without_message_names_the_condition() {
+        fn inner() -> Result<()> {
+            ensure!(1 + 1 == 3);
+            Ok(())
+        }
+        assert!(inner().unwrap_err().to_string().contains("1 + 1 == 3"));
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn takes<T: Send + Sync + 'static>(_: T) {}
+        takes(anyhow!("x"));
+    }
+
+    #[test]
+    fn alternate_format_renders_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "disk on fire");
+        let e = Error::from(io);
+        assert_eq!(format!("{e}"), "disk on fire");
+        assert_eq!(e.chain().count(), 1);
+    }
+}
