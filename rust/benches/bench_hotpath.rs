@@ -1,0 +1,157 @@
+//! Hot-path kernel bench: per-kernel per_iter_us at intra-op thread
+//! budgets 1 and 4, plus end-to-end epoch wall_ms at worker budgets
+//! VARCO_THREADS ∈ {1, 4} — written to `BENCH_hotpath.json` at the repo
+//! root so the perf trajectory accumulates across PRs (CI uploads the file
+//! as a workflow artifact).
+//!
+//! Shapes follow the grid-scale configuration (synth-arxiv n=4096, q=4,
+//! hidden up to 128): large enough that cache behaviour, not fixed
+//! overhead, dominates.  Intra-op thread budgets are applied with
+//! `util::parallel::with_thread_limit`, the same mechanism the parallel
+//! trainer uses to split its budget, so the numbers transfer.
+
+#[path = "harness.rs"]
+#[allow(dead_code)]
+mod harness;
+
+use varco::config::{build_trainer_with_dataset, TrainConfig};
+use varco::coordinator::RunMode;
+use varco::graph::Dataset;
+use varco::partition::{by_name, WorkerGraph};
+use varco::tensor::Matrix;
+use varco::util::parallel::with_thread_limit;
+use varco::util::{Json, Rng};
+
+const NODES: usize = 4096;
+const Q: usize = 4;
+const F: usize = 128;
+
+fn kernel_entry(name: &str, threads: usize, m: &harness::Measurement) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("threads", Json::num(threads as f64)),
+        ("per_iter_us", Json::num(m.per_iter_us())),
+    ])
+}
+
+fn epoch_wall_ms(threads: usize, ds: &Dataset, epochs: usize) -> f64 {
+    let cfg = TrainConfig {
+        dataset: ds.name.clone(),
+        nodes: NODES,
+        q: Q,
+        partitioner: "random".into(),
+        comm: "fixed:8".into(),
+        engine: "native".into(),
+        epochs,
+        hidden: 64,
+        eval_every: usize::MAX - 1,
+        run_mode: RunMode::Parallel.label().into(),
+        threads,
+        ..Default::default()
+    };
+    let mut trainer = build_trainer_with_dataset(&cfg, ds).unwrap();
+    let report = trainer.run().unwrap();
+    // skip the cold first epoch (thread spawn, arena warmup) when possible
+    let timed: Vec<f64> = report.records.iter().skip(1).map(|r| r.wall_ms).collect();
+    let timed = if timed.is_empty() {
+        report.records.iter().map(|r| r.wall_ms).collect()
+    } else {
+        timed
+    };
+    timed.iter().sum::<f64>() / timed.len() as f64
+}
+
+fn main() {
+    // pin the intra-op pool before the first tensor op caches it: kernel
+    // thread budgets below are then controlled purely by with_thread_limit
+    std::env::set_var("VARCO_THREADS", "1");
+    let budget = harness::budget();
+    let epochs = std::env::var("VARCO_BENCH_EPOCHS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4usize);
+
+    let ds = Dataset::load("synth-arxiv", NODES, 0).unwrap();
+    let part = by_name("random", 0).unwrap().partition(&ds.graph, Q).unwrap();
+    let wgs = WorkerGraph::build_all(&ds.graph, &part).unwrap();
+    let wg = &wgs[0];
+    let nl = wg.n_local();
+    let mut rng = Rng::new(1);
+
+    let a = Matrix::from_fn(nl, F, |_, _| rng.next_normal());
+    let w = Matrix::from_fn(F, F, |_, _| rng.next_normal());
+    let b_rows = Matrix::from_fn(F, F, |_, _| rng.next_normal());
+    let x_ll = Matrix::from_fn(wg.s_ll.cols, F, |_, _| rng.next_normal());
+
+    let mut kernels = Vec::new();
+    for threads in [1usize, 4] {
+        harness::section(&format!("kernels, {threads} intra-op thread(s)"));
+        with_thread_limit(threads, || {
+            let m = harness::bench(&format!("matmul {nl}x{F} @ {F}x{F}"), budget, || {
+                std::hint::black_box(a.matmul(&w));
+            });
+            kernels.push(kernel_entry("matmul", threads, &m));
+
+            let m = harness::bench(&format!("matmul_nt {nl}x{F} @ ({F}x{F})^T"), budget, || {
+                std::hint::black_box(a.matmul_nt(&b_rows));
+            });
+            kernels.push(kernel_entry("matmul_nt", threads, &m));
+
+            let m = harness::bench(&format!("t_matmul ({nl}x{F})^T @ {nl}x{F}"), budget, || {
+                std::hint::black_box(a.t_matmul(&a));
+            });
+            kernels.push(kernel_entry("t_matmul", threads, &m));
+
+            let mut out = Matrix::zeros(wg.s_ll.rows, F);
+            let m = harness::bench(&format!("spmm_into S_ll@H (n={nl}, F={F})"), budget, || {
+                out.data.fill(0.0);
+                wg.s_ll.spmm_into(&x_ll, &mut out);
+                std::hint::black_box(out.data[0]);
+            });
+            kernels.push(kernel_entry("spmm_into", threads, &m));
+
+            let y = &a;
+            let mut out_t = Matrix::zeros(wg.s_ll.cols, F);
+            let m = harness::bench(&format!("spmm_t_into S_ll^T@G (n={nl}, F={F})"), budget, || {
+                out_t.data.fill(0.0);
+                wg.s_ll.spmm_t_into(y, &mut out_t);
+                std::hint::black_box(out_t.data[0]);
+            });
+            kernels.push(kernel_entry("spmm_t_into", threads, &m));
+        });
+    }
+
+    harness::section("epoch wall time (parallel runtime, q=4, comm=fixed:8)");
+    let mut epoch_entries = Vec::new();
+    for threads in [1usize, 4] {
+        let ms = epoch_wall_ms(threads, &ds, epochs);
+        println!(
+            "{:<44} {:>10.1} ms/epoch",
+            format!("parallel VARCO_THREADS={threads}"),
+            ms
+        );
+        epoch_entries.push(Json::obj(vec![
+            ("varco_threads", Json::num(threads as f64)),
+            ("wall_ms", Json::num(ms)),
+        ]));
+    }
+
+    let doc = Json::obj(vec![
+        ("schema", Json::str("varco-hotpath-bench/1")),
+        ("generated_by", Json::str("cargo bench --bench bench_hotpath")),
+        (
+            "config",
+            Json::obj(vec![
+                ("dataset", Json::str("synth-arxiv")),
+                ("nodes", Json::num(NODES as f64)),
+                ("q", Json::num(Q as f64)),
+                ("feature_width", Json::num(F as f64)),
+                ("epochs_timed", Json::num(epochs as f64)),
+            ]),
+        ),
+        ("kernels", Json::Arr(kernels)),
+        ("epoch", Json::Arr(epoch_entries)),
+    ]);
+    std::fs::write("BENCH_hotpath.json", doc.to_string_pretty() + "\n").unwrap();
+    println!("\nwrote BENCH_hotpath.json");
+}

@@ -39,5 +39,25 @@ fn main() {
             m_dense.throughput(2.0 * (dense.rows * dense.cols * f) as f64) / 1e9,
             m_dense.median.as_secs_f64() / m_sparse.median.as_secs_f64()
         );
+
+        // backward direction: the banded transpose-SpMM vs the dense oracle
+        harness::section(&format!("S_llᵀ @ G  (n_local={}, F={f})", wg.n_local()));
+        let g = Matrix::from_fn(wg.s_ll.rows, f, |_, _| rng.next_normal());
+        let mut out_t = Matrix::zeros(wg.s_ll.cols, f);
+        let m_t = harness::bench("sparse spmm_t", budget, || {
+            out_t.data.fill(0.0);
+            wg.s_ll.spmm_t_into(&g, &mut out_t);
+            std::hint::black_box(out_t.data[0]);
+        });
+        let m_t_dense = harness::bench("dense t_matmul", budget, || {
+            let o = dense.t_matmul(&g);
+            std::hint::black_box(o.data[0]);
+        });
+        println!(
+            "    -> sparse {:.2} GFLOP/s, dense {:.2} GFLOP/s, speedup {:.1}x",
+            m_t.throughput(2.0 * nnz as f64 * f as f64) / 1e9,
+            m_t_dense.throughput(2.0 * (dense.rows * dense.cols * f) as f64) / 1e9,
+            m_t_dense.median.as_secs_f64() / m_t.median.as_secs_f64()
+        );
     }
 }

@@ -22,8 +22,12 @@ impl Compressor for QuantizeCompressor {
         if x.is_empty() {
             return Payload { n: 0, values: vec![], indices: None, key, side: vec![0.0, 0.0, bits as f32], wire_override: None };
         }
-        let lo = x.iter().copied().fold(f32::INFINITY, f32::min);
-        let hi = x.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        // single fused pass over x for both extrema (was two separate folds)
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &v in x {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
         let levels = ((1u64 << bits) - 1) as f32;
         let scale = if hi > lo { levels / (hi - lo) } else { 0.0 };
         // Quantized codes stay f32 in simulation; the wire accounting

@@ -3,7 +3,7 @@
 //! cost relative to the paper's shared-key subset at equal K.
 
 use super::{kept_count, Compressor, Payload};
-use crate::util::argsort_desc;
+use crate::util::top_m_indices;
 
 pub struct TopKCompressor;
 
@@ -15,8 +15,10 @@ impl Compressor for TopKCompressor {
     fn compress(&self, x: &[f32], rate: f32, key: u64) -> Payload {
         let m = kept_count(x.len(), rate);
         let mags: Vec<f32> = x.iter().map(|v| v.abs()).collect();
-        let mut idx: Vec<u32> = argsort_desc(&mags)[..m].iter().map(|&i| i as u32).collect();
-        idx.sort_unstable(); // canonical order for determinism
+        // O(n) partial selection; `top_m_indices` returns the same set as
+        // the old full argsort (ties keep the lower index), already in the
+        // canonical ascending-index order the wire format requires
+        let idx = top_m_indices(&mags, m);
         let values = idx.iter().map(|&i| x[i as usize]).collect();
         Payload { n: x.len(), values, indices: Some(idx), key, side: vec![], wire_override: None }
     }

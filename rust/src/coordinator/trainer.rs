@@ -47,6 +47,7 @@ use crate::optim::Optimizer;
 use crate::partition::{Partition, SendPlan, WorkerGraph};
 use crate::tensor::Matrix;
 use crate::util::parallel::Gate;
+use crate::util::Workspace;
 use crate::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -169,9 +170,12 @@ impl<'a> WorkerCtx<'a> {
     }
 
     /// Compress + send this worker's boundary rows of `h` for `layer`.
+    /// The payload staging buffer comes from the worker's workspace, so
+    /// steady-state sends do not allocate.
     fn send_forward(
         &self,
         ep: &mut Endpoint,
+        ws: &mut Workspace,
         epoch: usize,
         layer: usize,
         h: &Matrix,
@@ -179,8 +183,10 @@ impl<'a> WorkerCtx<'a> {
         f: usize,
     ) {
         let q = self.rank;
+        let mut payload = ws.take_empty();
         for plan in &self.data[q].plans {
-            let mut payload = Vec::with_capacity(plan.local_rows.len() * f);
+            payload.clear();
+            payload.reserve(plan.local_rows.len() * f);
             for &row in &plan.local_rows {
                 payload.extend_from_slice(h.row(row as usize));
             }
@@ -196,21 +202,27 @@ impl<'a> WorkerCtx<'a> {
                 },
             );
         }
+        ws.put(payload);
     }
 
     /// Decompress + scatter received activations into this worker's
-    /// boundary buffer (zeros where not communicated).
-    fn recv_forward(&self, msgs: Vec<Message>, f: usize) -> Result<Matrix> {
+    /// boundary buffer (zeros where not communicated).  Both the boundary
+    /// matrix and the per-message decode buffer are workspace-backed; the
+    /// caller returns the matrix with `ws.put_matrix` once consumed.
+    fn recv_forward(&self, msgs: Vec<Message>, ws: &mut Workspace, f: usize) -> Result<Matrix> {
         let p = self.rank;
-        let mut out = Matrix::zeros(self.data[p].n_boundary, f);
+        let mut out = ws.take_matrix_zeroed(self.data[p].n_boundary, f);
+        let mut flat = ws.take_empty();
         for msg in msgs {
             let plan = self.plan(msg.from, p)?;
-            let mut flat = vec![0.0f32; msg.payload.n];
+            flat.clear();
+            flat.resize(msg.payload.n, 0.0);
             self.compressor.decompress(&msg.payload, &mut flat);
             for (i, &slot) in plan.dst_slots.iter().enumerate() {
                 out.row_mut(slot as usize).copy_from_slice(&flat[i * f..(i + 1) * f]);
             }
         }
+        ws.put(flat);
         Ok(out)
     }
 
@@ -220,6 +232,7 @@ impl<'a> WorkerCtx<'a> {
     fn send_backward(
         &self,
         ep: &mut Endpoint,
+        ws: &mut Workspace,
         epoch: usize,
         layer: usize,
         g_bnd: &Matrix,
@@ -227,6 +240,7 @@ impl<'a> WorkerCtx<'a> {
         f: usize,
     ) {
         let p = self.rank;
+        let mut payload = ws.take_empty();
         for q in 0..self.data.len() {
             if q == p {
                 continue;
@@ -235,7 +249,8 @@ impl<'a> WorkerCtx<'a> {
                 continue;
             };
             let plan = &self.data[q].plans[i];
-            let mut payload = Vec::with_capacity(plan.dst_slots.len() * f);
+            payload.clear();
+            payload.reserve(plan.dst_slots.len() * f);
             for &slot in &plan.dst_slots {
                 payload.extend_from_slice(g_bnd.row(slot as usize));
             }
@@ -251,14 +266,23 @@ impl<'a> WorkerCtx<'a> {
                 },
             );
         }
+        ws.put(payload);
     }
 
     /// Accumulate returned cotangents into this worker's local cotangent.
-    fn recv_backward(&self, msgs: Vec<Message>, g_local: &mut Matrix, f: usize) -> Result<()> {
+    fn recv_backward(
+        &self,
+        msgs: Vec<Message>,
+        ws: &mut Workspace,
+        g_local: &mut Matrix,
+        f: usize,
+    ) -> Result<()> {
         let q = self.rank;
+        let mut flat = ws.take_empty();
         for msg in msgs {
             let plan = self.plan(q, msg.from)?;
-            let mut flat = vec![0.0f32; msg.payload.n];
+            flat.clear();
+            flat.resize(msg.payload.n, 0.0);
             self.compressor.decompress(&msg.payload, &mut flat);
             for (i, &row) in plan.local_rows.iter().enumerate() {
                 let dst = g_local.row_mut(row as usize);
@@ -267,6 +291,7 @@ impl<'a> WorkerCtx<'a> {
                 }
             }
         }
+        ws.put(flat);
         Ok(())
     }
 }
@@ -313,6 +338,7 @@ fn worker_epoch(
     ctx: &WorkerCtx<'_>,
     engine: &mut dyn WorkerEngine,
     endpoint: &mut Endpoint,
+    ws: &mut Workspace,
     weights: &Weights,
     comm_mode: &CommMode,
     layer_dims: &[(usize, usize)],
@@ -328,50 +354,63 @@ fn worker_epoch(
     let mut loss_weighted = 0.0f32;
 
     // ---- forward ----
-    let mut h = d.x.clone();
+    // `None` means "layer 0 input": the worker's feature matrix is read in
+    // place instead of cloned every epoch.  Consumed activations cycle
+    // back through `engine.recycle`, so steady-state epochs do not touch
+    // the allocator on this path.
+    let mut h: Option<Matrix> = None;
     for (l, &(fi, _fo)) in layer_dims.iter().enumerate() {
         let h_bnd = if let Some(r) = rate {
             if err.is_none() {
                 // an errored worker sends nothing; receivers just see fewer
                 // rows (the epoch is discarded by the coordinator anyway)
-                if let Err(e) =
-                    compute(gate, intra, || Ok(ctx.send_forward(endpoint, epoch, l, &h, r, fi)))
-                {
+                let h_ref: &Matrix = h.as_ref().unwrap_or(&d.x);
+                if let Err(e) = compute(gate, intra, || {
+                    Ok(ctx.send_forward(endpoint, ws, epoch, l, h_ref, r, fi))
+                }) {
                     err = Some(e);
                 }
             }
             xchg.wait();
             let msgs = endpoint.recv_all(); // always drain: keeps quiescence
             let hb = if err.is_none() {
-                match compute(gate, intra, || ctx.recv_forward(msgs, fi)) {
+                match compute(gate, intra, || ctx.recv_forward(msgs, ws, fi)) {
                     Ok(m) => m,
                     Err(e) => {
                         err = Some(e);
-                        Matrix::zeros(d.n_boundary, fi)
+                        ws.take_matrix_zeroed(d.n_boundary, fi)
                     }
                 }
             } else {
-                Matrix::zeros(d.n_boundary, fi)
+                ws.take_matrix_zeroed(d.n_boundary, fi)
             };
             xchg.wait();
             hb
         } else {
-            Matrix::zeros(d.n_boundary, fi)
+            ws.take_matrix_zeroed(d.n_boundary, fi)
         };
         if err.is_none() {
-            match compute(gate, intra, || engine.forward_layer(l, weights, &h, &h_bnd, local_norm))
-            {
-                Ok(next) => h = next,
+            let h_ref: &Matrix = h.as_ref().unwrap_or(&d.x);
+            match compute(gate, intra, || {
+                engine.forward_layer(l, weights, h_ref, &h_bnd, local_norm)
+            }) {
+                Ok(next) => {
+                    if let Some(prev) = h.replace(next) {
+                        engine.recycle(prev);
+                    }
+                }
                 Err(e) => err = Some(e),
             }
         }
+        ws.put_matrix(h_bnd);
     }
 
     // ---- loss ----
     let mut g = Matrix::zeros(0, 0);
     if err.is_none() {
+        let logits: &Matrix = h.as_ref().unwrap_or(&d.x);
         match compute(gate, intra, || {
-            engine.loss_grad(&h, &d.labels, &d.m_train, &d.m_val, &d.m_test)
+            engine.loss_grad(logits, &d.labels, &d.m_train, &d.m_val, &d.m_test)
         }) {
             Ok(out) => {
                 loss_weighted = out.loss * out.count_train;
@@ -386,12 +425,12 @@ fn worker_epoch(
     // ---- backward ----
     for l in (0..layer_dims.len()).rev() {
         let fi = layer_dims[l].0;
-        let mut g_local = Matrix::zeros(0, 0);
         let mut g_bnd = Matrix::zeros(0, 0);
         if err.is_none() {
             match compute(gate, intra, || engine.backward_layer(l, weights, &g, local_norm)) {
                 Ok((gl, gb, lg)) => {
-                    g_local = gl;
+                    let prev = std::mem::replace(&mut g, gl);
+                    engine.recycle(prev);
                     g_bnd = gb;
                     lgrads[l] = Some(lg);
                 }
@@ -400,23 +439,30 @@ fn worker_epoch(
         }
         if let Some(r) = rate {
             if err.is_none() {
-                if let Err(e) =
-                    compute(gate, intra, || Ok(ctx.send_backward(endpoint, epoch, l, &g_bnd, r, fi)))
-                {
+                if let Err(e) = compute(gate, intra, || {
+                    Ok(ctx.send_backward(endpoint, ws, epoch, l, &g_bnd, r, fi))
+                }) {
                     err = Some(e);
                 }
             }
             xchg.wait();
             let msgs = endpoint.recv_all();
             if err.is_none() {
-                if let Err(e) = compute(gate, intra, || ctx.recv_backward(msgs, &mut g_local, fi))
+                if let Err(e) =
+                    compute(gate, intra, || ctx.recv_backward(msgs, ws, &mut g, fi))
                 {
                     err = Some(e);
                 }
             }
             xchg.wait();
         }
-        g = g_local;
+        engine.recycle(g_bnd);
+    }
+
+    // park the epoch-final buffers in the engine arena for the next epoch
+    engine.recycle(g);
+    if let Some(hm) = h.take() {
+        engine.recycle(hm);
     }
 
     let grads = if err.is_none() {
@@ -473,6 +519,9 @@ pub struct Trainer {
     engines: Vec<Box<dyn WorkerEngine>>,
     endpoints: Vec<Endpoint>,
     data: Vec<WorkerData>,
+    /// per-worker scratch arenas (exchange staging/decode buffers and
+    /// boundary matrices), reused across layers and epochs
+    workspaces: Vec<Workspace>,
     pub weights: Weights,
     dims: ModelDims,
     opts: TrainerOptions,
@@ -551,10 +600,12 @@ impl Trainer {
             engine: engines.first().map(|e| e.name().to_string()).unwrap_or_default(),
             records: Vec::new(),
         };
+        let workspaces = (0..partition.q).map(|_| Workspace::new()).collect();
         Ok(Trainer {
             engines,
             endpoints,
             data,
+            workspaces,
             weights,
             dims,
             opts,
@@ -630,6 +681,7 @@ impl Trainer {
             engines,
             endpoints,
             data,
+            workspaces,
             weights,
             dims,
             opts,
@@ -650,24 +702,44 @@ impl Trainer {
         let ctx = |rank: usize| WorkerCtx { rank, data, plan_idx, compressor, seed };
 
         // ---- forward ----
-        let mut h: Vec<Matrix> = (0..q).map(|i| data[i].x.clone()).collect();
+        // None = "layer 0 reads the feature matrix in place" (no per-epoch
+        // clone); consumed activations return to each engine's arena
+        let mut h: Vec<Option<Matrix>> = (0..q).map(|_| None).collect();
         for (l, &(fi, _fo)) in layer_dims.iter().enumerate() {
             let h_bnd: Vec<Matrix> = match rate {
                 Some(r) => {
                     for i in 0..q {
-                        ctx(i).send_forward(&mut endpoints[i], epoch, l, &h[i], r, fi);
+                        let h_ref: &Matrix = h[i].as_ref().unwrap_or(&data[i].x);
+                        ctx(i).send_forward(
+                            &mut endpoints[i],
+                            &mut workspaces[i],
+                            epoch,
+                            l,
+                            h_ref,
+                            r,
+                            fi,
+                        );
                     }
                     let mut out = Vec::with_capacity(q);
                     for p in 0..q {
                         let msgs = endpoints[p].recv_all();
-                        out.push(ctx(p).recv_forward(msgs, fi)?);
+                        out.push(ctx(p).recv_forward(msgs, &mut workspaces[p], fi)?);
                     }
                     out
                 }
-                None => (0..q).map(|p| Matrix::zeros(data[p].n_boundary, fi)).collect(),
+                None => (0..q)
+                    .map(|p| workspaces[p].take_matrix_zeroed(data[p].n_boundary, fi))
+                    .collect(),
             };
             for i in 0..q {
-                h[i] = engines[i].forward_layer(l, weights, &h[i], &h_bnd[i], local_norm)?;
+                let h_ref: &Matrix = h[i].as_ref().unwrap_or(&data[i].x);
+                let next = engines[i].forward_layer(l, weights, h_ref, &h_bnd[i], local_norm)?;
+                if let Some(prev) = h[i].replace(next) {
+                    engines[i].recycle(prev);
+                }
+            }
+            for (p, hb) in h_bnd.into_iter().enumerate() {
+                workspaces[p].put_matrix(hb);
             }
         }
 
@@ -676,7 +748,8 @@ impl Trainer {
         let mut loss_weighted = 0.0f32;
         for i in 0..q {
             let d = &data[i];
-            let out = engines[i].loss_grad(&h[i], &d.labels, &d.m_train, &d.m_val, &d.m_test)?;
+            let logits: &Matrix = h[i].as_ref().unwrap_or(&d.x);
+            let out = engines[i].loss_grad(logits, &d.labels, &d.m_train, &d.m_val, &d.m_test)?;
             loss_weighted += out.loss * out.count_train;
             let mut gl = out.g_logits;
             gl.scale(out.count_train / *total_train);
@@ -688,7 +761,6 @@ impl Trainer {
         let mut grad_acc = weights.zeros_like();
         for l in (0..layer_dims.len()).rev() {
             let fi = layer_dims[l].0;
-            let mut g_locals = Vec::with_capacity(q);
             let mut g_bnds = Vec::with_capacity(q);
             for i in 0..q {
                 let (gl, gb, lg) = engines[i].backward_layer(l, weights, &g[i], local_norm)?;
@@ -697,19 +769,39 @@ impl Trainer {
                 for (a, b) in grad_acc.layers[l].bias.iter_mut().zip(&lg.bias) {
                     *a += b;
                 }
-                g_locals.push(gl);
+                let prev = std::mem::replace(&mut g[i], gl);
+                engines[i].recycle(prev);
                 g_bnds.push(gb);
             }
             if let Some(r) = rate {
                 for p in 0..q {
-                    ctx(p).send_backward(&mut endpoints[p], epoch, l, &g_bnds[p], r, fi);
+                    ctx(p).send_backward(
+                        &mut endpoints[p],
+                        &mut workspaces[p],
+                        epoch,
+                        l,
+                        &g_bnds[p],
+                        r,
+                        fi,
+                    );
                 }
                 for i in 0..q {
                     let msgs = endpoints[i].recv_all();
-                    ctx(i).recv_backward(msgs, &mut g_locals[i], fi)?;
+                    ctx(i).recv_backward(msgs, &mut workspaces[i], &mut g[i], fi)?;
                 }
             }
-            g = g_locals;
+            for (i, gb) in g_bnds.into_iter().enumerate() {
+                engines[i].recycle(gb);
+            }
+        }
+        // park the epoch-final buffers in the engine arenas
+        for (i, gi) in g.into_iter().enumerate() {
+            engines[i].recycle(gi);
+        }
+        for (i, hi) in h.into_iter().enumerate() {
+            if let Some(m) = hi {
+                engines[i].recycle(m);
+            }
         }
 
         // ---- server step ----
@@ -774,6 +866,7 @@ impl Trainer {
             engines,
             endpoints,
             data,
+            workspaces,
             weights,
             dims,
             opts,
@@ -816,8 +909,11 @@ impl Trainer {
         let abort = AtomicBool::new(false);
 
         let run_result: Result<()> = std::thread::scope(|s| {
-            for (rank, (engine, endpoint)) in
-                engines.iter_mut().zip(endpoints.iter_mut()).enumerate()
+            for (rank, ((engine, endpoint), ws)) in engines
+                .iter_mut()
+                .zip(endpoints.iter_mut())
+                .zip(workspaces.iter_mut())
+                .enumerate()
             {
                 let ctx = WorkerCtx { rank, data, plan_idx, compressor, seed };
                 let (sync, xchg, gate, abort, slots, weights_lock, comm_mode, layer_dims) = (
@@ -844,6 +940,7 @@ impl Trainer {
                                 &ctx,
                                 &mut **engine,
                                 endpoint,
+                                &mut *ws,
                                 &w,
                                 comm_mode,
                                 layer_dims,

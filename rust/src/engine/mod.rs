@@ -233,6 +233,12 @@ pub trait WorkerEngine: Send {
         m_val: &[f32],
         m_test: &[f32],
     ) -> Result<LossOut>;
+
+    /// Hand a no-longer-needed matrix (typically one this engine produced)
+    /// back to the engine so its allocation can back future outputs.  The
+    /// trainer calls this on consumed activations/cotangents each layer;
+    /// engines without a scratch arena simply drop the matrix.
+    fn recycle(&mut self, _m: Matrix) {}
 }
 
 #[cfg(test)]

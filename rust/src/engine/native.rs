@@ -8,9 +8,13 @@
 use super::{LayerGrads, LossOut, ModelDims, Weights, WorkerEngine};
 use crate::partition::WorkerGraph;
 use crate::tensor::Matrix;
+use crate::util::Workspace;
 use crate::Result;
 
-/// Per-layer cached context for the backward pass.
+/// Per-layer cached context for the backward pass.  The three matrices
+/// are recycled through the engine's workspace on every re-forward of the
+/// same layer, so steady-state epochs rebuild the cache without touching
+/// the allocator.
 struct LayerCache {
     h_local_in: Matrix,
     pre: Matrix,
@@ -22,11 +26,18 @@ pub struct NativeWorkerEngine {
     wg: WorkerGraph,
     dims: ModelDims,
     cache: Vec<Option<LayerCache>>,
+    /// scratch arena backing layer caches, outputs, and backward temps
+    ws: Workspace,
 }
 
 impl NativeWorkerEngine {
     pub fn new(wg: WorkerGraph, dims: ModelDims) -> NativeWorkerEngine {
-        NativeWorkerEngine { cache: (0..dims.layers).map(|_| None).collect(), wg, dims }
+        NativeWorkerEngine {
+            cache: (0..dims.layers).map(|_| None).collect(),
+            wg,
+            dims,
+            ws: Workspace::new(),
+        }
     }
 
     pub fn worker_graph(&self) -> &WorkerGraph {
@@ -68,32 +79,47 @@ impl WorkerEngine for NativeWorkerEngine {
             h_local.shape(),
             self.n_local()
         );
-        // agg = S_ll @ h_local (+ S_lb @ h_bnd unless local-only)
-        let mut agg = Matrix::zeros(self.n_local(), fi);
-        if local_norm {
-            self.wg.s_ll_localnorm.spmm_into(h_local, &mut agg);
-        } else {
+        if !local_norm {
             anyhow::ensure!(
                 h_bnd.shape() == (self.n_boundary(), fi),
                 "h_bnd shape {:?} != ({}, {fi})",
                 h_bnd.shape(),
                 self.n_boundary()
             );
+        }
+        // recycle the previous forward's cache for this layer: its three
+        // buffers come straight back below, so steady-state epochs rebuild
+        // the cache allocation-free
+        if let Some(c) = self.cache[layer].take() {
+            self.ws.put_matrix(c.h_local_in);
+            self.ws.put_matrix(c.pre);
+            self.ws.put_matrix(c.agg);
+        }
+        let nl = self.n_local();
+        // agg = S_ll @ h_local (+ S_lb @ h_bnd unless local-only)
+        let mut agg = self.ws.take_matrix_zeroed(nl, fi);
+        if local_norm {
+            self.wg.s_ll_localnorm.spmm_into(h_local, &mut agg);
+        } else {
             self.wg.s_ll.spmm_into(h_local, &mut agg);
             if self.n_boundary() > 0 {
                 self.wg.s_lb.spmm_into(h_bnd, &mut agg);
             }
         }
         // pre = h W_self + agg W_neigh + b
-        let mut pre = h_local.matmul(&lw.w_self);
-        pre.add_assign(&agg.matmul(&lw.w_neigh));
+        let mut pre = self.ws.take_matrix_scratch(nl, fo);
+        h_local.matmul_into(&lw.w_self, &mut pre);
+        let mut tmp = self.ws.take_matrix_scratch(nl, fo);
+        agg.matmul_into(&lw.w_neigh, &mut tmp);
+        pre.add_assign(&tmp);
+        self.ws.put_matrix(tmp);
         pre.add_row_broadcast(&lw.bias);
-        let mut out = pre.clone();
+        let mut out = self.ws.take_matrix_copy(&pre);
         if self.relu_layer(layer) {
             out.relu();
         }
-        let _ = fo;
-        self.cache[layer] = Some(LayerCache { h_local_in: h_local.clone(), pre, agg });
+        let h_local_in = self.ws.take_matrix_copy(h_local);
+        self.cache[layer] = Some(LayerCache { h_local_in, pre, agg });
         Ok(out)
     }
 
@@ -104,13 +130,17 @@ impl WorkerEngine for NativeWorkerEngine {
         g_out: &Matrix,
         local_norm: bool,
     ) -> Result<(Matrix, Matrix, LayerGrads)> {
-        let cache = self.cache[layer]
+        let relu = self.relu_layer(layer);
+        // split borrows: the cache entry is read while scratch buffers are
+        // drawn from the workspace
+        let NativeWorkerEngine { wg, cache, ws, .. } = self;
+        let cache = cache[layer]
             .as_ref()
             .ok_or_else(|| anyhow::anyhow!("backward_layer({layer}) before forward"))?;
         let lw = &weights.layers[layer];
         // g_pre = g_out ⊙ relu'(pre)
-        let mut g_pre = g_out.clone();
-        if self.relu_layer(layer) {
+        let mut g_pre = ws.take_matrix_copy(g_out);
+        if relu {
             for (g, &p) in g_pre.data.iter_mut().zip(&cache.pre.data) {
                 if p <= 0.0 {
                     *g = 0.0;
@@ -125,17 +155,23 @@ impl WorkerEngine for NativeWorkerEngine {
                 *b += g;
             }
         }
-        let g_agg = g_pre.matmul(&lw.w_neigh.transpose());
-        let mut g_h_local = g_pre.matmul(&lw.w_self.transpose());
-        let mut g_h_bnd = Matrix::zeros(self.n_boundary(), lw.w_self.rows);
+        // cotangents through the dense products: g_pre @ Wᵀ without ever
+        // materializing the weight transposes
+        let mut g_agg = ws.take_matrix_scratch(g_pre.rows, lw.w_neigh.rows);
+        g_pre.matmul_nt_into(&lw.w_neigh, &mut g_agg);
+        let mut g_h_local = ws.take_matrix_scratch(g_pre.rows, lw.w_self.rows);
+        g_pre.matmul_nt_into(&lw.w_self, &mut g_h_local);
+        let mut g_h_bnd = ws.take_matrix_zeroed(wg.n_boundary(), lw.w_self.rows);
         if local_norm {
-            self.wg.s_ll_localnorm.spmm_t_into(&g_agg, &mut g_h_local);
+            wg.s_ll_localnorm.spmm_t_into(&g_agg, &mut g_h_local);
         } else {
-            self.wg.s_ll.spmm_t_into(&g_agg, &mut g_h_local);
-            if self.n_boundary() > 0 {
-                self.wg.s_lb.spmm_t_into(&g_agg, &mut g_h_bnd);
+            wg.s_ll.spmm_t_into(&g_agg, &mut g_h_local);
+            if wg.n_boundary() > 0 {
+                wg.s_lb.spmm_t_into(&g_agg, &mut g_h_bnd);
             }
         }
+        ws.put_matrix(g_pre);
+        ws.put_matrix(g_agg);
         Ok((g_h_local, g_h_bnd, LayerGrads { w_self: g_w_self, w_neigh: g_w_neigh, bias: g_bias }))
     }
 
@@ -147,7 +183,13 @@ impl WorkerEngine for NativeWorkerEngine {
         m_val: &[f32],
         m_test: &[f32],
     ) -> Result<LossOut> {
-        loss_grad_dense(logits, labels, m_train, m_val, m_test)
+        // scratch, not zeroed: loss_grad_dense_reuse writes every row
+        let g = self.ws.take_matrix_scratch(logits.rows, logits.cols);
+        loss_grad_dense_reuse(logits, labels, m_train, m_val, m_test, g)
+    }
+
+    fn recycle(&mut self, m: Matrix) {
+        self.ws.put_matrix(m);
     }
 }
 
@@ -161,11 +203,27 @@ pub fn loss_grad_dense(
     m_val: &[f32],
     m_test: &[f32],
 ) -> Result<LossOut> {
+    let g = Matrix::zeros(logits.rows, logits.cols);
+    loss_grad_dense_reuse(logits, labels, m_train, m_val, m_test, g)
+}
+
+/// As [`loss_grad_dense`], writing the gradient into a caller-provided
+/// matrix of the logits' shape.  Every row is overwritten (train rows
+/// computed, the rest zero-filled), so scratch contents are fine — the
+/// engine's workspace path relies on that.
+fn loss_grad_dense_reuse(
+    logits: &Matrix,
+    labels: &[u32],
+    m_train: &[f32],
+    m_val: &[f32],
+    m_test: &[f32],
+    mut g: Matrix,
+) -> Result<LossOut> {
     let (n, c) = logits.shape();
     anyhow::ensure!(labels.len() == n && m_train.len() == n, "label/mask length");
+    debug_assert_eq!(g.shape(), (n, c));
     let count: f32 = m_train.iter().sum::<f32>().max(1.0);
     let mut loss = 0.0f32;
-    let mut g = Matrix::zeros(n, c);
     let (mut c_tr, mut c_va, mut c_te) = (0.0f32, 0.0f32, 0.0f32);
     for i in 0..n {
         let row = logits.row(i);
@@ -183,6 +241,10 @@ pub fn loss_grad_dense(
                 let p = (row[j] - log_z).exp();
                 *gj = (p - if j == y { 1.0 } else { 0.0 }) * w;
             }
+        } else {
+            // self-contained even for a scratch (non-zeroed) g buffer:
+            // non-train rows carry zero gradient, not stale contents
+            g_row.fill(0.0);
         }
         // argmax prediction
         let mut best = 0usize;
@@ -341,6 +403,32 @@ mod tests {
             let numeric = (plus.loss - base.loss) / eps;
             let analytic = base.g_logits.get(i, j);
             assert!((numeric - analytic).abs() < 1e-2, "({i},{j}): {numeric} vs {analytic}");
+        }
+    }
+
+    #[test]
+    fn repeated_passes_are_deterministic_under_buffer_reuse() {
+        // re-forwarding a layer rebuilds its cache from recycled storage;
+        // any stale-scratch bug (a take_scratch target not fully
+        // overwritten) shows up as a bit difference here
+        let mut e = setup(9);
+        let w = Weights::glorot(&DIMS, 3);
+        let h = randm(e.n_local(), 6, 2);
+        let hb = randm(e.n_boundary(), 6, 3);
+        let g_out = randm(e.n_local(), 9, 4);
+        let o1 = e.forward_layer(0, &w, &h, &hb, false).unwrap();
+        let b1 = e.backward_layer(0, &w, &g_out, false).unwrap();
+        for _ in 0..3 {
+            let o2 = e.forward_layer(0, &w, &h, &hb, false).unwrap();
+            assert_eq!(o1.data, o2.data, "forward drifted across reuse");
+            let b2 = e.backward_layer(0, &w, &g_out, false).unwrap();
+            assert_eq!(b1.0.data, b2.0.data, "g_h_local drifted");
+            assert_eq!(b1.1.data, b2.1.data, "g_h_bnd drifted");
+            assert_eq!(b1.2.w_self.data, b2.2.w_self.data, "w_self grad drifted");
+            // hand outputs back so the arena actually recycles them
+            e.recycle(o2);
+            e.recycle(b2.0);
+            e.recycle(b2.1);
         }
     }
 

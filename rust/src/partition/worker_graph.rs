@@ -74,17 +74,55 @@ impl SparseBlock {
     }
 
     /// out += selfᵀ @ x (gradient flow back through aggregation).
+    ///
+    /// Parallelized by partitioning the **output** rows into contiguous
+    /// bands: each thread scans the whole CSR but applies only the updates
+    /// that scatter into its band.  Every output element therefore
+    /// accumulates in CSR row order no matter how many threads run, so
+    /// results are bitwise identical to the serial loop for every
+    /// `VARCO_THREADS` setting (the parallel trainer's bit-stability
+    /// contract).  The duplicated index scan is O(nnz) u32 reads against
+    /// O(nnz · F) float updates — noise at the engine's feature widths.
     pub fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
         assert_eq!(self.rows, x.rows);
         assert_eq!(out.shape(), (self.cols, x.cols));
+        let f = x.cols;
+        if self.cols == 0 || f == 0 {
+            return;
+        }
+        let nt = crate::util::parallel::effective_threads().min(self.cols);
+        // serial fast path: band setup is not worth it for tiny operands
+        if nt <= 1 || self.indices.len().saturating_mul(f) < (1 << 14) {
+            self.spmm_t_band(x, &mut out.data, 0, self.cols);
+            return;
+        }
+        let band_rows = self.cols.div_ceil(nt);
+        crate::util::parallel::par_chunks_mut(&mut out.data, band_rows * f, |g, band| {
+            let c0 = g * band_rows;
+            self.spmm_t_band(x, band, c0, c0 + band.len() / f);
+        });
+    }
+
+    /// The one CSR scatter loop behind `spmm_t_into`: accumulate into the
+    /// output rows [c0, c1), whose storage is `band` (row c lands at
+    /// offset `(c - c0) * f`).  The serial fast path passes the whole
+    /// output; each parallel band passes its slice — so the per-element
+    /// accumulation order (CSR rows ascending, nnz within a row in order)
+    /// is one piece of code, not two copies that could drift.
+    fn spmm_t_band(&self, x: &Matrix, band: &mut [f32], c0: usize, c1: usize) {
+        let f = x.cols;
         for r in 0..self.rows {
             let lo = self.indptr[r] as usize;
             let hi = self.indptr[r + 1] as usize;
             let x_row = x.row(r);
             for (k, &c) in self.indices[lo..hi].iter().enumerate() {
+                let c = c as usize;
+                if c < c0 || c >= c1 {
+                    continue;
+                }
+                let off = (c - c0) * f;
                 let w = self.values[lo + k];
-                let out_row = out.row_mut(c as usize);
-                for (o, &xv) in out_row.iter_mut().zip(x_row) {
+                for (o, &xv) in band[off..off + f].iter_mut().zip(x_row) {
                     *o += w * xv;
                 }
             }
@@ -348,6 +386,34 @@ mod tests {
         let want_t = w.s_lb.to_dense().t_matmul(&y);
         for (a, b) in out_t.data.iter().zip(&want_t.data) {
             assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn spmm_t_banded_path_is_bitwise_thread_invariant() {
+        // a shard large enough (nnz * f) to cross the serial threshold, so
+        // the banded parallel path runs when more than one thread is allowed
+        let (_, workers) = setup(256, 2, 7);
+        let w = &workers[0];
+        let f = 40;
+        assert!(
+            w.s_ll.indices.len() * f >= 1 << 14,
+            "test shard too small to exercise the banded path: nnz {}",
+            w.s_ll.indices.len()
+        );
+        let mut rng = crate::util::Rng::new(1);
+        let y = Matrix::from_fn(w.s_ll.rows, f, |_, _| rng.next_normal());
+        let mut base = Matrix::zeros(w.s_ll.cols, f);
+        crate::util::parallel::with_thread_limit(1, || w.s_ll.spmm_t_into(&y, &mut base));
+        for threads in [2usize, 3, 8] {
+            let mut out = Matrix::zeros(w.s_ll.cols, f);
+            crate::util::parallel::with_thread_limit(threads, || w.s_ll.spmm_t_into(&y, &mut out));
+            assert_eq!(base.data, out.data, "spmm_t at {threads} threads");
+        }
+        // and the accumulation is correct, not just stable
+        let want = w.s_ll.to_dense().t_matmul(&y);
+        for (a, b) in base.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
         }
     }
 }

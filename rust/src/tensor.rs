@@ -1,11 +1,45 @@
 //! Minimal dense f32 matrix used by the native engine and the PJRT
-//! marshalling layer.  Row-major, rayon-parallel matmul.
+//! marshalling layer.  Row-major storage with register-blocked,
+//! cache-tiled kernels over scoped-thread data parallelism.
 //!
-//! Deliberately tiny: the heavy lifting on the artifact path happens in
-//! XLA; the native engine's hot loops are the sparse aggregations in
-//! `engine::native`, which operate on raw slices.
+//! # Kernel design
+//!
+//! * `matmul` / `matmul_into` — the inner kernel holds an `MR x NR`
+//!   accumulator tile in registers across the whole k loop, so each loaded
+//!   B panel row is reused `MR` times and each output element is written
+//!   exactly once (the naive row-streaming loop re-reads the full B row
+//!   and read-modify-writes the output row once per k).  Matrices that are
+//!   mostly zeros (dense blocks materialized from sparse operators) are
+//!   detected with a deterministic stride probe and routed to a
+//!   zero-skipping row kernel instead, where skipping beats tiling.
+//! * `matmul_nt` — `A @ Bᵀ` without materializing the transpose: both
+//!   operands are walked along contiguous rows (a 4-way unrolled dot
+//!   product), which is exactly the shape of the backward pass's
+//!   `g_pre @ Wᵀ` products.
+//! * `t_matmul` — `Aᵀ @ B` as a sum of per-slab outer-product partials.
+//!   Slabs are a **fixed** `T_SLAB` rows, never a function of the thread
+//!   count, and partials are reduced in slab order — so results are
+//!   identical for every `VARCO_THREADS` setting (the parallel trainer's
+//!   bit-stability contract), merely computed faster with more threads.
+//!
+//! Every kernel's accumulation order depends only on the operand shapes,
+//! never on the thread budget; `tests/properties.rs` pins each one against
+//! a naive reference oracle.
 
 use crate::util::parallel;
+
+/// Register tile height (output rows held in accumulators).
+const MR: usize = 4;
+/// Register tile width (output columns held in accumulators).
+const NR: usize = 8;
+/// Rows per `t_matmul` reduction slab.  Fixed (not derived from the
+/// thread count) so the slab sum order — and therefore every last bit of
+/// the result — is independent of `VARCO_THREADS`.
+const T_SLAB: usize = 128;
+/// Slab partials materialized at once by `t_matmul` (bounds transient
+/// memory at `T_WAVE * m * n` floats for tall operands).  Like `T_SLAB`,
+/// a fixed constant: the wave split never changes the reduction order.
+const T_WAVE: usize = 16;
 
 /// Row-major dense f32 matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -59,59 +93,153 @@ impl Matrix {
         (self.rows, self.cols)
     }
 
-    /// self @ other, rayon-parallel over output rows, k-inner loop kept
-    /// contiguous over `other` rows for cache friendliness.
+    /// self @ other into a fresh matrix.
     pub fn matmul(&self, other: &Matrix) -> Matrix {
-        assert_eq!(self.cols, other.rows, "matmul {}x{} @ {}x{}", self.rows, self.cols, other.rows, other.cols);
         let mut out = Matrix::zeros(self.rows, other.cols);
-        let oc = other.cols;
-        parallel::par_chunks_mut(&mut out.data, oc, |i, out_row| {
-            let a_row = self.row(i);
-            for (k, &a) in a_row.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let b_row = &other.data[k * oc..(k + 1) * oc];
-                for (o, &b) in out_row.iter_mut().zip(b_row) {
-                    *o += a * b;
-                }
-            }
-        });
+        self.matmul_into(other, &mut out);
         out
     }
 
-    /// selfᵀ @ other without materializing the transpose.
+    /// self @ other, overwriting `out` (which may hold arbitrary scratch
+    /// contents).  Parallel over `MR`-row bands of the output; per-element
+    /// accumulation runs over k in ascending order for any thread count.
+    pub fn matmul_into(&self, other: &Matrix, out: &mut Matrix) {
+        assert_eq!(self.cols, other.rows, "matmul {}x{} @ {}x{}", self.rows, self.cols, other.rows, other.cols);
+        assert_eq!(
+            out.shape(),
+            (self.rows, other.cols),
+            "matmul out {:?} != ({}, {})",
+            out.shape(),
+            self.rows,
+            other.cols
+        );
+        let (k, n) = (self.cols, other.cols);
+        if self.rows == 0 || n == 0 {
+            return;
+        }
+        if k == 0 {
+            out.data.fill(0.0);
+            return;
+        }
+        let a = &self.data;
+        let b = &other.data;
+        if self.mostly_zero() {
+            // dense image of a sparse operator: skipping zero A entries
+            // beats register tiling (tiling re-scans k once per column
+            // tile, which multiplies the skip cost by n/NR)
+            parallel::par_chunks_mut(&mut out.data, n, |i, out_row| {
+                out_row.fill(0.0);
+                let a_row = &a[i * k..(i + 1) * k];
+                for (kk, &av) in a_row.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let b_row = &b[kk * n..(kk + 1) * n];
+                    for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                        *o += av * bv;
+                    }
+                }
+            });
+        } else {
+            parallel::par_chunks_mut(&mut out.data, MR * n, |blk, out_blk| {
+                let i0 = blk * MR;
+                let mr = out_blk.len() / n;
+                matmul_block(&a[i0 * k..(i0 + mr) * k], b, out_blk, mr, k, n);
+            });
+        }
+    }
+
+    /// self @ otherᵀ into a fresh matrix (no transpose materialized).
+    pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, other.rows);
+        self.matmul_nt_into(other, &mut out);
+        out
+    }
+
+    /// self @ otherᵀ, overwriting `out`.  Each output element is one dot
+    /// product of two contiguous rows — the backward pass's
+    /// `g_pre @ Wᵀ` shape, which previously paid a full `transpose()`
+    /// allocation per layer per epoch.
+    pub fn matmul_nt_into(&self, other: &Matrix, out: &mut Matrix) {
+        assert_eq!(
+            self.cols, other.cols,
+            "matmul_nt {}x{} @ ({}x{})^T",
+            self.rows, self.cols, other.rows, other.cols
+        );
+        assert_eq!(
+            out.shape(),
+            (self.rows, other.rows),
+            "matmul_nt out {:?} != ({}, {})",
+            out.shape(),
+            self.rows,
+            other.rows
+        );
+        let n = other.rows;
+        if self.rows == 0 || n == 0 {
+            return;
+        }
+        parallel::par_chunks_mut(&mut out.data, n, |i, out_row| {
+            let a_row = self.row(i);
+            for (j, o) in out_row.iter_mut().enumerate() {
+                *o = dot(a_row, other.row(j));
+            }
+        });
+    }
+
+    /// selfᵀ @ other without materializing the transpose: a slab-ordered
+    /// sum of outer-product partials (see module docs for the determinism
+    /// contract).
     pub fn t_matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.rows, other.rows, "t_matmul {}x{} @ {}x{}", self.rows, self.cols, other.rows, other.cols);
         let (k, m, n) = (self.rows, self.cols, other.cols);
         let mut out = Matrix::zeros(m, n);
-        // Accumulate thread-local partials over row slabs of k, then reduce.
-        let nt = parallel::effective_threads().min(k.max(1));
-        let partials: Vec<Matrix> = parallel::par_map(nt, |t| {
-            let mut acc = Matrix::zeros(m, n);
-            let lo = k * t / nt;
-            let hi = k * (t + 1) / nt;
-            for r in lo..hi {
-                let a_row = self.row(r);
-                let b_row = other.row(r);
-                for (i, &a) in a_row.iter().enumerate() {
-                    if a == 0.0 {
-                        continue;
-                    }
-                    let acc_row = acc.row_mut(i);
-                    for (o, &b) in acc_row.iter_mut().zip(b_row) {
-                        *o += a * b;
-                    }
+        if k == 0 || m == 0 || n == 0 {
+            return out;
+        }
+        let n_slabs = k.div_ceil(T_SLAB);
+        if n_slabs == 1 {
+            t_matmul_slab(&self.data, &other.data, &mut out.data, 0, k, m, n);
+            return out;
+        }
+        // Process slabs in fixed-size waves: each wave's partials are
+        // computed in parallel, then reduced into `out` in ascending slab
+        // order before the next wave starts.  Transient memory is bounded
+        // at T_WAVE partials (not k/T_SLAB of them), and the reduction
+        // order stays slab-ascending for every wave split and thread
+        // count — the sum is still a pure function of the shapes.
+        let mut s0 = 0usize;
+        while s0 < n_slabs {
+            let wave = T_WAVE.min(n_slabs - s0);
+            let partials: Vec<Vec<f32>> = parallel::par_map(wave, |i| {
+                let lo = (s0 + i) * T_SLAB;
+                let hi = (lo + T_SLAB).min(k);
+                let mut acc = vec![0.0f32; m * n];
+                t_matmul_slab(&self.data, &other.data, &mut acc, lo, hi, m, n);
+                acc
+            });
+            for p in partials {
+                for (o, v) in out.data.iter_mut().zip(p) {
+                    *o += v;
                 }
             }
-            acc
-        });
-        for p in partials {
-            for (o, v) in out.data.iter_mut().zip(p.data) {
-                *o += v;
-            }
+            s0 += wave;
         }
         out
+    }
+
+    /// Deterministic stride probe: true when > 7/8 of sampled entries are
+    /// zero (dense blocks built by `SparseBlock::to_dense`).
+    fn mostly_zero(&self) -> bool {
+        let step = (self.data.len() / 512).max(1);
+        let mut seen = 0usize;
+        let mut nonzero = 0usize;
+        let mut i = 0;
+        while i < self.data.len() {
+            seen += 1;
+            nonzero += (self.data[i] != 0.0) as usize;
+            i += step;
+        }
+        seen > 0 && nonzero * 8 < seen
     }
 
     pub fn transpose(&self) -> Matrix {
@@ -177,6 +305,102 @@ impl Matrix {
     }
 }
 
+/// out (mr x n) = a (mr x k) @ b (k x n), overwriting out.  `mr <= MR`.
+/// The full `MR x NR` tile is specialized so the compiler sees constant
+/// trip counts; ragged edges fall through to runtime-bounded loops.  Both
+/// paths accumulate over k in ascending order per output element.
+fn matmul_block(a: &[f32], b: &[f32], out: &mut [f32], mr: usize, k: usize, n: usize) {
+    let mut j0 = 0usize;
+    while j0 < n {
+        let nr = NR.min(n - j0);
+        let mut acc = [[0.0f32; NR]; MR];
+        if mr == MR && nr == NR {
+            for kk in 0..k {
+                let base = kk * n + j0;
+                let brow: &[f32; NR] = (&b[base..base + NR]).try_into().unwrap();
+                for r in 0..MR {
+                    let av = a[r * k + kk];
+                    let accr = &mut acc[r];
+                    for c in 0..NR {
+                        accr[c] += av * brow[c];
+                    }
+                }
+            }
+        } else {
+            for kk in 0..k {
+                let brow = &b[kk * n + j0..kk * n + j0 + nr];
+                for r in 0..mr {
+                    let av = a[r * k + kk];
+                    let accr = &mut acc[r];
+                    for (c, &bv) in brow.iter().enumerate() {
+                        accr[c] += av * bv;
+                    }
+                }
+            }
+        }
+        for r in 0..mr {
+            out[r * n + j0..r * n + j0 + nr].copy_from_slice(&acc[r][..nr]);
+        }
+        j0 += nr;
+    }
+}
+
+/// 4-way unrolled dot product (independent accumulators for ILP; the
+/// reduction tree is fixed, so results depend only on the inputs).
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for (ca, cb) in a.chunks_exact(4).zip(b.chunks_exact(4)) {
+        s0 += ca[0] * cb[0];
+        s1 += ca[1] * cb[1];
+        s2 += ca[2] * cb[2];
+        s3 += ca[3] * cb[3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for (x, y) in a.chunks_exact(4).remainder().iter().zip(b.chunks_exact(4).remainder()) {
+        s += x * y;
+    }
+    s
+}
+
+/// acc (m x n) += a[lo..hi]ᵀ @ b[lo..hi]: rows are consumed in pairs so
+/// each pass over the accumulator retires two outer products.
+fn t_matmul_slab(a: &[f32], b: &[f32], acc: &mut [f32], lo: usize, hi: usize, m: usize, n: usize) {
+    let mut r = lo;
+    while r + 1 < hi {
+        let a0 = &a[r * m..(r + 1) * m];
+        let a1 = &a[(r + 1) * m..(r + 2) * m];
+        let b0 = &b[r * n..(r + 1) * n];
+        let b1 = &b[(r + 1) * n..(r + 2) * n];
+        for i in 0..m {
+            let (x0, x1) = (a0[i], a1[i]);
+            if x0 == 0.0 && x1 == 0.0 {
+                continue;
+            }
+            let acc_row = &mut acc[i * n..(i + 1) * n];
+            for ((o, &v0), &v1) in acc_row.iter_mut().zip(b0).zip(b1) {
+                *o += x0 * v0 + x1 * v1;
+            }
+        }
+        r += 2;
+    }
+    if r < hi {
+        let a0 = &a[r * m..(r + 1) * m];
+        let b0 = &b[r * n..(r + 1) * n];
+        for i in 0..m {
+            let x0 = a0[i];
+            if x0 == 0.0 {
+                continue;
+            }
+            let acc_row = &mut acc[i * n..(i + 1) * n];
+            for (o, &v0) in acc_row.iter_mut().zip(b0) {
+                *o += x0 * v0;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -200,6 +424,74 @@ mod tests {
     }
 
     #[test]
+    fn matmul_matches_naive_across_tile_edges() {
+        // shapes straddling the MR/NR tile boundaries in every direction
+        let mut rng = crate::util::Rng::new(9);
+        for &(rows, k, n) in
+            &[(1usize, 1usize, 1usize), (4, 4, 8), (5, 3, 9), (7, 17, 23), (8, 32, 8), (13, 5, 1)]
+        {
+            let a = Matrix::from_fn(rows, k, |_, _| rng.next_normal());
+            let b = Matrix::from_fn(k, n, |_, _| rng.next_normal());
+            let got = a.matmul(&b);
+            for i in 0..rows {
+                for j in 0..n {
+                    let want: f32 = (0..k).map(|x| a.get(i, x) * b.get(x, j)).sum();
+                    assert!(
+                        (got.get(i, j) - want).abs() < 1e-4,
+                        "({rows}x{k}@{k}x{n}) [{i},{j}]: {} vs {want}",
+                        got.get(i, j)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_into_overwrites_scratch_contents() {
+        let a = m(2, 2, &[1.0, 0.0, 0.0, 1.0]);
+        let b = m(2, 2, &[5.0, 6.0, 7.0, 8.0]);
+        let mut out = Matrix::from_vec(2, 2, vec![99.0; 4]);
+        a.matmul_into(&b, &mut out);
+        assert_eq!(out.data, b.data);
+    }
+
+    #[test]
+    fn matmul_sparse_probe_path_matches_naive() {
+        // mostly-zero A routes to the zero-skip kernel; values must match
+        // the naive triple loop regardless of the path taken
+        let mut rng = crate::util::Rng::new(4);
+        let a = Matrix::from_fn(
+            40,
+            40,
+            |i, j| if (i + j) % 16 == 0 { rng.next_normal() } else { 0.0 },
+        );
+        assert!(a.mostly_zero());
+        let b = Matrix::from_fn(40, 6, |_, _| rng.next_normal());
+        let got = a.matmul(&b);
+        for i in 0..40 {
+            for j in 0..6 {
+                let want: f32 = (0..40).map(|x| a.get(i, x) * b.get(x, j)).sum();
+                assert!((got.get(i, j) - want).abs() < 1e-4, "[{i},{j}]");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_nt_matches_explicit_transpose() {
+        let mut rng = crate::util::Rng::new(2);
+        for &(rows, k, n) in &[(1usize, 1usize, 1usize), (5, 9, 7), (6, 4, 12), (3, 13, 2)] {
+            let a = Matrix::from_fn(rows, k, |_, _| rng.next_normal());
+            let b = Matrix::from_fn(n, k, |_, _| rng.next_normal());
+            let want = a.matmul(&b.transpose());
+            let got = a.matmul_nt(&b);
+            assert_eq!(got.shape(), (rows, n));
+            for (x, y) in got.data.iter().zip(&want.data) {
+                assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
     fn t_matmul_matches_explicit_transpose() {
         let mut rng = crate::util::Rng::new(1);
         let a = Matrix::from_fn(7, 5, |_, _| rng.next_normal());
@@ -209,6 +501,53 @@ mod tests {
         for (x, y) in got.data.iter().zip(&want.data) {
             assert!((x - y).abs() < 1e-4, "{x} vs {y}");
         }
+    }
+
+    #[test]
+    fn t_matmul_spans_multiple_slabs() {
+        // k > T_SLAB exercises the slab-partial reduction
+        let k = T_SLAB * 2 + 17;
+        let mut rng = crate::util::Rng::new(3);
+        let a = Matrix::from_fn(k, 4, |_, _| rng.next_normal());
+        let b = Matrix::from_fn(k, 3, |_, _| rng.next_normal());
+        let want = a.transpose().matmul(&b);
+        let got = a.t_matmul(&b);
+        for (x, y) in got.data.iter().zip(&want.data) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn kernels_are_thread_count_invariant() {
+        // identical bits no matter the intra-op thread budget
+        let mut rng = crate::util::Rng::new(5);
+        let a = Matrix::from_fn(37, T_SLAB + 9, |_, _| rng.next_normal());
+        let b = Matrix::from_fn(T_SLAB + 9, 11, |_, _| rng.next_normal());
+        let nt_b = Matrix::from_fn(23, T_SLAB + 9, |_, _| rng.next_normal());
+        let tall = Matrix::from_fn(T_SLAB + 9, 37, |_, _| rng.next_normal());
+        let base = crate::util::parallel::with_thread_limit(1, || {
+            (a.matmul(&b), a.matmul_nt(&nt_b), tall.t_matmul(&b))
+        });
+        for threads in [2usize, 3, 8] {
+            let got = crate::util::parallel::with_thread_limit(threads, || {
+                (a.matmul(&b), a.matmul_nt(&nt_b), tall.t_matmul(&b))
+            });
+            assert_eq!(base.0.data, got.0.data, "matmul at {threads} threads");
+            assert_eq!(base.1.data, got.1.data, "matmul_nt at {threads} threads");
+            assert_eq!(base.2.data, got.2.data, "t_matmul at {threads} threads");
+        }
+    }
+
+    #[test]
+    fn empty_dims_are_well_defined() {
+        let a = Matrix::zeros(0, 3);
+        let b = Matrix::zeros(3, 4);
+        assert_eq!(a.matmul(&b).shape(), (0, 4));
+        let c = Matrix::zeros(2, 0);
+        let d = Matrix::zeros(0, 5);
+        assert_eq!(c.matmul(&d).data, vec![0.0; 10]);
+        assert_eq!(c.matmul_nt(&Matrix::zeros(4, 0)).shape(), (2, 4));
+        assert_eq!(d.t_matmul(&Matrix::zeros(0, 2)).shape(), (5, 2));
     }
 
     #[test]
@@ -243,5 +582,13 @@ mod tests {
         let a = Matrix::zeros(2, 3);
         let b = Matrix::zeros(2, 3);
         a.matmul(&b);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul_nt")]
+    fn matmul_nt_shape_mismatch_panics() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 4);
+        a.matmul_nt(&b);
     }
 }

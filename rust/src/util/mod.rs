@@ -1,12 +1,15 @@
-//! Small shared utilities: deterministic RNG, argsort helpers.
+//! Small shared utilities: deterministic RNG, argsort/selection helpers,
+//! scratch-buffer workspace.
 
 pub mod json;
 pub mod parallel;
 pub mod rng;
 pub mod testing;
+pub mod workspace;
 
 pub use json::Json;
 pub use rng::Rng;
+pub use workspace::Workspace;
 
 /// Indices that would sort `vals` descending (stable).
 pub fn argsort_desc(vals: &[f32]) -> Vec<usize> {
@@ -18,6 +21,30 @@ pub fn argsort_desc(vals: &[f32]) -> Vec<usize> {
             .then(a.cmp(&b))
     });
     idx
+}
+
+/// The `m` indices with the largest `vals`, returned in ascending index
+/// order.  Equivalent to `argsort_desc(vals)[..m]` re-sorted by index
+/// (ties keep the lower index, as the stable argsort does), but runs in
+/// O(n + m log m) via partial selection instead of a full O(n log n) sort.
+pub fn top_m_indices(vals: &[f32], m: usize) -> Vec<u32> {
+    assert!(m <= vals.len(), "top_m_indices: m={m} > len={}", vals.len());
+    if m == 0 {
+        return Vec::new();
+    }
+    let mut order: Vec<u32> = (0..vals.len() as u32).collect();
+    if m < vals.len() {
+        // total order: value descending, index ascending on ties (total_cmp
+        // matches partial_cmp for every non-NaN and keeps NaN well-defined)
+        order.select_nth_unstable_by(m - 1, |&a, &b| {
+            vals[b as usize]
+                .total_cmp(&vals[a as usize])
+                .then(a.cmp(&b))
+        });
+        order.truncate(m);
+    }
+    order.sort_unstable();
+    order
 }
 
 #[cfg(test)]
@@ -37,5 +64,35 @@ mod tests {
     #[test]
     fn argsort_desc_empty() {
         assert!(argsort_desc(&[]).is_empty());
+    }
+
+    #[test]
+    fn top_m_matches_argsort_prefix() {
+        let vals = [0.5f32, -3.0, 2.0, 2.0, 0.0, 7.5, -3.0];
+        for m in 0..=vals.len() {
+            let mut want: Vec<u32> =
+                argsort_desc(&vals)[..m].iter().map(|&i| i as u32).collect();
+            want.sort_unstable();
+            assert_eq!(top_m_indices(&vals, m), want, "m={m}");
+        }
+    }
+
+    #[test]
+    fn top_m_ties_keep_lower_index() {
+        // three equal values: m=2 must keep indices 0 and 1
+        assert_eq!(top_m_indices(&[1.0, 1.0, 1.0], 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn top_m_edge_sizes() {
+        assert!(top_m_indices(&[], 0).is_empty());
+        assert_eq!(top_m_indices(&[4.0], 1), vec![0]);
+        assert_eq!(top_m_indices(&[1.0, 2.0], 2), vec![0, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "top_m_indices")]
+    fn top_m_rejects_oversized_m() {
+        top_m_indices(&[1.0], 2);
     }
 }

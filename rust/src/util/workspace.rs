@@ -1,0 +1,183 @@
+//! Reusable scratch-buffer arena for the per-worker hot path.
+//!
+//! The epoch loop used to allocate fresh `Vec<f32>` storage on every
+//! exchanged message (decode buffers), every layer (boundary matrices,
+//! layer caches), and every epoch (activation clones).  A `Workspace` is a
+//! small pool of f32 buffers owned by one worker: `take_*` hands out a
+//! buffer (reusing the largest pooled allocation when one exists), `put`
+//! returns it.  Steady-state epochs then run allocation-free on the paths
+//! that matter — the allocator drops out of the per-epoch profile and the
+//! LinkModel's communication times dominate measured wall clock, which is
+//! the trade the variable-rate schedule is designed around.
+//!
+//! A `Workspace` is strictly single-owner (one per worker; `&mut` on every
+//! call), so there is no locking on the hot path.
+
+use crate::tensor::Matrix;
+
+/// Buffers kept per workspace; overflow on `put` is simply dropped.  The
+/// epoch loop holds only a handful of live scratch buffers at once, so a
+/// small cap bounds memory without ever evicting a hot buffer.
+const MAX_POOLED: usize = 32;
+
+/// A pool of reusable `Vec<f32>` allocations.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    pool: Vec<Vec<f32>>,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace { pool: Vec::new() }
+    }
+
+    /// Pop the pooled buffer with the largest capacity (most likely to
+    /// satisfy the request without growing), or a fresh empty vec.
+    fn grab(&mut self) -> Vec<f32> {
+        let mut best: Option<usize> = None;
+        for (i, b) in self.pool.iter().enumerate() {
+            if best.map_or(true, |j| b.capacity() > self.pool[j].capacity()) {
+                best = Some(i);
+            }
+        }
+        match best {
+            Some(i) => self.pool.swap_remove(i),
+            None => Vec::new(),
+        }
+    }
+
+    /// An all-zero buffer of length `n`.
+    pub fn take_zeroed(&mut self, n: usize) -> Vec<f32> {
+        let mut buf = self.grab();
+        buf.clear();
+        buf.resize(n, 0.0);
+        buf
+    }
+
+    /// A buffer of length `n` with unspecified contents — cheapest take,
+    /// for outputs the caller fully overwrites.
+    pub fn take_scratch(&mut self, n: usize) -> Vec<f32> {
+        let mut buf = self.grab();
+        if buf.len() > n {
+            buf.truncate(n);
+        } else {
+            buf.resize(n, 0.0);
+        }
+        buf
+    }
+
+    /// An empty buffer (length 0) with whatever capacity the pool had —
+    /// for `extend_from_slice`-style payload staging.
+    pub fn take_empty(&mut self) -> Vec<f32> {
+        let mut buf = self.grab();
+        buf.clear();
+        buf
+    }
+
+    /// An all-zero matrix backed by pooled storage.
+    pub fn take_matrix_zeroed(&mut self, rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: self.take_zeroed(rows * cols) }
+    }
+
+    /// A matrix with unspecified contents backed by pooled storage (for
+    /// outputs that are fully overwritten, e.g. `matmul_into` targets).
+    pub fn take_matrix_scratch(&mut self, rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: self.take_scratch(rows * cols) }
+    }
+
+    /// A copy of `src` backed by pooled storage (replaces `src.clone()`).
+    pub fn take_matrix_copy(&mut self, src: &Matrix) -> Matrix {
+        let mut buf = self.take_scratch(src.data.len());
+        buf.copy_from_slice(&src.data);
+        Matrix { rows: src.rows, cols: src.cols, data: buf }
+    }
+
+    /// Return a buffer's allocation to the pool.
+    pub fn put(&mut self, buf: Vec<f32>) {
+        if buf.capacity() > 0 && self.pool.len() < MAX_POOLED {
+            self.pool.push(buf);
+        }
+    }
+
+    /// Return a matrix's backing allocation to the pool.
+    pub fn put_matrix(&mut self, m: Matrix) {
+        self.put(m.data);
+    }
+
+    /// Number of buffers currently pooled (diagnostics/tests).
+    pub fn pooled(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// Total pooled capacity in floats (diagnostics/tests).
+    pub fn pooled_floats(&self) -> usize {
+        self.pool.iter().map(|b| b.capacity()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_zeroed_reuses_allocation() {
+        let mut ws = Workspace::new();
+        let mut a = ws.take_zeroed(100);
+        a.iter_mut().for_each(|x| *x = 1.0);
+        let ptr = a.as_ptr();
+        ws.put(a);
+        assert_eq!(ws.pooled(), 1);
+        let b = ws.take_zeroed(80);
+        assert_eq!(b.as_ptr(), ptr, "allocation not reused");
+        assert!(b.iter().all(|&x| x == 0.0), "take_zeroed left stale data");
+        assert_eq!(ws.pooled(), 0);
+    }
+
+    #[test]
+    fn take_scratch_has_right_length() {
+        let mut ws = Workspace::new();
+        let a = ws.take_zeroed(64);
+        ws.put(a);
+        assert_eq!(ws.take_scratch(10).len(), 10);
+        assert_eq!(ws.take_scratch(200).len(), 200);
+    }
+
+    #[test]
+    fn grab_prefers_largest_capacity() {
+        let mut ws = Workspace::new();
+        ws.put(vec![0.0; 10]);
+        ws.put(vec![0.0; 1000]);
+        ws.put(vec![0.0; 100]);
+        let big = ws.take_scratch(500);
+        // the 1000-capacity buffer satisfies 500 without growing
+        assert!(big.capacity() >= 1000);
+    }
+
+    #[test]
+    fn matrix_roundtrip_preserves_shape_and_values() {
+        let mut ws = Workspace::new();
+        let src = Matrix::from_fn(3, 4, |i, j| (i * 4 + j) as f32);
+        let copy = ws.take_matrix_copy(&src);
+        assert_eq!(copy, src);
+        ws.put_matrix(copy);
+        let z = ws.take_matrix_zeroed(2, 5);
+        assert_eq!(z.shape(), (2, 5));
+        assert!(z.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn pool_is_bounded() {
+        let mut ws = Workspace::new();
+        for _ in 0..100 {
+            ws.put(vec![0.0; 8]);
+        }
+        assert!(ws.pooled() <= MAX_POOLED);
+    }
+
+    #[test]
+    fn zero_capacity_buffers_are_not_pooled() {
+        let mut ws = Workspace::new();
+        ws.put(Vec::new());
+        assert_eq!(ws.pooled(), 0);
+    }
+}

@@ -4,10 +4,72 @@
 
 use varco::compress::{kept_count, Compressor, RandomSubsetCompressor, Scheduler};
 use varco::graph::generate::{erdos_renyi, sbm};
+use varco::partition::worker_graph::SparseBlock;
 use varco::partition::{Partitioner, WorkerGraph};
 use varco::tensor::Matrix;
 use varco::util::testing::check_property;
 use varco::util::Rng;
+
+// ---- naive reference oracles for the optimized kernels ----
+//
+// Each optimized kernel in tensor.rs / worker_graph.rs is pinned against a
+// transparently-correct triple loop here, across random shapes including
+// empty and 1-row/1-col edges.  `matmul` and `spmm_t_into` preserve the
+// naive per-element accumulation order exactly, so they are compared
+// bitwise; `t_matmul` (slab reduction) and `matmul_nt` (unrolled dot) use
+// a fixed reduction tree of their own and are compared to tolerance.
+
+fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows);
+    let mut out = Matrix::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut s = 0.0f32;
+            for k in 0..a.cols {
+                s += a.get(i, k) * b.get(k, j);
+            }
+            out.set(i, j, s);
+        }
+    }
+    out
+}
+
+fn naive_spmm_t(sb: &SparseBlock, x: &Matrix) -> Matrix {
+    assert_eq!(sb.rows, x.rows);
+    let mut out = Matrix::zeros(sb.cols, x.cols);
+    for r in 0..sb.rows {
+        let lo = sb.indptr[r] as usize;
+        let hi = sb.indptr[r + 1] as usize;
+        for (k, &c) in sb.indices[lo..hi].iter().enumerate() {
+            let w = sb.values[lo + k];
+            for f in 0..x.cols {
+                let v = out.get(c as usize, f) + w * x.get(r, f);
+                out.set(c as usize, f, v);
+            }
+        }
+    }
+    out
+}
+
+fn close(got: &Matrix, want: &Matrix, tol: f32, ctx: &str) {
+    assert_eq!(got.shape(), want.shape(), "{ctx}: shape");
+    for (i, (x, y)) in got.data.iter().zip(&want.data).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + y.abs()),
+            "{ctx}: [{i}] {x} vs {y}"
+        );
+    }
+}
+
+/// Random shape in [0, cap), with the edge sizes 0 and 1 oversampled so
+/// empty and single-row/column operands are hit every run.
+fn edge_dim(rng: &mut Rng, cap: usize) -> usize {
+    match rng.next_below(6) {
+        0 => 0,
+        1 => 1,
+        _ => rng.next_below(cap),
+    }
+}
 
 #[test]
 fn prop_partitioners_produce_balanced_permutations() {
@@ -171,6 +233,99 @@ fn prop_matrix_matmul_associativity_with_identity() {
         let prod = a.matmul(&eye);
         for (x, y) in prod.data.iter().zip(&a.data) {
             assert_eq!(x, y);
+        }
+    });
+}
+
+#[test]
+fn prop_matmul_matches_naive_bitwise() {
+    check_property("matmul-naive", 20, |rng| {
+        let (rows, k, n) = (edge_dim(rng, 40), edge_dim(rng, 40), edge_dim(rng, 40));
+        let a = Matrix::from_fn(rows, k, |_, _| rng.next_normal());
+        let b = Matrix::from_fn(k, n, |_, _| rng.next_normal());
+        let got = a.matmul(&b);
+        let want = naive_matmul(&a, &b);
+        // the blocked kernel accumulates over k in the naive order per
+        // element, so the pin is exact, not approximate
+        assert_eq!(got.data, want.data, "{rows}x{k} @ {k}x{n}");
+    });
+}
+
+#[test]
+fn prop_matmul_nt_matches_naive() {
+    check_property("matmul-nt-naive", 20, |rng| {
+        let (rows, k, n) = (edge_dim(rng, 32), edge_dim(rng, 32), edge_dim(rng, 32));
+        let a = Matrix::from_fn(rows, k, |_, _| rng.next_normal());
+        let b = Matrix::from_fn(n, k, |_, _| rng.next_normal());
+        let got = a.matmul_nt(&b);
+        let want = naive_matmul(&a, &b.transpose());
+        close(&got, &want, 1e-4, &format!("{rows}x{k} @ ({n}x{k})^T"));
+    });
+}
+
+#[test]
+fn prop_t_matmul_matches_naive() {
+    check_property("t-matmul-naive", 15, |rng| {
+        // k spans the fixed-slab boundary so the partial reduction runs
+        let k = match rng.next_below(4) {
+            0 => 1,
+            1 => rng.next_below(40),
+            _ => 100 + rng.next_below(300),
+        };
+        let (m, n) = (edge_dim(rng, 24), edge_dim(rng, 24));
+        let a = Matrix::from_fn(k, m, |_, _| rng.next_normal());
+        let b = Matrix::from_fn(k, n, |_, _| rng.next_normal());
+        let got = a.t_matmul(&b);
+        let want = naive_matmul(&a.transpose(), &b);
+        close(&got, &want, 1e-3, &format!("({k}x{m})^T @ {k}x{n}"));
+    });
+}
+
+#[test]
+fn prop_spmm_t_matches_naive_bitwise() {
+    check_property("spmm-t-naive", 10, |rng| {
+        let q = 2 + rng.next_below(2);
+        let n = q * (8 + rng.next_below(40));
+        let (g, _) = sbm(n, 2, 0.3, 0.1, rng.next_u64());
+        let p = varco::partition::random::RandomPartitioner { seed: rng.next_u64() }
+            .partition(&g, q)
+            .unwrap();
+        let wgs = WorkerGraph::build_all(&g, &p).unwrap();
+        let w = &wgs[rng.next_below(q)];
+        let f = 1 + rng.next_below(16);
+        for sb in [&w.s_ll, &w.s_lb] {
+            let x = Matrix::from_fn(sb.rows, f, |_, _| rng.next_normal());
+            let mut got = Matrix::zeros(sb.cols, f);
+            sb.spmm_t_into(&x, &mut got);
+            let want = naive_spmm_t(sb, &x);
+            // the banded parallel path preserves CSR-order accumulation
+            // per output element: bitwise, not approximately, equal
+            assert_eq!(got.data, want.data, "{}x{} f={f}", sb.rows, sb.cols);
+        }
+    });
+}
+
+#[test]
+fn prop_topk_partial_selection_matches_full_argsort() {
+    check_property("topk-argsort", 25, |rng| {
+        let n = 1 + rng.next_below(500);
+        let rate = [1.0f32, 2.0, 3.7, 16.0, 128.0][rng.next_below(5)];
+        let mut x: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+        // inject duplicate magnitudes so tie-breaking is exercised
+        if n > 4 {
+            x[n / 2] = x[0];
+            x[n - 1] = -x[0];
+        }
+        let p = varco::compress::topk::TopKCompressor.compress(&x, rate, 0);
+        let m = kept_count(n, rate);
+        let mags: Vec<f32> = x.iter().map(|v| v.abs()).collect();
+        let mut want: Vec<u32> =
+            varco::util::argsort_desc(&mags)[..m].iter().map(|&i| i as u32).collect();
+        want.sort_unstable();
+        let idx = p.indices.as_ref().expect("topk carries indices");
+        assert_eq!(idx, &want);
+        for (&i, &v) in idx.iter().zip(&p.values) {
+            assert_eq!(v, x[i as usize]);
         }
     });
 }
