@@ -1,0 +1,93 @@
+//! Accuracy-vs-bytes frontier: closed-loop byte budgets vs fixed-rate vs
+//! full communication on one dataset.
+//!
+//!     cargo run --release --example budget_sweep -- [--dataset D] [--q Q]
+//!         [--epochs E] [--hidden H] [--lr LR] [--seed S]
+//!         [--budgets 250k,1m,4m | auto] [--out budget_sweep.json]
+//!
+//! `--budgets auto` (default) derives three budgets from the measured
+//! fixed:4 spend — 0.5x, 1x, 2x — so the headline row "budgeted run at
+//! exactly fixed:4's bytes" is always present.  The JSON artifact is one
+//! row per run: budget handed in, exact wire bytes spent, final loss,
+//! final test accuracy, test accuracy at best validation.
+
+use varco::config::{parse_byte_size, TrainConfig};
+use varco::experiments::{budget_frontier, frontier_json, frontier_table};
+use varco::graph::Dataset;
+
+fn main() -> varco::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut base = TrainConfig {
+        dataset: "karate-like".into(),
+        q: 2,
+        hidden: 8,
+        epochs: 60,
+        lr: 0.02,
+        eval_every: 5,
+        ..Default::default()
+    };
+    let mut budgets: Vec<usize> = Vec::new();
+    let mut out_path = String::from("budget_sweep.json");
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--dataset" => {
+                i += 1;
+                base.dataset = args[i].clone();
+            }
+            "--q" => {
+                i += 1;
+                base.q = args[i].parse()?;
+            }
+            "--epochs" => {
+                i += 1;
+                base.epochs = args[i].parse()?;
+            }
+            "--hidden" => {
+                i += 1;
+                base.hidden = args[i].parse()?;
+            }
+            "--lr" => {
+                i += 1;
+                base.lr = args[i].parse()?;
+            }
+            "--seed" => {
+                i += 1;
+                base.seed = args[i].parse()?;
+            }
+            "--nodes" => {
+                i += 1;
+                base.nodes = args[i].parse()?;
+            }
+            "--budgets" => {
+                i += 1;
+                if args[i] != "auto" {
+                    budgets = args[i]
+                        .split(',')
+                        .map(parse_byte_size)
+                        .collect::<varco::Result<Vec<_>>>()?;
+                }
+            }
+            "--out" => {
+                i += 1;
+                out_path = args[i].clone();
+            }
+            other => anyhow::bail!("unknown flag {other:?}"),
+        }
+        i += 1;
+    }
+
+    eprintln!(
+        "[budget_sweep] {} q={} epochs={} budgets={}",
+        base.dataset,
+        base.q,
+        base.epochs,
+        if budgets.is_empty() { "auto (0.5x/1x/2x of fixed:4)".into() } else { format!("{budgets:?}") }
+    );
+    let dataset = Dataset::load(&base.dataset, base.nodes, base.seed)?;
+    let points = budget_frontier(&base, &dataset, &budgets)?;
+    print!("{}", frontier_table(&points));
+    std::fs::write(&out_path, frontier_json(&base, &points).to_string_pretty() + "\n")?;
+    eprintln!("[budget_sweep] wrote {out_path}");
+    Ok(())
+}

@@ -18,7 +18,7 @@ fn main() -> varco::Result<()> {
     let mut trainer = build_trainer(&cfg)?;
     let report = trainer.run()?;
 
-    println!("\nepoch  loss    rate   test_acc  floats_cum");
+    println!("\nepoch  loss    rate   test_acc  bytes_cum");
     for r in report.records.iter().step_by(10.max(report.records.len() / 10)) {
         println!(
             "{:<6} {:<7.4} {:<6} {:<9.4} {}",
@@ -26,15 +26,15 @@ fn main() -> varco::Result<()> {
             r.loss,
             r.rate.map_or("-".into(), |x| format!("{x:.0}")),
             r.test_acc,
-            r.floats_cum
+            r.bytes_cum
         );
     }
     let last = report.records.last().unwrap();
     println!(
-        "\nfinal: test accuracy {:.3} (test@best-val {:.3}), {} floats communicated",
+        "\nfinal: test accuracy {:.3} (test@best-val {:.3}), {} wire bytes communicated",
         last.test_acc,
         report.test_at_best_val(),
-        report.total_floats()
+        report.total_bytes()
     );
     println!("communication breakdown: {:?}", trainer.ledger().breakdown_by_kind());
     Ok(())

@@ -41,7 +41,7 @@ fn main() -> varco::Result<()> {
     let train_s = t1.elapsed().as_secs_f64();
 
     println!("\nloss curve (every 10 epochs):");
-    println!("{:<6} {:>8} {:>7} {:>9} {:>9} {:>14}", "epoch", "loss", "rate", "train_acc", "test_acc", "floats_cum");
+    println!("{:<6} {:>8} {:>7} {:>9} {:>9} {:>14}", "epoch", "loss", "rate", "train_acc", "test_acc", "bytes_cum");
     for r in report.records.iter().filter(|r| r.epoch % 10 == 0 || r.epoch + 1 == cfg.epochs) {
         println!(
             "{:<6} {:>8.4} {:>7} {:>9.4} {:>9.4} {:>14}",
@@ -50,7 +50,7 @@ fn main() -> varco::Result<()> {
             r.rate.map_or("-".into(), |x| format!("{x:.0}")),
             r.train_acc,
             r.test_acc,
-            r.floats_cum
+            r.bytes_cum
         );
     }
     let last = report.records.last().unwrap();

@@ -45,14 +45,14 @@ fn main() -> varco::Result<()> {
         let report = RunReport::read_json(path)?;
         let floats = report.total_floats();
         // reconstruct a one-entry-per-epoch ledger approximation: the
-        // report stores cumulative floats per epoch
+        // report stores cumulative wire bytes per epoch
         let mut ledger = varco::comm::CommLedger::new();
         let mut prev = 0usize;
         for r in &report.records {
             // one aggregate message per epoch per link-direction is a
             // lower bound on latency cost; α is negligible vs β here
-            ledger.record(r.epoch, 0, 1, "epoch", r.floats_cum - prev);
-            prev = r.floats_cum;
+            ledger.record(r.epoch, 0, 1, "epoch", r.bytes_cum - prev);
+            prev = r.bytes_cum;
         }
         print!("{:<34} {:>12.2}", report.algorithm, floats as f64 / 1e9);
         for (_, model) in fabrics {

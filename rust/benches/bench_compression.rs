@@ -1,11 +1,13 @@
-//! L3 micro-bench: compression channel throughput vs rate and mechanism.
+//! L3 micro-bench: compression channel throughput vs rate and mechanism,
+//! plus the wire codec's encode/decode MB/s (written to `BENCH_wire.json`
+//! at the repo root so CI tracks serialization throughput PR over PR).
 //! Informs the per-message overhead budget in EXPERIMENTS.md §Perf.
 
 #[path = "harness.rs"]
 mod harness;
 
-use varco::compress::by_name;
-use varco::util::Rng;
+use varco::compress::{by_name, Payload};
+use varco::util::{Json, Rng};
 
 fn main() {
     let budget = harness::budget();
@@ -36,4 +38,40 @@ fn main() {
             std::hint::black_box(out[0]);
         });
     }
+
+    harness::section("wire codec: encode / decode (serialized MB/s)");
+    let mut wire_entries = Vec::new();
+    for name in ["subset", "topk", "quantize"] {
+        let comp = by_name(name).unwrap();
+        for rate in [1.0f32, 4.0, 32.0] {
+            let p = comp.compress(&payload, rate, 42);
+            let bytes = p.encode();
+            assert_eq!(bytes.len(), p.wire_bytes(), "{name} r={rate}: byte pin");
+            let mb = bytes.len() as f64 / 1e6;
+            let m_enc = harness::bench(&format!("{name} r={rate} encode"), budget, || {
+                std::hint::black_box(p.encode().len());
+            });
+            let enc_mbs = m_enc.throughput(mb);
+            let m_dec = harness::bench(&format!("{name} r={rate} decode"), budget, || {
+                std::hint::black_box(Payload::decode(&bytes).unwrap().n);
+            });
+            let dec_mbs = m_dec.throughput(mb);
+            println!("    -> {:.0} MB/s encode, {:.0} MB/s decode ({} B)", enc_mbs, dec_mbs, bytes.len());
+            wire_entries.push(Json::obj(vec![
+                ("mechanism", Json::str(name)),
+                ("rate", Json::num(f64::from(rate))),
+                ("wire_bytes", Json::num(bytes.len() as f64)),
+                ("encode_mb_s", Json::num(enc_mbs)),
+                ("decode_mb_s", Json::num(dec_mbs)),
+            ]));
+        }
+    }
+    let doc = Json::obj(vec![
+        ("schema", Json::str("varco-wire-bench/1")),
+        ("generated_by", Json::str("cargo bench --bench bench_compression")),
+        ("payload_floats", Json::num(payload.len() as f64)),
+        ("entries", Json::Arr(wire_entries)),
+    ]);
+    std::fs::write("BENCH_wire.json", doc.to_string_pretty() + "\n").unwrap();
+    println!("\nwrote BENCH_wire.json");
 }

@@ -15,7 +15,7 @@
 //! kind), never from shared RNG call order, so injection is reproducible
 //! for a given seed regardless of thread interleaving.
 
-use super::CommLedger;
+use super::{CommLedger, LedgerMode};
 use crate::compress::Payload;
 use crate::util::Rng;
 use std::collections::HashMap;
@@ -96,7 +96,8 @@ struct Shared {
     mailboxes: Vec<Mutex<Vec<Message>>>,
     /// `q` per-sender ledger shards plus one coordinator shard (index `q`)
     shards: Vec<Mutex<CommLedger>>,
-    total: AtomicUsize,
+    /// running byte total (exact serialized wire bytes)
+    total_bytes: AtomicUsize,
     dropped: AtomicUsize,
     staled: AtomicUsize,
 }
@@ -113,12 +114,18 @@ impl Fabric {
     }
 
     pub fn with_policy(q: usize, policy: FailurePolicy) -> Fabric {
+        Fabric::with_policy_and_ledger(q, policy, LedgerMode::Detailed)
+    }
+
+    /// Full control over failure injection and ledger detail (budget runs
+    /// use aggregated shards so long simulations stay bounded).
+    pub fn with_policy_and_ledger(q: usize, policy: FailurePolicy, ledger: LedgerMode) -> Fabric {
         let shared = Shared {
             q,
             policy,
             mailboxes: (0..q).map(|_| Mutex::new(Vec::new())).collect(),
-            shards: (0..q + 1).map(|_| Mutex::new(CommLedger::new())).collect(),
-            total: AtomicUsize::new(0),
+            shards: (0..q + 1).map(|_| Mutex::new(CommLedger::with_mode(ledger))).collect(),
+            total_bytes: AtomicUsize::new(0),
             dropped: AtomicUsize::new(0),
             staled: AtomicUsize::new(0),
         };
@@ -142,17 +149,22 @@ impl Fabric {
             .collect()
     }
 
-    /// Record a coordinator-originated wire cost (weight sync rounds) into
-    /// the coordinator shard.
-    pub fn record(&self, epoch: usize, from: usize, to: usize, kind: &'static str, floats: usize) {
+    /// Record a coordinator-originated wire cost in bytes (weight sync
+    /// rounds) into the coordinator shard.
+    pub fn record(&self, epoch: usize, from: usize, to: usize, kind: &'static str, bytes: usize) {
         let q = self.shared.q;
-        self.shared.shards[q].lock().unwrap().record(epoch, from, to, kind, floats);
-        self.shared.total.fetch_add(floats, Ordering::Relaxed);
+        self.shared.shards[q].lock().unwrap().record(epoch, from, to, kind, bytes);
+        self.shared.total_bytes.fetch_add(bytes, Ordering::Relaxed);
     }
 
-    /// Total floats on the wire so far (O(1), hot-path safe).
+    /// Total bytes on the wire so far (O(1), hot-path safe).
+    pub fn total_bytes(&self) -> usize {
+        self.shared.total_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Float-equivalents (derived view of the byte total).
     pub fn total_floats(&self) -> usize {
-        self.shared.total.load(Ordering::Relaxed)
+        self.total_bytes().div_ceil(4)
     }
 
     /// Messages mutated to zeros by the drop policy so far.
@@ -198,20 +210,22 @@ impl Endpoint {
         self.rank
     }
 
-    /// Send a message; the sender's ledger shard records its wire cost,
-    /// failures may mutate it.
-    pub fn send(&mut self, epoch: usize, mut msg: Message) {
+    /// Send a message; the sender's ledger shard records its exact
+    /// serialized byte cost, failures may mutate it.  Returns the charged
+    /// byte count so callers (feedback tracking) never recompute it.
+    pub fn send(&mut self, epoch: usize, mut msg: Message) -> usize {
         let shared = &self.shared;
         assert!(msg.to < shared.q && msg.from < shared.q, "bad endpoint");
         assert!(msg.from == self.rank, "endpoint {} cannot send as {}", self.rank, msg.from);
+        let wire_bytes = msg.payload.wire_bytes();
         shared.shards[self.rank].lock().unwrap().record(
             epoch,
             msg.from,
             msg.to,
             msg.kind.ledger_tag(),
-            msg.payload.wire_floats(),
+            wire_bytes,
         );
-        shared.total.fetch_add(msg.payload.wire_floats(), Ordering::Relaxed);
+        shared.total_bytes.fetch_add(wire_bytes, Ordering::Relaxed);
         let policy = &shared.policy;
         let injectable = msg.kind != MessageKind::Weights;
         if injectable && policy.drop_prob + policy.stale_prob > 0.0 {
@@ -236,6 +250,7 @@ impl Endpoint {
             self.history.insert((msg.from, msg.to, msg.kind), msg.payload.clone());
         }
         shared.mailboxes[msg.to].lock().unwrap().push(msg);
+        wire_bytes
     }
 
     /// Drain all messages waiting for this endpoint, sorted into the
@@ -259,7 +274,7 @@ mod tests {
             indices: None,
             key,
             side: vec![],
-            wire_override: None,
+            codec: crate::compress::Codec::Keyed,
         }
     }
 
@@ -277,8 +292,10 @@ mod tests {
         assert_eq!(msgs.len(), 1);
         assert_eq!(msgs[0].payload.values, vec![1.0, 2.0]);
         assert!(f.is_quiescent());
-        assert_eq!(f.total_floats(), 2);
-        assert_eq!(f.merged_ledger().total_floats(), 2);
+        let expect = payload(&[1.0, 2.0], 7).wire_bytes();
+        assert_eq!(f.total_bytes(), expect);
+        assert_eq!(f.merged_ledger().total_bytes(), expect);
+        assert_eq!(f.total_floats(), expect.div_ceil(4));
     }
 
     #[test]
@@ -289,7 +306,8 @@ mod tests {
         let msgs = eps[1].recv_all();
         assert_eq!(msgs[0].payload.values, vec![0.0, 0.0]);
         assert_eq!(f.dropped(), 1);
-        assert_eq!(f.total_floats(), 2);
+        // dropped messages still charge their full wire cost
+        assert_eq!(f.total_bytes(), payload(&[3.0, 4.0], 9).wire_bytes());
     }
 
     #[test]
@@ -329,6 +347,31 @@ mod tests {
         let f = Fabric::new(2);
         let mut eps = f.endpoints();
         eps[0].send(0, msg(1, 0, MessageKind::Weights, &[], 0));
+    }
+
+    #[test]
+    fn aggregated_shards_preserve_totals() {
+        let run = |mode: LedgerMode| {
+            let f = Fabric::with_policy_and_ledger(2, FailurePolicy::default(), mode);
+            let mut eps = f.endpoints();
+            eps[0].send(0, msg(0, 1, MessageKind::Activation { layer: 0 }, &[1.0, 2.0], 3));
+            eps[1].send(1, msg(1, 0, MessageKind::Gradient { layer: 0 }, &[4.0], 5));
+            f.record(1, 0, 0, "weights", 100);
+            for ep in eps.iter_mut() {
+                ep.recv_all();
+            }
+            f
+        };
+        let det = run(LedgerMode::Detailed);
+        let agg = run(LedgerMode::Aggregated);
+        assert_eq!(det.total_bytes(), agg.total_bytes());
+        let (ld, la) = (det.merged_ledger(), agg.merged_ledger());
+        assert_eq!(ld.total_bytes(), la.total_bytes());
+        assert_eq!(ld.breakdown_by_kind(), la.breakdown_by_kind());
+        assert_eq!(ld.cumulative_bytes_by_epoch(), la.cumulative_bytes_by_epoch());
+        assert_eq!(ld.by_epoch_kind(), la.by_epoch_kind());
+        assert!(la.entries().is_empty() && !ld.entries().is_empty());
+        assert!(la.verify_conservation());
     }
 
     #[test]
@@ -372,7 +415,8 @@ mod tests {
                 });
             }
         });
-        assert_eq!(f.total_floats(), 4 * 3 * 3);
+        let per_msg = payload(&[0.0; 3], 0).wire_bytes();
+        assert_eq!(f.total_bytes(), 4 * 3 * per_msg);
         let mut eps = f.endpoints();
         for ep in eps.iter_mut() {
             let msgs = ep.recv_all();

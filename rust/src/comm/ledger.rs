@@ -1,6 +1,35 @@
-//! Communication accounting: the x-axis of Figure 5.
+//! Communication accounting in exact serialized bytes.
+//!
+//! Every message's cost is the length of its encoded wire buffer
+//! (`Payload::wire_bytes`, pinned to `encode().len()` by the property
+//! tests).  The historical float-equivalent totals — Figure 5's x-axis —
+//! are a *derived view* (`bytes.div_ceil(4)`), so existing plots keep
+//! their meaning while budgets, link models, and controllers reason in
+//! real bytes.
+//!
+//! Two detail levels:
+//!
+//! * [`LedgerMode::Detailed`] (default) keeps every [`LedgerEntry`] —
+//!   unbounded memory on long runs, full per-message introspection.
+//! * [`LedgerMode::Aggregated`] folds records into per-(epoch, kind)
+//!   cells holding `(bytes, messages)`.  `total_bytes`, `per_epoch`, and
+//!   `breakdown_by_kind` are preserved exactly; this is what the budget
+//!   controller's feedback path uses so week-long simulated runs stay
+//!   O(epochs · kinds).
 
-/// One accounting record: a message's float-equivalents on the wire.
+use std::collections::BTreeMap;
+
+/// How much per-message detail the ledger retains.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LedgerMode {
+    /// keep every entry (unbounded; full introspection)
+    #[default]
+    Detailed,
+    /// fold into per-(epoch, kind) byte/message totals (bounded)
+    Aggregated,
+}
+
+/// One accounting record: a message's exact bytes on the wire.
 #[derive(Clone, Debug, PartialEq)]
 pub struct LedgerEntry {
     pub epoch: usize,
@@ -8,76 +37,204 @@ pub struct LedgerEntry {
     pub to: usize,
     /// forward-activation, backward-gradient, or weight-sync round
     pub kind: &'static str,
-    pub floats: usize,
+    pub bytes: usize,
+}
+
+/// Per-(epoch, kind) aggregate cell.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AggCell {
+    pub bytes: usize,
+    pub messages: usize,
+}
+
+#[derive(Clone, Debug)]
+enum Detail {
+    Entries(Vec<LedgerEntry>),
+    PerEpochKind(BTreeMap<(usize, &'static str), AggCell>),
 }
 
 /// Append-only ledger; aggregation helpers answer the paper's questions.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct CommLedger {
-    entries: Vec<LedgerEntry>,
-    /// running total, so hot-path queries are O(1)
-    total: usize,
+    detail: Detail,
+    /// running totals, so hot-path queries are O(1)
+    total_bytes: usize,
+    messages: usize,
     per_epoch: Vec<usize>,
+}
+
+impl Default for CommLedger {
+    fn default() -> Self {
+        CommLedger::new()
+    }
 }
 
 impl CommLedger {
     pub fn new() -> Self {
-        Self::default()
+        CommLedger::with_mode(LedgerMode::Detailed)
     }
 
-    pub fn record(&mut self, epoch: usize, from: usize, to: usize, kind: &'static str, floats: usize) {
+    /// Bounded-memory ledger folding entries per (epoch, kind).
+    pub fn aggregated() -> Self {
+        CommLedger::with_mode(LedgerMode::Aggregated)
+    }
+
+    pub fn with_mode(mode: LedgerMode) -> Self {
+        let detail = match mode {
+            LedgerMode::Detailed => Detail::Entries(Vec::new()),
+            LedgerMode::Aggregated => Detail::PerEpochKind(BTreeMap::new()),
+        };
+        CommLedger { detail, total_bytes: 0, messages: 0, per_epoch: Vec::new() }
+    }
+
+    pub fn mode(&self) -> LedgerMode {
+        match self.detail {
+            Detail::Entries(_) => LedgerMode::Detailed,
+            Detail::PerEpochKind(_) => LedgerMode::Aggregated,
+        }
+    }
+
+    pub fn record(&mut self, epoch: usize, from: usize, to: usize, kind: &'static str, bytes: usize) {
         if self.per_epoch.len() <= epoch {
             self.per_epoch.resize(epoch + 1, 0);
         }
-        self.per_epoch[epoch] += floats;
-        self.total += floats;
-        self.entries.push(LedgerEntry { epoch, from, to, kind, floats });
+        self.per_epoch[epoch] += bytes;
+        self.total_bytes += bytes;
+        self.messages += 1;
+        match &mut self.detail {
+            Detail::Entries(v) => v.push(LedgerEntry { epoch, from, to, kind, bytes }),
+            Detail::PerEpochKind(m) => {
+                let cell = m.entry((epoch, kind)).or_default();
+                cell.bytes += bytes;
+                cell.messages += 1;
+            }
+        }
     }
 
-    /// Total floats communicated so far.
+    /// Total bytes communicated so far.
+    pub fn total_bytes(&self) -> usize {
+        self.total_bytes
+    }
+
+    /// Float-equivalents (derived view; the historical Figure 5 unit).
     pub fn total_floats(&self) -> usize {
-        self.total
+        self.total_bytes.div_ceil(4)
     }
 
-    pub fn floats_in_epoch(&self, epoch: usize) -> usize {
+    /// Number of messages recorded (exact in both modes).
+    pub fn message_count(&self) -> usize {
+        self.messages
+    }
+
+    pub fn bytes_in_epoch(&self, epoch: usize) -> usize {
         self.per_epoch.get(epoch).copied().unwrap_or(0)
     }
 
-    /// Cumulative floats after each epoch (Figure 5's x-series).
-    pub fn cumulative_by_epoch(&self) -> Vec<usize> {
+    pub fn floats_in_epoch(&self, epoch: usize) -> usize {
+        self.bytes_in_epoch(epoch).div_ceil(4)
+    }
+
+    /// Cumulative bytes after each epoch (Figure 5's x-series, in bytes).
+    pub fn cumulative_bytes_by_epoch(&self) -> Vec<usize> {
         let mut acc = 0;
         self.per_epoch
             .iter()
-            .map(|&f| {
-                acc += f;
+            .map(|&b| {
+                acc += b;
                 acc
             })
             .collect()
     }
 
+    /// Cumulative float-equivalents after each epoch (derived view).
+    pub fn cumulative_by_epoch(&self) -> Vec<usize> {
+        self.cumulative_bytes_by_epoch().into_iter().map(|b| b.div_ceil(4)).collect()
+    }
+
+    /// Per-message entries.  Empty in aggregated mode — check [`Self::mode`]
+    /// (totals, per-epoch sums, and kind breakdowns remain exact there).
     pub fn entries(&self) -> &[LedgerEntry] {
-        &self.entries
+        match &self.detail {
+            Detail::Entries(v) => v,
+            Detail::PerEpochKind(_) => &[],
+        }
     }
 
-    /// Conservation check: per-epoch sums equal entry sums (property test).
+    /// Aggregate cells per (epoch, kind); computed on the fly in detailed
+    /// mode so both modes answer the budget controller's feedback queries
+    /// identically.
+    pub fn by_epoch_kind(&self) -> BTreeMap<(usize, &'static str), AggCell> {
+        match &self.detail {
+            Detail::PerEpochKind(m) => m.clone(),
+            Detail::Entries(v) => {
+                let mut m: BTreeMap<(usize, &'static str), AggCell> = BTreeMap::new();
+                for e in v {
+                    let cell = m.entry((e.epoch, e.kind)).or_default();
+                    cell.bytes += e.bytes;
+                    cell.messages += 1;
+                }
+                m
+            }
+        }
+    }
+
+    /// Conservation check: per-epoch sums equal record sums (property test).
     pub fn verify_conservation(&self) -> bool {
-        let from_entries: usize = self.entries.iter().map(|e| e.floats).sum();
-        from_entries == self.total && self.per_epoch.iter().sum::<usize>() == self.total
+        let from_detail: usize = match &self.detail {
+            Detail::Entries(v) => v.iter().map(|e| e.bytes).sum(),
+            Detail::PerEpochKind(m) => m.values().map(|c| c.bytes).sum(),
+        };
+        from_detail == self.total_bytes && self.per_epoch.iter().sum::<usize>() == self.total_bytes
     }
 
-    pub fn breakdown_by_kind(&self) -> std::collections::BTreeMap<&'static str, usize> {
-        let mut map = std::collections::BTreeMap::new();
-        for e in &self.entries {
-            *map.entry(e.kind).or_insert(0) += e.floats;
+    pub fn breakdown_by_kind(&self) -> BTreeMap<&'static str, usize> {
+        let mut map = BTreeMap::new();
+        match &self.detail {
+            Detail::Entries(v) => {
+                for e in v {
+                    *map.entry(e.kind).or_insert(0) += e.bytes;
+                }
+            }
+            Detail::PerEpochKind(m) => {
+                for (&(_, kind), cell) in m {
+                    *map.entry(kind).or_insert(0) += cell.bytes;
+                }
+            }
         }
         map
     }
 
-    /// Append every entry of `other` (the sharded fabric merges per-worker
-    /// ledgers through this; totals and per-epoch sums stay consistent).
+    /// Fold every record of `other` into `self` (the sharded fabric merges
+    /// per-worker ledgers through this; totals and per-epoch sums stay
+    /// consistent).  Merging an aggregated source into a detailed target
+    /// collapses the target to aggregated mode — per-message identity is
+    /// already gone.
     pub fn merge_from(&mut self, other: &CommLedger) {
-        for e in other.entries() {
-            self.record(e.epoch, e.from, e.to, e.kind, e.floats);
+        match &other.detail {
+            Detail::Entries(v) => {
+                for e in v {
+                    self.record(e.epoch, e.from, e.to, e.kind, e.bytes);
+                }
+            }
+            Detail::PerEpochKind(m) => {
+                if let Detail::Entries(_) = self.detail {
+                    let mut folded = CommLedger::aggregated();
+                    folded.merge_from(self);
+                    *self = folded;
+                }
+                let Detail::PerEpochKind(mine) = &mut self.detail else { unreachable!() };
+                for (&(epoch, kind), cell) in m {
+                    let c = mine.entry((epoch, kind)).or_default();
+                    c.bytes += cell.bytes;
+                    c.messages += cell.messages;
+                    if self.per_epoch.len() <= epoch {
+                        self.per_epoch.resize(epoch + 1, 0);
+                    }
+                    self.per_epoch[epoch] += cell.bytes;
+                    self.total_bytes += cell.bytes;
+                    self.messages += cell.messages;
+                }
+            }
         }
     }
 }
@@ -92,10 +249,12 @@ mod tests {
         l.record(0, 0, 1, "fwd", 100);
         l.record(0, 1, 0, "fwd", 50);
         l.record(2, 0, 1, "bwd", 25);
-        assert_eq!(l.total_floats(), 175);
-        assert_eq!(l.floats_in_epoch(0), 150);
-        assert_eq!(l.floats_in_epoch(1), 0);
-        assert_eq!(l.cumulative_by_epoch(), vec![150, 150, 175]);
+        assert_eq!(l.total_bytes(), 175);
+        assert_eq!(l.total_floats(), 44); // ceil(175/4)
+        assert_eq!(l.bytes_in_epoch(0), 150);
+        assert_eq!(l.bytes_in_epoch(1), 0);
+        assert_eq!(l.cumulative_bytes_by_epoch(), vec![150, 150, 175]);
+        assert_eq!(l.message_count(), 3);
         assert!(l.verify_conservation());
     }
 
@@ -118,9 +277,9 @@ mod tests {
         b.record(0, 1, 0, "fwd", 5);
         b.record(2, 1, 0, "bwd", 7);
         a.merge_from(&b);
-        assert_eq!(a.total_floats(), 22);
-        assert_eq!(a.floats_in_epoch(0), 15);
-        assert_eq!(a.floats_in_epoch(2), 7);
+        assert_eq!(a.total_bytes(), 22);
+        assert_eq!(a.bytes_in_epoch(0), 15);
+        assert_eq!(a.bytes_in_epoch(2), 7);
         assert_eq!(a.entries().len(), 3);
         assert!(a.verify_conservation());
     }
@@ -128,8 +287,56 @@ mod tests {
     #[test]
     fn empty_ledger() {
         let l = CommLedger::new();
-        assert_eq!(l.total_floats(), 0);
+        assert_eq!(l.total_bytes(), 0);
         assert!(l.cumulative_by_epoch().is_empty());
         assert!(l.verify_conservation());
+    }
+
+    #[test]
+    fn aggregated_mode_preserves_all_aggregates() {
+        let mut d = CommLedger::new();
+        let mut a = CommLedger::aggregated();
+        for (epoch, kind, bytes) in [
+            (0, "activation", 120),
+            (0, "activation", 60),
+            (0, "weights", 400),
+            (1, "gradient", 75),
+            (1, "activation", 33),
+            (3, "weights", 400),
+        ] {
+            d.record(epoch, 0, 1, kind, bytes);
+            a.record(epoch, 0, 1, kind, bytes);
+        }
+        assert_eq!(a.mode(), LedgerMode::Aggregated);
+        assert_eq!(a.total_bytes(), d.total_bytes());
+        assert_eq!(a.message_count(), d.message_count());
+        assert_eq!(a.cumulative_bytes_by_epoch(), d.cumulative_bytes_by_epoch());
+        assert_eq!(a.breakdown_by_kind(), d.breakdown_by_kind());
+        assert_eq!(a.by_epoch_kind(), d.by_epoch_kind());
+        assert!(a.verify_conservation());
+        assert!(a.entries().is_empty(), "aggregated mode stores no entries");
+        // memory stays bounded by (epochs x kinds), not message count
+        assert_eq!(a.by_epoch_kind().len(), 5);
+    }
+
+    #[test]
+    fn merging_aggregated_into_detailed_collapses_target() {
+        let mut d = CommLedger::new();
+        d.record(0, 0, 1, "fwd", 10);
+        let mut a = CommLedger::aggregated();
+        a.record(0, 1, 0, "fwd", 5);
+        a.record(1, 1, 0, "bwd", 8);
+        d.merge_from(&a);
+        assert_eq!(d.mode(), LedgerMode::Aggregated);
+        assert_eq!(d.total_bytes(), 23);
+        assert_eq!(d.message_count(), 3);
+        assert_eq!(d.bytes_in_epoch(0), 15);
+        assert!(d.verify_conservation());
+        // detailed source into aggregated target also folds cleanly
+        let mut src = CommLedger::new();
+        src.record(2, 0, 1, "fwd", 11);
+        d.merge_from(&src);
+        assert_eq!(d.total_bytes(), 34);
+        assert!(d.verify_conservation());
     }
 }

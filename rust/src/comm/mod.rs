@@ -1,15 +1,23 @@
 //! Simulated inter-worker communication fabric with exact accounting.
 //!
-//! The paper's efficiency metric (Figure 5) is accuracy per float
-//! communicated; the `Ledger` counts exactly those floats per message.
+//! The paper's efficiency metric (Figure 5) is accuracy per unit
+//! communicated; the [`CommLedger`] counts the **exact serialized bytes**
+//! of every message (`Payload::wire_bytes` — pinned to `encode().len()`
+//! by the property tests), with the historical float-equivalent totals
+//! kept as a derived view (`bytes.div_ceil(4)`) so existing plots replot
+//! unchanged.  Byte-exact accounting is what makes communication
+//! *budgets* first-class inputs: the budget controller closes the loop on
+//! the same numbers the ledger reports.
+//!
 //! The fabric is an in-process mailbox grid — deterministic, inspectable,
 //! and instrumentable with failure injection (dropped or stale messages)
-//! for robustness tests.
+//! for robustness tests.  Ledger shards can run in
+//! [`LedgerMode::Aggregated`] for bounded memory on long runs.
 
 pub mod fabric;
 pub mod ledger;
 pub mod time_model;
 
 pub use fabric::{Endpoint, Fabric, FailurePolicy, Message, MessageKind};
-pub use ledger::{CommLedger, LedgerEntry};
+pub use ledger::{AggCell, CommLedger, LedgerEntry, LedgerMode};
 pub use time_model::LinkModel;

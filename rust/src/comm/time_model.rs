@@ -1,8 +1,10 @@
-//! Analytic communication-time model: converts the ledger's float counts
-//! into estimated wall-clock on a parameterized interconnect, so the
-//! communication *savings* the paper claims in bytes can be stated in
-//! seconds for a given cluster (the authors' testbed is unavailable —
-//! DESIGN.md §2).
+//! Analytic communication-time model: converts the ledger's **byte**
+//! counts into estimated wall-clock on a parameterized interconnect, so
+//! the communication *savings* the paper claims can be stated in seconds
+//! for a given cluster (the authors' testbed is unavailable — DESIGN.md
+//! §2).  Tripathy et al. (2020) style α–β accounting: the total cost is
+//! linear in (message count, bytes), so it is exact in both ledger modes
+//! (detailed and aggregated).
 
 use super::CommLedger;
 
@@ -31,18 +33,18 @@ impl LinkModel {
         LinkModel { alpha: 20e-3, beta: 8.0 / 100e6 }
     }
 
-    /// Seconds to transmit one message of `floats` f32 values.
-    pub fn message_seconds(&self, floats: usize) -> f64 {
-        self.alpha + self.beta * (floats as f64) * 4.0
+    /// Seconds to transmit one message of `bytes` serialized bytes.
+    pub fn message_seconds(&self, bytes: usize) -> f64 {
+        self.alpha + self.beta * bytes as f64
     }
 
-    /// Total serialized communication seconds for a ledger.
-    /// `parallel_links` > 1 models concurrent pairwise links (per-round
-    /// time = max over links is workload-dependent; uniform split is the
-    /// standard α-β approximation).
+    /// Total serialized communication seconds for a ledger:
+    /// `α · messages + β · bytes`, divided by `parallel_links` (> 1 models
+    /// concurrent pairwise links; uniform split is the standard α-β
+    /// approximation).
     pub fn ledger_seconds(&self, ledger: &CommLedger, parallel_links: usize) -> f64 {
-        let total: f64 =
-            ledger.entries().iter().map(|e| self.message_seconds(e.floats)).sum();
+        let total = self.alpha * ledger.message_count() as f64
+            + self.beta * ledger.total_bytes() as f64;
         total / parallel_links.max(1) as f64
     }
 }
@@ -54,8 +56,8 @@ mod tests {
     #[test]
     fn message_time_scales_with_size() {
         let m = LinkModel::ten_gbe();
-        let small = m.message_seconds(1_000);
-        let big = m.message_seconds(1_000_000);
+        let small = m.message_seconds(4_000);
+        let big = m.message_seconds(4_000_000);
         // small messages are latency-bound, big ones bandwidth-bound
         assert!(big > 50.0 * small, "{big} vs {small}");
         // latency floor dominates tiny messages
@@ -65,21 +67,33 @@ mod tests {
     #[test]
     fn ledger_total_and_parallelism() {
         let mut l = CommLedger::new();
-        l.record(0, 0, 1, "activation", 1000);
-        l.record(0, 1, 0, "activation", 1000);
+        l.record(0, 0, 1, "activation", 4000);
+        l.record(0, 1, 0, "activation", 4000);
         let m = LinkModel::hundred_gb();
         let serial = m.ledger_seconds(&l, 1);
         let par = m.ledger_seconds(&l, 2);
         assert!((serial - 2.0 * par).abs() < 1e-12);
-        assert!((serial - 2.0 * m.message_seconds(1000)).abs() < 1e-12);
+        assert!((serial - 2.0 * m.message_seconds(4000)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn aggregated_ledger_costs_identically() {
+        let mut d = CommLedger::new();
+        let mut a = CommLedger::aggregated();
+        for (e, b) in [(0, 1200), (0, 800), (1, 96), (2, 4096)] {
+            d.record(e, 0, 1, "activation", b);
+            a.record(e, 0, 1, "activation", b);
+        }
+        let m = LinkModel::ten_gbe();
+        assert_eq!(m.ledger_seconds(&d, 1), m.ledger_seconds(&a, 1));
     }
 
     #[test]
     fn wan_much_slower_than_ib() {
-        let floats = 100_000;
+        let bytes = 400_000;
         assert!(
-            LinkModel::wan().message_seconds(floats)
-                > 100.0 * LinkModel::hundred_gb().message_seconds(floats)
+            LinkModel::wan().message_seconds(bytes)
+                > 100.0 * LinkModel::hundred_gb().message_seconds(bytes)
         );
     }
 }

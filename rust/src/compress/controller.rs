@@ -1,0 +1,467 @@
+//! Rate controllers: how the compression rate is *chosen*.
+//!
+//! The paper replays open-loop schedules r(t) (§IV); AdaQP-style systems
+//! instead adapt the channel per message from observed state.  This module
+//! unifies both behind [`RateController`]:
+//!
+//! * [`OpenLoopController`] wraps a [`CommMode`] (Full / None / any
+//!   [`Scheduler`](super::Scheduler)) — rates are a pure function of the
+//!   epoch, `observe` is a no-op.  All historical behavior lives here.
+//! * [`BudgetController`] closes the loop: it consumes a **total byte
+//!   budget** plus per-epoch feedback (measured wire bytes per layer from
+//!   the ledger, relative compression error from the channel residuals)
+//!   and picks next-epoch per-layer rates that spend the budget on a
+//!   rising communication ramp while keeping the rate sequence — and with
+//!   it Proposition 2's error-decrease contract — non-increasing, enforced
+//!   at runtime by clamping every new rate to the previous plan and
+//!   backing off whenever the observed relative error rises.
+//!
+//! Controllers must be deterministic functions of their observation
+//! sequence: the trainer feeds them feedback merged in worker-rank order
+//! at the epoch barrier, so the parallel runtime stays bitwise equal to
+//! the sequential oracle (`tests/parallel_equivalence.rs`).
+
+use super::CommMode;
+
+/// Which direction a message travels in the per-layer exchange.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChannelKind {
+    /// boundary activations, owner -> replica
+    Forward,
+    /// returned cotangents, replica -> owner
+    Backward,
+}
+
+/// Per-layer measurements for one epoch (forward + backward combined).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LayerFeedback {
+    /// exact wire bytes of this layer's compressed exchanges
+    pub bytes: usize,
+    /// `Σ ||x − x̂||²` over this layer's messages
+    pub err_sq: f32,
+    /// `Σ ||x||²` over this layer's messages
+    pub sig_sq: f32,
+}
+
+impl LayerFeedback {
+    /// Fold another cell into this one.  Every merge in the trainer goes
+    /// through here, in worker-rank order, so the sequential and parallel
+    /// paths cannot drift in f32 accumulation order.
+    pub fn merge(&mut self, other: &LayerFeedback) {
+        self.bytes += other.bytes;
+        self.err_sq += other.err_sq;
+        self.sig_sq += other.sig_sq;
+    }
+}
+
+/// One epoch's closed-loop feedback, assembled by the trainer at the
+/// epoch barrier (deterministically: worker contributions merged in rank
+/// order).
+#[derive(Clone, Debug)]
+pub struct Feedback {
+    pub epoch: usize,
+    /// every byte the fabric charged this epoch, including weight sync
+    pub total_bytes: usize,
+    /// per-layer compressed-exchange measurements
+    pub layers: Vec<LayerFeedback>,
+    /// the per-layer forward rate that produced them (None = no comm)
+    pub rates: Vec<Option<f32>>,
+}
+
+impl Feedback {
+    /// Bytes spent on compressible (activation/gradient) traffic.
+    pub fn data_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.bytes).sum()
+    }
+
+    /// Relative compression error `Σ err² / Σ sig²` across layers.
+    pub fn rel_error(&self) -> Option<f32> {
+        let err: f32 = self.layers.iter().map(|l| l.err_sq).sum();
+        let sig: f32 = self.layers.iter().map(|l| l.sig_sq).sum();
+        (sig > 0.0).then(|| err / sig)
+    }
+}
+
+/// Chooses the compression rate for every (epoch, layer, direction) and
+/// optionally consumes end-of-epoch feedback.
+pub trait RateController: Send + Sync {
+    /// Report label (becomes `RunReport::algorithm`).
+    fn label(&self) -> String;
+
+    /// Rate for a message; `None` means "do not communicate at all"
+    /// (the No-Comm baseline's local-normalization semantics).
+    fn rate_for(&self, epoch: usize, layer: usize, kind: ChannelKind) -> Option<f32>;
+
+    /// Representative rate for reporting (`EpochRecord::rate`).
+    fn nominal_rate(&self, epoch: usize) -> Option<f32> {
+        self.rate_for(epoch, 0, ChannelKind::Forward)
+    }
+
+    /// Whether the trainer should measure per-layer byte/error feedback
+    /// (skipped for open-loop controllers: it costs one extra pass per
+    /// compressed message).
+    fn wants_feedback(&self) -> bool {
+        false
+    }
+
+    /// End-of-epoch observation; called once per epoch, after the server
+    /// step, with deterministically merged measurements.
+    fn observe(&mut self, _fb: &Feedback) {}
+}
+
+/// The historical open-loop path: rates replayed from a [`CommMode`].
+pub struct OpenLoopController {
+    mode: CommMode,
+}
+
+impl OpenLoopController {
+    pub fn new(mode: CommMode) -> OpenLoopController {
+        OpenLoopController { mode }
+    }
+
+    pub fn mode(&self) -> &CommMode {
+        &self.mode
+    }
+}
+
+impl RateController for OpenLoopController {
+    fn label(&self) -> String {
+        self.mode.label()
+    }
+
+    fn rate_for(&self, epoch: usize, _layer: usize, _kind: ChannelKind) -> Option<f32> {
+        self.mode.rate_at(epoch)
+    }
+}
+
+/// Closed-loop controller: spend `budget` wire bytes over `epochs` epochs.
+///
+/// Planning model (all arithmetic in f64, deterministic):
+///
+/// * `full_est[l]` — estimated bytes/epoch layer `l` would cost at rate 1,
+///   refreshed every epoch from `measured_bytes × rate` (header overhead
+///   makes this an overestimate at high rates; it self-corrects as the
+///   rate descends).
+/// * The remaining *data* budget (total minus observed fixed overhead such
+///   as weight sync) is allocated over the remaining epochs on a
+///   **quadratic ramp** — epoch t gets weight (t+1)², so communication
+///   concentrates late, mirroring the paper's result that decreasing-rate
+///   schedules dominate fixed rates at equal spend.
+/// * Per epoch, the allowance splits across layers by a 50/50 blend of
+///   byte share and error share (layers whose channel hurts more get more
+///   bytes — the AdaQP-style assignment).
+/// * New rates are clamped into `[1, previous rate]`, so the planned rate
+///   sequence is non-increasing per layer (Proposition 2's condition); if
+///   the observed relative error still rises epoch-over-epoch, every rate
+///   is additionally backed off by 0.7× and the violation is counted.
+/// * The budget is a **hard ceiling**: once observed spend reaches it,
+///   the controller halts compressible traffic entirely — `rate_for`
+///   returns `None` (No-Comm semantics) for the rest of the run, so
+///   overspend is bounded by the single epoch in flight when the ceiling
+///   is hit (plus trainer-level weight sync, which the controller cannot
+///   veto).  The allowance planning exists to make this path unreachable
+///   on a feasible budget.
+pub struct BudgetController {
+    budget: usize,
+    epochs: usize,
+    c_max: f32,
+    /// next-epoch per-layer rate (the current plan)
+    plan: Vec<f32>,
+    spent: usize,
+    epochs_observed: usize,
+    /// latest measured non-layer (weight sync etc.) bytes per epoch
+    overhead_est: f64,
+    /// per-layer bytes/epoch estimate at rate 1
+    full_est: Vec<f64>,
+    /// budget exhausted: stop communicating instead of overspending
+    halted: bool,
+    last_rel_err: Option<f32>,
+    violations: usize,
+}
+
+impl BudgetController {
+    pub fn new(budget_bytes: usize, epochs: usize, layers: usize, c_max: f32) -> BudgetController {
+        let c_max = c_max.max(1.0);
+        BudgetController {
+            budget: budget_bytes,
+            epochs: epochs.max(1),
+            c_max,
+            plan: vec![c_max; layers.max(1)],
+            spent: 0,
+            epochs_observed: 0,
+            overhead_est: 0.0,
+            full_est: vec![0.0; layers.max(1)],
+            halted: false,
+            last_rel_err: None,
+            violations: 0,
+        }
+    }
+
+    /// True once the budget is exhausted and data traffic is halted.
+    pub fn halted(&self) -> bool {
+        self.halted
+    }
+
+    /// Total bytes observed so far.
+    pub fn spent(&self) -> usize {
+        self.spent
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Times the observed relative error rose epoch-over-epoch (each one
+    /// triggered a forced rate back-off).
+    pub fn violations(&self) -> usize {
+        self.violations
+    }
+
+    /// The current per-layer plan (next epoch's rates).
+    pub fn current_plan(&self) -> &[f32] {
+        &self.plan
+    }
+
+    /// The configured starting (maximum) rate.
+    pub fn c_max(&self) -> f32 {
+        self.c_max
+    }
+}
+
+impl RateController for BudgetController {
+    fn label(&self) -> String {
+        format!("budget-{}B", self.budget)
+    }
+
+    fn rate_for(&self, _epoch: usize, layer: usize, _kind: ChannelKind) -> Option<f32> {
+        if self.halted {
+            return None;
+        }
+        Some(self.plan[layer.min(self.plan.len() - 1)])
+    }
+
+    fn nominal_rate(&self, _epoch: usize) -> Option<f32> {
+        if self.halted {
+            return None;
+        }
+        // report the cheapest (= most communicative) layer's rate
+        Some(self.plan.iter().copied().fold(f32::INFINITY, f32::min))
+    }
+
+    fn wants_feedback(&self) -> bool {
+        true
+    }
+
+    fn observe(&mut self, fb: &Feedback) {
+        self.spent += fb.total_bytes;
+        self.epochs_observed += 1;
+        let data = fb.data_bytes();
+        self.overhead_est = fb.total_bytes.saturating_sub(data) as f64;
+        let layers = self.plan.len();
+        for l in 0..layers {
+            let (bytes, rate) = fb
+                .layers
+                .get(l)
+                .map(|m| (m.bytes, fb.rates.get(l).copied().flatten()))
+                .unwrap_or((0, None));
+            if let (true, Some(r)) = (bytes > 0, rate) {
+                self.full_est[l] = bytes as f64 * f64::from(r);
+            }
+        }
+
+        let done = self.epochs_observed;
+        let remaining_epochs = self.epochs.saturating_sub(done);
+        if remaining_epochs == 0 {
+            return;
+        }
+        // hard ceiling: once the budget is actually gone, stop data
+        // traffic instead of spending on at the frozen plan (overspend is
+        // bounded by the one epoch in flight when the ceiling is hit; the
+        // allowance planning below exists to never reach this point)
+        self.halted = self.spent >= self.budget;
+        if self.halted {
+            return;
+        }
+        let remaining = self.budget.saturating_sub(self.spent) as f64;
+        let avail = (remaining - self.overhead_est * remaining_epochs as f64).max(0.0);
+
+        // quadratic ramp over the remaining epochs: weight(t) = (t+1)²
+        let wsum: f64 = (done..self.epochs).map(|t| ((t + 1) * (t + 1)) as f64).sum();
+        let this_w = ((done + 1) * (done + 1)) as f64;
+        let allowance = if wsum > 0.0 { avail * this_w / wsum } else { 0.0 };
+
+        let err_tot: f64 = fb.layers.iter().map(|l| f64::from(l.err_sq)).sum();
+        let full_tot: f64 = self.full_est.iter().sum();
+        if allowance > 0.0 && full_tot > 0.0 {
+            for l in 0..layers {
+                let byte_share = self.full_est[l] / full_tot;
+                let err_share = if err_tot > 0.0 {
+                    fb.layers.get(l).map(|m| f64::from(m.err_sq)).unwrap_or(0.0) / err_tot
+                } else {
+                    byte_share
+                };
+                let share = 0.5 * byte_share + 0.5 * err_share;
+                let a_l = allowance * share;
+                if a_l > 0.0 && self.full_est[l] > 0.0 {
+                    let target = (self.full_est[l] / a_l) as f32;
+                    self.plan[l] = target.clamp(1.0, self.plan[l]);
+                }
+            }
+        }
+
+        // Proposition 2 runtime guard: the error sequence must not grow
+        if let (Some(rel), Some(last)) = (fb.rel_error(), self.last_rel_err) {
+            if rel > last + 1e-6 {
+                self.violations += 1;
+                for p in self.plan.iter_mut() {
+                    *p = (*p * 0.7).max(1.0);
+                }
+            }
+        }
+        if let Some(rel) = fb.rel_error() {
+            self.last_rel_err = Some(rel);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Scheduler;
+    use super::*;
+
+    fn fb(epoch: usize, total: usize, per_layer: &[(usize, f32, f32)], rates: &[f32]) -> Feedback {
+        Feedback {
+            epoch,
+            total_bytes: total,
+            layers: per_layer
+                .iter()
+                .map(|&(bytes, err_sq, sig_sq)| LayerFeedback { bytes, err_sq, sig_sq })
+                .collect(),
+            rates: rates.iter().map(|&r| Some(r)).collect(),
+        }
+    }
+
+    #[test]
+    fn open_loop_mirrors_comm_mode() {
+        let c = OpenLoopController::new(CommMode::Full);
+        assert_eq!(c.rate_for(3, 1, ChannelKind::Forward), Some(1.0));
+        assert_eq!(c.label(), "full-comm");
+        assert!(!c.wants_feedback());
+        let n = OpenLoopController::new(CommMode::None);
+        assert_eq!(n.rate_for(0, 0, ChannelKind::Backward), None);
+        let s = OpenLoopController::new(CommMode::Compressed(Scheduler::Fixed { rate: 4.0 }));
+        assert_eq!(s.rate_for(9, 2, ChannelKind::Forward), Some(4.0));
+        assert_eq!(s.label(), "fixed-r4");
+    }
+
+    #[test]
+    fn budget_starts_at_c_max_and_never_raises_rates() {
+        let mut c = BudgetController::new(1_000_000, 10, 3, 128.0);
+        assert_eq!(c.rate_for(0, 0, ChannelKind::Forward), Some(128.0));
+        assert!(c.wants_feedback());
+        let mut prev = vec![128.0f32; 3];
+        for e in 0..9 {
+            // generous budget: rates should descend towards 1
+            c.observe(&fb(
+                e,
+                2_000,
+                &[(600, 5.0, 10.0), (700, 3.0, 10.0), (700, 2.0, 10.0)],
+                &prev,
+            ));
+            let cur: Vec<f32> = (0..3)
+                .map(|l| c.rate_for(e + 1, l, ChannelKind::Forward).unwrap())
+                .collect();
+            for (l, (&p, &n)) in prev.iter().zip(&cur).enumerate() {
+                assert!(n <= p + 1e-6, "layer {l} rate rose: {p} -> {n}");
+                assert!(n >= 1.0);
+            }
+            prev = cur;
+        }
+        // with a huge budget the plan must have descended substantially
+        assert!(prev.iter().all(|&r| r < 64.0), "plan {prev:?}");
+    }
+
+    #[test]
+    fn budget_holds_high_rate_when_budget_tight() {
+        let mut c = BudgetController::new(10_000, 100, 2, 64.0);
+        // each epoch already spends 1/50 of the budget at rate 64: no room
+        for e in 0..20 {
+            c.observe(&fb(e, 200, &[(100, 1.0, 2.0), (100, 1.0, 2.0)], &[64.0, 64.0]));
+        }
+        let r = c.rate_for(20, 0, ChannelKind::Forward).unwrap();
+        assert!(r > 32.0, "tight budget must keep compressing hard, got {r}");
+    }
+
+    #[test]
+    fn error_rise_triggers_backoff_and_counts_violation() {
+        // budget so tight the allowance never lowers the plan on its own:
+        // the only way down is the error guard
+        let mut c = BudgetController::new(10_000, 50, 1, 32.0);
+        c.observe(&fb(0, 100, &[(100, 1.0, 10.0)], &[32.0]));
+        let r1 = c.rate_for(1, 0, ChannelKind::Forward).unwrap();
+        assert_eq!(c.violations(), 0);
+        assert!((r1 - 32.0).abs() < 1e-5, "tight budget should hold c_max, got {r1}");
+        // relative error quadruples: guard must back the plan off
+        c.observe(&fb(1, 100, &[(100, 4.0, 10.0)], &[r1]));
+        let r2 = c.rate_for(2, 0, ChannelKind::Forward).unwrap();
+        assert_eq!(c.violations(), 1);
+        assert!(r2 <= r1 * 0.7 + 1e-4, "{r1} -> {r2}");
+    }
+
+    #[test]
+    fn exhausted_budget_halts_communication() {
+        // infeasible budget: 100 epochs of 200 B against a 1 kB ceiling —
+        // once spend crosses it, the controller must go silent instead of
+        // spending at the frozen plan forever
+        let mut c = BudgetController::new(1_000, 100, 2, 64.0);
+        let mut halted_at = None;
+        for e in 0..10 {
+            if c.rate_for(e, 0, ChannelKind::Forward).is_none() {
+                halted_at = Some(e);
+                break;
+            }
+            c.observe(&fb(e, 200, &[(100, 1.0, 2.0), (100, 1.0, 2.0)], &[64.0, 64.0]));
+        }
+        let at = halted_at.expect("controller never halted on an infeasible budget");
+        assert_eq!(at, 5, "spend crosses 1000 B after the 5th 200 B epoch");
+        assert!(c.halted());
+        assert_eq!(c.nominal_rate(at), None);
+        assert_eq!(c.rate_for(at, 1, ChannelKind::Backward), None);
+        assert!(c.spent() >= c.budget());
+        // overspend is bounded by the epoch in flight at the crossing
+        assert!(c.spent() <= c.budget() + 200);
+    }
+
+    #[test]
+    fn spend_tracking_and_label() {
+        let mut c = BudgetController::new(5_000, 4, 2, 128.0);
+        c.observe(&fb(0, 1_200, &[(500, 1.0, 4.0), (500, 1.0, 4.0)], &[128.0, 128.0]));
+        assert_eq!(c.spent(), 1_200);
+        assert_eq!(c.budget(), 5_000);
+        assert_eq!(c.label(), "budget-5000B");
+        assert_eq!(c.current_plan().len(), 2);
+    }
+
+    #[test]
+    fn ramp_concentrates_bytes_late() {
+        // simulate a run where full-comm costs 1000 B/layer-epoch and the
+        // budget is exactly half of full spend: the planned rate sequence
+        // must descend monotonically to ~1 by the final epochs
+        let epochs = 30;
+        let mut c = BudgetController::new(15_000, epochs, 1, 128.0);
+        let mut rates = vec![c.rate_for(0, 0, ChannelKind::Forward).unwrap()];
+        let mut spent_model = 0usize;
+        for e in 0..epochs - 1 {
+            let r = *rates.last().unwrap();
+            let bytes = (1000.0 / r).ceil() as usize;
+            spent_model += bytes;
+            c.observe(&fb(e, bytes, &[(bytes, 1.0 / r, 10.0)], &[r]));
+            rates.push(c.rate_for(e + 1, 0, ChannelKind::Forward).unwrap());
+        }
+        assert!(rates.windows(2).all(|w| w[1] <= w[0] + 1e-6), "{rates:?}");
+        let last = *rates.last().unwrap();
+        assert!(last < 4.0, "final rate {last} should approach 1, rates {rates:?}");
+        // ceil() rounding can leak ≤ 1 byte per epoch past the allowance
+        assert!(spent_model <= 15_000 + epochs, "model overspent: {spent_model}");
+    }
+}

@@ -8,6 +8,18 @@
 //! mechanism, keyed per (epoch-independent) channel id so each link keeps
 //! its own memory.
 //!
+//! # Residuals across rate changes
+//!
+//! The steady-state residual magnitude scales with `r − 1` (a coordinate
+//! kept with probability 1/r settles at `m* = (r − 1)·x`): memory
+//! accumulated at a heavy rate r(t) is *stale* once the schedule moves to
+//! a lighter r(t+1) and would otherwise be replayed verbatim, injecting
+//! old compression error into a now-nearly-lossless channel.  On every
+//! rate transition the residual is rescaled by
+//! `(r_new − 1) / (r_old − 1)` (clamped to [0, 1]; zero when the new rate
+//! is lossless), matching the new steady state — pinned by the
+//! `rate_transition_*` regression tests below.
+//!
 //! This is stateful, so it does not implement the stateless `Compressor`
 //! trait; the ablation harness drives it directly.
 
@@ -15,10 +27,29 @@ use super::subset::RandomSubsetCompressor;
 use super::{Compressor, Payload};
 use std::collections::HashMap;
 
+/// One channel's memory: the residual plus the rate it was accumulated at.
+struct ChannelMemory {
+    residual: Vec<f32>,
+    last_rate: f32,
+}
+
+/// Residual scale factor applied when a channel's rate moves `old -> new`:
+/// steady-state residual mass is proportional to `r − 1`, so stale memory
+/// is shrunk to the new operating point (never grown).
+pub fn residual_scale(old_rate: f32, new_rate: f32) -> f32 {
+    if new_rate <= 1.0 {
+        0.0 // lossless channel: nothing should be replayed
+    } else if old_rate <= 1.0 {
+        1.0 // residual is ~0 anyway; keep it
+    } else {
+        ((new_rate - 1.0) / (old_rate - 1.0)).clamp(0.0, 1.0)
+    }
+}
+
 /// Per-channel error-feedback wrapper around the subset compressor.
 pub struct ErrorFeedback {
     /// channel id -> residual memory
-    memory: HashMap<u64, Vec<f32>>,
+    memory: HashMap<u64, ChannelMemory>,
 }
 
 impl Default for ErrorFeedback {
@@ -33,20 +64,37 @@ impl ErrorFeedback {
     }
 
     /// Compress `x` on channel `chan` at `rate`, folding in the remembered
-    /// residual; updates the residual to what this message drops.
+    /// residual; updates the residual to what this message drops.  A rate
+    /// transition first rescales the memory (see module docs).
     pub fn compress(&mut self, chan: u64, x: &[f32], rate: f32, key: u64) -> Payload {
-        let mem = self.memory.entry(chan).or_insert_with(|| vec![0.0; x.len()]);
-        if mem.len() != x.len() {
-            mem.clear();
-            mem.resize(x.len(), 0.0);
+        let mem = self
+            .memory
+            .entry(chan)
+            .or_insert_with(|| ChannelMemory { residual: vec![0.0; x.len()], last_rate: rate });
+        if mem.residual.len() != x.len() {
+            mem.residual.clear();
+            mem.residual.resize(x.len(), 0.0);
+            mem.last_rate = rate;
+        }
+        if rate != mem.last_rate {
+            let s = residual_scale(mem.last_rate, rate);
+            if s == 0.0 {
+                mem.residual.fill(0.0);
+            } else if s < 1.0 {
+                for r in mem.residual.iter_mut() {
+                    *r *= s;
+                }
+            }
+            mem.last_rate = rate;
         }
         // corrected signal
-        let corrected: Vec<f32> = x.iter().zip(mem.iter()).map(|(a, b)| a + b).collect();
+        let corrected: Vec<f32> =
+            x.iter().zip(mem.residual.iter()).map(|(a, b)| a + b).collect();
         let payload = RandomSubsetCompressor.compress(&corrected, rate, key);
         // residual = corrected - decompress(payload)
         let mut xhat = vec![0.0; x.len()];
         RandomSubsetCompressor.decompress(&payload, &mut xhat);
-        for ((m, &c), &d) in mem.iter_mut().zip(&corrected).zip(&xhat) {
+        for ((m, &c), &d) in mem.residual.iter_mut().zip(&corrected).zip(&xhat) {
             *m = c - d;
         }
         payload
@@ -61,7 +109,7 @@ impl ErrorFeedback {
     pub fn residual_norm(&self, chan: u64) -> f32 {
         self.memory
             .get(&chan)
-            .map(|m| m.iter().map(|x| x * x).sum::<f32>().sqrt())
+            .map(|m| m.residual.iter().map(|x| x * x).sum::<f32>().sqrt())
             .unwrap_or(0.0)
     }
 }
@@ -129,5 +177,53 @@ mod tests {
         // shorter payload on the same channel: memory must resize, not panic
         let p = ef.compress(5, &vec![1.0; 32], 4.0, 2);
         assert_eq!(p.n, 32);
+    }
+
+    #[test]
+    fn residual_scale_law() {
+        assert_eq!(residual_scale(8.0, 1.0), 0.0); // to lossless: reset
+        assert_eq!(residual_scale(8.0, 8.0), 1.0);
+        assert!((residual_scale(8.0, 2.0) - 1.0 / 7.0).abs() < 1e-6);
+        assert_eq!(residual_scale(2.0, 8.0), 1.0); // never amplified
+        assert_eq!(residual_scale(1.0, 4.0), 1.0); // from lossless: keep ~0
+    }
+
+    #[test]
+    fn rate_transition_to_lossless_resets_stale_residual() {
+        // regression: residuals accumulated at rate 8 used to be replayed
+        // verbatim when the schedule reached rate 1, corrupting an
+        // otherwise lossless message
+        let n = 128;
+        let x = vec![1.0f32; n];
+        let mut ef = ErrorFeedback::new();
+        for r in 0..6 {
+            ef.compress(3, &x, 8.0, 100 + r);
+        }
+        assert!(ef.residual_norm(3) > 1.0, "residual built up at rate 8");
+        let p = ef.compress(3, &x, 1.0, 999);
+        let mut out = vec![0.0; n];
+        ef.decompress(&p, &mut out);
+        assert_eq!(out, x, "rate-1 message must be exactly x, no stale replay");
+        assert!(ef.residual_norm(3) < 1e-6);
+    }
+
+    #[test]
+    fn rate_transition_rescales_residual_downward() {
+        let n = 256;
+        let x = vec![1.0f32; n];
+        let mut ef = ErrorFeedback::new();
+        for r in 0..8 {
+            ef.compress(4, &x, 16.0, 200 + r);
+        }
+        let before = ef.residual_norm(4);
+        // one message at rate 2: memory first shrinks by (2-1)/(16-1),
+        // then at most the newly dropped half of the corrected signal is
+        // re-accumulated — far below the stale rate-16 mass
+        ef.compress(4, &x, 2.0, 300);
+        let after = ef.residual_norm(4);
+        assert!(
+            after < 0.5 * before,
+            "stale residual not rescaled: {before} -> {after}"
+        );
     }
 }

@@ -1,5 +1,6 @@
-//! Compression channel (paper §III-A, Definition 1, Appendix A) and the
-//! compression-rate schedulers that make VARCO "variable" (§IV).
+//! Compression channel (paper §III-A, Definition 1, Appendix A), the wire
+//! codec that serializes it byte-exactly, and the rate controllers that
+//! make VARCO "variable" (§IV).
 //!
 //! The mechanism of record is `RandomSubsetCompressor`: keep
 //! ``m = ceil(len / r)`` elements of the flattened payload at positions
@@ -7,25 +8,49 @@
 //! nothing but the kept values travels); the decoder scatters them and
 //! zeros the rest.  `TopK` and `Quantize` are baselines for the ablation
 //! benches.
+//!
+//! Every payload carries a [`Codec`] describing its serialized form;
+//! [`Payload::wire_bytes`] is the exact length `Payload::encode` produces
+//! (see [`wire`]), and the fabric's ledger accounts those bytes.  Rates
+//! are chosen either open-loop by a [`Scheduler`] or closed-loop by a
+//! [`controller::BudgetController`] that spends an explicit byte budget.
 
+pub mod controller;
 pub mod error_feedback;
 pub mod quantize;
 pub mod scheduler;
 pub mod subset;
 pub mod topk;
+pub mod wire;
 
+pub use controller::{
+    BudgetController, ChannelKind, Feedback, LayerFeedback, OpenLoopController, RateController,
+};
 pub use error_feedback::ErrorFeedback;
 pub use scheduler::{CommMode, Scheduler};
 pub use subset::RandomSubsetCompressor;
 
 use crate::Result;
 
+/// How a payload's body is serialized on the wire (see [`wire`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Codec {
+    /// values only; kept positions are re-derived from the shared key
+    /// (the paper's subset mechanism, and the dense rate-1 fast path)
+    Keyed,
+    /// explicit ascending u32 indices, delta+varint coded (top-k)
+    Indexed,
+    /// b-bit uniform quantizer codes, bit-packed LSB-first
+    Quantized { bits: u8 },
+}
+
 /// A compressed payload on the wire.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Payload {
     /// original (uncompressed) length
     pub n: usize,
-    /// kept / encoded values
+    /// kept / encoded values (quantizer codes stay f32 in simulation;
+    /// the codec bit-packs them on the wire)
     pub values: Vec<f32>,
     /// explicit indices (only for mechanisms that must transmit them)
     pub indices: Option<Vec<u32>>,
@@ -33,22 +58,15 @@ pub struct Payload {
     pub key: u64,
     /// extra scalar side-channel (e.g. quantizer min/max)
     pub side: Vec<f32>,
-    /// wire cost override in float-equivalents, for mechanisms whose
-    /// simulated representation differs from what travels (e.g. the
-    /// quantizer keeps codes as f32 but ships b-bit words)
-    pub wire_override: Option<usize>,
+    /// serialized representation (drives `encode` / `wire_bytes`)
+    pub codec: Codec,
 }
 
 impl Payload {
-    /// Floats-equivalent on the wire: what Figure 5's x-axis counts.
-    /// Indices cost one 4-byte word each, i.e. one float-equivalent.
+    /// Float-equivalents on the wire — the historical Figure 5 x-axis,
+    /// now a *derived view* of the exact byte count.
     pub fn wire_floats(&self) -> usize {
-        if let Some(w) = self.wire_override {
-            return w;
-        }
-        self.values.len()
-            + self.indices.as_ref().map_or(0, |i| i.len())
-            + self.side.len()
+        self.wire_bytes().div_ceil(4)
     }
 }
 
@@ -61,6 +79,22 @@ pub trait Compressor: Send + Sync {
 
     /// Reconstruct into `out` (length `payload.n`), zeros where dropped.
     fn decompress(&self, payload: &Payload, out: &mut [f32]);
+
+    /// `(||x − x̂||², ||x||²)` for a payload just produced from `x` — the
+    /// channel's squared error and the signal mass it acted on, fed back
+    /// to closed-loop rate controllers.  One method so both sums cost a
+    /// single pass; the default reconstructs and diffs, mechanisms with
+    /// cheaper identities override it.
+    fn channel_error(&self, x: &[f32], payload: &Payload) -> (f32, f32) {
+        let mut xhat = vec![0.0f32; payload.n];
+        self.decompress(payload, &mut xhat);
+        let (mut err, mut sig) = (0.0f32, 0.0f32);
+        for (&a, &b) in x.iter().zip(&xhat) {
+            err += (a - b) * (a - b);
+            sig += a * a;
+        }
+        (err, sig)
+    }
 }
 
 /// Number of kept elements for a payload of `n` at rate `r` (>= 1 kept).
@@ -107,17 +141,54 @@ mod tests {
     }
 
     #[test]
-    fn wire_floats_accounts_indices_and_side() {
-        let mut p = Payload {
+    fn wire_floats_is_derived_from_bytes() {
+        let p = Payload {
             n: 10,
             values: vec![1.0; 4],
             indices: Some(vec![0, 1, 2, 3]),
             key: 0,
             side: vec![0.5, 2.0],
-            wire_override: None,
+            codec: Codec::Indexed,
         };
-        assert_eq!(p.wire_floats(), 10);
-        p.wire_override = Some(3);
-        assert_eq!(p.wire_floats(), 3);
+        assert_eq!(p.wire_floats(), p.wire_bytes().div_ceil(4));
+        assert_eq!(p.wire_bytes(), p.encode().len());
+    }
+
+    #[test]
+    fn default_channel_error_reconstructs_and_diffs() {
+        // a mechanism without an override gets the decompress-and-diff
+        // default; for a lossless channel the error must be exactly zero
+        struct Identity;
+        impl Compressor for Identity {
+            fn name(&self) -> &'static str {
+                "identity"
+            }
+            fn compress(&self, x: &[f32], _rate: f32, key: u64) -> Payload {
+                Payload {
+                    n: x.len(),
+                    values: x.to_vec(),
+                    indices: None,
+                    key,
+                    side: vec![],
+                    codec: Codec::Keyed,
+                }
+            }
+            fn decompress(&self, payload: &Payload, out: &mut [f32]) {
+                out.copy_from_slice(&payload.values);
+            }
+        }
+        let x: Vec<f32> = (0..64).map(|i| (i as f32).sin()).collect();
+        let p = Identity.compress(&x, 8.0, 3);
+        let sig: f32 = x.iter().map(|v| v * v).sum();
+        assert_eq!(Identity.channel_error(&x, &p), (0.0, sig));
+        // and the overrides agree with the default on a lossy channel
+        let c = by_name("quantize").unwrap();
+        let q = c.compress(&x, 8.0, 3);
+        let mut xhat = vec![0.0; x.len()];
+        c.decompress(&q, &mut xhat);
+        let want: f32 = x.iter().zip(&xhat).map(|(a, b)| (a - b) * (a - b)).sum();
+        let (err, got_sig) = c.channel_error(&x, &q);
+        assert!((err - want).abs() < 1e-5 * (1.0 + want));
+        assert!((got_sig - sig).abs() < 1e-3 * (1.0 + sig));
     }
 }

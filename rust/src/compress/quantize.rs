@@ -1,10 +1,12 @@
 //! Uniform scalar quantization baseline (the "quantization" family of
 //! related work, §Related Work).  Rate r maps to b = 32/r bits per
-//! element; wire cost is n*b/32 float-equivalents plus the (min, max)
-//! side channel.  Lossy but full-support (no zeros), so its error profile
-//! differs from subset masking — useful contrast in the ablation bench.
+//! element; the codes stay f32 in simulation but the wire codec bit-packs
+//! them, so `wire_bytes` is `ceil(n·b/8)` plus the (min, max) side
+//! channel and header.  Lossy but full-support (no zeros), so its error
+//! profile differs from subset masking — useful contrast in the ablation
+//! bench.
 
-use super::{Compressor, Payload};
+use super::{Codec, Compressor, Payload};
 
 pub struct QuantizeCompressor;
 
@@ -18,9 +20,10 @@ impl Compressor for QuantizeCompressor {
     }
 
     fn compress(&self, x: &[f32], rate: f32, key: u64) -> Payload {
-        let bits = bits_for_rate(rate);
+        let bits = bits_for_rate(rate) as u8;
+        let codec = Codec::Quantized { bits };
         if x.is_empty() {
-            return Payload { n: 0, values: vec![], indices: None, key, side: vec![0.0, 0.0, bits as f32], wire_override: None };
+            return Payload { n: 0, values: vec![], indices: None, key, side: vec![0.0, 0.0], codec };
         }
         // single fused pass over x for both extrema (was two separate folds)
         let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
@@ -30,32 +33,37 @@ impl Compressor for QuantizeCompressor {
         }
         let levels = ((1u64 << bits) - 1) as f32;
         let scale = if hi > lo { levels / (hi - lo) } else { 0.0 };
-        // Quantized codes stay f32 in simulation; the wire accounting
-        // charges `bits` per element + the (min, max) side channel.
         let values: Vec<f32> = x.iter().map(|&v| ((v - lo) * scale).round()).collect();
-        let wire = (x.len() * bits as usize).div_ceil(32) + 2;
-        Payload {
-            n: x.len(),
-            values,
-            indices: None,
-            key,
-            side: vec![lo, hi, bits as f32],
-            wire_override: Some(wire),
-        }
+        Payload { n: x.len(), values, indices: None, key, side: vec![lo, hi], codec }
     }
 
     fn decompress(&self, payload: &Payload, out: &mut [f32]) {
         assert_eq!(out.len(), payload.n);
-        let [lo, hi, bits] = payload.side[..] else { panic!("quantize side channel") };
-        let levels = ((1u64 << bits as u32) - 1) as f32;
+        let Codec::Quantized { bits } = payload.codec else { panic!("quantize payload codec") };
+        let [lo, hi] = payload.side[..] else { panic!("quantize side channel") };
+        let levels = ((1u64 << bits) - 1) as f32;
         let step = if levels > 0.0 { (hi - lo) / levels } else { 0.0 };
         for (o, &c) in out.iter_mut().zip(&payload.values) {
             *o = lo + c * step;
         }
     }
+
+    /// One fused pass: reconstruct each element analytically, diff, and
+    /// accumulate the signal mass alongside.
+    fn channel_error(&self, x: &[f32], payload: &Payload) -> (f32, f32) {
+        let Codec::Quantized { bits } = payload.codec else { panic!("quantize payload codec") };
+        let [lo, hi] = payload.side[..] else { panic!("quantize side channel") };
+        let levels = ((1u64 << bits) - 1) as f32;
+        let step = if levels > 0.0 { (hi - lo) / levels } else { 0.0 };
+        let (mut err, mut sig) = (0.0f32, 0.0f32);
+        for (&v, &c) in x.iter().zip(&payload.values) {
+            let d = v - (lo + c * step);
+            err += d * d;
+            sig += v * v;
+        }
+        (err, sig)
+    }
 }
-
-
 
 #[cfg(test)]
 mod tests {
@@ -84,8 +92,11 @@ mod tests {
     #[test]
     fn wire_cost_scales_with_bits() {
         let x = vec![1.0; 64];
-        let p = QuantizeCompressor.compress(&x, 4.0, 0); // 8 bits
-        assert_eq!(p.wire_floats(), 16 + 2);
+        let p8 = QuantizeCompressor.compress(&x, 4.0, 0); // 8 bits -> 64 code bytes
+        let p1 = QuantizeCompressor.compress(&x, 32.0, 0); // 1 bit -> 8 code bytes
+        assert_eq!(p8.wire_bytes() - p1.wire_bytes(), 64 - 8);
+        assert_eq!(p8.wire_bytes(), p8.encode().len());
+        assert_eq!(p1.wire_bytes(), p1.encode().len());
     }
 
     #[test]
@@ -95,5 +106,17 @@ mod tests {
         let mut out = vec![0.0; 10];
         QuantizeCompressor.decompress(&p, &mut out);
         assert_eq!(out, x);
+    }
+
+    #[test]
+    fn channel_error_matches_reconstruction() {
+        let x: Vec<f32> = (0..128).map(|i| ((i * 13 % 31) as f32) * 0.37 - 4.0).collect();
+        let p = QuantizeCompressor.compress(&x, 8.0, 0);
+        let mut out = vec![0.0; 128];
+        QuantizeCompressor.decompress(&p, &mut out);
+        let want: f32 = x.iter().zip(&out).map(|(a, b)| (a - b) * (a - b)).sum();
+        let (err, sig) = QuantizeCompressor.channel_error(&x, &p);
+        assert!((err - want).abs() <= 1e-5 * (1.0 + want));
+        assert!(sig > 0.0);
     }
 }

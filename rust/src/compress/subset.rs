@@ -12,7 +12,7 @@
 //! compresses the error message **with the same key** — identical to
 //! back-propagating through the (fixed-mask) compression routine.
 
-use super::{kept_count, Compressor, Payload};
+use super::{kept_count, Codec, Compressor, Payload};
 use crate::util::Rng;
 
 pub struct RandomSubsetCompressor;
@@ -34,11 +34,11 @@ impl Compressor for RandomSubsetCompressor {
         // r = 1 keeps everything: skip the permutation entirely (hot path
         // for FullComm and the late epochs of every VARCO schedule).
         if rate <= 1.0 {
-            return Payload { n: x.len(), values: x.to_vec(), indices: None, key, side: vec![], wire_override: None };
+            return Payload { n: x.len(), values: x.to_vec(), indices: None, key, side: vec![], codec: Codec::Keyed };
         }
         let idx = Self::indices(x.len(), rate, key);
         let values = idx.iter().map(|&i| x[i as usize]).collect();
-        Payload { n: x.len(), values, indices: None, key, side: vec![], wire_override: None }
+        Payload { n: x.len(), values, indices: None, key, side: vec![], codec: Codec::Keyed }
     }
 
     fn decompress(&self, payload: &Payload, out: &mut [f32]) {
@@ -56,6 +56,14 @@ impl Compressor for RandomSubsetCompressor {
         for (&i, &v) in idx.iter().zip(&payload.values) {
             out[i as usize] = v;
         }
+    }
+
+    /// Masking channel: the error is exactly the dropped mass,
+    /// `Σ x² − Σ values²` — no reconstruction needed.
+    fn channel_error(&self, x: &[f32], payload: &Payload) -> (f32, f32) {
+        let total: f32 = x.iter().map(|v| v * v).sum();
+        let kept: f32 = payload.values.iter().map(|v| v * v).sum();
+        ((total - kept).max(0.0), total)
     }
 }
 
@@ -90,18 +98,23 @@ mod tests {
     #[test]
     fn rate_one_lossless() {
         let (x, p) = payload(64, 1.0, 3);
-        assert_eq!(p.wire_floats(), 64);
+        assert_eq!(p.values.len(), 64);
         let mut out = vec![0.0; 64];
         RandomSubsetCompressor.decompress(&p, &mut out);
         assert_eq!(out, x);
     }
 
     #[test]
-    fn wire_size_is_ceil_n_over_r() {
+    fn wire_size_is_ceil_n_over_r_plus_header() {
+        // kept values dominate the wire cost; the fixed header (length
+        // prefix + codec tag + n + key + empty side + m) rides on top
         let (_, p) = payload(100, 3.0, 1);
-        assert_eq!(p.wire_floats(), 34);
+        assert_eq!(p.values.len(), 34);
+        let header = p.wire_bytes() - 4 * 34;
+        assert!(header < 24, "header {header}");
         let (_, p) = payload(100, 128.0, 1);
-        assert_eq!(p.wire_floats(), 1);
+        assert_eq!(p.values.len(), 1);
+        assert_eq!(p.wire_bytes(), p.encode().len());
     }
 
     #[test]
@@ -128,8 +141,20 @@ mod tests {
     #[test]
     fn empty_payload_roundtrip() {
         let p = RandomSubsetCompressor.compress(&[], 2.0, 0);
-        assert_eq!(p.wire_floats(), 0);
+        assert!(p.values.is_empty());
         let mut out = vec![];
         RandomSubsetCompressor.decompress(&p, &mut out);
+    }
+
+    #[test]
+    fn channel_error_override_matches_reconstruction() {
+        let (x, p) = payload(300, 6.0, 21);
+        let mut out = vec![0.0; 300];
+        RandomSubsetCompressor.decompress(&p, &mut out);
+        let want: f32 = x.iter().zip(&out).map(|(a, b)| (a - b) * (a - b)).sum();
+        let (got, sig) = RandomSubsetCompressor.channel_error(&x, &p);
+        assert!((got - want).abs() <= 1e-3 * (1.0 + want), "{got} vs {want}");
+        let want_sig: f32 = x.iter().map(|v| v * v).sum();
+        assert_eq!(sig, want_sig);
     }
 }

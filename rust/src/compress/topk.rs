@@ -1,8 +1,9 @@
 //! Top-K magnitude compression baseline (ablation): keeps the largest
-//! |x_i| but must transmit explicit indices, doubling per-element wire
-//! cost relative to the paper's shared-key subset at equal K.
+//! |x_i| but must transmit explicit indices — delta+varint coded on the
+//! wire (ascending order makes the gaps small), still costlier per kept
+//! element than the paper's shared-key subset at equal K.
 
-use super::{kept_count, Compressor, Payload};
+use super::{kept_count, Codec, Compressor, Payload};
 use crate::util::top_m_indices;
 
 pub struct TopKCompressor;
@@ -20,7 +21,7 @@ impl Compressor for TopKCompressor {
         // canonical ascending-index order the wire format requires
         let idx = top_m_indices(&mags, m);
         let values = idx.iter().map(|&i| x[i as usize]).collect();
-        Payload { n: x.len(), values, indices: Some(idx), key, side: vec![], wire_override: None }
+        Payload { n: x.len(), values, indices: Some(idx), key, side: vec![], codec: Codec::Indexed }
     }
 
     fn decompress(&self, payload: &Payload, out: &mut [f32]) {
@@ -30,6 +31,13 @@ impl Compressor for TopKCompressor {
         for (&i, &v) in idx.iter().zip(&payload.values) {
             out[i as usize] = v;
         }
+    }
+
+    /// Masking channel: error is exactly the dropped mass.
+    fn channel_error(&self, x: &[f32], payload: &Payload) -> (f32, f32) {
+        let total: f32 = x.iter().map(|v| v * v).sum();
+        let kept: f32 = payload.values.iter().map(|v| v * v).sum();
+        ((total - kept).max(0.0), total)
     }
 }
 
@@ -51,7 +59,12 @@ mod tests {
     fn wire_cost_includes_indices() {
         let x = vec![1.0; 100];
         let p = TopKCompressor.compress(&x, 4.0, 0);
-        assert_eq!(p.wire_floats(), 50); // 25 values + 25 indices
+        // 25 values at 4 bytes each, 25 delta-varint indices (1 byte each
+        // for these small gaps), plus the fixed header
+        let bytes = p.wire_bytes();
+        assert!(bytes > 25 * 4 + 25, "bytes {bytes}");
+        assert!(bytes < 25 * 4 + 25 + 24, "bytes {bytes}");
+        assert_eq!(bytes, p.encode().len());
     }
 
     #[test]

@@ -1,0 +1,490 @@
+//! Byte-exact wire format for compressed payloads.
+//!
+//! Every message the fabric carries is accountable in *serialized bytes*,
+//! not float-equivalents: `encode` produces the exact buffer that would
+//! travel, `decode` reconstructs the payload, and `Payload::wire_bytes`
+//! computes the buffer length analytically without allocating (pinned to
+//! `encode().len()` by `tests/properties.rs`).
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! u32    body length (everything after this prefix)
+//! u8     codec tag (0 = Keyed, 1 = Indexed, 2 = Quantized)
+//! [u8    bits]                 Quantized only
+//! varint n                     original (uncompressed) element count
+//! u64    key                   shared compression key
+//! varint side_len; side_len × f32
+//! varint m                     encoded value count
+//! body:
+//!   Keyed      m × f32 values (indices are re-derived from the key)
+//!   Indexed    m delta-varints (first index, then successive gaps),
+//!              then m × f32 values
+//!   Quantized  ceil(m·bits / 8) bytes of LSB-first bit-packed codes
+//! ```
+//!
+//! Varints are LEB128 (7 data bits per byte, high bit = continuation).
+//! Top-k indices are strictly ascending, so the gap sequence is
+//! non-negative and small — the delta+varint coding beats the old flat
+//! 4-bytes-per-index accounting at every rate.
+
+use super::{Codec, Payload};
+use crate::Result;
+
+// ---------------- varint primitives ----------------
+
+/// Encoded length of a LEB128 varint.
+pub fn varint_len(mut v: u64) -> usize {
+    let mut n = 1;
+    while v >= 0x80 {
+        v >>= 7;
+        n += 1;
+    }
+    n
+}
+
+fn put_varint(buf: &mut Vec<u8>, mut v: u64) {
+    while v >= 0x80 {
+        buf.push((v as u8 & 0x7F) | 0x80);
+        v >>= 7;
+    }
+    buf.push(v as u8);
+}
+
+fn get_varint(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = *buf
+            .get(*pos)
+            .ok_or_else(|| anyhow::anyhow!("wire: truncated varint at byte {}", *pos))?;
+        *pos += 1;
+        let chunk = u64::from(b & 0x7F);
+        // reject overlong encodings outright: a chunk whose bits would be
+        // shifted off the top must not silently truncate to a wrong value
+        anyhow::ensure!(
+            shift < 64 && (chunk << shift) >> shift == chunk,
+            "wire: varint overflows u64"
+        );
+        v |= chunk << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+fn put_f32(buf: &mut Vec<u8>, x: f32) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn get_f32(buf: &[u8], pos: &mut usize) -> Result<f32> {
+    let bytes: [u8; 4] = buf
+        .get(*pos..*pos + 4)
+        .ok_or_else(|| anyhow::anyhow!("wire: truncated f32 at byte {}", *pos))?
+        .try_into()
+        .unwrap();
+    *pos += 4;
+    Ok(f32::from_le_bytes(bytes))
+}
+
+// ---------------- bit packing (quantizer codes) ----------------
+
+/// Largest code representable in a `bits`-wide field.  Codes are produced
+/// by `round((v - lo) * scale)` and stay f32 in simulation; at bits = 32
+/// the f32 rounding of `levels` can reach exactly 2^32, so packing clamps
+/// into the field — the clamped code converts back to the identical f32
+/// (the nearest representable float), keeping the round-trip exact.
+fn field_max(bits: u8) -> u64 {
+    if bits >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << bits) - 1
+    }
+}
+
+fn pack_codes(buf: &mut Vec<u8>, codes: &[f32], bits: u8) {
+    let mut acc = 0u64;
+    let mut used = 0u32;
+    for &c in codes {
+        let code = (c as u64).min(field_max(bits));
+        acc |= code << used;
+        used += u32::from(bits);
+        while used >= 8 {
+            buf.push(acc as u8);
+            acc >>= 8;
+            used -= 8;
+        }
+    }
+    if used > 0 {
+        buf.push(acc as u8);
+    }
+}
+
+fn unpack_codes(buf: &[u8], pos: &mut usize, m: usize, bits: u8) -> Result<Vec<f32>> {
+    let nbytes = (m * bits as usize).div_ceil(8);
+    let src = buf
+        .get(*pos..*pos + nbytes)
+        .ok_or_else(|| anyhow::anyhow!("wire: truncated code block at byte {}", *pos))?;
+    *pos += nbytes;
+    let mut out = Vec::with_capacity(m);
+    let mut acc = 0u64;
+    let mut used = 0u32;
+    let mut next = 0usize;
+    for _ in 0..m {
+        while used < u32::from(bits) {
+            acc |= u64::from(src[next]) << used;
+            next += 1;
+            used += 8;
+        }
+        out.push((acc & field_max(bits)) as f32);
+        acc >>= u32::from(bits);
+        used -= u32::from(bits);
+    }
+    Ok(out)
+}
+
+// ---------------- codec tags ----------------
+
+fn codec_tag(codec: Codec) -> u8 {
+    match codec {
+        Codec::Keyed => 0,
+        Codec::Indexed => 1,
+        Codec::Quantized { .. } => 2,
+    }
+}
+
+impl Payload {
+    /// Serialize to the length-prefixed wire buffer.
+    pub fn encode(&self) -> Vec<u8> {
+        // upper-bound capacity without pre-walking index deltas (the exact
+        // length needs an O(m) delta scan for Indexed; the prefix is
+        // patched in after the single serialization pass)
+        let cap = 24
+            + 4 * self.side.len()
+            + 4 * self.values.len()
+            + self.indices.as_ref().map_or(0, |i| 5 * i.len());
+        let mut buf = Vec::with_capacity(cap);
+        buf.extend_from_slice(&[0u8; 4]); // length prefix, patched below
+        buf.push(codec_tag(self.codec));
+        if let Codec::Quantized { bits } = self.codec {
+            buf.push(bits);
+        }
+        put_varint(&mut buf, self.n as u64);
+        buf.extend_from_slice(&self.key.to_le_bytes());
+        put_varint(&mut buf, self.side.len() as u64);
+        for &s in &self.side {
+            put_f32(&mut buf, s);
+        }
+        put_varint(&mut buf, self.values.len() as u64);
+        match self.codec {
+            Codec::Keyed => {
+                for &v in &self.values {
+                    put_f32(&mut buf, v);
+                }
+            }
+            Codec::Indexed => {
+                let idx = self.indices.as_ref().expect("indexed payload carries indices");
+                let mut prev = 0u32;
+                for (k, &i) in idx.iter().enumerate() {
+                    let delta = if k == 0 { i } else { i - prev };
+                    put_varint(&mut buf, u64::from(delta));
+                    prev = i;
+                }
+                for &v in &self.values {
+                    put_f32(&mut buf, v);
+                }
+            }
+            Codec::Quantized { bits } => pack_codes(&mut buf, &self.values, bits),
+        }
+        let body = (buf.len() - 4) as u32;
+        buf[0..4].copy_from_slice(&body.to_le_bytes());
+        debug_assert_eq!(buf.len(), self.wire_bytes(), "wire_bytes disagrees with encode");
+        buf
+    }
+
+    /// Parse a buffer produced by [`Payload::encode`].
+    pub fn decode(buf: &[u8]) -> Result<Payload> {
+        anyhow::ensure!(buf.len() >= 4, "wire: missing length prefix");
+        let body_len = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
+        anyhow::ensure!(
+            buf.len() == body_len + 4,
+            "wire: length prefix {} != body {}",
+            body_len,
+            buf.len() - 4
+        );
+        let mut pos = 4usize;
+        let tag = buf[pos];
+        pos += 1;
+        let codec = match tag {
+            0 => Codec::Keyed,
+            1 => Codec::Indexed,
+            2 => {
+                let bits = *buf
+                    .get(pos)
+                    .ok_or_else(|| anyhow::anyhow!("wire: truncated quantizer header"))?;
+                pos += 1;
+                anyhow::ensure!((1..=32).contains(&bits), "wire: bad bit width {bits}");
+                Codec::Quantized { bits }
+            }
+            t => anyhow::bail!("wire: unknown codec tag {t}"),
+        };
+        let n = get_varint(buf, &mut pos)? as usize;
+        let key_bytes: [u8; 8] = buf
+            .get(pos..pos + 8)
+            .ok_or_else(|| anyhow::anyhow!("wire: truncated key"))?
+            .try_into()
+            .unwrap();
+        pos += 8;
+        let key = u64::from_le_bytes(key_bytes);
+        // every count is validated against the bytes actually present
+        // BEFORE any allocation, so a corrupt buffer yields Err instead of
+        // a huge Vec::with_capacity (or an arithmetic overflow)
+        let side_len = get_varint(buf, &mut pos)? as usize;
+        anyhow::ensure!(
+            side_len <= (buf.len() - pos) / 4,
+            "wire: side length {side_len} exceeds remaining buffer"
+        );
+        let mut side = Vec::with_capacity(side_len);
+        for _ in 0..side_len {
+            side.push(get_f32(buf, &mut pos)?);
+        }
+        let m = get_varint(buf, &mut pos)? as usize;
+        let remaining = buf.len() - pos;
+        let fits = match codec {
+            // m f32 values (Indexed additionally carries >= 1 byte/index)
+            Codec::Keyed => m <= remaining / 4,
+            Codec::Indexed => m <= remaining / 5,
+            Codec::Quantized { bits } => {
+                m <= remaining.saturating_mul(8) / usize::from(bits.max(1))
+            }
+        };
+        anyhow::ensure!(fits, "wire: value count {m} exceeds remaining buffer ({remaining} B)");
+        let (values, indices) = match codec {
+            Codec::Keyed => {
+                let mut values = Vec::with_capacity(m);
+                for _ in 0..m {
+                    values.push(get_f32(buf, &mut pos)?);
+                }
+                (values, None)
+            }
+            Codec::Indexed => {
+                let mut idx = Vec::with_capacity(m);
+                let mut prev = 0u64;
+                for k in 0..m {
+                    let delta = get_varint(buf, &mut pos)?;
+                    let i = if k == 0 {
+                        delta
+                    } else {
+                        prev.checked_add(delta)
+                            .ok_or_else(|| anyhow::anyhow!("wire: index delta overflow"))?
+                    };
+                    anyhow::ensure!(i < n as u64, "wire: index {i} out of range {n}");
+                    idx.push(i as u32);
+                    prev = i;
+                }
+                let mut values = Vec::with_capacity(m);
+                for _ in 0..m {
+                    values.push(get_f32(buf, &mut pos)?);
+                }
+                (values, Some(idx))
+            }
+            Codec::Quantized { bits } => (unpack_codes(buf, &mut pos, m, bits)?, None),
+        };
+        anyhow::ensure!(pos == buf.len(), "wire: {} trailing bytes", buf.len() - pos);
+        Ok(Payload { n, values, indices, key, side, codec })
+    }
+
+    /// Exact encoded length in bytes, computed without serializing.
+    pub fn wire_bytes(&self) -> usize {
+        let m = self.values.len();
+        let mut total = 4 // length prefix
+            + 1 // codec tag
+            + varint_len(self.n as u64)
+            + 8 // key
+            + varint_len(self.side.len() as u64)
+            + 4 * self.side.len()
+            + varint_len(m as u64);
+        match self.codec {
+            Codec::Keyed => total += 4 * m,
+            Codec::Indexed => {
+                let idx = self.indices.as_ref().expect("indexed payload carries indices");
+                let mut prev = 0u32;
+                for (k, &i) in idx.iter().enumerate() {
+                    let delta = if k == 0 { i } else { i - prev };
+                    total += varint_len(u64::from(delta));
+                    prev = i;
+                }
+                total += 4 * m;
+            }
+            Codec::Quantized { bits } => {
+                total += 1 + (m * bits as usize).div_ceil(8);
+            }
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Codec, Payload};
+    use super::*;
+
+    fn keyed(n: usize, values: Vec<f32>) -> Payload {
+        Payload { n, values, indices: None, key: 0xDEAD_BEEF, side: vec![], codec: Codec::Keyed }
+    }
+
+    #[test]
+    fn varint_roundtrip_and_lengths() {
+        for v in [0u64, 1, 127, 128, 300, 16_383, 16_384, u32::MAX as u64, u64::MAX] {
+            let mut buf = Vec::new();
+            put_varint(&mut buf, v);
+            assert_eq!(buf.len(), varint_len(v), "len for {v}");
+            let mut pos = 0;
+            assert_eq!(get_varint(&buf, &mut pos).unwrap(), v);
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn varint_rejects_overlong_encodings() {
+        // 10th byte carries bit 63 only: a chunk of 2 would shift off the
+        // top and must be rejected, not truncated to a wrong value
+        let overlong = [0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x02];
+        let mut pos = 0;
+        assert!(get_varint(&overlong, &mut pos).is_err());
+        // an 11-byte varint overflows outright
+        let too_long = [0x80u8; 11];
+        let mut pos = 0;
+        assert!(get_varint(&too_long, &mut pos).is_err());
+    }
+
+    #[test]
+    fn keyed_roundtrip_exact() {
+        let p = keyed(10, vec![1.5, -2.25, 0.0, f32::MIN_POSITIVE]);
+        let buf = p.encode();
+        assert_eq!(buf.len(), p.wire_bytes());
+        assert_eq!(Payload::decode(&buf).unwrap(), p);
+    }
+
+    #[test]
+    fn empty_payload_roundtrip() {
+        let p = keyed(0, vec![]);
+        let buf = p.encode();
+        assert_eq!(buf.len(), p.wire_bytes());
+        assert_eq!(Payload::decode(&buf).unwrap(), p);
+    }
+
+    #[test]
+    fn indexed_roundtrip_with_delta_coding() {
+        let p = Payload {
+            n: 1000,
+            values: vec![3.0, -1.0, 9.5],
+            indices: Some(vec![0, 499, 999]),
+            key: 7,
+            side: vec![],
+            codec: Codec::Indexed,
+        };
+        let buf = p.encode();
+        assert_eq!(buf.len(), p.wire_bytes());
+        assert_eq!(Payload::decode(&buf).unwrap(), p);
+        // small ascending indices cost 1 byte each instead of 4
+        let dense = Payload {
+            indices: Some(vec![1, 2, 3]),
+            ..p.clone()
+        };
+        assert!(dense.wire_bytes() < p.n * 4);
+    }
+
+    #[test]
+    fn quantized_roundtrip_all_bit_widths() {
+        for bits in [1u8, 3, 7, 8, 13, 24, 31, 32] {
+            let max = field_max(bits).min(1 << 24) as f32;
+            let values: Vec<f32> =
+                (0..50).map(|i| ((i as f32 * 37.0) % (max + 1.0)).floor()).collect();
+            let p = Payload {
+                n: 50,
+                values,
+                indices: None,
+                key: 1,
+                side: vec![-2.0, 2.0],
+                codec: Codec::Quantized { bits },
+            };
+            let buf = p.encode();
+            assert_eq!(buf.len(), p.wire_bytes(), "bits={bits}");
+            assert_eq!(Payload::decode(&buf).unwrap(), p, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn quantized_saturating_top_code_survives() {
+        // bits = 32: the f32 code rounds up to exactly 2^32; the packer
+        // clamps into the field and the clamped value converts back to the
+        // identical f32
+        let p = Payload {
+            n: 2,
+            values: vec![4294967296.0, 0.0],
+            indices: None,
+            key: 0,
+            side: vec![0.0, 1.0],
+            codec: Codec::Quantized { bits: 32 },
+        };
+        let got = Payload::decode(&p.encode()).unwrap();
+        assert_eq!(got, p);
+    }
+
+    #[test]
+    fn decode_rejects_corruption() {
+        let p = keyed(5, vec![1.0, 2.0, 3.0]);
+        let buf = p.encode();
+        assert!(Payload::decode(&buf[..3]).is_err(), "missing prefix");
+        assert!(Payload::decode(&buf[..buf.len() - 1]).is_err(), "truncated body");
+        let mut grown = buf.clone();
+        grown.push(0);
+        assert!(Payload::decode(&grown).is_err(), "trailing bytes");
+        let mut bad_tag = buf.clone();
+        bad_tag[4] = 9;
+        assert!(Payload::decode(&bad_tag).is_err(), "unknown codec");
+    }
+
+    #[test]
+    fn decode_rejects_absurd_counts_without_allocating() {
+        // hand-built keyed frame claiming ~2^49 values in a 4-byte body:
+        // decode must return Err before Vec::with_capacity sees the count
+        let mut body = vec![0u8]; // codec tag: Keyed
+        body.push(1); // varint n = 1
+        body.extend_from_slice(&7u64.to_le_bytes()); // key
+        body.push(0); // side_len = 0
+        body.extend_from_slice(&[0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0x7F]); // huge m
+        body.extend_from_slice(&[0; 4]);
+        let mut framed = (body.len() as u32).to_le_bytes().to_vec();
+        framed.extend_from_slice(&body);
+        let err = Payload::decode(&framed).unwrap_err().to_string();
+        assert!(err.contains("exceeds remaining buffer"), "{err}");
+
+        // same for a huge side_len
+        let mut body = vec![0u8, 1];
+        body.extend_from_slice(&7u64.to_le_bytes());
+        body.extend_from_slice(&[0xFF, 0xFF, 0x7F]); // huge side_len
+        let mut framed = (body.len() as u32).to_le_bytes().to_vec();
+        framed.extend_from_slice(&body);
+        assert!(Payload::decode(&framed).is_err());
+    }
+
+    #[test]
+    fn side_channel_is_bit_exact() {
+        let p = Payload {
+            n: 3,
+            values: vec![0.0, 1.0, 2.0],
+            indices: None,
+            key: 3,
+            side: vec![f32::NEG_INFINITY, 1e-38, 3.25],
+            codec: Codec::Keyed,
+        };
+        let got = Payload::decode(&p.encode()).unwrap();
+        assert_eq!(got.side.len(), 3);
+        for (a, b) in got.side.iter().zip(&p.side) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

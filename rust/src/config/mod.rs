@@ -7,13 +7,20 @@
 //! dataset     = karate-like
 //! q           = 2
 //! partitioner = random
-//! comm        = linear:5        # full | none | fixed:R | linear:A | exp | step:E:F
+//! comm        = linear:5        # full | none | fixed:R | linear:A | exp
+//!                               # | step:E:F | budget:BYTES[:CMAX]
 //! engine      = native          # native | pjrt
 //! epochs      = 100
 //! lr          = 0.02
 //! ```
+//!
+//! `comm = budget:2m` installs a closed-loop [`BudgetController`] that
+//! spends 2 MB of wire bytes over the run (suffixes k/m/g accepted, an
+//! optional second field caps the starting rate, default 128); every
+//! other spec replays the named open-loop schedule.
 
-use crate::compress::{CommMode, Scheduler};
+use crate::comm::LedgerMode;
+use crate::compress::{BudgetController, CommMode, RateController, Scheduler};
 use crate::coordinator::{RunMode, Trainer, TrainerOptions};
 use crate::engine::{ModelDims, WorkerEngine};
 use crate::graph::Dataset;
@@ -30,6 +37,7 @@ pub struct TrainConfig {
     pub q: usize,
     pub partitioner: String,
     /// comm spec: full | none | fixed:R | linear:A | exp | step:E:F
+    /// | budget:BYTES[:CMAX] (closed-loop byte budget)
     pub comm: String,
     pub compressor: String,
     pub engine: String,
@@ -51,6 +59,9 @@ pub struct TrainConfig {
     /// max concurrently-computing workers in parallel mode (0 = auto /
     /// VARCO_THREADS)
     pub threads: usize,
+    /// ledger detail: auto (aggregated for budget runs) | detailed |
+    /// aggregated
+    pub ledger: String,
 }
 
 impl Default for TrainConfig {
@@ -77,6 +88,7 @@ impl Default for TrainConfig {
             stale_prob: 0.0,
             run_mode: "parallel".into(),
             threads: 0,
+            ledger: "auto".into(),
         }
     }
 }
@@ -118,6 +130,7 @@ impl TrainConfig {
             "stale_prob" => self.stale_prob = value.parse()?,
             "run_mode" => self.run_mode = value.into(),
             "threads" => self.threads = value.parse()?,
+            "ledger" => self.ledger = value.into(),
             _ => anyhow::bail!("unknown config key {key:?}"),
         }
         Ok(())
@@ -163,12 +176,31 @@ impl TrainConfig {
         Ok(())
     }
 
+    /// Open-loop communication mode.  `budget:*` specs are closed-loop
+    /// and resolved by [`build_trainer_with_dataset`] instead.
     pub fn comm_mode(&self) -> Result<CommMode> {
         match self.comm.as_str() {
             "full" => Ok(CommMode::Full),
             "none" => Ok(CommMode::None),
             spec => Ok(CommMode::Compressed(Scheduler::parse(spec, self.epochs)?)),
         }
+    }
+
+    /// Parse a `budget:BYTES[:CMAX]` comm spec, if this is one.
+    pub fn budget_spec(&self) -> Result<Option<(usize, f32)>> {
+        let Some(rest) = self.comm.strip_prefix("budget:") else {
+            return Ok(None);
+        };
+        let mut it = rest.split(':');
+        let bytes = parse_byte_size(it.next().unwrap_or(""))?;
+        let c_max: f32 = match it.next() {
+            Some(c) => c.parse()?,
+            None => 128.0,
+        };
+        anyhow::ensure!(it.next().is_none(), "bad budget spec {:?}", self.comm);
+        anyhow::ensure!(bytes > 0, "budget must be > 0 bytes");
+        anyhow::ensure!(c_max >= 1.0 && c_max.is_finite(), "budget c_max {c_max} must be >= 1");
+        Ok(Some((bytes, c_max)))
     }
 
     /// Default artifact tag for (dataset, q) when not set explicitly.
@@ -196,6 +228,22 @@ impl TrainConfig {
             self.seed
         )
     }
+}
+
+/// Parse a byte count with optional k/m/g suffix (decimal, case
+/// insensitive): "500k" = 500_000, "2m" = 2_000_000.
+pub fn parse_byte_size(s: &str) -> Result<usize> {
+    let t = s.trim().to_ascii_lowercase();
+    anyhow::ensure!(!t.is_empty(), "empty byte size");
+    let (digits, mult) = match t.as_bytes()[t.len() - 1] {
+        b'k' => (&t[..t.len() - 1], 1_000usize),
+        b'm' => (&t[..t.len() - 1], 1_000_000),
+        b'g' => (&t[..t.len() - 1], 1_000_000_000),
+        _ => (t.as_str(), 1),
+    };
+    let base: f64 = digits.parse().map_err(|_| anyhow::anyhow!("bad byte size {s:?}"))?;
+    anyhow::ensure!(base >= 0.0 && base.is_finite(), "bad byte size {s:?}");
+    Ok((base * mult as f64) as usize)
 }
 
 /// Build a ready-to-run trainer from a config (the main factory).
@@ -262,8 +310,34 @@ pub fn build_trainer_with_dataset(cfg: &TrainConfig, dataset: &Dataset) -> Resul
         other => anyhow::bail!("unknown engine {other:?}; known: native, pjrt"),
     };
 
+    // budget:* installs the closed-loop controller; the nominal comm_mode
+    // records the starting rate (label/reporting comes from the controller)
+    let (comm_mode, controller): (CommMode, Option<Box<dyn RateController>>) =
+        match cfg.budget_spec()? {
+            Some((bytes, c_max)) => (
+                CommMode::Compressed(Scheduler::Fixed { rate: c_max }),
+                Some(Box::new(BudgetController::new(bytes, cfg.epochs, cfg.layers, c_max))),
+            ),
+            None => (cfg.comm_mode()?, None),
+        };
+    let ledger_mode = match cfg.ledger.as_str() {
+        "detailed" => LedgerMode::Detailed,
+        "aggregated" => LedgerMode::Aggregated,
+        // budget runs can be long and only need aggregate feedback
+        "" | "auto" => {
+            if controller.is_some() {
+                LedgerMode::Aggregated
+            } else {
+                LedgerMode::Detailed
+            }
+        }
+        other => anyhow::bail!("unknown ledger mode {other:?}; known: auto, detailed, aggregated"),
+    };
+
     let opts = TrainerOptions {
-        comm_mode: cfg.comm_mode()?,
+        comm_mode,
+        controller,
+        ledger_mode,
         compressor: crate::compress::by_name(&cfg.compressor)?,
         optimizer: crate::optim::by_name(&cfg.optimizer, cfg.lr, cfg.weight_decay)?,
         epochs: cfg.epochs,
@@ -377,6 +451,58 @@ mod tests {
         let report = t.run().unwrap();
         assert_eq!(report.records.len(), 3);
         assert_eq!(report.partitioner, "random");
+    }
+
+    #[test]
+    fn byte_size_parsing() {
+        assert_eq!(parse_byte_size("500").unwrap(), 500);
+        assert_eq!(parse_byte_size("500k").unwrap(), 500_000);
+        assert_eq!(parse_byte_size("2M").unwrap(), 2_000_000);
+        assert_eq!(parse_byte_size("1.5m").unwrap(), 1_500_000);
+        assert_eq!(parse_byte_size("1g").unwrap(), 1_000_000_000);
+        assert!(parse_byte_size("").is_err());
+        assert!(parse_byte_size("lots").is_err());
+    }
+
+    #[test]
+    fn budget_spec_parsing() {
+        let mut cfg = TrainConfig::default();
+        cfg.comm = "budget:2m".into();
+        assert_eq!(cfg.budget_spec().unwrap(), Some((2_000_000, 128.0)));
+        cfg.comm = "budget:500k:64".into();
+        assert_eq!(cfg.budget_spec().unwrap(), Some((500_000, 64.0)));
+        cfg.comm = "fixed:4".into();
+        assert_eq!(cfg.budget_spec().unwrap(), None);
+        cfg.comm = "budget:0".into();
+        assert!(cfg.budget_spec().is_err());
+        cfg.comm = "budget:1k:0.5".into();
+        assert!(cfg.budget_spec().is_err());
+        cfg.comm = "budget:1k:2:9".into();
+        assert!(cfg.budget_spec().is_err());
+        // budget specs are closed-loop: the open-loop parser rejects them
+        cfg.comm = "budget:1k".into();
+        assert!(cfg.comm_mode().is_err());
+    }
+
+    #[test]
+    fn build_trainer_budget_end_to_end() {
+        let mut cfg = TrainConfig::default_quickstart();
+        cfg.epochs = 4;
+        cfg.comm = "budget:200k".into();
+        let mut t = build_trainer(&cfg).unwrap();
+        let report = t.run().unwrap();
+        assert_eq!(report.records.len(), 4);
+        assert!(report.algorithm.starts_with("budget-"), "{}", report.algorithm);
+        // auto ledger mode => aggregated shards for the feedback path
+        assert!(t.ledger().entries().is_empty());
+        assert!(t.ledger().total_bytes() > 0);
+        // explicit override back to detailed still works
+        cfg.ledger = "detailed".into();
+        let mut t2 = build_trainer(&cfg).unwrap();
+        t2.run().unwrap();
+        assert!(!t2.ledger().entries().is_empty());
+        cfg.ledger = "bogus".into();
+        assert!(build_trainer(&cfg).is_err());
     }
 
     #[test]

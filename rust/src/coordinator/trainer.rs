@@ -36,9 +36,23 @@
 //!
 //! At rate 1 (FullComm) this computes the exact centralized gradient, for
 //! any partition — asserted by the integration tests.
+//!
+//! # Rate control
+//!
+//! Rates are chosen by a [`RateController`]: open-loop (the paper's
+//! schedulers, wrapped in [`OpenLoopController`]) or closed-loop (the
+//! byte-budget controller).  Each epoch the coordinator publishes an
+//! [`EpochPlan`] of per-layer rates before the workers start; when the
+//! controller wants feedback, workers measure every compressed message's
+//! exact wire bytes and channel error, the coordinator merges those
+//! measurements **in worker-rank order** at the epoch barrier (so the
+//! parallel runtime stays bitwise equal to the sequential oracle), and
+//! `observe` closes the loop before the next epoch's plan is drawn.
 
-use crate::comm::{Endpoint, Fabric, FailurePolicy, Message, MessageKind};
-use crate::compress::{CommMode, Compressor};
+use crate::comm::{Endpoint, Fabric, FailurePolicy, LedgerMode, Message, MessageKind};
+use crate::compress::{
+    ChannelKind, CommMode, Compressor, Feedback, LayerFeedback, OpenLoopController, RateController,
+};
 use crate::coordinator::eval::FullGraphEval;
 use crate::engine::{LayerGrads, ModelDims, Weights, WorkerEngine};
 use crate::graph::Dataset;
@@ -99,6 +113,12 @@ pub struct TrainerOptions {
     /// max workers computing concurrently in parallel mode
     /// (0 = `VARCO_THREADS` env var, else available parallelism)
     pub threads: usize,
+    /// closed-loop rate controller; `None` wraps `comm_mode` in an
+    /// [`OpenLoopController`] (the historical behavior)
+    pub controller: Option<Box<dyn RateController>>,
+    /// ledger shard detail (budget runs use `Aggregated` for bounded
+    /// memory on long simulations)
+    pub ledger_mode: LedgerMode,
 }
 
 impl Default for TrainerOptions {
@@ -115,6 +135,8 @@ impl Default for TrainerOptions {
             track_grad_norm: false,
             run_mode: RunMode::Parallel,
             threads: 0,
+            controller: None,
+            ledger_mode: LedgerMode::Detailed,
         }
     }
 }
@@ -147,6 +169,64 @@ fn msg_key(seed: u64, epoch: usize, layer: usize, from: usize, to: usize) -> u64
     k
 }
 
+/// One epoch's published rate decisions: a pure value shared by all
+/// workers, drawn from the controller by the coordinator *before* the
+/// epoch starts, so the barrier schedule is identical on every worker.
+#[derive(Clone, Debug)]
+struct EpochPlan {
+    /// per-layer forward rate (None = that layer does not communicate)
+    fwd: Vec<Option<f32>>,
+    /// per-layer backward rate (controllers keep it equal to `fwd`)
+    bwd: Vec<Option<f32>>,
+    /// aggregate over local neighbors only (the No-Comm semantics);
+    /// true iff no layer communicates in either direction
+    local_norm: bool,
+    /// representative rate for the epoch record
+    nominal: Option<f32>,
+    /// measure per-message bytes + channel error for the controller
+    feedback: bool,
+}
+
+fn plan_epoch(ctrl: &dyn RateController, epoch: usize, layers: usize) -> EpochPlan {
+    let fwd: Vec<Option<f32>> =
+        (0..layers).map(|l| ctrl.rate_for(epoch, l, ChannelKind::Forward)).collect();
+    let bwd: Vec<Option<f32>> =
+        (0..layers).map(|l| ctrl.rate_for(epoch, l, ChannelKind::Backward)).collect();
+    let local_norm =
+        fwd.iter().all(|r| r.is_none()) && bwd.iter().all(|r| r.is_none());
+    EpochPlan { local_norm, nominal: ctrl.nominal_rate(epoch), feedback: ctrl.wants_feedback(), fwd, bwd }
+}
+
+/// Close the epoch's control loop: merge per-worker feedback cells in the
+/// caller's iteration order (always worker-rank order) and hand the
+/// controller its observation.  Both run modes go through this single
+/// helper, so their f32 accumulation order — the invariant the bitwise
+/// parallel==sequential equivalence test depends on — is identical by
+/// construction.
+fn observe_epoch<'a>(
+    controller: &mut dyn RateController,
+    plan: &EpochPlan,
+    epoch: usize,
+    epoch_bytes: usize,
+    worker_cells: impl Iterator<Item = &'a [LayerFeedback]>,
+) {
+    if !plan.feedback {
+        return;
+    }
+    let mut merged = vec![LayerFeedback::default(); plan.fwd.len()];
+    for cells in worker_cells {
+        for (m, f) in merged.iter_mut().zip(cells) {
+            m.merge(f);
+        }
+    }
+    controller.observe(&Feedback {
+        epoch,
+        total_bytes: epoch_bytes,
+        layers: merged,
+        rates: plan.fwd.clone(),
+    });
+}
+
 /// One worker's borrowed view of the shared immutable run state.  Both run
 /// modes drive these primitives, so the parallel path cannot drift from
 /// the sequential oracle.
@@ -171,7 +251,10 @@ impl<'a> WorkerCtx<'a> {
 
     /// Compress + send this worker's boundary rows of `h` for `layer`.
     /// The payload staging buffer comes from the worker's workspace, so
-    /// steady-state sends do not allocate.
+    /// steady-state sends do not allocate.  With `track`, returns the
+    /// exact wire bytes plus channel error/signal mass of every message
+    /// (the budget controller's feedback; zeros otherwise).
+    #[allow(clippy::too_many_arguments)]
     fn send_forward(
         &self,
         ep: &mut Endpoint,
@@ -181,8 +264,10 @@ impl<'a> WorkerCtx<'a> {
         h: &Matrix,
         rate: f32,
         f: usize,
-    ) {
+        track: bool,
+    ) -> LayerFeedback {
         let q = self.rank;
+        let mut stats = LayerFeedback::default();
         let mut payload = ws.take_empty();
         for plan in &self.data[q].plans {
             payload.clear();
@@ -192,7 +277,12 @@ impl<'a> WorkerCtx<'a> {
             }
             let key = msg_key(self.seed, epoch, layer, q, plan.to);
             let compressed = self.compressor.compress(&payload, rate, key);
-            ep.send(
+            if track {
+                let (err_sq, sig_sq) = self.compressor.channel_error(&payload, &compressed);
+                stats.err_sq += err_sq;
+                stats.sig_sq += sig_sq;
+            }
+            let sent = ep.send(
                 epoch,
                 Message {
                     from: q,
@@ -201,8 +291,12 @@ impl<'a> WorkerCtx<'a> {
                     payload: compressed,
                 },
             );
+            if track {
+                stats.bytes += sent;
+            }
         }
         ws.put(payload);
+        stats
     }
 
     /// Decompress + scatter received activations into this worker's
@@ -229,6 +323,7 @@ impl<'a> WorkerCtx<'a> {
     /// Return the cotangents of the received boundary rows to their owners,
     /// in the exact element order of the forward message owner->self and
     /// compressed with the SAME key (identical mask).
+    #[allow(clippy::too_many_arguments)]
     fn send_backward(
         &self,
         ep: &mut Endpoint,
@@ -238,8 +333,10 @@ impl<'a> WorkerCtx<'a> {
         g_bnd: &Matrix,
         rate: f32,
         f: usize,
-    ) {
+        track: bool,
+    ) -> LayerFeedback {
         let p = self.rank;
+        let mut stats = LayerFeedback::default();
         let mut payload = ws.take_empty();
         for q in 0..self.data.len() {
             if q == p {
@@ -256,7 +353,12 @@ impl<'a> WorkerCtx<'a> {
             }
             let key = msg_key(self.seed, epoch, layer, q, p);
             let compressed = self.compressor.compress(&payload, rate, key);
-            ep.send(
+            if track {
+                let (err_sq, sig_sq) = self.compressor.channel_error(&payload, &compressed);
+                stats.err_sq += err_sq;
+                stats.sig_sq += sig_sq;
+            }
+            let sent = ep.send(
                 epoch,
                 Message {
                     from: p,
@@ -265,8 +367,12 @@ impl<'a> WorkerCtx<'a> {
                     payload: compressed,
                 },
             );
+            if track {
+                stats.bytes += sent;
+            }
         }
         ws.put(payload);
+        stats
     }
 
     /// Accumulate returned cotangents into this worker's local cotangent.
@@ -301,6 +407,8 @@ struct WorkerOut {
     loss_weighted: f32,
     /// per-layer weight-gradient contribution (empty when `error`)
     grads: Vec<LayerGrads>,
+    /// per-layer wire/error measurements (zeros unless the plan asked)
+    feedback: Vec<LayerFeedback>,
     error: Option<crate::Error>,
 }
 
@@ -329,7 +437,7 @@ fn compute<T>(gate: &Gate, intra: usize, f: impl FnOnce() -> Result<T>) -> Resul
 }
 
 /// One worker's epoch program (parallel mode).  The barrier schedule is a
-/// pure function of (rate, layer count) — identical on every worker, and
+/// pure function of (plan, layer count) — identical on every worker, and
 /// walked to completion even after an error so the others never stall.
 #[allow(clippy::too_many_arguments)]
 fn worker_epoch(
@@ -340,17 +448,17 @@ fn worker_epoch(
     endpoint: &mut Endpoint,
     ws: &mut Workspace,
     weights: &Weights,
-    comm_mode: &CommMode,
+    plan: &EpochPlan,
     layer_dims: &[(usize, usize)],
     xchg: &Barrier,
     gate: &Gate,
     intra: usize,
 ) -> WorkerOut {
-    let rate = comm_mode.rate_at(epoch);
-    let local_norm = rate.is_none();
+    let local_norm = plan.local_norm;
     let d = &ctx.data[ctx.rank];
     let mut err: Option<crate::Error> = None;
     let mut lgrads: Vec<Option<LayerGrads>> = (0..layer_dims.len()).map(|_| None).collect();
+    let mut feedback = vec![LayerFeedback::default(); layer_dims.len()];
     let mut loss_weighted = 0.0f32;
 
     // ---- forward ----
@@ -360,15 +468,16 @@ fn worker_epoch(
     // the allocator on this path.
     let mut h: Option<Matrix> = None;
     for (l, &(fi, _fo)) in layer_dims.iter().enumerate() {
-        let h_bnd = if let Some(r) = rate {
+        let h_bnd = if let Some(r) = plan.fwd[l] {
             if err.is_none() {
                 // an errored worker sends nothing; receivers just see fewer
                 // rows (the epoch is discarded by the coordinator anyway)
                 let h_ref: &Matrix = h.as_ref().unwrap_or(&d.x);
-                if let Err(e) = compute(gate, intra, || {
-                    Ok(ctx.send_forward(endpoint, ws, epoch, l, h_ref, r, fi))
+                match compute(gate, intra, || {
+                    Ok(ctx.send_forward(endpoint, ws, epoch, l, h_ref, r, fi, plan.feedback))
                 }) {
-                    err = Some(e);
+                    Ok(s) => feedback[l].merge(&s),
+                    Err(e) => err = Some(e),
                 }
             }
             xchg.wait();
@@ -437,12 +546,13 @@ fn worker_epoch(
                 Err(e) => err = Some(e),
             }
         }
-        if let Some(r) = rate {
+        if let Some(r) = plan.bwd[l] {
             if err.is_none() {
-                if let Err(e) = compute(gate, intra, || {
-                    Ok(ctx.send_backward(endpoint, ws, epoch, l, &g_bnd, r, fi))
+                match compute(gate, intra, || {
+                    Ok(ctx.send_backward(endpoint, ws, epoch, l, &g_bnd, r, fi, plan.feedback))
                 }) {
-                    err = Some(e);
+                    Ok(s) => feedback[l].merge(&s),
+                    Err(e) => err = Some(e),
                 }
             }
             xchg.wait();
@@ -470,7 +580,7 @@ fn worker_epoch(
     } else {
         Vec::new()
     };
-    WorkerOut { loss_weighted, grads, error: err }
+    WorkerOut { loss_weighted, grads, feedback, error: err }
 }
 
 /// Evaluate (respecting `eval_every`) and append one epoch record.
@@ -482,8 +592,8 @@ fn push_record(
     weights: &Weights,
     eval_every: usize,
     epochs: usize,
-    comm_mode: &CommMode,
-    floats_cum: usize,
+    rate: Option<f32>,
+    bytes_cum: usize,
     epoch: usize,
     loss: f32,
     wall_ms: f64,
@@ -507,8 +617,9 @@ fn push_record(
         train_acc: ev.train_acc,
         val_acc: ev.val_acc,
         test_acc: ev.test_acc,
-        rate: comm_mode.rate_at(epoch),
-        floats_cum,
+        rate,
+        bytes_cum,
+        floats_cum: bytes_cum.div_ceil(4),
         wall_ms,
     });
     Ok(())
@@ -525,6 +636,9 @@ pub struct Trainer {
     pub weights: Weights,
     dims: ModelDims,
     opts: TrainerOptions,
+    /// rate decisions (open- or closed-loop); only the coordinator touches
+    /// it — workers read the published [`EpochPlan`]
+    controller: Box<dyn RateController>,
     fabric: Fabric,
     eval: FullGraphEval,
     total_train: f32,
@@ -542,7 +656,7 @@ impl Trainer {
         worker_graphs: &[WorkerGraph],
         engines: Vec<Box<dyn WorkerEngine>>,
         dims: ModelDims,
-        opts: TrainerOptions,
+        mut opts: TrainerOptions,
     ) -> Result<Trainer> {
         anyhow::ensure!(engines.len() == partition.q, "engine count != q");
         anyhow::ensure!(dims.f_in == dataset.f_in(), "f_in mismatch");
@@ -587,12 +701,17 @@ impl Trainer {
             }
         }
         let total_train: f32 = data.iter().map(|d| d.count_train).sum();
-        let fabric = Fabric::with_policy(partition.q, opts.failure.clone());
+        let fabric =
+            Fabric::with_policy_and_ledger(partition.q, opts.failure.clone(), opts.ledger_mode);
         let endpoints = fabric.endpoints();
         let eval = FullGraphEval::new(dataset);
         let weights = Weights::glorot(&dims, opts.seed);
+        let controller: Box<dyn RateController> = opts
+            .controller
+            .take()
+            .unwrap_or_else(|| Box::new(OpenLoopController::new(opts.comm_mode.clone())));
         let report = RunReport {
-            algorithm: opts.comm_mode.label(),
+            algorithm: controller.label(),
             dataset: dataset.name.clone(),
             partitioner: String::new(),
             q: partition.q,
@@ -609,6 +728,7 @@ impl Trainer {
             weights,
             dims,
             opts,
+            controller,
             fabric,
             eval,
             total_train: total_train.max(1.0),
@@ -623,10 +743,24 @@ impl Trainer {
     }
 
     /// Override the communication mode after construction (diagnostics
-    /// harnesses sweep modes over one trainer setup).
+    /// harnesses sweep modes over one trainer setup).  Installs a fresh
+    /// open-loop controller over the new mode.
     pub fn set_comm_mode(&mut self, mode: CommMode) {
         self.report.algorithm = mode.label();
-        self.opts.comm_mode = mode;
+        self.opts.comm_mode = mode.clone();
+        self.controller = Box::new(OpenLoopController::new(mode));
+    }
+
+    /// Install a (possibly closed-loop) rate controller after
+    /// construction.
+    pub fn set_controller(&mut self, controller: Box<dyn RateController>) {
+        self.report.algorithm = controller.label();
+        self.controller = controller;
+    }
+
+    /// The active rate controller (inspection: budget spend, plans).
+    pub fn controller(&self) -> &dyn RateController {
+        self.controller.as_ref()
     }
 
     /// Override the run mode after construction (benches sweep it).
@@ -685,6 +819,7 @@ impl Trainer {
             weights,
             dims,
             opts,
+            controller,
             fabric,
             grad_norm_trace,
             total_train,
@@ -694,9 +829,14 @@ impl Trainer {
         let data: &[WorkerData] = data;
         let plan_idx: &HashMap<(usize, usize), usize> = plan_idx;
         let q = engines.len();
-        let rate = opts.comm_mode.rate_at(epoch);
-        let local_norm = rate.is_none();
         let layer_dims = dims.layer_dims();
+        let plan = plan_epoch(controller.as_ref(), epoch, layer_dims.len());
+        let local_norm = plan.local_norm;
+        let bytes0 = fabric.total_bytes();
+        // per-(worker, layer) feedback cells, merged in rank order below —
+        // the exact merge the parallel coordinator performs at the barrier
+        let mut fbs: Vec<Vec<LayerFeedback>> =
+            vec![vec![LayerFeedback::default(); layer_dims.len()]; q];
         let seed = opts.seed;
         let compressor: &dyn Compressor = opts.compressor.as_ref();
         let ctx = |rank: usize| WorkerCtx { rank, data, plan_idx, compressor, seed };
@@ -706,11 +846,11 @@ impl Trainer {
         // clone); consumed activations return to each engine's arena
         let mut h: Vec<Option<Matrix>> = (0..q).map(|_| None).collect();
         for (l, &(fi, _fo)) in layer_dims.iter().enumerate() {
-            let h_bnd: Vec<Matrix> = match rate {
+            let h_bnd: Vec<Matrix> = match plan.fwd[l] {
                 Some(r) => {
                     for i in 0..q {
                         let h_ref: &Matrix = h[i].as_ref().unwrap_or(&data[i].x);
-                        ctx(i).send_forward(
+                        let s = ctx(i).send_forward(
                             &mut endpoints[i],
                             &mut workspaces[i],
                             epoch,
@@ -718,7 +858,9 @@ impl Trainer {
                             h_ref,
                             r,
                             fi,
+                            plan.feedback,
                         );
+                        fbs[i][l].merge(&s);
                     }
                     let mut out = Vec::with_capacity(q);
                     for p in 0..q {
@@ -773,9 +915,9 @@ impl Trainer {
                 engines[i].recycle(prev);
                 g_bnds.push(gb);
             }
-            if let Some(r) = rate {
+            if let Some(r) = plan.bwd[l] {
                 for p in 0..q {
-                    ctx(p).send_backward(
+                    let s = ctx(p).send_backward(
                         &mut endpoints[p],
                         &mut workspaces[p],
                         epoch,
@@ -783,7 +925,9 @@ impl Trainer {
                         &g_bnds[p],
                         r,
                         fi,
+                        plan.feedback,
                     );
+                    fbs[p][l].merge(&s);
                 }
                 for i in 0..q {
                     let msgs = endpoints[i].recv_all();
@@ -806,11 +950,11 @@ impl Trainer {
 
         // ---- server step ----
         if opts.ledger_weights {
-            let p = weights.param_count();
+            let wbytes = weights.param_count() * 4;
             for i in 0..q {
                 // worker -> server gradients, server -> worker weights
-                fabric.record(epoch, i, 0, "weights", p);
-                fabric.record(epoch, 0, i, "weights", p);
+                fabric.record(epoch, i, 0, "weights", wbytes);
+                fabric.record(epoch, 0, i, "weights", wbytes);
             }
         }
         if opts.track_grad_norm {
@@ -820,6 +964,15 @@ impl Trainer {
         let flat_g = grad_acc.flatten();
         opts.optimizer.step(&mut flat_w, &flat_g);
         weights.set_from_flat(&flat_w);
+
+        // ---- close the loop ----
+        observe_epoch(
+            controller.as_mut(),
+            &plan,
+            epoch,
+            fabric.total_bytes() - bytes0,
+            fbs.iter().map(|v| v.as_slice()),
+        );
         Ok((mean_loss, grad_acc))
     }
 
@@ -833,6 +986,9 @@ impl Trainer {
 
     fn run_sequential(&mut self) -> Result<RunReport> {
         for epoch in 0..self.opts.epochs {
+            // captured before train_epoch: a closed-loop controller has
+            // already advanced its plan by the time the epoch returns
+            let nominal = self.controller.nominal_rate(epoch);
             let t0 = std::time::Instant::now();
             let (loss, _) = self.train_epoch(epoch)?;
             let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
@@ -843,8 +999,8 @@ impl Trainer {
                 &self.weights,
                 self.opts.eval_every,
                 self.opts.epochs,
-                &self.opts.comm_mode,
-                self.fabric.total_floats(),
+                nominal,
+                self.fabric.total_bytes(),
                 epoch,
                 loss,
                 wall_ms,
@@ -870,6 +1026,7 @@ impl Trainer {
             weights,
             dims,
             opts,
+            controller,
             fabric,
             eval,
             total_train,
@@ -882,8 +1039,11 @@ impl Trainer {
         let compressor: &dyn Compressor = opts.compressor.as_ref();
         let seed = opts.seed;
         let total_train = *total_train;
-        let comm_mode = opts.comm_mode.clone();
         let layer_dims = dims.layer_dims();
+        // the epoch's rate plan, published by the coordinator before the
+        // workers are admitted; workers only ever read it between the
+        // epoch-edge barriers, so there is no writer contention
+        let plan_lock = RwLock::new(plan_epoch(controller.as_ref(), 0, layer_dims.len()));
         let threads = if opts.threads == 0 {
             crate::util::parallel::num_threads()
         } else {
@@ -916,14 +1076,14 @@ impl Trainer {
                 .enumerate()
             {
                 let ctx = WorkerCtx { rank, data, plan_idx, compressor, seed };
-                let (sync, xchg, gate, abort, slots, weights_lock, comm_mode, layer_dims) = (
+                let (sync, xchg, gate, abort, slots, weights_lock, plan_lock, layer_dims) = (
                     &sync,
                     &xchg,
                     &gate,
                     &abort,
                     &slots,
                     &weights_lock,
-                    &comm_mode,
+                    &plan_lock,
                     &layer_dims,
                 );
                 s.spawn(move || {
@@ -932,6 +1092,7 @@ impl Trainer {
                         if abort.load(Ordering::Acquire) {
                             break;
                         }
+                        let plan = plan_lock.read().unwrap().clone();
                         let out = {
                             let w = weights_lock.read().unwrap();
                             worker_epoch(
@@ -942,7 +1103,7 @@ impl Trainer {
                                 endpoint,
                                 &mut *ws,
                                 &w,
-                                comm_mode,
+                                &plan,
                                 layer_dims,
                                 xchg,
                                 gate,
@@ -966,6 +1127,10 @@ impl Trainer {
             };
 
             for epoch in 0..epochs {
+                // snapshot the published plan (workers are parked at the
+                // barrier, so nobody holds the read lock)
+                let cur_plan = plan_lock.read().unwrap().clone();
+                let bytes0 = fabric.total_bytes();
                 sync.wait(); // workers enter the epoch
                 let t0 = std::time::Instant::now();
                 sync.wait(); // workers done
@@ -1012,11 +1177,11 @@ impl Trainer {
                 }
                 let mean_loss = loss_weighted / total_train;
                 if opts.ledger_weights {
-                    let p = w.param_count();
+                    let wbytes = w.param_count() * 4;
                     for i in 0..q {
                         // worker -> server gradients, server -> worker weights
-                        fabric.record(epoch, i, 0, "weights", p);
-                        fabric.record(epoch, 0, i, "weights", p);
+                        fabric.record(epoch, i, 0, "weights", wbytes);
+                        fabric.record(epoch, 0, i, "weights", wbytes);
                     }
                 }
                 if opts.track_grad_norm {
@@ -1026,6 +1191,22 @@ impl Trainer {
                 let flat_g = grad_acc.flatten();
                 opts.optimizer.step(&mut flat_w, &flat_g);
                 w.set_from_flat(&flat_w);
+
+                // ---- close the loop (rank-order merge shared with the
+                // sequential oracle) and publish the next epoch's plan
+                // before re-admitting workers
+                observe_epoch(
+                    controller.as_mut(),
+                    &cur_plan,
+                    epoch,
+                    fabric.total_bytes() - bytes0,
+                    outs.iter().map(|o| o.feedback.as_slice()),
+                );
+                if epoch + 1 < epochs {
+                    *plan_lock.write().unwrap() =
+                        plan_epoch(controller.as_ref(), epoch + 1, layer_dims.len());
+                }
+
                 // same timing scope as the sequential path: the whole epoch
                 // including reduction and the optimizer, excluding eval
                 let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
@@ -1036,8 +1217,8 @@ impl Trainer {
                     &w,
                     opts.eval_every,
                     epochs,
-                    &comm_mode,
-                    fabric.total_floats(),
+                    cur_plan.nominal,
+                    fabric.total_bytes(),
                     epoch,
                     mean_loss,
                     wall_ms,
@@ -1112,7 +1293,7 @@ mod tests {
     }
 
     #[test]
-    fn compressed_communicates_fewer_floats_than_full() {
+    fn compressed_communicates_fewer_bytes_than_full() {
         let (mut tf, _) = build(CommMode::Full, 2, 3, 3);
         tf.run().unwrap();
         let full = tf.ledger().breakdown_by_kind()["activation"];
@@ -1124,8 +1305,11 @@ mod tests {
         );
         tc.run().unwrap();
         let comp = tc.ledger().breakdown_by_kind()["activation"];
+        // bytes, not float-equivalents: the fixed per-message header (tag,
+        // n, key, counts) rides on top of the 4x-smaller value block, so
+        // the bound is a little looser than 1/4
         assert!(
-            (comp as f64) < 0.3 * full as f64,
+            (comp as f64) < 0.35 * full as f64,
             "compressed {comp} vs full {full}"
         );
     }
@@ -1186,6 +1370,46 @@ mod tests {
             ..Default::default()
         };
         assert!(Trainer::new(&ds, &part, &wgs, engines, dims, opts).is_err());
+    }
+
+    #[test]
+    fn budget_controller_closes_the_loop() {
+        use crate::compress::BudgetController;
+        let ds = Dataset::load("karate-like", 0, 9).unwrap();
+        let dims = ModelDims { f_in: ds.f_in(), hidden: 8, classes: ds.classes, layers: 3 };
+        let part = RandomPartitioner { seed: 9 }.partition(&ds.graph, 2).unwrap();
+        let wgs = WorkerGraph::build_all(&ds.graph, &part).unwrap();
+        let engines: Vec<Box<dyn WorkerEngine>> = wgs
+            .iter()
+            .map(|w| Box::new(NativeWorkerEngine::new(w.clone(), dims)) as Box<dyn WorkerEngine>)
+            .collect();
+        let epochs = 12;
+        let opts = TrainerOptions {
+            comm_mode: CommMode::Compressed(Scheduler::Fixed { rate: 128.0 }),
+            controller: Some(Box::new(BudgetController::new(120_000, epochs, 3, 128.0))),
+            ledger_mode: crate::comm::LedgerMode::Aggregated,
+            epochs,
+            seed: 9,
+            optimizer: Box::new(crate::optim::Adam::new(0.02)),
+            ..Default::default()
+        };
+        let mut t = Trainer::new(&ds, &part, &wgs, engines, dims, opts).unwrap();
+        let report = t.run().unwrap();
+        assert_eq!(report.records.len(), epochs);
+        assert!(report.algorithm.starts_with("budget-"), "{}", report.algorithm);
+        // nominal rates never increase (Prop. 2's schedule contract)
+        let rates: Vec<f32> = report.records.iter().filter_map(|r| r.rate).collect();
+        assert_eq!(rates.len(), epochs);
+        assert!(rates.windows(2).all(|w| w[1] <= w[0] + 1e-6), "{rates:?}");
+        // byte accounting is cumulative and the aggregated ledger agrees
+        assert!(report
+            .records
+            .windows(2)
+            .all(|w| w[1].bytes_cum >= w[0].bytes_cum));
+        assert_eq!(report.total_bytes(), t.ledger().total_bytes());
+        assert!(t.ledger().entries().is_empty(), "aggregated shards keep no entries");
+        assert!(t.ledger().verify_conservation());
+        assert!(report.records.last().unwrap().loss.is_finite());
     }
 
     #[test]

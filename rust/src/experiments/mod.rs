@@ -2,8 +2,10 @@
 //! §3).  The `examples/` binaries are thin CLIs over these, so the grid
 //! logic itself is unit-testable.
 
+pub mod budget;
 pub mod figures;
 pub mod grid;
 pub mod tables;
 
+pub use budget::{budget_frontier, frontier_json, frontier_table, FrontierPoint};
 pub use grid::{paper_algorithms, run_one, ExperimentScale, RunSpec};

@@ -103,13 +103,14 @@ fn cmd_train(args: &[String]) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("no epochs were run"))?;
     println!(
         "algorithm={} final: loss={:.4} train={:.4} val={:.4} test={:.4} \
-         test@best-val={:.4} floats={} wall={:.1}s",
+         test@best-val={:.4} bytes={} (floats={}) wall={:.1}s",
         report.algorithm,
         last.loss,
         last.train_acc,
         last.val_acc,
         last.test_acc,
         report.test_at_best_val(),
+        report.total_bytes(),
         report.total_floats(),
         total_s
     );

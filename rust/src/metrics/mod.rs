@@ -14,7 +14,10 @@ pub struct EpochRecord {
     pub test_acc: f32,
     /// compression rate in effect (None = no communication)
     pub rate: Option<f32>,
-    /// cumulative floats communicated after this epoch
+    /// cumulative serialized wire bytes after this epoch (exact)
+    pub bytes_cum: usize,
+    /// cumulative float-equivalents, derived as `ceil(bytes / 4)` —
+    /// kept so Figure 5's historical x-axis replots unchanged
     pub floats_cum: usize,
     pub wall_ms: f64,
 }
@@ -46,6 +49,11 @@ impl RunReport {
             .unwrap_or(0.0)
     }
 
+    /// Exact wire bytes of the whole run.
+    pub fn total_bytes(&self) -> usize {
+        self.records.last().map(|r| r.bytes_cum).unwrap_or(0)
+    }
+
     pub fn total_floats(&self) -> usize {
         self.records.last().map(|r| r.floats_cum).unwrap_or(0)
     }
@@ -57,17 +65,18 @@ impl RunReport {
 
     pub fn write_csv(&self, path: &Path) -> crate::Result<()> {
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        writeln!(f, "epoch,loss,train_acc,val_acc,test_acc,rate,floats_cum,wall_ms")?;
+        writeln!(f, "epoch,loss,train_acc,val_acc,test_acc,rate,bytes_cum,floats_cum,wall_ms")?;
         for r in &self.records {
             writeln!(
                 f,
-                "{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{}",
                 r.epoch,
                 r.loss,
                 r.train_acc,
                 r.val_acc,
                 r.test_acc,
                 r.rate.map_or("inf".into(), |x| x.to_string()),
+                r.bytes_cum,
                 r.floats_cum,
                 r.wall_ms
             )?;
@@ -96,6 +105,7 @@ impl RunReport {
                                 ("val_acc", Json::num(r.val_acc as f64)),
                                 ("test_acc", Json::num(r.test_acc as f64)),
                                 ("rate", r.rate.map_or(Json::Null, |x| Json::num(x as f64))),
+                                ("bytes_cum", Json::num(r.bytes_cum as f64)),
                                 ("floats_cum", Json::num(r.floats_cum as f64)),
                                 ("wall_ms", Json::num(r.wall_ms)),
                             ])
@@ -127,6 +137,14 @@ impl RunReport {
                 val_acc: r.require("val_acc")?.as_f64().unwrap_or(0.0) as f32,
                 test_acc: r.require("test_acc")?.as_f64().unwrap_or(0.0) as f32,
                 rate: r.require("rate")?.as_f64().map(|x| x as f32),
+                // reports written before byte accounting carry only
+                // floats_cum; reconstruct bytes as floats * 4
+                bytes_cum: r
+                    .get("bytes_cum")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or_else(|| {
+                        r.get("floats_cum").and_then(|v| v.as_usize()).unwrap_or(0) * 4
+                    }),
                 floats_cum: r.require("floats_cum")?.as_usize().unwrap_or(0),
                 wall_ms: r.require("wall_ms")?.as_f64().unwrap_or(0.0),
             });
@@ -165,6 +183,7 @@ mod tests {
             val_acc: val,
             test_acc: test,
             rate: Some(2.0),
+            bytes_cum: floats * 4,
             floats_cum: floats,
             wall_ms: 1.0,
         }
@@ -177,7 +196,22 @@ mod tests {
         assert_eq!(r.final_test_accuracy(), 0.9);
         assert_eq!(r.test_at_best_val(), 0.75);
         assert_eq!(r.total_floats(), 300);
+        assert_eq!(r.total_bytes(), 1200);
         assert_eq!(r.efficiency_curve()[1], (200, 0.75));
+    }
+
+    #[test]
+    fn legacy_json_without_bytes_reconstructs_them() {
+        let j = Json::parse(
+            r#"{"algorithm":"full-comm","dataset":"d","partitioner":"p","q":2,
+                "seed":0,"engine":"native","records":[
+                {"epoch":0,"loss":1.0,"train_acc":0.5,"val_acc":0.5,
+                 "test_acc":0.5,"rate":1.0,"floats_cum":25,"wall_ms":1.0}]}"#,
+        )
+        .unwrap();
+        let r = RunReport::from_json(&j).unwrap();
+        assert_eq!(r.records[0].bytes_cum, 100);
+        assert_eq!(r.records[0].floats_cum, 25);
     }
 
     #[test]

@@ -154,3 +154,64 @@ fn parallel_full_comm_still_learns() {
         report.final_test_accuracy()
     );
 }
+
+/// Same rig as `build` but with the closed-loop budget controller: the
+/// feedback (per-layer bytes + channel error) is merged in worker-rank
+/// order at the epoch barrier, so the controller must see bitwise
+/// identical observations — and therefore emit identical plans — in both
+/// run modes.
+fn build_budget(mode: RunMode, budget: usize, q: usize, epochs: usize) -> Trainer {
+    let ds = Dataset::load("karate-like", 0, 7).unwrap();
+    let dims = ModelDims { f_in: ds.f_in(), hidden: 8, classes: ds.classes, layers: 3 };
+    let part = varco::partition::random::RandomPartitioner { seed: 3 }
+        .partition(&ds.graph, q)
+        .unwrap();
+    let wgs = WorkerGraph::build_all(&ds.graph, &part).unwrap();
+    let engines: Vec<Box<dyn WorkerEngine>> = wgs
+        .iter()
+        .map(|w| Box::new(NativeWorkerEngine::new(w.clone(), dims)) as Box<dyn WorkerEngine>)
+        .collect();
+    let opts = TrainerOptions {
+        comm_mode: CommMode::Compressed(Scheduler::Fixed { rate: 128.0 }),
+        controller: Some(Box::new(varco::compress::BudgetController::new(
+            budget, epochs, 3, 128.0,
+        ))),
+        ledger_mode: varco::comm::LedgerMode::Aggregated,
+        epochs,
+        seed: 11,
+        optimizer: Box::new(varco::optim::Adam::new(0.02)),
+        run_mode: mode,
+        ..Default::default()
+    };
+    Trainer::new(&ds, &part, &wgs, engines, dims, opts).unwrap()
+}
+
+#[test]
+fn budget_controller_parallel_matches_sequential() {
+    let (q, epochs, budget) = (4, 8, 120_000usize);
+    let mut ts = build_budget(RunMode::Sequential, budget, q, epochs);
+    let mut tp = build_budget(RunMode::Parallel, budget, q, epochs);
+    let rs = ts.run().unwrap();
+    let rp = tp.run().unwrap();
+
+    let diff = max_abs_diff(&ts.weights.flatten(), &tp.weights.flatten());
+    assert!(diff <= 1e-6, "budget: weight divergence {diff}");
+    for (a, b) in rs.records.iter().zip(&rp.records) {
+        assert!(
+            (a.loss - b.loss).abs() <= 1e-6,
+            "budget epoch {}: loss {} vs {}",
+            a.epoch,
+            a.loss,
+            b.loss
+        );
+        assert_eq!(a.bytes_cum, b.bytes_cum, "budget epoch {} bytes", a.epoch);
+        assert_eq!(a.rate, b.rate, "budget epoch {} planned rate", a.epoch);
+    }
+    assert_eq!(ts.ledger().total_bytes(), tp.ledger().total_bytes());
+    assert_eq!(ts.ledger().breakdown_by_kind(), tp.ledger().breakdown_by_kind());
+    assert_eq!(
+        ts.ledger().cumulative_bytes_by_epoch(),
+        tp.ledger().cumulative_bytes_by_epoch()
+    );
+    assert!(ts.fabric().is_quiescent() && tp.fabric().is_quiescent());
+}

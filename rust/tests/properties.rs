@@ -331,6 +331,74 @@ fn prop_topk_partial_selection_matches_full_argsort() {
 }
 
 #[test]
+fn prop_wire_roundtrip_all_compressors() {
+    // decode(encode(p)) == p and encode().len() == wire_bytes() for every
+    // mechanism across empty / 1-element / large payloads and the whole
+    // rate range (the byte-exact accounting contract)
+    check_property("wire-roundtrip", 24, |rng| {
+        let n = match rng.next_below(5) {
+            0 => 0,
+            1 => 1,
+            2 => 2 + rng.next_below(14),
+            _ => 64 + rng.next_below(2000),
+        };
+        let rate = [1.0f32, 1.5, 4.0, 13.0, 32.0, 128.0][rng.next_below(6)];
+        let key = rng.next_u64();
+        let x: Vec<f32> = (0..n).map(|_| rng.next_normal() * 3.0).collect();
+        for name in ["subset", "topk", "quantize"] {
+            let comp = varco::compress::by_name(name).unwrap();
+            let p = comp.compress(&x, rate, key);
+            let buf = p.encode();
+            assert_eq!(
+                buf.len(),
+                p.wire_bytes(),
+                "{name} n={n} rate={rate}: wire_bytes != encoded length"
+            );
+            let back = varco::compress::Payload::decode(&buf)
+                .unwrap_or_else(|e| panic!("{name} n={n} rate={rate}: decode failed: {e}"));
+            assert_eq!(back, p, "{name} n={n} rate={rate}: roundtrip mismatch");
+            // the decoded payload reconstructs identically
+            let (mut a, mut b) = (vec![0.0f32; n], vec![0.0f32; n]);
+            comp.decompress(&p, &mut a);
+            comp.decompress(&back, &mut b);
+            assert_eq!(a, b, "{name} n={n} rate={rate}: reconstruction drift");
+        }
+    });
+}
+
+#[test]
+fn prop_wire_bytes_match_ledger_records() {
+    // what the fabric charges is exactly what encode() would serialize
+    use varco::comm::{Fabric, Message, MessageKind};
+    check_property("wire-ledger-pin", 12, |rng| {
+        let f = Fabric::new(2);
+        let mut eps = f.endpoints();
+        let mut expect = 0usize;
+        for l in 0..3usize {
+            let n = rng.next_below(300);
+            let x: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+            let rate = [1.0f32, 4.0, 64.0][rng.next_below(3)];
+            let name = ["subset", "topk", "quantize"][rng.next_below(3)];
+            let payload = varco::compress::by_name(name).unwrap().compress(&x, rate, l as u64);
+            expect += payload.encode().len();
+            eps[0].send(
+                0,
+                Message { from: 0, to: 1, kind: MessageKind::Activation { layer: l }, payload },
+            );
+        }
+        eps[1].recv_all();
+        assert_eq!(f.total_bytes(), expect);
+        let merged = f.merged_ledger();
+        assert_eq!(merged.total_bytes(), expect);
+        assert_eq!(
+            merged.entries().iter().map(|e| e.bytes).sum::<usize>(),
+            expect,
+            "per-entry bytes must sum to the encoded total"
+        );
+    });
+}
+
+#[test]
 fn prop_rng_sample_indices_unbiased_coverage() {
     // each index should be kept roughly m/n of the time across keys
     let n = 64;
