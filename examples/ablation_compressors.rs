@@ -1,19 +1,25 @@
 //! Ablation (DESIGN.md design-choice): the paper's shared-key random
 //! subset vs Top-K (must ship indices: 2x wire cost per kept element) vs
-//! uniform quantization, all under the same VARCO linear schedule.
+//! uniform quantization, all under the same VARCO linear schedule —
+//! crossed with the model registry (sage, gcn, gin), so the
+//! accuracy-vs-bytes frontier is reported per architecture.
 //!
 //!     cargo run --release --example ablation_compressors -- [--nodes N]
-//!         [--epochs E] [--q Q]
+//!         [--epochs E] [--q Q] [--models sage,gcn,gin] [--out FILE.json]
 
 use varco::config::{build_trainer_with_dataset, TrainConfig};
 use varco::experiments::ExperimentScale;
 use varco::graph::Dataset;
+use varco::util::Json;
 
 fn main() -> varco::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut scale = ExperimentScale { epochs: 120, ..Default::default() };
     let rest = scale.apply_cli(&args)?;
     let mut q = 8usize;
+    let mut models: Vec<String> =
+        varco::model::MODELS.iter().map(|s| s.to_string()).collect();
+    let mut out = "ablation_compressors.json".to_string();
     let mut i = 0;
     while i < rest.len() {
         match rest[i].as_str() {
@@ -21,42 +27,77 @@ fn main() -> varco::Result<()> {
                 i += 1;
                 q = rest[i].parse()?;
             }
+            "--models" => {
+                i += 1;
+                models = rest[i].split(',').map(String::from).collect();
+            }
+            "--out" => {
+                i += 1;
+                out = rest[i].clone();
+            }
             other => anyhow::bail!("unknown flag {other:?}"),
         }
         i += 1;
     }
     let ds = Dataset::load("synth-arxiv", scale.nodes_arxiv, scale.seed)?;
     println!(
-        "# compressor ablation — synth-arxiv n={} q={q} epochs={} (VARCO linear:5)",
+        "# compressor x model ablation — synth-arxiv n={} q={q} epochs={} (VARCO linear:5)",
         ds.n(),
         scale.epochs
     );
-    println!("{:<12} {:>10} {:>14} {:>16}", "compressor", "final_acc", "acc@best_val", "floats");
-    for comp in ["subset", "topk", "quantize"] {
-        let cfg = TrainConfig {
-            dataset: "synth-arxiv".into(),
-            nodes: scale.nodes_arxiv,
-            q,
-            partitioner: "random".into(),
-            comm: "linear:5".into(),
-            compressor: comp.into(),
-            engine: scale.engine.clone(),
-            epochs: scale.epochs,
-            hidden: scale.hidden,
-            lr: scale.lr,
-            seed: scale.seed,
-            eval_every: scale.eval_every,
-            ..Default::default()
-        };
-        let mut trainer = build_trainer_with_dataset(&cfg, &ds)?;
-        let report = trainer.run()?;
-        println!(
-            "{:<12} {:>10.4} {:>14.4} {:>16}",
-            comp,
-            report.final_test_accuracy(),
-            report.test_at_best_val(),
-            report.total_floats()
-        );
+    println!(
+        "{:<8} {:<12} {:>10} {:>14} {:>14} {:>16}",
+        "model", "compressor", "final_acc", "acc@best_val", "bytes", "floats"
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    for model in &models {
+        for comp in ["subset", "topk", "quantize"] {
+            let cfg = TrainConfig {
+                dataset: "synth-arxiv".into(),
+                nodes: scale.nodes_arxiv,
+                q,
+                partitioner: "random".into(),
+                comm: "linear:5".into(),
+                compressor: comp.into(),
+                model: model.clone(),
+                engine: scale.engine.clone(),
+                epochs: scale.epochs,
+                hidden: scale.hidden,
+                lr: scale.lr,
+                seed: scale.seed,
+                eval_every: scale.eval_every,
+                ..Default::default()
+            };
+            let mut trainer = build_trainer_with_dataset(&cfg, &ds)?;
+            let report = trainer.run()?;
+            println!(
+                "{:<8} {:<12} {:>10.4} {:>14.4} {:>14} {:>16}",
+                model,
+                comp,
+                report.final_test_accuracy(),
+                report.test_at_best_val(),
+                report.total_bytes(),
+                report.total_floats()
+            );
+            rows.push(Json::obj(vec![
+                ("model", Json::str(model.clone())),
+                ("compressor", Json::str(comp)),
+                ("final_acc", Json::num(report.final_test_accuracy() as f64)),
+                ("acc_at_best_val", Json::num(report.test_at_best_val() as f64)),
+                ("bytes", Json::num(report.total_bytes() as f64)),
+                ("floats", Json::num(report.total_floats() as f64)),
+            ]));
+        }
     }
+    let table = Json::obj(vec![
+        ("dataset", Json::str("synth-arxiv")),
+        ("nodes", Json::num(ds.n() as f64)),
+        ("q", Json::num(q as f64)),
+        ("epochs", Json::num(scale.epochs as f64)),
+        ("comm", Json::str("linear:5")),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write(&out, table.to_string_pretty())?;
+    println!("# wrote {out}");
     Ok(())
 }

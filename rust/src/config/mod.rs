@@ -9,6 +9,7 @@
 //! partitioner = random
 //! comm        = linear:5        # full | none | fixed:R | linear:A | exp
 //!                               # | step:E:F | budget:BYTES[:CMAX]
+//! model       = sage            # sage | gcn | gin (model registry)
 //! engine      = native          # native | pjrt
 //! epochs      = 100
 //! lr          = 0.02
@@ -24,6 +25,7 @@ use crate::compress::{BudgetController, CommMode, RateController, Scheduler};
 use crate::coordinator::{RunMode, Trainer, TrainerOptions};
 use crate::engine::{ModelDims, WorkerEngine};
 use crate::graph::Dataset;
+use crate::model::build_spec;
 use crate::partition::WorkerGraph;
 use crate::Result;
 use std::path::Path;
@@ -47,6 +49,8 @@ pub struct TrainConfig {
     pub epochs: usize,
     pub hidden: usize,
     pub layers: usize,
+    /// GNN architecture from the model registry: sage | gcn | gin
+    pub model: String,
     pub optimizer: String,
     pub lr: f32,
     pub weight_decay: f32,
@@ -79,6 +83,7 @@ impl Default for TrainConfig {
             epochs: 300,
             hidden: 256,
             layers: 3,
+            model: "sage".into(),
             optimizer: "adam".into(),
             lr: 0.01,
             weight_decay: 2e-3,
@@ -120,7 +125,12 @@ impl TrainConfig {
             "artifacts_dir" => self.artifacts_dir = value.into(),
             "epochs" => self.epochs = value.parse()?,
             "hidden" => self.hidden = value.parse()?,
-            "layers" => self.layers = value.parse()?,
+            "layers" => {
+                let v: usize = value.parse()?;
+                anyhow::ensure!(v >= 1, "layers must be >= 1 (a GNN needs at least one layer)");
+                self.layers = v;
+            }
+            "model" => self.model = value.into(),
             "optimizer" => self.optimizer = value.into(),
             "lr" => self.lr = value.parse()?,
             "weight_decay" | "wd" => self.weight_decay = value.parse()?,
@@ -216,11 +226,12 @@ impl TrainConfig {
 
     pub fn describe(&self) -> String {
         format!(
-            "{} q={} part={} comm={} engine={} epochs={} hidden={} lr={} seed={}",
+            "{} q={} part={} comm={} model={} engine={} epochs={} hidden={} lr={} seed={}",
             self.dataset,
             self.q,
             self.partitioner,
             self.comm,
+            self.model,
             self.engine,
             self.epochs,
             self.hidden,
@@ -255,6 +266,10 @@ pub fn build_trainer(cfg: &TrainConfig) -> Result<Trainer> {
 /// Same, with a caller-provided dataset (harnesses reuse one dataset
 /// across the whole algorithm grid).
 pub fn build_trainer_with_dataset(cfg: &TrainConfig, dataset: &Dataset) -> Result<Trainer> {
+    anyhow::ensure!(
+        cfg.layers >= 1,
+        "layers must be >= 1 (a GNN needs at least one layer)"
+    );
     let partitioner = crate::partition::by_name(&cfg.partitioner, cfg.seed)?;
     let partition = partitioner.partition(&dataset.graph, cfg.q)?;
     let worker_graphs = WorkerGraph::build_all(&dataset.graph, &partition)?;
@@ -264,12 +279,13 @@ pub fn build_trainer_with_dataset(cfg: &TrainConfig, dataset: &Dataset) -> Resul
         classes: dataset.classes,
         layers: cfg.layers,
     };
+    let spec = build_spec(&cfg.model, &dims)?;
 
     let engines: Vec<Box<dyn WorkerEngine>> = match cfg.engine.as_str() {
         "native" => worker_graphs
             .iter()
             .map(|w| {
-                Box::new(crate::engine::native::NativeWorkerEngine::new(w.clone(), dims))
+                Box::new(crate::engine::native::NativeWorkerEngine::new(w.clone(), spec.clone()))
                     as Box<dyn WorkerEngine>
             })
             .collect(),
@@ -303,6 +319,7 @@ pub fn build_trainer_with_dataset(cfg: &TrainConfig, dataset: &Dataset) -> Resul
                     Ok(Box::new(crate::engine::pjrt::PjrtWorkerEngine::new(
                         arts.clone(),
                         w.clone(),
+                        spec.clone(),
                     )?) as Box<dyn WorkerEngine>)
                 })
                 .collect::<Result<Vec<_>>>()?
@@ -353,7 +370,7 @@ pub fn build_trainer_with_dataset(cfg: &TrainConfig, dataset: &Dataset) -> Resul
         run_mode: RunMode::parse(&cfg.run_mode)?,
         threads: cfg.threads,
     };
-    let mut trainer = Trainer::new(dataset, &partition, &worker_graphs, engines, dims, opts)?;
+    let mut trainer = Trainer::new(dataset, &partition, &worker_graphs, engines, spec, opts)?;
     trainer.report.partitioner = cfg.partitioner.clone();
     Ok(trainer)
 }
@@ -503,6 +520,53 @@ mod tests {
         assert!(!t2.ledger().entries().is_empty());
         cfg.ledger = "bogus".into();
         assert!(build_trainer(&cfg).is_err());
+    }
+
+    #[test]
+    fn layers_zero_rejected_at_parse_with_clear_error() {
+        // regression: `layers=0` used to underflow layer_dims' `take(n-1)`
+        // and panic deep in the trainer; now the config layer rejects it
+        let mut cfg = TrainConfig::default();
+        let err = cfg.set("layers", "0").unwrap_err().to_string();
+        assert!(err.contains("layers must be >= 1"), "{err}");
+        assert_eq!(cfg.layers, 3, "rejected value must not be applied");
+        cfg.set("layers", "1").unwrap();
+        assert_eq!(cfg.layers, 1);
+        // direct struct mutation is caught by the factory too
+        let mut cfg = TrainConfig::default_quickstart();
+        cfg.layers = 0;
+        let err = match build_trainer(&cfg) {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("layers=0 accepted by build_trainer"),
+        };
+        assert!(err.contains("layers must be >= 1"), "{err}");
+    }
+
+    #[test]
+    fn model_key_and_registry() {
+        let mut cfg = TrainConfig::default();
+        assert_eq!(cfg.model, "sage");
+        cfg.set("model", "gcn").unwrap();
+        assert_eq!(cfg.model, "gcn");
+        assert!(cfg.describe().contains("model=gcn"));
+        let mut bad = TrainConfig::default_quickstart();
+        bad.model = "gat".into();
+        assert!(build_trainer(&bad).is_err());
+    }
+
+    #[test]
+    fn build_trainer_gcn_and_gin_end_to_end() {
+        for model in ["gcn", "gin"] {
+            let mut cfg = TrainConfig::default_quickstart();
+            cfg.model = model.into();
+            cfg.epochs = 3;
+            cfg.comm = "fixed:4".into();
+            let mut t = build_trainer(&cfg).unwrap();
+            let report = t.run().unwrap();
+            assert_eq!(report.records.len(), 3, "{model}");
+            assert_eq!(report.model, model);
+            assert!(report.records.last().unwrap().loss.is_finite(), "{model}");
+        }
     }
 
     #[test]

@@ -3,14 +3,18 @@
 //! served later (`varco eval`).
 //!
 //! Format: versioned little-endian binary — magic, version, epoch, seed,
-//! dims, then the flat f32 parameter vector in manifest layout.
+//! dims, model name (v2+), then the flat f32 parameter vector in the
+//! model's tree layout.  v1 files (written before the model registry)
+//! carry no name and load as `sage`, whose flat layout is unchanged — old
+//! checkpoints keep working bitwise.
 
-use crate::engine::{ModelDims, Weights};
+use crate::model::{build_spec, ModelDims, ModelSpec, Weights};
 use crate::Result;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-const MAGIC: &[u8; 8] = b"VARCOCK\x01";
+const MAGIC_V1: &[u8; 8] = b"VARCOCK\x01";
+const MAGIC_V2: &[u8; 8] = b"VARCOCK\x02";
 
 /// A saved training state.
 #[derive(Clone, Debug, PartialEq)]
@@ -18,21 +22,36 @@ pub struct Checkpoint {
     pub epoch: usize,
     pub seed: u64,
     pub dims: ModelDims,
+    /// registry name of the architecture ("sage" for v1 files)
+    pub model: String,
     pub flat_weights: Vec<f32>,
 }
 
 impl Checkpoint {
-    pub fn from_weights(dims: &ModelDims, weights: &Weights, epoch: usize, seed: u64) -> Self {
-        Checkpoint { epoch, seed, dims: *dims, flat_weights: weights.flatten() }
+    pub fn from_weights(spec: &ModelSpec, weights: &Weights, epoch: usize, seed: u64) -> Self {
+        Checkpoint {
+            epoch,
+            seed,
+            dims: spec.dims,
+            model: spec.name.clone(),
+            flat_weights: weights.flatten(),
+        }
+    }
+
+    /// The registry spec this checkpoint was trained under.
+    pub fn spec(&self) -> Result<ModelSpec> {
+        build_spec(&self.model, &self.dims)
     }
 
     /// Rebuild a Weights container (version reset; engines re-upload).
     pub fn to_weights(&self) -> Result<Weights> {
-        let mut w = Weights::glorot(&self.dims, 0).zeros_like();
+        let spec = self.spec()?;
+        let mut w = Weights::zeros(&spec);
         anyhow::ensure!(
             w.param_count() == self.flat_weights.len(),
-            "checkpoint has {} params, dims say {}",
+            "checkpoint has {} params, model {} dims say {}",
             self.flat_weights.len(),
+            self.model,
             w.param_count()
         );
         w.set_from_flat(&self.flat_weights);
@@ -41,7 +60,7 @@ impl Checkpoint {
 
     pub fn save(&self, path: &Path) -> Result<()> {
         let mut w = BufWriter::new(std::fs::File::create(path)?);
-        w.write_all(MAGIC)?;
+        w.write_all(MAGIC_V2)?;
         for v in [
             self.epoch as u64,
             self.seed,
@@ -53,6 +72,9 @@ impl Checkpoint {
         ] {
             w.write_all(&v.to_le_bytes())?;
         }
+        let name = self.model.as_bytes();
+        w.write_all(&(name.len() as u64).to_le_bytes())?;
+        w.write_all(name)?;
         for &x in &self.flat_weights {
             w.write_all(&x.to_le_bytes())?;
         }
@@ -64,30 +86,47 @@ impl Checkpoint {
         let mut r = BufReader::new(std::fs::File::open(path)?);
         let mut magic = [0u8; 8];
         r.read_exact(&mut magic)?;
-        anyhow::ensure!(&magic == MAGIC, "{path:?} is not a varco checkpoint");
-        let mut u64s = [0u64; 7];
-        for v in u64s.iter_mut() {
+        let version = match &magic {
+            m if m == MAGIC_V1 => 1,
+            m if m == MAGIC_V2 => 2,
+            _ => anyhow::bail!("{path:?} is not a varco checkpoint"),
+        };
+        let read_u64 = |r: &mut BufReader<std::fs::File>| -> Result<u64> {
             let mut b = [0u8; 8];
             r.read_exact(&mut b)?;
-            *v = u64::from_le_bytes(b);
+            Ok(u64::from_le_bytes(b))
+        };
+        let mut u64s = [0u64; 7];
+        for v in u64s.iter_mut() {
+            *v = read_u64(&mut r)?;
         }
         let [epoch, seed, f_in, hidden, classes, layers, n_params] = u64s;
+        let model = if version >= 2 {
+            let len = read_u64(&mut r)? as usize;
+            anyhow::ensure!(len <= 256, "corrupt checkpoint: model name length {len}");
+            let mut name = vec![0u8; len];
+            r.read_exact(&mut name)?;
+            String::from_utf8(name).map_err(|_| anyhow::anyhow!("corrupt model name"))?
+        } else {
+            // v1 predates the registry: the only architecture was sage
+            "sage".to_string()
+        };
         let dims = ModelDims {
             f_in: f_in as usize,
             hidden: hidden as usize,
             classes: classes as usize,
             layers: layers as usize,
         };
+        let expect = build_spec(&model, &dims)?.param_count();
         anyhow::ensure!(
-            dims.param_count() == n_params as usize,
-            "corrupt checkpoint: dims imply {} params, header says {n_params}",
-            dims.param_count()
+            expect == n_params as usize,
+            "corrupt checkpoint: model {model} dims imply {expect} params, header says {n_params}"
         );
         let mut buf = vec![0u8; n_params as usize * 4];
         r.read_exact(&mut buf)?;
         let flat_weights =
             buf.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
-        Ok(Checkpoint { epoch: epoch as usize, seed, dims, flat_weights })
+        Ok(Checkpoint { epoch: epoch as usize, seed, dims, model, flat_weights })
     }
 }
 
@@ -99,17 +138,44 @@ mod tests {
     const DIMS: ModelDims = ModelDims { f_in: 6, hidden: 9, classes: 4, layers: 3 };
 
     #[test]
-    fn round_trip_preserves_weights() {
-        let w = Weights::glorot(&DIMS, 11);
-        let ck = Checkpoint::from_weights(&DIMS, &w, 42, 11);
+    fn round_trip_preserves_weights_every_model() {
+        for name in ["sage", "gcn", "gin"] {
+            let spec = build_spec(name, &DIMS).unwrap();
+            let w = Weights::glorot(&spec, 11);
+            let ck = Checkpoint::from_weights(&spec, &w, 42, 11);
+            let dir = TempDir::new().unwrap();
+            let path = dir.path().join("model.ckpt");
+            ck.save(&path).unwrap();
+            let back = Checkpoint::load(&path).unwrap();
+            assert_eq!(back.epoch, 42, "{name}");
+            assert_eq!(back.dims, DIMS, "{name}");
+            assert_eq!(back.model, name);
+            let w2 = back.to_weights().unwrap();
+            assert_eq!(w.flatten(), w2.flatten(), "{name}");
+        }
+    }
+
+    #[test]
+    fn legacy_v1_checkpoints_load_as_sage() {
+        // hand-write a v1 file: magic \x01, 7-u64 header, raw f32 weights
+        let spec = build_spec("sage", &DIMS).unwrap();
+        let w = Weights::glorot(&spec, 3);
+        let flat = w.flatten();
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(b"VARCOCK\x01");
+        for v in [7u64, 3, 6, 9, 4, 3, flat.len() as u64] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for &x in &flat {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
         let dir = TempDir::new().unwrap();
-        let path = dir.path().join("model.ckpt");
-        ck.save(&path).unwrap();
-        let back = Checkpoint::load(&path).unwrap();
-        assert_eq!(back.epoch, 42);
-        assert_eq!(back.dims, DIMS);
-        let w2 = back.to_weights().unwrap();
-        assert_eq!(w.flatten(), w2.flatten());
+        let path = dir.path().join("legacy.ckpt");
+        std::fs::write(&path, &bytes).unwrap();
+        let ck = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck.model, "sage");
+        assert_eq!(ck.epoch, 7);
+        assert_eq!(ck.to_weights().unwrap().flatten(), flat);
     }
 
     #[test]
@@ -122,8 +188,9 @@ mod tests {
 
     #[test]
     fn rejects_truncated() {
-        let w = Weights::glorot(&DIMS, 1);
-        let ck = Checkpoint::from_weights(&DIMS, &w, 0, 1);
+        let spec = build_spec("sage", &DIMS).unwrap();
+        let w = Weights::glorot(&spec, 1);
+        let ck = Checkpoint::from_weights(&spec, &w, 0, 1);
         let dir = TempDir::new().unwrap();
         let path = dir.path().join("model.ckpt");
         ck.save(&path).unwrap();
@@ -134,8 +201,9 @@ mod tests {
 
     #[test]
     fn dims_param_mismatch_detected() {
-        let w = Weights::glorot(&DIMS, 1);
-        let mut ck = Checkpoint::from_weights(&DIMS, &w, 0, 1);
+        let spec = build_spec("gin", &DIMS).unwrap();
+        let w = Weights::glorot(&spec, 1);
+        let mut ck = Checkpoint::from_weights(&spec, &w, 0, 1);
         ck.flat_weights.pop();
         assert!(ck.to_weights().is_err());
     }

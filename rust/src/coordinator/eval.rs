@@ -2,19 +2,27 @@
 //!
 //! The paper reports test accuracy of the learned model; evaluation is
 //! standard centralized inference (the model is identical on every worker
-//! after averaging).  This runs the exact sparse forward on the whole
-//! graph — it is NOT on the training hot path and is engine-independent,
-//! which also makes it the neutral referee between engines.
+//! after averaging).  This runs the exact sparse forward of the model's
+//! [`ModelSpec`] on the whole graph — it is NOT on the training hot path
+//! and is engine-independent, which also makes it the neutral referee
+//! between engines.
 
-use crate::engine::{ModelDims, Weights};
 use crate::graph::Dataset;
+use crate::model::{Aggregation, ModelSpec, Update, Weights};
 use crate::partition::worker_graph::SparseBlock;
 use crate::tensor::Matrix;
 use crate::Result;
 
-/// Full-graph evaluator (owns the normalized adjacency).
+/// Full-graph evaluator (owns the spec's normalized adjacency operators).
 pub struct FullGraphEval {
-    s_full: SparseBlock,
+    spec: ModelSpec,
+    /// mean-normalized operator (rows sum to 1), built when any layer
+    /// aggregates with `Mean`
+    s_mean: Option<SparseBlock>,
+    /// GCN symmetric-normalized operator + per-node self-loop coefficient
+    s_gcn: Option<(SparseBlock, Vec<f32>)>,
+    /// unit-weight sum operator (GIN)
+    s_sum: Option<SparseBlock>,
     features: Matrix,
     labels: Vec<u32>,
     m_train: Vec<f32>,
@@ -35,27 +43,46 @@ pub struct EvalResult {
 }
 
 impl FullGraphEval {
-    pub fn new(ds: &Dataset) -> FullGraphEval {
+    pub fn new(ds: &Dataset, spec: impl Into<ModelSpec>) -> FullGraphEval {
+        let spec = spec.into();
         let g = &ds.graph;
-        let mut indptr = Vec::with_capacity(g.n + 1);
-        let mut values = Vec::with_capacity(g.indices.len());
-        indptr.push(0u64);
-        for u in 0..g.n {
-            let deg = g.degree(u).max(1) as f32;
-            for _ in g.neighbors(u) {
-                values.push(1.0 / deg);
+        let need = |kind: Aggregation| spec.layers.iter().any(|l| l.agg == kind);
+        let block = |values: Vec<f32>| SparseBlock {
+            rows: g.n,
+            cols: g.n,
+            indptr: g.indptr.clone(),
+            indices: g.indices.clone(),
+            values,
+        };
+        let s_mean = need(Aggregation::Mean).then(|| {
+            let mut values = Vec::with_capacity(g.indices.len());
+            for u in 0..g.n {
+                let deg = g.degree(u).max(1) as f32;
+                for _ in g.neighbors(u) {
+                    values.push(1.0 / deg);
+                }
             }
-            indptr.push(g.indptr[u + 1]);
-        }
+            block(values)
+        });
+        let s_gcn = need(Aggregation::GcnSym).then(|| {
+            let inv_sqrt: Vec<f32> =
+                (0..g.n).map(|u| 1.0 / ((g.degree(u) + 1) as f32).sqrt()).collect();
+            let mut values = Vec::with_capacity(g.indices.len());
+            for u in 0..g.n {
+                for &v in g.neighbors(u) {
+                    values.push(inv_sqrt[u] * inv_sqrt[v as usize]);
+                }
+            }
+            let coeff: Vec<f32> = (0..g.n).map(|u| 1.0 / (g.degree(u) + 1) as f32).collect();
+            (block(values), coeff)
+        });
+        let s_sum = need(Aggregation::GinSum).then(|| block(vec![1.0; g.indices.len()]));
         let (m_train, m_val, m_test) = ds.split.as_f32();
         FullGraphEval {
-            s_full: SparseBlock {
-                rows: g.n,
-                cols: g.n,
-                indptr,
-                indices: g.indices.clone(),
-                values,
-            },
+            spec,
+            s_mean,
+            s_gcn,
+            s_sum,
             features: ds.features.clone(),
             labels: ds.labels.clone(),
             n_train: m_train.iter().filter(|&&x| x > 0.0).count(),
@@ -67,26 +94,66 @@ impl FullGraphEval {
         }
     }
 
-    /// Exact centralized forward -> logits.
-    pub fn logits(&self, dims: &ModelDims, weights: &Weights) -> Matrix {
+    /// Exact centralized forward -> logits, per the spec's contract.
+    pub fn logits(&self, weights: &Weights) -> Matrix {
         let mut h = self.features.clone();
-        for (l, lw) in weights.layers.iter().enumerate() {
+        for (l, ls) in self.spec.layers.iter().enumerate() {
             let mut agg = Matrix::zeros(h.rows, h.cols);
-            self.s_full.spmm_into(&h, &mut agg);
-            let mut pre = h.matmul(&lw.w_self);
-            pre.add_assign(&agg.matmul(&lw.w_neigh));
-            pre.add_row_broadcast(&lw.bias);
-            if l + 1 < dims.layers {
-                pre.relu();
+            match ls.agg {
+                Aggregation::Mean => {
+                    self.s_mean.as_ref().expect("mean op built").spmm_into(&h, &mut agg)
+                }
+                Aggregation::GcnSym => {
+                    let (s, coeff) = self.s_gcn.as_ref().expect("gcn op built");
+                    for (r, &c) in coeff.iter().enumerate() {
+                        let hrow = h.row(r);
+                        for (a, &v) in agg.row_mut(r).iter_mut().zip(hrow) {
+                            *a += c * v;
+                        }
+                    }
+                    s.spmm_into(&h, &mut agg);
+                }
+                Aggregation::GinSum => {
+                    self.s_sum.as_ref().expect("sum op built").spmm_into(&h, &mut agg)
+                }
             }
+            let lw = &weights.layers[l];
+            let mut pre = match ls.update {
+                Update::SageLinear => {
+                    let mut pre = h.matmul(&lw.params[0].value);
+                    pre.add_assign(&agg.matmul(&lw.params[1].value));
+                    pre.add_row_broadcast(&lw.params[2].value.data);
+                    pre
+                }
+                Update::GcnLinear => {
+                    let mut pre = agg.matmul(&lw.params[0].value);
+                    pre.add_row_broadcast(&lw.params[1].value.data);
+                    pre
+                }
+                Update::GinMlp => {
+                    let eps = lw.params[0].value.data[0];
+                    let s = 1.0 + eps;
+                    let mut z = agg;
+                    for (zv, &hv) in z.data.iter_mut().zip(&h.data) {
+                        *zv += s * hv;
+                    }
+                    let mut m = z.matmul(&lw.params[1].value);
+                    m.add_row_broadcast(&lw.params[2].value.data);
+                    m.relu();
+                    let mut pre = m.matmul(&lw.params[3].value);
+                    pre.add_row_broadcast(&lw.params[4].value.data);
+                    pre
+                }
+            };
+            ls.act.apply(&mut pre);
             h = pre;
         }
         h
     }
 
     /// Full evaluation: accuracies on the three splits + train loss.
-    pub fn evaluate(&self, dims: &ModelDims, weights: &Weights) -> Result<EvalResult> {
-        let logits = self.logits(dims, weights);
+    pub fn evaluate(&self, weights: &Weights) -> Result<EvalResult> {
+        let logits = self.logits(weights);
         let out = crate::engine::native::loss_grad_dense(
             &logits,
             &self.labels,
@@ -106,36 +173,41 @@ impl FullGraphEval {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::{build_spec, ModelDims, MODELS};
 
     #[test]
     fn eval_counts_splits() {
         let ds = Dataset::load("karate-like", 0, 1).unwrap();
-        let ev = FullGraphEval::new(&ds);
+        let dims = ModelDims { f_in: ds.f_in(), hidden: 8, classes: ds.classes, layers: 3 };
+        let ev = FullGraphEval::new(&ds, &dims);
         assert_eq!(ev.n_train + ev.n_val + ev.n_test, ds.n());
     }
 
     #[test]
-    fn eval_runs_and_is_deterministic() {
+    fn eval_runs_and_is_deterministic_for_every_model() {
         let ds = Dataset::load("karate-like", 0, 2).unwrap();
         let dims = ModelDims { f_in: ds.f_in(), hidden: 8, classes: ds.classes, layers: 3 };
-        let w = Weights::glorot(&dims, 3);
-        let ev = FullGraphEval::new(&ds);
-        let a = ev.evaluate(&dims, &w).unwrap();
-        let b = ev.evaluate(&dims, &w).unwrap();
-        assert_eq!(a, b);
-        assert!(a.test_acc >= 0.0 && a.test_acc <= 1.0);
-        assert!(a.loss.is_finite());
+        for &name in MODELS {
+            let spec = build_spec(name, &dims).unwrap();
+            let w = Weights::glorot(&spec, 3);
+            let ev = FullGraphEval::new(&ds, &spec);
+            let a = ev.evaluate(&w).unwrap();
+            let b = ev.evaluate(&w).unwrap();
+            assert_eq!(a, b, "{name}");
+            assert!(a.test_acc >= 0.0 && a.test_acc <= 1.0, "{name}");
+            assert!(a.loss.is_finite(), "{name}");
+        }
     }
 
     #[test]
     fn random_weights_near_chance() {
         let ds = Dataset::load("karate-like", 0, 5).unwrap();
         let dims = ModelDims { f_in: ds.f_in(), hidden: 8, classes: ds.classes, layers: 3 };
-        let ev = FullGraphEval::new(&ds);
+        let ev = FullGraphEval::new(&ds, &dims);
         // average over a few seeds: near 50% for 2 classes
         let mut acc = 0.0;
         for seed in 0..5 {
-            acc += ev.evaluate(&dims, &Weights::glorot(&dims, seed)).unwrap().test_acc;
+            acc += ev.evaluate(&Weights::glorot(&dims, seed)).unwrap().test_acc;
         }
         acc /= 5.0;
         assert!((0.15..0.85).contains(&acc), "suspicious chance accuracy {acc}");

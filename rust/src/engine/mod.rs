@@ -1,163 +1,29 @@
 //! Compute engines: the per-worker forward/backward/loss primitives the
 //! coordinator drives.
 //!
-//! Two interchangeable backends implement `WorkerEngine`:
-//!   * `native`  — pure-rust CSR sparse math (fast CPU path; also the
-//!     differentiable oracle the integration tests check PJRT against);
+//! Engines are architecture-agnostic: each one is constructed with a
+//! [`ModelSpec`] (see [`crate::model`]) and implements the per-layer
+//! aggregation/update/activation contract it describes.  Two
+//! interchangeable backends implement `WorkerEngine`:
+//!   * `native`  — pure-rust CSR sparse math for every registered
+//!     architecture (fast CPU path; also the differentiable oracle the
+//!     integration tests check PJRT against);
 //!   * `pjrt`    — executes the AOT JAX/Pallas artifacts through the PJRT
-//!     C API (the three-layer paper stack).
+//!     C API (the three-layer paper stack; sage-only artifacts, rejects
+//!     other specs cleanly at construction).
 
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
+// The model types started life in this module; re-export them so every
+// historical `crate::engine::{ModelDims, Weights}` path keeps working.
+pub use crate::model::{
+    Activation, Aggregation, LayerParams, LayerSpec, ModelDims, ModelSpec, Update, Weights,
+};
+
 use crate::tensor::Matrix;
-use crate::util::Rng;
 use crate::Result;
-
-/// Model dimensions (mirrors python/compile/shapes.py).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct ModelDims {
-    pub f_in: usize,
-    pub hidden: usize,
-    pub classes: usize,
-    pub layers: usize,
-}
-
-impl ModelDims {
-    /// Per-layer (f_in, f_out) pairs.
-    pub fn layer_dims(&self) -> Vec<(usize, usize)> {
-        let mut dims = vec![self.f_in];
-        dims.extend(std::iter::repeat(self.hidden).take(self.layers - 1));
-        dims.push(self.classes);
-        dims.windows(2).map(|w| (w[0], w[1])).collect()
-    }
-
-    pub fn param_count(&self) -> usize {
-        self.layer_dims().iter().map(|(fi, fo)| 2 * fi * fo + fo).sum()
-    }
-}
-
-/// One layer's parameters.
-#[derive(Clone, Debug, PartialEq)]
-pub struct LayerWeights {
-    pub w_self: Matrix,
-    pub w_neigh: Matrix,
-    pub bias: Vec<f32>,
-}
-
-/// Full model parameters; also used as the gradient container.
-#[derive(Clone, Debug)]
-pub struct Weights {
-    pub layers: Vec<LayerWeights>,
-    /// bumped on every update; lets engines cache device-resident copies
-    pub version: u64,
-}
-
-// version is a cache stamp, not part of value identity
-impl PartialEq for Weights {
-    fn eq(&self, other: &Self) -> bool {
-        self.layers == other.layers
-    }
-}
-
-impl Weights {
-    /// Glorot-uniform init (matches python model.init_weights layout).
-    pub fn glorot(dims: &ModelDims, seed: u64) -> Weights {
-        let mut rng = Rng::new(seed);
-        let layers = dims
-            .layer_dims()
-            .iter()
-            .map(|&(fi, fo)| {
-                let lim = (6.0 / (fi + fo) as f32).sqrt();
-                LayerWeights {
-                    w_self: Matrix::from_fn(fi, fo, |_, _| rng.next_range(-lim, lim)),
-                    w_neigh: Matrix::from_fn(fi, fo, |_, _| rng.next_range(-lim, lim)),
-                    bias: vec![0.0; fo],
-                }
-            })
-            .collect();
-        Weights { layers, version: 0 }
-    }
-
-    /// All-zero gradient container with the same shapes.
-    pub fn zeros_like(&self) -> Weights {
-        Weights {
-            layers: self
-                .layers
-                .iter()
-                .map(|l| LayerWeights {
-                    w_self: Matrix::zeros(l.w_self.rows, l.w_self.cols),
-                    w_neigh: Matrix::zeros(l.w_neigh.rows, l.w_neigh.cols),
-                    bias: vec![0.0; l.bias.len()],
-                })
-                .collect(),
-            version: 0,
-        }
-    }
-
-    pub fn param_count(&self) -> usize {
-        self.layers
-            .iter()
-            .map(|l| l.w_self.data.len() + l.w_neigh.data.len() + l.bias.len())
-            .sum()
-    }
-
-    /// Flatten in the manifest layout [w_self, w_neigh, bias] per layer.
-    pub fn flatten(&self) -> Vec<f32> {
-        let mut out = Vec::with_capacity(self.param_count());
-        for l in &self.layers {
-            out.extend_from_slice(&l.w_self.data);
-            out.extend_from_slice(&l.w_neigh.data);
-            out.extend_from_slice(&l.bias);
-        }
-        out
-    }
-
-    /// Inverse of flatten.
-    pub fn set_from_flat(&mut self, flat: &[f32]) {
-        assert_eq!(flat.len(), self.param_count());
-        self.version += 1;
-        let mut off = 0;
-        for l in self.layers.iter_mut() {
-            let n = l.w_self.data.len();
-            l.w_self.data.copy_from_slice(&flat[off..off + n]);
-            off += n;
-            let n = l.w_neigh.data.len();
-            l.w_neigh.data.copy_from_slice(&flat[off..off + n]);
-            off += n;
-            let n = l.bias.len();
-            l.bias.copy_from_slice(&flat[off..off + n]);
-            off += n;
-        }
-    }
-
-    /// self += other (gradient accumulation across workers).
-    pub fn add_assign(&mut self, other: &Weights) {
-        for (a, b) in self.layers.iter_mut().zip(&other.layers) {
-            a.w_self.add_assign(&b.w_self);
-            a.w_neigh.add_assign(&b.w_neigh);
-            for (x, y) in a.bias.iter_mut().zip(&b.bias) {
-                *x += y;
-            }
-        }
-    }
-
-    pub fn scale(&mut self, s: f32) {
-        for l in self.layers.iter_mut() {
-            l.w_self.scale(s);
-            l.w_neigh.scale(s);
-            for b in l.bias.iter_mut() {
-                *b *= s;
-            }
-        }
-    }
-
-    /// L2 norm over all parameters (gradient-norm diagnostics, Prop. 1/2).
-    pub fn norm(&self) -> f32 {
-        self.flatten().iter().map(|x| x * x).sum::<f32>().sqrt()
-    }
-}
 
 /// Output of the loss head.
 #[derive(Clone, Debug)]
@@ -170,14 +36,6 @@ pub struct LossOut {
     pub count_train: f32,
 }
 
-/// Per-layer gradients returned by `backward_layer`.
-#[derive(Clone, Debug)]
-pub struct LayerGrads {
-    pub w_self: Matrix,
-    pub w_neigh: Matrix,
-    pub bias: Vec<f32>,
-}
-
 /// The per-worker compute interface the coordinator drives.
 ///
 /// Calling convention per epoch (per worker):
@@ -185,7 +43,8 @@ pub struct LayerGrads {
 ///   2. `loss_grad(...)` on the last output,
 ///   3. `backward_layer(l, ...)` for l = L-1..0, each returning the
 ///      cotangents to propagate locally (`g_h_local`) and to ship to the
-///      boundary owners (`g_h_bnd`).
+///      boundary owners (`g_h_bnd`) plus the layer's parameter-tree
+///      gradients (a [`LayerParams`] with the spec's tensor layout).
 // `Send` so the parallel runtime can move each engine onto its worker
 // thread for the duration of a run.  Every engine is still owned (and
 // exclusively driven) by exactly one thread at a time.
@@ -203,8 +62,9 @@ pub trait WorkerEngine: Send {
         true
     }
 
-    /// One SAGE layer forward.  `h_bnd` must have `n_boundary()` rows;
-    /// `local_norm` selects the locally-renormalized operator (NoComm).
+    /// One layer forward under the engine's [`ModelSpec`].  `h_bnd` must
+    /// have `n_boundary()` rows; `local_norm` selects the
+    /// locally-renormalized operator (NoComm).
     fn forward_layer(
         &mut self,
         layer: usize,
@@ -215,14 +75,14 @@ pub trait WorkerEngine: Send {
     ) -> Result<Matrix>;
 
     /// VJP of layer `layer` given the cotangent of its output.
-    /// Returns (g_h_local, g_h_bnd, layer weight grads).
+    /// Returns (g_h_local, g_h_bnd, layer parameter grads).
     fn backward_layer(
         &mut self,
         layer: usize,
         weights: &Weights,
         g_out: &Matrix,
         local_norm: bool,
-    ) -> Result<(Matrix, Matrix, LayerGrads)>;
+    ) -> Result<(Matrix, Matrix, LayerParams)>;
 
     /// Masked cross-entropy + correct counts.
     fn loss_grad(
@@ -260,8 +120,8 @@ mod tests {
         let w2 = Weights::glorot(&DIMS, 7);
         assert_eq!(w1, w2);
         assert_eq!(w1.param_count(), DIMS.param_count());
-        assert_eq!(w1.layers[0].w_self.shape(), (8, 12));
-        assert!(w1.layers.iter().all(|l| l.bias.iter().all(|&b| b == 0.0)));
+        assert_eq!(w1.layers[0].get("w_self").shape(), (8, 12));
+        assert!(w1.layers.iter().all(|l| l.get("bias").data.iter().all(|&b| b == 0.0)));
     }
 
     #[test]

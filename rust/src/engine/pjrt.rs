@@ -10,7 +10,8 @@
 //! model weights once **per optimizer step** (cached by `Weights.version`);
 //! per-call uploads are only the activations/cotangents.
 
-use super::{LayerGrads, LossOut, Weights, WorkerEngine};
+use super::{LossOut, Weights, WorkerEngine};
+use crate::model::{LayerParams, ModelSpec};
 use crate::partition::WorkerGraph;
 use crate::runtime::{
     buffer_from_labels, buffer_from_matrix, buffer_from_vec, matrix_from_literal,
@@ -36,6 +37,7 @@ struct WeightBuffers {
 pub struct PjrtWorkerEngine {
     arts: Arc<ArtifactSet>,
     wg: WorkerGraph,
+    spec: ModelSpec,
     /// device-resident dense blocks (uploaded once)
     s_ll: xla::PjRtBuffer,
     s_lb: xla::PjRtBuffer,
@@ -56,8 +58,28 @@ pub struct PjrtWorkerEngine {
 unsafe impl Send for PjrtWorkerEngine {}
 
 impl PjrtWorkerEngine {
-    pub fn new(arts: Arc<ArtifactSet>, wg: WorkerGraph) -> Result<PjrtWorkerEngine> {
+    pub fn new(
+        arts: Arc<ArtifactSet>,
+        wg: WorkerGraph,
+        spec: impl Into<ModelSpec>,
+    ) -> Result<PjrtWorkerEngine> {
+        let spec = spec.into();
+        // the AOT artifacts implement exactly the sage contract; reject
+        // any other spec cleanly instead of computing the wrong model
+        let sage = ModelSpec::from(&spec.dims);
+        anyhow::ensure!(
+            spec.layers == sage.layers,
+            "pjrt artifacts implement the sage architecture only; model {:?} \
+             is unsupported (use engine=native)",
+            spec.name
+        );
         let cfg = &arts.cfg;
+        anyhow::ensure!(
+            spec.layers.len() == cfg.layers,
+            "spec has {} layers, artifact {}",
+            spec.layers.len(),
+            cfg.layers
+        );
         anyhow::ensure!(
             wg.n_local() == cfg.n_local,
             "partition size {} != artifact n_local {}; rebuild artifacts for this (dataset, q)",
@@ -79,6 +101,7 @@ impl PjrtWorkerEngine {
             cache: (0..cfg.layers).map(|_| None).collect(),
             arts,
             wg,
+            spec,
             s_ll,
             s_lb,
             s_ll_local,
@@ -111,10 +134,11 @@ impl PjrtWorkerEngine {
         let client = self.client().clone();
         let mut layers = Vec::with_capacity(weights.layers.len());
         for lw in &weights.layers {
+            // sage layout: [w_self, w_neigh, bias]
             layers.push((
-                buffer_from_matrix(&client, &lw.w_self)?,
-                buffer_from_matrix(&client, &lw.w_neigh)?,
-                buffer_from_vec(&client, &lw.bias)?,
+                buffer_from_matrix(&client, &lw.params[0].value)?,
+                buffer_from_matrix(&client, &lw.params[1].value)?,
+                buffer_from_vec(&client, &lw.params[2].value.data)?,
             ));
         }
         self.wbufs = Some(WeightBuffers { version: weights.version, layers });
@@ -148,8 +172,7 @@ impl WorkerEngine for PjrtWorkerEngine {
         h_bnd: &Matrix,
         local_norm: bool,
     ) -> Result<Matrix> {
-        let lw = &weights.layers[layer];
-        let f = lw.w_self.rows;
+        let f = self.spec.layers[layer].f_in;
         anyhow::ensure!(h_local.shape() == (self.n_local(), f), "h_local shape");
         let padded = if local_norm {
             Matrix::zeros(self.arts.cfg.n_bnd, f)
@@ -183,12 +206,11 @@ impl WorkerEngine for PjrtWorkerEngine {
         weights: &Weights,
         g_out: &Matrix,
         local_norm: bool,
-    ) -> Result<(Matrix, Matrix, LayerGrads)> {
+    ) -> Result<(Matrix, Matrix, LayerParams)> {
         self.ensure_weights(weights)?;
         let cache = self.cache[layer]
             .as_ref()
             .ok_or_else(|| anyhow::anyhow!("backward_layer({layer}) before forward"))?;
-        let lw = &weights.layers[layer];
         let client = self.client().clone();
         let (s_ll, s_lb) = if local_norm {
             (&self.s_ll_local, &self.s_lb_zero)
@@ -218,12 +240,17 @@ impl WorkerEngine for PjrtWorkerEngine {
         let g_bias = outs[4].to_vec::<f32>().map_err(|e| anyhow::anyhow!("gb: {e:?}"))?;
         // trim the zero padding back to the actual boundary
         let nb = self.n_boundary();
-        let f = lw.w_self.rows;
+        let f = self.spec.layers[layer].f_in;
         let g_h_bnd = Matrix::from_vec(nb, f, g_h_bnd_padded.data[..nb * f].to_vec());
+        let n_bias = g_bias.len();
         Ok((
             g_h_local,
             g_h_bnd,
-            LayerGrads { w_self: g_w_self, w_neigh: g_w_neigh, bias: g_bias },
+            LayerParams::from_named(vec![
+                ("w_self", g_w_self),
+                ("w_neigh", g_w_neigh),
+                ("bias", Matrix::from_vec(1, n_bias, g_bias)),
+            ]),
         ))
     }
 

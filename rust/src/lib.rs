@@ -30,6 +30,7 @@ pub mod engine;
 pub mod experiments;
 pub mod graph;
 pub mod metrics;
+pub mod model;
 pub mod optim;
 pub mod partition;
 pub mod runtime;

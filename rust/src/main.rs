@@ -54,11 +54,14 @@ fn print_help() {
          \x20 varco datasets\n\
          \n\
          TRAIN KEYS (file and CLI share names):\n\
-         \x20 dataset nodes q partitioner comm compressor engine artifact_tag\n\
-         \x20 artifacts_dir epochs hidden layers optimizer lr seed eval_every\n\
-         \x20 drop_prob stale_prob\n\
+         \x20 dataset nodes q partitioner comm compressor model engine\n\
+         \x20 artifact_tag artifacts_dir epochs hidden layers optimizer lr\n\
+         \x20 seed eval_every drop_prob stale_prob\n\
          \n\
-         comm spec: full | none | fixed:R | linear:A | exp | step:E:F"
+         comm spec:  full | none | fixed:R | linear:A | exp | step:E:F\n\
+         \x20           | budget:BYTES[:CMAX]\n\
+         model:      sage | gcn | gin   (GNN registry; native engine runs\n\
+         \x20           all of them, pjrt artifacts are sage-only)"
     );
 }
 
@@ -123,14 +126,13 @@ fn cmd_train(args: &[String]) -> Result<()> {
         eprintln!("[varco] wrote {path}");
     }
     if let Some(path) = save_ckpt {
-        let dims = varco::engine::ModelDims {
-            f_in: trainer.weights.layers[0].w_self.rows,
-            hidden: cfg.hidden,
-            classes: trainer.weights.layers.last().unwrap().bias.len(),
-            layers: cfg.layers,
-        };
-        varco::coordinator::Checkpoint::from_weights(&dims, &trainer.weights, cfg.epochs, cfg.seed)
-            .save(Path::new(&path))?;
+        varco::coordinator::Checkpoint::from_weights(
+            trainer.spec(),
+            &trainer.weights,
+            cfg.epochs,
+            cfg.seed,
+        )
+        .save(Path::new(&path))?;
         eprintln!("[varco] wrote checkpoint {path}");
     }
     Ok(())
@@ -176,11 +178,11 @@ fn cmd_eval(args: &[String]) -> Result<()> {
         ds.classes
     );
     let weights = ck.to_weights()?;
-    let ev = varco::coordinator::FullGraphEval::new(&ds);
-    let r = ev.evaluate(&ck.dims, &weights)?;
+    let ev = varco::coordinator::FullGraphEval::new(&ds, ck.spec()?);
+    let r = ev.evaluate(&weights)?;
     println!(
-        "checkpoint {} (epoch {}): loss={:.4} train={:.4} val={:.4} test={:.4}",
-        ckpt_path, ck.epoch, r.loss, r.train_acc, r.val_acc, r.test_acc
+        "checkpoint {} (model {}, epoch {}): loss={:.4} train={:.4} val={:.4} test={:.4}",
+        ckpt_path, ck.model, ck.epoch, r.loss, r.train_acc, r.val_acc, r.test_acc
     );
     Ok(())
 }

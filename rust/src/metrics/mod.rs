@@ -31,6 +31,9 @@ pub struct RunReport {
     pub q: usize,
     pub seed: u64,
     pub engine: String,
+    /// registry name of the architecture ("" in hand-built reports,
+    /// "sage" in reports written before the model registry)
+    pub model: String,
     pub records: Vec<EpochRecord>,
 }
 
@@ -92,6 +95,7 @@ impl RunReport {
             ("q", Json::num(self.q as f64)),
             ("seed", Json::num(self.seed as f64)),
             ("engine", Json::str(self.engine.clone())),
+            ("model", Json::str(self.model.clone())),
             (
                 "records",
                 Json::Arr(
@@ -127,6 +131,12 @@ impl RunReport {
             q: j.require("q")?.as_usize().unwrap_or(0),
             seed: j.require("seed")?.as_f64().unwrap_or(0.0) as u64,
             engine: str_of("engine")?,
+            // reports written before the model registry are sage runs
+            model: j
+                .get("model")
+                .and_then(|v| v.as_str())
+                .unwrap_or("sage")
+                .to_string(),
             records: Vec::new(),
         };
         for r in j.require("records")?.as_arr().unwrap_or(&[]) {

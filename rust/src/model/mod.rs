@@ -1,0 +1,565 @@
+//! Architecture-agnostic model descriptions and the GNN model registry.
+//!
+//! The engine API used to hardcode one architecture (SAGE-mean with a
+//! `{w_self, w_neigh, bias}` triple per layer).  This module replaces that
+//! with three orthogonal pieces:
+//!
+//!  * [`ModelSpec`] / [`LayerSpec`] — a per-layer contract that separates
+//!    *aggregation* ([`Aggregation`]: mean, GCN symmetric-normalized, GIN
+//!    sum), *update* ([`Update`]: linear-combine vs MLP), and *activation*
+//!    ([`Activation`]: relu | elu | none, per layer);
+//!  * [`Weights`] — a typed parameter tree of named tensors per layer,
+//!    with `flatten`/`set_from_flat`/`add_assign`/`scale`/`norm` derived
+//!    generically from the tree shape;
+//!  * the registry ([`build_spec`], keyed by config `model=sage|gcn|gin`)
+//!    that maps a model name + [`ModelDims`] to a concrete spec.
+//!
+//! The `sage` entry reproduces the historical layout bitwise: the same
+//! glorot draw order, the same `[w_self, w_neigh, bias]` flat layout per
+//! layer (so existing checkpoints load unchanged), and the same forward
+//! op sequence in the engines.
+
+use crate::tensor::Matrix;
+use crate::util::Rng;
+use crate::Result;
+
+/// Model dimensions (mirrors python/compile/shapes.py).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelDims {
+    pub f_in: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub layers: usize,
+}
+
+impl ModelDims {
+    /// Per-layer (f_in, f_out) pairs.  A zero-layer model has no layers
+    /// (the config layer rejects `layers < 1` up front; this stays total
+    /// so a bad value cannot underflow into a giant allocation).
+    pub fn layer_dims(&self) -> Vec<(usize, usize)> {
+        if self.layers == 0 {
+            return Vec::new();
+        }
+        let mut dims = vec![self.f_in];
+        dims.extend(std::iter::repeat(self.hidden).take(self.layers - 1));
+        dims.push(self.classes);
+        dims.windows(2).map(|w| (w[0], w[1])).collect()
+    }
+
+    /// Parameter count of the historical sage layout (2 weight matrices +
+    /// bias per layer) — the layout the AOT artifact manifests describe.
+    pub fn param_count(&self) -> usize {
+        self.layer_dims().iter().map(|(fi, fo)| 2 * fi * fo + fo).sum()
+    }
+}
+
+/// How a layer combines neighbor features.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Aggregation {
+    /// mean over neighbors (SAGE-mean; rows of S sum to 1)
+    Mean,
+    /// GCN symmetric normalization with self loops:
+    /// agg = D̂^{-1/2} (A + I) D̂^{-1/2} h, D̂ = D + I
+    GcnSym,
+    /// plain neighbor sum (GIN; the (1+eps) self term lives in the update)
+    GinSum,
+}
+
+/// How a layer turns (h, agg) into its pre-activation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Update {
+    /// pre = h W_self + agg W_neigh + b   (params: w_self, w_neigh, bias)
+    SageLinear,
+    /// pre = agg W + b                    (params: w, bias)
+    GcnLinear,
+    /// pre = relu(((1+eps) h + agg) W1 + b1) W2 + b2
+    /// (params: eps, w1, b1, w2, b2 — the GIN two-layer MLP)
+    GinMlp,
+}
+
+impl Update {
+    /// Number of parameter tensors in this update's layout (allocation-free
+    /// sanity checks on the engine hot path).
+    pub fn n_params(&self) -> usize {
+        match self {
+            Update::SageLinear => 3,
+            Update::GcnLinear => 2,
+            Update::GinMlp => 5,
+        }
+    }
+}
+
+/// Per-layer output nonlinearity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    Relu,
+    Elu,
+    None,
+}
+
+impl Activation {
+    /// Apply elementwise in place.
+    pub fn apply(&self, m: &mut Matrix) {
+        match self {
+            Activation::Relu => m.relu(),
+            Activation::Elu => {
+                for x in m.data.iter_mut() {
+                    if *x < 0.0 {
+                        *x = x.exp() - 1.0;
+                    }
+                }
+            }
+            Activation::None => {}
+        }
+    }
+
+    /// g <- g ⊙ act'(pre), given the cached pre-activation.
+    pub fn grad_mask(&self, pre: &Matrix, g: &mut Matrix) {
+        debug_assert_eq!(pre.shape(), g.shape());
+        match self {
+            Activation::Relu => {
+                for (gv, &p) in g.data.iter_mut().zip(&pre.data) {
+                    if p <= 0.0 {
+                        *gv = 0.0;
+                    }
+                }
+            }
+            Activation::Elu => {
+                for (gv, &p) in g.data.iter_mut().zip(&pre.data) {
+                    if p < 0.0 {
+                        *gv *= p.exp();
+                    }
+                }
+            }
+            Activation::None => {}
+        }
+    }
+}
+
+/// How a parameter tensor is initialized.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParamInit {
+    /// glorot-uniform with limit sqrt(6 / (rows + cols))
+    Glorot,
+    Zeros,
+}
+
+/// Shape + init of one named parameter tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParamShape {
+    pub name: &'static str,
+    pub rows: usize,
+    pub cols: usize,
+    pub init: ParamInit,
+}
+
+/// One layer of a model: dimensions plus the three contract choices.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerSpec {
+    pub f_in: usize,
+    pub f_out: usize,
+    pub agg: Aggregation,
+    pub update: Update,
+    pub act: Activation,
+}
+
+impl LayerSpec {
+    /// Ordered parameter tensors of this layer.  The order IS the flat
+    /// layout (checkpoints, optimizer vectors) and the glorot draw order.
+    pub fn param_shapes(&self) -> Vec<ParamShape> {
+        let (fi, fo) = (self.f_in, self.f_out);
+        match self.update {
+            Update::SageLinear => vec![
+                ParamShape { name: "w_self", rows: fi, cols: fo, init: ParamInit::Glorot },
+                ParamShape { name: "w_neigh", rows: fi, cols: fo, init: ParamInit::Glorot },
+                ParamShape { name: "bias", rows: 1, cols: fo, init: ParamInit::Zeros },
+            ],
+            Update::GcnLinear => vec![
+                ParamShape { name: "w", rows: fi, cols: fo, init: ParamInit::Glorot },
+                ParamShape { name: "bias", rows: 1, cols: fo, init: ParamInit::Zeros },
+            ],
+            Update::GinMlp => vec![
+                ParamShape { name: "eps", rows: 1, cols: 1, init: ParamInit::Zeros },
+                ParamShape { name: "w1", rows: fi, cols: fo, init: ParamInit::Glorot },
+                ParamShape { name: "b1", rows: 1, cols: fo, init: ParamInit::Zeros },
+                ParamShape { name: "w2", rows: fo, cols: fo, init: ParamInit::Glorot },
+                ParamShape { name: "b2", rows: 1, cols: fo, init: ParamInit::Zeros },
+            ],
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.param_shapes().iter().map(|s| s.rows * s.cols).sum()
+    }
+}
+
+/// A full model description: name (registry key), originating dims, and
+/// the per-layer contract.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub dims: ModelDims,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl ModelSpec {
+    /// Per-layer (f_in, f_out) pairs (the trainer's exchange widths).
+    pub fn layer_dims(&self) -> Vec<(usize, usize)> {
+        self.layers.iter().map(|l| (l.f_in, l.f_out)).collect()
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.param_count()).sum()
+    }
+}
+
+fn spec_with(name: &str, dims: &ModelDims, agg: Aggregation, update: Update) -> ModelSpec {
+    let ld = dims.layer_dims();
+    let n = ld.len();
+    let layers = ld
+        .iter()
+        .enumerate()
+        .map(|(l, &(fi, fo))| LayerSpec {
+            f_in: fi,
+            f_out: fo,
+            agg,
+            update,
+            act: if l + 1 < n { Activation::Relu } else { Activation::None },
+        })
+        .collect();
+    ModelSpec { name: name.into(), dims: *dims, layers }
+}
+
+/// Registered model names, in registry order.
+pub const MODELS: &[&str] = &["sage", "gcn", "gin"];
+
+/// The model registry: map a config `model=` name to a concrete spec.
+pub fn build_spec(name: &str, dims: &ModelDims) -> Result<ModelSpec> {
+    let (agg, update) = match name {
+        "sage" => (Aggregation::Mean, Update::SageLinear),
+        "gcn" => (Aggregation::GcnSym, Update::GcnLinear),
+        "gin" => (Aggregation::GinSum, Update::GinMlp),
+        other => anyhow::bail!("unknown model {other:?}; known: sage, gcn, gin"),
+    };
+    Ok(spec_with(name, dims, agg, update))
+}
+
+/// Plain `ModelDims` mean "the historical sage model" wherever a spec is
+/// expected — so every pre-registry call site keeps compiling and keeps
+/// its exact behavior.
+impl From<ModelDims> for ModelSpec {
+    fn from(dims: ModelDims) -> ModelSpec {
+        spec_with("sage", &dims, Aggregation::Mean, Update::SageLinear)
+    }
+}
+
+impl From<&ModelDims> for ModelSpec {
+    fn from(dims: &ModelDims) -> ModelSpec {
+        ModelSpec::from(*dims)
+    }
+}
+
+impl From<&ModelSpec> for ModelSpec {
+    fn from(spec: &ModelSpec) -> ModelSpec {
+        spec.clone()
+    }
+}
+
+/// One named parameter tensor (biases and scalars are 1-row matrices).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamTensor {
+    pub name: &'static str,
+    pub value: Matrix,
+}
+
+/// One layer's parameters — also the per-layer gradient container.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerParams {
+    pub params: Vec<ParamTensor>,
+}
+
+impl LayerParams {
+    /// Build from (name, tensor) pairs in layout order.
+    pub fn from_named(pairs: Vec<(&'static str, Matrix)>) -> LayerParams {
+        LayerParams {
+            params: pairs.into_iter().map(|(name, value)| ParamTensor { name, value }).collect(),
+        }
+    }
+
+    /// Look a tensor up by name (cold paths; hot paths index by layout).
+    pub fn get(&self, name: &str) -> &Matrix {
+        &self
+            .params
+            .iter()
+            .find(|p| p.name == name)
+            .unwrap_or_else(|| panic!("no parameter named {name:?}"))
+            .value
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|p| p.value.data.len()).sum()
+    }
+
+    /// self += other (same tree shape).
+    pub fn add_assign(&mut self, other: &LayerParams) {
+        assert_eq!(self.params.len(), other.params.len(), "parameter tree mismatch");
+        for (a, b) in self.params.iter_mut().zip(&other.params) {
+            a.value.add_assign(&b.value);
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for p in self.params.iter_mut() {
+            p.value.scale(s);
+        }
+    }
+
+    pub fn zeros_like(&self) -> LayerParams {
+        LayerParams {
+            params: self
+                .params
+                .iter()
+                .map(|p| ParamTensor {
+                    name: p.name,
+                    value: Matrix::zeros(p.value.rows, p.value.cols),
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Full model parameters as a typed tree; also the gradient container.
+#[derive(Clone, Debug)]
+pub struct Weights {
+    pub layers: Vec<LayerParams>,
+    /// bumped on every update; lets engines cache device-resident copies
+    pub version: u64,
+}
+
+// version is a cache stamp, not part of value identity
+impl PartialEq for Weights {
+    fn eq(&self, other: &Self) -> bool {
+        self.layers == other.layers
+    }
+}
+
+impl Weights {
+    /// Glorot-uniform init over the spec's parameter tree.  Draw order is
+    /// tree order, so the sage entry consumes the RNG exactly like the
+    /// historical `{w_self, w_neigh, bias}` init (bitwise-equal weights).
+    pub fn glorot(spec: impl Into<ModelSpec>, seed: u64) -> Weights {
+        let spec = spec.into();
+        let mut rng = Rng::new(seed);
+        let mut layers = Vec::with_capacity(spec.layers.len());
+        for ls in &spec.layers {
+            let params = ls
+                .param_shapes()
+                .into_iter()
+                .map(|s| ParamTensor {
+                    name: s.name,
+                    value: match s.init {
+                        ParamInit::Glorot => {
+                            let lim = (6.0 / (s.rows + s.cols) as f32).sqrt();
+                            Matrix::from_fn(s.rows, s.cols, |_, _| rng.next_range(-lim, lim))
+                        }
+                        ParamInit::Zeros => Matrix::zeros(s.rows, s.cols),
+                    },
+                })
+                .collect();
+            layers.push(LayerParams { params });
+        }
+        Weights { layers, version: 0 }
+    }
+
+    /// All-zero container with the spec's tree shape.
+    pub fn zeros(spec: impl Into<ModelSpec>) -> Weights {
+        let spec = spec.into();
+        let layers = spec
+            .layers
+            .iter()
+            .map(|ls| LayerParams {
+                params: ls
+                    .param_shapes()
+                    .into_iter()
+                    .map(|s| ParamTensor { name: s.name, value: Matrix::zeros(s.rows, s.cols) })
+                    .collect(),
+            })
+            .collect();
+        Weights { layers, version: 0 }
+    }
+
+    /// All-zero gradient container with the same tree shape.
+    pub fn zeros_like(&self) -> Weights {
+        Weights { layers: self.layers.iter().map(|l| l.zeros_like()).collect(), version: 0 }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.param_count()).sum()
+    }
+
+    /// Flatten in tree order (for sage: [w_self, w_neigh, bias] per layer,
+    /// the manifest layout).
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.param_count());
+        for l in &self.layers {
+            for p in &l.params {
+                out.extend_from_slice(&p.value.data);
+            }
+        }
+        out
+    }
+
+    /// Inverse of flatten.
+    pub fn set_from_flat(&mut self, flat: &[f32]) {
+        assert_eq!(flat.len(), self.param_count());
+        self.version += 1;
+        let mut off = 0;
+        for l in self.layers.iter_mut() {
+            for p in l.params.iter_mut() {
+                let n = p.value.data.len();
+                p.value.data.copy_from_slice(&flat[off..off + n]);
+                off += n;
+            }
+        }
+    }
+
+    /// self += other (gradient accumulation across workers).
+    pub fn add_assign(&mut self, other: &Weights) {
+        for (a, b) in self.layers.iter_mut().zip(&other.layers) {
+            a.add_assign(b);
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for l in self.layers.iter_mut() {
+            l.scale(s);
+        }
+    }
+
+    /// L2 norm over all parameters (gradient-norm diagnostics, Prop. 1/2).
+    pub fn norm(&self) -> f32 {
+        self.layers
+            .iter()
+            .flat_map(|l| &l.params)
+            .flat_map(|p| &p.value.data)
+            .map(|x| x * x)
+            .sum::<f32>()
+            .sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DIMS: ModelDims = ModelDims { f_in: 8, hidden: 12, classes: 5, layers: 3 };
+
+    #[test]
+    fn layer_dims_handles_zero_layers_without_underflow() {
+        let d = ModelDims { f_in: 8, hidden: 12, classes: 5, layers: 0 };
+        assert!(d.layer_dims().is_empty());
+        assert_eq!(d.param_count(), 0);
+        let d1 = ModelDims { layers: 1, ..d };
+        assert_eq!(d1.layer_dims(), vec![(8, 5)]);
+    }
+
+    #[test]
+    fn registry_builds_all_models_and_rejects_unknown() {
+        for &name in MODELS {
+            let spec = build_spec(name, &DIMS).unwrap();
+            assert_eq!(spec.name, name);
+            assert_eq!(spec.n_layers(), 3);
+            assert_eq!(spec.layer_dims(), vec![(8, 12), (12, 12), (12, 5)]);
+            assert_eq!(spec.layers[0].act, Activation::Relu);
+            assert_eq!(spec.layers[2].act, Activation::None);
+        }
+        assert!(build_spec("gat", &DIMS).is_err());
+    }
+
+    #[test]
+    fn sage_spec_matches_manifest_param_count() {
+        let spec = build_spec("sage", &DIMS).unwrap();
+        assert_eq!(spec.param_count(), DIMS.param_count());
+        // 2*(8*12)+12 + 2*(12*12)+12 + 2*(12*5)+5
+        assert_eq!(DIMS.param_count(), 204 + 300 + 125);
+    }
+
+    #[test]
+    fn per_arch_param_layouts() {
+        let sage = build_spec("sage", &DIMS).unwrap();
+        let names = |s: &ModelSpec| -> Vec<&'static str> {
+            s.layers[0].param_shapes().iter().map(|p| p.name).collect()
+        };
+        assert_eq!(names(&sage), vec!["w_self", "w_neigh", "bias"]);
+        let gcn = build_spec("gcn", &DIMS).unwrap();
+        assert_eq!(names(&gcn), vec!["w", "bias"]);
+        assert_eq!(gcn.param_count(), (8 * 12 + 12) + (12 * 12 + 12) + (12 * 5 + 5));
+        let gin = build_spec("gin", &DIMS).unwrap();
+        assert_eq!(names(&gin), vec!["eps", "w1", "b1", "w2", "b2"]);
+        let gin_l0 = 1 + 8 * 12 + 12 + 12 * 12 + 12;
+        let gin_l1 = 1 + 12 * 12 + 12 + 12 * 12 + 12;
+        let gin_l2 = 1 + 12 * 5 + 5 + 5 * 5 + 5;
+        assert_eq!(gin.param_count(), gin_l0 + gin_l1 + gin_l2);
+    }
+
+    #[test]
+    fn glorot_is_deterministic_and_dims_convert_to_sage() {
+        let w1 = Weights::glorot(&DIMS, 7);
+        let w2 = Weights::glorot(DIMS, 7);
+        assert_eq!(w1, w2);
+        assert_eq!(w1.param_count(), DIMS.param_count());
+        assert_eq!(w1.layers[0].get("w_self").shape(), (8, 12));
+        assert!(w1.layers.iter().all(|l| l.get("bias").data.iter().all(|&b| b == 0.0)));
+    }
+
+    #[test]
+    fn flatten_roundtrip_every_arch() {
+        for &name in MODELS {
+            let spec = build_spec(name, &DIMS).unwrap();
+            let w = Weights::glorot(&spec, 3);
+            let flat = w.flatten();
+            assert_eq!(flat.len(), spec.param_count(), "{name}");
+            let mut w2 = Weights::zeros(&spec);
+            w2.set_from_flat(&flat);
+            assert_eq!(w, w2, "{name}");
+        }
+    }
+
+    #[test]
+    fn add_assign_scale_and_norm() {
+        let spec = build_spec("gin", &DIMS).unwrap();
+        let w = Weights::glorot(&spec, 1);
+        let mut acc = w.zeros_like();
+        assert_eq!(acc.norm(), 0.0);
+        acc.add_assign(&w);
+        acc.add_assign(&w);
+        acc.scale(0.5);
+        for (a, b) in acc.flatten().iter().zip(w.flatten()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        assert!((acc.norm() - w.norm()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn activations_apply_and_mask() {
+        let pre = Matrix::from_vec(1, 3, vec![-1.0, 0.0, 2.0]);
+        let mut r = pre.clone();
+        Activation::Relu.apply(&mut r);
+        assert_eq!(r.data, vec![0.0, 0.0, 2.0]);
+        let mut e = pre.clone();
+        Activation::Elu.apply(&mut e);
+        assert!((e.data[0] - ((-1.0f32).exp() - 1.0)).abs() < 1e-6);
+        assert_eq!(e.data[2], 2.0);
+        let mut g = Matrix::from_vec(1, 3, vec![1.0, 1.0, 1.0]);
+        Activation::Relu.grad_mask(&pre, &mut g);
+        assert_eq!(g.data, vec![0.0, 0.0, 1.0]);
+        let mut g2 = Matrix::from_vec(1, 3, vec![1.0, 1.0, 1.0]);
+        Activation::Elu.grad_mask(&pre, &mut g2);
+        assert!((g2.data[0] - (-1.0f32).exp()).abs() < 1e-6);
+        assert_eq!(g2.data[2], 1.0);
+    }
+}

@@ -3,7 +3,10 @@
 //! The coordinator averages per-worker gradients (FedAverage-style weight
 //! sync in the paper reduces to gradient averaging for equal-size parts
 //! with one local step per round — see coordinator::trainer), then applies
-//! one of these updates identically on every worker.
+//! one of these updates identically on every worker.  The vectors come
+//! from `model::Weights::flatten`, so optimizers are architecture-blind:
+//! any registered model's parameter tree (sage, gcn, gin) flattens into
+//! the same interface.
 
 use crate::Result;
 

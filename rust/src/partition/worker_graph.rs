@@ -146,6 +146,13 @@ pub struct WorkerGraph {
     pub s_lb: SparseBlock,
     /// local->local aggregation normalized by LOCAL degree (NoComm mode)
     pub s_ll_localnorm: SparseBlock,
+    /// TOTAL (whole-graph) degree of each local node — raw material for
+    /// architecture-specific renormalizations (GCN symmetric, GIN sum)
+    pub deg: Vec<u32>,
+    /// TOTAL degree of each boundary node (by boundary slot)
+    pub deg_bnd: Vec<u32>,
+    /// same-part-only degree of each local node (NoComm renormalization)
+    pub deg_local: Vec<u32>,
     /// what to send to every other worker (index = receiving part id)
     pub send_plans: Vec<SendPlan>,
 }
@@ -208,6 +215,8 @@ impl WorkerGraph {
                 values: vec![],
             };
             let mut ll_local = ll.clone();
+            let mut deg = Vec::with_capacity(nl);
+            let mut deg_local_v = Vec::with_capacity(nl);
             for &u in nodes.iter() {
                 let nbrs = g.neighbors(u as usize);
                 let deg_total = nbrs.len().max(1) as f32;
@@ -217,6 +226,8 @@ impl WorkerGraph {
                     .filter(|&v| assignment[v as usize] as usize == part)
                     .collect();
                 let deg_local = local_nbrs.len().max(1) as f32;
+                deg.push(nbrs.len() as u32);
+                deg_local_v.push(local_nbrs.len() as u32);
                 for &v in nbrs {
                     if assignment[v as usize] as usize == part {
                         ll.indices.push(local_of[v as usize]);
@@ -235,6 +246,8 @@ impl WorkerGraph {
                 ll_local.indptr.push(ll_local.indices.len() as u64);
             }
 
+            let deg_bnd: Vec<u32> =
+                boundary.iter().map(|&v| g.degree(v as usize) as u32).collect();
             workers.push(WorkerGraph {
                 part,
                 nodes: nodes.clone(),
@@ -243,6 +256,9 @@ impl WorkerGraph {
                 s_ll: ll,
                 s_lb: lb,
                 s_ll_localnorm: ll_local,
+                deg,
+                deg_bnd,
+                deg_local: deg_local_v,
                 send_plans: Vec::new(),
             });
         }
@@ -386,6 +402,23 @@ mod tests {
         let want_t = w.s_lb.to_dense().t_matmul(&y);
         for (a, b) in out_t.data.iter().zip(&want_t.data) {
             assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn degree_vectors_match_graph() {
+        let (g, workers) = setup(64, 4, 6);
+        for w in &workers {
+            assert_eq!(w.deg.len(), w.n_local());
+            assert_eq!(w.deg_bnd.len(), w.n_boundary());
+            assert_eq!(w.deg_local.len(), w.n_local());
+            for (li, &gid) in w.nodes.iter().enumerate() {
+                assert_eq!(w.deg[li] as usize, g.degree(gid as usize));
+                assert!(w.deg_local[li] <= w.deg[li]);
+            }
+            for (s, &gid) in w.boundary.iter().enumerate() {
+                assert_eq!(w.deg_bnd[s] as usize, g.degree(gid as usize));
+            }
         }
     }
 

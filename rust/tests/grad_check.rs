@@ -1,0 +1,171 @@
+//! Finite-difference gradient validation for EVERY architecture in the
+//! model registry (sage, gcn, gin): the native engine's `backward_layer`
+//! must match central-difference numeric gradients of its own
+//! `forward_layer`, for every named parameter tensor of every layer and
+//! for both input cotangents (local and boundary rows), on a small
+//! partitioned graph with a non-empty boundary.
+//!
+//! Plus the acceptance smoke: gcn and gin reduce the training loss under
+//! `comm=fixed:4` on the quickstart graph.
+
+use varco::config::{build_trainer, TrainConfig};
+use varco::engine::native::NativeWorkerEngine;
+use varco::engine::{Weights, WorkerEngine};
+use varco::graph::generate::sbm;
+use varco::model::{build_spec, ModelDims, ModelSpec, MODELS};
+use varco::partition::random::RandomPartitioner;
+use varco::partition::{Partitioner, WorkerGraph};
+use varco::tensor::Matrix;
+use varco::util::Rng;
+
+const DIMS: ModelDims = ModelDims { f_in: 5, hidden: 6, classes: 3, layers: 2 };
+const EPS: f32 = 5e-3;
+
+fn randm(r: usize, c: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::from_fn(r, c, |_, _| rng.next_normal())
+}
+
+fn engine_for(spec: &ModelSpec, seed: u64) -> NativeWorkerEngine {
+    let (g, _) = sbm(40, 2, 0.3, 0.08, seed);
+    let p = RandomPartitioner { seed }.partition(&g, 2).unwrap();
+    let wgs = WorkerGraph::build_all(&g, &p).unwrap();
+    let wg = wgs[0].clone();
+    assert!(wg.n_boundary() > 0, "test graph must have a boundary");
+    NativeWorkerEngine::new(wg, spec.clone())
+}
+
+/// f(θ, h, hb) = <forward_layer(layer), g_out>
+fn scalar(
+    e: &mut NativeWorkerEngine,
+    layer: usize,
+    w: &Weights,
+    h: &Matrix,
+    hb: &Matrix,
+    g_out: &Matrix,
+) -> f32 {
+    let out = e.forward_layer(layer, w, h, hb, false).unwrap();
+    let s = out.data.iter().zip(&g_out.data).map(|(a, b)| a * b).sum();
+    e.recycle(out);
+    s
+}
+
+/// First, middle, and last flat index of an n-element tensor.
+fn probe_indices(n: usize) -> Vec<usize> {
+    assert!(n > 0);
+    let mut idx = vec![0, n / 2, n - 1];
+    idx.dedup();
+    idx
+}
+
+fn check(name: &str, ctx: &str, numeric: f32, analytic: f32) {
+    assert!(
+        (numeric - analytic).abs() < 0.05 * (1.0 + analytic.abs()),
+        "{name} {ctx}: numeric {numeric} vs analytic {analytic}"
+    );
+}
+
+#[test]
+fn backward_matches_finite_differences_for_every_model() {
+    for &name in MODELS {
+        let spec = build_spec(name, &DIMS).unwrap();
+        let mut e = engine_for(&spec, 11);
+        let w = Weights::glorot(&spec, 7);
+        for layer in 0..spec.n_layers() {
+            let (fi, fo) = (spec.layers[layer].f_in, spec.layers[layer].f_out);
+            let h = randm(e.n_local(), fi, 100 + layer as u64);
+            let hb = randm(e.n_boundary(), fi, 200 + layer as u64);
+            let g_out = randm(e.n_local(), fo, 300 + layer as u64);
+            let _ = e.forward_layer(layer, &w, &h, &hb, false).unwrap();
+            let (g_h, g_hb, grads) = e.backward_layer(layer, &w, &g_out, false).unwrap();
+
+            // every named parameter tensor of this layer
+            for (p, pt) in grads.params.iter().enumerate() {
+                for &i in &probe_indices(pt.value.data.len()) {
+                    let mut wp = w.clone();
+                    wp.layers[layer].params[p].value.data[i] += EPS;
+                    let mut wm = w.clone();
+                    wm.layers[layer].params[p].value.data[i] -= EPS;
+                    let numeric = (scalar(&mut e, layer, &wp, &h, &hb, &g_out)
+                        - scalar(&mut e, layer, &wm, &h, &hb, &g_out))
+                        / (2.0 * EPS);
+                    let ctx = format!("layer {layer} {}[{i}]", pt.name);
+                    check(name, &ctx, numeric, pt.value.data[i]);
+                }
+            }
+            // input cotangents: local rows
+            for &i in &probe_indices(h.data.len()) {
+                let mut hp = h.clone();
+                hp.data[i] += EPS;
+                let mut hm = h.clone();
+                hm.data[i] -= EPS;
+                let numeric = (scalar(&mut e, layer, &w, &hp, &hb, &g_out)
+                    - scalar(&mut e, layer, &w, &hm, &hb, &g_out))
+                    / (2.0 * EPS);
+                check(name, &format!("layer {layer} g_h_local[{i}]"), numeric, g_h.data[i]);
+            }
+            // input cotangents: boundary rows
+            for &i in &probe_indices(hb.data.len()) {
+                let mut bp = hb.clone();
+                bp.data[i] += EPS;
+                let mut bm = hb.clone();
+                bm.data[i] -= EPS;
+                let numeric = (scalar(&mut e, layer, &w, &h, &bp, &g_out)
+                    - scalar(&mut e, layer, &w, &h, &bm, &g_out))
+                    / (2.0 * EPS);
+                check(name, &format!("layer {layer} g_h_bnd[{i}]"), numeric, g_hb.data[i]);
+            }
+        }
+    }
+}
+
+/// The engine and `FullGraphEval` implement each spec's forward
+/// independently (arena'd worker blocks vs plain full-graph ops); on a
+/// single-worker partition they must produce the same logits for every
+/// model — so a math fix applied to only one of the two implementations
+/// fails here instead of silently skewing reported accuracies.
+#[test]
+fn centralized_engine_forward_matches_full_graph_eval() {
+    let ds = varco::graph::Dataset::load("karate-like", 0, 5).unwrap();
+    let dims = ModelDims { f_in: ds.f_in(), hidden: 7, classes: ds.classes, layers: 3 };
+    let part = varco::partition::Partition::new(1, vec![0; ds.n()]).unwrap();
+    let wgs = WorkerGraph::build_all(&ds.graph, &part).unwrap();
+    for &name in MODELS {
+        let spec = build_spec(name, &dims).unwrap();
+        let w = Weights::glorot(&spec, 9);
+        let mut e = NativeWorkerEngine::new(wgs[0].clone(), spec.clone());
+        let eval = varco::coordinator::FullGraphEval::new(&ds, &spec);
+        let want = eval.logits(&w);
+        let mut h = ds.features.clone();
+        for l in 0..spec.n_layers() {
+            let hb = Matrix::zeros(0, spec.layers[l].f_in);
+            h = e.forward_layer(l, &w, &h, &hb, false).unwrap();
+        }
+        assert_eq!(h.shape(), want.shape(), "{name}");
+        for (i, (a, b)) in h.data.iter().zip(&want.data).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-4 * (1.0 + a.abs()),
+                "{name} logits[{i}]: engine {a} vs eval {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn gcn_and_gin_loss_decrease_smoke_under_fixed4() {
+    for model in ["gcn", "gin"] {
+        let mut cfg = TrainConfig::default_quickstart();
+        cfg.model = model.into();
+        cfg.comm = "fixed:4".into();
+        cfg.epochs = 8;
+        let mut t = build_trainer(&cfg).unwrap();
+        let report = t.run().unwrap();
+        assert_eq!(report.model, model);
+        let first = report.records.first().unwrap().loss;
+        let last = report.records.last().unwrap().loss;
+        assert!(
+            last.is_finite() && last < first,
+            "{model}: loss did not decrease ({first} -> {last})"
+        );
+    }
+}

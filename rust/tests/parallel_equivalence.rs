@@ -160,16 +160,19 @@ fn parallel_full_comm_still_learns() {
 /// order at the epoch barrier, so the controller must see bitwise
 /// identical observations — and therefore emit identical plans — in both
 /// run modes.
-fn build_budget(mode: RunMode, budget: usize, q: usize, epochs: usize) -> Trainer {
+fn build_budget(model: &str, mode: RunMode, budget: usize, q: usize, epochs: usize) -> Trainer {
     let ds = Dataset::load("karate-like", 0, 7).unwrap();
     let dims = ModelDims { f_in: ds.f_in(), hidden: 8, classes: ds.classes, layers: 3 };
+    let spec = varco::model::build_spec(model, &dims).unwrap();
     let part = varco::partition::random::RandomPartitioner { seed: 3 }
         .partition(&ds.graph, q)
         .unwrap();
     let wgs = WorkerGraph::build_all(&ds.graph, &part).unwrap();
     let engines: Vec<Box<dyn WorkerEngine>> = wgs
         .iter()
-        .map(|w| Box::new(NativeWorkerEngine::new(w.clone(), dims)) as Box<dyn WorkerEngine>)
+        .map(|w| {
+            Box::new(NativeWorkerEngine::new(w.clone(), spec.clone())) as Box<dyn WorkerEngine>
+        })
         .collect();
     let opts = TrainerOptions {
         comm_mode: CommMode::Compressed(Scheduler::Fixed { rate: 128.0 }),
@@ -183,29 +186,33 @@ fn build_budget(mode: RunMode, budget: usize, q: usize, epochs: usize) -> Traine
         run_mode: mode,
         ..Default::default()
     };
-    Trainer::new(&ds, &part, &wgs, engines, dims, opts).unwrap()
+    Trainer::new(&ds, &part, &wgs, engines, spec, opts).unwrap()
 }
 
-#[test]
-fn budget_controller_parallel_matches_sequential() {
+/// The two run modes must agree bitwise under the closed-loop controller
+/// for ANY registered architecture — the model spec changes the compute,
+/// never the barrier schedule or the feedback merge order.  `sage` pins
+/// the historical behavior; `gcn` pins a non-default model end to end
+/// (weights, per-epoch bytes, planned rates, ledger).
+fn assert_budget_equivalence(model: &str) {
     let (q, epochs, budget) = (4, 8, 120_000usize);
-    let mut ts = build_budget(RunMode::Sequential, budget, q, epochs);
-    let mut tp = build_budget(RunMode::Parallel, budget, q, epochs);
+    let mut ts = build_budget(model, RunMode::Sequential, budget, q, epochs);
+    let mut tp = build_budget(model, RunMode::Parallel, budget, q, epochs);
     let rs = ts.run().unwrap();
     let rp = tp.run().unwrap();
 
     let diff = max_abs_diff(&ts.weights.flatten(), &tp.weights.flatten());
-    assert!(diff <= 1e-6, "budget: weight divergence {diff}");
+    assert!(diff <= 1e-6, "{model} budget: weight divergence {diff}");
     for (a, b) in rs.records.iter().zip(&rp.records) {
         assert!(
             (a.loss - b.loss).abs() <= 1e-6,
-            "budget epoch {}: loss {} vs {}",
+            "{model} budget epoch {}: loss {} vs {}",
             a.epoch,
             a.loss,
             b.loss
         );
-        assert_eq!(a.bytes_cum, b.bytes_cum, "budget epoch {} bytes", a.epoch);
-        assert_eq!(a.rate, b.rate, "budget epoch {} planned rate", a.epoch);
+        assert_eq!(a.bytes_cum, b.bytes_cum, "{model} budget epoch {} bytes", a.epoch);
+        assert_eq!(a.rate, b.rate, "{model} budget epoch {} planned rate", a.epoch);
     }
     assert_eq!(ts.ledger().total_bytes(), tp.ledger().total_bytes());
     assert_eq!(ts.ledger().breakdown_by_kind(), tp.ledger().breakdown_by_kind());
@@ -214,4 +221,14 @@ fn budget_controller_parallel_matches_sequential() {
         tp.ledger().cumulative_bytes_by_epoch()
     );
     assert!(ts.fabric().is_quiescent() && tp.fabric().is_quiescent());
+}
+
+#[test]
+fn budget_controller_parallel_matches_sequential() {
+    assert_budget_equivalence("sage");
+}
+
+#[test]
+fn budget_controller_parallel_matches_sequential_for_gcn() {
+    assert_budget_equivalence("gcn");
 }

@@ -65,7 +65,7 @@ fn engine_parity_layer_by_layer() {
     let Some((_, wgs, dims, arts)) = setup() else { return };
     let wg = wgs[0].clone();
     let mut native = NativeWorkerEngine::new(wg.clone(), dims);
-    let mut pjrt = PjrtWorkerEngine::new(arts, wg).unwrap();
+    let mut pjrt = PjrtWorkerEngine::new(arts, wg, dims).unwrap();
     let weights = Weights::glorot(&dims, 5);
 
     for local_norm in [false, true] {
@@ -82,9 +82,14 @@ fn engine_parity_layer_by_layer() {
             let (gl_p, gb_p, gw_p) = pjrt.backward_layer(l, &weights, &g_out, local_norm).unwrap();
             assert_close(&gl_n, &gl_p, 1e-4, &format!("g_h_local l={l}"));
             assert_close(&gb_n, &gb_p, 1e-4, &format!("g_h_bnd l={l}"));
-            assert_close(&gw_n.w_self, &gw_p.w_self, 1e-4, &format!("g_w_self l={l}"));
-            assert_close(&gw_n.w_neigh, &gw_p.w_neigh, 1e-4, &format!("g_w_neigh l={l}"));
-            for (a, b) in gw_n.bias.iter().zip(&gw_p.bias) {
+            assert_close(gw_n.get("w_self"), gw_p.get("w_self"), 1e-4, &format!("g_w_self l={l}"));
+            assert_close(
+                gw_n.get("w_neigh"),
+                gw_p.get("w_neigh"),
+                1e-4,
+                &format!("g_w_neigh l={l}"),
+            );
+            for (a, b) in gw_n.get("bias").data.iter().zip(&gw_p.get("bias").data) {
                 assert!((a - b).abs() < 1e-4, "g_bias l={l}: {a} vs {b}");
             }
         }
@@ -97,7 +102,7 @@ fn loss_head_parity() {
     let wg = wgs[0].clone();
     let nl = wg.n_local();
     let mut native = NativeWorkerEngine::new(wg.clone(), dims);
-    let mut pjrt = PjrtWorkerEngine::new(arts, wg.clone()) .unwrap();
+    let mut pjrt = PjrtWorkerEngine::new(arts, wg.clone(), dims).unwrap();
     let logits = randm(nl, dims.classes, 7);
     let labels: Vec<u32> = wg.nodes.iter().map(|&g| ds.labels[g as usize]).collect();
     let (m_tr, m_va, m_te) = ds.split.as_f32();
@@ -141,7 +146,7 @@ fn full_training_run_parity() {
     let pjrt_engines: Vec<Box<dyn WorkerEngine>> = wgs
         .iter()
         .map(|w| {
-            Box::new(PjrtWorkerEngine::new(arts.clone(), w.clone()).unwrap())
+            Box::new(PjrtWorkerEngine::new(arts.clone(), w.clone(), dims).unwrap())
                 as Box<dyn WorkerEngine>
         })
         .collect();

@@ -12,12 +12,21 @@ use varco::engine::{ModelDims, WorkerEngine};
 use varco::graph::Dataset;
 use varco::partition::{Partition, Partitioner, WorkerGraph};
 
-fn make_trainer(ds: &Dataset, part: &Partition, comm: CommMode, seed: u64) -> Trainer {
+fn make_trainer_model(
+    ds: &Dataset,
+    part: &Partition,
+    comm: CommMode,
+    seed: u64,
+    model: &str,
+) -> Trainer {
     let dims = ModelDims { f_in: ds.f_in(), hidden: 8, classes: ds.classes, layers: 3 };
+    let spec = varco::model::build_spec(model, &dims).unwrap();
     let wgs = WorkerGraph::build_all(&ds.graph, part).unwrap();
     let engines: Vec<Box<dyn WorkerEngine>> = wgs
         .iter()
-        .map(|w| Box::new(NativeWorkerEngine::new(w.clone(), dims)) as Box<dyn WorkerEngine>)
+        .map(|w| {
+            Box::new(NativeWorkerEngine::new(w.clone(), spec.clone())) as Box<dyn WorkerEngine>
+        })
         .collect();
     let opts = TrainerOptions {
         comm_mode: comm,
@@ -26,7 +35,11 @@ fn make_trainer(ds: &Dataset, part: &Partition, comm: CommMode, seed: u64) -> Tr
         optimizer: Box::new(varco::optim::Sgd::new(0.05, 0.0, 0.0)),
         ..Default::default()
     };
-    Trainer::new(ds, part, &wgs, engines, dims, opts).unwrap()
+    Trainer::new(ds, part, &wgs, engines, spec, opts).unwrap()
+}
+
+fn make_trainer(ds: &Dataset, part: &Partition, comm: CommMode, seed: u64) -> Trainer {
+    make_trainer_model(ds, part, comm, seed, "sage")
 }
 
 fn grads_close(a: &varco::engine::Weights, b: &varco::engine::Weights, tol: f32, ctx: &str) {
@@ -59,6 +72,34 @@ fn fullcomm_equals_centralized_for_any_partition() {
             "q={q}: loss {loss1} vs {lossq}"
         );
         grads_close(&g1, &gq, 2e-3, &format!("q={q}"));
+    }
+}
+
+/// The same anchor for the non-default architectures: the partitioned
+/// GCN/GIN operators (GcnOps/GinOps worker blocks + degree vectors) must
+/// reassemble the exact centralized model under FullComm — one epoch's
+/// loss and gradients match the q=1 run for any partition.  (The q=1
+/// engine itself is pinned against the independent FullGraphEval
+/// implementation in tests/grad_check.rs.)
+#[test]
+fn fullcomm_equals_centralized_for_every_model() {
+    let ds = Dataset::load("karate-like", 0, 11).unwrap();
+    let central = Partition::new(1, vec![0; ds.n()]).unwrap();
+    for model in ["gcn", "gin"] {
+        let mut t1 = make_trainer_model(&ds, &central, CommMode::Full, 42, model);
+        let (loss1, g1) = t1.train_epoch(0).unwrap();
+        for q in [2usize, 4] {
+            let part = varco::partition::random::RandomPartitioner { seed: q as u64 }
+                .partition(&ds.graph, q)
+                .unwrap();
+            let mut tq = make_trainer_model(&ds, &part, CommMode::Full, 42, model);
+            let (lossq, gq) = tq.train_epoch(0).unwrap();
+            assert!(
+                (loss1 - lossq).abs() < 1e-4,
+                "{model} q={q}: loss {loss1} vs {lossq}"
+            );
+            grads_close(&g1, &gq, 2e-3, &format!("{model} q={q}"));
+        }
     }
 }
 
@@ -215,7 +256,7 @@ fn checkpoint_restore_preserves_model_exactly() {
         t.train_epoch(e).unwrap();
     }
     let before = t.evaluate().unwrap();
-    let ck = Checkpoint::from_weights(&t.dims(), &t.weights, 5, 8);
+    let ck = Checkpoint::from_weights(t.spec(), &t.weights, 5, 8);
     let dir = varco::util::testing::TempDir::new().unwrap();
     let path = dir.path().join("m.ckpt");
     ck.save(&path).unwrap();
