@@ -1,0 +1,243 @@
+//! Overlap-pipeline bench: how much communication the interior/boundary
+//! pipeline can hide, in seconds, under each LinkModel preset — written
+//! to `BENCH_overlap.json` at the repo root (CI uploads it as an
+//! artifact).
+//!
+//! Two sections:
+//!
+//!  * **epoch wall**: the same training config run with `overlap=off` and
+//!    `overlap=on` (mean epoch wall_ms each) — the in-process effect,
+//!    where the only savings are barrier-wait seconds.
+//!  * **per-layer analytic**: per layer and direction, the measured
+//!    compute seconds of the phase that overlaps the exchange
+//!    (`forward_interior` / `backward_finish`, max over workers — the
+//!    pipeline is bound by its slowest worker) against the modeled
+//!    bottleneck-link exchange seconds for each interconnect preset;
+//!    `hidden_s = min(compute, comm)` per `comm::overlap_estimate`, the
+//!    seconds the pipeline removes from the critical path.
+
+#[path = "harness.rs"]
+#[allow(dead_code)]
+mod harness;
+
+use std::time::Instant;
+use varco::comm::{overlap_estimate, CommLedger, LinkModel};
+use varco::compress::{Compressor, RandomSubsetCompressor};
+use varco::config::{build_trainer_with_dataset, TrainConfig};
+use varco::engine::{Weights, WorkerEngine};
+use varco::engine::native::NativeWorkerEngine;
+use varco::graph::Dataset;
+use varco::model::{build_spec, ModelDims};
+use varco::partition::{by_name, WorkerGraph};
+use varco::tensor::Matrix;
+use varco::util::{Json, Rng};
+
+const NODES: usize = 2048;
+const Q: usize = 4;
+const HIDDEN: usize = 64;
+const LAYERS: usize = 3;
+const RATE: f32 = 8.0;
+
+/// Median of `iters` samples of `f`'s wall time, in seconds.
+fn time_median(iters: usize, mut f: impl FnMut()) -> f64 {
+    let mut samples: Vec<f64> = (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(f64::total_cmp);
+    samples[samples.len() / 2]
+}
+
+fn epoch_wall_ms(ds: &Dataset, overlap: bool, epochs: usize) -> f64 {
+    let cfg = TrainConfig {
+        dataset: ds.name.clone(),
+        nodes: NODES,
+        q: Q,
+        partitioner: "random".into(),
+        comm: format!("fixed:{RATE}"),
+        engine: "native".into(),
+        epochs,
+        hidden: HIDDEN,
+        layers: LAYERS,
+        eval_every: usize::MAX - 1,
+        overlap,
+        ..Default::default()
+    };
+    let mut trainer = build_trainer_with_dataset(&cfg, ds).unwrap();
+    let report = trainer.run().unwrap();
+    let timed: Vec<f64> = report.records.iter().skip(1).map(|r| r.wall_ms).collect();
+    let timed = if timed.is_empty() {
+        report.records.iter().map(|r| r.wall_ms).collect()
+    } else {
+        timed
+    };
+    timed.iter().sum::<f64>() / timed.len() as f64
+}
+
+/// The exchange ledger of one layer: every worker's compressed boundary
+/// payload to every peer, at this bench's fixed rate.  Forward and
+/// backward payloads share the mask (same element counts, keyed codec),
+/// so one ledger serves both directions.
+fn layer_exchange_ledger(wgs: &[WorkerGraph], fi: usize) -> CommLedger {
+    let mut ledger = CommLedger::new();
+    for wg in wgs {
+        for plan in &wg.send_plans {
+            let n = plan.local_rows.len() * fi;
+            let payload = RandomSubsetCompressor.compress(&vec![0.0f32; n], RATE, 0xBEEF);
+            ledger.record(0, wg.part, plan.to, "activation", payload.wire_bytes());
+        }
+    }
+    ledger
+}
+
+fn main() {
+    std::env::set_var("VARCO_THREADS", "1");
+    let iters: usize = std::env::var("VARCO_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(7);
+    let epochs = std::env::var("VARCO_BENCH_EPOCHS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4usize);
+
+    let ds = Dataset::load("synth-arxiv", NODES, 0).unwrap();
+    let part = by_name("random", 0).unwrap().partition(&ds.graph, Q).unwrap();
+    let wgs = WorkerGraph::build_all(&ds.graph, &part).unwrap();
+    let dims = ModelDims { f_in: ds.f_in(), hidden: HIDDEN, classes: ds.classes, layers: LAYERS };
+    let spec = build_spec("sage", &dims).unwrap();
+    let weights = Weights::glorot(&spec, 1);
+    let layer_dims = spec.layer_dims();
+
+    // ---- epoch wall, barrier vs pipeline ----
+    harness::section("epoch wall time (q=4, comm=fixed:8)");
+    let mut epoch_entries = Vec::new();
+    for overlap in [false, true] {
+        let ms = epoch_wall_ms(&ds, overlap, epochs);
+        println!(
+            "{:<44} {:>10.1} ms/epoch",
+            format!("overlap={}", if overlap { "on" } else { "off" }),
+            ms
+        );
+        epoch_entries.push(Json::obj(vec![
+            ("overlap", Json::Bool(overlap)),
+            ("wall_ms", Json::num(ms)),
+        ]));
+    }
+
+    // ---- per-layer phase timings (max over workers) ----
+    harness::section("overlappable compute per layer (max over workers)");
+    let mut engines: Vec<NativeWorkerEngine> =
+        wgs.iter().map(|w| NativeWorkerEngine::new(w.clone(), spec.clone())).collect();
+    let mut rng = Rng::new(3);
+    // per-worker layer inputs: h[0] random features, then real outputs
+    let mut h: Vec<Vec<Matrix>> = engines
+        .iter()
+        .map(|e| vec![Matrix::from_fn(e.n_local(), dims.f_in, |_, _| rng.next_normal())])
+        .collect();
+    let mut fwd_compute = vec![0.0f64; layer_dims.len()];
+    for (l, &(fi, _fo)) in layer_dims.iter().enumerate() {
+        for (w, engine) in engines.iter_mut().enumerate() {
+            let h_in = h[w][l].clone();
+            let s = time_median(iters, || {
+                engine.forward_interior(l, &weights, &h_in, false).unwrap();
+            });
+            fwd_compute[l] = fwd_compute[l].max(s);
+            let h_bnd = Matrix::zeros(engine.n_boundary(), fi);
+            let out = engine.forward_boundary(l, &weights, &h_in, &h_bnd, false).unwrap();
+            h[w].push(out);
+        }
+        println!("{:<44} {:>10.1} us", format!("forward_interior layer {l}"), fwd_compute[l] * 1e6);
+    }
+    let mut bwd_compute = vec![0.0f64; layer_dims.len()];
+    for l in (0..layer_dims.len()).rev() {
+        let fo = layer_dims[l].1;
+        for engine in engines.iter_mut() {
+            let g_out = Matrix::from_fn(engine.n_local(), fo, |_, _| rng.next_normal());
+            let mut finish_s = Vec::with_capacity(iters);
+            for _ in 0..iters {
+                let g_bnd = engine.backward_halo(l, &weights, &g_out, false).unwrap();
+                engine.recycle(g_bnd);
+                let t0 = Instant::now();
+                let (g_local, _grads) = engine.backward_finish(l, &weights, false).unwrap();
+                finish_s.push(t0.elapsed().as_secs_f64());
+                engine.recycle(g_local);
+            }
+            finish_s.sort_by(f64::total_cmp);
+            bwd_compute[l] = bwd_compute[l].max(finish_s[finish_s.len() / 2]);
+        }
+        println!("{:<44} {:>10.1} us", format!("backward_finish layer {l}"), bwd_compute[l] * 1e6);
+    }
+
+    // ---- analytic hidden seconds per preset ----
+    let presets: [(&str, LinkModel); 3] = [
+        ("ten_gbe", LinkModel::ten_gbe()),
+        ("hundred_gb", LinkModel::hundred_gb()),
+        ("wan", LinkModel::wan()),
+    ];
+    let mut preset_entries = Vec::new();
+    for (name, model) in presets {
+        harness::section(&format!("hidden communication, preset {name}"));
+        let mut layers_json = Vec::new();
+        let (mut serial, mut overlapped, mut hidden) = (0.0f64, 0.0f64, 0.0f64);
+        for (l, &(fi, _fo)) in layer_dims.iter().enumerate() {
+            let comm_s = model.bottleneck_seconds(&layer_exchange_ledger(&wgs, fi));
+            for (dir, compute_s) in [("fwd", fwd_compute[l]), ("bwd", bwd_compute[l])] {
+                let est = overlap_estimate(compute_s, comm_s);
+                serial += est.serial_s;
+                overlapped += est.overlapped_s;
+                hidden += est.hidden_s;
+                println!(
+                    "layer {l} {dir}: compute {:>9.1} us, comm {:>9.1} us, hidden {:>9.1} us",
+                    compute_s * 1e6,
+                    comm_s * 1e6,
+                    est.hidden_s * 1e6
+                );
+                layers_json.push(Json::obj(vec![
+                    ("layer", Json::num(l as f64)),
+                    ("dir", Json::str(dir)),
+                    ("compute_s", Json::num(compute_s)),
+                    ("comm_s", Json::num(comm_s)),
+                    ("hidden_s", Json::num(est.hidden_s)),
+                ]));
+            }
+        }
+        println!(
+            "total: serial {:.3} ms, overlapped {:.3} ms, hidden {:.3} ms/epoch",
+            serial * 1e3,
+            overlapped * 1e3,
+            hidden * 1e3
+        );
+        preset_entries.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("total_serial_s", Json::num(serial)),
+            ("total_overlapped_s", Json::num(overlapped)),
+            ("total_hidden_s", Json::num(hidden)),
+            ("layers", Json::Arr(layers_json)),
+        ]));
+    }
+
+    let doc = Json::obj(vec![
+        ("schema", Json::str("varco-overlap-bench/1")),
+        ("generated_by", Json::str("cargo bench --bench bench_overlap")),
+        (
+            "config",
+            Json::obj(vec![
+                ("dataset", Json::str("synth-arxiv")),
+                ("nodes", Json::num(NODES as f64)),
+                ("q", Json::num(Q as f64)),
+                ("hidden", Json::num(HIDDEN as f64)),
+                ("layers", Json::num(LAYERS as f64)),
+                ("comm", Json::str(format!("fixed:{RATE}"))),
+                ("epochs_timed", Json::num(epochs as f64)),
+            ]),
+        ),
+        ("epoch", Json::Arr(epoch_entries)),
+        ("presets", Json::Arr(preset_entries)),
+    ]);
+    std::fs::write("BENCH_overlap.json", doc.to_string_pretty() + "\n").unwrap();
+    println!("\nwrote BENCH_overlap.json");
+}

@@ -100,6 +100,9 @@ struct Shared {
     total_bytes: AtomicUsize,
     dropped: AtomicUsize,
     staled: AtomicUsize,
+    /// stale coins consumed but not injected because the cached payload no
+    /// longer matches the fresh one (rate changed between epochs)
+    stale_skipped: AtomicUsize,
 }
 
 /// Coordinator-side handle: accounting queries, coordinator-shard records,
@@ -128,6 +131,7 @@ impl Fabric {
             total_bytes: AtomicUsize::new(0),
             dropped: AtomicUsize::new(0),
             staled: AtomicUsize::new(0),
+            stale_skipped: AtomicUsize::new(0),
         };
         Fabric { shared: Arc::new(shared) }
     }
@@ -175,6 +179,14 @@ impl Fabric {
     /// Messages replaced by a previous epoch's payload so far.
     pub fn staled(&self) -> usize {
         self.shared.staled.load(Ordering::Relaxed)
+    }
+
+    /// Stale coins that were consumed without injecting: the cached
+    /// payload's shape or wire size no longer matched the fresh message
+    /// (the rate changed between epochs), so the fresh payload was
+    /// delivered — and counted here instead of silently forgotten.
+    pub fn stale_skipped(&self) -> usize {
+        self.shared.stale_skipped.load(Ordering::Relaxed)
     }
 
     /// Merge every shard (workers in rank order, then the coordinator
@@ -232,14 +244,33 @@ impl Endpoint {
             let roll = failure_coin(policy.seed, &msg);
             if roll < policy.drop_prob {
                 shared.dropped.fetch_add(1, Ordering::Relaxed);
-                // dropped: receiver reconstructs zeros (empty value set)
-                msg.payload.values.iter_mut().for_each(|v| *v = 0.0);
+                // dropped: substitute the codec-agnostic tombstone, which
+                // every decoder reconstructs as exact zeros.  (Zeroing the
+                // raw values would be codec-UNaware: zeroed quantizer
+                // codes decode to the side-channel `min`, silently biasing
+                // quantized failure-injection runs.)
+                msg.payload = Payload::dropped(msg.payload.n, msg.payload.key);
             } else if roll < policy.drop_prob + policy.stale_prob {
                 let key = (msg.from, msg.to, msg.kind);
                 if let Some(prev) = self.history.get(&key) {
-                    if prev.n == msg.payload.n && prev.values.len() == msg.payload.values.len() {
+                    // inject only when the cached payload is a drop-in
+                    // replacement: same logical shape AND same serialized
+                    // size, so the ledger bytes charged above always match
+                    // the delivered payload's wire_bytes().  A cached
+                    // tombstone (last epoch's copy was itself dropped) also
+                    // replays — the receiver keeps seeing the lost value,
+                    // the "stale chains compound" semantics; its wire cost
+                    // was the dropped original's, charged when it was sent.
+                    // Otherwise (the rate changed between epochs) the coin
+                    // is consumed, the fresh payload delivered, and the
+                    // skip recorded (it used to vanish untraced).
+                    let replayable = prev.n == msg.payload.n
+                        && (prev.wire_bytes() == wire_bytes || prev.is_dropped());
+                    if replayable {
                         shared.staled.fetch_add(1, Ordering::Relaxed);
                         msg.payload = prev.clone();
+                    } else {
+                        shared.stale_skipped.fetch_add(1, Ordering::Relaxed);
                     }
                 }
             }
@@ -260,6 +291,22 @@ impl Endpoint {
         let mut msgs = std::mem::take(&mut *self.shared.mailboxes[self.rank].lock().unwrap());
         msgs.sort_by_key(|m| (m.from, m.kind.sort_key()));
         msgs
+    }
+
+    /// Non-blocking per-channel drain: take only the messages of `kind`
+    /// that have arrived so far (sender-sorted, deterministic commit
+    /// order), leaving every other kind in the mailbox.  This is the
+    /// overlap pipeline's receive primitive — a fast worker may already
+    /// have posted its next layer's sends, and a kind-keyed drain cannot
+    /// swallow them the way [`Endpoint::recv_all`] would.
+    pub fn try_recv_kind(&mut self, kind: MessageKind) -> Vec<Message> {
+        let mut mb = self.shared.mailboxes[self.rank].lock().unwrap();
+        let (mut take, keep): (Vec<Message>, Vec<Message>) =
+            std::mem::take(&mut *mb).into_iter().partition(|m| m.kind == kind);
+        *mb = keep;
+        drop(mb);
+        take.sort_by_key(|m| m.from);
+        take
     }
 }
 
@@ -299,15 +346,51 @@ mod tests {
     }
 
     #[test]
-    fn drop_policy_zeroes_payload_but_still_charges_wire() {
+    fn drop_policy_delivers_tombstone_but_still_charges_wire() {
         let f = Fabric::with_policy(2, FailurePolicy { drop_prob: 1.0, stale_prob: 0.0, seed: 1 });
         let mut eps = f.endpoints();
         eps[0].send(0, msg(0, 1, MessageKind::Activation { layer: 0 }, &[3.0, 4.0], 9));
         let msgs = eps[1].recv_all();
-        assert_eq!(msgs[0].payload.values, vec![0.0, 0.0]);
+        assert!(msgs[0].payload.is_dropped());
+        assert_eq!(msgs[0].payload.n, 2, "shape survives the drop");
+        assert_eq!(msgs[0].payload.key, 9, "key survives the drop");
         assert_eq!(f.dropped(), 1);
-        // dropped messages still charge their full wire cost
+        // dropped messages still charge the REAL payload's full wire cost
         assert_eq!(f.total_bytes(), payload(&[3.0, 4.0], 9).wire_bytes());
+    }
+
+    #[test]
+    fn dropped_messages_decode_to_exact_zeros_for_every_codec() {
+        // regression: drop injection used to zero `Payload::values`, which
+        // decodes to the side-channel `min` for the quantizer (zeroed
+        // bit-packed codes are NOT zero floats) — quantized failure runs
+        // were silently biased toward min
+        let x: Vec<f32> = (0..96).map(|i| (i as f32 * 0.37).sin() - 0.4).collect();
+        for name in ["subset", "topk", "quantize"] {
+            let c = crate::compress::by_name(name).unwrap();
+            let f =
+                Fabric::with_policy(2, FailurePolicy { drop_prob: 1.0, stale_prob: 0.0, seed: 4 });
+            let mut eps = f.endpoints();
+            let compressed = c.compress(&x, 4.0, 77);
+            eps[0].send(
+                0,
+                Message {
+                    from: 0,
+                    to: 1,
+                    kind: MessageKind::Activation { layer: 0 },
+                    payload: compressed,
+                },
+            );
+            let msgs = eps[1].recv_all();
+            assert_eq!(f.dropped(), 1, "{name}");
+            let mut out = vec![f32::NAN; x.len()];
+            c.decompress(&msgs[0].payload, &mut out);
+            assert!(
+                out.iter().all(|&v| v == 0.0),
+                "{name}: dropped payload must reconstruct exact zeros, got {:?}",
+                &out[..4]
+            );
+        }
     }
 
     #[test]
@@ -321,6 +404,112 @@ mod tests {
         let msgs = eps[1].recv_all();
         assert_eq!(msgs[0].payload.values, vec![1.0]);
         assert_eq!(f.staled(), 1);
+        assert_eq!(f.stale_skipped(), 0);
+    }
+
+    #[test]
+    fn stale_shape_mismatch_is_counted_and_ledger_matches_delivery() {
+        // regression: when the cached payload no longer matches (the rate
+        // changed between epochs) the coin was consumed and the fresh
+        // payload delivered with no record of the skip
+        let f = Fabric::with_policy(2, FailurePolicy { drop_prob: 0.0, stale_prob: 1.0, seed: 6 });
+        let mut eps = f.endpoints();
+        let kind = MessageKind::Activation { layer: 0 };
+        let mut delivered_bytes = 0usize;
+        eps[0].send(0, msg(0, 1, kind, &[1.0, 2.0, 3.0, 4.0], 5));
+        delivered_bytes += eps[1].recv_all()[0].payload.wire_bytes();
+        // rate change: next epoch ships half the values — must skip
+        eps[0].send(1, msg(0, 1, kind, &[7.0, 8.0], 6));
+        let msgs = eps[1].recv_all();
+        assert_eq!(msgs[0].payload.values, vec![7.0, 8.0], "fresh payload delivered");
+        delivered_bytes += msgs[0].payload.wire_bytes();
+        assert_eq!(f.staled(), 0);
+        assert_eq!(f.stale_skipped(), 1);
+        // same shape again: injection applies and replays epoch 1's copy
+        eps[0].send(2, msg(0, 1, kind, &[9.0, 10.0], 7));
+        let msgs = eps[1].recv_all();
+        assert_eq!(msgs[0].payload.values, vec![7.0, 8.0]);
+        delivered_bytes += msgs[0].payload.wire_bytes();
+        assert_eq!(f.staled(), 1);
+        // the invariant the guard enforces: ledger bytes == delivered
+        // wire bytes, message by message (stale injection only replaces a
+        // payload with one of identical serialized size)
+        assert_eq!(f.total_bytes(), delivered_bytes);
+        assert!(f.merged_ledger().verify_conservation());
+    }
+
+    #[test]
+    fn stale_after_drop_replays_the_tombstone() {
+        // a drop caches the tombstone; a later stale coin on the same
+        // channel must still inject (the receiver keeps seeing the lost
+        // value — stale chains compound), not be miscounted as a
+        // rate-change skip
+        let f = Fabric::with_policy(2, FailurePolicy { drop_prob: 0.45, stale_prob: 0.55, seed: 0 });
+        let mut eps = f.endpoints();
+        let kind = MessageKind::Activation { layer: 0 };
+        // scan keys until one message drops and the next epoch's coin on
+        // the same channel lands in the stale band (deterministic search)
+        let mut exercised = false;
+        for k in 0..64u64 {
+            let m0 = msg(0, 1, kind, &[1.0, 2.0], k);
+            let m1 = msg(0, 1, kind, &[3.0, 4.0], k + 1000);
+            let d0 = failure_coin(0, &m0) < 0.45;
+            let r1 = failure_coin(0, &m1);
+            if d0 && (0.45..1.0).contains(&r1) {
+                eps[0].send(0, m0);
+                assert!(eps[1].recv_all()[0].payload.is_dropped());
+                let skipped_before = f.stale_skipped();
+                eps[0].send(1, m1);
+                let got = eps[1].recv_all();
+                assert!(got[0].payload.is_dropped(), "tombstone must replay");
+                assert_eq!(f.staled(), 1, "counted as stale, not skipped");
+                assert_eq!(f.stale_skipped(), skipped_before);
+                exercised = true;
+                break;
+            }
+        }
+        assert!(exercised, "no key in the scan hit drop-then-stale");
+    }
+
+    #[test]
+    fn try_recv_kind_drains_only_its_channel() {
+        let f = Fabric::new(2);
+        let mut eps = f.endpoints();
+        eps[0].send(0, msg(0, 1, MessageKind::Activation { layer: 0 }, &[1.0], 1));
+        eps[0].send(0, msg(0, 1, MessageKind::Activation { layer: 1 }, &[2.0], 2));
+        eps[0].send(0, msg(0, 1, MessageKind::Gradient { layer: 0 }, &[3.0], 3));
+        // nothing for a channel that never received: non-blocking empty
+        assert!(eps[1].try_recv_kind(MessageKind::Weights).is_empty());
+        let l0 = eps[1].try_recv_kind(MessageKind::Activation { layer: 0 });
+        assert_eq!(l0.len(), 1);
+        assert_eq!(l0[0].payload.values, vec![1.0]);
+        assert!(!f.is_quiescent(), "other channels keep their messages");
+        let l1 = eps[1].try_recv_kind(MessageKind::Activation { layer: 1 });
+        assert_eq!(l1[0].payload.values, vec![2.0]);
+        let g0 = eps[1].try_recv_kind(MessageKind::Gradient { layer: 0 });
+        assert_eq!(g0[0].payload.values, vec![3.0]);
+        assert!(f.is_quiescent());
+    }
+
+    #[test]
+    fn try_recv_kind_sorts_by_sender() {
+        let f = Fabric::new(4);
+        let eps = f.endpoints();
+        std::thread::scope(|s| {
+            for mut ep in eps {
+                if ep.rank() == 3 {
+                    continue;
+                }
+                s.spawn(move || {
+                    let from = ep.rank();
+                    ep.send(0, msg(from, 3, MessageKind::Activation { layer: 2 }, &[from as f32], from as u64));
+                });
+            }
+        });
+        let mut eps = f.endpoints();
+        let msgs = eps[3].try_recv_kind(MessageKind::Activation { layer: 2 });
+        let froms: Vec<usize> = msgs.iter().map(|m| m.from).collect();
+        assert_eq!(froms, vec![0, 1, 2], "sender-sorted commit order");
     }
 
     #[test]

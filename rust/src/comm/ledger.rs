@@ -178,6 +178,22 @@ impl CommLedger {
         }
     }
 
+    /// Aggregate cells per directed link (from, to).  Only detailed
+    /// ledgers retain link identity; aggregated mode returns an empty map
+    /// — callers (the bottleneck time estimate) fall back to aggregate
+    /// totals then.
+    pub fn breakdown_by_link(&self) -> BTreeMap<(usize, usize), AggCell> {
+        let mut m: BTreeMap<(usize, usize), AggCell> = BTreeMap::new();
+        if let Detail::Entries(v) = &self.detail {
+            for e in v {
+                let cell = m.entry((e.from, e.to)).or_default();
+                cell.bytes += e.bytes;
+                cell.messages += 1;
+            }
+        }
+        m
+    }
+
     /// Conservation check: per-epoch sums equal record sums (property test).
     pub fn verify_conservation(&self) -> bool {
         let from_detail: usize = match &self.detail {
@@ -282,6 +298,21 @@ mod tests {
         assert_eq!(a.bytes_in_epoch(2), 7);
         assert_eq!(a.entries().len(), 3);
         assert!(a.verify_conservation());
+    }
+
+    #[test]
+    fn breakdown_by_link_keeps_directed_totals() {
+        let mut l = CommLedger::new();
+        l.record(0, 0, 1, "fwd", 10);
+        l.record(1, 0, 1, "fwd", 30);
+        l.record(0, 1, 0, "bwd", 5);
+        let links = l.breakdown_by_link();
+        assert_eq!(links[&(0, 1)], AggCell { bytes: 40, messages: 2 });
+        assert_eq!(links[&(1, 0)], AggCell { bytes: 5, messages: 1 });
+        // aggregated mode has no link identity to offer
+        let mut a = CommLedger::aggregated();
+        a.record(0, 0, 1, "fwd", 10);
+        assert!(a.breakdown_by_link().is_empty());
     }
 
     #[test]

@@ -20,4 +20,4 @@ pub mod time_model;
 
 pub use fabric::{Endpoint, Fabric, FailurePolicy, Message, MessageKind};
 pub use ledger::{AggCell, CommLedger, LedgerEntry, LedgerMode};
-pub use time_model::LinkModel;
+pub use time_model::{overlap_estimate, LinkModel, OverlapEstimate};

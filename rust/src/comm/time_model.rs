@@ -42,10 +42,56 @@ impl LinkModel {
     /// `α · messages + β · bytes`, divided by `parallel_links` (> 1 models
     /// concurrent pairwise links; uniform split is the standard α-β
     /// approximation).
+    ///
+    /// The uniform split assumes every link carries an equal share — on a
+    /// skewed partition it UNDERESTIMATES, because the epoch cannot finish
+    /// before the busiest link drains.  Use [`Self::bottleneck_seconds`]
+    /// when per-link detail is available.
     pub fn ledger_seconds(&self, ledger: &CommLedger, parallel_links: usize) -> f64 {
         let total = self.alpha * ledger.message_count() as f64
             + self.beta * ledger.total_bytes() as f64;
         total / parallel_links.max(1) as f64
+    }
+
+    /// Bottleneck (max-per-link) communication estimate: all pairwise
+    /// links run concurrently, so wall clock is the SLOWEST link's
+    /// `α · messages + β · bytes` — exact where the uniform split of
+    /// [`Self::ledger_seconds`] hides skew.  Falls back to the serial
+    /// total when the ledger kept no per-link detail (aggregated mode),
+    /// which is an upper bound rather than an underestimate.
+    pub fn bottleneck_seconds(&self, ledger: &CommLedger) -> f64 {
+        let links = ledger.breakdown_by_link();
+        if links.is_empty() {
+            return self.ledger_seconds(ledger, 1);
+        }
+        links
+            .values()
+            .map(|c| self.alpha * c.messages as f64 + self.beta * c.bytes as f64)
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Overlap-aware per-phase time estimate: a pipelined exchange costs
+/// `max(compute, comm)` instead of the barrier schedule's
+/// `compute + comm`; the difference is the communication the pipeline
+/// hides behind interior compute.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OverlapEstimate {
+    /// barrier schedule: compute then wait out the exchange
+    pub serial_s: f64,
+    /// overlap schedule: whichever of the two dominates
+    pub overlapped_s: f64,
+    /// communication seconds hidden behind compute, `min(compute, comm)`
+    pub hidden_s: f64,
+}
+
+/// Combine one phase's compute seconds with its communication seconds
+/// under the overlap pipeline's `max(compute, comm)` model.
+pub fn overlap_estimate(compute_s: f64, comm_s: f64) -> OverlapEstimate {
+    OverlapEstimate {
+        serial_s: compute_s + comm_s,
+        overlapped_s: compute_s.max(comm_s),
+        hidden_s: compute_s.min(comm_s),
     }
 }
 
@@ -86,6 +132,51 @@ mod tests {
         }
         let m = LinkModel::ten_gbe();
         assert_eq!(m.ledger_seconds(&d, 1), m.ledger_seconds(&a, 1));
+    }
+
+    #[test]
+    fn bottleneck_exposes_skew_the_uniform_split_hides() {
+        // deliberately skewed: link (0,1) carries 10x the bytes of the
+        // other three links
+        let mut l = CommLedger::new();
+        l.record(0, 0, 1, "activation", 1_000_000);
+        l.record(0, 1, 0, "activation", 100_000);
+        l.record(0, 2, 3, "activation", 100_000);
+        l.record(0, 3, 2, "activation", 100_000);
+        let m = LinkModel::ten_gbe();
+        let uniform = m.ledger_seconds(&l, 4);
+        let bottleneck = m.bottleneck_seconds(&l);
+        // the busiest link alone costs more than the uniform per-link share
+        let busiest = m.message_seconds(1_000_000);
+        assert!((bottleneck - busiest).abs() < 1e-12, "{bottleneck} vs {busiest}");
+        assert!(
+            bottleneck > 2.0 * uniform,
+            "skew must surface: bottleneck {bottleneck} vs uniform {uniform}"
+        );
+        // and it never undercuts the busiest link, unlike the uniform split
+        assert!(uniform < busiest);
+    }
+
+    #[test]
+    fn bottleneck_falls_back_to_serial_total_without_link_detail() {
+        let mut a = CommLedger::aggregated();
+        a.record(0, 0, 1, "activation", 4000);
+        a.record(0, 1, 0, "activation", 4000);
+        let m = LinkModel::hundred_gb();
+        assert_eq!(m.bottleneck_seconds(&a), m.ledger_seconds(&a, 1));
+    }
+
+    #[test]
+    fn overlap_estimate_hides_the_smaller_term() {
+        let e = overlap_estimate(2.0, 0.5);
+        assert_eq!(e.serial_s, 2.5);
+        assert_eq!(e.overlapped_s, 2.0);
+        assert_eq!(e.hidden_s, 0.5);
+        // comm-bound phase: compute hides inside the transfer instead
+        let e = overlap_estimate(0.25, 3.0);
+        assert_eq!(e.overlapped_s, 3.0);
+        assert_eq!(e.hidden_s, 0.25);
+        assert!((e.serial_s - (e.overlapped_s + e.hidden_s)).abs() < 1e-15);
     }
 
     #[test]

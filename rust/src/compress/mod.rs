@@ -68,6 +68,24 @@ impl Payload {
     pub fn wire_floats(&self) -> usize {
         self.wire_bytes().div_ceil(4)
     }
+
+    /// The canonical "this message was lost" payload: shape (`n`) and key
+    /// preserved, no values, no side channel.  Every codec's decoder
+    /// reconstructs exact zeros from it — the compression mechanism's
+    /// natural missing-value semantics.  The fabric's drop injection
+    /// substitutes this AFTER the wire cost of the real payload was
+    /// charged (a dropped message still paid for its bytes); zeroing the
+    /// raw values instead would be wrong for the quantizer, whose zero
+    /// codes decode to the side-channel `min`, not zero.
+    pub fn dropped(n: usize, key: u64) -> Payload {
+        Payload { n, values: vec![], indices: None, key, side: vec![], codec: Codec::Keyed }
+    }
+
+    /// Is this the [`Payload::dropped`] tombstone?  (A genuine compressed
+    /// payload of a non-empty message always keeps at least one value.)
+    pub fn is_dropped(&self) -> bool {
+        self.n > 0 && self.values.is_empty() && self.indices.is_none() && self.side.is_empty()
+    }
 }
 
 /// A lossy compression mechanism per Definition 1.

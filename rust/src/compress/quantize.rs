@@ -39,6 +39,12 @@ impl Compressor for QuantizeCompressor {
 
     fn decompress(&self, payload: &Payload, out: &mut [f32]) {
         assert_eq!(out.len(), payload.n);
+        if payload.is_dropped() {
+            // lost on the wire: exact zeros, NOT `min + 0·step` (the wrong
+            // answer zeroed codes would decode to)
+            out.fill(0.0);
+            return;
+        }
         let Codec::Quantized { bits } = payload.codec else { panic!("quantize payload codec") };
         let [lo, hi] = payload.side[..] else { panic!("quantize side channel") };
         let levels = ((1u64 << bits) - 1) as f32;

@@ -43,6 +43,11 @@ impl Compressor for RandomSubsetCompressor {
 
     fn decompress(&self, payload: &Payload, out: &mut [f32]) {
         assert_eq!(out.len(), payload.n);
+        if payload.is_dropped() {
+            // lost on the wire: the mechanism's missing-value semantics
+            out.fill(0.0);
+            return;
+        }
         let m = payload.values.len();
         if m == payload.n {
             // lossless fast path (rate 1)

@@ -27,6 +27,10 @@ impl Compressor for TopKCompressor {
     fn decompress(&self, payload: &Payload, out: &mut [f32]) {
         assert_eq!(out.len(), payload.n);
         out.fill(0.0);
+        if payload.is_dropped() {
+            // lost on the wire: reconstruct zeros (no indices to scatter)
+            return;
+        }
         let idx = payload.indices.as_ref().expect("topk payload carries indices");
         for (&i, &v) in idx.iter().zip(&payload.values) {
             out[i as usize] = v;

@@ -18,7 +18,9 @@
 //! `comm = budget:2m` installs a closed-loop [`BudgetController`] that
 //! spends 2 MB of wire bytes over the run (suffixes k/m/g accepted, an
 //! optional second field caps the starting rate, default 128); every
-//! other spec replays the named open-loop schedule.
+//! other spec replays the named open-loop schedule.  `overlap = on`
+//! pipelines interior compute with in-flight boundary payloads (bitwise
+//! identical results; native engine only).
 
 use crate::comm::LedgerMode;
 use crate::compress::{BudgetController, CommMode, RateController, Scheduler};
@@ -66,6 +68,10 @@ pub struct TrainConfig {
     /// ledger detail: auto (aggregated for budget runs) | detailed |
     /// aggregated
     pub ledger: String,
+    /// overlapped interior/boundary pipeline: on | off (default off).
+    /// Compute the interior block while boundary payloads are in flight;
+    /// bitwise identical to the barrier schedule (native engine only).
+    pub overlap: bool,
 }
 
 impl Default for TrainConfig {
@@ -94,6 +100,7 @@ impl Default for TrainConfig {
             run_mode: "parallel".into(),
             threads: 0,
             ledger: "auto".into(),
+            overlap: false,
         }
     }
 }
@@ -141,6 +148,13 @@ impl TrainConfig {
             "run_mode" => self.run_mode = value.into(),
             "threads" => self.threads = value.parse()?,
             "ledger" => self.ledger = value.into(),
+            "overlap" => {
+                self.overlap = match value {
+                    "on" | "true" | "1" => true,
+                    "off" | "false" | "0" => false,
+                    _ => anyhow::bail!("overlap must be on|off, got {value:?}"),
+                }
+            }
             _ => anyhow::bail!("unknown config key {key:?}"),
         }
         Ok(())
@@ -369,6 +383,7 @@ pub fn build_trainer_with_dataset(cfg: &TrainConfig, dataset: &Dataset) -> Resul
         track_grad_norm: false,
         run_mode: RunMode::parse(&cfg.run_mode)?,
         threads: cfg.threads,
+        overlap: cfg.overlap,
     };
     let mut trainer = Trainer::new(dataset, &partition, &worker_graphs, engines, spec, opts)?;
     trainer.report.partitioner = cfg.partitioner.clone();
@@ -446,6 +461,26 @@ mod tests {
         cfg.artifact_tag.clear();
         cfg.dataset = "karate-like".into();
         assert_eq!(cfg.resolved_artifact_tag(), "quickstart");
+    }
+
+    #[test]
+    fn overlap_key_parses_and_builds() {
+        let mut cfg = TrainConfig::default();
+        assert!(!cfg.overlap);
+        cfg.set("overlap", "on").unwrap();
+        assert!(cfg.overlap);
+        cfg.set("overlap", "off").unwrap();
+        assert!(!cfg.overlap);
+        assert!(cfg.set("overlap", "sideways").is_err());
+        // end to end: an overlapped run trains on the native engine
+        let mut quick = TrainConfig::default_quickstart();
+        quick.epochs = 3;
+        quick.comm = "fixed:4".into();
+        quick.overlap = true;
+        let mut t = build_trainer(&quick).unwrap();
+        let report = t.run().unwrap();
+        assert_eq!(report.records.len(), 3);
+        assert!(t.fabric().is_quiescent());
     }
 
     #[test]

@@ -37,6 +37,27 @@
 //! At rate 1 (FullComm) this computes the exact centralized gradient, for
 //! any partition — asserted by the integration tests.
 //!
+//! # Overlap pipeline (`overlap=on`)
+//!
+//! The barrier schedule stalls every communicating layer twice: once for
+//! all sends to post, once for all receives to drain.  The overlap
+//! pipeline shrinks that critical path (AdaQP-style): each worker posts
+//! its compressed sends, computes the layer's **interior block** (rows
+//! whose aggregation needs no remote halo — `WorkerGraph::n_interior`
+//! orders them first) while payloads are in flight, then drains its
+//! per-layer channel (`Endpoint::try_recv_kind`) and finishes the
+//! boundary rows; backward posts `g_h_bnd` from `backward_halo` early and
+//! computes the heavy parameter-gradient products (`backward_finish`)
+//! while the gradient messages fly.  One barrier per exchange instead of
+//! two — kind-keyed drains cannot swallow a faster worker's next-layer
+//! messages, so the post-drain barrier disappears.
+//!
+//! Determinism is preserved because boundary contributions commit in the
+//! existing (sender, kind, layer) order regardless of arrival order, and
+//! the engine's split phases are bitwise the fused calls run back to
+//! back — `overlap=on` reproduces `overlap=off` weights bit for bit
+//! (pinned by `tests/parallel_equivalence.rs`).
+//!
 //! # Rate control
 //!
 //! Rates are chosen by a [`RateController`]: open-loop (the paper's
@@ -119,6 +140,11 @@ pub struct TrainerOptions {
     /// ledger shard detail (budget runs use `Aggregated` for bounded
     /// memory on long simulations)
     pub ledger_mode: LedgerMode,
+    /// overlapped interior/boundary pipeline: post compressed sends,
+    /// compute the interior block while payloads are in flight, finish
+    /// boundary rows on arrival.  Requires every engine to support the
+    /// split layer phases; bitwise equal to the barrier schedule.
+    pub overlap: bool,
 }
 
 impl Default for TrainerOptions {
@@ -137,6 +163,7 @@ impl Default for TrainerOptions {
             threads: 0,
             controller: None,
             ledger_mode: LedgerMode::Detailed,
+            overlap: false,
         }
     }
 }
@@ -437,8 +464,11 @@ fn compute<T>(gate: &Gate, intra: usize, f: impl FnOnce() -> Result<T>) -> Resul
 }
 
 /// One worker's epoch program (parallel mode).  The barrier schedule is a
-/// pure function of (plan, layer count) — identical on every worker, and
-/// walked to completion even after an error so the others never stall.
+/// pure function of (plan, layer count, overlap) — identical on every
+/// worker, and walked to completion even after an error so the others
+/// never stall.  With `overlap` every communicating exchange costs ONE
+/// barrier (send + interior compute, wait, kind-keyed drain + boundary
+/// completion) instead of the barrier schedule's two.
 #[allow(clippy::too_many_arguments)]
 fn worker_epoch(
     epoch: usize,
@@ -453,6 +483,7 @@ fn worker_epoch(
     xchg: &Barrier,
     gate: &Gate,
     intra: usize,
+    overlap: bool,
 ) -> WorkerOut {
     let local_norm = plan.local_norm;
     let d = &ctx.data[ctx.rank];
@@ -468,6 +499,45 @@ fn worker_epoch(
     // the allocator on this path.
     let mut h: Option<Matrix> = None;
     for (l, &(fi, _fo)) in layer_dims.iter().enumerate() {
+        if overlap {
+            if let Some(r) = plan.fwd[l] {
+                // pipeline: post sends, compute the interior block while
+                // payloads fly, then commit the halo in sender order
+                if err.is_none() {
+                    let h_ref: &Matrix = h.as_ref().unwrap_or(&d.x);
+                    match compute(gate, intra, || {
+                        let s = ctx.send_forward(endpoint, ws, epoch, l, h_ref, r, fi, plan.feedback);
+                        engine.forward_interior(l, weights, h_ref, local_norm)?;
+                        Ok(s)
+                    }) {
+                        Ok(s) => feedback[l].merge(&s),
+                        Err(e) => err = Some(e),
+                    }
+                }
+                xchg.wait(); // all sends posted (or skipped by errored workers)
+                // always drain this layer's channel: keeps quiescence even
+                // on the error path, without touching later layers' mail
+                let msgs = endpoint.try_recv_kind(MessageKind::Activation { layer: l });
+                if err.is_none() {
+                    let h_ref: &Matrix = h.as_ref().unwrap_or(&d.x);
+                    match compute(gate, intra, || {
+                        let hb = ctx.recv_forward(msgs, ws, fi)?;
+                        let next = engine.forward_boundary(l, weights, h_ref, &hb, local_norm)?;
+                        Ok((next, hb))
+                    }) {
+                        Ok((next, hb)) => {
+                            ws.put_matrix(hb);
+                            if let Some(prev) = h.replace(next) {
+                                engine.recycle(prev);
+                            }
+                        }
+                        Err(e) => err = Some(e),
+                    }
+                }
+                continue;
+            }
+            // no exchange: fall through to the fused forward below
+        }
         let h_bnd = if let Some(r) = plan.fwd[l] {
             if err.is_none() {
                 // an errored worker sends nothing; receivers just see fewer
@@ -534,6 +604,42 @@ fn worker_epoch(
     // ---- backward ----
     for l in (0..layer_dims.len()).rev() {
         let fi = layer_dims[l].0;
+        if overlap {
+            if let Some(r) = plan.bwd[l] {
+                // pipeline: backward_halo yields g_h_bnd early, the sends
+                // post, and the heavy parameter-gradient products overlap
+                // with the in-flight exchange
+                if err.is_none() {
+                    match compute(gate, intra, || {
+                        let g_bnd = engine.backward_halo(l, weights, &g, local_norm)?;
+                        let s = ctx
+                            .send_backward(endpoint, ws, epoch, l, &g_bnd, r, fi, plan.feedback);
+                        engine.recycle(g_bnd);
+                        let (gl, lg) = engine.backward_finish(l, weights, local_norm)?;
+                        Ok((s, gl, lg))
+                    }) {
+                        Ok((s, gl, lg)) => {
+                            feedback[l].merge(&s);
+                            let prev = std::mem::replace(&mut g, gl);
+                            engine.recycle(prev);
+                            lgrads[l] = Some(lg);
+                        }
+                        Err(e) => err = Some(e),
+                    }
+                }
+                xchg.wait();
+                let msgs = endpoint.try_recv_kind(MessageKind::Gradient { layer: l });
+                if err.is_none() {
+                    if let Err(e) =
+                        compute(gate, intra, || ctx.recv_backward(msgs, ws, &mut g, fi))
+                    {
+                        err = Some(e);
+                    }
+                }
+                continue;
+            }
+            // no exchange: fall through to the fused backward below
+        }
         let mut g_bnd = Matrix::zeros(0, 0);
         if err.is_none() {
             match compute(gate, intra, || engine.backward_layer(l, weights, &g, local_norm)) {
@@ -664,6 +770,15 @@ impl Trainer {
         if let CommMode::Compressed(sched) = &opts.comm_mode {
             sched.validate()?;
         }
+        if opts.overlap {
+            for e in &engines {
+                anyhow::ensure!(
+                    e.supports_overlap(),
+                    "engine {:?} does not support the overlap pipeline; run with overlap=off",
+                    e.name()
+                );
+            }
+        }
         let (m_train, m_val, m_test) = dataset.split.as_f32();
         let mut data = Vec::with_capacity(partition.q);
         for wg in worker_graphs {
@@ -769,6 +884,23 @@ impl Trainer {
         self.opts.run_mode = mode;
     }
 
+    /// Toggle the overlapped interior/boundary pipeline after
+    /// construction (benches sweep it).  Errors if any engine lacks the
+    /// split layer phases.
+    pub fn set_overlap(&mut self, on: bool) -> Result<()> {
+        if on {
+            for e in &self.engines {
+                anyhow::ensure!(
+                    e.supports_overlap(),
+                    "engine {:?} does not support the overlap pipeline; run with overlap=off",
+                    e.name()
+                );
+            }
+        }
+        self.opts.overlap = on;
+        Ok(())
+    }
+
     /// Toggle per-epoch ||grad|| recording (Prop. 1/2 diagnostics).
     pub fn set_track_grad_norm(&mut self, on: bool) {
         self.opts.track_grad_norm = on;
@@ -844,6 +976,7 @@ impl Trainer {
         let mut fbs: Vec<Vec<LayerFeedback>> =
             vec![vec![LayerFeedback::default(); layer_dims.len()]; q];
         let seed = opts.seed;
+        let overlap = opts.overlap;
         let compressor: &dyn Compressor = opts.compressor.as_ref();
         let ctx = |rank: usize| WorkerCtx { rank, data, plan_idx, compressor, seed };
 
@@ -852,6 +985,41 @@ impl Trainer {
         // clone); consumed activations return to each engine's arena
         let mut h: Vec<Option<Matrix>> = (0..q).map(|_| None).collect();
         for (l, &(fi, _fo)) in layer_dims.iter().enumerate() {
+            if overlap {
+                if let Some(r) = plan.fwd[l] {
+                    // pipeline order: every worker posts sends and runs its
+                    // interior block, then each commits the halo in the
+                    // same sender-sorted order the barrier schedule uses
+                    for i in 0..q {
+                        let h_ref: &Matrix = h[i].as_ref().unwrap_or(&data[i].x);
+                        let s = ctx(i).send_forward(
+                            &mut endpoints[i],
+                            &mut workspaces[i],
+                            epoch,
+                            l,
+                            h_ref,
+                            r,
+                            fi,
+                            plan.feedback,
+                        );
+                        fbs[i][l].merge(&s);
+                        engines[i].forward_interior(l, weights, h_ref, local_norm)?;
+                    }
+                    for p in 0..q {
+                        let msgs =
+                            endpoints[p].try_recv_kind(MessageKind::Activation { layer: l });
+                        let hb = ctx(p).recv_forward(msgs, &mut workspaces[p], fi)?;
+                        let h_ref: &Matrix = h[p].as_ref().unwrap_or(&data[p].x);
+                        let next = engines[p].forward_boundary(l, weights, h_ref, &hb, local_norm)?;
+                        if let Some(prev) = h[p].replace(next) {
+                            engines[p].recycle(prev);
+                        }
+                        workspaces[p].put_matrix(hb);
+                    }
+                    continue;
+                }
+                // no exchange: fall through to the fused forward below
+            }
             let h_bnd: Vec<Matrix> = match plan.fwd[l] {
                 Some(r) => {
                     for i in 0..q {
@@ -909,6 +1077,39 @@ impl Trainer {
         let mut grad_acc = weights.zeros_like();
         for l in (0..layer_dims.len()).rev() {
             let fi = layer_dims[l].0;
+            if overlap {
+                if let Some(r) = plan.bwd[l] {
+                    // pipeline order: halo cotangent out early, parameter
+                    // grads while the exchange is in flight, remote
+                    // contributions committed sender-sorted afterwards
+                    for i in 0..q {
+                        let g_bnd = engines[i].backward_halo(l, weights, &g[i], local_norm)?;
+                        let s = ctx(i).send_backward(
+                            &mut endpoints[i],
+                            &mut workspaces[i],
+                            epoch,
+                            l,
+                            &g_bnd,
+                            r,
+                            fi,
+                            plan.feedback,
+                        );
+                        fbs[i][l].merge(&s);
+                        engines[i].recycle(g_bnd);
+                        let (gl, lg) = engines[i].backward_finish(l, weights, local_norm)?;
+                        grad_acc.layers[l].add_assign(&lg);
+                        let prev = std::mem::replace(&mut g[i], gl);
+                        engines[i].recycle(prev);
+                    }
+                    for i in 0..q {
+                        let msgs =
+                            endpoints[i].try_recv_kind(MessageKind::Gradient { layer: l });
+                        ctx(i).recv_backward(msgs, &mut workspaces[i], &mut g[i], fi)?;
+                    }
+                    continue;
+                }
+                // no exchange: the fused loop below handles this layer
+            }
             let mut g_bnds = Vec::with_capacity(q);
             for i in 0..q {
                 let (gl, gb, lg) = engines[i].backward_layer(l, weights, &g[i], local_norm)?;
@@ -1040,6 +1241,7 @@ impl Trainer {
         let compressor: &dyn Compressor = opts.compressor.as_ref();
         let seed = opts.seed;
         let total_train = *total_train;
+        let overlap = opts.overlap;
         let layer_dims = spec.layer_dims();
         // the epoch's rate plan, published by the coordinator before the
         // workers are admitted; workers only ever read it between the
@@ -1109,6 +1311,7 @@ impl Trainer {
                                 xchg,
                                 gate,
                                 intra,
+                                overlap,
                             )
                         };
                         *slots[rank].lock().unwrap() = Some(out);

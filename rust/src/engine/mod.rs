@@ -45,6 +45,22 @@ pub struct LossOut {
 ///      cotangents to propagate locally (`g_h_local`) and to ship to the
 ///      boundary owners (`g_h_bnd`) plus the layer's parameter-tree
 ///      gradients (a [`LayerParams`] with the spec's tensor layout).
+///
+/// # Overlap pipeline (optional)
+///
+/// Engines answering `supports_overlap() == true` additionally expose the
+/// layer phases the overlapped trainer schedules around in-flight
+/// payloads:
+///
+///   * forward: `forward_interior(l, ...)` (everything computable without
+///     the halo — interior-row updates plus the local aggregation of all
+///     rows) then `forward_boundary(l, ...)` (halo aggregation + boundary
+///     rows) once the exchange lands.  The pair MUST produce bitwise the
+///     same output and cache state as one `forward_layer` call.
+///   * backward: `backward_halo(l, ...)` returns only `g_h_bnd` (so the
+///     gradient exchange can be posted early), `backward_finish(l, ...)`
+///     the parameter grads and local cotangent.  Again bitwise equal to
+///     one `backward_layer` call.
 // `Send` so the parallel runtime can move each engine onto its worker
 // thread for the duration of a run.  Every engine is still owned (and
 // exclusively driven) by exactly one thread at a time.
@@ -83,6 +99,62 @@ pub trait WorkerEngine: Send {
         g_out: &Matrix,
         local_norm: bool,
     ) -> Result<(Matrix, Matrix, LayerParams)>;
+
+    /// Whether this engine implements the split (overlap-pipeline) layer
+    /// phases below.  The trainer rejects `overlap=on` runs when any
+    /// engine answers false.
+    fn supports_overlap(&self) -> bool {
+        false
+    }
+
+    /// Overlap phase 1 of [`Self::forward_layer`]: everything computable
+    /// from local state alone, while boundary payloads are in flight.
+    fn forward_interior(
+        &mut self,
+        _layer: usize,
+        _weights: &Weights,
+        _h_local: &Matrix,
+        _local_norm: bool,
+    ) -> Result<()> {
+        anyhow::bail!("engine {:?} does not implement the overlap pipeline", self.name())
+    }
+
+    /// Overlap phase 2: fold the received halo in and complete the
+    /// boundary rows, returning the full layer output.
+    fn forward_boundary(
+        &mut self,
+        _layer: usize,
+        _weights: &Weights,
+        _h_local: &Matrix,
+        _h_bnd: &Matrix,
+        _local_norm: bool,
+    ) -> Result<Matrix> {
+        anyhow::bail!("engine {:?} does not implement the overlap pipeline", self.name())
+    }
+
+    /// Overlap phase 1 of [`Self::backward_layer`]: just enough work to
+    /// produce `g_h_bnd`, so the gradient exchange posts before the heavy
+    /// parameter-gradient products run.
+    fn backward_halo(
+        &mut self,
+        _layer: usize,
+        _weights: &Weights,
+        _g_out: &Matrix,
+        _local_norm: bool,
+    ) -> Result<Matrix> {
+        anyhow::bail!("engine {:?} does not implement the overlap pipeline", self.name())
+    }
+
+    /// Overlap phase 2: parameter grads + the local input cotangent,
+    /// computed while the gradient payloads are in flight.
+    fn backward_finish(
+        &mut self,
+        _layer: usize,
+        _weights: &Weights,
+        _local_norm: bool,
+    ) -> Result<(Matrix, LayerParams)> {
+        anyhow::bail!("engine {:?} does not implement the overlap pipeline", self.name())
+    }
 
     /// Masked cross-entropy + correct counts.
     fn loss_grad(

@@ -19,7 +19,7 @@
 //! for each registered architecture.
 
 use super::{LossOut, Weights, WorkerEngine};
-use crate::model::{Aggregation, LayerParams, ModelSpec, Update};
+use crate::model::{Activation, Aggregation, LayerParams, LayerSpec, ModelSpec, Update};
 use crate::partition::worker_graph::SparseBlock;
 use crate::partition::WorkerGraph;
 use crate::tensor::Matrix;
@@ -168,15 +168,19 @@ fn resolve_ops<'a>(
     }
 }
 
-/// agg += S_kind @ h (the spec's aggregation operator).
+/// agg += S_local @ h — the halo-free part of the aggregation (the
+/// diagonal self term plus every local->local edge).  Together with
+/// [`aggregate_halo`] this is the spec's full aggregation operator, split
+/// so the local part can run while boundary payloads are in flight; the
+/// per-row accumulation order (self, then local nnz, then halo nnz) is
+/// identical to the historical fused call.
 #[allow(clippy::too_many_arguments)]
-fn aggregate(
+fn aggregate_local(
     wg: &WorkerGraph,
     gcn: Option<&GcnOps>,
     gin: Option<&GinOps>,
     kind: Aggregation,
     h_local: &Matrix,
-    h_bnd: &Matrix,
     local_norm: bool,
     agg: &mut Matrix,
 ) {
@@ -191,18 +195,31 @@ fn aggregate(
             add_scaled_rows(c, h_local, agg);
         }
         ops.s_ll.spmm_into(h_local, agg);
-        if wg.n_boundary() > 0 {
-            ops.s_lb.spmm_into(h_bnd, agg);
-        }
     }
 }
 
-/// Transpose of [`aggregate`]: scatter the aggregate's cotangent back to
-/// local rows (accumulated into `g_h_local`) and boundary rows
-/// (accumulated into `g_h_bnd`).  The diagonal self term is symmetric, so
-/// it applies identically in both directions.
+/// agg += S_lb @ h_bnd — the halo part.  Interior rows of `s_lb` are
+/// empty, so only boundary-block rows are touched.
+fn aggregate_halo(
+    wg: &WorkerGraph,
+    gcn: Option<&GcnOps>,
+    gin: Option<&GinOps>,
+    kind: Aggregation,
+    h_bnd: &Matrix,
+    agg: &mut Matrix,
+) {
+    if wg.n_boundary() == 0 {
+        return;
+    }
+    let ops = resolve_ops(wg, gcn, gin, kind);
+    ops.s_lb.spmm_into(h_bnd, agg);
+}
+
+/// Transpose of [`aggregate_local`]: scatter the aggregate's cotangent
+/// back to local rows (accumulated into `g_h_local`).  The diagonal self
+/// term is symmetric, so it applies identically in both directions.
 #[allow(clippy::too_many_arguments)]
-fn aggregate_t(
+fn aggregate_t_local(
     wg: &WorkerGraph,
     gcn: Option<&GcnOps>,
     gin: Option<&GinOps>,
@@ -210,7 +227,6 @@ fn aggregate_t(
     g_agg: &Matrix,
     local_norm: bool,
     g_h_local: &mut Matrix,
-    g_h_bnd: &mut Matrix,
 ) {
     let ops = resolve_ops(wg, gcn, gin, kind);
     if local_norm {
@@ -223,8 +239,42 @@ fn aggregate_t(
             add_scaled_rows(c, g_agg, g_h_local);
         }
         ops.s_ll.spmm_t_into(g_agg, g_h_local);
-        if wg.n_boundary() > 0 {
-            ops.s_lb.spmm_t_into(g_agg, g_h_bnd);
+    }
+}
+
+/// Transpose of [`aggregate_halo`]: scatter into the boundary rows'
+/// cotangent (what ships back to the halo owners).
+fn aggregate_t_halo(
+    wg: &WorkerGraph,
+    gcn: Option<&GcnOps>,
+    gin: Option<&GinOps>,
+    kind: Aggregation,
+    g_agg: &Matrix,
+    g_h_bnd: &mut Matrix,
+) {
+    if wg.n_boundary() == 0 {
+        return;
+    }
+    let ops = resolve_ops(wg, gcn, gin, kind);
+    ops.s_lb.spmm_t_into(g_agg, g_h_bnd);
+}
+
+/// dst[r0..r1] += src[r0..r1] (row-block add; per-element identical to a
+/// full `add_assign` restricted to those rows).
+fn add_assign_rows(dst: &mut Matrix, src: &Matrix, r0: usize, r1: usize) {
+    debug_assert_eq!(dst.shape(), src.shape());
+    let f = dst.cols;
+    for (a, b) in dst.data[r0 * f..r1 * f].iter_mut().zip(&src.data[r0 * f..r1 * f]) {
+        *a += b;
+    }
+}
+
+/// Row-block bias broadcast: rows [r0, r1) of `m` += bias.
+fn add_bias_rows(m: &mut Matrix, bias: &[f32], r0: usize, r1: usize) {
+    debug_assert_eq!(bias.len(), m.cols);
+    for r in r0..r1 {
+        for (a, &b) in m.row_mut(r).iter_mut().zip(bias) {
+            *a += b;
         }
     }
 }
@@ -241,6 +291,107 @@ fn colsum(m: &Matrix) -> Matrix {
     b
 }
 
+/// Compute rows `[r0, r1)` of a layer's update + activation: fills those
+/// rows of `pre` and `out` (and the gin extras), reading the same rows of
+/// `h_local` and `agg`.  Every op here is row-local, so running the
+/// interior and boundary blocks separately produces bitwise the same rows
+/// as one full-matrix pass — the overlap pipeline's contract.
+#[allow(clippy::too_many_arguments)]
+fn update_rows(
+    ws: &mut Workspace,
+    ls: &LayerSpec,
+    lw: &LayerParams,
+    h_local: &Matrix,
+    agg: &Matrix,
+    pre: &mut Matrix,
+    out: &mut Matrix,
+    extra: &mut [Matrix],
+    r0: usize,
+    r1: usize,
+) {
+    if r0 == r1 {
+        return;
+    }
+    let (fi, fo) = (ls.f_in, ls.f_out);
+    match ls.update {
+        Update::SageLinear => {
+            // pre = h W_self + agg W_neigh + b
+            let w_self = &lw.params[0].value;
+            let w_neigh = &lw.params[1].value;
+            let bias = &lw.params[2].value;
+            h_local.matmul_range_into(w_self, pre, r0, r1);
+            let mut tmp = ws.take_matrix_scratch(pre.rows, fo);
+            agg.matmul_range_into(w_neigh, &mut tmp, r0, r1);
+            add_assign_rows(pre, &tmp, r0, r1);
+            ws.put_matrix(tmp);
+            add_bias_rows(pre, &bias.data, r0, r1);
+        }
+        Update::GcnLinear => {
+            // pre = agg W + b (the self path rides inside agg)
+            let w = &lw.params[0].value;
+            let bias = &lw.params[1].value;
+            agg.matmul_range_into(w, pre, r0, r1);
+            add_bias_rows(pre, &bias.data, r0, r1);
+        }
+        Update::GinMlp => {
+            // pre = relu(((1+eps) h + agg) W1 + b1) W2 + b2
+            let eps = lw.params[0].value.data[0];
+            let w1 = &lw.params[1].value;
+            let b1 = &lw.params[2].value;
+            let w2 = &lw.params[3].value;
+            let b2 = &lw.params[4].value;
+            let [z, a] = extra else { panic!("gin forward carries [z, a] extras") };
+            let s = 1.0 + eps;
+            for (zv, (&av, &hv)) in z.data[r0 * fi..r1 * fi]
+                .iter_mut()
+                .zip(agg.data[r0 * fi..r1 * fi].iter().zip(&h_local.data[r0 * fi..r1 * fi]))
+            {
+                *zv = av + s * hv;
+            }
+            z.matmul_range_into(w1, a, r0, r1);
+            add_bias_rows(a, &b1.data, r0, r1);
+            Activation::Relu.apply_slice(&mut a.data[r0 * fo..r1 * fo]);
+            a.matmul_range_into(w2, pre, r0, r1);
+            add_bias_rows(pre, &b2.data, r0, r1);
+        }
+    };
+    out.data[r0 * fo..r1 * fo].copy_from_slice(&pre.data[r0 * fo..r1 * fo]);
+    ls.act.apply_slice(&mut out.data[r0 * fo..r1 * fo]);
+}
+
+/// In-flight forward state between [`WorkerEngine::forward_interior`] and
+/// [`WorkerEngine::forward_boundary`].  `agg` holds the halo-free
+/// aggregation of every row; `pre`/`out` (and the gin extras) are complete
+/// on rows `[0, split)` only.
+struct PendingForward {
+    layer: usize,
+    local_norm: bool,
+    /// first boundary-block row (== n_local when no halo is needed)
+    split: usize,
+    h_local_in: Matrix,
+    agg: Matrix,
+    pre: Matrix,
+    out: Matrix,
+    extra: Vec<Matrix>,
+}
+
+/// In-flight backward state between [`WorkerEngine::backward_halo`] and
+/// [`WorkerEngine::backward_finish`].  The halo phase computed only rows
+/// `[split, n_local)` of the cotangents (all the halo scatter reads);
+/// rows `[0, split)` of `g_pre` still hold the raw `g_out` copy and are
+/// masked/propagated in the finish phase.
+struct PendingBackward {
+    layer: usize,
+    local_norm: bool,
+    /// first boundary-block row (== n_local when no halo is involved)
+    split: usize,
+    g_pre: Matrix,
+    /// the aggregate's cotangent (for gin this is g_z)
+    g_agg: Matrix,
+    /// gin only: the MLP hidden cotangent (g_m), needed for w1/b1 grads
+    g_mid: Option<Matrix>,
+}
+
 /// Sparse per-worker engine.
 pub struct NativeWorkerEngine {
     wg: WorkerGraph,
@@ -248,6 +399,8 @@ pub struct NativeWorkerEngine {
     gcn: Option<GcnOps>,
     gin: Option<GinOps>,
     cache: Vec<Option<LayerCache>>,
+    pending_fwd: Option<PendingForward>,
+    pending_bwd: Option<PendingBackward>,
     /// scratch arena backing layer caches, outputs, and backward temps
     ws: Workspace,
 }
@@ -271,6 +424,8 @@ impl NativeWorkerEngine {
             gin,
             wg,
             spec,
+            pending_fwd: None,
+            pending_bwd: None,
             ws: Workspace::new(),
         }
     }
@@ -297,15 +452,18 @@ impl WorkerEngine for NativeWorkerEngine {
         self.wg.n_boundary()
     }
 
-    fn forward_layer(
+    fn supports_overlap(&self) -> bool {
+        true
+    }
+
+    fn forward_interior(
         &mut self,
         layer: usize,
         weights: &Weights,
         h_local: &Matrix,
-        h_bnd: &Matrix,
         local_norm: bool,
-    ) -> Result<Matrix> {
-        let NativeWorkerEngine { wg, spec, gcn, gin, cache, ws } = self;
+    ) -> Result<()> {
+        let NativeWorkerEngine { wg, spec, gcn, gin, cache, pending_fwd, ws, .. } = self;
         anyhow::ensure!(layer < spec.layers.len(), "layer {layer} out of range");
         let ls = spec.layers[layer];
         let (fi, fo) = (ls.f_in, ls.f_out);
@@ -321,17 +479,19 @@ impl WorkerEngine for NativeWorkerEngine {
             "h_local shape {:?} != ({nl}, {fi})",
             h_local.shape()
         );
-        if !local_norm {
-            anyhow::ensure!(
-                h_bnd.shape() == (wg.n_boundary(), fi),
-                "h_bnd shape {:?} != ({}, {fi})",
-                h_bnd.shape(),
-                wg.n_boundary()
-            );
+        // recycle abandoned pipeline state (an interrupted epoch) and the
+        // previous forward's cache for this layer: their buffers come
+        // straight back below, so steady-state epochs rebuild the cache
+        // allocation-free
+        if let Some(p) = pending_fwd.take() {
+            ws.put_matrix(p.h_local_in);
+            ws.put_matrix(p.agg);
+            ws.put_matrix(p.pre);
+            ws.put_matrix(p.out);
+            for m in p.extra {
+                ws.put_matrix(m);
+            }
         }
-        // recycle the previous forward's cache for this layer: its buffers
-        // come straight back below, so steady-state epochs rebuild the
-        // cache allocation-free
         if let Some(c) = cache[layer].take() {
             ws.put_matrix(c.h_local_in);
             ws.put_matrix(c.pre);
@@ -340,62 +500,267 @@ impl WorkerEngine for NativeWorkerEngine {
                 ws.put_matrix(m);
             }
         }
+        // rows needing no halo: everything when this layer reads none
+        let split = if local_norm || wg.n_boundary() == 0 { nl } else { wg.n_interior };
         let mut agg = ws.take_matrix_zeroed(nl, fi);
-        aggregate(wg, gcn.as_ref(), gin.as_ref(), ls.agg, h_local, h_bnd, local_norm, &mut agg);
-        let mut extra: Vec<Matrix> = Vec::new();
-        let pre = match ls.update {
+        aggregate_local(wg, gcn.as_ref(), gin.as_ref(), ls.agg, h_local, local_norm, &mut agg);
+        let mut pre = ws.take_matrix_scratch(nl, fo);
+        let mut out = ws.take_matrix_scratch(nl, fo);
+        let mut extra: Vec<Matrix> = match ls.update {
+            Update::GinMlp => {
+                vec![ws.take_matrix_scratch(nl, fi), ws.take_matrix_scratch(nl, fo)]
+            }
+            _ => Vec::new(),
+        };
+        update_rows(ws, &ls, lw, h_local, &agg, &mut pre, &mut out, &mut extra, 0, split);
+        let h_local_in = ws.take_matrix_copy(h_local);
+        *pending_fwd =
+            Some(PendingForward { layer, local_norm, split, h_local_in, agg, pre, out, extra });
+        Ok(())
+    }
+
+    fn forward_boundary(
+        &mut self,
+        layer: usize,
+        weights: &Weights,
+        h_local: &Matrix,
+        h_bnd: &Matrix,
+        local_norm: bool,
+    ) -> Result<Matrix> {
+        let NativeWorkerEngine { wg, spec, gcn, gin, cache, pending_fwd, ws, .. } = self;
+        let mut p = pending_fwd
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("forward_boundary({layer}) without forward_interior"))?;
+        anyhow::ensure!(
+            p.layer == layer && p.local_norm == local_norm,
+            "forward pipeline mismatch: interior ran layer {} (local_norm {}), \
+             boundary asked for {layer} ({local_norm})",
+            p.layer,
+            p.local_norm
+        );
+        let ls = spec.layers[layer];
+        let fi = ls.f_in;
+        let lw = &weights.layers[layer];
+        let nl = wg.n_local();
+        if !local_norm {
+            anyhow::ensure!(
+                h_bnd.shape() == (wg.n_boundary(), fi),
+                "h_bnd shape {:?} != ({}, {fi})",
+                h_bnd.shape(),
+                wg.n_boundary()
+            );
+            aggregate_halo(wg, gcn.as_ref(), gin.as_ref(), ls.agg, h_bnd, &mut p.agg);
+        }
+        update_rows(ws, &ls, lw, h_local, &p.agg, &mut p.pre, &mut p.out, &mut p.extra, p.split, nl);
+        cache[layer] =
+            Some(LayerCache { h_local_in: p.h_local_in, pre: p.pre, agg: p.agg, extra: p.extra });
+        Ok(p.out)
+    }
+
+    fn forward_layer(
+        &mut self,
+        layer: usize,
+        weights: &Weights,
+        h_local: &Matrix,
+        h_bnd: &Matrix,
+        local_norm: bool,
+    ) -> Result<Matrix> {
+        // the barrier path is the overlap pipeline run back to back — one
+        // code path, so `overlap=on` is bitwise `overlap=off` by
+        // construction
+        self.forward_interior(layer, weights, h_local, local_norm)?;
+        self.forward_boundary(layer, weights, h_local, h_bnd, local_norm)
+    }
+
+    fn backward_halo(
+        &mut self,
+        layer: usize,
+        weights: &Weights,
+        g_out: &Matrix,
+        local_norm: bool,
+    ) -> Result<Matrix> {
+        // split borrows: the cache entry is read while scratch buffers are
+        // drawn from the workspace
+        let NativeWorkerEngine { wg, spec, gcn, gin, cache, pending_bwd, ws, .. } = self;
+        anyhow::ensure!(layer < spec.layers.len(), "layer {layer} out of range");
+        let ls = spec.layers[layer];
+        let (fi, fo) = (ls.f_in, ls.f_out);
+        let cache = cache[layer]
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("backward_layer({layer}) before forward"))?;
+        let lw = &weights.layers[layer];
+        let nl = wg.n_local();
+        // recycle abandoned pipeline state (an interrupted epoch)
+        if let Some(p) = pending_bwd.take() {
+            ws.put_matrix(p.g_pre);
+            ws.put_matrix(p.g_agg);
+            if let Some(m) = p.g_mid {
+                ws.put_matrix(m);
+            }
+        }
+        // only boundary-block rows of the aggregate cotangent feed the
+        // halo scatter (interior rows of s_lb are empty), so this phase
+        // computes JUST those rows — the gradient exchange posts after
+        // O(boundary) work, and everything else overlaps with it in
+        // `backward_finish`
+        let split = if local_norm || wg.n_boundary() == 0 { nl } else { wg.n_interior };
+        // g_pre = g_out ⊙ act'(pre): full copy (one memcpy), boundary rows
+        // masked now, interior rows in the finish phase
+        let mut g_pre = ws.take_matrix_copy(g_out);
+        ls.act.grad_mask_slice(&cache.pre.data[split * fo..], &mut g_pre.data[split * fo..]);
+        // boundary rows of the aggregate's cotangent: g_pre @ Wᵀ without
+        // ever materializing the weight transposes (for gin, backprop
+        // through the MLP first)
+        let (g_agg, g_mid) = match ls.update {
             Update::SageLinear => {
-                // pre = h W_self + agg W_neigh + b
-                let w_self = &lw.params[0].value;
                 let w_neigh = &lw.params[1].value;
-                let bias = &lw.params[2].value;
-                let mut pre = ws.take_matrix_scratch(nl, fo);
-                h_local.matmul_into(w_self, &mut pre);
-                let mut tmp = ws.take_matrix_scratch(nl, fo);
-                agg.matmul_into(w_neigh, &mut tmp);
-                pre.add_assign(&tmp);
-                ws.put_matrix(tmp);
-                pre.add_row_broadcast(&bias.data);
-                pre
+                let mut g_agg = ws.take_matrix_scratch(nl, fi);
+                g_pre.matmul_nt_range_into(w_neigh, &mut g_agg, split, nl);
+                (g_agg, None)
             }
             Update::GcnLinear => {
-                // pre = agg W + b (the self path rides inside agg)
                 let w = &lw.params[0].value;
-                let bias = &lw.params[1].value;
-                let mut pre = ws.take_matrix_scratch(nl, fo);
-                agg.matmul_into(w, &mut pre);
-                pre.add_row_broadcast(&bias.data);
-                pre
+                let mut g_agg = ws.take_matrix_scratch(nl, fi);
+                g_pre.matmul_nt_range_into(w, &mut g_agg, split, nl);
+                (g_agg, None)
             }
             Update::GinMlp => {
-                // pre = relu(((1+eps) h + agg) W1 + b1) W2 + b2
-                let eps = lw.params[0].value.data[0];
                 let w1 = &lw.params[1].value;
-                let b1 = &lw.params[2].value;
                 let w2 = &lw.params[3].value;
-                let b2 = &lw.params[4].value;
-                let mut z = ws.take_matrix_copy(&agg);
-                let s = 1.0 + eps;
-                for (zv, &hv) in z.data.iter_mut().zip(&h_local.data) {
-                    *zv += s * hv;
+                let a = &cache.extra[1];
+                let mut g_m = ws.take_matrix_scratch(nl, fo);
+                g_pre.matmul_nt_range_into(w2, &mut g_m, split, nl);
+                // a = relu(m), so a == 0 exactly where the mask zeroes
+                for (gv, &av) in g_m.data[split * fo..]
+                    .iter_mut()
+                    .zip(&a.data[split * fo..])
+                {
+                    if av <= 0.0 {
+                        *gv = 0.0;
+                    }
                 }
-                let mut a = ws.take_matrix_scratch(nl, fo);
-                z.matmul_into(w1, &mut a);
-                a.add_row_broadcast(&b1.data);
-                a.relu();
-                let mut pre = ws.take_matrix_scratch(nl, fo);
-                a.matmul_into(w2, &mut pre);
-                pre.add_row_broadcast(&b2.data);
-                extra.push(z);
-                extra.push(a);
-                pre
+                let mut g_z = ws.take_matrix_scratch(nl, fi);
+                g_m.matmul_nt_range_into(w1, &mut g_z, split, nl);
+                (g_z, Some(g_m))
             }
         };
-        let mut out = ws.take_matrix_copy(&pre);
-        ls.act.apply(&mut out);
-        let h_local_in = ws.take_matrix_copy(h_local);
-        cache[layer] = Some(LayerCache { h_local_in, pre, agg, extra });
-        Ok(out)
+        let mut g_h_bnd = ws.take_matrix_zeroed(wg.n_boundary(), fi);
+        if !local_norm {
+            aggregate_t_halo(wg, gcn.as_ref(), gin.as_ref(), ls.agg, &g_agg, &mut g_h_bnd);
+        }
+        *pending_bwd = Some(PendingBackward { layer, local_norm, split, g_pre, g_agg, g_mid });
+        Ok(g_h_bnd)
+    }
+
+    fn backward_finish(
+        &mut self,
+        layer: usize,
+        weights: &Weights,
+        local_norm: bool,
+    ) -> Result<(Matrix, LayerParams)> {
+        let NativeWorkerEngine { wg, spec, gcn, gin, cache, pending_bwd, ws, .. } = self;
+        let mut p = pending_bwd
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("backward_finish({layer}) without backward_halo"))?;
+        anyhow::ensure!(
+            p.layer == layer && p.local_norm == local_norm,
+            "backward pipeline mismatch: halo ran layer {} (local_norm {}), \
+             finish asked for {layer} ({local_norm})",
+            p.layer,
+            p.local_norm
+        );
+        let ls = spec.layers[layer];
+        let (fi, fo) = (ls.f_in, ls.f_out);
+        let cache = cache[layer]
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("backward_finish({layer}) before forward"))?;
+        let lw = &weights.layers[layer];
+        let nl = wg.n_local();
+        // complete the interior rows the halo phase skipped: mask g_pre,
+        // then propagate the interior aggregate cotangent (every op is
+        // row-local, so the split leaves each element's bits unchanged)
+        let split = p.split;
+        ls.act.grad_mask_slice(&cache.pre.data[..split * fo], &mut p.g_pre.data[..split * fo]);
+        match ls.update {
+            Update::SageLinear => {
+                let w_neigh = &lw.params[1].value;
+                p.g_pre.matmul_nt_range_into(w_neigh, &mut p.g_agg, 0, split);
+            }
+            Update::GcnLinear => {
+                let w = &lw.params[0].value;
+                p.g_pre.matmul_nt_range_into(w, &mut p.g_agg, 0, split);
+            }
+            Update::GinMlp => {
+                let w1 = &lw.params[1].value;
+                let w2 = &lw.params[3].value;
+                let a = &cache.extra[1];
+                let g_m = p.g_mid.as_mut().expect("gin backward keeps g_m");
+                p.g_pre.matmul_nt_range_into(w2, g_m, 0, split);
+                for (gv, &av) in g_m.data[..split * fo].iter_mut().zip(&a.data[..split * fo]) {
+                    if av <= 0.0 {
+                        *gv = 0.0;
+                    }
+                }
+                g_m.matmul_nt_range_into(w1, &mut p.g_agg, 0, split);
+            }
+        }
+        let p = p;
+        // parameter grads plus the direct (non-aggregated) part of the
+        // input cotangent — the heavy products that overlap with the
+        // in-flight gradient exchange
+        let (mut g_h_local, grads) = match ls.update {
+            Update::SageLinear => {
+                let w_self = &lw.params[0].value;
+                let g_w_self = cache.h_local_in.t_matmul(&p.g_pre);
+                let g_w_neigh = cache.agg.t_matmul(&p.g_pre);
+                let g_bias = colsum(&p.g_pre);
+                let mut g_h_local = ws.take_matrix_scratch(nl, fi);
+                p.g_pre.matmul_nt_into(w_self, &mut g_h_local);
+                let grads = LayerParams::from_named(vec![
+                    ("w_self", g_w_self),
+                    ("w_neigh", g_w_neigh),
+                    ("bias", g_bias),
+                ]);
+                (g_h_local, grads)
+            }
+            Update::GcnLinear => {
+                let g_w = cache.agg.t_matmul(&p.g_pre);
+                let g_bias = colsum(&p.g_pre);
+                // no direct path: h reaches the output only through agg
+                let g_h_local = ws.take_matrix_zeroed(nl, fi);
+                let grads = LayerParams::from_named(vec![("w", g_w), ("bias", g_bias)]);
+                (g_h_local, grads)
+            }
+            Update::GinMlp => {
+                let eps = lw.params[0].value.data[0];
+                let z = &cache.extra[0];
+                let a = &cache.extra[1];
+                let g_m = p.g_mid.as_ref().expect("gin backward keeps g_m");
+                let g_w2 = a.t_matmul(&p.g_pre);
+                let g_b2 = colsum(&p.g_pre);
+                let g_w1 = z.t_matmul(g_m);
+                let g_b1 = colsum(g_m);
+                let g_eps: f32 =
+                    p.g_agg.data.iter().zip(&cache.h_local_in.data).map(|(g, h)| g * h).sum();
+                let mut g_h_local = ws.take_matrix_copy(&p.g_agg);
+                g_h_local.scale(1.0 + eps);
+                let grads = LayerParams::from_named(vec![
+                    ("eps", Matrix::from_vec(1, 1, vec![g_eps])),
+                    ("w1", g_w1),
+                    ("b1", g_b1),
+                    ("w2", g_w2),
+                    ("b2", g_b2),
+                ]);
+                (g_h_local, grads)
+            }
+        };
+        aggregate_t_local(wg, gcn.as_ref(), gin.as_ref(), ls.agg, &p.g_agg, local_norm, &mut g_h_local);
+        ws.put_matrix(p.g_pre);
+        ws.put_matrix(p.g_agg);
+        if let Some(m) = p.g_mid {
+            ws.put_matrix(m);
+        }
+        Ok((g_h_local, grads))
     }
 
     fn backward_layer(
@@ -405,101 +770,10 @@ impl WorkerEngine for NativeWorkerEngine {
         g_out: &Matrix,
         local_norm: bool,
     ) -> Result<(Matrix, Matrix, LayerParams)> {
-        // split borrows: the cache entry is read while scratch buffers are
-        // drawn from the workspace
-        let NativeWorkerEngine { wg, spec, gcn, gin, cache, ws } = self;
-        anyhow::ensure!(layer < spec.layers.len(), "layer {layer} out of range");
-        let ls = spec.layers[layer];
-        let (fi, fo) = (ls.f_in, ls.f_out);
-        let cache = cache[layer]
-            .as_ref()
-            .ok_or_else(|| anyhow::anyhow!("backward_layer({layer}) before forward"))?;
-        let lw = &weights.layers[layer];
-        let nl = wg.n_local();
-        // g_pre = g_out ⊙ act'(pre)
-        let mut g_pre = ws.take_matrix_copy(g_out);
-        ls.act.grad_mask(&cache.pre, &mut g_pre);
-        // per-update: parameter grads, the aggregate's cotangent, and the
-        // direct (non-aggregated) part of the input cotangent
-        let (mut g_h_local, g_agg, grads) = match ls.update {
-            Update::SageLinear => {
-                let w_self = &lw.params[0].value;
-                let w_neigh = &lw.params[1].value;
-                let g_w_self = cache.h_local_in.t_matmul(&g_pre);
-                let g_w_neigh = cache.agg.t_matmul(&g_pre);
-                let g_bias = colsum(&g_pre);
-                // cotangents through the dense products: g_pre @ Wᵀ
-                // without ever materializing the weight transposes
-                let mut g_agg = ws.take_matrix_scratch(nl, fi);
-                g_pre.matmul_nt_into(w_neigh, &mut g_agg);
-                let mut g_h_local = ws.take_matrix_scratch(nl, fi);
-                g_pre.matmul_nt_into(w_self, &mut g_h_local);
-                let grads = LayerParams::from_named(vec![
-                    ("w_self", g_w_self),
-                    ("w_neigh", g_w_neigh),
-                    ("bias", g_bias),
-                ]);
-                (g_h_local, g_agg, grads)
-            }
-            Update::GcnLinear => {
-                let w = &lw.params[0].value;
-                let g_w = cache.agg.t_matmul(&g_pre);
-                let g_bias = colsum(&g_pre);
-                let mut g_agg = ws.take_matrix_scratch(nl, fi);
-                g_pre.matmul_nt_into(w, &mut g_agg);
-                // no direct path: h reaches the output only through agg
-                let g_h_local = ws.take_matrix_zeroed(nl, fi);
-                let grads = LayerParams::from_named(vec![("w", g_w), ("bias", g_bias)]);
-                (g_h_local, g_agg, grads)
-            }
-            Update::GinMlp => {
-                let eps = lw.params[0].value.data[0];
-                let w1 = &lw.params[1].value;
-                let w2 = &lw.params[3].value;
-                let z = &cache.extra[0];
-                let a = &cache.extra[1];
-                let g_w2 = a.t_matmul(&g_pre);
-                let g_b2 = colsum(&g_pre);
-                let mut g_m = ws.take_matrix_scratch(nl, fo);
-                g_pre.matmul_nt_into(w2, &mut g_m);
-                // a = relu(m), so a == 0 exactly where the mask zeroes
-                for (gv, &av) in g_m.data.iter_mut().zip(&a.data) {
-                    if av <= 0.0 {
-                        *gv = 0.0;
-                    }
-                }
-                let g_w1 = z.t_matmul(&g_m);
-                let g_b1 = colsum(&g_m);
-                let mut g_z = ws.take_matrix_scratch(nl, fi);
-                g_m.matmul_nt_into(w1, &mut g_z);
-                let g_eps: f32 =
-                    g_z.data.iter().zip(&cache.h_local_in.data).map(|(g, h)| g * h).sum();
-                let mut g_h_local = ws.take_matrix_copy(&g_z);
-                g_h_local.scale(1.0 + eps);
-                ws.put_matrix(g_m);
-                let grads = LayerParams::from_named(vec![
-                    ("eps", Matrix::from_vec(1, 1, vec![g_eps])),
-                    ("w1", g_w1),
-                    ("b1", g_b1),
-                    ("w2", g_w2),
-                    ("b2", g_b2),
-                ]);
-                (g_h_local, g_z, grads)
-            }
-        };
-        let mut g_h_bnd = ws.take_matrix_zeroed(wg.n_boundary(), fi);
-        aggregate_t(
-            wg,
-            gcn.as_ref(),
-            gin.as_ref(),
-            ls.agg,
-            &g_agg,
-            local_norm,
-            &mut g_h_local,
-            &mut g_h_bnd,
-        );
-        ws.put_matrix(g_pre);
-        ws.put_matrix(g_agg);
+        // the barrier path is the overlap pipeline run back to back (same
+        // per-buffer op sequences), so the two schedules cannot drift
+        let g_h_bnd = self.backward_halo(layer, weights, g_out, local_norm)?;
+        let (g_h_local, grads) = self.backward_finish(layer, weights, local_norm)?;
         Ok((g_h_local, g_h_bnd, grads))
     }
 
@@ -790,6 +1064,52 @@ mod tests {
                 e.recycle(b2.1);
             }
         }
+    }
+
+    #[test]
+    fn split_phases_match_fused_layer_bitwise() {
+        // the overlap pipeline's load-bearing invariant: interior+boundary
+        // (and halo+finish) must reproduce the fused calls bit for bit,
+        // for every registered architecture and both norm modes
+        for model in ["sage", "gcn", "gin"] {
+            for local_norm in [false, true] {
+                let mut fused = setup_model(model, 21);
+                let mut split = setup_model(model, 21);
+                assert!(fused.supports_overlap());
+                let w = Weights::glorot(fused.spec(), 4);
+                let h = randm(fused.n_local(), 6, 5);
+                let hb = randm(fused.n_boundary(), 6, 6);
+                let g_out = randm(fused.n_local(), 9, 7);
+
+                let o1 = fused.forward_layer(0, &w, &h, &hb, local_norm).unwrap();
+                split.forward_interior(0, &w, &h, local_norm).unwrap();
+                let o2 = split.forward_boundary(0, &w, &h, &hb, local_norm).unwrap();
+                assert_eq!(o1.data, o2.data, "{model} local_norm={local_norm}: forward");
+
+                let (g1, gb1, lg1) = fused.backward_layer(0, &w, &g_out, local_norm).unwrap();
+                let gb2 = split.backward_halo(0, &w, &g_out, local_norm).unwrap();
+                let (g2, lg2) = split.backward_finish(0, &w, local_norm).unwrap();
+                assert_eq!(gb1.data, gb2.data, "{model} local_norm={local_norm}: g_h_bnd");
+                assert_eq!(g1.data, g2.data, "{model} local_norm={local_norm}: g_h_local");
+                assert_eq!(lg1, lg2, "{model} local_norm={local_norm}: layer grads");
+            }
+        }
+    }
+
+    #[test]
+    fn split_phase_misuse_errors() {
+        let mut e = setup(23);
+        let w = Weights::glorot(&DIMS, 0);
+        let h = randm(e.n_local(), 6, 1);
+        let hb = randm(e.n_boundary(), 6, 2);
+        // boundary without interior
+        assert!(e.forward_boundary(0, &w, &h, &hb, false).is_err());
+        // mismatched layer between the phases
+        e.forward_interior(0, &w, &h, false).unwrap();
+        assert!(e.forward_boundary(1, &w, &h, &hb, false).is_err());
+        // finish without halo
+        let _ = e.forward_layer(0, &w, &h, &hb, false).unwrap();
+        assert!(e.backward_finish(0, &w, false).is_err());
     }
 
     #[test]

@@ -56,12 +56,14 @@ fn print_help() {
          TRAIN KEYS (file and CLI share names):\n\
          \x20 dataset nodes q partitioner comm compressor model engine\n\
          \x20 artifact_tag artifacts_dir epochs hidden layers optimizer lr\n\
-         \x20 seed eval_every drop_prob stale_prob\n\
+         \x20 seed eval_every drop_prob stale_prob overlap\n\
          \n\
          comm spec:  full | none | fixed:R | linear:A | exp | step:E:F\n\
          \x20           | budget:BYTES[:CMAX]\n\
          model:      sage | gcn | gin   (GNN registry; native engine runs\n\
-         \x20           all of them, pjrt artifacts are sage-only)"
+         \x20           all of them, pjrt artifacts are sage-only)\n\
+         overlap:    on | off (default) — pipeline interior compute with\n\
+         \x20           in-flight boundary payloads; bitwise equal results"
     );
 }
 

@@ -100,10 +100,23 @@ pub enum Activation {
 impl Activation {
     /// Apply elementwise in place.
     pub fn apply(&self, m: &mut Matrix) {
+        self.apply_slice(&mut m.data);
+    }
+
+    /// Apply elementwise to a storage slice (the overlap pipeline
+    /// activates the interior and boundary row blocks separately; the op
+    /// is elementwise, so per-element bits cannot depend on the split).
+    pub fn apply_slice(&self, data: &mut [f32]) {
         match self {
-            Activation::Relu => m.relu(),
+            Activation::Relu => {
+                for x in data.iter_mut() {
+                    if *x < 0.0 {
+                        *x = 0.0;
+                    }
+                }
+            }
             Activation::Elu => {
-                for x in m.data.iter_mut() {
+                for x in data.iter_mut() {
                     if *x < 0.0 {
                         *x = x.exp() - 1.0;
                     }
@@ -116,16 +129,24 @@ impl Activation {
     /// g <- g ⊙ act'(pre), given the cached pre-activation.
     pub fn grad_mask(&self, pre: &Matrix, g: &mut Matrix) {
         debug_assert_eq!(pre.shape(), g.shape());
+        self.grad_mask_slice(&pre.data, &mut g.data);
+    }
+
+    /// [`Self::grad_mask`] on aligned storage slices (the overlap
+    /// pipeline masks boundary and interior row blocks separately; the op
+    /// is elementwise, so the split cannot change any bit).
+    pub fn grad_mask_slice(&self, pre: &[f32], g: &mut [f32]) {
+        debug_assert_eq!(pre.len(), g.len());
         match self {
             Activation::Relu => {
-                for (gv, &p) in g.data.iter_mut().zip(&pre.data) {
+                for (gv, &p) in g.iter_mut().zip(pre) {
                     if p <= 0.0 {
                         *gv = 0.0;
                     }
                 }
             }
             Activation::Elu => {
-                for (gv, &p) in g.data.iter_mut().zip(&pre.data) {
+                for (gv, &p) in g.iter_mut().zip(pre) {
                     if p < 0.0 {
                         *gv *= p.exp();
                     }

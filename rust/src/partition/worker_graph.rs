@@ -1,5 +1,14 @@
 //! Per-worker view of a partitioned graph: local subgraph, boundary set,
 //! normalized aggregation blocks, and send plans for halo exchange.
+//!
+//! Local nodes are ordered **interior first**: rows `[0, n_interior)` have
+//! no remote neighbors (their aggregation reads nothing from the halo
+//! buffer), rows `[n_interior, n_local)` do.  The overlap pipeline exploits
+//! the contiguous split — the interior block of every layer is computable
+//! while boundary payloads are still in flight — and
+//! [`SparseBlock::spmm_range_into`] provides the matching per-block CSR
+//! view (apply only the rows of one block, bitwise identical per row to
+//! the full product).
 
 use super::Partition;
 use crate::graph::Csr;
@@ -57,10 +66,25 @@ impl SparseBlock {
 
     /// y += alpha * (self @ x), the native engine's aggregation primitive.
     pub fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
+        self.spmm_range_into(x, out, 0, self.rows);
+    }
+
+    /// Row-block view of the product: `out[r0..r1] += self[r0..r1] @ x`,
+    /// touching only the output rows of the block.  Each row accumulates
+    /// its nnz in CSR order exactly as in the full product, so computing
+    /// `[0, k)` and `[k, rows)` separately is bitwise identical to one
+    /// `spmm_into` call — the contract the overlap pipeline's
+    /// interior/boundary split relies on.
+    pub fn spmm_range_into(&self, x: &Matrix, out: &mut Matrix, r0: usize, r1: usize) {
         assert_eq!(self.cols, x.rows, "spmm {}x{} @ {}x{}", self.rows, self.cols, x.rows, x.cols);
         assert_eq!(out.shape(), (self.rows, x.cols));
+        assert!(r0 <= r1 && r1 <= self.rows, "spmm row block {r0}..{r1} of {}", self.rows);
         let f = x.cols;
-        crate::util::parallel::par_chunks_mut(&mut out.data, f, |r, out_row| {
+        if f == 0 {
+            return;
+        }
+        crate::util::parallel::par_chunks_mut(&mut out.data[r0 * f..r1 * f], f, |i, out_row| {
+            let r = r0 + i;
             let lo = self.indptr[r] as usize;
             let hi = self.indptr[r + 1] as usize;
             for (k, &c) in self.indices[lo..hi].iter().enumerate() {
@@ -134,8 +158,14 @@ impl SparseBlock {
 #[derive(Clone, Debug)]
 pub struct WorkerGraph {
     pub part: usize,
-    /// global ids of local nodes, sorted ascending; local index = position
+    /// global ids of local nodes; local index = position.  Ordered
+    /// **interior first**: `nodes[0..n_interior]` (ascending) have no
+    /// remote neighbors, `nodes[n_interior..]` (ascending) have at least
+    /// one — the contiguous split the overlap pipeline computes around.
     pub nodes: Vec<u32>,
+    /// rows `[0, n_interior)` aggregate from local nodes only; rows
+    /// `[n_interior, n_local)` also read the boundary (halo) buffer
+    pub n_interior: usize,
     /// global ids of remote neighbors, sorted ascending; boundary slot = position
     pub boundary: Vec<u32>,
     /// which part owns each boundary node
@@ -170,15 +200,29 @@ impl WorkerGraph {
     pub fn build_all(g: &Csr, partition: &Partition) -> Result<Vec<WorkerGraph>> {
         anyhow::ensure!(partition.n() == g.n, "partition size mismatch");
         let q = partition.q;
-        let parts = partition.parts();
-        // global -> (part, local index)
+        let assignment = &partition.assignment;
+        // order each part interior-first (interior ascending, then halo
+        // ascending), so every downstream row index is block-contiguous
+        let mut parts: Vec<Vec<u32>> = Vec::with_capacity(q);
+        let mut n_interior = Vec::with_capacity(q);
+        for (part, nodes) in partition.parts().iter().enumerate() {
+            let (interior, halo): (Vec<u32>, Vec<u32>) = nodes.iter().copied().partition(|&u| {
+                g.neighbors(u as usize)
+                    .iter()
+                    .all(|&v| assignment[v as usize] as usize == part)
+            });
+            n_interior.push(interior.len());
+            let mut ordered = interior;
+            ordered.extend(halo);
+            parts.push(ordered);
+        }
+        // global -> (part, local index), in the reordered numbering
         let mut local_of = vec![0u32; g.n];
         for nodes in &parts {
             for (li, &node) in nodes.iter().enumerate() {
                 local_of[node as usize] = li as u32;
             }
         }
-        let assignment = &partition.assignment;
 
         let mut workers = Vec::with_capacity(q);
         for (part, nodes) in parts.iter().enumerate() {
@@ -251,6 +295,7 @@ impl WorkerGraph {
             workers.push(WorkerGraph {
                 part,
                 nodes: nodes.clone(),
+                n_interior: n_interior[part],
                 boundary,
                 boundary_owner,
                 s_ll: ll,
@@ -418,6 +463,45 @@ mod tests {
             }
             for (s, &gid) in w.boundary.iter().enumerate() {
                 assert_eq!(w.deg_bnd[s] as usize, g.degree(gid as usize));
+            }
+        }
+    }
+
+    #[test]
+    fn interior_rows_come_first_and_need_no_halo() {
+        let (g, workers) = setup(64, 4, 8);
+        for w in &workers {
+            assert!(w.n_interior <= w.n_local());
+            for (li, &gid) in w.nodes.iter().enumerate() {
+                let remote = g
+                    .neighbors(gid as usize)
+                    .iter()
+                    .any(|&v| !w.nodes.contains(&v));
+                assert_eq!(li >= w.n_interior, remote, "row {li} of part {}", w.part);
+                // interior rows have empty s_lb rows: no halo reads
+                if li < w.n_interior {
+                    assert_eq!(w.s_lb.indptr[li], w.s_lb.indptr[li + 1]);
+                }
+            }
+            // each block is ascending in global id
+            assert!(w.nodes[..w.n_interior].windows(2).all(|p| p[0] < p[1]));
+            assert!(w.nodes[w.n_interior..].windows(2).all(|p| p[0] < p[1]));
+        }
+    }
+
+    #[test]
+    fn spmm_range_blocks_match_full_product_bitwise() {
+        let (_, workers) = setup(96, 3, 9);
+        for w in &workers {
+            let mut rng = crate::util::Rng::new(w.part as u64);
+            let x = Matrix::from_fn(w.s_ll.cols, 6, |_, _| rng.next_normal());
+            let mut full = Matrix::zeros(w.s_ll.rows, 6);
+            w.s_ll.spmm_into(&x, &mut full);
+            for split in [0, w.n_interior, w.s_ll.rows / 2, w.s_ll.rows] {
+                let mut blocked = Matrix::zeros(w.s_ll.rows, 6);
+                w.s_ll.spmm_range_into(&x, &mut blocked, 0, split);
+                w.s_ll.spmm_range_into(&x, &mut blocked, split, w.s_ll.rows);
+                assert_eq!(full.data, blocked.data, "split at {split}");
             }
         }
     }

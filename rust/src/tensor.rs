@@ -104,6 +104,18 @@ impl Matrix {
     /// contents).  Parallel over `MR`-row bands of the output; per-element
     /// accumulation runs over k in ascending order for any thread count.
     pub fn matmul_into(&self, other: &Matrix, out: &mut Matrix) {
+        self.matmul_range_into(other, out, 0, self.rows);
+    }
+
+    /// Row-block product: `out[r0..r1] = self[r0..r1] @ other`, leaving
+    /// every other output row untouched.  Each output element is a single
+    /// accumulator over k in ascending order regardless of which rows
+    /// share its register tile, so computing `[0, k)` and `[k, rows)`
+    /// separately is bitwise identical to one full call — the overlap
+    /// pipeline's interior/boundary split depends on exactly that.  The
+    /// zero-skip probe samples only the requested rows (the rest of a
+    /// scratch operand may be uninitialized).
+    pub fn matmul_range_into(&self, other: &Matrix, out: &mut Matrix, r0: usize, r1: usize) {
         assert_eq!(self.cols, other.rows, "matmul {}x{} @ {}x{}", self.rows, self.cols, other.rows, other.cols);
         assert_eq!(
             out.shape(),
@@ -113,23 +125,25 @@ impl Matrix {
             self.rows,
             other.cols
         );
+        assert!(r0 <= r1 && r1 <= self.rows, "matmul row block {r0}..{r1} of {}", self.rows);
         let (k, n) = (self.cols, other.cols);
-        if self.rows == 0 || n == 0 {
+        if r0 == r1 || n == 0 {
             return;
         }
         if k == 0 {
-            out.data.fill(0.0);
+            out.data[r0 * n..r1 * n].fill(0.0);
             return;
         }
         let a = &self.data;
         let b = &other.data;
-        if self.mostly_zero() {
+        if mostly_zero(&a[r0 * k..r1 * k]) {
             // dense image of a sparse operator: skipping zero A entries
             // beats register tiling (tiling re-scans k once per column
             // tile, which multiplies the skip cost by n/NR)
-            parallel::par_chunks_mut(&mut out.data, n, |i, out_row| {
+            parallel::par_chunks_mut(&mut out.data[r0 * n..r1 * n], n, |i, out_row| {
                 out_row.fill(0.0);
-                let a_row = &a[i * k..(i + 1) * k];
+                let r = r0 + i;
+                let a_row = &a[r * k..(r + 1) * k];
                 for (kk, &av) in a_row.iter().enumerate() {
                     if av == 0.0 {
                         continue;
@@ -141,8 +155,8 @@ impl Matrix {
                 }
             });
         } else {
-            parallel::par_chunks_mut(&mut out.data, MR * n, |blk, out_blk| {
-                let i0 = blk * MR;
+            parallel::par_chunks_mut(&mut out.data[r0 * n..r1 * n], MR * n, |blk, out_blk| {
+                let i0 = r0 + blk * MR;
                 let mr = out_blk.len() / n;
                 matmul_block(&a[i0 * k..(i0 + mr) * k], b, out_blk, mr, k, n);
             });
@@ -161,6 +175,15 @@ impl Matrix {
     /// `g_pre @ Wᵀ` shape, which previously paid a full `transpose()`
     /// allocation per layer per epoch.
     pub fn matmul_nt_into(&self, other: &Matrix, out: &mut Matrix) {
+        self.matmul_nt_range_into(other, out, 0, self.rows);
+    }
+
+    /// Row-block `A @ Bᵀ`: `out[r0..r1] = self[r0..r1] @ otherᵀ`, leaving
+    /// every other output row untouched.  Each output element is one
+    /// independent row dot, so the split is bitwise the full call — the
+    /// overlap pipeline's backward halo computes only boundary rows this
+    /// way before posting the gradient exchange.
+    pub fn matmul_nt_range_into(&self, other: &Matrix, out: &mut Matrix, r0: usize, r1: usize) {
         assert_eq!(
             self.cols, other.cols,
             "matmul_nt {}x{} @ ({}x{})^T",
@@ -174,12 +197,13 @@ impl Matrix {
             self.rows,
             other.rows
         );
+        assert!(r0 <= r1 && r1 <= self.rows, "matmul_nt row block {r0}..{r1} of {}", self.rows);
         let n = other.rows;
-        if self.rows == 0 || n == 0 {
+        if r0 == r1 || n == 0 {
             return;
         }
-        parallel::par_chunks_mut(&mut out.data, n, |i, out_row| {
-            let a_row = self.row(i);
+        parallel::par_chunks_mut(&mut out.data[r0 * n..r1 * n], n, |i, out_row| {
+            let a_row = self.row(r0 + i);
             for (j, o) in out_row.iter_mut().enumerate() {
                 *o = dot(a_row, other.row(j));
             }
@@ -230,16 +254,7 @@ impl Matrix {
     /// Deterministic stride probe: true when > 7/8 of sampled entries are
     /// zero (dense blocks built by `SparseBlock::to_dense`).
     fn mostly_zero(&self) -> bool {
-        let step = (self.data.len() / 512).max(1);
-        let mut seen = 0usize;
-        let mut nonzero = 0usize;
-        let mut i = 0;
-        while i < self.data.len() {
-            seen += 1;
-            nonzero += (self.data[i] != 0.0) as usize;
-            i += step;
-        }
-        seen > 0 && nonzero * 8 < seen
+        mostly_zero(&self.data)
     }
 
     pub fn transpose(&self) -> Matrix {
@@ -303,6 +318,21 @@ impl Matrix {
             })
             .collect()
     }
+}
+
+/// Deterministic stride probe over a storage block: true when > 7/8 of
+/// sampled entries are zero.
+fn mostly_zero(data: &[f32]) -> bool {
+    let step = (data.len() / 512).max(1);
+    let mut seen = 0usize;
+    let mut nonzero = 0usize;
+    let mut i = 0;
+    while i < data.len() {
+        seen += 1;
+        nonzero += (data[i] != 0.0) as usize;
+        i += step;
+    }
+    seen > 0 && nonzero * 8 < seen
 }
 
 /// out (mr x n) = a (mr x k) @ b (k x n), overwriting out.  `mr <= MR`.
@@ -473,6 +503,45 @@ mod tests {
                 let want: f32 = (0..40).map(|x| a.get(i, x) * b.get(x, j)).sum();
                 assert!((got.get(i, j) - want).abs() < 1e-4, "[{i},{j}]");
             }
+        }
+    }
+
+    #[test]
+    fn matmul_range_blocks_match_full_call_bitwise() {
+        let mut rng = crate::util::Rng::new(11);
+        // dense operand (register-tiled path) and a mostly-zero operand
+        // (zero-skip path): every row's bits must be split-invariant
+        let dense = Matrix::from_fn(13, 17, |_, _| rng.next_normal());
+        let sparse = Matrix::from_fn(
+            40,
+            17,
+            |i, j| if (i + j) % 16 == 0 { rng.next_normal() } else { 0.0 },
+        );
+        for a in [&dense, &sparse] {
+            let b = Matrix::from_fn(17, 9, |_, _| rng.next_normal());
+            let mut full = Matrix::zeros(a.rows, 9);
+            a.matmul_into(&b, &mut full);
+            for split in [0usize, 1, 3, a.rows / 2, a.rows] {
+                let mut blocked = Matrix::from_vec(a.rows, 9, vec![f32::NAN; a.rows * 9]);
+                a.matmul_range_into(&b, &mut blocked, 0, split);
+                a.matmul_range_into(&b, &mut blocked, split, a.rows);
+                assert_eq!(full.data, blocked.data, "split at {split} (rows {})", a.rows);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_nt_range_blocks_match_full_call_bitwise() {
+        let mut rng = crate::util::Rng::new(12);
+        let a = Matrix::from_fn(11, 6, |_, _| rng.next_normal());
+        let b = Matrix::from_fn(7, 6, |_, _| rng.next_normal());
+        let mut full = Matrix::zeros(11, 7);
+        a.matmul_nt_into(&b, &mut full);
+        for split in [0usize, 1, 5, 11] {
+            let mut blocked = Matrix::from_vec(11, 7, vec![f32::NAN; 77]);
+            a.matmul_nt_range_into(&b, &mut blocked, 0, split);
+            a.matmul_nt_range_into(&b, &mut blocked, split, 11);
+            assert_eq!(full.data, blocked.data, "split at {split}");
         }
     }
 

@@ -232,3 +232,116 @@ fn budget_controller_parallel_matches_sequential() {
 fn budget_controller_parallel_matches_sequential_for_gcn() {
     assert_budget_equivalence("gcn");
 }
+
+// ---------------------------------------------------------------------------
+// Overlap pipeline equivalence: the overlapped interior/boundary schedule is
+// a pure reordering of when each phase runs relative to the in-flight
+// exchange — it must reproduce the barrier schedule BITWISE (weights, per-
+// epoch bytes, planned rates, ledger) for every model, comm mode, run mode,
+// and under failure injection.
+// ---------------------------------------------------------------------------
+
+use varco::config::{build_trainer, TrainConfig};
+
+fn build_cfg(model: &str, comm: &str, mode: RunMode, overlap: bool) -> Trainer {
+    let cfg = TrainConfig {
+        dataset: "karate-like".into(),
+        q: 4,
+        hidden: 8,
+        epochs: 8,
+        seed: 7,
+        lr: 0.02,
+        model: model.into(),
+        comm: comm.into(),
+        run_mode: mode.label().into(),
+        overlap,
+        ..Default::default()
+    };
+    build_trainer(&cfg).unwrap()
+}
+
+/// Bitwise run-pair comparison: identical weights, losses, rates, bytes,
+/// and ledger aggregates.
+fn assert_runs_identical(label: &str, ta: &mut Trainer, tb: &mut Trainer) {
+    let ra = ta.run().unwrap();
+    let rb = tb.run().unwrap();
+    assert_eq!(
+        ta.weights.flatten(),
+        tb.weights.flatten(),
+        "{label}: weights must match bit for bit"
+    );
+    for (a, b) in ra.records.iter().zip(&rb.records) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{label} epoch {} loss", a.epoch);
+        assert_eq!(a.rate, b.rate, "{label} epoch {} planned rate", a.epoch);
+        assert_eq!(a.bytes_cum, b.bytes_cum, "{label} epoch {} bytes", a.epoch);
+    }
+    assert_eq!(ta.ledger().total_bytes(), tb.ledger().total_bytes(), "{label}: ledger total");
+    assert_eq!(
+        ta.ledger().breakdown_by_kind(),
+        tb.ledger().breakdown_by_kind(),
+        "{label}: ledger breakdown"
+    );
+    assert_eq!(
+        ta.ledger().cumulative_bytes_by_epoch(),
+        tb.ledger().cumulative_bytes_by_epoch(),
+        "{label}: per-epoch ledger"
+    );
+    assert!(ta.fabric().is_quiescent() && tb.fabric().is_quiescent(), "{label}: quiescence");
+}
+
+#[test]
+fn overlap_matches_barrier_bitwise_across_models_and_comm_modes() {
+    for model in ["sage", "gcn", "gin"] {
+        for comm in ["fixed:4", "budget:120k"] {
+            for mode in [RunMode::Parallel, RunMode::Sequential] {
+                let mut off = build_cfg(model, comm, mode, false);
+                let mut on = build_cfg(model, comm, mode, true);
+                assert_runs_identical(
+                    &format!("{model}/{comm}/{}", mode.label()),
+                    &mut off,
+                    &mut on,
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn overlap_parallel_matches_overlap_sequential() {
+    // the overlapped pipeline itself must also be runtime-invariant
+    let mut seq = build_cfg("sage", "fixed:4", RunMode::Sequential, true);
+    let mut par = build_cfg("sage", "fixed:4", RunMode::Parallel, true);
+    assert_runs_identical("overlap seq-vs-par", &mut seq, &mut par);
+}
+
+#[test]
+fn overlap_matches_barrier_under_failure_injection() {
+    let build = |overlap: bool| {
+        let cfg = TrainConfig {
+            dataset: "karate-like".into(),
+            q: 4,
+            hidden: 8,
+            epochs: 8,
+            seed: 7,
+            lr: 0.02,
+            comm: "fixed:2".into(),
+            drop_prob: 0.3,
+            stale_prob: 0.3,
+            overlap,
+            ..Default::default()
+        };
+        build_trainer(&cfg).unwrap()
+    };
+    let mut off = build(false);
+    let mut on = build(true);
+    assert_runs_identical("failure-injection", &mut off, &mut on);
+    assert!(
+        off.fabric().dropped() > 0 && off.fabric().staled() > 0,
+        "policy should trigger: dropped {} staled {}",
+        off.fabric().dropped(),
+        off.fabric().staled()
+    );
+    assert_eq!(off.fabric().dropped(), on.fabric().dropped(), "drop count");
+    assert_eq!(off.fabric().staled(), on.fabric().staled(), "stale count");
+    assert_eq!(off.fabric().stale_skipped(), on.fabric().stale_skipped(), "stale-skip count");
+}
