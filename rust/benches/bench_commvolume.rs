@@ -1,0 +1,210 @@
+//! Communication-volume bench: bytes/epoch and modeled bottleneck-link
+//! seconds for the halo plan shapes — dense broadcast-union vs
+//! column-sparse send plans vs sparse + 1.5D replication (r=2) — under
+//! each LinkModel preset.  Written to `BENCH_commvolume.json` at the repo
+//! root (CI uploads it as an artifact).
+//!
+//! Two invariants are asserted while measuring, so a regression in either
+//! fails the bench run itself:
+//!
+//!  * sparse plans never out-ship dense, and ship strictly less whenever
+//!    any boundary row has a partial consumer set (the dense union pads
+//!    those rows to every receiver);
+//!  * at comm=full all three variants train to bitwise identical weights
+//!    (plans and replication change routing/accounting, never math).
+
+#[path = "harness.rs"]
+#[allow(dead_code)]
+mod harness;
+
+use varco::comm::{LedgerMode, LinkModel};
+use varco::compress::{CommMode, Scheduler};
+use varco::coordinator::{RunMode, Trainer, TrainerOptions};
+use varco::engine::native::NativeWorkerEngine;
+use varco::engine::WorkerEngine;
+use varco::graph::Dataset;
+use varco::model::{build_spec, ModelDims};
+use varco::partition::{by_name, plan_stats, PlanMode, WorkerGraph};
+use varco::util::Json;
+
+const NODES: usize = 2048;
+const Q: usize = 4;
+const HIDDEN: usize = 64;
+const LAYERS: usize = 3;
+const RATE: f32 = 4.0;
+
+struct Variant {
+    name: &'static str,
+    plan: PlanMode,
+    replication: usize,
+}
+
+const VARIANTS: [Variant; 3] = [
+    Variant { name: "dense", plan: PlanMode::Dense, replication: 1 },
+    Variant { name: "sparse", plan: PlanMode::Sparse, replication: 1 },
+    Variant { name: "sparse+r2", plan: PlanMode::Sparse, replication: 2 },
+];
+
+fn build(ds: &Dataset, comm: CommMode, epochs: usize, v: &Variant) -> Trainer {
+    let part = by_name("random", 0).unwrap().partition(&ds.graph, Q).unwrap();
+    let wgs = WorkerGraph::build_all(&ds.graph, &part).unwrap();
+    let dims = ModelDims { f_in: ds.f_in(), hidden: HIDDEN, classes: ds.classes, layers: LAYERS };
+    let spec = build_spec("sage", &dims).unwrap();
+    let engines: Vec<Box<dyn WorkerEngine>> = wgs
+        .iter()
+        .map(|w| Box::new(NativeWorkerEngine::new(w.clone(), spec.clone())) as Box<dyn WorkerEngine>)
+        .collect();
+    let opts = TrainerOptions {
+        comm_mode: comm,
+        epochs,
+        seed: 0,
+        eval_every: usize::MAX - 1,
+        // halo traffic only: the weight-sync constant is identical across
+        // variants and would dilute the comparison
+        ledger_weights: false,
+        ledger_mode: LedgerMode::Detailed,
+        run_mode: RunMode::Sequential,
+        plan_mode: v.plan,
+        replication: v.replication,
+        ..Default::default()
+    };
+    Trainer::new(ds, &part, &wgs, engines, spec, opts).unwrap()
+}
+
+fn weight_bits(t: &Trainer) -> Vec<u32> {
+    t.weights.flatten().iter().map(|v| v.to_bits()).collect()
+}
+
+fn main() {
+    std::env::set_var("VARCO_THREADS", "1");
+    let epochs = std::env::var("VARCO_BENCH_EPOCHS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2usize);
+
+    let ds = Dataset::load("synth-arxiv", NODES, 0).unwrap();
+    let part = by_name("random", 0).unwrap().partition(&ds.graph, Q).unwrap();
+    let wgs = WorkerGraph::build_all(&ds.graph, &part).unwrap();
+    let presets: [(&str, LinkModel); 3] = [
+        ("ten_gbe", LinkModel::ten_gbe()),
+        ("hundred_gb", LinkModel::hundred_gb()),
+        ("wan", LinkModel::wan()),
+    ];
+
+    // ---- plan shape (per layer identical, so one layer's stats stand in) ----
+    harness::section("send-plan shape (q=4, synth-arxiv)");
+    let mut shape_entries = Vec::new();
+    let mut shipped_rows = std::collections::HashMap::new();
+    for mode in [PlanMode::Dense, PlanMode::Sparse] {
+        let layered = WorkerGraph::layered_plans(&wgs, LAYERS, mode);
+        let s = plan_stats(&layered);
+        println!(
+            "{:<24} {:>6} msgs {:>8} rows shipped {:>8} rows kept",
+            mode.label(),
+            s.messages,
+            s.rows,
+            s.kept_rows
+        );
+        shipped_rows.insert(mode.label(), s.rows);
+        shape_entries.push(Json::obj(vec![
+            ("plan", Json::str(mode.label())),
+            ("messages", Json::num(s.messages as f64)),
+            ("rows_shipped", Json::num(s.rows as f64)),
+            ("rows_kept", Json::num(s.kept_rows as f64)),
+        ]));
+    }
+
+    // ---- bitwise equivalence at full rate ----
+    harness::section("full-rate weight equivalence (1 epoch)");
+    let reference: Option<Vec<u32>> = None;
+    let mut reference = reference;
+    for v in &VARIANTS {
+        let mut t = build(&ds, CommMode::Full, 1, v);
+        t.run().unwrap();
+        let bits = weight_bits(&t);
+        match &reference {
+            None => reference = Some(bits),
+            Some(want) => assert_eq!(
+                want, &bits,
+                "{}: full-rate weights drifted from the dense baseline",
+                v.name
+            ),
+        }
+        println!("{:<24} weights identical", v.name);
+    }
+
+    // ---- bytes/epoch and bottleneck seconds under fixed:4 ----
+    harness::section(&format!("bytes/epoch and bottleneck seconds (comm=fixed:{RATE})"));
+    let mut variant_entries = Vec::new();
+    let mut bytes_by_name = std::collections::HashMap::new();
+    for v in &VARIANTS {
+        let mut t = build(
+            &ds,
+            CommMode::Compressed(Scheduler::Fixed { rate: RATE }),
+            epochs,
+            v,
+        );
+        let report = t.run().unwrap();
+        let ledger = t.ledger();
+        let total = ledger.total_bytes();
+        let per_epoch = total / epochs;
+        bytes_by_name.insert(v.name, per_epoch);
+        let mut preset_json = Vec::new();
+        let mut line = format!("{:<12} {:>12} B/epoch", v.name, per_epoch);
+        for (pname, model) in &presets {
+            let secs = model.bottleneck_seconds(&ledger);
+            line.push_str(&format!("  {pname} {:.3}s", secs));
+            preset_json.push(Json::obj(vec![
+                ("preset", Json::str(*pname)),
+                ("bottleneck_s", Json::num(secs)),
+            ]));
+        }
+        println!("{line}");
+        variant_entries.push(Json::obj(vec![
+            ("name", Json::str(v.name)),
+            ("plan", Json::str(v.plan.label())),
+            ("replication", Json::num(v.replication as f64)),
+            ("bytes_per_epoch", Json::num(per_epoch as f64)),
+            ("bytes_total", Json::num(total as f64)),
+            ("messages", Json::num(ledger.message_count() as f64)),
+            ("epochs", Json::num(report.records.len() as f64)),
+            ("presets", Json::Arr(preset_json)),
+        ]));
+    }
+
+    let dense = bytes_by_name["dense"];
+    let sparse = bytes_by_name["sparse"];
+    assert!(sparse <= dense, "sparse plans out-shipped dense: {sparse} > {dense}");
+    if shipped_rows["dense"] > shipped_rows["sparse"] {
+        assert!(
+            sparse < dense,
+            "partial consumer sets exist but sparse did not strictly reduce: {sparse} == {dense}"
+        );
+    }
+    println!(
+        "\nsparse/dense byte ratio: {:.3} (replicated refresh overhead: {:+} B/epoch)",
+        sparse as f64 / dense as f64,
+        bytes_by_name["sparse+r2"] as i64 - sparse as i64
+    );
+
+    let doc = Json::obj(vec![
+        ("schema", Json::str("varco-commvolume-bench/1")),
+        ("generated_by", Json::str("cargo bench --bench bench_commvolume")),
+        (
+            "config",
+            Json::obj(vec![
+                ("dataset", Json::str("synth-arxiv")),
+                ("nodes", Json::num(NODES as f64)),
+                ("q", Json::num(Q as f64)),
+                ("hidden", Json::num(HIDDEN as f64)),
+                ("layers", Json::num(LAYERS as f64)),
+                ("comm", Json::str(format!("fixed:{RATE}"))),
+                ("epochs", Json::num(epochs as f64)),
+            ]),
+        ),
+        ("plan_shape", Json::Arr(shape_entries)),
+        ("variants", Json::Arr(variant_entries)),
+    ]);
+    std::fs::write("BENCH_commvolume.json", doc.to_string_pretty() + "\n").unwrap();
+    println!("\nwrote BENCH_commvolume.json");
+}

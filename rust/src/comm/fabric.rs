@@ -58,6 +58,12 @@ impl MessageKind {
 pub struct Message {
     pub from: usize,
     pub to: usize,
+    /// replica holder whose outgoing link the ledger charges instead of
+    /// `from` (1.5D boundary replication routes a fetch through its
+    /// cheapest mirror).  `None` = direct, charged to `from`.  Purely an
+    /// accounting override: delivery, ordering, and failure coins always
+    /// use the logical `from`, so routing cannot perturb training.
+    pub via: Option<usize>,
     pub kind: MessageKind,
     pub payload: Payload,
 }
@@ -229,10 +235,14 @@ impl Endpoint {
         let shared = &self.shared;
         assert!(msg.to < shared.q && msg.from < shared.q, "bad endpoint");
         assert!(msg.from == self.rank, "endpoint {} cannot send as {}", self.rank, msg.from);
+        // replica-routed fetches charge the serving mirror's link, not the
+        // owner's; everything else about the message is untouched
+        let charge_from = msg.via.unwrap_or(msg.from);
+        assert!(charge_from < shared.q, "bad via {charge_from}");
         let wire_bytes = msg.payload.wire_bytes();
         shared.shards[self.rank].lock().unwrap().record(
             epoch,
-            msg.from,
+            charge_from,
             msg.to,
             msg.kind.ledger_tag(),
             wire_bytes,
@@ -284,6 +294,19 @@ impl Endpoint {
         wire_bytes
     }
 
+    /// Record a wire cost with no mailbox delivery: the replication
+    /// refresh charge (owner → mirror, keeping the mirror's boundary copy
+    /// current).  Mirrors are simulated — no worker consumes the refresh
+    /// payload — but its bytes are real traffic the run must account, so
+    /// they land in this sender's shard and the global byte total exactly
+    /// like a sent message's.
+    pub fn record_bytes(&self, epoch: usize, to: usize, kind: &'static str, bytes: usize) {
+        let shared = &self.shared;
+        assert!(to < shared.q, "bad endpoint");
+        shared.shards[self.rank].lock().unwrap().record(epoch, self.rank, to, kind, bytes);
+        shared.total_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
     /// Drain all messages waiting for this endpoint, sorted into the
     /// deterministic (sender, kind, layer) order so concurrent senders
     /// cannot perturb downstream float accumulation order.
@@ -326,7 +349,7 @@ mod tests {
     }
 
     fn msg(from: usize, to: usize, kind: MessageKind, vals: &[f32], key: u64) -> Message {
-        Message { from, to, kind, payload: payload(vals, key) }
+        Message { from, to, via: None, kind, payload: payload(vals, key) }
     }
 
     #[test]
@@ -343,6 +366,43 @@ mod tests {
         assert_eq!(f.total_bytes(), expect);
         assert_eq!(f.merged_ledger().total_bytes(), expect);
         assert_eq!(f.total_floats(), expect.div_ceil(4));
+    }
+
+    #[test]
+    fn via_routes_ledger_charge_without_touching_delivery_or_coins() {
+        let f = Fabric::new(3);
+        let mut eps = f.endpoints();
+        let kind = MessageKind::Activation { layer: 0 };
+        let mut direct = msg(0, 1, kind, &[1.0, 2.0], 42);
+        let mut routed = direct.clone();
+        routed.via = Some(2);
+        // failure coin keys on logical endpoints only: routing is invisible
+        assert_eq!(failure_coin(7, &direct), failure_coin(7, &routed));
+        eps[0].send(0, routed);
+        let got = eps[1].recv_all();
+        assert_eq!(got[0].from, 0, "logical sender survives routing");
+        assert_eq!(got[0].payload.values, vec![1.0, 2.0]);
+        // ...but the ledger charges the mirror's link (2 -> 1), not (0 -> 1)
+        let links = f.merged_ledger().breakdown_by_link();
+        let wire = payload(&[1.0, 2.0], 42).wire_bytes();
+        assert_eq!(links[&(2, 1)], super::super::AggCell { bytes: wire, messages: 1 });
+        assert!(!links.contains_key(&(0, 1)));
+        direct.via = None;
+        eps[0].send(0, direct);
+        let links = f.merged_ledger().breakdown_by_link();
+        assert_eq!(links[&(0, 1)].messages, 1);
+    }
+
+    #[test]
+    fn record_bytes_charges_without_delivering() {
+        let f = Fabric::new(2);
+        let eps = f.endpoints();
+        eps[0].record_bytes(3, 1, "replica", 120);
+        assert!(f.is_quiescent(), "refresh charges deliver nothing");
+        assert_eq!(f.total_bytes(), 120);
+        let ledger = f.merged_ledger();
+        assert_eq!(ledger.breakdown_by_link()[&(0, 1)].bytes, 120);
+        assert_eq!(ledger.breakdown_by_kind()["replica"], 120);
     }
 
     #[test]
@@ -377,6 +437,7 @@ mod tests {
                 Message {
                     from: 0,
                     to: 1,
+                    via: None,
                     kind: MessageKind::Activation { layer: 0 },
                     payload: compressed,
                 },

@@ -46,6 +46,20 @@ pub fn residual_scale(old_rate: f32, new_rate: f32) -> f32 {
     }
 }
 
+/// Stable channel id for a halo send-plan channel.  Residual memory must
+/// follow the *plan* — the pruned (layer, sender, receiver) row set —
+/// not the receiver's whole boundary block: two senders filling disjoint
+/// slots of one boundary buffer are independent channels with their own
+/// residuals, and a plan's payload length (its pruned row count × width)
+/// is exactly what `ErrorFeedback` keys its length-change reset on.
+pub fn plan_channel(layer: usize, from: usize, to: usize) -> u64 {
+    (layer as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (from as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F)
+        ^ (to as u64).wrapping_mul(0x1656_67B1_9E37_79F9)
+        ^ 0x9A10
+}
+
 /// Per-channel error-feedback wrapper around the subset compressor.
 pub struct ErrorFeedback {
     /// channel id -> residual memory
@@ -168,6 +182,32 @@ mod tests {
         ef.compress(10, &x, 8.0, 1);
         assert!(ef.residual_norm(10) > 0.0);
         assert_eq!(ef.residual_norm(11), 0.0);
+    }
+
+    #[test]
+    fn plan_channels_are_distinct_and_stable() {
+        let mut seen = std::collections::HashSet::new();
+        for layer in 0..4 {
+            for from in 0..8 {
+                for to in 0..8 {
+                    if from == to {
+                        continue;
+                    }
+                    assert!(
+                        seen.insert(plan_channel(layer, from, to)),
+                        "collision at ({layer}, {from}, {to})"
+                    );
+                }
+            }
+        }
+        assert_eq!(plan_channel(1, 2, 3), plan_channel(1, 2, 3));
+        // direction matters: q->p and p->q are separate residual memories
+        assert_ne!(plan_channel(0, 1, 2), plan_channel(0, 2, 1));
+        // residuals on two plan channels never bleed into each other
+        let mut ef = ErrorFeedback::new();
+        ef.compress(plan_channel(0, 0, 1), &vec![1.0; 64], 8.0, 1);
+        assert!(ef.residual_norm(plan_channel(0, 0, 1)) > 0.0);
+        assert_eq!(ef.residual_norm(plan_channel(0, 1, 0)), 0.0);
     }
 
     #[test]

@@ -26,7 +26,7 @@ pub mod wire;
 pub use controller::{
     BudgetController, ChannelKind, Feedback, LayerFeedback, OpenLoopController, RateController,
 };
-pub use error_feedback::ErrorFeedback;
+pub use error_feedback::{plan_channel, ErrorFeedback};
 pub use scheduler::{CommMode, Scheduler};
 pub use subset::RandomSubsetCompressor;
 

@@ -43,6 +43,15 @@ pub fn varint_len(mut v: u64) -> usize {
     n
 }
 
+/// Analytic wire size of a `Codec::Keyed` payload carrying `m` of `n`
+/// message elements plus `side` side-channel floats, without building the
+/// payload.  Pinned against [`Payload::wire_bytes`] by test; route
+/// planning (1.5D replica scoring) uses it to estimate per-link load
+/// before any payload exists.
+pub fn keyed_wire_bytes(n: usize, m: usize, side: usize) -> usize {
+    4 + 1 + varint_len(n as u64) + 8 + varint_len(side as u64) + 4 * side + varint_len(m as u64) + 4 * m
+}
+
 fn put_varint(buf: &mut Vec<u8>, mut v: u64) {
     while v >= 0x80 {
         buf.push((v as u8 & 0x7F) | 0x80);
@@ -343,6 +352,15 @@ mod tests {
             let mut pos = 0;
             assert_eq!(get_varint(&buf, &mut pos).unwrap(), v);
             assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn analytic_keyed_size_matches_real_payloads() {
+        for (n, side) in [(1usize, 0usize), (7, 0), (300, 3), (70_000, 1)] {
+            let mut p = keyed(n, vec![0.5; n]);
+            p.side = vec![1.0; side];
+            assert_eq!(p.wire_bytes(), keyed_wire_bytes(n, n, side), "n={n} side={side}");
         }
     }
 

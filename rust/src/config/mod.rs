@@ -72,6 +72,14 @@ pub struct TrainConfig {
     /// Compute the interior block while boundary payloads are in flight;
     /// bitwise identical to the barrier schedule (native engine only).
     pub overlap: bool,
+    /// halo send-plan shape: sparse (column-sparse per receiver+layer,
+    /// default) | dense (broadcast-union baseline).  Bitwise identical
+    /// training at full rate; only wire bytes differ.
+    pub plan: String,
+    /// 1.5D boundary replication factor (default 1 = owner-direct):
+    /// mirror each boundary block on r machines and charge every fetch to
+    /// its cheapest replica's link.  Accounting/routing only.
+    pub replication: usize,
 }
 
 impl Default for TrainConfig {
@@ -101,6 +109,8 @@ impl Default for TrainConfig {
             threads: 0,
             ledger: "auto".into(),
             overlap: false,
+            plan: "sparse".into(),
+            replication: 1,
         }
     }
 }
@@ -154,6 +164,16 @@ impl TrainConfig {
                     "off" | "false" | "0" => false,
                     _ => anyhow::bail!("overlap must be on|off, got {value:?}"),
                 }
+            }
+            "plan" => {
+                // validate eagerly so a typo fails at the assignment site
+                crate::partition::PlanMode::parse(value)?;
+                self.plan = value.into();
+            }
+            "replication" | "r" => {
+                let v: usize = value.parse()?;
+                anyhow::ensure!(v >= 1, "replication must be >= 1 (1 = owner-direct)");
+                self.replication = v;
             }
             _ => anyhow::bail!("unknown config key {key:?}"),
         }
@@ -240,7 +260,8 @@ impl TrainConfig {
 
     pub fn describe(&self) -> String {
         format!(
-            "{} q={} part={} comm={} model={} engine={} epochs={} hidden={} lr={} seed={}",
+            "{} q={} part={} comm={} model={} engine={} epochs={} hidden={} lr={} seed={} \
+             plan={} replication={}",
             self.dataset,
             self.q,
             self.partitioner,
@@ -250,7 +271,9 @@ impl TrainConfig {
             self.epochs,
             self.hidden,
             self.lr,
-            self.seed
+            self.seed,
+            self.plan,
+            self.replication
         )
     }
 }
@@ -384,6 +407,8 @@ pub fn build_trainer_with_dataset(cfg: &TrainConfig, dataset: &Dataset) -> Resul
         run_mode: RunMode::parse(&cfg.run_mode)?,
         threads: cfg.threads,
         overlap: cfg.overlap,
+        plan_mode: crate::partition::PlanMode::parse(&cfg.plan)?,
+        replication: cfg.replication,
     };
     let mut trainer = Trainer::new(dataset, &partition, &worker_graphs, engines, spec, opts)?;
     trainer.report.partitioner = cfg.partitioner.clone();
@@ -609,5 +634,36 @@ mod tests {
         let mut cfg = TrainConfig::default_quickstart();
         cfg.engine = "gpu".into();
         assert!(build_trainer(&cfg).is_err());
+    }
+
+    #[test]
+    fn plan_and_replication_keys_parse_and_build() {
+        let mut cfg = TrainConfig::default();
+        assert_eq!(cfg.plan, "sparse");
+        assert_eq!(cfg.replication, 1);
+        cfg.set("plan", "dense").unwrap();
+        assert_eq!(cfg.plan, "dense");
+        assert!(cfg.set("plan", "diagonal").is_err());
+        cfg.set("replication", "2").unwrap();
+        assert_eq!(cfg.replication, 2);
+        cfg.set("r", "3").unwrap();
+        assert_eq!(cfg.replication, 3);
+        assert!(cfg.set("replication", "0").is_err());
+        assert!(cfg.describe().contains("plan=dense"));
+        assert!(cfg.describe().contains("replication=3"));
+        // end to end: a dense-plan replicated run trains and stays quiescent
+        let mut quick = TrainConfig::default_quickstart();
+        quick.epochs = 2;
+        quick.comm = "fixed:4".into();
+        quick.plan = "dense".into();
+        quick.replication = 2;
+        let mut t = build_trainer(&quick).unwrap();
+        let report = t.run().unwrap();
+        assert_eq!(report.records.len(), 2);
+        assert!(t.fabric().is_quiescent());
+        // replication beyond q is rejected by the route assigner
+        quick.replication = 9;
+        let err = build_trainer(&quick).unwrap_err().to_string();
+        assert!(err.contains("replication"), "{err}");
     }
 }

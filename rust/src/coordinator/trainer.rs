@@ -70,16 +70,18 @@
 //! parallel runtime stays bitwise equal to the sequential oracle), and
 //! `observe` closes the loop before the next epoch's plan is drawn.
 
-use crate::comm::{Endpoint, Fabric, FailurePolicy, LedgerMode, Message, MessageKind};
+use crate::comm::{Endpoint, Fabric, FailurePolicy, LedgerMode, LinkModel, Message, MessageKind};
 use crate::compress::{
     ChannelKind, CommMode, Compressor, Feedback, LayerFeedback, OpenLoopController, RateController,
 };
 use crate::coordinator::eval::FullGraphEval;
 use crate::engine::{LayerParams, ModelDims, ModelSpec, Weights, WorkerEngine};
 use crate::graph::Dataset;
-use crate::metrics::{EpochRecord, RunReport};
+use crate::metrics::{EpochRecord, LinkTraffic, RunReport};
 use crate::optim::Optimizer;
-use crate::partition::{Partition, SendPlan, WorkerGraph};
+use crate::partition::{
+    assign_routes, MirrorPlan, Partition, PlanMode, SendPlan, WorkerGraph, DISCARD_SLOT,
+};
 use crate::tensor::Matrix;
 use crate::util::parallel::Gate;
 use crate::util::Workspace;
@@ -145,6 +147,16 @@ pub struct TrainerOptions {
     /// boundary rows on arrival.  Requires every engine to support the
     /// split layer phases; bitwise equal to the barrier schedule.
     pub overlap: bool,
+    /// halo send-plan shape: column-sparse per (sender, receiver, layer)
+    /// (default) or the dense broadcast-union baseline.  Bitwise equal in
+    /// training outcome at full rate; only wire bytes differ.
+    pub plan_mode: PlanMode,
+    /// 1.5D boundary replication factor `r` (1 = owner-direct): each
+    /// boundary block is mirrored on `r` machines and every forward fetch
+    /// is charged to its cheapest replica's link, plus a per-epoch
+    /// owner→mirror refresh charge.  Routing/accounting only — weights
+    /// are bitwise identical for every `r`.
+    pub replication: usize,
 }
 
 impl Default for TrainerOptions {
@@ -164,6 +176,8 @@ impl Default for TrainerOptions {
             controller: None,
             ledger_mode: LedgerMode::Detailed,
             overlap: false,
+            plan_mode: PlanMode::Sparse,
+            replication: 1,
         }
     }
 }
@@ -176,7 +190,11 @@ struct WorkerData {
     m_val: Vec<f32>,
     m_test: Vec<f32>,
     count_train: f32,
-    plans: Vec<SendPlan>,
+    /// send plans per layer (`plans[layer]`), shaped by the plan mode and
+    /// routed by the replication factor
+    plans: Vec<Vec<SendPlan>>,
+    /// replica refresh shipments this worker owes per layer (empty at r=1)
+    mirrors: Vec<Vec<MirrorPlan>>,
     n_boundary: usize,
 }
 
@@ -260,20 +278,21 @@ fn observe_epoch<'a>(
 struct WorkerCtx<'a> {
     rank: usize,
     data: &'a [WorkerData],
-    /// (from, to) -> index into `data[from].plans`, built once in
-    /// `Trainer::new` (replaces the old O(q) scan per received message)
-    plan_idx: &'a HashMap<(usize, usize), usize>,
+    /// (layer, from, to) -> index into `data[from].plans[layer]`, built
+    /// once in `Trainer::new` (replaces the old O(q) scan per received
+    /// message)
+    plan_idx: &'a HashMap<(usize, usize, usize), usize>,
     compressor: &'a dyn Compressor,
     seed: u64,
 }
 
 impl<'a> WorkerCtx<'a> {
-    fn plan(&self, from: usize, to: usize) -> Result<&'a SendPlan> {
+    fn plan(&self, layer: usize, from: usize, to: usize) -> Result<&'a SendPlan> {
         let i = *self
             .plan_idx
-            .get(&(from, to))
-            .ok_or_else(|| anyhow::anyhow!("message without plan {from}->{to}"))?;
-        Ok(&self.data[from].plans[i])
+            .get(&(layer, from, to))
+            .ok_or_else(|| anyhow::anyhow!("message without plan {from}->{to} at layer {layer}"))?;
+        Ok(&self.data[from].plans[layer][i])
     }
 
     /// Compress + send this worker's boundary rows of `h` for `layer`.
@@ -296,7 +315,7 @@ impl<'a> WorkerCtx<'a> {
         let q = self.rank;
         let mut stats = LayerFeedback::default();
         let mut payload = ws.take_empty();
-        for plan in &self.data[q].plans {
+        for plan in &self.data[q].plans[layer] {
             payload.clear();
             payload.reserve(plan.local_rows.len() * f);
             for &row in &plan.local_rows {
@@ -314,12 +333,32 @@ impl<'a> WorkerCtx<'a> {
                 Message {
                     from: q,
                     to: plan.to,
+                    via: (plan.via != q).then_some(plan.via),
                     kind: MessageKind::Activation { layer },
                     payload: compressed,
                 },
             );
             if track {
                 stats.bytes += sent;
+            }
+        }
+        // 1.5D replica refresh: once per epoch, the owner ships each
+        // mirror's union row block so the holder can serve this layer's
+        // rerouted fetches.  Pure wire accounting (`record_bytes`, no
+        // mailbox) — the mirror's content is by construction identical to
+        // what the owner would send, so training math never sees it.
+        for mirror in &self.data[q].mirrors[layer] {
+            payload.clear();
+            payload.reserve(mirror.rows.len() * f);
+            for &row in &mirror.rows {
+                payload.extend_from_slice(h.row(row as usize));
+            }
+            let key = msg_key(self.seed, epoch, layer, q, mirror.via) ^ 0xBEEF_CAFE;
+            let compressed = self.compressor.compress(&payload, rate, key);
+            let bytes = compressed.wire_bytes();
+            ep.record_bytes(epoch, mirror.via, "replica", bytes);
+            if track {
+                stats.bytes += bytes;
             }
         }
         ws.put(payload);
@@ -330,16 +369,25 @@ impl<'a> WorkerCtx<'a> {
     /// boundary buffer (zeros where not communicated).  Both the boundary
     /// matrix and the per-message decode buffer are workspace-backed; the
     /// caller returns the matrix with `ws.put_matrix` once consumed.
-    fn recv_forward(&self, msgs: Vec<Message>, ws: &mut Workspace, f: usize) -> Result<Matrix> {
+    fn recv_forward(
+        &self,
+        msgs: Vec<Message>,
+        ws: &mut Workspace,
+        layer: usize,
+        f: usize,
+    ) -> Result<Matrix> {
         let p = self.rank;
         let mut out = ws.take_matrix_zeroed(self.data[p].n_boundary, f);
         let mut flat = ws.take_empty();
         for msg in msgs {
-            let plan = self.plan(msg.from, p)?;
+            let plan = self.plan(layer, msg.from, p)?;
             flat.clear();
             flat.resize(msg.payload.n, 0.0);
             self.compressor.decompress(&msg.payload, &mut flat);
             for (i, &slot) in plan.dst_slots.iter().enumerate() {
+                if slot == DISCARD_SLOT {
+                    continue; // dense-plan padding this receiver never reads
+                }
                 out.row_mut(slot as usize).copy_from_slice(&flat[i * f..(i + 1) * f]);
             }
         }
@@ -369,14 +417,21 @@ impl<'a> WorkerCtx<'a> {
             if q == p {
                 continue;
             }
-            let Some(&i) = self.plan_idx.get(&(q, p)) else {
+            let Some(&i) = self.plan_idx.get(&(layer, q, p)) else {
                 continue;
             };
-            let plan = &self.data[q].plans[i];
+            let plan = &self.data[q].plans[layer][i];
             payload.clear();
             payload.reserve(plan.dst_slots.len() * f);
             for &slot in &plan.dst_slots {
-                payload.extend_from_slice(g_bnd.row(slot as usize));
+                if slot == DISCARD_SLOT {
+                    // dense-plan padding: hold the forward element order
+                    // (the shared compression mask is positional) with
+                    // rows this receiver never consumed — exact zeros.
+                    payload.extend(std::iter::repeat(0.0).take(f));
+                } else {
+                    payload.extend_from_slice(g_bnd.row(slot as usize));
+                }
             }
             let key = msg_key(self.seed, epoch, layer, q, p);
             let compressed = self.compressor.compress(&payload, rate, key);
@@ -390,6 +445,7 @@ impl<'a> WorkerCtx<'a> {
                 Message {
                     from: p,
                     to: q,
+                    via: None, // gradients return owner-direct
                     kind: MessageKind::Gradient { layer },
                     payload: compressed,
                 },
@@ -407,17 +463,26 @@ impl<'a> WorkerCtx<'a> {
         &self,
         msgs: Vec<Message>,
         ws: &mut Workspace,
+        layer: usize,
         g_local: &mut Matrix,
         f: usize,
     ) -> Result<()> {
         let q = self.rank;
         let mut flat = ws.take_empty();
         for msg in msgs {
-            let plan = self.plan(q, msg.from)?;
+            let plan = self.plan(layer, q, msg.from)?;
             flat.clear();
             flat.resize(msg.payload.n, 0.0);
             self.compressor.decompress(&msg.payload, &mut flat);
-            for (i, &row) in plan.local_rows.iter().enumerate() {
+            // discard slots are SKIPPED, not accumulated: adding their
+            // +0.0 padding could flip a stored -0.0 and break the bitwise
+            // dense==sparse equivalence the plan modes guarantee
+            for ((i, &row), &slot) in
+                plan.local_rows.iter().enumerate().zip(&plan.dst_slots)
+            {
+                if slot == DISCARD_SLOT {
+                    continue;
+                }
                 let dst = g_local.row_mut(row as usize);
                 for (d, &v) in dst.iter_mut().zip(&flat[i * f..(i + 1) * f]) {
                     *d += v;
@@ -521,7 +586,7 @@ fn worker_epoch(
                 if err.is_none() {
                     let h_ref: &Matrix = h.as_ref().unwrap_or(&d.x);
                     match compute(gate, intra, || {
-                        let hb = ctx.recv_forward(msgs, ws, fi)?;
+                        let hb = ctx.recv_forward(msgs, ws, l, fi)?;
                         let next = engine.forward_boundary(l, weights, h_ref, &hb, local_norm)?;
                         Ok((next, hb))
                     }) {
@@ -553,7 +618,7 @@ fn worker_epoch(
             xchg.wait();
             let msgs = endpoint.recv_all(); // always drain: keeps quiescence
             let hb = if err.is_none() {
-                match compute(gate, intra, || ctx.recv_forward(msgs, ws, fi)) {
+                match compute(gate, intra, || ctx.recv_forward(msgs, ws, l, fi)) {
                     Ok(m) => m,
                     Err(e) => {
                         err = Some(e);
@@ -631,7 +696,7 @@ fn worker_epoch(
                 let msgs = endpoint.try_recv_kind(MessageKind::Gradient { layer: l });
                 if err.is_none() {
                     if let Err(e) =
-                        compute(gate, intra, || ctx.recv_backward(msgs, ws, &mut g, fi))
+                        compute(gate, intra, || ctx.recv_backward(msgs, ws, l, &mut g, fi))
                     {
                         err = Some(e);
                     }
@@ -665,7 +730,7 @@ fn worker_epoch(
             let msgs = endpoint.recv_all();
             if err.is_none() {
                 if let Err(e) =
-                    compute(gate, intra, || ctx.recv_backward(msgs, ws, &mut g, fi))
+                    compute(gate, intra, || ctx.recv_backward(msgs, ws, l, &mut g, fi))
                 {
                     err = Some(e);
                 }
@@ -747,7 +812,7 @@ pub struct Trainer {
     fabric: Fabric,
     eval: FullGraphEval,
     total_train: f32,
-    plan_idx: HashMap<(usize, usize), usize>,
+    plan_idx: HashMap<(usize, usize, usize), usize>,
     pub grad_norm_trace: Vec<f32>,
     pub report: RunReport,
 }
@@ -770,6 +835,25 @@ impl Trainer {
         if let CommMode::Compressed(sched) = &opts.comm_mode {
             sched.validate()?;
         }
+        // pjrt is demoted to the proven subset: everything the AOT shape
+        // cache was never taught (non-sage models, the overlap pipeline,
+        // column-sparse plans, replication) is rejected up front with one
+        // actionable error instead of failing deep inside a run.
+        if engines.iter().any(|e| e.name() == "pjrt") {
+            anyhow::ensure!(
+                spec.name == "sage"
+                    && !opts.overlap
+                    && opts.plan_mode == PlanMode::Dense
+                    && opts.replication == 1,
+                "the pjrt engine supports only the sage model with overlap=off, plan=dense, \
+                 replication=1 (got model={}, overlap={}, plan={}, replication={}); \
+                 use engine=native for the full feature set",
+                spec.name,
+                opts.overlap,
+                opts.plan_mode.label(),
+                opts.replication
+            );
+        }
         if opts.overlap {
             for e in &engines {
                 anyhow::ensure!(
@@ -780,8 +864,19 @@ impl Trainer {
             }
         }
         let (m_train, m_val, m_test) = dataset.split.as_f32();
+        // shape the per-layer send plans (sparse = tailored rows per
+        // receiver; dense = broadcast union) and, for replication > 1,
+        // reroute each fetch to its cheapest replica holder
+        let layer_dims = spec.layer_dims();
+        let mut layered =
+            WorkerGraph::layered_plans(worker_graphs, layer_dims.len(), opts.plan_mode);
+        let layer_widths: Vec<usize> = layer_dims.iter().map(|&(fi, _)| fi).collect();
+        let mirrors =
+            assign_routes(&mut layered, opts.replication, &layer_widths, &LinkModel::ten_gbe())?;
         let mut data = Vec::with_capacity(partition.q);
-        for wg in worker_graphs {
+        for (wg, (wplans, wmirrors)) in
+            worker_graphs.iter().zip(layered.into_iter().zip(mirrors))
+        {
             let nl = wg.n_local();
             let mut x = Matrix::zeros(nl, dataset.f_in());
             let mut labels = Vec::with_capacity(nl);
@@ -801,18 +896,21 @@ impl Trainer {
                 m_val: va,
                 m_test: te,
                 count_train,
-                plans: wg.send_plans.clone(),
+                plans: wplans,
+                mirrors: wmirrors,
                 n_boundary: wg.n_boundary(),
             });
         }
         let mut plan_idx = HashMap::new();
         for (from, d) in data.iter().enumerate() {
-            for (i, plan) in d.plans.iter().enumerate() {
-                anyhow::ensure!(
-                    plan_idx.insert((from, plan.to), i).is_none(),
-                    "duplicate send plan {from}->{}",
-                    plan.to
-                );
+            for (layer, plans) in d.plans.iter().enumerate() {
+                for (i, plan) in plans.iter().enumerate() {
+                    anyhow::ensure!(
+                        plan_idx.insert((layer, from, plan.to), i).is_none(),
+                        "duplicate send plan {from}->{} at layer {layer}",
+                        plan.to
+                    );
+                }
             }
         }
         let total_train: f32 = data.iter().map(|d| d.count_train).sum();
@@ -834,6 +932,8 @@ impl Trainer {
             engine: engines.first().map(|e| e.name().to_string()).unwrap_or_default(),
             model: spec.name.clone(),
             records: Vec::new(),
+            stale_skipped: 0,
+            link_bytes: Vec::new(),
         };
         let workspaces = (0..partition.q).map(|_| Workspace::new()).collect();
         Ok(Trainer {
@@ -965,7 +1065,7 @@ impl Trainer {
             ..
         } = self;
         let data: &[WorkerData] = data;
-        let plan_idx: &HashMap<(usize, usize), usize> = plan_idx;
+        let plan_idx: &HashMap<(usize, usize, usize), usize> = plan_idx;
         let q = engines.len();
         let layer_dims = spec.layer_dims();
         let plan = plan_epoch(controller.as_ref(), epoch, layer_dims.len());
@@ -1008,7 +1108,7 @@ impl Trainer {
                     for p in 0..q {
                         let msgs =
                             endpoints[p].try_recv_kind(MessageKind::Activation { layer: l });
-                        let hb = ctx(p).recv_forward(msgs, &mut workspaces[p], fi)?;
+                        let hb = ctx(p).recv_forward(msgs, &mut workspaces[p], l, fi)?;
                         let h_ref: &Matrix = h[p].as_ref().unwrap_or(&data[p].x);
                         let next = engines[p].forward_boundary(l, weights, h_ref, &hb, local_norm)?;
                         if let Some(prev) = h[p].replace(next) {
@@ -1039,7 +1139,7 @@ impl Trainer {
                     let mut out = Vec::with_capacity(q);
                     for p in 0..q {
                         let msgs = endpoints[p].recv_all();
-                        out.push(ctx(p).recv_forward(msgs, &mut workspaces[p], fi)?);
+                        out.push(ctx(p).recv_forward(msgs, &mut workspaces[p], l, fi)?);
                     }
                     out
                 }
@@ -1104,7 +1204,7 @@ impl Trainer {
                     for i in 0..q {
                         let msgs =
                             endpoints[i].try_recv_kind(MessageKind::Gradient { layer: l });
-                        ctx(i).recv_backward(msgs, &mut workspaces[i], &mut g[i], fi)?;
+                        ctx(i).recv_backward(msgs, &mut workspaces[i], l, &mut g[i], fi)?;
                     }
                     continue;
                 }
@@ -1134,7 +1234,7 @@ impl Trainer {
                 }
                 for i in 0..q {
                     let msgs = endpoints[i].recv_all();
-                    ctx(i).recv_backward(msgs, &mut workspaces[i], &mut g[i], fi)?;
+                    ctx(i).recv_backward(msgs, &mut workspaces[i], l, &mut g[i], fi)?;
                 }
             }
             for (i, gb) in g_bnds.into_iter().enumerate() {
@@ -1179,15 +1279,31 @@ impl Trainer {
         Ok((mean_loss, grad_acc))
     }
 
-    /// Full training run with per-epoch evaluation; returns the report.
+    /// Full training run with per-epoch evaluation; returns the report,
+    /// decorated with the fabric's communication footprint (per-link byte
+    /// breakdown in Detailed ledger mode, stale-skip count).
     pub fn run(&mut self) -> Result<RunReport> {
         match self.opts.run_mode {
-            RunMode::Sequential => self.run_sequential(),
-            RunMode::Parallel => self.run_parallel(),
+            RunMode::Sequential => self.run_sequential()?,
+            RunMode::Parallel => self.run_parallel()?,
         }
+        self.report.stale_skipped = self.fabric.stale_skipped();
+        self.report.link_bytes = self
+            .fabric
+            .merged_ledger()
+            .breakdown_by_link()
+            .into_iter()
+            .map(|((from, to), cell)| LinkTraffic {
+                from,
+                to,
+                bytes: cell.bytes,
+                messages: cell.messages,
+            })
+            .collect();
+        Ok(self.report.clone())
     }
 
-    fn run_sequential(&mut self) -> Result<RunReport> {
+    fn run_sequential(&mut self) -> Result<()> {
         for epoch in 0..self.opts.epochs {
             // captured before train_epoch: a closed-loop controller has
             // already advanced its plan by the time the epoch returns
@@ -1208,17 +1324,17 @@ impl Trainer {
                 wall_ms,
             )?;
         }
-        Ok(self.report.clone())
+        Ok(())
     }
 
     /// The fork/join epoch program: q persistent worker threads plus this
     /// coordinator thread.  Workers meet at `xchg` (workers only) inside
     /// an epoch and at `sync` (workers + coordinator) on epoch edges.
-    fn run_parallel(&mut self) -> Result<RunReport> {
+    fn run_parallel(&mut self) -> Result<()> {
         let q = self.q();
         let epochs = self.opts.epochs;
         if q == 0 || epochs == 0 {
-            return Ok(self.report.clone());
+            return Ok(());
         }
         let Trainer {
             engines,
@@ -1237,7 +1353,7 @@ impl Trainer {
             report,
         } = self;
         let data: &[WorkerData] = data;
-        let plan_idx: &HashMap<(usize, usize), usize> = plan_idx;
+        let plan_idx: &HashMap<(usize, usize, usize), usize> = plan_idx;
         let compressor: &dyn Compressor = opts.compressor.as_ref();
         let seed = opts.seed;
         let total_train = *total_train;
@@ -1431,7 +1547,7 @@ impl Trainer {
 
         *weights = weights_lock.into_inner().unwrap_or_else(|p| p.into_inner());
         run_result?;
-        Ok(report.clone())
+        Ok(())
     }
 }
 
@@ -1620,5 +1736,90 @@ mod tests {
         assert_eq!(RunMode::parse("sequential").unwrap(), RunMode::Sequential);
         assert_eq!(RunMode::parse("seq").unwrap(), RunMode::Sequential);
         assert!(RunMode::parse("turbo").is_err());
+    }
+
+    fn build_planned(q: usize, seed: u64, epochs: usize, plan: PlanMode, r: usize) -> Trainer {
+        let ds = Dataset::load("karate-like", 0, seed).unwrap();
+        let dims = ModelDims { f_in: ds.f_in(), hidden: 8, classes: ds.classes, layers: 3 };
+        let part = RandomPartitioner { seed }.partition(&ds.graph, q).unwrap();
+        let wgs = WorkerGraph::build_all(&ds.graph, &part).unwrap();
+        let engines: Vec<Box<dyn WorkerEngine>> = wgs
+            .iter()
+            .map(|w| Box::new(NativeWorkerEngine::new(w.clone(), dims)) as Box<dyn WorkerEngine>)
+            .collect();
+        let opts = TrainerOptions {
+            epochs,
+            seed,
+            optimizer: Box::new(crate::optim::Adam::new(0.02)),
+            plan_mode: plan,
+            replication: r,
+            ..Default::default()
+        };
+        Trainer::new(&ds, &part, &wgs, engines, dims, opts).unwrap()
+    }
+
+    fn weight_bits(t: &Trainer) -> Vec<u32> {
+        t.weights.flatten().iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn dense_plans_train_bitwise_like_sparse_at_full_rate() {
+        let mut sparse = build_planned(4, 11, 4, PlanMode::Sparse, 1);
+        let mut dense = build_planned(4, 11, 4, PlanMode::Dense, 1);
+        let rs = sparse.run().unwrap();
+        let rd = dense.run().unwrap();
+        assert_eq!(weight_bits(&sparse), weight_bits(&dense));
+        // same exchange schedule: one message per (plan, direction, layer)
+        assert_eq!(sparse.ledger().message_count(), dense.ledger().message_count());
+        // the broadcast union never under-ships the tailored plan
+        assert!(rd.total_bytes() >= rs.total_bytes(), "{} < {}", rd.total_bytes(), rs.total_bytes());
+        assert!(sparse.fabric().is_quiescent() && dense.fabric().is_quiescent());
+    }
+
+    #[test]
+    fn replication_reroutes_accounting_but_not_training() {
+        let mut direct = build_planned(4, 12, 3, PlanMode::Sparse, 1);
+        let mut routed = build_planned(4, 12, 3, PlanMode::Sparse, 2);
+        let r1 = direct.run().unwrap();
+        let r2 = routed.run().unwrap();
+        // 1.5D replication is routing/accounting only: weights identical
+        assert_eq!(weight_bits(&direct), weight_bits(&routed));
+        // the refresh shipments only ever add wire bytes
+        assert!(r2.total_bytes() >= r1.total_bytes());
+        assert!(routed.ledger().breakdown_by_kind().contains_key("replica"));
+        assert!(!direct.ledger().breakdown_by_kind().contains_key("replica"));
+        assert!(routed.fabric().is_quiescent());
+    }
+
+    #[test]
+    fn report_surfaces_link_traffic_and_stale_skips() {
+        let (mut t, _) = build(CommMode::Full, 2, 13, 3);
+        let report = t.run().unwrap();
+        assert_eq!(report.stale_skipped, 0);
+        assert!(!report.link_bytes.is_empty());
+        let sum: usize = report.link_bytes.iter().map(|lt| lt.bytes).sum();
+        assert_eq!(sum, t.ledger().total_bytes(), "per-link cells must tile the total");
+        for lt in &report.link_bytes {
+            assert!(lt.from < 2 && lt.to < 2 && lt.messages > 0);
+        }
+    }
+
+    #[test]
+    fn trainer_rejects_replication_out_of_range() {
+        let ds = Dataset::load("karate-like", 0, 1).unwrap();
+        let dims = ModelDims { f_in: ds.f_in(), hidden: 8, classes: ds.classes, layers: 3 };
+        let part = RandomPartitioner { seed: 1 }.partition(&ds.graph, 2).unwrap();
+        let wgs = WorkerGraph::build_all(&ds.graph, &part).unwrap();
+        for r in [0usize, 3] {
+            let engines: Vec<Box<dyn WorkerEngine>> = wgs
+                .iter()
+                .map(|w| {
+                    Box::new(NativeWorkerEngine::new(w.clone(), dims)) as Box<dyn WorkerEngine>
+                })
+                .collect();
+            let opts = TrainerOptions { replication: r, ..Default::default() };
+            let err = Trainer::new(&ds, &part, &wgs, engines, dims, opts).unwrap_err();
+            assert!(err.to_string().contains("replication"), "{err}");
+        }
     }
 }

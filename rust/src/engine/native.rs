@@ -545,7 +545,9 @@ impl WorkerEngine for NativeWorkerEngine {
         if !local_norm {
             anyhow::ensure!(
                 h_bnd.shape() == (wg.n_boundary(), fi),
-                "h_bnd shape {:?} != ({}, {fi})",
+                "h_bnd shape {:?} != ({}, {fi}): the boundary view must span the full \
+                 boundary block (send plans scatter into it by dst_slot; rows no plan \
+                 covers stay zero), not just the rows this epoch received",
                 h_bnd.shape(),
                 wg.n_boundary()
             );

@@ -56,14 +56,19 @@ fn print_help() {
          TRAIN KEYS (file and CLI share names):\n\
          \x20 dataset nodes q partitioner comm compressor model engine\n\
          \x20 artifact_tag artifacts_dir epochs hidden layers optimizer lr\n\
-         \x20 seed eval_every drop_prob stale_prob overlap\n\
+         \x20 seed eval_every drop_prob stale_prob overlap plan replication\n\
          \n\
          comm spec:  full | none | fixed:R | linear:A | exp | step:E:F\n\
          \x20           | budget:BYTES[:CMAX]\n\
          model:      sage | gcn | gin   (GNN registry; native engine runs\n\
          \x20           all of them, pjrt artifacts are sage-only)\n\
          overlap:    on | off (default) — pipeline interior compute with\n\
-         \x20           in-flight boundary payloads; bitwise equal results"
+         \x20           in-flight boundary payloads; bitwise equal results\n\
+         plan:       sparse (default) | dense — column-sparse halo send\n\
+         \x20           plans vs the broadcast-union baseline; same weights\n\
+         \x20           bit for bit at full rate, fewer bytes on the wire\n\
+         replication: R >= 1 (default 1) — mirror boundary blocks on R\n\
+         \x20           machines, charge each fetch to its cheapest replica"
     );
 }
 
@@ -119,6 +124,19 @@ fn cmd_train(args: &[String]) -> Result<()> {
         report.total_floats(),
         total_s
     );
+    if report.stale_skipped > 0 {
+        println!("stale messages skipped: {}", report.stale_skipped);
+    }
+    if !report.link_bytes.is_empty() {
+        let mut links = report.link_bytes.clone();
+        links.sort_by(|a, b| b.bytes.cmp(&a.bytes).then((a.from, a.to).cmp(&(b.from, b.to))));
+        let shown: Vec<String> = links
+            .iter()
+            .take(3)
+            .map(|l| format!("{}->{}: {} B / {} msgs", l.from, l.to, l.bytes, l.messages))
+            .collect();
+        println!("busiest links: {}", shown.join(", "));
+    }
     if let Some(path) = out_json {
         report.write_json(Path::new(&path))?;
         eprintln!("[varco] wrote {path}");

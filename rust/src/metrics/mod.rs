@@ -22,6 +22,18 @@ pub struct EpochRecord {
     pub wall_ms: f64,
 }
 
+/// One directed link's aggregate traffic over a whole run (the fabric
+/// ledger's `breakdown_by_link` cell, surfaced in the run report so link
+/// hot spots — and replication's rerouting of them — are visible without
+/// re-running with ledger instrumentation).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkTraffic {
+    pub from: usize,
+    pub to: usize,
+    pub bytes: usize,
+    pub messages: usize,
+}
+
 /// A full training run's record.
 #[derive(Clone, Debug, Default)]
 pub struct RunReport {
@@ -35,6 +47,11 @@ pub struct RunReport {
     /// "sage" in reports written before the model registry)
     pub model: String,
     pub records: Vec<EpochRecord>,
+    /// stale-injected messages the fabric silently skipped
+    pub stale_skipped: usize,
+    /// per-link byte/message totals (empty when the run used the
+    /// aggregated ledger, which keeps no per-link cells)
+    pub link_bytes: Vec<LinkTraffic>,
 }
 
 impl RunReport {
@@ -96,6 +113,23 @@ impl RunReport {
             ("seed", Json::num(self.seed as f64)),
             ("engine", Json::str(self.engine.clone())),
             ("model", Json::str(self.model.clone())),
+            ("stale_skipped", Json::num(self.stale_skipped as f64)),
+            (
+                "link_bytes",
+                Json::Arr(
+                    self.link_bytes
+                        .iter()
+                        .map(|l| {
+                            Json::obj(vec![
+                                ("from", Json::num(l.from as f64)),
+                                ("to", Json::num(l.to as f64)),
+                                ("bytes", Json::num(l.bytes as f64)),
+                                ("messages", Json::num(l.messages as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             (
                 "records",
                 Json::Arr(
@@ -138,6 +172,24 @@ impl RunReport {
                 .unwrap_or("sage")
                 .to_string(),
             records: Vec::new(),
+            // reports written before the halo/replication PR carry neither
+            stale_skipped: j.get("stale_skipped").and_then(|v| v.as_usize()).unwrap_or(0),
+            link_bytes: j
+                .get("link_bytes")
+                .and_then(|v| v.as_arr())
+                .map(|arr| {
+                    arr.iter()
+                        .filter_map(|l| {
+                            Some(LinkTraffic {
+                                from: l.get("from")?.as_usize()?,
+                                to: l.get("to")?.as_usize()?,
+                                bytes: l.get("bytes")?.as_usize()?,
+                                messages: l.get("messages")?.as_usize()?,
+                            })
+                        })
+                        .collect()
+                })
+                .unwrap_or_default(),
         };
         for r in j.require("records")?.as_arr().unwrap_or(&[]) {
             report.records.push(EpochRecord {
@@ -228,6 +280,9 @@ mod tests {
     fn csv_and_json_roundtrip() {
         let mut r = RunReport { algorithm: "varco".into(), q: 4, ..Default::default() };
         r.records = vec![rec(0, 0.1, 0.2, 10)];
+        r.stale_skipped = 3;
+        r.link_bytes =
+            vec![LinkTraffic { from: 0, to: 1, bytes: 40, messages: 2 }];
         let dir = crate::util::testing::TempDir::new().unwrap();
         let csv = dir.path().join("run.csv");
         let json = dir.path().join("run.json");
@@ -239,6 +294,20 @@ mod tests {
         let back = RunReport::read_json(&json).unwrap();
         assert_eq!(back.q, 4);
         assert_eq!(back.records, r.records);
+        assert_eq!(back.stale_skipped, 3);
+        assert_eq!(back.link_bytes, r.link_bytes);
+    }
+
+    #[test]
+    fn legacy_json_without_link_traffic_defaults_empty() {
+        let j = Json::parse(
+            r#"{"algorithm":"full-comm","dataset":"d","partitioner":"p","q":2,
+                "seed":0,"engine":"native","records":[]}"#,
+        )
+        .unwrap();
+        let r = RunReport::from_json(&j).unwrap();
+        assert_eq!(r.stale_skipped, 0);
+        assert!(r.link_bytes.is_empty());
     }
 
     #[test]

@@ -13,11 +13,13 @@
 pub mod hash;
 pub mod metis_like;
 pub mod random;
+pub mod replication;
 pub mod stats;
 pub mod worker_graph;
 
+pub use replication::{assign_routes, replica_holders, MirrorPlan};
 pub use stats::PartitionStats;
-pub use worker_graph::{SendPlan, WorkerGraph};
+pub use worker_graph::{plan_stats, PlanMode, PlanStats, SendPlan, WorkerGraph, DISCARD_SLOT};
 
 use crate::graph::Csr;
 use crate::Result;

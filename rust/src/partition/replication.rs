@@ -1,0 +1,219 @@
+//! 1.5D boundary replication (CAGNET, arXiv 2005.03300): each worker's
+//! outgoing boundary block is mirrored on `r` machines, and every
+//! consumer fetches it from its **cheapest replica** instead of always
+//! hammering the owner's uplink.
+//!
+//! Replication here is a *routing and accounting* transform: the owner
+//! still computes and sends every payload with unchanged content and
+//! message keys, so training results are bitwise identical for every
+//! `r` — only which link the ledger charges changes ([`SendPlan::via`]),
+//! plus a once-per-(owner, mirror, layer, epoch) refresh charge that
+//! models keeping the mirror's copy current.  That makes `r` safe to
+//! sweep for communication-volume studies without re-validating the
+//! learning curves.
+//!
+//! Routing is a deterministic greedy pass over the α–β link cost that
+//! [`LinkModel::bottleneck_seconds`] maximizes over: consumers are
+//! visited in (owner, receiver) rank order, and each fetch picks the
+//! replica holder whose outgoing link to the consumer is cheapest after
+//! adding the fetch (ties break to the lowest holder id).  A consumer
+//! never routes a fetch through itself, so every shipment crosses a real
+//! link and per-link ledgers stay meaningful.
+
+use super::worker_graph::SendPlan;
+use crate::comm::LinkModel;
+use crate::compress::wire::keyed_wire_bytes;
+use crate::Result;
+use std::collections::{BTreeMap, HashMap};
+
+/// One refresh shipment owner → mirror: the union of local rows the
+/// mirror re-serves for one layer.  Charged once per epoch per layer at
+/// the epoch's compression rate.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MirrorPlan {
+    pub via: usize,
+    /// sorted unique local rows (owner indexing) the mirror holds
+    pub rows: Vec<u32>,
+}
+
+/// Parts holding a replica of `owner`'s boundary block at factor `r`:
+/// the owner itself plus the next `r - 1` parts cyclically.
+pub fn replica_holders(owner: usize, q: usize, r: usize) -> Vec<usize> {
+    (0..r.min(q)).map(|k| (owner + k) % q).collect()
+}
+
+/// Route every forward fetch in `layered` (`[owner][layer][plan]`)
+/// through the cheapest replica under `link`, mutating each plan's
+/// `via`.  `f_per_layer[l]` is layer `l`'s payload feature width, used
+/// for the analytic per-link load estimate (uncompressed keyed wire
+/// bytes — routing must not depend on the epoch-varying rate).
+///
+/// Returns `mirrors[owner][layer]`: the refresh shipments implied by the
+/// chosen routes (empty everywhere when `r == 1`, which leaves all plans
+/// owner-direct at zero cost).
+pub fn assign_routes(
+    layered: &mut [Vec<Vec<SendPlan>>],
+    r: usize,
+    f_per_layer: &[usize],
+    link: &LinkModel,
+) -> Result<Vec<Vec<Vec<MirrorPlan>>>> {
+    let q = layered.len();
+    anyhow::ensure!(q >= 1, "no workers");
+    anyhow::ensure!(r >= 1 && r <= q, "replication {r} out of range 1..={q}");
+    let layers = f_per_layer.len();
+    for (owner, per_layer) in layered.iter().enumerate() {
+        anyhow::ensure!(
+            per_layer.len() == layers,
+            "worker {owner} has {} plan layers, expected {layers}",
+            per_layer.len()
+        );
+    }
+    let mut mirrors: Vec<Vec<Vec<MirrorPlan>>> = vec![vec![Vec::new(); layers]; q];
+    if r == 1 {
+        return Ok(mirrors);
+    }
+    for layer in 0..layers {
+        let f = f_per_layer[layer];
+        // accumulated (messages, bytes) per directed link this layer
+        let mut load: HashMap<(usize, usize), (usize, usize)> = HashMap::new();
+        for owner in 0..q {
+            let holders = replica_holders(owner, q, r);
+            for plan in &mut layered[owner][layer] {
+                let elems = plan.local_rows.len() * f;
+                let bytes = keyed_wire_bytes(elems, elems, 0);
+                let mut best: Option<(f64, usize)> = None;
+                for &h in &holders {
+                    if h == plan.to {
+                        continue; // never fetch through yourself
+                    }
+                    let (m, b) = load.get(&(h, plan.to)).copied().unwrap_or((0, 0));
+                    let cost = link.alpha * (m + 1) as f64 + link.beta * (b + bytes) as f64;
+                    let better = match best {
+                        None => true,
+                        Some((c, hb)) => cost < c || (cost == c && h < hb),
+                    };
+                    if better {
+                        best = Some((cost, h));
+                    }
+                }
+                // the owner is always a candidate (plans never target self)
+                let (_, via) = best.expect("no eligible replica holder");
+                plan.via = via;
+                let e = load.entry((via, plan.to)).or_insert((0, 0));
+                e.0 += 1;
+                e.1 += bytes;
+            }
+            // refresh unions: what each non-owner mirror must hold
+            let mut by_via: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
+            for plan in &layered[owner][layer] {
+                if plan.via != owner {
+                    by_via.entry(plan.via).or_default().extend(plan.local_rows.iter().copied());
+                }
+            }
+            for (via, mut rows) in by_via {
+                rows.sort_unstable();
+                rows.dedup();
+                mirrors[owner][layer].push(MirrorPlan { via, rows });
+            }
+        }
+    }
+    Ok(mirrors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::sbm;
+    use crate::partition::random::RandomPartitioner;
+    use crate::partition::worker_graph::PlanMode;
+    use crate::partition::{Partitioner, WorkerGraph};
+
+    fn layered(n: usize, q: usize, seed: u64, layers: usize) -> Vec<Vec<Vec<SendPlan>>> {
+        let (g, _) = sbm(n, 4, 0.2, 0.05, seed);
+        let p = RandomPartitioner { seed }.partition(&g, q).unwrap();
+        let wgs = WorkerGraph::build_all(&g, &p).unwrap();
+        WorkerGraph::layered_plans(&wgs, layers, PlanMode::Sparse)
+    }
+
+    #[test]
+    fn holders_wrap_cyclically_and_cap_at_q() {
+        assert_eq!(replica_holders(0, 4, 1), vec![0]);
+        assert_eq!(replica_holders(2, 4, 2), vec![2, 3]);
+        assert_eq!(replica_holders(3, 4, 2), vec![3, 0]);
+        assert_eq!(replica_holders(1, 4, 9), vec![1, 2, 3, 0]);
+    }
+
+    #[test]
+    fn r1_is_an_owner_direct_noop() {
+        let mut plans = layered(64, 4, 1, 3);
+        let before = plans.clone();
+        let mirrors = assign_routes(&mut plans, 1, &[8, 8, 8], &LinkModel::ten_gbe()).unwrap();
+        assert_eq!(plans, before);
+        assert!(mirrors.iter().flatten().all(|m| m.is_empty()));
+    }
+
+    #[test]
+    fn routes_stay_on_holders_and_never_self_serve() {
+        let q = 4;
+        let r = 2;
+        let mut plans = layered(64, q, 2, 2);
+        let mirrors = assign_routes(&mut plans, r, &[16, 8], &LinkModel::ten_gbe()).unwrap();
+        let mut rerouted = 0;
+        for (owner, per_layer) in plans.iter().enumerate() {
+            for (layer, ps) in per_layer.iter().enumerate() {
+                for p in ps {
+                    assert!(replica_holders(owner, q, r).contains(&p.via), "via off-replica");
+                    assert_ne!(p.via, p.to, "self-serving fetch");
+                    if p.via != owner {
+                        rerouted += 1;
+                        let m = mirrors[owner][layer]
+                            .iter()
+                            .find(|m| m.via == p.via)
+                            .expect("rerouted fetch without a mirror refresh");
+                        assert!(p.local_rows.iter().all(|r| m.rows.contains(r)));
+                    }
+                }
+            }
+        }
+        // with 3 consumers per owner and 2 holders, greedy must offload some
+        assert!(rerouted > 0, "r=2 rerouted nothing");
+    }
+
+    #[test]
+    fn assignment_is_deterministic() {
+        let mut a = layered(96, 4, 3, 3);
+        let mut b = a.clone();
+        let ma = assign_routes(&mut a, 2, &[8, 16, 8], &LinkModel::wan()).unwrap();
+        let mb = assign_routes(&mut b, 2, &[8, 16, 8], &LinkModel::wan()).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(ma, mb);
+    }
+
+    #[test]
+    fn mirror_rows_are_sorted_unique_unions() {
+        let mut plans = layered(64, 4, 4, 1);
+        let mirrors = assign_routes(&mut plans, 3, &[8], &LinkModel::hundred_gb()).unwrap();
+        for (owner, per_layer) in mirrors.iter().enumerate() {
+            for (layer, ms) in per_layer.iter().enumerate() {
+                for m in ms {
+                    assert!(m.rows.windows(2).all(|w| w[0] < w[1]), "unsorted mirror rows");
+                    let mut want: Vec<u32> = plans[owner][layer]
+                        .iter()
+                        .filter(|p| p.via == m.via)
+                        .flat_map(|p| p.local_rows.iter().copied())
+                        .collect();
+                    want.sort_unstable();
+                    want.dedup();
+                    assert_eq!(m.rows, want);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn validates_replication_range() {
+        let mut plans = layered(64, 4, 5, 1);
+        assert!(assign_routes(&mut plans, 0, &[8], &LinkModel::ten_gbe()).is_err());
+        assert!(assign_routes(&mut plans, 5, &[8], &LinkModel::ten_gbe()).is_err());
+    }
+}

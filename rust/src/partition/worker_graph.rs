@@ -15,15 +15,90 @@ use crate::graph::Csr;
 use crate::tensor::Matrix;
 use crate::Result;
 
+/// Sentinel destination slot: the receiver discards this row on arrival.
+/// Dense (broadcast-union) plans pad every consumer's shipment to the
+/// sender's full outgoing row union with this marker; column-sparse plans
+/// never contain it.
+pub const DISCARD_SLOT: u32 = u32::MAX;
+
 /// What worker `q` sends to worker `p` each exchange: rows of q's local
 /// activation matrix, and the slots in p's boundary buffer they land in.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SendPlan {
     pub to: usize,
+    /// machine whose outgoing link is charged for this shipment — a
+    /// replica holder of the sender's boundary block.  Equals the sender
+    /// itself at replication factor 1; `assign_routes` retargets it to the
+    /// cheapest mirror when `replication > 1`.
+    pub via: usize,
     /// local row indices (into this worker's activation matrix)
     pub local_rows: Vec<u32>,
     /// destination rows in the receiver's boundary buffer
+    /// ([`DISCARD_SLOT`] = receiver drops the row on arrival)
     pub dst_slots: Vec<u32>,
+}
+
+impl SendPlan {
+    /// Rows the receiver actually scatters (excludes dense padding).
+    pub fn kept_rows(&self) -> usize {
+        self.dst_slots.iter().filter(|&&s| s != DISCARD_SLOT).count()
+    }
+}
+
+/// Shape of the halo send plans.
+///
+/// `Sparse` (the default) ships each consumer exactly the local rows its
+/// aggregation CSR touches — column-sparse, CAGNET ICPP'24 style.
+/// `Dense` is the broadcast-union baseline: every consumer receives the
+/// union of ALL the sender's outgoing boundary rows, padding the rows it
+/// does not need with [`DISCARD_SLOT`].  At full rate the two are bitwise
+/// equivalent in training outcome; `Dense` only ships more bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanMode {
+    Dense,
+    Sparse,
+}
+
+impl PlanMode {
+    pub fn parse(s: &str) -> Result<PlanMode> {
+        match s {
+            "dense" => Ok(PlanMode::Dense),
+            "sparse" | "" => Ok(PlanMode::Sparse),
+            other => anyhow::bail!("unknown plan mode {other:?}; known: dense, sparse"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PlanMode::Dense => "dense",
+            PlanMode::Sparse => "sparse",
+        }
+    }
+}
+
+/// Aggregate shipping volume of a layered plan set, summed over workers
+/// and layers: one epoch's forward fan-out.  `rows - kept_rows` is the
+/// dense padding the receivers throw away — zero for sparse plans.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanStats {
+    pub messages: usize,
+    pub rows: usize,
+    pub kept_rows: usize,
+}
+
+/// Volume stats for `[worker][layer][plan]` nested plans.
+pub fn plan_stats(layered: &[Vec<Vec<SendPlan>>]) -> PlanStats {
+    let mut st = PlanStats::default();
+    for per_layer in layered {
+        for plans in per_layer {
+            for p in plans {
+                st.messages += 1;
+                st.rows += p.local_rows.len();
+                st.kept_rows += p.kept_rows();
+            }
+        }
+    }
+    st
 }
 
 /// Sparse local->X aggregation operator in CSR form with f32 weights.
@@ -322,6 +397,7 @@ impl WorkerGraph {
                 if !rows.is_empty() {
                     workers[sender].send_plans.push(SendPlan {
                         to: p,
+                        via: sender,
                         local_rows: rows,
                         dst_slots: slots,
                     });
@@ -329,6 +405,70 @@ impl WorkerGraph {
             }
         }
         Ok(workers)
+    }
+
+    /// Per-layer send plans for every worker: `[worker][layer][plan]`.
+    ///
+    /// `Sparse` tailors each (sender, receiver, layer) plan to the rows
+    /// the receiver's layer-`l` aggregation CSR actually touches.  Every
+    /// registered architecture today aggregates over the same one-hop
+    /// halo at each layer, so the per-layer plans coincide — the API is
+    /// per-layer so layer-dependent column sparsity (sampled fanouts,
+    /// per-layer subgraphs) slots in without another plumbing refactor.
+    ///
+    /// `Dense` reproduces the broadcast-union baseline the sparse plans
+    /// are measured against: each consumer receives the union of all the
+    /// sender's outgoing boundary rows, with [`DISCARD_SLOT`] marking
+    /// the rows that consumer's CSR never reads.
+    pub fn layered_plans(
+        workers: &[WorkerGraph],
+        layers: usize,
+        mode: PlanMode,
+    ) -> Vec<Vec<Vec<SendPlan>>> {
+        workers
+            .iter()
+            .map(|w| {
+                let base = match mode {
+                    PlanMode::Sparse => w.send_plans.clone(),
+                    PlanMode::Dense => w.broadcast_union_plans(),
+                };
+                (0..layers).map(|_| base.clone()).collect()
+            })
+            .collect()
+    }
+
+    /// Dense-mode plans: ship the union of every outgoing boundary row to
+    /// each existing consumer, discard-padded.  Consumers keep exactly the
+    /// slots the sparse plan would deliver, so the scattered boundary
+    /// buffer — and therefore training — is identical; only bytes differ.
+    fn broadcast_union_plans(&self) -> Vec<SendPlan> {
+        let mut union: Vec<u32> = self
+            .send_plans
+            .iter()
+            .flat_map(|p| p.local_rows.iter().copied())
+            .collect();
+        union.sort_unstable();
+        union.dedup();
+        self.send_plans
+            .iter()
+            .map(|p| {
+                let slot_of: std::collections::HashMap<u32, u32> = p
+                    .local_rows
+                    .iter()
+                    .copied()
+                    .zip(p.dst_slots.iter().copied())
+                    .collect();
+                SendPlan {
+                    to: p.to,
+                    via: self.part,
+                    local_rows: union.clone(),
+                    dst_slots: union
+                        .iter()
+                        .map(|r| slot_of.get(r).copied().unwrap_or(DISCARD_SLOT))
+                        .collect(),
+                }
+            })
+            .collect()
     }
 }
 
@@ -504,6 +644,76 @@ mod tests {
                 assert_eq!(full.data, blocked.data, "split at {split}");
             }
         }
+    }
+
+    #[test]
+    fn sparse_layered_plans_replicate_send_plans_per_layer() {
+        let (_, workers) = setup(64, 4, 11);
+        let layered = WorkerGraph::layered_plans(&workers, 3, PlanMode::Sparse);
+        assert_eq!(layered.len(), workers.len());
+        for (w, per_layer) in workers.iter().zip(&layered) {
+            assert_eq!(per_layer.len(), 3);
+            for plans in per_layer {
+                assert_eq!(plans, &w.send_plans);
+                for p in plans {
+                    assert_eq!(p.via, w.part, "sparse plans route direct at r=1");
+                    assert_eq!(p.kept_rows(), p.local_rows.len(), "no dense padding");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_plans_union_pad_and_cover_the_same_slots() {
+        let (_, workers) = setup(64, 4, 12);
+        let layered = WorkerGraph::layered_plans(&workers, 1, PlanMode::Dense);
+        for (w, per_layer) in workers.iter().zip(&layered) {
+            let dense = &per_layer[0];
+            assert_eq!(dense.len(), w.send_plans.len(), "same consumer set");
+            // the union is shared: every consumer gets identical row lists
+            for pair in dense.windows(2) {
+                assert_eq!(pair[0].local_rows, pair[1].local_rows);
+            }
+            for (d, s) in dense.iter().zip(&w.send_plans) {
+                assert_eq!(d.to, s.to);
+                assert!(d.local_rows.len() >= s.local_rows.len());
+                assert_eq!(d.kept_rows(), s.local_rows.len());
+                // non-discard entries reproduce the sparse scatter exactly
+                let kept: Vec<(u32, u32)> = d
+                    .local_rows
+                    .iter()
+                    .zip(&d.dst_slots)
+                    .filter(|(_, &slot)| slot != DISCARD_SLOT)
+                    .map(|(&row, &slot)| (row, slot))
+                    .collect();
+                let want: Vec<(u32, u32)> = s
+                    .local_rows
+                    .iter()
+                    .zip(&s.dst_slots)
+                    .map(|(&row, &slot)| (row, slot))
+                    .collect();
+                assert_eq!(kept, want, "dense keeps the sparse scatter, sorted by row");
+            }
+        }
+        // on a random 4-way partition some boundary row must have a partial
+        // consumer set, so dense strictly out-ships sparse
+        let sparse = WorkerGraph::layered_plans(&workers, 1, PlanMode::Sparse);
+        let ds = plan_stats(&layered);
+        let ss = plan_stats(&sparse);
+        assert_eq!(ds.messages, ss.messages);
+        assert_eq!(ds.kept_rows, ss.rows);
+        assert!(ds.rows > ss.rows, "dense {} !> sparse {}", ds.rows, ss.rows);
+        assert_eq!(ss.kept_rows, ss.rows);
+    }
+
+    #[test]
+    fn plan_mode_parses_and_labels() {
+        assert_eq!(PlanMode::parse("dense").unwrap(), PlanMode::Dense);
+        assert_eq!(PlanMode::parse("sparse").unwrap(), PlanMode::Sparse);
+        assert_eq!(PlanMode::parse("").unwrap(), PlanMode::Sparse);
+        assert!(PlanMode::parse("nope").is_err());
+        assert_eq!(PlanMode::Dense.label(), "dense");
+        assert_eq!(PlanMode::Sparse.label(), "sparse");
     }
 
     #[test]

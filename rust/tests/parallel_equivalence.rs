@@ -314,6 +314,102 @@ fn overlap_parallel_matches_overlap_sequential() {
     assert_runs_identical("overlap seq-vs-par", &mut seq, &mut par);
 }
 
+// ---------------------------------------------------------------------------
+// Plan-shape equivalence: at comm=full the dense broadcast-union plans and
+// the column-sparse plans deliver the same boundary rows (dense pads with
+// discard slots the receiver skips), so training must agree BITWISE —
+// weights and per-epoch losses — with identical ledger message counts, for
+// every model, run mode, and overlap setting.  Only wire bytes differ:
+// dense ships the padded union, sparse only what each receiver reads.
+// ---------------------------------------------------------------------------
+
+fn build_plan_cfg(model: &str, mode: RunMode, overlap: bool, plan: &str, r: usize) -> Trainer {
+    let cfg = TrainConfig {
+        dataset: "karate-like".into(),
+        q: 4,
+        hidden: 8,
+        epochs: 6,
+        seed: 7,
+        lr: 0.02,
+        model: model.into(),
+        comm: "full".into(),
+        run_mode: mode.label().into(),
+        overlap,
+        plan: plan.into(),
+        replication: r,
+        ..Default::default()
+    };
+    build_trainer(&cfg).unwrap()
+}
+
+#[test]
+fn sparse_plans_match_dense_bitwise_at_full_rate() {
+    for model in ["sage", "gcn", "gin"] {
+        for mode in [RunMode::Parallel, RunMode::Sequential] {
+            for overlap in [false, true] {
+                let label = format!("{model}/{}/overlap={overlap}", mode.label());
+                let mut dense = build_plan_cfg(model, mode, overlap, "dense", 1);
+                let mut sparse = build_plan_cfg(model, mode, overlap, "sparse", 1);
+                let rd = dense.run().unwrap();
+                let rs = sparse.run().unwrap();
+                assert_eq!(
+                    dense.weights.flatten(),
+                    sparse.weights.flatten(),
+                    "{label}: weights must match bit for bit"
+                );
+                for (a, b) in rd.records.iter().zip(&rs.records) {
+                    assert_eq!(
+                        a.loss.to_bits(),
+                        b.loss.to_bits(),
+                        "{label} epoch {} loss",
+                        a.epoch
+                    );
+                }
+                assert_eq!(
+                    dense.ledger().message_count(),
+                    sparse.ledger().message_count(),
+                    "{label}: message counts"
+                );
+                assert!(
+                    rs.total_bytes() <= rd.total_bytes(),
+                    "{label}: sparse out-shipped dense ({} > {})",
+                    rs.total_bytes(),
+                    rd.total_bytes()
+                );
+                assert!(
+                    dense.fabric().is_quiescent() && sparse.fabric().is_quiescent(),
+                    "{label}: quiescence"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn replication_is_bitwise_invisible_to_training() {
+    // 1.5D replication changes which link each fetch is charged to and
+    // adds the per-epoch owner->mirror refresh — never the math
+    for mode in [RunMode::Parallel, RunMode::Sequential] {
+        let label = format!("replication/{}", mode.label());
+        let mut r1 = build_plan_cfg("sage", mode, false, "sparse", 1);
+        let mut r2 = build_plan_cfg("sage", mode, false, "sparse", 2);
+        let a = r1.run().unwrap();
+        let b = r2.run().unwrap();
+        assert_eq!(
+            r1.weights.flatten(),
+            r2.weights.flatten(),
+            "{label}: weights must match bit for bit"
+        );
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{label} epoch {} loss", x.epoch);
+        }
+        // refresh shipments only ever add bytes
+        assert!(b.total_bytes() >= a.total_bytes(), "{label}: refresh bytes vanished");
+        assert!(r2.ledger().breakdown_by_kind().contains_key("replica"), "{label}");
+        assert!(r1.fabric().is_quiescent() && r2.fabric().is_quiescent(), "{label}");
+    }
+}
+
 #[test]
 fn overlap_matches_barrier_under_failure_injection() {
     let build = |overlap: bool| {

@@ -135,6 +135,9 @@ fn full_training_run_parity() {
             seed: 9,
             epochs: 8,
             optimizer: Box::new(varco::optim::Sgd::new(0.05, 0.0, 0.0)),
+            // the pjrt engine runs only the proven subset: dense plans
+            // (both engines use them here so the ledgers stay comparable)
+            plan_mode: varco::partition::PlanMode::Dense,
             ..Default::default()
         };
         Trainer::new(&ds, &part, &wgs, engines, dims, opts).unwrap()
@@ -171,4 +174,26 @@ fn full_training_run_parity() {
     for (i, (a, b)) in wn.iter().zip(&wp).enumerate() {
         assert!((a - b).abs() < 5e-3 * (1.0 + a.abs()), "w[{i}]: {a} vs {b}");
     }
+}
+
+#[test]
+fn pjrt_rejects_unsupported_configs_up_front() {
+    let Some((ds, wgs, dims, arts)) = setup() else { return };
+    let part = varco::partition::random::RandomPartitioner { seed: 1 }
+        .partition(&ds.graph, arts.cfg.q)
+        .unwrap();
+    // default TrainerOptions carry plan=sparse, outside the pjrt subset:
+    // Trainer::new must fail with the single comprehensive demotion error
+    let engines: Vec<Box<dyn WorkerEngine>> = wgs
+        .iter()
+        .map(|w| {
+            Box::new(PjrtWorkerEngine::new(arts.clone(), w.clone(), dims).unwrap())
+                as Box<dyn WorkerEngine>
+        })
+        .collect();
+    let err = Trainer::new(&ds, &part, &wgs, engines, dims, TrainerOptions::default())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("pjrt engine supports only"), "{err}");
+    assert!(err.contains("plan=sparse"), "{err}");
 }

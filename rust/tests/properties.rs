@@ -383,7 +383,13 @@ fn prop_wire_bytes_match_ledger_records() {
             expect += payload.encode().len();
             eps[0].send(
                 0,
-                Message { from: 0, to: 1, kind: MessageKind::Activation { layer: l }, payload },
+                Message {
+                    from: 0,
+                    to: 1,
+                    via: None,
+                    kind: MessageKind::Activation { layer: l },
+                    payload,
+                },
             );
         }
         eps[1].recv_all();
