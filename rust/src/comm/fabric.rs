@@ -1,11 +1,14 @@
-//! In-process mailbox fabric between simulated workers.
+//! Message fabric between workers, over a pluggable delivery plane.
 //!
 //! Concurrency model: the [`Fabric`] is a coordinator-side handle over
-//! shared state (one mutexed mailbox per worker, one ledger shard per
+//! shared state (a [`Transport`] delivery plane, one ledger shard per
 //! sender, atomic counters); each worker thread owns an [`Endpoint`] that
 //! can send and drain without `&mut` access to any global object.  The
 //! sequential trainer path drives the same endpoints from one thread, so
-//! both run modes share identical delivery semantics.
+//! both run modes share identical delivery semantics.  By default the
+//! plane is the in-process mailbox transport; multi-process runs swap in
+//! the TCP plane (`comm/transport/tcp.rs`) under the same endpoints, so
+//! ledger charges, failure coins, and commit order are backend-invariant.
 //!
 //! Deterministic delivery with optional failure injection: messages can be
 //! dropped (receiver sees zeros — the compression mechanism's natural
@@ -15,6 +18,8 @@
 //! kind), never from shared RNG call order, so injection is reproducible
 //! for a given seed regardless of thread interleaving.
 
+use super::transport::inproc::InprocTransport;
+use super::transport::Transport;
 use super::{CommLedger, LedgerMode};
 use crate::compress::Payload;
 use crate::util::Rng;
@@ -44,7 +49,7 @@ impl MessageKind {
 
     /// Total order used to sort drained mailboxes into a deterministic,
     /// interleaving-independent delivery order.
-    fn sort_key(&self) -> (u8, usize) {
+    pub(crate) fn sort_key(&self) -> (u8, usize) {
         match *self {
             MessageKind::Activation { layer } => (0, layer),
             MessageKind::Gradient { layer } => (1, layer),
@@ -98,8 +103,8 @@ fn failure_coin(policy_seed: u64, msg: &Message) -> f64 {
 struct Shared {
     q: usize,
     policy: FailurePolicy,
-    /// `mailboxes[to]` holds undelivered messages
-    mailboxes: Vec<Mutex<Vec<Message>>>,
+    /// the delivery plane (in-process mailboxes or TCP links)
+    transport: Arc<dyn Transport>,
     /// `q` per-sender ledger shards plus one coordinator shard (index `q`)
     shards: Vec<Mutex<CommLedger>>,
     /// running byte total (exact serialized wire bytes)
@@ -129,10 +134,25 @@ impl Fabric {
     /// Full control over failure injection and ledger detail (budget runs
     /// use aggregated shards so long simulations stay bounded).
     pub fn with_policy_and_ledger(q: usize, policy: FailurePolicy, ledger: LedgerMode) -> Fabric {
+        Fabric::with_transport(q, policy, ledger, Arc::new(InprocTransport::new(q)))
+    }
+
+    /// Build a fabric over an explicit delivery plane.  Everything above
+    /// the plane — ledger shards, failure coins, staleness history,
+    /// sorted commit order — is identical across backends; only message
+    /// transport differs.  Multi-process runs pass a
+    /// [`TcpTransport`](super::transport::tcp::TcpTransport) here and use
+    /// [`Fabric::endpoint`] for the one local rank.
+    pub fn with_transport(
+        q: usize,
+        policy: FailurePolicy,
+        ledger: LedgerMode,
+        transport: Arc<dyn Transport>,
+    ) -> Fabric {
         let shared = Shared {
             q,
             policy,
-            mailboxes: (0..q).map(|_| Mutex::new(Vec::new())).collect(),
+            transport,
             shards: (0..q + 1).map(|_| Mutex::new(CommLedger::with_mode(ledger))).collect(),
             total_bytes: AtomicUsize::new(0),
             dropped: AtomicUsize::new(0),
@@ -150,13 +170,19 @@ impl Fabric {
     /// history is endpoint-local, so a fresh endpoint forgets previous
     /// epochs' payloads.
     pub fn endpoints(&self) -> Vec<Endpoint> {
-        (0..self.shared.q)
-            .map(|rank| Endpoint {
-                rank,
-                shared: self.shared.clone(),
-                history: HashMap::new(),
-            })
-            .collect()
+        (0..self.shared.q).map(|rank| self.endpoint(rank)).collect()
+    }
+
+    /// A single rank's endpoint — the multi-process entry point, where a
+    /// worker process owns exactly one rank of the fabric.
+    pub fn endpoint(&self, rank: usize) -> Endpoint {
+        assert!(rank < self.shared.q, "bad endpoint rank {rank}");
+        Endpoint { rank, shared: self.shared.clone(), history: HashMap::new() }
+    }
+
+    /// Delivery-plane backend name ("inproc" | "tcp").
+    pub fn transport_label(&self) -> &'static str {
+        self.shared.transport.label()
     }
 
     /// Record a coordinator-originated wire cost in bytes (weight sync
@@ -206,9 +232,9 @@ impl Fabric {
         out
     }
 
-    /// All mailboxes empty? (end-of-round invariant)
+    /// All visible mailboxes empty? (end-of-round invariant)
     pub fn is_quiescent(&self) -> bool {
-        self.shared.mailboxes.iter().all(|m| m.lock().unwrap().is_empty())
+        self.shared.transport.is_quiescent()
     }
 }
 
@@ -290,7 +316,7 @@ impl Endpoint {
         if policy.stale_prob > 0.0 {
             self.history.insert((msg.from, msg.to, msg.kind), msg.payload.clone());
         }
-        shared.mailboxes[msg.to].lock().unwrap().push(msg);
+        shared.transport.post(msg);
         wire_bytes
     }
 
@@ -311,7 +337,7 @@ impl Endpoint {
     /// deterministic (sender, kind, layer) order so concurrent senders
     /// cannot perturb downstream float accumulation order.
     pub fn recv_all(&mut self) -> Vec<Message> {
-        let mut msgs = std::mem::take(&mut *self.shared.mailboxes[self.rank].lock().unwrap());
+        let mut msgs = self.shared.transport.drain(self.rank);
         msgs.sort_by_key(|m| (m.from, m.kind.sort_key()));
         msgs
     }
@@ -323,13 +349,28 @@ impl Endpoint {
     /// have posted its next layer's sends, and a kind-keyed drain cannot
     /// swallow them the way [`Endpoint::recv_all`] would.
     pub fn try_recv_kind(&mut self, kind: MessageKind) -> Vec<Message> {
-        let mut mb = self.shared.mailboxes[self.rank].lock().unwrap();
-        let (mut take, keep): (Vec<Message>, Vec<Message>) =
-            std::mem::take(&mut *mb).into_iter().partition(|m| m.kind == kind);
-        *mb = keep;
-        drop(mb);
+        let mut take = self.shared.transport.drain_kind(self.rank, kind);
         take.sort_by_key(|m| m.from);
         take
+    }
+
+    /// Block until one message of `kind` from every rank in `from` has
+    /// arrived, then take exactly those (sender-sorted).  This is the
+    /// multi-process replacement for the in-process exchange barriers:
+    /// the send plans tell each receiver precisely which senders it must
+    /// await, so no global synchronization point is needed.  Errors on
+    /// timeout, dead peer, or a recovery abort.
+    pub fn recv_expected(
+        &mut self,
+        kind: MessageKind,
+        from: &[usize],
+    ) -> crate::Result<Vec<Message>> {
+        if from.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut msgs = self.shared.transport.recv_expected(self.rank, kind, from)?;
+        msgs.sort_by_key(|m| m.from);
+        Ok(msgs)
     }
 }
 
@@ -571,6 +612,27 @@ mod tests {
         let msgs = eps[3].try_recv_kind(MessageKind::Activation { layer: 2 });
         let froms: Vec<usize> = msgs.iter().map(|m| m.from).collect();
         assert_eq!(froms, vec![0, 1, 2], "sender-sorted commit order");
+    }
+
+    #[test]
+    fn recv_expected_over_explicit_transport_keeps_failure_semantics() {
+        // the blocking receive sits on the same plane as recv_all, so the
+        // sender-side coins (here: certain drop) apply unchanged
+        let f = Fabric::with_transport(
+            2,
+            FailurePolicy { drop_prob: 1.0, stale_prob: 0.0, seed: 1 },
+            LedgerMode::Detailed,
+            Arc::new(InprocTransport::new(2)),
+        );
+        assert_eq!(f.transport_label(), "inproc");
+        let mut eps = f.endpoints();
+        let kind = MessageKind::Activation { layer: 0 };
+        eps[0].send(0, msg(0, 1, kind, &[3.0, 4.0], 9));
+        let got = eps[1].recv_expected(kind, &[0]).unwrap();
+        assert_eq!(got.len(), 1);
+        assert!(got[0].payload.is_dropped());
+        assert!(eps[1].recv_expected(kind, &[]).unwrap().is_empty(), "empty expectation");
+        assert!(f.is_quiescent());
     }
 
     #[test]

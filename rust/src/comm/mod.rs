@@ -9,15 +9,21 @@
 //! *budgets* first-class inputs: the budget controller closes the loop on
 //! the same numbers the ledger reports.
 //!
-//! The fabric is an in-process mailbox grid — deterministic, inspectable,
-//! and instrumentable with failure injection (dropped or stale messages)
-//! for robustness tests.  Ledger shards can run in
-//! [`LedgerMode::Aggregated`] for bounded memory on long runs.
+//! The fabric delivers over a pluggable [`Transport`] plane — the
+//! deterministic in-process mailbox grid by default, or per-link TCP
+//! sockets for multi-process runs — and is instrumentable with failure
+//! injection (dropped or stale messages) for robustness tests.  Ledger
+//! shards can run in [`LedgerMode::Aggregated`] for bounded memory on
+//! long runs.
 
 pub mod fabric;
 pub mod ledger;
 pub mod time_model;
+pub mod transport;
 
 pub use fabric::{Endpoint, Fabric, FailurePolicy, Message, MessageKind};
 pub use ledger::{AggCell, CommLedger, LedgerEntry, LedgerMode};
 pub use time_model::{overlap_estimate, LinkModel, OverlapEstimate};
+pub use transport::inproc::InprocTransport;
+pub use transport::tcp::{TcpOptions, TcpTransport};
+pub use transport::Transport;

@@ -1,0 +1,166 @@
+//! Socket framing: `[u32 len][u8 tag][body]` outer frames plus the data
+//! frame body codec for a [`Message`] (fixed header + the byte-exact
+//! payload wire format from `compress/wire.rs`, so a socket run ships
+//! exactly the bytes the ledger charges).
+
+use crate::comm::fabric::{Message, MessageKind};
+use crate::compress::Payload;
+use std::io::{Read, Write};
+
+/// Frame tags on a data-plane connection.
+pub const TAG_HELLO: u8 = 0x01;
+pub const TAG_DATA: u8 = 0x02;
+/// control-plane message (driver <-> worker protocol, `coordinator::dist`)
+pub const TAG_CTRL: u8 = 0x03;
+
+/// Refuse frames above this size: a corrupted length prefix must fail
+/// with a clear error, not a multi-gigabyte allocation.
+pub const MAX_FRAME: usize = 1 << 30;
+
+/// Write one `[u32 len][u8 tag][body]` frame.  `len` counts the tag byte
+/// plus the body, so a reader always knows exactly how much to pull.
+pub fn write_frame(w: &mut impl Write, tag: u8, body: &[u8]) -> std::io::Result<()> {
+    let len = (body.len() + 1) as u32;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(&[tag])?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Read one frame; `Ok(None)` on a clean EOF at a frame boundary (the
+/// peer closed its socket — how crashes announce themselves).
+pub fn read_frame(r: &mut impl Read) -> crate::Result<Option<(u8, Vec<u8>)>> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    anyhow::ensure!(len >= 1, "frame: empty frame (missing tag)");
+    anyhow::ensure!(len <= MAX_FRAME, "frame: length {len} exceeds cap {MAX_FRAME}");
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)
+        .map_err(|e| anyhow::anyhow!("frame: truncated body (wanted {len} bytes): {e}"))?;
+    let tag = buf[0];
+    buf.drain(..1);
+    Ok(Some((tag, buf)))
+}
+
+fn kind_code(kind: MessageKind) -> (u8, u32) {
+    match kind {
+        MessageKind::Activation { layer } => (0, layer as u32),
+        MessageKind::Gradient { layer } => (1, layer as u32),
+        MessageKind::Weights => (2, 0),
+    }
+}
+
+fn kind_from_code(code: u8, layer: u32) -> crate::Result<MessageKind> {
+    Ok(match code {
+        0 => MessageKind::Activation { layer: layer as usize },
+        1 => MessageKind::Gradient { layer: layer as usize },
+        2 => MessageKind::Weights,
+        other => anyhow::bail!("frame: unknown message kind tag {other}"),
+    })
+}
+
+/// Data-frame body: `[u8 kind][u32 layer][u32 from][u32 to][u32 via+1]`
+/// then the payload's own length-prefixed encoding.
+pub fn encode_message(msg: &Message) -> Vec<u8> {
+    let (kcode, layer) = kind_code(msg.kind);
+    let payload = msg.payload.encode();
+    let mut buf = Vec::with_capacity(17 + payload.len());
+    buf.push(kcode);
+    buf.extend_from_slice(&layer.to_le_bytes());
+    buf.extend_from_slice(&(msg.from as u32).to_le_bytes());
+    buf.extend_from_slice(&(msg.to as u32).to_le_bytes());
+    let via = msg.via.map_or(0u32, |v| v as u32 + 1);
+    buf.extend_from_slice(&via.to_le_bytes());
+    buf.extend_from_slice(&payload);
+    buf
+}
+
+pub fn decode_message(buf: &[u8]) -> crate::Result<Message> {
+    anyhow::ensure!(buf.len() >= 17, "frame: data body too short ({} bytes)", buf.len());
+    let u32_at = |i: usize| u32::from_le_bytes(buf[i..i + 4].try_into().unwrap());
+    let kind = kind_from_code(buf[0], u32_at(1))?;
+    let from = u32_at(5) as usize;
+    let to = u32_at(9) as usize;
+    let via_raw = u32_at(13);
+    let via = if via_raw == 0 { None } else { Some(via_raw as usize - 1) };
+    let payload = Payload::decode(&buf[17..])?;
+    Ok(Message { from, to, via, kind, payload })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Codec;
+
+    fn sample(kind: MessageKind, via: Option<usize>) -> Message {
+        Message {
+            from: 2,
+            to: 5,
+            via,
+            kind,
+            payload: Payload {
+                n: 6,
+                values: vec![1.5, -2.25, 0.0],
+                indices: Some(vec![0, 3, 5]),
+                key: 0xDEAD_BEEF,
+                side: vec![],
+                codec: Codec::Indexed,
+            },
+        }
+    }
+
+    #[test]
+    fn message_roundtrip_every_kind() {
+        for (kind, via) in [
+            (MessageKind::Activation { layer: 0 }, None),
+            (MessageKind::Gradient { layer: 3 }, Some(1)),
+            (MessageKind::Weights, None),
+        ] {
+            let m = sample(kind, via);
+            let got = decode_message(&encode_message(&m)).unwrap();
+            assert_eq!(got.from, m.from);
+            assert_eq!(got.to, m.to);
+            assert_eq!(got.via, m.via);
+            assert_eq!(got.kind, m.kind);
+            assert_eq!(got.payload.n, m.payload.n);
+            assert_eq!(got.payload.values, m.payload.values);
+            assert_eq!(got.payload.indices, m.payload.indices);
+            assert_eq!(got.payload.key, m.payload.key);
+        }
+    }
+
+    #[test]
+    fn stream_framing_roundtrip_and_eof() {
+        let m = sample(MessageKind::Activation { layer: 1 }, None);
+        let mut wire = Vec::new();
+        write_frame(&mut wire, TAG_DATA, &encode_message(&m)).unwrap();
+        write_frame(&mut wire, TAG_HELLO, &[7]).unwrap();
+        let mut r = &wire[..];
+        let (tag, body) = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(tag, TAG_DATA);
+        assert_eq!(decode_message(&body).unwrap().payload.values, m.payload.values);
+        let (tag, body) = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!((tag, body.as_slice()), (TAG_HELLO, &[7u8][..]));
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn corrupt_frames_error_instead_of_panicking() {
+        // truncated mid-body
+        let m = sample(MessageKind::Weights, None);
+        let mut wire = Vec::new();
+        write_frame(&mut wire, TAG_DATA, &encode_message(&m)).unwrap();
+        let cut = wire.len() - 3;
+        assert!(read_frame(&mut &wire[..cut]).is_err(), "truncated body must error");
+        // absurd length prefix
+        let bogus = [0xFFu8, 0xFF, 0xFF, 0x7F, TAG_DATA];
+        assert!(read_frame(&mut &bogus[..]).is_err(), "oversized frame must error");
+        // garbage data body
+        assert!(decode_message(&[9u8; 20]).is_err());
+    }
+}

@@ -1,0 +1,159 @@
+//! The original in-process mailbox plane: one mutexed queue per rank,
+//! with a condvar so the (rarely used in-process) blocking receive can
+//! sleep instead of spin.  This backend is the deterministic oracle the
+//! socket plane is pinned against.
+
+use super::{take_expected, Transport};
+use crate::comm::fabric::{Message, MessageKind};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+struct Inbox {
+    queue: Mutex<Vec<Message>>,
+    arrived: Condvar,
+}
+
+pub struct InprocTransport {
+    inboxes: Vec<Inbox>,
+    /// ceiling for [`Transport::recv_expected`]; in-process exchanges are
+    /// barrier-scheduled so a hit means a deadlocked caller, not a slow
+    /// network — fail loudly rather than hang the test suite
+    recv_timeout: Duration,
+}
+
+impl InprocTransport {
+    pub fn new(q: usize) -> InprocTransport {
+        InprocTransport::with_recv_timeout(q, Duration::from_secs(30))
+    }
+
+    pub fn with_recv_timeout(q: usize, recv_timeout: Duration) -> InprocTransport {
+        InprocTransport {
+            inboxes: (0..q)
+                .map(|_| Inbox { queue: Mutex::new(Vec::new()), arrived: Condvar::new() })
+                .collect(),
+            recv_timeout,
+        }
+    }
+}
+
+impl Transport for InprocTransport {
+    fn label(&self) -> &'static str {
+        "inproc"
+    }
+
+    fn post(&self, msg: Message) {
+        let inbox = &self.inboxes[msg.to];
+        inbox.queue.lock().unwrap().push(msg);
+        inbox.arrived.notify_all();
+    }
+
+    fn drain(&self, rank: usize) -> Vec<Message> {
+        std::mem::take(&mut *self.inboxes[rank].queue.lock().unwrap())
+    }
+
+    fn drain_kind(&self, rank: usize, kind: MessageKind) -> Vec<Message> {
+        let mut q = self.inboxes[rank].queue.lock().unwrap();
+        let (take, keep): (Vec<Message>, Vec<Message>) =
+            std::mem::take(&mut *q).into_iter().partition(|m| m.kind == kind);
+        *q = keep;
+        take
+    }
+
+    fn recv_expected(
+        &self,
+        rank: usize,
+        kind: MessageKind,
+        from: &[usize],
+    ) -> crate::Result<Vec<Message>> {
+        let inbox = &self.inboxes[rank];
+        let deadline = Instant::now() + self.recv_timeout;
+        let mut queue = inbox.queue.lock().unwrap();
+        loop {
+            match take_expected(&mut queue, kind, from) {
+                Ok(msgs) => return Ok(msgs),
+                Err(missing) => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        anyhow::bail!(
+                            "inproc recv timeout: rank {rank} still waiting for {kind:?} \
+                             from {missing:?} after {:?}",
+                            self.recv_timeout
+                        );
+                    }
+                    let (guard, _timed_out) =
+                        inbox.arrived.wait_timeout(queue, deadline - now).unwrap();
+                    queue = guard;
+                }
+            }
+        }
+    }
+
+    fn is_quiescent(&self) -> bool {
+        self.inboxes.iter().all(|b| b.queue.lock().unwrap().is_empty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Codec, Payload};
+
+    fn msg(from: usize, to: usize, kind: MessageKind, v: f32) -> Message {
+        Message {
+            from,
+            to,
+            via: None,
+            kind,
+            payload: Payload {
+                n: 1,
+                values: vec![v],
+                indices: None,
+                key: 0,
+                side: vec![],
+                codec: Codec::Keyed,
+            },
+        }
+    }
+
+    #[test]
+    fn recv_expected_blocks_until_all_senders_arrive() {
+        let t = std::sync::Arc::new(InprocTransport::new(3));
+        let kind = MessageKind::Activation { layer: 0 };
+        t.post(msg(1, 2, kind, 1.0));
+        let t2 = t.clone();
+        let poster = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            t2.post(msg(0, 2, kind, 0.5));
+        });
+        let got = t.recv_expected(2, kind, &[1, 0]).unwrap();
+        poster.join().unwrap();
+        let froms: Vec<usize> = got.iter().map(|m| m.from).collect();
+        assert_eq!(froms, vec![0, 1], "ascending sender order");
+        assert!(t.is_quiescent());
+    }
+
+    #[test]
+    fn recv_expected_takes_one_per_sender_and_keeps_the_rest() {
+        let t = InprocTransport::new(2);
+        let kind = MessageKind::Gradient { layer: 1 };
+        t.post(msg(0, 1, kind, 1.0));
+        t.post(msg(0, 1, kind, 2.0)); // next epoch's early arrival
+        t.post(msg(0, 1, MessageKind::Weights, 9.0));
+        let got = t.recv_expected(1, kind, &[0]).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].payload.values, vec![1.0], "FIFO within a sender");
+        assert!(!t.is_quiescent(), "unclaimed messages stay queued");
+        assert_eq!(t.drain_kind(1, kind).len(), 1);
+        assert_eq!(t.drain(1).len(), 1);
+    }
+
+    #[test]
+    fn recv_expected_times_out_with_missing_senders_named() {
+        let t = InprocTransport::with_recv_timeout(2, Duration::from_millis(20));
+        let err = t
+            .recv_expected(0, MessageKind::Activation { layer: 3 }, &[1])
+            .expect_err("nothing was ever posted");
+        let text = format!("{err:#}");
+        assert!(text.contains("[1]"), "names the missing sender: {text}");
+    }
+}

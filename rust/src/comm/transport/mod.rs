@@ -1,0 +1,101 @@
+//! Pluggable message planes under the [`Fabric`]/[`Endpoint`] seam.
+//!
+//! The fabric owns everything that must be identical across backends —
+//! ledger recording, byte accounting, deterministic failure coins,
+//! staleness history, sender-sorted commit order — and delegates only the
+//! *delivery* of a [`Message`] to a [`Transport`].  Two backends exist:
+//!
+//! * [`inproc::InprocTransport`] — the original mutexed mailboxes between
+//!   threads of one process (the deterministic oracle);
+//! * [`tcp::TcpTransport`] — length-prefixed frames over per-link sockets
+//!   between `varco driver` / `varco worker` processes, with reconnect
+//!   backoff and dead-peer detection for crash recovery.
+//!
+//! Because failure coins and ledger charges are applied *above* the
+//! transport (in [`Endpoint::send`]), drop/stale injection behaves
+//! identically over sockets and over mailboxes, and a socket run commits
+//! messages in the same `(sender, kind, layer)` order as the in-process
+//! oracle — the basis of the tcp == inproc bitwise-equality pin.
+//!
+//! [`Fabric`]: super::Fabric
+//! [`Endpoint`]: super::Endpoint
+//! [`Endpoint::send`]: super::Endpoint::send
+//! [`Message`]: super::Message
+
+pub mod frame;
+pub mod inproc;
+pub mod tcp;
+
+use super::fabric::{Message, MessageKind};
+
+/// A message delivery plane.  Implementations must be callable from many
+/// threads at once: sends happen on worker threads while drains happen on
+/// the owning rank's thread.
+pub trait Transport: Send + Sync {
+    /// Backend name for diagnostics ("inproc" | "tcp").
+    fn label(&self) -> &'static str;
+
+    /// Deliver `msg` toward `msg.to`'s inbox.  Best-effort for remote
+    /// backends: a broken link marks the peer dead (surfaced by the next
+    /// [`Transport::recv_expected`] or by the driver's heartbeat monitor)
+    /// instead of erroring the hot send path — exactly-once completion is
+    /// the recovery protocol's job, not the sender's.
+    fn post(&self, msg: Message);
+
+    /// Take every message waiting for `rank` (unordered; the endpoint
+    /// sorts into the deterministic commit order).
+    fn drain(&self, rank: usize) -> Vec<Message>;
+
+    /// Take only the waiting messages of `kind` for `rank`, leaving every
+    /// other channel untouched (the overlap pipeline's primitive).
+    fn drain_kind(&self, rank: usize, kind: MessageKind) -> Vec<Message>;
+
+    /// Block until one message of `kind` from every rank in `from` is
+    /// available for `rank`, then take exactly those (first-arrived per
+    /// sender).  This replaces the in-process exchange barriers in
+    /// multi-process runs: the send plans tell each receiver precisely
+    /// which senders to await.  Errors on timeout, on an expected peer
+    /// going dead, or on an abort signal (crash recovery).
+    fn recv_expected(
+        &self,
+        rank: usize,
+        kind: MessageKind,
+        from: &[usize],
+    ) -> crate::Result<Vec<Message>>;
+
+    /// No undelivered messages anywhere this transport can see.  (For a
+    /// remote backend this is necessarily a local statement: only the
+    /// calling process's inboxes are visible.)
+    fn is_quiescent(&self) -> bool;
+}
+
+/// Extract one message per expected sender (first-arrived, FIFO within a
+/// sender) from `queue`, or report what is still missing.  Shared by both
+/// backends so "which message satisfies an expectation" cannot diverge
+/// between the oracle and the socket plane.
+pub(crate) fn take_expected(
+    queue: &mut Vec<Message>,
+    kind: MessageKind,
+    from: &[usize],
+) -> std::result::Result<Vec<Message>, Vec<usize>> {
+    let mut senders: Vec<usize> = from.to_vec();
+    senders.sort_unstable();
+    senders.dedup();
+    let missing: Vec<usize> = senders
+        .iter()
+        .copied()
+        .filter(|&f| !queue.iter().any(|m| m.from == f && m.kind == kind))
+        .collect();
+    if !missing.is_empty() {
+        return Err(missing);
+    }
+    let mut out = Vec::with_capacity(senders.len());
+    for &f in &senders {
+        let pos = queue
+            .iter()
+            .position(|m| m.from == f && m.kind == kind)
+            .expect("checked above");
+        out.push(queue.remove(pos));
+    }
+    Ok(out)
+}

@@ -1,0 +1,494 @@
+//! TCP message plane: one listener per process, one outgoing connection
+//! per (sender → receiver) link, length-prefixed frames wrapping the
+//! byte-exact payload codec.  Accepted connections get a reader thread
+//! that decodes frames into the local inbox; a closed socket marks the
+//! peer dead and wakes any blocked receive so crash recovery can start
+//! immediately instead of waiting out a timeout.
+//!
+//! Connection management is deliberately simple and bounded: connects
+//! retry with exponential backoff up to a total per-link budget, a failed
+//! write attempts one reconnect before declaring the link dead, and the
+//! driver's control protocol — not this plane — owns the decision to
+//! restart or re-admit a crashed worker.
+
+use super::frame::{self, TAG_DATA, TAG_HELLO};
+use super::{take_expected, Transport};
+use crate::comm::fabric::{Message, MessageKind};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Socket tuning knobs (config keys `connect_timeout_ms` / `read_timeout_ms`).
+#[derive(Clone, Debug)]
+pub struct TcpOptions {
+    /// total budget for establishing (or re-establishing) one link,
+    /// including every backoff sleep
+    pub connect_timeout: Duration,
+    /// ceiling for a blocking receive before the epoch is declared failed
+    pub read_timeout: Duration,
+    /// first reconnect backoff; doubles per attempt up to `backoff_cap`
+    pub backoff_base: Duration,
+    pub backoff_cap: Duration,
+}
+
+impl Default for TcpOptions {
+    fn default() -> TcpOptions {
+        TcpOptions {
+            connect_timeout: Duration::from_secs(5),
+            read_timeout: Duration::from_secs(30),
+            backoff_base: Duration::from_millis(25),
+            backoff_cap: Duration::from_millis(400),
+        }
+    }
+}
+
+/// Inbox plus the link-health state a blocked receive must observe; one
+/// mutex so "message arrived", "peer died", and "epoch aborted" all wake
+/// the same condvar without lock-order hazards.
+struct InboxState {
+    queue: Vec<Message>,
+    /// `dead[p]`: some connection involving peer `p` broke and has not
+    /// been re-established — expecting a message from `p` should fail
+    /// fast rather than time out
+    dead: Vec<bool>,
+    /// set by the driver's abort directive during crash recovery; every
+    /// blocked receive returns an error until `reset()`
+    aborted: bool,
+}
+
+struct Link {
+    stream: Option<TcpStream>,
+    addr: Option<SocketAddr>,
+}
+
+struct PlaneState {
+    rank: usize,
+    world: usize,
+    opts: TcpOptions,
+    inbox: Mutex<InboxState>,
+    arrived: Condvar,
+    links: Vec<Mutex<Link>>,
+    closing: AtomicBool,
+}
+
+impl PlaneState {
+    fn mark_dead(&self, peer: usize, dead: bool) {
+        let mut st = self.inbox.lock().unwrap();
+        if peer < st.dead.len() {
+            st.dead[peer] = dead;
+        }
+        drop(st);
+        self.arrived.notify_all();
+    }
+
+    fn push(&self, msg: Message) {
+        self.inbox.lock().unwrap().queue.push(msg);
+        self.arrived.notify_all();
+    }
+}
+
+pub struct TcpTransport {
+    state: Arc<PlaneState>,
+    local_addr: SocketAddr,
+    accept_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+fn resolve(addr: &str) -> crate::Result<SocketAddr> {
+    addr.to_socket_addrs()
+        .map_err(|e| anyhow::anyhow!("tcp: cannot resolve {addr:?}: {e}"))?
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("tcp: {addr:?} resolved to no address"))
+}
+
+/// Dial `addr` with bounded exponential backoff, then introduce ourselves
+/// with a HELLO frame so the acceptor knows which rank this link carries.
+fn dial(rank: usize, peer: usize, addr: SocketAddr, opts: &TcpOptions) -> crate::Result<TcpStream> {
+    let deadline = Instant::now() + opts.connect_timeout;
+    let mut backoff = opts.backoff_base;
+    loop {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            anyhow::bail!(
+                "tcp: rank {rank} could not connect to peer {peer} at {addr} \
+                 within {:?}",
+                opts.connect_timeout
+            );
+        }
+        let per_try = remaining.min(Duration::from_secs(1));
+        match TcpStream::connect_timeout(&addr, per_try) {
+            Ok(mut stream) => {
+                let _ = stream.set_nodelay(true);
+                frame::write_frame(&mut stream, TAG_HELLO, &(rank as u32).to_le_bytes())
+                    .map_err(|e| anyhow::anyhow!("tcp: hello to peer {peer} failed: {e}"))?;
+                return Ok(stream);
+            }
+            Err(_) => {
+                std::thread::sleep(backoff.min(deadline.saturating_duration_since(Instant::now())));
+                backoff = (backoff * 2).min(opts.backoff_cap);
+            }
+        }
+    }
+}
+
+/// Decode frames off one accepted connection into the inbox until the
+/// peer closes or errors, then mark it dead and wake blocked receivers.
+fn reader_loop(state: Arc<PlaneState>, mut stream: TcpStream) {
+    // first frame must be the HELLO identifying the sending rank
+    let peer = match frame::read_frame(&mut stream) {
+        Ok(Some((TAG_HELLO, body))) if body.len() == 4 => {
+            u32::from_le_bytes(body[..4].try_into().unwrap()) as usize
+        }
+        _ => return, // not a peer (e.g. the shutdown self-wake); drop silently
+    };
+    if peer >= state.world || peer == state.rank {
+        return;
+    }
+    state.mark_dead(peer, false); // (re)connected: link is live again
+    loop {
+        match frame::read_frame(&mut stream) {
+            Ok(Some((TAG_DATA, body))) => match frame::decode_message(&body) {
+                Ok(msg) => state.push(msg),
+                Err(e) => {
+                    eprintln!("[varco tcp] rank {}: bad frame from {peer}: {e:#}", state.rank);
+                    break;
+                }
+            },
+            Ok(Some(_)) => {} // unknown tag: skip (forward compatibility)
+            Ok(None) | Err(_) => break,
+        }
+    }
+    if !state.closing.load(Ordering::Relaxed) {
+        state.mark_dead(peer, true);
+    }
+}
+
+impl TcpTransport {
+    /// Bind the data-plane listener (use port 0 for an ephemeral port;
+    /// [`TcpTransport::local_addr`] reports the actual one) and start
+    /// accepting peer connections.
+    pub fn bind(rank: usize, world: usize, listen: &str, opts: TcpOptions) -> crate::Result<TcpTransport> {
+        anyhow::ensure!(rank < world, "tcp: rank {rank} outside world {world}");
+        let listener = TcpListener::bind(listen)
+            .map_err(|e| anyhow::anyhow!("tcp: rank {rank} cannot bind {listen:?}: {e}"))?;
+        let local_addr = listener.local_addr()?;
+        let state = Arc::new(PlaneState {
+            rank,
+            world,
+            opts,
+            inbox: Mutex::new(InboxState {
+                queue: Vec::new(),
+                dead: vec![false; world],
+                aborted: false,
+            }),
+            arrived: Condvar::new(),
+            links: (0..world).map(|_| Mutex::new(Link { stream: None, addr: None })).collect(),
+            closing: AtomicBool::new(false),
+        });
+        let accept_state = state.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name(format!("varco-tcp-accept-{rank}"))
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if accept_state.closing.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    if let Ok(stream) = conn {
+                        let rs = accept_state.clone();
+                        let _ = std::thread::Builder::new()
+                            .name(format!("varco-tcp-read-{}", accept_state.rank))
+                            .spawn(move || reader_loop(rs, stream));
+                    }
+                }
+            })
+            .expect("spawn accept thread");
+        Ok(TcpTransport { state, local_addr, accept_thread: Mutex::new(Some(accept_thread)) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    pub fn rank(&self) -> usize {
+        self.state.rank
+    }
+
+    /// Establish (or refresh) the outgoing link to `peer`.
+    pub fn connect_peer(&self, peer: usize, addr: &str) -> crate::Result<()> {
+        anyhow::ensure!(peer < self.state.world && peer != self.state.rank, "tcp: bad peer {peer}");
+        let addr = resolve(addr)?;
+        let stream = dial(self.state.rank, peer, addr, &self.state.opts)?;
+        {
+            let mut link = self.state.links[peer].lock().unwrap();
+            link.stream = Some(stream);
+            link.addr = Some(addr);
+        }
+        self.state.mark_dead(peer, false);
+        Ok(())
+    }
+
+    /// Establish outgoing links to every peer in `addrs` (`(rank, addr)`
+    /// pairs; our own rank is skipped).
+    pub fn connect_peers(&self, addrs: &[(usize, String)]) -> crate::Result<()> {
+        for (peer, addr) in addrs {
+            if *peer != self.state.rank {
+                self.connect_peer(*peer, addr)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Drop the outgoing link to `peer` and flag it dead (the driver told
+    /// us the worker is being replaced).
+    pub fn disconnect_peer(&self, peer: usize) {
+        if let Some(link) = self.state.links.get(peer) {
+            link.lock().unwrap().stream = None;
+        }
+        self.state.mark_dead(peer, true);
+    }
+
+    /// Wake every blocked receive with an error — the recovery signal.
+    pub fn abort(&self) {
+        self.state.inbox.lock().unwrap().aborted = true;
+        self.state.arrived.notify_all();
+    }
+
+    /// Whether [`TcpTransport::abort`] fired and no `reset` has run yet —
+    /// the worker runtime uses this to tell a driver-directed abort apart
+    /// from a genuine epoch failure.
+    pub fn is_aborted(&self) -> bool {
+        self.state.inbox.lock().unwrap().aborted
+    }
+
+    /// Discard undelivered messages, clear the abort flag, and forget
+    /// link-death marks (called at a superstep boundary before resuming
+    /// from a checkpoint, so neither a stale half-epoch's traffic nor a
+    /// replaced peer's old death mark can leak into the re-run; real
+    /// failures re-mark themselves on the next broken read or write).
+    pub fn reset(&self) {
+        let mut st = self.state.inbox.lock().unwrap();
+        st.queue.clear();
+        st.aborted = false;
+        st.dead.iter_mut().for_each(|d| *d = false);
+        drop(st);
+        self.state.arrived.notify_all();
+    }
+
+    /// Stop accepting new connections and join the accept thread.
+    pub fn shutdown(&self) {
+        if self.state.closing.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // self-connect to unblock the accept loop; the reader it would
+        // spawn exits on the immediate EOF (no HELLO)
+        let _ = TcpStream::connect_timeout(&self.local_addr, Duration::from_millis(200));
+        if let Some(h) = self.accept_thread.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl Transport for TcpTransport {
+    fn label(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn post(&self, msg: Message) {
+        let to = msg.to;
+        if to == self.state.rank {
+            self.state.push(msg);
+            return;
+        }
+        let body = frame::encode_message(&msg);
+        let mut link = self.state.links[to].lock().unwrap();
+        // try the live stream, then one bounded reconnect; past that the
+        // link is dead and the driver's recovery protocol takes over
+        for attempt in 0..2 {
+            if link.stream.is_none() {
+                let Some(addr) = link.addr else { break };
+                match dial(self.state.rank, to, addr, &self.state.opts) {
+                    Ok(s) => link.stream = Some(s),
+                    Err(_) => break,
+                }
+            }
+            let stream = link.stream.as_mut().expect("just set");
+            match frame::write_frame(stream, TAG_DATA, &body) {
+                Ok(()) => {
+                    if attempt > 0 {
+                        self.state.mark_dead(to, false);
+                    }
+                    return;
+                }
+                Err(_) => link.stream = None,
+            }
+        }
+        drop(link);
+        self.state.mark_dead(to, true);
+    }
+
+    fn drain(&self, rank: usize) -> Vec<Message> {
+        debug_assert_eq!(rank, self.state.rank, "tcp drains are local-only");
+        std::mem::take(&mut self.state.inbox.lock().unwrap().queue)
+    }
+
+    fn drain_kind(&self, rank: usize, kind: MessageKind) -> Vec<Message> {
+        debug_assert_eq!(rank, self.state.rank, "tcp drains are local-only");
+        let mut st = self.state.inbox.lock().unwrap();
+        let (take, keep): (Vec<Message>, Vec<Message>) =
+            std::mem::take(&mut st.queue).into_iter().partition(|m| m.kind == kind);
+        st.queue = keep;
+        take
+    }
+
+    fn recv_expected(
+        &self,
+        rank: usize,
+        kind: MessageKind,
+        from: &[usize],
+    ) -> crate::Result<Vec<Message>> {
+        debug_assert_eq!(rank, self.state.rank, "tcp drains are local-only");
+        let deadline = Instant::now() + self.state.opts.read_timeout;
+        let mut st = self.state.inbox.lock().unwrap();
+        loop {
+            if st.aborted {
+                anyhow::bail!("tcp: receive aborted (recovery in progress)");
+            }
+            match take_expected(&mut st.queue, kind, from) {
+                Ok(msgs) => return Ok(msgs),
+                Err(missing) => {
+                    if let Some(&down) = missing.iter().find(|&&f| st.dead[f]) {
+                        anyhow::bail!(
+                            "tcp: rank {rank} waiting on {kind:?} from peer {down}, \
+                             but its link is down"
+                        );
+                    }
+                    let now = Instant::now();
+                    if now >= deadline {
+                        anyhow::bail!(
+                            "tcp: rank {rank} timed out after {:?} waiting for {kind:?} \
+                             from {missing:?}",
+                            self.state.opts.read_timeout
+                        );
+                    }
+                    let (guard, _) = self.state.arrived.wait_timeout(st, deadline - now).unwrap();
+                    st = guard;
+                }
+            }
+        }
+    }
+
+    fn is_quiescent(&self) -> bool {
+        self.state.inbox.lock().unwrap().queue.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Codec, Payload};
+
+    fn msg(from: usize, to: usize, kind: MessageKind, vals: &[f32]) -> Message {
+        Message {
+            from,
+            to,
+            via: None,
+            kind,
+            payload: Payload {
+                n: vals.len(),
+                values: vals.to_vec(),
+                indices: None,
+                key: 42,
+                side: vec![],
+                codec: Codec::Keyed,
+            },
+        }
+    }
+
+    fn quick_opts() -> TcpOptions {
+        TcpOptions {
+            connect_timeout: Duration::from_secs(2),
+            read_timeout: Duration::from_secs(5),
+            backoff_base: Duration::from_millis(5),
+            backoff_cap: Duration::from_millis(50),
+        }
+    }
+
+    fn pair() -> (TcpTransport, TcpTransport) {
+        let a = TcpTransport::bind(0, 2, "127.0.0.1:0", quick_opts()).unwrap();
+        let b = TcpTransport::bind(1, 2, "127.0.0.1:0", quick_opts()).unwrap();
+        a.connect_peer(1, &b.local_addr().to_string()).unwrap();
+        b.connect_peer(0, &a.local_addr().to_string()).unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn localhost_roundtrip_blocking_and_kind_drain() {
+        let (a, b) = pair();
+        let kind = MessageKind::Activation { layer: 0 };
+        a.post(msg(0, 1, kind, &[1.0, -2.5]));
+        let got = b.recv_expected(1, kind, &[0]).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].payload.values, vec![1.0, -2.5]);
+        // other kinds stay queued under a kind drain
+        a.post(msg(0, 1, MessageKind::Gradient { layer: 2 }, &[3.0]));
+        a.post(msg(0, 1, kind, &[4.0]));
+        let g = b.recv_expected(1, MessageKind::Gradient { layer: 2 }, &[0]).unwrap();
+        assert_eq!(g[0].payload.values, vec![3.0]);
+        let rest = b.recv_expected(1, kind, &[0]).unwrap();
+        assert_eq!(rest[0].payload.values, vec![4.0]);
+        assert!(b.is_quiescent());
+        a.shutdown();
+        b.shutdown();
+    }
+
+    #[test]
+    fn peer_death_fails_blocked_receive_fast_and_reconnect_revives() {
+        let a = TcpTransport::bind(0, 2, "127.0.0.1:0", quick_opts()).unwrap();
+        {
+            let b = TcpTransport::bind(1, 2, "127.0.0.1:0", quick_opts()).unwrap();
+            b.connect_peer(0, &a.local_addr().to_string()).unwrap();
+            b.post(msg(1, 0, MessageKind::Weights, &[7.0]));
+            let got = a.recv_expected(0, MessageKind::Weights, &[1]).unwrap();
+            assert_eq!(got[0].payload.values, vec![7.0]);
+            b.shutdown();
+        } // b dropped: its outgoing socket closes, a's reader marks 1 dead
+        let t0 = Instant::now();
+        let err = a.recv_expected(0, MessageKind::Weights, &[1]).expect_err("peer is gone");
+        assert!(format!("{err:#}").contains("link is down"), "{err:#}");
+        assert!(t0.elapsed() < Duration::from_secs(4), "fail fast, not timeout");
+        // a restarted worker reconnects and the link revives
+        let b2 = TcpTransport::bind(1, 2, "127.0.0.1:0", quick_opts()).unwrap();
+        b2.connect_peer(0, &a.local_addr().to_string()).unwrap();
+        b2.post(msg(1, 0, MessageKind::Weights, &[8.0]));
+        let got = a.recv_expected(0, MessageKind::Weights, &[1]).unwrap();
+        assert_eq!(got[0].payload.values, vec![8.0]);
+        a.shutdown();
+        b2.shutdown();
+    }
+
+    #[test]
+    fn abort_wakes_blocked_receive_and_reset_clears() {
+        let (a, b) = pair();
+        let a = Arc::new(a);
+        let a2 = a.clone();
+        let waiter = std::thread::spawn(move || {
+            a2.recv_expected(0, MessageKind::Activation { layer: 1 }, &[1])
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        a.abort();
+        let err = waiter.join().unwrap().expect_err("abort interrupts");
+        assert!(format!("{err:#}").contains("aborted"));
+        b.post(msg(1, 0, MessageKind::Weights, &[1.0]));
+        std::thread::sleep(Duration::from_millis(100));
+        a.reset();
+        assert!(a.is_quiescent(), "reset discards leftovers");
+        b.shutdown();
+        a.shutdown();
+    }
+}

@@ -80,6 +80,29 @@ pub struct TrainConfig {
     /// mirror each boundary block on r machines and charge every fetch to
     /// its cheapest replica's link.  Accounting/routing only.
     pub replication: usize,
+    /// message plane: inproc (threads sharing one queue, default) | tcp
+    /// (one process per worker, `varco driver` / `varco worker`)
+    pub transport: String,
+    /// control-plane address the driver listens on / workers dial
+    pub driver_addr: String,
+    /// TCP connect deadline (bounded exponential-backoff retry window)
+    pub connect_timeout_ms: u64,
+    /// data-plane receive deadline before a blocked exchange errors
+    pub read_timeout_ms: u64,
+    /// worker -> driver heartbeat cadence
+    pub heartbeat_ms: u64,
+    /// silence window after which the driver declares a worker dead
+    pub heartbeat_timeout_ms: u64,
+    /// checkpoint every k epochs (0 = off); the final epoch always
+    /// checkpoints when enabled
+    pub ckpt_every: usize,
+    /// directory for per-worker checkpoint shards
+    pub ckpt_dir: String,
+    /// fault injection: "EPOCH:RANK" makes that worker crash when it
+    /// receives the plan for EPOCH ("" = never)
+    pub crash_at: String,
+    /// total worker restarts the driver will attempt before giving up
+    pub max_restarts: usize,
 }
 
 impl Default for TrainConfig {
@@ -111,6 +134,16 @@ impl Default for TrainConfig {
             overlap: false,
             plan: "sparse".into(),
             replication: 1,
+            transport: "inproc".into(),
+            driver_addr: "127.0.0.1:7117".into(),
+            connect_timeout_ms: 5_000,
+            read_timeout_ms: 30_000,
+            heartbeat_ms: 500,
+            heartbeat_timeout_ms: 3_000,
+            ckpt_every: 0,
+            ckpt_dir: "ckpt".into(),
+            crash_at: String::new(),
+            max_restarts: 1,
         }
     }
 }
@@ -175,6 +208,26 @@ impl TrainConfig {
                 anyhow::ensure!(v >= 1, "replication must be >= 1 (1 = owner-direct)");
                 self.replication = v;
             }
+            "transport" => {
+                anyhow::ensure!(
+                    value == "inproc" || value == "tcp",
+                    "transport must be inproc|tcp, got {value:?}"
+                );
+                self.transport = value.into();
+            }
+            "driver_addr" => self.driver_addr = value.into(),
+            "connect_timeout_ms" => self.connect_timeout_ms = parse_positive_ms(key, value)?,
+            "read_timeout_ms" => self.read_timeout_ms = parse_positive_ms(key, value)?,
+            "heartbeat_ms" => self.heartbeat_ms = parse_positive_ms(key, value)?,
+            "heartbeat_timeout_ms" => self.heartbeat_timeout_ms = parse_positive_ms(key, value)?,
+            "ckpt_every" => self.ckpt_every = value.parse()?,
+            "ckpt_dir" => self.ckpt_dir = value.into(),
+            "crash_at" => {
+                // validate eagerly so a typo fails at the assignment site
+                parse_crash_at(value)?;
+                self.crash_at = value.into();
+            }
+            "max_restarts" => self.max_restarts = value.parse()?,
             _ => anyhow::bail!("unknown config key {key:?}"),
         }
         Ok(())
@@ -258,6 +311,64 @@ impl TrainConfig {
         }
     }
 
+    /// Parsed `crash_at` spec: `Some((epoch, rank))` or `None`.
+    pub fn crash_at_spec(&self) -> Result<Option<(usize, usize)>> {
+        parse_crash_at(&self.crash_at)
+    }
+
+    /// Serialize every key back to the `key = value` file format, such
+    /// that `from_file` reproduces this config exactly.  The driver writes
+    /// this next to the checkpoint shards so respawned workers (and
+    /// post-mortem humans) see the resolved run, not the original CLI.
+    pub fn to_config_string(&self) -> String {
+        format!(
+            "dataset = {}\nnodes = {}\nq = {}\npartitioner = {}\ncomm = {}\ncompressor = {}\n\
+             engine = {}\nartifact_tag = {}\nartifacts_dir = {}\nepochs = {}\nhidden = {}\n\
+             layers = {}\nmodel = {}\noptimizer = {}\nlr = {}\nweight_decay = {}\nseed = {}\n\
+             eval_every = {}\ndrop_prob = {}\nstale_prob = {}\nrun_mode = {}\nthreads = {}\n\
+             ledger = {}\noverlap = {}\nplan = {}\nreplication = {}\ntransport = {}\n\
+             driver_addr = {}\nconnect_timeout_ms = {}\nread_timeout_ms = {}\nheartbeat_ms = {}\n\
+             heartbeat_timeout_ms = {}\nckpt_every = {}\nckpt_dir = {}\ncrash_at = {}\n\
+             max_restarts = {}\n",
+            self.dataset,
+            self.nodes,
+            self.q,
+            self.partitioner,
+            self.comm,
+            self.compressor,
+            self.engine,
+            self.artifact_tag,
+            self.artifacts_dir,
+            self.epochs,
+            self.hidden,
+            self.layers,
+            self.model,
+            self.optimizer,
+            self.lr,
+            self.weight_decay,
+            self.seed,
+            self.eval_every,
+            self.drop_prob,
+            self.stale_prob,
+            self.run_mode,
+            self.threads,
+            self.ledger,
+            if self.overlap { "on" } else { "off" },
+            self.plan,
+            self.replication,
+            self.transport,
+            self.driver_addr,
+            self.connect_timeout_ms,
+            self.read_timeout_ms,
+            self.heartbeat_ms,
+            self.heartbeat_timeout_ms,
+            self.ckpt_every,
+            self.ckpt_dir,
+            self.crash_at,
+            self.max_restarts,
+        )
+    }
+
     pub fn describe(&self) -> String {
         format!(
             "{} q={} part={} comm={} model={} engine={} epochs={} hidden={} lr={} seed={} \
@@ -276,6 +387,26 @@ impl TrainConfig {
             self.replication
         )
     }
+}
+
+fn parse_positive_ms(key: &str, value: &str) -> Result<u64> {
+    let v: u64 = value.parse()?;
+    anyhow::ensure!(v > 0, "{key} must be > 0 milliseconds");
+    Ok(v)
+}
+
+/// Parse an `"EPOCH:RANK"` crash-injection spec ("" = never).
+pub fn parse_crash_at(s: &str) -> Result<Option<(usize, usize)>> {
+    if s.is_empty() {
+        return Ok(None);
+    }
+    let (e, r) = s
+        .split_once(':')
+        .ok_or_else(|| anyhow::anyhow!("crash_at must be EPOCH:RANK, got {s:?}"))?;
+    Ok(Some((
+        e.trim().parse().map_err(|_| anyhow::anyhow!("crash_at epoch {e:?} is not a number"))?,
+        r.trim().parse().map_err(|_| anyhow::anyhow!("crash_at rank {r:?} is not a number"))?,
+    )))
 }
 
 /// Parse a byte count with optional k/m/g suffix (decimal, case
@@ -306,6 +437,12 @@ pub fn build_trainer_with_dataset(cfg: &TrainConfig, dataset: &Dataset) -> Resul
     anyhow::ensure!(
         cfg.layers >= 1,
         "layers must be >= 1 (a GNN needs at least one layer)"
+    );
+    anyhow::ensure!(
+        cfg.transport == "inproc",
+        "transport={} runs as separate processes: start `varco driver` and one \
+         `varco worker --rank R` per rank instead of `varco train`",
+        cfg.transport
     );
     let partitioner = crate::partition::by_name(&cfg.partitioner, cfg.seed)?;
     let partition = partitioner.partition(&dataset.graph, cfg.q)?;

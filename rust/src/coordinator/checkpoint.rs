@@ -7,14 +7,24 @@
 //! model's tree layout.  v1 files (written before the model registry)
 //! carry no name and load as `sage`, whose flat layout is unchanged — old
 //! checkpoints keep working bitwise.
+//!
+//! v3 is the multi-process format: one [`CheckpointShard`] per worker,
+//! each holding a contiguous slice of the flat weight vector plus the
+//! matching slice of every per-parameter optimizer vector, the optimizer
+//! scalars, an opaque error-feedback residual blob, and the epoch
+//! position.  Reassembly is pure concatenation in rank order, so a shard
+//! set restores the exact bitwise training state — the property crash
+//! recovery leans on to replay the uninterrupted trajectory.
 
 use crate::model::{build_spec, ModelDims, ModelSpec, Weights};
+use crate::optim::OptimizerState;
 use crate::Result;
 use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 const MAGIC_V1: &[u8; 8] = b"VARCOCK\x01";
 const MAGIC_V2: &[u8; 8] = b"VARCOCK\x02";
+const MAGIC_V3: &[u8; 8] = b"VARCOCK\x03";
 
 /// A saved training state.
 #[derive(Clone, Debug, PartialEq)]
@@ -89,6 +99,10 @@ impl Checkpoint {
         let version = match &magic {
             m if m == MAGIC_V1 => 1,
             m if m == MAGIC_V2 => 2,
+            m if m == MAGIC_V3 => anyhow::bail!(
+                "{path:?} is a v3 per-worker checkpoint shard; load the full set with \
+                 ShardSet::load (shards reassemble into one checkpoint)"
+            ),
             _ => anyhow::bail!("{path:?} is not a varco checkpoint"),
         };
         let read_u64 = |r: &mut BufReader<std::fs::File>| -> Result<u64> {
@@ -127,6 +141,398 @@ impl Checkpoint {
         let flat_weights =
             buf.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
         Ok(Checkpoint { epoch: epoch as usize, seed, dims, model, flat_weights })
+    }
+}
+
+/// The contiguous slice of the flat parameter space owned by `rank` in a
+/// `world`-way shard split (balanced; earlier ranks absorb the remainder).
+pub fn shard_range(total: usize, world: usize, rank: usize) -> std::ops::Range<usize> {
+    assert!(world > 0 && rank < world, "bad shard ({rank} of {world})");
+    let base = total / world;
+    let rem = total % world;
+    let start = rank * base + rank.min(rem);
+    let len = base + usize::from(rank < rem);
+    start..start + len
+}
+
+/// One worker's piece of a v3 sharded checkpoint: a weight slice, the
+/// matching optimizer-state slices, the worker's opaque error-feedback
+/// residual blob, and the epoch position.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointShard {
+    pub epoch: usize,
+    pub seed: u64,
+    pub dims: ModelDims,
+    pub model: String,
+    pub world: usize,
+    pub rank: usize,
+    /// length of the full flat weight vector (tiling check on reassembly)
+    pub total_params: usize,
+    /// where this shard's slice starts in the flat vector
+    pub offset: usize,
+    pub weight_slice: Vec<f32>,
+    /// per-parameter optimizer vectors sliced to this shard's range
+    /// (empty vectors mean lazily-initialized state), plus full scalars
+    pub opt_state: OptimizerState,
+    /// opaque compressor error-feedback residual state (empty when the
+    /// run keeps no residuals)
+    pub residual_blob: Vec<u8>,
+}
+
+fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
+    write_u64(w, s.len() as u64)?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    write_u64(w, xs.len() as u64)?;
+    for &x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_str(r: &mut impl Read, what: &str) -> Result<String> {
+    let len = read_u64(r)? as usize;
+    anyhow::ensure!(len <= 256, "corrupt shard: {what} length {len}");
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    String::from_utf8(buf).map_err(|_| anyhow::anyhow!("corrupt shard: {what} not utf-8"))
+}
+
+fn read_f32s(r: &mut impl Read, cap: usize, what: &str) -> Result<Vec<f32>> {
+    let len = read_u64(r)? as usize;
+    anyhow::ensure!(len <= cap, "corrupt shard: {what} claims {len} floats (cap {cap})");
+    let mut buf = vec![0u8; len * 4];
+    r.read_exact(&mut buf)
+        .map_err(|e| anyhow::anyhow!("corrupt shard: truncated {what} ({len} floats): {e}"))?;
+    Ok(buf.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+impl CheckpointShard {
+    /// Canonical shard filename under `dir`: `{prefix}.shard{rank}.ckpt`.
+    pub fn path_for(dir: &Path, prefix: &str, rank: usize) -> PathBuf {
+        dir.join(format!("{prefix}.shard{rank}.ckpt"))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut w = BufWriter::new(std::fs::File::create(path)?);
+        self.write_to(&mut w)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<CheckpointShard> {
+        let mut r = BufReader::new(std::fs::File::open(path)?);
+        Self::read_from(&mut r, &format!("{path:?}"))
+    }
+
+    /// Serialize to the v3 shard format in memory (the driver ships shard
+    /// bytes to workers over the control channel; the worker persists them
+    /// verbatim, so the on-disk file is exactly these bytes).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        self.write_to(&mut buf).expect("Vec<u8> writes are infallible");
+        buf
+    }
+
+    /// Decode a shard produced by [`CheckpointShard::to_bytes`].
+    pub fn from_bytes(bytes: &[u8]) -> Result<CheckpointShard> {
+        let mut r = bytes;
+        let shard = Self::read_from(&mut r, "<wire>")?;
+        anyhow::ensure!(r.is_empty(), "corrupt shard: {} trailing bytes", r.len());
+        Ok(shard)
+    }
+
+    fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        w.write_all(MAGIC_V3)?;
+        for v in [
+            self.epoch as u64,
+            self.seed,
+            self.dims.f_in as u64,
+            self.dims.hidden as u64,
+            self.dims.classes as u64,
+            self.dims.layers as u64,
+            self.total_params as u64,
+            self.world as u64,
+            self.rank as u64,
+            self.offset as u64,
+        ] {
+            write_u64(&mut w, v)?;
+        }
+        write_str(&mut w, &self.model)?;
+        write_f32s(&mut w, &self.weight_slice)?;
+        write_u64(&mut w, self.opt_state.vectors.len() as u64)?;
+        for (name, vec) in &self.opt_state.vectors {
+            write_str(&mut w, name)?;
+            write_f32s(&mut w, vec)?;
+        }
+        write_u64(&mut w, self.opt_state.scalars.len() as u64)?;
+        for (name, val) in &self.opt_state.scalars {
+            write_str(&mut w, name)?;
+            w.write_all(&val.to_le_bytes())?;
+        }
+        write_u64(&mut w, self.residual_blob.len() as u64)?;
+        w.write_all(&self.residual_blob)?;
+        Ok(())
+    }
+
+    fn read_from(r: &mut impl Read, origin: &str) -> Result<CheckpointShard> {
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        anyhow::ensure!(
+            &magic == MAGIC_V3,
+            "{origin} is not a v3 checkpoint shard (single-file checkpoints load \
+             via Checkpoint::load)"
+        );
+        let mut u64s = [0u64; 10];
+        for v in u64s.iter_mut() {
+            *v = read_u64(&mut *r)?;
+        }
+        let [epoch, seed, f_in, hidden, classes, layers, total_params, world, rank, offset] = u64s;
+        anyhow::ensure!(world >= 1 && world <= 1 << 20, "corrupt shard: world {world}");
+        anyhow::ensure!(rank < world, "corrupt shard: rank {rank} outside world {world}");
+        let total = total_params as usize;
+        let model = read_str(&mut r, "model name")?;
+        let dims = ModelDims {
+            f_in: f_in as usize,
+            hidden: hidden as usize,
+            classes: classes as usize,
+            layers: layers as usize,
+        };
+        let expect = build_spec(&model, &dims)?.param_count();
+        anyhow::ensure!(
+            expect == total,
+            "corrupt shard: model {model} dims imply {expect} params, header says {total}"
+        );
+        let range = shard_range(total, world as usize, rank as usize);
+        anyhow::ensure!(
+            offset as usize == range.start,
+            "corrupt shard: offset {offset} != expected {} for rank {rank}/{world}",
+            range.start
+        );
+        let weight_slice = read_f32s(&mut r, total, "weight slice")?;
+        anyhow::ensure!(
+            weight_slice.len() == range.len(),
+            "corrupt shard: slice holds {} weights, rank {rank}/{world} owns {}",
+            weight_slice.len(),
+            range.len()
+        );
+        let n_vecs = read_u64(&mut r)? as usize;
+        anyhow::ensure!(n_vecs <= 16, "corrupt shard: {n_vecs} optimizer vectors");
+        let mut vectors = Vec::with_capacity(n_vecs);
+        for _ in 0..n_vecs {
+            let name = read_str(&mut r, "optimizer vector name")?;
+            let vec = read_f32s(&mut r, total, &format!("optimizer vector {name}"))?;
+            anyhow::ensure!(
+                vec.is_empty() || vec.len() == range.len(),
+                "corrupt shard: optimizer vector {name} has {} floats, shard owns {}",
+                vec.len(),
+                range.len()
+            );
+            vectors.push((name, vec));
+        }
+        let n_scalars = read_u64(&mut r)? as usize;
+        anyhow::ensure!(n_scalars <= 16, "corrupt shard: {n_scalars} optimizer scalars");
+        let mut scalars = Vec::with_capacity(n_scalars);
+        for _ in 0..n_scalars {
+            let name = read_str(&mut r, "optimizer scalar name")?;
+            let mut b = [0u8; 8];
+            r.read_exact(&mut b)?;
+            scalars.push((name, f64::from_le_bytes(b)));
+        }
+        let blob_len = read_u64(&mut r)? as usize;
+        anyhow::ensure!(blob_len <= 1 << 30, "corrupt shard: residual blob {blob_len} bytes");
+        let mut residual_blob = vec![0u8; blob_len];
+        r.read_exact(&mut residual_blob)
+            .map_err(|e| anyhow::anyhow!("corrupt shard: truncated residual blob: {e}"))?;
+        Ok(CheckpointShard {
+            epoch: epoch as usize,
+            seed,
+            dims,
+            model,
+            world: world as usize,
+            rank: rank as usize,
+            total_params: total,
+            offset: offset as usize,
+            weight_slice,
+            opt_state: OptimizerState { vectors, scalars },
+            residual_blob,
+        })
+    }
+}
+
+/// A complete v3 shard set, reassembled.
+#[derive(Clone, Debug)]
+pub struct ShardSet {
+    pub checkpoint: Checkpoint,
+    pub optimizer: OptimizerState,
+    /// per-rank residual blobs, rank order
+    pub residuals: Vec<Vec<u8>>,
+}
+
+impl ShardSet {
+    /// Split full training state into `world` per-worker shards.  Slicing
+    /// is positional, so `load` reassembles the exact bitwise vectors.
+    pub fn make_shards(
+        spec: &ModelSpec,
+        flat_weights: &[f32],
+        optimizer: &OptimizerState,
+        residuals: &[Vec<u8>],
+        epoch: usize,
+        seed: u64,
+        world: usize,
+    ) -> Vec<CheckpointShard> {
+        assert!(world > 0);
+        assert_eq!(flat_weights.len(), spec.param_count(), "flat vector/spec mismatch");
+        (0..world)
+            .map(|rank| {
+                let range = shard_range(flat_weights.len(), world, rank);
+                let vectors = optimizer
+                    .vectors
+                    .iter()
+                    .map(|(name, vec)| {
+                        let slice = if vec.is_empty() {
+                            Vec::new()
+                        } else {
+                            assert_eq!(vec.len(), flat_weights.len(), "optimizer vector {name}");
+                            vec[range.clone()].to_vec()
+                        };
+                        (name.clone(), slice)
+                    })
+                    .collect();
+                CheckpointShard {
+                    epoch,
+                    seed,
+                    dims: spec.dims,
+                    model: spec.name.clone(),
+                    world,
+                    rank,
+                    total_params: flat_weights.len(),
+                    offset: range.start,
+                    weight_slice: flat_weights[range].to_vec(),
+                    opt_state: OptimizerState {
+                        vectors,
+                        scalars: optimizer.scalars.clone(),
+                    },
+                    residual_blob: residuals.get(rank).cloned().unwrap_or_default(),
+                }
+            })
+            .collect()
+    }
+
+    /// Write every shard of a set under `dir` with the canonical names.
+    pub fn save_all(shards: &[CheckpointShard], dir: &Path, prefix: &str) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        for s in shards {
+            s.save(&CheckpointShard::path_for(dir, prefix, s.rank))?;
+        }
+        Ok(())
+    }
+
+    /// Load a full shard set (`{prefix}.shard{0..world}.ckpt` under
+    /// `dir`), validate shard-consistency, and reassemble by rank-order
+    /// concatenation — bitwise identical to the state that was split.
+    pub fn load(dir: &Path, prefix: &str) -> Result<ShardSet> {
+        let first = CheckpointShard::load(&CheckpointShard::path_for(dir, prefix, 0))?;
+        let world = first.world;
+        let mut shards = vec![first];
+        for rank in 1..world {
+            shards.push(CheckpointShard::load(&CheckpointShard::path_for(dir, prefix, rank))?);
+        }
+        ShardSet::from_shards(shards)
+    }
+
+    /// Reassemble a rank-ordered shard set already in memory (the driver
+    /// retains the last fully-acknowledged set for crash recovery without
+    /// touching disk; `load` is the on-disk front door).
+    pub fn from_shards(shards: Vec<CheckpointShard>) -> Result<ShardSet> {
+        anyhow::ensure!(!shards.is_empty(), "empty shard set");
+        let world = shards[0].world;
+        anyhow::ensure!(
+            shards.len() == world,
+            "shard set holds {} shards, world is {world}",
+            shards.len()
+        );
+        for (rank, s) in shards.iter().enumerate() {
+            let f = &shards[0];
+            anyhow::ensure!(
+                s.rank == rank
+                    && s.world == world
+                    && s.epoch == f.epoch
+                    && s.seed == f.seed
+                    && s.model == f.model
+                    && s.dims == f.dims
+                    && s.total_params == f.total_params,
+                "inconsistent shard set: shard {rank} disagrees with shard 0 \
+                 (epoch {} vs {}, model {} vs {})",
+                s.epoch,
+                f.epoch,
+                s.model,
+                f.model
+            );
+        }
+        let total = shards[0].total_params;
+        let mut flat_weights = Vec::with_capacity(total);
+        for s in &shards {
+            flat_weights.extend_from_slice(&s.weight_slice);
+        }
+        anyhow::ensure!(
+            flat_weights.len() == total,
+            "shard tiling mismatch: reassembled {} of {total} params",
+            flat_weights.len()
+        );
+        // optimizer vectors reassemble the same way; emptiness must agree
+        // across the whole set (all-lazy or all-materialized)
+        let mut vectors: Vec<(String, Vec<f32>)> = Vec::new();
+        for (i, (name, v0)) in shards[0].opt_state.vectors.iter().enumerate() {
+            let mut full = v0.clone();
+            for s in &shards[1..] {
+                let (n, v) = s.opt_state.vectors.get(i).ok_or_else(|| {
+                    anyhow::anyhow!("shard {} is missing optimizer vector {name}", s.rank)
+                })?;
+                anyhow::ensure!(n == name, "optimizer vector order differs across shards");
+                anyhow::ensure!(
+                    v.is_empty() == v0.is_empty(),
+                    "optimizer vector {name}: shard {} lazy-state disagrees with shard 0",
+                    s.rank
+                );
+                full.extend_from_slice(v);
+            }
+            anyhow::ensure!(
+                full.is_empty() || full.len() == total,
+                "optimizer vector {name} reassembled to {} of {total}",
+                full.len()
+            );
+            vectors.push((name.clone(), full));
+        }
+        let checkpoint = Checkpoint {
+            epoch: shards[0].epoch,
+            seed: shards[0].seed,
+            dims: shards[0].dims,
+            model: shards[0].model.clone(),
+            flat_weights,
+        };
+        Ok(ShardSet {
+            checkpoint,
+            optimizer: OptimizerState {
+                vectors,
+                scalars: shards[0].opt_state.scalars.clone(),
+            },
+            residuals: shards.iter().map(|s| s.residual_blob.clone()).collect(),
+        })
     }
 }
 
@@ -206,5 +612,173 @@ mod tests {
         let mut ck = Checkpoint::from_weights(&spec, &w, 0, 1);
         ck.flat_weights.pop();
         assert!(ck.to_weights().is_err());
+    }
+
+    #[test]
+    fn shard_range_tiles_exactly() {
+        for total in [0usize, 1, 7, 64, 65, 1000] {
+            for world in [1usize, 2, 3, 5, 8] {
+                let mut next = 0;
+                for rank in 0..world {
+                    let r = shard_range(total, world, rank);
+                    assert_eq!(r.start, next, "contiguous tiling t={total} w={world}");
+                    next = r.end;
+                }
+                assert_eq!(next, total, "covers everything t={total} w={world}");
+            }
+        }
+    }
+
+    /// Exercise a real optimizer so shards carry materialized m/v state.
+    fn adam_state_after_steps(n: usize) -> OptimizerState {
+        let mut opt = crate::optim::by_name("adam", 0.05, 0.001).unwrap();
+        let mut w: Vec<f32> = (0..n).map(|i| (i as f32 * 0.3).sin()).collect();
+        for _ in 0..3 {
+            let g: Vec<f32> = w.iter().map(|&x| x * 0.5 - 0.1).collect();
+            opt.step(&mut w, &g);
+        }
+        opt.state()
+    }
+
+    #[test]
+    fn v3_shards_reassemble_bitwise_every_model_and_world() {
+        for name in ["sage", "gcn", "gin"] {
+            let spec = build_spec(name, &DIMS).unwrap();
+            let w = Weights::glorot(&spec, 23);
+            let flat = w.flatten();
+            let opt = adam_state_after_steps(flat.len());
+            let residuals: Vec<Vec<u8>> = vec![vec![1, 2, 3], vec![], vec![9; 5]];
+            for world in [1usize, 2, 3] {
+                let shards = ShardSet::make_shards(
+                    &spec,
+                    &flat,
+                    &opt,
+                    &residuals[..world],
+                    17,
+                    23,
+                    world,
+                );
+                let dir = TempDir::new().unwrap();
+                ShardSet::save_all(&shards, dir.path(), "run").unwrap();
+                let set = ShardSet::load(dir.path(), "run").unwrap();
+                assert_eq!(set.checkpoint.epoch, 17, "{name} w={world}");
+                assert_eq!(set.checkpoint.model, name);
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(
+                    bits(&set.checkpoint.flat_weights),
+                    bits(&flat),
+                    "{name} w={world}: weights must reassemble bitwise"
+                );
+                for ((n0, v0), (n1, v1)) in opt.vectors.iter().zip(&set.optimizer.vectors) {
+                    assert_eq!(n0, n1);
+                    assert_eq!(bits(v0), bits(v1), "{name} w={world}: optimizer vector {n0}");
+                }
+                assert_eq!(opt.scalars, set.optimizer.scalars);
+                assert_eq!(set.residuals, residuals[..world].to_vec());
+            }
+        }
+    }
+
+    #[test]
+    fn v3_lazy_optimizer_state_survives_sharding() {
+        // before the first step Adam's m/v are empty; shards must carry
+        // and reassemble that emptiness instead of fabricating zeros
+        let spec = build_spec("sage", &DIMS).unwrap();
+        let flat = Weights::glorot(&spec, 5).flatten();
+        let opt = crate::optim::by_name("adam", 0.05, 0.0).unwrap().state();
+        let shards = ShardSet::make_shards(&spec, &flat, &opt, &[], 0, 5, 2);
+        let dir = TempDir::new().unwrap();
+        ShardSet::save_all(&shards, dir.path(), "lazy").unwrap();
+        let set = ShardSet::load(dir.path(), "lazy").unwrap();
+        assert!(set.optimizer.vector("m").unwrap().is_empty());
+        assert!(set.optimizer.vector("v").unwrap().is_empty());
+    }
+
+    #[test]
+    fn v3_single_file_loader_redirects_with_clear_error() {
+        let spec = build_spec("sage", &DIMS).unwrap();
+        let flat = Weights::glorot(&spec, 2).flatten();
+        let shards =
+            ShardSet::make_shards(&spec, &flat, &OptimizerState::default(), &[], 3, 2, 2);
+        let dir = TempDir::new().unwrap();
+        ShardSet::save_all(&shards, dir.path(), "run").unwrap();
+        let err = Checkpoint::load(&CheckpointShard::path_for(dir.path(), "run", 0))
+            .expect_err("v3 shard through the v1/v2 loader");
+        assert!(format!("{err:#}").contains("v3"), "{err:#}");
+    }
+
+    #[test]
+    fn corrupt_or_truncated_shard_rejected_with_clear_error() {
+        let spec = build_spec("gcn", &DIMS).unwrap();
+        let flat = Weights::glorot(&spec, 9).flatten();
+        let opt = adam_state_after_steps(flat.len());
+        let shards = ShardSet::make_shards(&spec, &flat, &opt, &[], 4, 9, 2);
+        let dir = TempDir::new().unwrap();
+        ShardSet::save_all(&shards, dir.path(), "run").unwrap();
+        let p1 = CheckpointShard::path_for(dir.path(), "run", 1);
+        let good = std::fs::read(&p1).unwrap();
+        // truncated mid-stream
+        std::fs::write(&p1, &good[..good.len() / 2]).unwrap();
+        let err = ShardSet::load(dir.path(), "run").expect_err("truncated shard");
+        assert!(!format!("{err:#}").is_empty());
+        // flipped rank byte: shard claims a slot it does not own
+        let mut bad = good.clone();
+        bad[8 + 8 * 8] ^= 0x01; // header word 8 = rank
+        std::fs::write(&p1, &bad).unwrap();
+        assert!(ShardSet::load(dir.path(), "run").is_err(), "bad rank must be rejected");
+        // missing shard file entirely
+        std::fs::remove_file(&p1).unwrap();
+        assert!(ShardSet::load(dir.path(), "run").is_err());
+    }
+
+    #[test]
+    fn shard_wire_bytes_roundtrip_and_match_disk_format() {
+        let spec = build_spec("gin", &DIMS).unwrap();
+        let flat = Weights::glorot(&spec, 11).flatten();
+        let opt = adam_state_after_steps(flat.len());
+        let shards = ShardSet::make_shards(&spec, &flat, &opt, &[vec![7u8; 4], vec![]], 2, 11, 2);
+        for s in &shards {
+            let bytes = s.to_bytes();
+            assert_eq!(&CheckpointShard::from_bytes(&bytes).unwrap(), s);
+            // a worker persists the wire bytes verbatim; the on-disk file
+            // must be exactly the same encoding
+            let dir = TempDir::new().unwrap();
+            let p = CheckpointShard::path_for(dir.path(), "w", s.rank);
+            s.save(&p).unwrap();
+            assert_eq!(std::fs::read(&p).unwrap(), bytes);
+        }
+        // trailing garbage after a valid shard is corruption, not slack
+        let mut padded = shards[0].to_bytes();
+        padded.extend_from_slice(&[0u8; 3]);
+        let err = CheckpointShard::from_bytes(&padded).expect_err("trailing bytes");
+        assert!(format!("{err:#}").contains("trailing"), "{err:#}");
+        // truncation at any point errors instead of panicking
+        let whole = shards[0].to_bytes();
+        for cut in [0, 4, 9, whole.len() / 2, whole.len() - 1] {
+            assert!(CheckpointShard::from_bytes(&whole[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn from_shards_validates_rank_zero_too() {
+        let spec = build_spec("sage", &DIMS).unwrap();
+        let flat = Weights::glorot(&spec, 3).flatten();
+        let mut shards =
+            ShardSet::make_shards(&spec, &flat, &OptimizerState::default(), &[], 1, 3, 2);
+        shards[0].rank = 1; // both shards now claim rank 1
+        assert!(ShardSet::from_shards(shards).is_err(), "duplicate rank must be rejected");
+    }
+
+    #[test]
+    fn mixed_epoch_shard_sets_rejected() {
+        let spec = build_spec("sage", &DIMS).unwrap();
+        let flat = Weights::glorot(&spec, 2).flatten();
+        let dir = TempDir::new().unwrap();
+        let s0 = ShardSet::make_shards(&spec, &flat, &OptimizerState::default(), &[], 5, 2, 2);
+        let s1 = ShardSet::make_shards(&spec, &flat, &OptimizerState::default(), &[], 6, 2, 2);
+        s0[0].save(&CheckpointShard::path_for(dir.path(), "run", 0)).unwrap();
+        s1[1].save(&CheckpointShard::path_for(dir.path(), "run", 1)).unwrap();
+        let err = ShardSet::load(dir.path(), "run").expect_err("epochs disagree");
+        assert!(format!("{err:#}").contains("inconsistent"), "{err:#}");
     }
 }

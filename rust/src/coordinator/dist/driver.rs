@@ -1,0 +1,830 @@
+//! The driver process: owns all mutable training state (weights,
+//! optimizer, rate controller, evaluation, the run report), admits
+//! workers over the control channel, broadcasts per-epoch plans, reduces
+//! gradients in rank order, and — the point of this module — survives
+//! worker crashes.
+//!
+//! # Failure model
+//!
+//! A worker is declared dead when its control connection reaches EOF /
+//! errors, or when its heartbeats go silent for `heartbeat_timeout_ms`.
+//! Recovery then proceeds:
+//!
+//! 1. **Pause**: broadcast [`Ctrl::Abort`] so survivors blocked in a
+//!    halo exchange error out of the doomed epoch instead of timing out.
+//! 2. **Re-admit**: wait for the dead rank(s) to rejoin — respawned by
+//!    the driver itself (`spawn_workers`) or by an external supervisor.
+//! 3. **Restore**: reassemble weights + optimizer from the last *fully
+//!    acknowledged* checkpoint shard set (kept in memory; the on-disk
+//!    shards serve whole-cluster restarts via `--resume`), truncate the
+//!    run report back to the restore point.
+//! 4. **Rewire**: `Welcome` the rejoined ranks (full peer directory),
+//!    `Rewind` the survivors (reset data plane, reconnect only the
+//!    changed ranks), then resume broadcasting plans.
+//!
+//! Replayed epochs are bitwise identical to the originals under open-loop
+//! schedules (all per-message state is key-derived); closed-loop
+//! controllers observe replayed epochs twice and therefore land in the
+//! same loss neighborhood rather than on identical bits.
+
+use super::protocol::{read_ctrl, write_ctrl, Ctrl};
+use super::{build_controller, config_hash, DistContext};
+use crate::compress::{LayerFeedback, RateController};
+use crate::config::TrainConfig;
+use crate::coordinator::checkpoint::{CheckpointShard, ShardSet};
+use crate::coordinator::eval::FullGraphEval;
+use crate::coordinator::trainer::{observe_epoch, plan_epoch, push_record};
+use crate::engine::Weights;
+use crate::metrics::RunReport;
+use crate::optim::Optimizer;
+use crate::Result;
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// How `run_driver` is launched.
+pub struct DriverOptions {
+    /// pre-bound control listener (tests bind `127.0.0.1:0` themselves);
+    /// `None` binds `cfg.driver_addr`
+    pub listener: Option<TcpListener>,
+    /// spawn `varco worker --rank R` child processes for every rank and
+    /// respawn them after crashes; off when an external supervisor (or a
+    /// test harness) owns the worker processes
+    pub spawn_workers: bool,
+    /// restore from the on-disk shard set in `cfg.ckpt_dir` before
+    /// training (whole-cluster restart)
+    pub resume: bool,
+}
+
+impl Default for DriverOptions {
+    fn default() -> DriverOptions {
+        DriverOptions { listener: None, spawn_workers: false, resume: false }
+    }
+}
+
+/// What a completed driver run hands back.
+pub struct DistRun {
+    pub report: RunReport,
+    /// final model weights (bitwise identical to the equivalent
+    /// in-process run; pinned by `tests/dist_equivalence.rs`)
+    pub weights: Weights,
+}
+
+enum Event {
+    Join { conn: u64, rank: usize, data_addr: String, config_hash: u64, writer: TcpStream },
+    Msg { conn: u64, rank: usize, ctrl: Ctrl },
+    Dead { conn: u64, rank: usize },
+}
+
+/// Read one control connection: first frame must be a Join, then relay
+/// every message until EOF/error, which becomes a Dead event.
+fn monitor(mut stream: TcpStream, conn: u64, tx: Sender<Event>) {
+    let rank = match read_ctrl(&mut stream) {
+        Ok(Some(Ctrl::Join { rank, data_addr, config_hash })) => {
+            let writer = match stream.try_clone() {
+                Ok(w) => w,
+                Err(_) => return,
+            };
+            if tx.send(Event::Join { conn, rank, data_addr, config_hash, writer }).is_err() {
+                return;
+            }
+            rank
+        }
+        // not a worker (e.g. the shutdown self-wake): drop silently
+        _ => return,
+    };
+    loop {
+        match read_ctrl(&mut stream) {
+            Ok(Some(ctrl)) => {
+                if tx.send(Event::Msg { conn, rank, ctrl }).is_err() {
+                    return;
+                }
+            }
+            Ok(None) | Err(_) => {
+                let _ = tx.send(Event::Dead { conn, rank });
+                return;
+            }
+        }
+    }
+}
+
+struct Slot {
+    conn: u64,
+    writer: TcpStream,
+    data_addr: String,
+}
+
+/// Why an epoch (or ack collection) could not complete.
+enum Interrupt {
+    /// one or more workers died; `Driver::recover` takes over
+    Dead,
+    Fatal(crate::Error),
+}
+
+type Phase<T> = std::result::Result<T, Interrupt>;
+
+fn fatal<T>(e: crate::Error) -> Phase<T> {
+    Err(Interrupt::Fatal(e))
+}
+
+struct Driver<'a> {
+    cfg: &'a TrainConfig,
+    ctx: DistContext,
+    layer_dims: Vec<(usize, usize)>,
+    hash: u64,
+    rx: Receiver<Event>,
+    slots: Vec<Option<Slot>>,
+    /// admitted but not yet sent a Welcome (fresh or re-admitted ranks)
+    needs_welcome: Vec<bool>,
+    last_seen: Vec<Instant>,
+    eval: FullGraphEval,
+    weights: Weights,
+    optimizer: Box<dyn Optimizer>,
+    controller: Box<dyn RateController>,
+    report: RunReport,
+    bytes_cum: usize,
+    /// per-epoch stale-skip deltas; truncated on rewind so replays don't
+    /// double-count
+    stale_by_epoch: Vec<u64>,
+    restarts: usize,
+    recovered_epochs: usize,
+    heartbeat_timeouts: usize,
+    worker_last_ckpt: Vec<Option<usize>>,
+    /// the last shard set every worker acknowledged, kept in memory so
+    /// recovery never depends on on-disk consistency mid-run
+    last_shards: Option<Vec<CheckpointShard>>,
+    children: Vec<Option<Child>>,
+    /// (exe, resolved config path) for (re)spawning workers
+    spawn_cmd: Option<(PathBuf, PathBuf)>,
+    ctrl_addr: std::net::SocketAddr,
+    closing: Arc<AtomicBool>,
+}
+
+const POLL: Duration = Duration::from_millis(50);
+
+impl<'a> Driver<'a> {
+    fn q(&self) -> usize {
+        self.ctx.q
+    }
+
+    fn hb_timeout(&self) -> Duration {
+        Duration::from_millis(self.cfg.heartbeat_timeout_ms)
+    }
+
+    /// Window to wait for a dead rank to reconnect during recovery (or
+    /// for the initial fleet to join).
+    fn join_deadline(&self) -> Instant {
+        Instant::now() + Duration::from_millis(self.cfg.connect_timeout_ms) + Duration::from_secs(10)
+    }
+
+    /// Pull one event and apply connection bookkeeping.  Returns the
+    /// message events the caller's phase must interpret; Join/Dead/
+    /// Heartbeat are absorbed here.  `Ok(None)` = nothing arrived within
+    /// `timeout` AND every queued heartbeat has been folded in, so a
+    /// staleness check right after is sound.
+    fn pump(&mut self, timeout: Duration) -> Result<Option<(usize, Ctrl)>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(Event::Join { conn, rank, data_addr, config_hash, writer }) => {
+                if rank >= self.q() {
+                    eprintln!("[varco driver] rejecting join from out-of-range rank {rank}");
+                    return Ok(None);
+                }
+                if config_hash != self.hash {
+                    eprintln!(
+                        "[varco driver] rejecting rank {rank}: config hash {config_hash:#x} != \
+                         ours {:#x} (the worker was started with a different config)",
+                        self.hash
+                    );
+                    return Ok(None); // dropping `writer` closes the connection
+                }
+                self.slots[rank] = Some(Slot { conn, writer, data_addr });
+                self.needs_welcome[rank] = true;
+                self.last_seen[rank] = Instant::now();
+                Ok(None)
+            }
+            Ok(Event::Msg { conn, rank, ctrl }) => {
+                match &self.slots[rank] {
+                    Some(s) if s.conn == conn => {
+                        self.last_seen[rank] = Instant::now();
+                        if matches!(ctrl, Ctrl::Heartbeat { .. }) {
+                            Ok(None)
+                        } else {
+                            Ok(Some((rank, ctrl)))
+                        }
+                    }
+                    // stale connection generation: discard
+                    _ => Ok(None),
+                }
+            }
+            Ok(Event::Dead { conn, rank }) => {
+                if rank < self.q() {
+                    if let Some(s) = &self.slots[rank] {
+                        if s.conn == conn {
+                            self.slots[rank] = None;
+                        }
+                    }
+                }
+                Ok(None)
+            }
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => {
+                anyhow::bail!("driver event channel closed (accept thread died)")
+            }
+        }
+    }
+
+    /// Declare heartbeat-silent live ranks dead.  Only called right after
+    /// an empty `pump`, so queued heartbeats have been folded in.
+    fn check_stale(&mut self) {
+        let timeout = self.hb_timeout();
+        for r in 0..self.q() {
+            if self.slots[r].is_some() && self.last_seen[r].elapsed() > timeout {
+                eprintln!(
+                    "[varco driver] rank {r}: no heartbeat for {:?}, declaring dead",
+                    timeout
+                );
+                self.heartbeat_timeouts += 1;
+                self.slots[r] = None;
+            }
+        }
+    }
+
+    fn all_alive(&self) -> bool {
+        self.slots.iter().all(|s| s.is_some())
+    }
+
+    /// True while every rank is connected AND fully admitted.  A rank can
+    /// be connected yet `needs_welcome` when a crashed worker rejoined
+    /// before its old connection's Dead event was pumped — the epoch in
+    /// flight is doomed either way, so both conditions interrupt it.
+    fn fleet_intact(&self) -> bool {
+        self.all_alive() && !self.needs_welcome.iter().any(|&w| w)
+    }
+
+    /// Send to one live rank; a failed write is a death.
+    fn send_to(&mut self, rank: usize, msg: &Ctrl) {
+        if let Some(slot) = &mut self.slots[rank] {
+            if write_ctrl(&mut slot.writer, msg).is_err() {
+                self.slots[rank] = None;
+            }
+        }
+    }
+
+    fn broadcast(&mut self, msg: &Ctrl) {
+        for r in 0..self.q() {
+            self.send_to(r, msg);
+        }
+    }
+
+    /// Wait until every rank is admitted, then Welcome the fresh ones and
+    /// collect Ready (from welcomed ranks) / RewindAck (from survivors,
+    /// when `rewind_to` is set).  Used both at startup (all ranks fresh)
+    /// and during recovery.  Returns `Interrupt::Dead` if a rank dies
+    /// mid-barrier.
+    fn admission_barrier(&mut self, resume_epoch: usize, rewind_survivors: bool) -> Phase<()> {
+        let deadline = self.join_deadline();
+        while !self.all_alive() {
+            if Instant::now() > deadline {
+                return fatal(anyhow::anyhow!(
+                    "workers {:?} did not (re)join within the admission window",
+                    (0..self.q()).filter(|&r| self.slots[r].is_none()).collect::<Vec<_>>()
+                ));
+            }
+            // stray epoch results / acks from before a death are binned here
+            if let Err(e) = self.pump(POLL) {
+                return fatal(e);
+            }
+        }
+        let peers: Vec<(usize, String)> = (0..self.q())
+            .map(|r| (r, self.slots[r].as_ref().expect("all alive").data_addr.clone()))
+            .collect();
+        let changed: Vec<(usize, String)> =
+            peers.iter().filter(|(r, _)| self.needs_welcome[*r]).cloned().collect();
+        let mut awaiting_ready = vec![false; self.q()];
+        for r in 0..self.q() {
+            if self.needs_welcome[r] {
+                awaiting_ready[r] = true;
+                self.send_to(r, &Ctrl::Welcome { resume_epoch, peers: peers.clone() });
+            } else if rewind_survivors {
+                self.send_to(r, &Ctrl::Rewind { resume_epoch, peers: changed.clone() });
+            }
+        }
+        let mut ok: Vec<bool> = (0..self.q())
+            .map(|r| !awaiting_ready[r] && !rewind_survivors)
+            .collect();
+        let ack_deadline = self.join_deadline();
+        while !ok.iter().all(|&b| b) {
+            // a rank dying mid-barrier — or dying and rejoining so fast
+            // that only its unwelcomed replacement is visible — restarts
+            // the whole recovery round
+            let rejoined_unwelcomed =
+                (0..self.q()).any(|r| self.needs_welcome[r] && !awaiting_ready[r]);
+            if !self.all_alive() || rejoined_unwelcomed {
+                return Err(Interrupt::Dead);
+            }
+            if Instant::now() > ack_deadline {
+                return fatal(anyhow::anyhow!("admission barrier timed out waiting for acks"));
+            }
+            match self.pump(POLL) {
+                Err(e) => return fatal(e),
+                Ok(None) => self.check_stale(),
+                Ok(Some((rank, Ctrl::Ready { rank: r2 }))) if rank == r2 => ok[rank] = true,
+                Ok(Some((rank, Ctrl::RewindAck { rank: r2 }))) if rank == r2 => ok[rank] = true,
+                Ok(Some(_)) => {} // stray pre-death message: discard
+            }
+        }
+        self.needs_welcome.iter_mut().for_each(|w| *w = false);
+        Ok(())
+    }
+
+    /// One epoch: broadcast the plan, collect every rank's outcome,
+    /// reduce gradients in rank order, step the optimizer, close the
+    /// controller loop, and append the epoch record.
+    fn run_epoch(&mut self, epoch: usize) -> Phase<()> {
+        let t0 = Instant::now();
+        let plan = plan_epoch(self.controller.as_ref(), epoch, self.layer_dims.len());
+        let flat_w = self.weights.flatten();
+        self.broadcast(&Ctrl::Plan {
+            epoch,
+            fwd: plan.fwd.clone(),
+            bwd: plan.bwd.clone(),
+            nominal: plan.nominal,
+            feedback: plan.feedback,
+            local_norm: plan.local_norm,
+            weights: flat_w,
+        });
+        if !self.fleet_intact() {
+            return Err(Interrupt::Dead);
+        }
+
+        // collect one outcome per rank; on a worker-reported error, hold
+        // a grace window first — the error is usually collateral of a
+        // peer's death (its link went down), and the death event is what
+        // should drive recovery, not the collateral
+        let mut outs: Vec<Option<Ctrl>> = (0..self.q()).map(|_| None).collect();
+        let mut worker_error: Option<(usize, String, Instant)> = None;
+        while outs.iter().any(|o| o.is_none()) {
+            if !self.fleet_intact() {
+                return Err(Interrupt::Dead);
+            }
+            if let Some((rank, msg, since)) = &worker_error {
+                if since.elapsed() > self.hb_timeout() {
+                    return fatal(anyhow::anyhow!("worker {rank} failed epoch {epoch}: {msg}"));
+                }
+            }
+            match self.pump(POLL) {
+                Err(e) => return fatal(e),
+                Ok(None) => self.check_stale(),
+                Ok(Some((rank, Ctrl::Outcome { epoch: e, error: Some(msg), .. })))
+                    if e == epoch =>
+                {
+                    if worker_error.is_none() {
+                        worker_error = Some((rank, msg, Instant::now()));
+                    }
+                }
+                Ok(Some((rank, out @ Ctrl::Outcome { .. }))) => {
+                    if let Ctrl::Outcome { epoch: e, rank: r2, .. } = &out {
+                        if *e == epoch && *r2 == rank {
+                            outs[rank] = Some(out);
+                        }
+                        // stale epoch outcomes (pre-recovery stragglers): discard
+                    }
+                }
+                Ok(Some(_)) => {} // stray ack: discard
+            }
+        }
+
+        // ---- server step (rank-order reduction == the in-process order) ----
+        let param_count = self.weights.param_count();
+        let mut grad_acc = vec![0.0f32; param_count];
+        let mut loss_weighted = 0.0f32;
+        let mut epoch_bytes: usize = 0;
+        let mut stale_delta: u64 = 0;
+        let mut cells: Vec<Vec<LayerFeedback>> = Vec::with_capacity(self.q());
+        for (rank, out) in outs.into_iter().enumerate() {
+            let Some(Ctrl::Outcome { loss_weighted: lw, grads, feedback, bytes, stale_skipped, .. }) =
+                out
+            else {
+                unreachable!("collected above");
+            };
+            if grads.len() != param_count {
+                return fatal(anyhow::anyhow!(
+                    "worker {rank} returned {} gradient floats, model has {param_count}",
+                    grads.len()
+                ));
+            }
+            for (a, g) in grad_acc.iter_mut().zip(&grads) {
+                *a += g;
+            }
+            loss_weighted += lw;
+            epoch_bytes += bytes as usize;
+            stale_delta += stale_skipped;
+            cells.push(feedback);
+        }
+        let loss = loss_weighted / self.ctx.setup.total_train;
+        // weight-sync accounting: same constant charge as the in-process
+        // ledger (gradients up, weights down, per worker)
+        let wbytes = param_count * 4;
+        epoch_bytes += 2 * self.q() * wbytes;
+        self.bytes_cum += epoch_bytes;
+        self.stale_by_epoch.push(stale_delta);
+
+        let mut flat = self.weights.flatten();
+        self.optimizer.step(&mut flat, &grad_acc);
+        self.weights.set_from_flat(&flat);
+        observe_epoch(
+            self.controller.as_mut(),
+            &plan,
+            epoch,
+            epoch_bytes,
+            cells.iter().map(|c| c.as_slice()),
+        );
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        if let Err(e) = push_record(
+            &mut self.report,
+            &self.eval,
+            &self.weights,
+            self.cfg.eval_every,
+            self.cfg.epochs,
+            plan.nominal,
+            self.bytes_cum,
+            epoch,
+            loss,
+            wall_ms,
+        ) {
+            return fatal(e);
+        }
+        Ok(())
+    }
+
+    /// Ship per-rank shards after `epoch` and wait for every ack; only a
+    /// fully acknowledged set becomes the recovery point.
+    fn checkpoint(&mut self, epoch: usize) -> Phase<()> {
+        let shards = ShardSet::make_shards(
+            &self.ctx.spec,
+            &self.weights.flatten(),
+            &self.optimizer.state(),
+            &vec![Vec::new(); self.q()],
+            epoch,
+            self.cfg.seed,
+            self.q(),
+        );
+        for (r, s) in shards.iter().enumerate() {
+            self.send_to(r, &Ctrl::Checkpoint { epoch, shard: s.to_bytes() });
+        }
+        let mut acked = vec![false; self.q()];
+        let deadline = Instant::now() + self.hb_timeout() + Duration::from_secs(30);
+        while !acked.iter().all(|&a| a) {
+            if !self.fleet_intact() {
+                return Err(Interrupt::Dead);
+            }
+            if Instant::now() > deadline {
+                return fatal(anyhow::anyhow!("checkpoint acks timed out at epoch {epoch}"));
+            }
+            match self.pump(POLL) {
+                Err(e) => return fatal(e),
+                Ok(None) => self.check_stale(),
+                Ok(Some((rank, Ctrl::CkptAck { rank: r2, epoch: e }))) => {
+                    if rank == r2 && e == epoch {
+                        acked[rank] = true;
+                        self.worker_last_ckpt[rank] = Some(epoch);
+                    }
+                }
+                Ok(Some(_)) => {}
+            }
+        }
+        self.last_shards = Some(shards);
+        Ok(())
+    }
+
+    fn ckpt_due(&self, epoch: usize) -> bool {
+        self.cfg.ckpt_every > 0
+            && ((epoch + 1) % self.cfg.ckpt_every == 0 || epoch + 1 == self.cfg.epochs)
+    }
+
+    fn spawn_worker(&mut self, rank: usize, clear_crash: bool) -> Result<()> {
+        let Some((exe, cfg_path)) = &self.spawn_cmd else {
+            return Ok(()); // external supervisor owns the processes
+        };
+        let mut cmd = Command::new(exe);
+        cmd.arg("worker")
+            .arg("--config")
+            .arg(cfg_path)
+            .arg("--rank")
+            .arg(rank.to_string());
+        if clear_crash {
+            // a respawned worker must not re-trip the injected crash
+            cmd.arg("--crash_at=");
+        }
+        let child = cmd
+            .spawn()
+            .map_err(|e| anyhow::anyhow!("cannot spawn worker {rank} ({exe:?}): {e}"))?;
+        if let Some(mut old) = self.children[rank].take() {
+            let _ = old.kill();
+            let _ = old.wait();
+        }
+        self.children[rank] = Some(child);
+        Ok(())
+    }
+
+    /// Full crash recovery.  `epoch_in_progress` is the epoch that was
+    /// running (or about to run) when the death was detected; returns the
+    /// epoch to resume from.
+    fn recover(&mut self, epoch_in_progress: usize) -> Result<usize> {
+        loop {
+            // a rank is part of this recovery round if its connection is
+            // gone OR it already rejoined with a fresh, unwelcomed one
+            let dead: Vec<usize> = (0..self.q())
+                .filter(|&r| self.slots[r].is_none() || self.needs_welcome[r])
+                .collect();
+            anyhow::ensure!(!dead.is_empty(), "recover invoked with every worker alive");
+            self.restarts += dead.len();
+            anyhow::ensure!(
+                self.restarts <= self.cfg.max_restarts,
+                "worker(s) {dead:?} died at epoch {epoch_in_progress} and the restart budget \
+                 (max_restarts = {}) is exhausted",
+                self.cfg.max_restarts
+            );
+            eprintln!(
+                "[varco driver] worker(s) {dead:?} lost at epoch {epoch_in_progress}; \
+                 recovering (restarts {}/{})",
+                self.restarts, self.cfg.max_restarts
+            );
+            // pause survivors: abort wakes any blocked halo receive.
+            // Freshly rejoined ranks are skipped — they have nothing in
+            // flight and an abort would poison their reset data plane.
+            for r in 0..self.q() {
+                if !self.needs_welcome[r] {
+                    self.send_to(r, &Ctrl::Abort);
+                }
+            }
+            for &r in &dead {
+                if self.slots[r].is_none() {
+                    self.spawn_worker(r, true)?;
+                }
+            }
+            let resume = match &self.last_shards {
+                Some(shards) => {
+                    let ss = ShardSet::from_shards(shards.clone())?;
+                    anyhow::ensure!(
+                        ss.checkpoint.model == self.ctx.spec.name
+                            && ss.checkpoint.seed == self.cfg.seed,
+                        "retained shard set does not match this run"
+                    );
+                    self.weights = ss.checkpoint.to_weights()?;
+                    self.optimizer = crate::optim::by_name(
+                        &self.cfg.optimizer,
+                        self.cfg.lr,
+                        self.cfg.weight_decay,
+                    )?;
+                    self.optimizer.restore(&ss.optimizer)?;
+                    ss.checkpoint.epoch + 1
+                }
+                None => {
+                    // no checkpoint yet: restart training from scratch
+                    self.weights = Weights::glorot(&self.ctx.spec, self.cfg.seed);
+                    self.optimizer = crate::optim::by_name(
+                        &self.cfg.optimizer,
+                        self.cfg.lr,
+                        self.cfg.weight_decay,
+                    )?;
+                    0
+                }
+            };
+            self.report.records.truncate(resume);
+            self.stale_by_epoch.truncate(resume);
+            self.bytes_cum = self.report.records.last().map(|r| r.bytes_cum).unwrap_or(0);
+            match self.admission_barrier(resume, true) {
+                Ok(()) => {
+                    // counted only once recovery succeeds, so a second
+                    // death mid-barrier doesn't double-bill the replay
+                    self.recovered_epochs += epoch_in_progress - resume;
+                    eprintln!("[varco driver] recovered; replaying from epoch {resume}");
+                    return Ok(resume);
+                }
+                Err(Interrupt::Dead) => continue, // another death mid-recovery
+                Err(Interrupt::Fatal(e)) => return Err(e),
+            }
+        }
+    }
+
+    fn shutdown(&mut self) {
+        self.broadcast(&Ctrl::Shutdown);
+        // unblock and retire the accept loop
+        self.closing.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect_timeout(&self.ctrl_addr, Duration::from_millis(250));
+        // reap children: give them a moment to exit on their own
+        let deadline = Instant::now() + Duration::from_secs(5);
+        for r in 0..self.children.len() {
+            if let Some(mut child) = self.children[r].take() {
+                loop {
+                    match child.try_wait() {
+                        Ok(Some(_)) => break,
+                        Ok(None) if Instant::now() > deadline => {
+                            let _ = child.kill();
+                            let _ = child.wait();
+                            break;
+                        }
+                        Ok(None) => std::thread::sleep(Duration::from_millis(50)),
+                        Err(_) => break,
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Run the driver to completion.  Blocks until the configured number of
+/// epochs has been trained (surviving up to `max_restarts` worker
+/// deaths) and every worker has been told to shut down.
+pub fn run_driver(cfg: &TrainConfig, opts: DriverOptions) -> Result<DistRun> {
+    anyhow::ensure!(
+        cfg.transport == "tcp",
+        "run_driver requires transport=tcp (got {:?})",
+        cfg.transport
+    );
+    let ctx = DistContext::build(cfg)?;
+    let listener = match opts.listener {
+        Some(l) => l,
+        None => TcpListener::bind(&cfg.driver_addr)
+            .map_err(|e| anyhow::anyhow!("driver cannot bind {:?}: {e}", cfg.driver_addr))?,
+    };
+    let ctrl_addr = listener.local_addr()?;
+
+    // accept thread: one monitor thread per control connection
+    let (accept_tx, rx) = channel::<Event>();
+    let closing = Arc::new(AtomicBool::new(false));
+    let accept_closing = Arc::clone(&closing);
+    std::thread::Builder::new()
+        .name("varco-driver-accept".into())
+        .spawn(move || {
+            let mut next_conn: u64 = 0;
+            for conn in listener.incoming() {
+                if accept_closing.load(Ordering::SeqCst) {
+                    break; // shutdown self-connect woke us
+                }
+                let Ok(stream) = conn else { break };
+                let id = next_conn;
+                next_conn += 1;
+                let mtx = accept_tx.clone();
+                let _ = std::thread::Builder::new()
+                    .name(format!("varco-driver-monitor-{id}"))
+                    .spawn(move || monitor(stream, id, mtx));
+            }
+        })
+        .map_err(|e| anyhow::anyhow!("cannot spawn accept thread: {e}"))?;
+
+    let q = ctx.q;
+    let layer_dims = ctx.spec.layer_dims();
+    let eval = FullGraphEval::new(&ctx.dataset, &ctx.spec);
+    let controller = build_controller(cfg)?;
+    let report = RunReport {
+        algorithm: controller.label(),
+        dataset: ctx.dataset.name.clone(),
+        partitioner: cfg.partitioner.clone(),
+        q,
+        seed: cfg.seed,
+        engine: "native".into(),
+        model: ctx.spec.name.clone(),
+        records: Vec::new(),
+        stale_skipped: 0,
+        // per-link cells never leave the worker processes; dist reports
+        // carry aggregate bytes only (documented in README)
+        link_bytes: Vec::new(),
+        ..Default::default()
+    };
+    let mut driver = Driver {
+        cfg,
+        hash: config_hash(cfg),
+        layer_dims,
+        rx,
+        slots: (0..q).map(|_| None).collect(),
+        needs_welcome: vec![false; q],
+        last_seen: vec![Instant::now(); q],
+        eval,
+        weights: Weights::glorot(&ctx.spec, cfg.seed),
+        optimizer: crate::optim::by_name(&cfg.optimizer, cfg.lr, cfg.weight_decay)?,
+        controller,
+        report,
+        bytes_cum: 0,
+        stale_by_epoch: Vec::new(),
+        restarts: 0,
+        recovered_epochs: 0,
+        heartbeat_timeouts: 0,
+        worker_last_ckpt: vec![None; q],
+        last_shards: None,
+        children: (0..q).map(|_| None).collect(),
+        spawn_cmd: None,
+        ctrl_addr,
+        closing,
+        ctx,
+    };
+
+    // whole-cluster restart: adopt the on-disk shard set as both the
+    // starting state and the recovery point
+    let mut start_epoch = 0;
+    if opts.resume {
+        let dir = std::path::Path::new(&cfg.ckpt_dir);
+        let ss = ShardSet::load(dir, "dist")
+            .map_err(|e| anyhow::anyhow!("--resume: cannot load shard set from {dir:?}: {e}"))?;
+        anyhow::ensure!(
+            ss.checkpoint.model == driver.ctx.spec.name && ss.checkpoint.seed == cfg.seed,
+            "--resume: shard set in {dir:?} is from a different run \
+             (model {} seed {}, config says {} / {})",
+            ss.checkpoint.model,
+            ss.checkpoint.seed,
+            driver.ctx.spec.name,
+            cfg.seed
+        );
+        start_epoch = ss.checkpoint.epoch + 1;
+        driver.weights = ss.checkpoint.to_weights()?;
+        driver.optimizer.restore(&ss.optimizer)?;
+        driver.last_shards = Some(ShardSet::make_shards(
+            &driver.ctx.spec,
+            &ss.checkpoint.flat_weights,
+            &ss.optimizer,
+            &ss.residuals,
+            ss.checkpoint.epoch,
+            cfg.seed,
+            q,
+        ));
+        eprintln!("[varco driver] resuming from epoch {start_epoch} ({dir:?})");
+    }
+
+    if opts.spawn_workers {
+        // persist the resolved config (with the actual bound address) so
+        // children — and any respawn — see exactly this run
+        let dir = std::path::Path::new(&cfg.ckpt_dir);
+        std::fs::create_dir_all(dir)?;
+        let cfg_path = dir.join("resolved.cfg");
+        let mut resolved = cfg.clone();
+        resolved.driver_addr = ctrl_addr.to_string();
+        std::fs::write(&cfg_path, resolved.to_config_string())?;
+        let exe = std::env::current_exe()
+            .map_err(|e| anyhow::anyhow!("cannot locate the varco binary: {e}"))?;
+        driver.spawn_cmd = Some((exe, cfg_path));
+        for r in 0..q {
+            driver.spawn_worker(r, false)?;
+        }
+    }
+
+    eprintln!(
+        "[varco driver] control plane on {ctrl_addr}; waiting for {q} worker(s) \
+         [{}]",
+        driver.cfg.describe()
+    );
+    match driver.admission_barrier(start_epoch, false) {
+        Ok(()) => {}
+        Err(Interrupt::Dead) => {
+            // a worker died before the first plan; recovery re-runs the barrier
+            start_epoch = match driver.recover(start_epoch) {
+                Ok(e) => e,
+                Err(e) => {
+                    driver.shutdown();
+                    return Err(e);
+                }
+            };
+        }
+        Err(Interrupt::Fatal(e)) => {
+            driver.shutdown();
+            return Err(e);
+        }
+    }
+
+    let mut epoch = start_epoch;
+    while epoch < cfg.epochs {
+        let step = driver.run_epoch(epoch).and_then(|()| {
+            if driver.ckpt_due(epoch) {
+                driver.checkpoint(epoch)
+            } else {
+                Ok(())
+            }
+        });
+        match step {
+            Ok(()) => epoch += 1,
+            Err(Interrupt::Dead) => match driver.recover(epoch) {
+                Ok(resume) => epoch = resume,
+                Err(e) => {
+                    driver.shutdown();
+                    return Err(e);
+                }
+            },
+            Err(Interrupt::Fatal(e)) => {
+                driver.shutdown();
+                return Err(e);
+            }
+        }
+    }
+
+    driver.shutdown();
+    driver.report.stale_skipped = driver.stale_by_epoch.iter().sum::<u64>() as usize;
+    driver.report.restarts = driver.restarts;
+    driver.report.recovered_epochs = driver.recovered_epochs;
+    driver.report.heartbeat_timeouts = driver.heartbeat_timeouts;
+    driver.report.worker_last_ckpt = driver.worker_last_ckpt.clone();
+    Ok(DistRun { report: driver.report, weights: driver.weights })
+}

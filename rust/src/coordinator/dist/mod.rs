@@ -1,0 +1,192 @@
+//! Multi-process training runtime: a driver process plus one worker
+//! process per rank, speaking the [`protocol`] control channel, with the
+//! data plane (halo exchanges) carried by [`TcpTransport`] links between
+//! workers.
+//!
+//! The design principle is **deterministic reconstruction**: every
+//! process rebuilds the complete run setup — dataset, partition, send
+//! plans, model spec — from the shared config via [`DistContext::build`],
+//! so only mutable state crosses the wire.  The driver owns all of it
+//! (weights, optimizer, rate controller, evaluation, the run report);
+//! workers are stateless across epochs because each [`protocol::Ctrl::Plan`]
+//! carries the full flat weight vector.  That statelessness is the whole
+//! crash-recovery story: re-admitting a restarted worker requires no
+//! state transfer beyond the next plan.
+//!
+//! Fault tolerance (see `driver`): worker death is detected by control-
+//! connection EOF or heartbeat silence; the driver aborts survivors'
+//! in-flight epoch, re-admits (or respawns) the dead rank, restores
+//! weights + optimizer from the last fully-acknowledged checkpoint shard
+//! set, rewinds the run report, and replays from that epoch.  With
+//! `ckpt_every = 1` and an open-loop schedule the replay is bitwise
+//! identical to the uninterrupted run; closed-loop controllers observe
+//! replayed epochs twice, so those runs converge to the same loss
+//! neighborhood rather than the same bits (documented in README).
+//!
+//! Determinism across transports: for identical configs, a tcp run and an
+//! in-process run produce bitwise-identical weights.  Per-position f32
+//! gradient accumulation is order-independent across parameters, and the
+//! driver sums worker gradient vectors in rank order — exactly the
+//! in-process reduction order; compression masks and failure coins are
+//! key-derived from (seed, epoch, layer, sender, receiver), not from
+//! arrival order.  `tests/dist_equivalence.rs` pins this.
+//!
+//! [`TcpTransport`]: crate::comm::TcpTransport
+
+pub mod driver;
+pub mod protocol;
+pub mod worker;
+
+pub use driver::{run_driver, DistRun, DriverOptions};
+pub use worker::{run_worker, CrashBehavior, WorkerOptions};
+
+use crate::comm::TcpOptions;
+use crate::compress::{BudgetController, OpenLoopController, RateController};
+use crate::config::TrainConfig;
+use crate::coordinator::trainer::RunSetup;
+use crate::engine::{ModelDims, ModelSpec};
+use crate::graph::Dataset;
+use crate::model::build_spec;
+use crate::partition::WorkerGraph;
+use crate::Result;
+use std::time::Duration;
+
+/// Everything a dist process deterministically rebuilds from the config.
+pub(crate) struct DistContext {
+    pub(crate) dataset: Dataset,
+    pub(crate) spec: ModelSpec,
+    pub(crate) setup: RunSetup,
+    pub(crate) worker_graphs: Vec<WorkerGraph>,
+    pub(crate) q: usize,
+}
+
+impl DistContext {
+    pub(crate) fn build(cfg: &TrainConfig) -> Result<DistContext> {
+        anyhow::ensure!(
+            cfg.engine == "native",
+            "the multi-process runtime supports engine=native only (got {:?})",
+            cfg.engine
+        );
+        anyhow::ensure!(
+            !cfg.overlap,
+            "the multi-process runtime uses the fused layer schedule; run with overlap=off \
+             (results are bitwise identical either way)"
+        );
+        anyhow::ensure!(cfg.layers >= 1, "layers must be >= 1");
+        let dataset = Dataset::load(&cfg.dataset, cfg.nodes, cfg.seed)?;
+        let partitioner = crate::partition::by_name(&cfg.partitioner, cfg.seed)?;
+        let partition = partitioner.partition(&dataset.graph, cfg.q)?;
+        let worker_graphs = WorkerGraph::build_all(&dataset.graph, &partition)?;
+        let dims = ModelDims {
+            f_in: dataset.f_in(),
+            hidden: cfg.hidden,
+            classes: dataset.classes,
+            layers: cfg.layers,
+        };
+        let spec = build_spec(&cfg.model, &dims)?;
+        let setup = RunSetup::build(
+            &dataset,
+            &worker_graphs,
+            &spec,
+            crate::partition::PlanMode::parse(&cfg.plan)?,
+            cfg.replication,
+        )?;
+        Ok(DistContext { dataset, spec, setup, worker_graphs, q: cfg.q })
+    }
+}
+
+/// FNV-1a over the training-semantic config fields.  Runtime plumbing
+/// (addresses, timeouts, checkpoint cadence, crash injection) is
+/// deliberately excluded: a respawned worker with crash injection cleared
+/// must still hash-match the driver.
+pub fn config_hash(cfg: &TrainConfig) -> u64 {
+    let canon = format!(
+        "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
+        cfg.dataset,
+        cfg.nodes,
+        cfg.q,
+        cfg.partitioner,
+        cfg.comm,
+        cfg.compressor,
+        cfg.engine,
+        cfg.epochs,
+        cfg.hidden,
+        cfg.layers,
+        cfg.model,
+        cfg.optimizer,
+        cfg.lr,
+        cfg.weight_decay,
+        cfg.seed,
+        cfg.eval_every,
+        cfg.drop_prob,
+        cfg.stale_prob,
+        cfg.overlap,
+        cfg.plan,
+        cfg.replication,
+    );
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in canon.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Data-plane socket options from the config's timeout knobs.
+pub(crate) fn tcp_options(cfg: &TrainConfig) -> TcpOptions {
+    TcpOptions {
+        connect_timeout: Duration::from_millis(cfg.connect_timeout_ms),
+        read_timeout: Duration::from_millis(cfg.read_timeout_ms),
+        ..TcpOptions::default()
+    }
+}
+
+/// The rate controller for a run: `budget:*` comm specs are closed-loop,
+/// everything else replays the named open-loop schedule.  Mirrors
+/// `config::build_trainer_with_dataset`.
+pub(crate) fn build_controller(cfg: &TrainConfig) -> Result<Box<dyn RateController>> {
+    Ok(match cfg.budget_spec()? {
+        Some((bytes, c_max)) => {
+            Box::new(BudgetController::new(bytes, cfg.epochs, cfg.layers, c_max))
+        }
+        None => Box::new(OpenLoopController::new(cfg.comm_mode()?)),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_hash_tracks_semantics_not_runtime() {
+        let a = TrainConfig::default_quickstart();
+        let mut b = a.clone();
+        b.driver_addr = "127.0.0.1:9999".into();
+        b.heartbeat_ms = 17;
+        b.ckpt_every = 3;
+        b.crash_at = "2:1".into();
+        b.max_restarts = 9;
+        b.transport = "tcp".into();
+        assert_eq!(config_hash(&a), config_hash(&b), "runtime keys must not affect the hash");
+        let mut c = a.clone();
+        c.lr = 0.5;
+        assert_ne!(config_hash(&a), config_hash(&c));
+        let mut d = a.clone();
+        d.seed = 77;
+        assert_ne!(config_hash(&a), config_hash(&d));
+    }
+
+    #[test]
+    fn dist_context_rejects_non_native_and_overlap() {
+        let mut cfg = TrainConfig::default_quickstart();
+        cfg.engine = "pjrt".into();
+        assert!(DistContext::build(&cfg).is_err());
+        cfg.engine = "native".into();
+        cfg.overlap = true;
+        assert!(DistContext::build(&cfg).is_err());
+        cfg.overlap = false;
+        let ctx = DistContext::build(&cfg).unwrap();
+        assert_eq!(ctx.q, 2);
+        assert_eq!(ctx.worker_graphs.len(), 2);
+    }
+}

@@ -1,0 +1,522 @@
+//! The driver <-> worker control protocol.
+//!
+//! Control messages ride the same length-prefixed frame codec as the data
+//! plane (`comm::transport::frame`, tag [`TAG_CTRL`]) over a dedicated
+//! TCP connection per worker.  The protocol is deliberately thin: because
+//! every process deterministically rebuilds the full run setup from the
+//! shared config (see `coordinator::trainer::RunSetup`), only mutable
+//! training state crosses the wire — flat weights out in each [`Ctrl::Plan`],
+//! flat gradient sums back in each [`Ctrl::Outcome`], checkpoint shard bytes
+//! in [`Ctrl::Checkpoint`].
+//!
+//! Lifecycle: a worker connects and sends [`Ctrl::Join`]; the driver
+//! answers [`Ctrl::Welcome`] with the data-plane peer addresses; the
+//! worker wires its [`TcpTransport`](crate::comm::TcpTransport) links and
+//! confirms [`Ctrl::Ready`].  Per epoch the driver broadcasts a `Plan` and
+//! collects one `Outcome` per rank.  On a worker death the driver
+//! broadcasts [`Ctrl::Abort`] (waking survivors out of any blocked
+//! receive), re-admits the restarted rank, and sends survivors
+//! [`Ctrl::Rewind`] with the changed peer addresses.  [`Ctrl::Heartbeat`]
+//! flows worker->driver on a fixed cadence so hangs (not just socket
+//! deaths) are detected.
+//!
+//! Encoding is hand-rolled little-endian (no serde in the dependency
+//! footprint), with explicit caps on every length field so a corrupt or
+//! hostile peer produces a clear error instead of an allocation blow-up.
+
+use crate::comm::transport::frame::{read_frame, write_frame, TAG_CTRL};
+use crate::compress::LayerFeedback;
+use crate::Result;
+use std::io::{Read, Write};
+
+/// Longest admissible string field (addresses, error messages).
+const MAX_STR: u64 = 1 << 16;
+/// Longest admissible f32 vector (weights/gradients; 1<<28 floats = 1 GiB).
+const MAX_F32S: u64 = 1 << 28;
+/// Most peers / layers a message may carry.
+const MAX_ITEMS: u64 = 1 << 20;
+
+/// One control-plane message.  See the module docs for the lifecycle.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Ctrl {
+    /// worker -> driver: first message on the control connection
+    Join {
+        rank: usize,
+        /// advertised data-plane listen address of this worker
+        data_addr: String,
+        /// FNV hash of the training-semantic config; the driver refuses
+        /// ranks whose view of the run disagrees with its own
+        config_hash: u64,
+    },
+    /// driver -> worker: admission + full data-plane peer directory
+    Welcome {
+        /// first epoch the worker will be asked to run (0 on a fresh
+        /// start, the replay point after a recovery)
+        resume_epoch: usize,
+        /// (rank, data_addr) for every rank, self included
+        peers: Vec<(usize, String)>,
+    },
+    /// worker -> driver: data-plane links are wired, ready for plans
+    Ready { rank: usize },
+    /// driver -> worker: one epoch of work (weights travel with the plan,
+    /// which is what makes workers stateless across epochs — and is the
+    /// entire recovery story: re-admitted ranks need no state transfer)
+    Plan {
+        epoch: usize,
+        fwd: Vec<Option<f32>>,
+        bwd: Vec<Option<f32>>,
+        nominal: Option<f32>,
+        feedback: bool,
+        local_norm: bool,
+        weights: Vec<f32>,
+    },
+    /// worker -> driver: the epoch's result (or a compute error)
+    Outcome {
+        rank: usize,
+        epoch: usize,
+        loss_weighted: f32,
+        /// flat parameter-gradient contribution (empty when `error`)
+        grads: Vec<f32>,
+        /// per-layer wire/error measurements for the rate controller
+        feedback: Vec<LayerFeedback>,
+        /// fabric byte-counter delta over this epoch
+        bytes: u64,
+        /// stale-injection skip-counter delta over this epoch
+        stale_skipped: u64,
+        error: Option<String>,
+    },
+    /// worker -> driver: liveness beacon on a fixed cadence
+    Heartbeat { rank: usize },
+    /// driver -> worker: persist this rank's checkpoint shard
+    Checkpoint { epoch: usize, shard: Vec<u8> },
+    /// worker -> driver: shard durably written
+    CkptAck { rank: usize, epoch: usize },
+    /// driver -> survivor: a rank was restarted; reset the data plane,
+    /// reconnect the listed (changed) peers, and await replayed plans
+    Rewind { resume_epoch: usize, peers: Vec<(usize, String)> },
+    /// worker -> driver: rewind applied, links rewired
+    RewindAck { rank: usize },
+    /// driver -> worker: abandon the in-flight epoch (wakes any blocked
+    /// data-plane receive via `TcpTransport::abort`)
+    Abort,
+    /// driver -> worker: run complete, exit cleanly
+    Shutdown,
+}
+
+// ---- primitive writers -------------------------------------------------
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u64(buf, s.len() as u64);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    put_u64(buf, xs.len() as u64);
+    for &x in xs {
+        put_f32(buf, x);
+    }
+}
+
+fn put_opt_f32(buf: &mut Vec<u8>, v: Option<f32>) {
+    match v {
+        Some(x) => {
+            buf.push(1);
+            put_f32(buf, x);
+        }
+        None => buf.push(0),
+    }
+}
+
+fn put_rates(buf: &mut Vec<u8>, rates: &[Option<f32>]) {
+    put_u64(buf, rates.len() as u64);
+    for &r in rates {
+        put_opt_f32(buf, r);
+    }
+}
+
+fn put_bytes(buf: &mut Vec<u8>, b: &[u8]) {
+    put_u64(buf, b.len() as u64);
+    buf.extend_from_slice(b);
+}
+
+// ---- primitive readers -------------------------------------------------
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.buf.len() - self.pos >= n,
+            "ctrl decode: truncated {what} (need {n} bytes at offset {}, have {})",
+            self.pos,
+            self.buf.len() - self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let s = self.take(8, what)?;
+        Ok(u64::from_le_bytes(s.try_into().unwrap()))
+    }
+
+    fn usize_capped(&mut self, cap: u64, what: &str) -> Result<usize> {
+        let v = self.u64(what)?;
+        anyhow::ensure!(v <= cap, "ctrl decode: {what} length {v} exceeds cap {cap}");
+        Ok(v as usize)
+    }
+
+    fn f32(&mut self, what: &str) -> Result<f32> {
+        let s = self.take(4, what)?;
+        Ok(f32::from_le_bytes(s.try_into().unwrap()))
+    }
+
+    fn str_(&mut self, what: &str) -> Result<String> {
+        let n = self.usize_capped(MAX_STR, what)?;
+        let s = self.take(n, what)?;
+        String::from_utf8(s.to_vec())
+            .map_err(|_| anyhow::anyhow!("ctrl decode: {what} is not valid utf-8"))
+    }
+
+    fn f32s(&mut self, what: &str) -> Result<Vec<f32>> {
+        let n = self.usize_capped(MAX_F32S, what)?;
+        let s = self.take(n * 4, what)?;
+        Ok(s.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn opt_f32(&mut self, what: &str) -> Result<Option<f32>> {
+        match self.u8(what)? {
+            0 => Ok(None),
+            1 => Ok(Some(self.f32(what)?)),
+            t => anyhow::bail!("ctrl decode: bad option tag {t} in {what}"),
+        }
+    }
+
+    fn rates(&mut self, what: &str) -> Result<Vec<Option<f32>>> {
+        let n = self.usize_capped(MAX_ITEMS, what)?;
+        (0..n).map(|_| self.opt_f32(what)).collect()
+    }
+
+    fn bytes(&mut self, what: &str) -> Result<Vec<u8>> {
+        let n = self.usize_capped(MAX_F32S * 4, what)?;
+        Ok(self.take(n, what)?.to_vec())
+    }
+
+    fn done(&self, what: &str) -> Result<()> {
+        anyhow::ensure!(
+            self.pos == self.buf.len(),
+            "ctrl decode: {} trailing bytes after {what}",
+            self.buf.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+// ---- message codec -----------------------------------------------------
+
+const T_JOIN: u8 = 1;
+const T_WELCOME: u8 = 2;
+const T_READY: u8 = 3;
+const T_PLAN: u8 = 4;
+const T_OUTCOME: u8 = 5;
+const T_HEARTBEAT: u8 = 6;
+const T_CHECKPOINT: u8 = 7;
+const T_CKPT_ACK: u8 = 8;
+const T_REWIND: u8 = 9;
+const T_REWIND_ACK: u8 = 10;
+const T_ABORT: u8 = 11;
+const T_SHUTDOWN: u8 = 12;
+
+fn put_peers(buf: &mut Vec<u8>, peers: &[(usize, String)]) {
+    put_u64(buf, peers.len() as u64);
+    for (rank, addr) in peers {
+        put_u64(buf, *rank as u64);
+        put_str(buf, addr);
+    }
+}
+
+fn read_peers(c: &mut Cursor, what: &str) -> Result<Vec<(usize, String)>> {
+    let n = c.usize_capped(MAX_ITEMS, what)?;
+    (0..n).map(|_| Ok((c.u64(what)? as usize, c.str_(what)?))).collect()
+}
+
+pub fn encode_ctrl(msg: &Ctrl) -> Vec<u8> {
+    let mut b = Vec::new();
+    match msg {
+        Ctrl::Join { rank, data_addr, config_hash } => {
+            b.push(T_JOIN);
+            put_u64(&mut b, *rank as u64);
+            put_str(&mut b, data_addr);
+            put_u64(&mut b, *config_hash);
+        }
+        Ctrl::Welcome { resume_epoch, peers } => {
+            b.push(T_WELCOME);
+            put_u64(&mut b, *resume_epoch as u64);
+            put_peers(&mut b, peers);
+        }
+        Ctrl::Ready { rank } => {
+            b.push(T_READY);
+            put_u64(&mut b, *rank as u64);
+        }
+        Ctrl::Plan { epoch, fwd, bwd, nominal, feedback, local_norm, weights } => {
+            b.push(T_PLAN);
+            put_u64(&mut b, *epoch as u64);
+            put_rates(&mut b, fwd);
+            put_rates(&mut b, bwd);
+            put_opt_f32(&mut b, *nominal);
+            b.push(u8::from(*feedback));
+            b.push(u8::from(*local_norm));
+            put_f32s(&mut b, weights);
+        }
+        Ctrl::Outcome { rank, epoch, loss_weighted, grads, feedback, bytes, stale_skipped, error } => {
+            b.push(T_OUTCOME);
+            put_u64(&mut b, *rank as u64);
+            put_u64(&mut b, *epoch as u64);
+            put_f32(&mut b, *loss_weighted);
+            put_f32s(&mut b, grads);
+            put_u64(&mut b, feedback.len() as u64);
+            for f in feedback {
+                put_u64(&mut b, f.bytes as u64);
+                put_f32(&mut b, f.err_sq);
+                put_f32(&mut b, f.sig_sq);
+            }
+            put_u64(&mut b, *bytes);
+            put_u64(&mut b, *stale_skipped);
+            match error {
+                Some(e) => {
+                    b.push(1);
+                    put_str(&mut b, e);
+                }
+                None => b.push(0),
+            }
+        }
+        Ctrl::Heartbeat { rank } => {
+            b.push(T_HEARTBEAT);
+            put_u64(&mut b, *rank as u64);
+        }
+        Ctrl::Checkpoint { epoch, shard } => {
+            b.push(T_CHECKPOINT);
+            put_u64(&mut b, *epoch as u64);
+            put_bytes(&mut b, shard);
+        }
+        Ctrl::CkptAck { rank, epoch } => {
+            b.push(T_CKPT_ACK);
+            put_u64(&mut b, *rank as u64);
+            put_u64(&mut b, *epoch as u64);
+        }
+        Ctrl::Rewind { resume_epoch, peers } => {
+            b.push(T_REWIND);
+            put_u64(&mut b, *resume_epoch as u64);
+            put_peers(&mut b, peers);
+        }
+        Ctrl::RewindAck { rank } => {
+            b.push(T_REWIND_ACK);
+            put_u64(&mut b, *rank as u64);
+        }
+        Ctrl::Abort => b.push(T_ABORT),
+        Ctrl::Shutdown => b.push(T_SHUTDOWN),
+    }
+    b
+}
+
+pub fn decode_ctrl(buf: &[u8]) -> Result<Ctrl> {
+    let mut c = Cursor::new(buf);
+    let tag = c.u8("ctrl tag")?;
+    let msg = match tag {
+        T_JOIN => Ctrl::Join {
+            rank: c.u64("join.rank")? as usize,
+            data_addr: c.str_("join.data_addr")?,
+            config_hash: c.u64("join.config_hash")?,
+        },
+        T_WELCOME => Ctrl::Welcome {
+            resume_epoch: c.u64("welcome.resume_epoch")? as usize,
+            peers: read_peers(&mut c, "welcome.peers")?,
+        },
+        T_READY => Ctrl::Ready { rank: c.u64("ready.rank")? as usize },
+        T_PLAN => Ctrl::Plan {
+            epoch: c.u64("plan.epoch")? as usize,
+            fwd: c.rates("plan.fwd")?,
+            bwd: c.rates("plan.bwd")?,
+            nominal: c.opt_f32("plan.nominal")?,
+            feedback: c.u8("plan.feedback")? != 0,
+            local_norm: c.u8("plan.local_norm")? != 0,
+            weights: c.f32s("plan.weights")?,
+        },
+        T_OUTCOME => {
+            let rank = c.u64("outcome.rank")? as usize;
+            let epoch = c.u64("outcome.epoch")? as usize;
+            let loss_weighted = c.f32("outcome.loss")?;
+            let grads = c.f32s("outcome.grads")?;
+            let nf = c.usize_capped(MAX_ITEMS, "outcome.feedback")?;
+            let mut feedback = Vec::with_capacity(nf);
+            for _ in 0..nf {
+                feedback.push(LayerFeedback {
+                    bytes: c.u64("outcome.feedback.bytes")? as usize,
+                    err_sq: c.f32("outcome.feedback.err_sq")?,
+                    sig_sq: c.f32("outcome.feedback.sig_sq")?,
+                });
+            }
+            let bytes = c.u64("outcome.bytes")?;
+            let stale_skipped = c.u64("outcome.stale_skipped")?;
+            let error = match c.u8("outcome.error")? {
+                0 => None,
+                1 => Some(c.str_("outcome.error")?),
+                t => anyhow::bail!("ctrl decode: bad option tag {t} in outcome.error"),
+            };
+            Ctrl::Outcome { rank, epoch, loss_weighted, grads, feedback, bytes, stale_skipped, error }
+        }
+        T_HEARTBEAT => Ctrl::Heartbeat { rank: c.u64("heartbeat.rank")? as usize },
+        T_CHECKPOINT => Ctrl::Checkpoint {
+            epoch: c.u64("checkpoint.epoch")? as usize,
+            shard: c.bytes("checkpoint.shard")?,
+        },
+        T_CKPT_ACK => Ctrl::CkptAck {
+            rank: c.u64("ckpt_ack.rank")? as usize,
+            epoch: c.u64("ckpt_ack.epoch")? as usize,
+        },
+        T_REWIND => Ctrl::Rewind {
+            resume_epoch: c.u64("rewind.resume_epoch")? as usize,
+            peers: read_peers(&mut c, "rewind.peers")?,
+        },
+        T_REWIND_ACK => Ctrl::RewindAck { rank: c.u64("rewind_ack.rank")? as usize },
+        T_ABORT => Ctrl::Abort,
+        T_SHUTDOWN => Ctrl::Shutdown,
+        t => anyhow::bail!("ctrl decode: unknown message tag {t}"),
+    };
+    c.done("ctrl message")?;
+    Ok(msg)
+}
+
+/// Write one control message as a `TAG_CTRL` frame.
+pub fn write_ctrl(w: &mut impl Write, msg: &Ctrl) -> std::io::Result<()> {
+    write_frame(w, TAG_CTRL, &encode_ctrl(msg))
+}
+
+/// Read one control message.  `Ok(None)` means the peer closed the
+/// connection cleanly between frames.
+pub fn read_ctrl(r: &mut impl Read) -> Result<Option<Ctrl>> {
+    match read_frame(r)? {
+        None => Ok(None),
+        Some((TAG_CTRL, body)) => Ok(Some(decode_ctrl(&body)?)),
+        Some((tag, _)) => anyhow::bail!("unexpected frame tag {tag:#x} on control connection"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Ctrl) {
+        let mut wire = Vec::new();
+        write_ctrl(&mut wire, &msg).unwrap();
+        let mut r = &wire[..];
+        let got = read_ctrl(&mut r).unwrap().expect("one message");
+        assert_eq!(got, msg);
+        assert!(read_ctrl(&mut r).unwrap().is_none(), "clean EOF after message");
+    }
+
+    #[test]
+    fn all_variants_roundtrip() {
+        roundtrip(Ctrl::Join { rank: 3, data_addr: "127.0.0.1:4041".into(), config_hash: 0xfeed });
+        roundtrip(Ctrl::Welcome {
+            resume_epoch: 7,
+            peers: vec![(0, "127.0.0.1:5000".into()), (1, "127.0.0.1:5001".into())],
+        });
+        roundtrip(Ctrl::Ready { rank: 1 });
+        roundtrip(Ctrl::Plan {
+            epoch: 12,
+            fwd: vec![Some(0.25), None],
+            bwd: vec![None, Some(1.0)],
+            nominal: Some(0.5),
+            feedback: true,
+            local_norm: false,
+            weights: vec![1.5, -2.25, 0.0, f32::MIN_POSITIVE],
+        });
+        roundtrip(Ctrl::Outcome {
+            rank: 0,
+            epoch: 12,
+            loss_weighted: 3.25,
+            grads: vec![0.5; 9],
+            feedback: vec![LayerFeedback { bytes: 40, err_sq: 0.125, sig_sq: 2.0 }],
+            bytes: 1234,
+            stale_skipped: 2,
+            error: None,
+        });
+        roundtrip(Ctrl::Outcome {
+            rank: 1,
+            epoch: 3,
+            loss_weighted: 0.0,
+            grads: vec![],
+            feedback: vec![],
+            bytes: 0,
+            stale_skipped: 0,
+            error: Some("link to worker 0 is down".into()),
+        });
+        roundtrip(Ctrl::Heartbeat { rank: 2 });
+        roundtrip(Ctrl::Checkpoint { epoch: 4, shard: vec![9, 8, 7, 6] });
+        roundtrip(Ctrl::CkptAck { rank: 2, epoch: 4 });
+        roundtrip(Ctrl::Rewind { resume_epoch: 2, peers: vec![(1, "127.0.0.1:6001".into())] });
+        roundtrip(Ctrl::RewindAck { rank: 0 });
+        roundtrip(Ctrl::Abort);
+        roundtrip(Ctrl::Shutdown);
+    }
+
+    #[test]
+    fn truncated_and_corrupt_messages_error_cleanly() {
+        let body = encode_ctrl(&Ctrl::Plan {
+            epoch: 1,
+            fwd: vec![Some(0.5)],
+            bwd: vec![Some(0.5)],
+            nominal: Some(0.5),
+            feedback: false,
+            local_norm: false,
+            weights: vec![1.0, 2.0],
+        });
+        for cut in 1..body.len() {
+            assert!(decode_ctrl(&body[..cut]).is_err(), "truncation at {cut} must error");
+        }
+        // unknown tag
+        assert!(decode_ctrl(&[0xEE]).is_err());
+        // trailing garbage
+        let mut long = encode_ctrl(&Ctrl::Abort);
+        long.push(0);
+        assert!(decode_ctrl(&long).is_err());
+        // absurd length field caps out instead of allocating
+        let mut huge = vec![T_JOIN];
+        huge.extend_from_slice(&0u64.to_le_bytes());
+        huge.extend_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode_ctrl(&huge).is_err());
+    }
+
+    #[test]
+    fn wrong_frame_tag_rejected() {
+        let mut wire = Vec::new();
+        crate::comm::transport::frame::write_frame(
+            &mut wire,
+            crate::comm::transport::frame::TAG_DATA,
+            &[1, 2, 3],
+        )
+        .unwrap();
+        assert!(read_ctrl(&mut &wire[..]).is_err());
+    }
+}

@@ -1,0 +1,298 @@
+//! The worker process: owns one rank of the data plane, executes the
+//! epochs the driver plans, and carries no training state of its own —
+//! every [`Ctrl::Plan`] arrives with the full weight vector, so a worker
+//! that crashed and was restarted is indistinguishable from one that
+//! never died once it has rejoined and reconnected its halo links.
+//!
+//! Threads: the main directive loop (this function), a control-channel
+//! reader (turns frames into events; applies [`Ctrl::Abort`] to the data
+//! plane *immediately* so an epoch blocked in `recv_expected` wakes up),
+//! and a heartbeat ticker.  Control writes are mutex-serialized because
+//! the heartbeat and the directive loop share the socket.
+
+use super::protocol::{read_ctrl, write_ctrl, Ctrl};
+use super::{config_hash, tcp_options, DistContext};
+use crate::comm::{Fabric, FailurePolicy, LedgerMode, TcpTransport, Transport};
+use crate::config::TrainConfig;
+use crate::coordinator::checkpoint::CheckpointShard;
+use crate::coordinator::trainer::{dist_worker_epoch, EpochPlan};
+use crate::engine::native::NativeWorkerEngine;
+use crate::engine::Weights;
+use crate::util::Workspace;
+use crate::Result;
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// What to do when this rank hits its injected crash point
+/// (`crash_at = "epoch:rank"`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CrashBehavior {
+    /// `std::process::exit(137)` — a real SIGKILL-grade death, used by the
+    /// multi-process runtime
+    Exit,
+    /// return from `run_worker` — lets in-thread tests simulate the crash
+    /// without taking the test process down
+    Return,
+}
+
+pub struct WorkerOptions {
+    pub crash: CrashBehavior,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> WorkerOptions {
+        WorkerOptions { crash: CrashBehavior::Exit }
+    }
+}
+
+enum WireEvent {
+    Ctrl(Ctrl),
+    /// driver connection reached EOF or errored
+    Closed,
+}
+
+/// Reader thread body: every control frame becomes an event; Abort is
+/// *also* applied to the data plane here, before the directive loop sees
+/// it, so a worker blocked mid-exchange errors out instead of waiting for
+/// a dead peer until the read timeout.
+fn reader(mut stream: TcpStream, transport: Arc<TcpTransport>, tx: Sender<WireEvent>) {
+    loop {
+        match read_ctrl(&mut stream) {
+            Ok(Some(ctrl)) => {
+                if matches!(ctrl, Ctrl::Abort) {
+                    transport.abort();
+                }
+                if tx.send(WireEvent::Ctrl(ctrl)).is_err() {
+                    return;
+                }
+            }
+            Ok(None) | Err(_) => {
+                let _ = tx.send(WireEvent::Closed);
+                return;
+            }
+        }
+    }
+}
+
+fn send_ctrl(writer: &Mutex<TcpStream>, msg: &Ctrl) -> Result<()> {
+    let mut w = writer.lock().unwrap();
+    write_ctrl(&mut *w, msg).map_err(|e| anyhow::anyhow!("control channel write failed: {e}"))
+}
+
+/// Run one worker rank to completion (driver-directed shutdown), to an
+/// injected crash, or to an error.
+pub fn run_worker(cfg: &TrainConfig, rank: usize, opts: WorkerOptions) -> Result<()> {
+    anyhow::ensure!(
+        cfg.transport == "tcp",
+        "run_worker requires transport=tcp (got {:?})",
+        cfg.transport
+    );
+    anyhow::ensure!(rank < cfg.q, "rank {rank} out of range for q = {}", cfg.q);
+    let ctx = DistContext::build(cfg)?;
+    let compressor = crate::compress::by_name(&cfg.compressor)?;
+    let mut engine =
+        NativeWorkerEngine::new(ctx.worker_graphs[rank].clone(), ctx.spec.clone());
+    let layer_dims = ctx.spec.layer_dims();
+    let crash_at = cfg.crash_at_spec()?;
+
+    // data plane: bind an ephemeral port; the driver's Welcome carries
+    // everyone's advertised address
+    let transport =
+        Arc::new(TcpTransport::bind(rank, cfg.q, "127.0.0.1:0", tcp_options(cfg))?);
+    let data_addr = transport.local_addr().to_string();
+    let fabric = Fabric::with_transport(
+        cfg.q,
+        FailurePolicy { drop_prob: cfg.drop_prob, stale_prob: cfg.stale_prob, seed: cfg.seed },
+        LedgerMode::Detailed,
+        Arc::clone(&transport) as Arc<dyn Transport>,
+    );
+    let mut endpoint = fabric.endpoint(rank);
+    let mut ws = Workspace::new();
+    let mut weights = Weights::zeros(&ctx.spec);
+    let param_count = weights.param_count();
+
+    // control plane: dial the driver (retry inside the connect window —
+    // workers often start before the driver's listener)
+    let deadline = Instant::now() + Duration::from_millis(cfg.connect_timeout_ms.max(100));
+    let ctrl = loop {
+        match TcpStream::connect(&cfg.driver_addr) {
+            Ok(s) => break s,
+            Err(e) => {
+                anyhow::ensure!(
+                    Instant::now() < deadline,
+                    "worker {rank} cannot reach driver at {:?}: {e}",
+                    cfg.driver_addr
+                );
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    };
+    ctrl.set_nodelay(true).ok();
+    let reader_stream = ctrl.try_clone()?;
+    let writer = Arc::new(Mutex::new(ctrl));
+    send_ctrl(
+        &writer,
+        &Ctrl::Join { rank, data_addr, config_hash: config_hash(cfg) },
+    )?;
+
+    let (tx, rx) = channel::<WireEvent>();
+    let reader_transport = Arc::clone(&transport);
+    std::thread::Builder::new()
+        .name(format!("varco-worker{rank}-ctrl"))
+        .spawn(move || reader(reader_stream, reader_transport, tx))
+        .map_err(|e| anyhow::anyhow!("cannot spawn control reader: {e}"))?;
+
+    let hb_stop = Arc::new(AtomicBool::new(false));
+    let hb_writer = Arc::clone(&writer);
+    let hb_flag = Arc::clone(&hb_stop);
+    let hb_period = Duration::from_millis(cfg.heartbeat_ms.max(10));
+    std::thread::Builder::new()
+        .name(format!("varco-worker{rank}-hb"))
+        .spawn(move || {
+            while !hb_flag.load(Ordering::SeqCst) {
+                std::thread::sleep(hb_period);
+                if send_ctrl(&hb_writer, &Ctrl::Heartbeat { rank }).is_err() {
+                    return; // driver gone; reader thread reports Closed
+                }
+            }
+        })
+        .map_err(|e| anyhow::anyhow!("cannot spawn heartbeat thread: {e}"))?;
+    // make sure the ticker dies with us on every exit path
+    struct StopOnDrop(Arc<AtomicBool>);
+    impl Drop for StopOnDrop {
+        fn drop(&mut self) {
+            self.0.store(true, Ordering::SeqCst);
+        }
+    }
+    let _hb_guard = StopOnDrop(Arc::clone(&hb_stop));
+
+    // ---- directive loop ----
+    loop {
+        let ev = rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("worker {rank}: control reader thread died"))?;
+        let ctrl = match ev {
+            WireEvent::Ctrl(c) => c,
+            WireEvent::Closed => {
+                anyhow::bail!("worker {rank}: lost connection to driver");
+            }
+        };
+        match ctrl {
+            Ctrl::Welcome { peers, .. } => {
+                // a stray Abort can precede the Welcome when this worker
+                // rejoined while the driver was still pausing survivors;
+                // start from a clean plane either way
+                transport.reset();
+                transport.connect_peers(&peers)?;
+                send_ctrl(&writer, &Ctrl::Ready { rank })?;
+            }
+            Ctrl::Rewind { peers, .. } => {
+                // recovery: forget the aborted epoch's queue and re-dial
+                // only the replaced ranks (survivor links are intact)
+                transport.reset();
+                for (p, addr) in &peers {
+                    if *p != rank {
+                        transport.disconnect_peer(*p);
+                        transport.connect_peer(*p, addr)?;
+                    }
+                }
+                send_ctrl(&writer, &Ctrl::RewindAck { rank })?;
+            }
+            Ctrl::Plan { epoch, fwd, bwd, nominal, feedback, local_norm, weights: flat } => {
+                if crash_at == Some((epoch, rank)) {
+                    eprintln!("[varco worker {rank}] injected crash at epoch {epoch}");
+                    match opts.crash {
+                        CrashBehavior::Exit => std::process::exit(137),
+                        CrashBehavior::Return => return Ok(()),
+                    }
+                }
+                anyhow::ensure!(
+                    flat.len() == param_count,
+                    "plan for epoch {epoch} carries {} weights, model has {param_count}",
+                    flat.len()
+                );
+                weights.set_from_flat(&flat);
+                let plan = EpochPlan { fwd, bwd, local_norm, nominal, feedback };
+                let bytes0 = fabric.total_bytes();
+                let stale0 = fabric.stale_skipped();
+                match dist_worker_epoch(
+                    epoch,
+                    &ctx.setup,
+                    rank,
+                    compressor.as_ref(),
+                    cfg.seed,
+                    &mut engine,
+                    &mut endpoint,
+                    &mut ws,
+                    &weights,
+                    &plan,
+                    &layer_dims,
+                ) {
+                    Ok(out) => {
+                        let flat_g = Weights { layers: out.grads, version: 0 }.flatten();
+                        send_ctrl(
+                            &writer,
+                            &Ctrl::Outcome {
+                                rank,
+                                epoch,
+                                loss_weighted: out.loss_weighted,
+                                grads: flat_g,
+                                feedback: out.feedback,
+                                bytes: (fabric.total_bytes() - bytes0) as u64,
+                                stale_skipped: (fabric.stale_skipped() - stale0) as u64,
+                                error: None,
+                            },
+                        )?;
+                    }
+                    Err(_) if transport.is_aborted() => {
+                        // driver-directed abort: recovery is under way; the
+                        // Rewind directive will arrive next
+                    }
+                    Err(e) => {
+                        send_ctrl(
+                            &writer,
+                            &Ctrl::Outcome {
+                                rank,
+                                epoch,
+                                loss_weighted: 0.0,
+                                grads: Vec::new(),
+                                feedback: Vec::new(),
+                                bytes: 0,
+                                stale_skipped: 0,
+                                error: Some(e.to_string()),
+                            },
+                        )?;
+                    }
+                }
+            }
+            Ctrl::Checkpoint { epoch, shard } => {
+                let shard = CheckpointShard::from_bytes(&shard)?;
+                anyhow::ensure!(
+                    shard.rank == rank && shard.epoch == epoch,
+                    "driver sent shard (rank {}, epoch {}) to worker {rank} at epoch {epoch}",
+                    shard.rank,
+                    shard.epoch
+                );
+                let dir = Path::new(&cfg.ckpt_dir);
+                std::fs::create_dir_all(dir)?;
+                shard.save(&CheckpointShard::path_for(dir, "dist", rank))?;
+                send_ctrl(&writer, &Ctrl::CkptAck { rank, epoch })?;
+            }
+            Ctrl::Abort => {
+                // the reader thread already flipped the transport flag;
+                // nothing to do at this level
+            }
+            Ctrl::Shutdown => {
+                eprintln!("[varco worker {rank}] shutdown");
+                return Ok(());
+            }
+            other => {
+                anyhow::bail!("worker {rank}: unexpected control message {other:?}");
+            }
+        }
+    }
+}

@@ -9,9 +9,10 @@
 //! overlaps per-machine compute with boundary communication.
 
 pub mod checkpoint;
+pub mod dist;
 pub mod eval;
 pub mod trainer;
 
-pub use checkpoint::Checkpoint;
+pub use checkpoint::{shard_range, Checkpoint, CheckpointShard, ShardSet};
 pub use eval::FullGraphEval;
 pub use trainer::{RunMode, Trainer, TrainerOptions};

@@ -183,7 +183,7 @@ impl Default for TrainerOptions {
 }
 
 /// Per-worker immutable training data.
-struct WorkerData {
+pub(crate) struct WorkerData {
     x: Matrix,
     labels: Vec<u32>,
     m_train: Vec<f32>,
@@ -218,21 +218,21 @@ fn msg_key(seed: u64, epoch: usize, layer: usize, from: usize, to: usize) -> u64
 /// workers, drawn from the controller by the coordinator *before* the
 /// epoch starts, so the barrier schedule is identical on every worker.
 #[derive(Clone, Debug)]
-struct EpochPlan {
+pub(crate) struct EpochPlan {
     /// per-layer forward rate (None = that layer does not communicate)
-    fwd: Vec<Option<f32>>,
+    pub(crate) fwd: Vec<Option<f32>>,
     /// per-layer backward rate (controllers keep it equal to `fwd`)
-    bwd: Vec<Option<f32>>,
+    pub(crate) bwd: Vec<Option<f32>>,
     /// aggregate over local neighbors only (the No-Comm semantics);
     /// true iff no layer communicates in either direction
-    local_norm: bool,
+    pub(crate) local_norm: bool,
     /// representative rate for the epoch record
-    nominal: Option<f32>,
+    pub(crate) nominal: Option<f32>,
     /// measure per-message bytes + channel error for the controller
-    feedback: bool,
+    pub(crate) feedback: bool,
 }
 
-fn plan_epoch(ctrl: &dyn RateController, epoch: usize, layers: usize) -> EpochPlan {
+pub(crate) fn plan_epoch(ctrl: &dyn RateController, epoch: usize, layers: usize) -> EpochPlan {
     let fwd: Vec<Option<f32>> =
         (0..layers).map(|l| ctrl.rate_for(epoch, l, ChannelKind::Forward)).collect();
     let bwd: Vec<Option<f32>> =
@@ -248,7 +248,7 @@ fn plan_epoch(ctrl: &dyn RateController, epoch: usize, layers: usize) -> EpochPl
 /// helper, so their f32 accumulation order — the invariant the bitwise
 /// parallel==sequential equivalence test depends on — is identical by
 /// construction.
-fn observe_epoch<'a>(
+pub(crate) fn observe_epoch<'a>(
     controller: &mut dyn RateController,
     plan: &EpochPlan,
     epoch: usize,
@@ -495,13 +495,13 @@ impl<'a> WorkerCtx<'a> {
 }
 
 /// What a worker thread hands the coordinator at the end of an epoch.
-struct WorkerOut {
-    loss_weighted: f32,
+pub(crate) struct WorkerOut {
+    pub(crate) loss_weighted: f32,
     /// per-layer parameter-tree gradient contribution (empty when `error`)
-    grads: Vec<LayerParams>,
+    pub(crate) grads: Vec<LayerParams>,
     /// per-layer wire/error measurements (zeros unless the plan asked)
-    feedback: Vec<LayerFeedback>,
-    error: Option<crate::Error>,
+    pub(crate) feedback: Vec<LayerFeedback>,
+    pub(crate) error: Option<crate::Error>,
 }
 
 /// Convert panics inside worker compute into ordinary errors, so a failing
@@ -756,7 +756,7 @@ fn worker_epoch(
 
 /// Evaluate (respecting `eval_every`) and append one epoch record.
 #[allow(clippy::too_many_arguments)]
-fn push_record(
+pub(crate) fn push_record(
     report: &mut RunReport,
     eval: &FullGraphEval,
     weights: &Weights,
@@ -793,6 +793,189 @@ fn push_record(
         wall_ms,
     });
     Ok(())
+}
+
+/// Deterministic per-rank run state, rebuilt identically by every
+/// execution mode from `(dataset, worker graphs, config)`: the in-process
+/// trainer, the multi-process driver, and each worker process all call
+/// [`RunSetup::build`], so send plans and features never cross the wire —
+/// only weights, gradients, and halo payloads do.
+pub(crate) struct RunSetup {
+    pub(crate) data: Vec<WorkerData>,
+    /// (layer, from, to) -> index into `data[from].plans[layer]`
+    pub(crate) plan_idx: HashMap<(usize, usize, usize), usize>,
+    /// global train-node count (clamped to 1 so loss scaling never /0)
+    pub(crate) total_train: f32,
+}
+
+impl RunSetup {
+    pub(crate) fn build(
+        dataset: &Dataset,
+        worker_graphs: &[WorkerGraph],
+        spec: &ModelSpec,
+        plan_mode: PlanMode,
+        replication: usize,
+    ) -> Result<RunSetup> {
+        let (m_train, m_val, m_test) = dataset.split.as_f32();
+        // shape the per-layer send plans (sparse = tailored rows per
+        // receiver; dense = broadcast union) and, for replication > 1,
+        // reroute each fetch to its cheapest replica holder
+        let layer_dims = spec.layer_dims();
+        let mut layered = WorkerGraph::layered_plans(worker_graphs, layer_dims.len(), plan_mode);
+        let layer_widths: Vec<usize> = layer_dims.iter().map(|&(fi, _)| fi).collect();
+        let mirrors = assign_routes(&mut layered, replication, &layer_widths, &LinkModel::ten_gbe())?;
+        let mut data = Vec::with_capacity(worker_graphs.len());
+        for (wg, (wplans, wmirrors)) in worker_graphs.iter().zip(layered.into_iter().zip(mirrors)) {
+            let nl = wg.n_local();
+            let mut x = Matrix::zeros(nl, dataset.f_in());
+            let mut labels = Vec::with_capacity(nl);
+            let (mut tr, mut va, mut te) = (vec![0.0; nl], vec![0.0; nl], vec![0.0; nl]);
+            for (li, &gid) in wg.nodes.iter().enumerate() {
+                x.row_mut(li).copy_from_slice(dataset.features.row(gid as usize));
+                labels.push(dataset.labels[gid as usize]);
+                tr[li] = m_train[gid as usize];
+                va[li] = m_val[gid as usize];
+                te[li] = m_test[gid as usize];
+            }
+            let count_train = tr.iter().sum();
+            data.push(WorkerData {
+                x,
+                labels,
+                m_train: tr,
+                m_val: va,
+                m_test: te,
+                count_train,
+                plans: wplans,
+                mirrors: wmirrors,
+                n_boundary: wg.n_boundary(),
+            });
+        }
+        let mut plan_idx = HashMap::new();
+        for (from, d) in data.iter().enumerate() {
+            for (layer, plans) in d.plans.iter().enumerate() {
+                for (i, plan) in plans.iter().enumerate() {
+                    anyhow::ensure!(
+                        plan_idx.insert((layer, from, plan.to), i).is_none(),
+                        "duplicate send plan {from}->{} at layer {layer}",
+                        plan.to
+                    );
+                }
+            }
+        }
+        let total_train: f32 = data.iter().map(|d| d.count_train).sum();
+        Ok(RunSetup { data, plan_idx, total_train: total_train.max(1.0) })
+    }
+
+    /// Ranks whose layer-`layer` send plans target `to` — exactly the
+    /// senders rank `to` must await for `Activation { layer }` messages.
+    pub(crate) fn activation_senders(&self, layer: usize, to: usize) -> Vec<usize> {
+        (0..self.data.len())
+            .filter(|&from| from != to && self.plan_idx.contains_key(&(layer, from, to)))
+            .collect()
+    }
+
+    /// Receivers of `rank`'s layer-`layer` activation sends — exactly the
+    /// ranks that return `Gradient { layer }` cotangents to `rank`.
+    pub(crate) fn gradient_senders(&self, layer: usize, rank: usize) -> Vec<usize> {
+        self.data[rank].plans[layer].iter().map(|p| p.to).filter(|&t| t != rank).collect()
+    }
+}
+
+/// One worker epoch over a [`Transport`]-backed endpoint, barrier-free:
+/// exchange meeting points are expressed as *expected-sender sets*
+/// (`Endpoint::recv_expected`) derived from the shared deterministic
+/// [`RunSetup`], so the same program runs against the in-process queue and
+/// against TCP links between processes.  The fused (non-overlap) layer
+/// schedule is used; payload bytes, compression masks, and failure coins
+/// are all key-derived, which keeps the result bitwise identical to the
+/// barrier runtime (pinned by `tests/dist_equivalence.rs`).
+///
+/// Unlike [`worker_epoch`], errors propagate as `Err` immediately — there
+/// are no barriers to keep walking, and the caller (worker process main
+/// loop) decides whether the failure is a driver-directed abort or a real
+/// fault.
+///
+/// [`Transport`]: crate::comm::Transport
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dist_worker_epoch(
+    epoch: usize,
+    setup: &RunSetup,
+    rank: usize,
+    compressor: &dyn Compressor,
+    seed: u64,
+    engine: &mut dyn WorkerEngine,
+    endpoint: &mut Endpoint,
+    ws: &mut Workspace,
+    weights: &Weights,
+    plan: &EpochPlan,
+    layer_dims: &[(usize, usize)],
+) -> Result<WorkerOut> {
+    let ctx =
+        WorkerCtx { rank, data: &setup.data, plan_idx: &setup.plan_idx, compressor, seed };
+    let d = &ctx.data[rank];
+    let local_norm = plan.local_norm;
+    let mut feedback = vec![LayerFeedback::default(); layer_dims.len()];
+    let mut lgrads: Vec<Option<LayerParams>> = (0..layer_dims.len()).map(|_| None).collect();
+    let mut h: Option<Matrix> = None;
+
+    // ---- forward ----
+    for (l, &(fi, _)) in layer_dims.iter().enumerate() {
+        let h_bnd = if let Some(r) = plan.fwd[l] {
+            let h_ref: &Matrix = h.as_ref().unwrap_or(&d.x);
+            let s = ctx.send_forward(endpoint, ws, epoch, l, h_ref, r, fi, plan.feedback);
+            feedback[l].merge(&s);
+            let senders = setup.activation_senders(l, rank);
+            let msgs = endpoint.recv_expected(MessageKind::Activation { layer: l }, &senders)?;
+            ctx.recv_forward(msgs, ws, l, fi)?
+        } else {
+            ws.take_matrix_zeroed(d.n_boundary, fi)
+        };
+        let h_ref: &Matrix = h.as_ref().unwrap_or(&d.x);
+        let next = engine.forward_layer(l, weights, h_ref, &h_bnd, local_norm)?;
+        if let Some(prev) = h.replace(next) {
+            engine.recycle(prev);
+        }
+        ws.put_matrix(h_bnd);
+    }
+
+    // ---- loss ----
+    let loss_weighted;
+    let mut g = {
+        let logits: &Matrix = h.as_ref().unwrap_or(&d.x);
+        let out = engine.loss_grad(logits, &d.labels, &d.m_train, &d.m_val, &d.m_test)?;
+        loss_weighted = out.loss * out.count_train;
+        let mut gl = out.g_logits;
+        gl.scale(out.count_train / setup.total_train);
+        gl
+    };
+
+    // ---- backward ----
+    for l in (0..layer_dims.len()).rev() {
+        let fi = layer_dims[l].0;
+        let (gl, g_bnd, lg) = engine.backward_layer(l, weights, &g, local_norm)?;
+        let prev = std::mem::replace(&mut g, gl);
+        engine.recycle(prev);
+        lgrads[l] = Some(lg);
+        if let Some(r) = plan.bwd[l] {
+            let s = ctx.send_backward(endpoint, ws, epoch, l, &g_bnd, r, fi, plan.feedback);
+            feedback[l].merge(&s);
+            let senders = setup.gradient_senders(l, rank);
+            let msgs = endpoint.recv_expected(MessageKind::Gradient { layer: l }, &senders)?;
+            ctx.recv_backward(msgs, ws, l, &mut g, fi)?;
+        }
+        engine.recycle(g_bnd);
+    }
+
+    engine.recycle(g);
+    if let Some(hm) = h.take() {
+        engine.recycle(hm);
+    }
+    Ok(WorkerOut {
+        loss_weighted,
+        grads: lgrads.into_iter().map(|o| o.expect("grads complete")).collect(),
+        feedback,
+        error: None,
+    })
 }
 
 /// The distributed trainer.
@@ -863,57 +1046,8 @@ impl Trainer {
                 );
             }
         }
-        let (m_train, m_val, m_test) = dataset.split.as_f32();
-        // shape the per-layer send plans (sparse = tailored rows per
-        // receiver; dense = broadcast union) and, for replication > 1,
-        // reroute each fetch to its cheapest replica holder
-        let layer_dims = spec.layer_dims();
-        let mut layered =
-            WorkerGraph::layered_plans(worker_graphs, layer_dims.len(), opts.plan_mode);
-        let layer_widths: Vec<usize> = layer_dims.iter().map(|&(fi, _)| fi).collect();
-        let mirrors =
-            assign_routes(&mut layered, opts.replication, &layer_widths, &LinkModel::ten_gbe())?;
-        let mut data = Vec::with_capacity(partition.q);
-        for (wg, (wplans, wmirrors)) in
-            worker_graphs.iter().zip(layered.into_iter().zip(mirrors))
-        {
-            let nl = wg.n_local();
-            let mut x = Matrix::zeros(nl, dataset.f_in());
-            let mut labels = Vec::with_capacity(nl);
-            let (mut tr, mut va, mut te) = (vec![0.0; nl], vec![0.0; nl], vec![0.0; nl]);
-            for (li, &gid) in wg.nodes.iter().enumerate() {
-                x.row_mut(li).copy_from_slice(dataset.features.row(gid as usize));
-                labels.push(dataset.labels[gid as usize]);
-                tr[li] = m_train[gid as usize];
-                va[li] = m_val[gid as usize];
-                te[li] = m_test[gid as usize];
-            }
-            let count_train = tr.iter().sum();
-            data.push(WorkerData {
-                x,
-                labels,
-                m_train: tr,
-                m_val: va,
-                m_test: te,
-                count_train,
-                plans: wplans,
-                mirrors: wmirrors,
-                n_boundary: wg.n_boundary(),
-            });
-        }
-        let mut plan_idx = HashMap::new();
-        for (from, d) in data.iter().enumerate() {
-            for (layer, plans) in d.plans.iter().enumerate() {
-                for (i, plan) in plans.iter().enumerate() {
-                    anyhow::ensure!(
-                        plan_idx.insert((layer, from, plan.to), i).is_none(),
-                        "duplicate send plan {from}->{} at layer {layer}",
-                        plan.to
-                    );
-                }
-            }
-        }
-        let total_train: f32 = data.iter().map(|d| d.count_train).sum();
+        let RunSetup { data, plan_idx, total_train } =
+            RunSetup::build(dataset, worker_graphs, &spec, opts.plan_mode, opts.replication)?;
         let fabric =
             Fabric::with_policy_and_ledger(partition.q, opts.failure.clone(), opts.ledger_mode);
         let endpoints = fabric.endpoints();
@@ -934,6 +1068,7 @@ impl Trainer {
             records: Vec::new(),
             stale_skipped: 0,
             link_bytes: Vec::new(),
+            ..Default::default()
         };
         let workspaces = (0..partition.q).map(|_| Workspace::new()).collect();
         Ok(Trainer {
@@ -947,7 +1082,7 @@ impl Trainer {
             controller,
             fabric,
             eval,
-            total_train: total_train.max(1.0),
+            total_train,
             plan_idx,
             grad_norm_trace: Vec::new(),
             report,

@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   varco train [--config file.cfg] [--key value ...]      run one training job
+//!   varco driver [--config file.cfg] [--spawn-workers]     multi-process driver
+//!   varco worker --rank R [--config file.cfg]              one worker rank
 //!   varco partition-stats --dataset D --partitioner P ...  Table-I style stats
 //!   varco inspect-artifacts [--artifacts-dir DIR]          list compiled configs
 //!   varco datasets                                         list registered datasets
@@ -27,6 +29,8 @@ fn main() {
 fn run(args: &[String]) -> Result<()> {
     match args.first().map(String::as_str) {
         Some("train") => cmd_train(&args[1..]),
+        Some("driver") => cmd_driver(&args[1..]),
+        Some("worker") => cmd_worker(&args[1..]),
         Some("eval") => cmd_eval(&args[1..]),
         Some("partition-stats") => cmd_partition_stats(&args[1..]),
         Some("inspect-artifacts") => cmd_inspect_artifacts(&args[1..]),
@@ -48,6 +52,9 @@ fn print_help() {
          \n\
          USAGE:\n\
          \x20 varco train [--config FILE] [--key value ...] [--save-ckpt F]\n\
+         \x20 varco driver [--config FILE] [--key value ...] [--spawn-workers]\n\
+         \x20              [--resume] [--out-json F] [--out-csv F]\n\
+         \x20 varco worker --rank R [--config FILE] [--key value ...]\n\
          \x20 varco eval  --ckpt FILE --dataset D [--nodes N] [--seed S]\n\
          \x20 varco partition-stats --dataset D [--q N] [--partitioner P] [--nodes N]\n\
          \x20 varco inspect-artifacts [--artifacts_dir DIR]\n\
@@ -68,7 +75,12 @@ fn print_help() {
          \x20           plans vs the broadcast-union baseline; same weights\n\
          \x20           bit for bit at full rate, fewer bytes on the wire\n\
          replication: R >= 1 (default 1) — mirror boundary blocks on R\n\
-         \x20           machines, charge each fetch to its cheapest replica"
+         \x20           machines, charge each fetch to its cheapest replica\n\
+         \n\
+         MULTI-PROCESS KEYS (transport=tcp runs):\n\
+         \x20 transport driver_addr connect_timeout_ms read_timeout_ms\n\
+         \x20 heartbeat_ms heartbeat_timeout_ms ckpt_every ckpt_dir\n\
+         \x20 crash_at (\"EPOCH:RANK\" fault injection) max_restarts"
     );
 }
 
@@ -156,6 +168,111 @@ fn cmd_train(args: &[String]) -> Result<()> {
         eprintln!("[varco] wrote checkpoint {path}");
     }
     Ok(())
+}
+
+/// The multi-process driver: admits `q` workers over TCP, plans epochs,
+/// reduces gradients, survives worker crashes (see `varco::coordinator::dist`).
+fn cmd_driver(args: &[String]) -> Result<()> {
+    let mut cfg = TrainConfig::default();
+    let mut rest: Vec<String> = Vec::new();
+    let mut out_json: Option<String> = None;
+    let mut out_csv: Option<String> = None;
+    let mut spawn_workers = false;
+    let mut resume = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--config" => {
+                i += 1;
+                cfg = TrainConfig::from_file(Path::new(&args[i]))?;
+            }
+            "--out-json" => {
+                i += 1;
+                out_json = Some(args[i].clone());
+            }
+            "--out-csv" => {
+                i += 1;
+                out_csv = Some(args[i].clone());
+            }
+            "--spawn-workers" => spawn_workers = true,
+            "--resume" => resume = true,
+            other => rest.push(other.to_string()),
+        }
+        i += 1;
+    }
+    cfg.apply_cli(&rest)?;
+    if cfg.transport == "inproc" {
+        // `varco driver` only makes sense multi-process
+        cfg.transport = "tcp".into();
+    }
+    let run = varco::coordinator::dist::run_driver(
+        &cfg,
+        varco::coordinator::dist::DriverOptions { listener: None, spawn_workers, resume },
+    )?;
+    let report = run.report;
+    let last = report
+        .records
+        .last()
+        .ok_or_else(|| anyhow::anyhow!("no epochs were run"))?;
+    println!(
+        "algorithm={} final: loss={:.4} train={:.4} val={:.4} test={:.4} \
+         test@best-val={:.4} bytes={} (floats={})",
+        report.algorithm,
+        last.loss,
+        last.train_acc,
+        last.val_acc,
+        last.test_acc,
+        report.test_at_best_val(),
+        report.total_bytes(),
+        report.total_floats(),
+    );
+    if report.restarts > 0 {
+        println!(
+            "recovery: {} restart(s), {} epoch(s) replayed, {} heartbeat timeout(s)",
+            report.restarts, report.recovered_epochs, report.heartbeat_timeouts
+        );
+    }
+    if let Some(path) = out_json {
+        report.write_json(Path::new(&path))?;
+        eprintln!("[varco] wrote {path}");
+    }
+    if let Some(path) = out_csv {
+        report.write_csv(Path::new(&path))?;
+        eprintln!("[varco] wrote {path}");
+    }
+    Ok(())
+}
+
+/// One worker rank of a multi-process run.
+fn cmd_worker(args: &[String]) -> Result<()> {
+    let mut cfg = TrainConfig::default();
+    let mut rest: Vec<String> = Vec::new();
+    let mut rank: Option<usize> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--config" => {
+                i += 1;
+                cfg = TrainConfig::from_file(Path::new(&args[i]))?;
+            }
+            "--rank" => {
+                i += 1;
+                rank = Some(args[i].parse()?);
+            }
+            other => rest.push(other.to_string()),
+        }
+        i += 1;
+    }
+    let rank = rank.ok_or_else(|| anyhow::anyhow!("--rank is required"))?;
+    cfg.apply_cli(&rest)?;
+    if cfg.transport == "inproc" {
+        cfg.transport = "tcp".into();
+    }
+    varco::coordinator::dist::run_worker(
+        &cfg,
+        rank,
+        varco::coordinator::dist::WorkerOptions::default(),
+    )
 }
 
 /// Evaluate a saved checkpoint on a dataset with exact centralized inference.

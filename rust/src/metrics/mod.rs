@@ -52,6 +52,16 @@ pub struct RunReport {
     /// per-link byte/message totals (empty when the run used the
     /// aggregated ledger, which keeps no per-link cells)
     pub link_bytes: Vec<LinkTraffic>,
+    /// worker process restarts the driver performed (0 for in-process runs)
+    pub restarts: usize,
+    /// epochs re-executed because a crash rewound the run to the last
+    /// fully-acknowledged checkpoint
+    pub recovered_epochs: usize,
+    /// deaths detected by heartbeat silence (as opposed to connection EOF)
+    pub heartbeat_timeouts: usize,
+    /// per-rank epoch of the last checkpoint shard that rank acknowledged
+    /// (None = that rank never checkpointed; empty for in-process runs)
+    pub worker_last_ckpt: Vec<Option<usize>>,
 }
 
 impl RunReport {
@@ -114,6 +124,18 @@ impl RunReport {
             ("engine", Json::str(self.engine.clone())),
             ("model", Json::str(self.model.clone())),
             ("stale_skipped", Json::num(self.stale_skipped as f64)),
+            ("restarts", Json::num(self.restarts as f64)),
+            ("recovered_epochs", Json::num(self.recovered_epochs as f64)),
+            ("heartbeat_timeouts", Json::num(self.heartbeat_timeouts as f64)),
+            (
+                "worker_last_ckpt",
+                Json::Arr(
+                    self.worker_last_ckpt
+                        .iter()
+                        .map(|e| e.map_or(Json::Null, |v| Json::num(v as f64)))
+                        .collect(),
+                ),
+            ),
             (
                 "link_bytes",
                 Json::Arr(
@@ -189,6 +211,22 @@ impl RunReport {
                         })
                         .collect()
                 })
+                .unwrap_or_default(),
+            // reports written before the multi-process runtime carry none
+            // of the recovery telemetry
+            restarts: j.get("restarts").and_then(|v| v.as_usize()).unwrap_or(0),
+            recovered_epochs: j
+                .get("recovered_epochs")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0),
+            heartbeat_timeouts: j
+                .get("heartbeat_timeouts")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0),
+            worker_last_ckpt: j
+                .get("worker_last_ckpt")
+                .and_then(|v| v.as_arr())
+                .map(|arr| arr.iter().map(|e| e.as_usize()).collect())
                 .unwrap_or_default(),
         };
         for r in j.require("records")?.as_arr().unwrap_or(&[]) {
@@ -296,6 +334,34 @@ mod tests {
         assert_eq!(back.records, r.records);
         assert_eq!(back.stale_skipped, 3);
         assert_eq!(back.link_bytes, r.link_bytes);
+    }
+
+    #[test]
+    fn recovery_telemetry_roundtrips() {
+        let mut r = RunReport { algorithm: "varco".into(), q: 3, ..Default::default() };
+        r.restarts = 2;
+        r.recovered_epochs = 5;
+        r.heartbeat_timeouts = 1;
+        r.worker_last_ckpt = vec![Some(4), None, Some(2)];
+        let back = RunReport::from_json(&r.to_json()).unwrap();
+        assert_eq!(back.restarts, 2);
+        assert_eq!(back.recovered_epochs, 5);
+        assert_eq!(back.heartbeat_timeouts, 1);
+        assert_eq!(back.worker_last_ckpt, vec![Some(4), None, Some(2)]);
+    }
+
+    #[test]
+    fn legacy_json_without_recovery_telemetry_defaults_zero() {
+        let j = Json::parse(
+            r#"{"algorithm":"full-comm","dataset":"d","partitioner":"p","q":2,
+                "seed":0,"engine":"native","records":[]}"#,
+        )
+        .unwrap();
+        let r = RunReport::from_json(&j).unwrap();
+        assert_eq!(r.restarts, 0);
+        assert_eq!(r.recovered_epochs, 0);
+        assert_eq!(r.heartbeat_timeouts, 0);
+        assert!(r.worker_last_ckpt.is_empty());
     }
 
     #[test]

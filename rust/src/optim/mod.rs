@@ -10,6 +10,26 @@
 
 use crate::Result;
 
+/// Serializable optimizer state: named per-parameter vectors (each either
+/// empty — lazily initialized state from before the first step — or
+/// exactly as long as the flat weight vector, so checkpoint shards slice
+/// them alongside the weights) plus named scalars (step counters).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct OptimizerState {
+    pub vectors: Vec<(String, Vec<f32>)>,
+    pub scalars: Vec<(String, f64)>,
+}
+
+impl OptimizerState {
+    pub fn vector(&self, name: &str) -> Option<&[f32]> {
+        self.vectors.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_slice())
+    }
+
+    pub fn scalar(&self, name: &str) -> Option<f64> {
+        self.scalars.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+}
+
 /// Optimizer state + update rule over a flat parameter vector.
 pub trait Optimizer: Send {
     fn name(&self) -> &'static str;
@@ -17,6 +37,24 @@ pub trait Optimizer: Send {
     fn step(&mut self, w: &mut [f32], g: &[f32]);
     fn lr(&self) -> f32;
     fn set_lr(&mut self, lr: f32);
+
+    /// Snapshot the internal state for checkpointing.  Stateless
+    /// optimizers return the empty default.
+    fn state(&self) -> OptimizerState {
+        OptimizerState::default()
+    }
+
+    /// Restore a snapshot taken by [`Optimizer::state`].  A bitwise-exact
+    /// round-trip is required for crash recovery to replay the exact
+    /// uninterrupted trajectory.
+    fn restore(&mut self, state: &OptimizerState) -> Result<()> {
+        anyhow::ensure!(
+            state.vectors.iter().all(|(_, v)| v.is_empty()),
+            "optimizer {} is stateless but the checkpoint carries state",
+            self.name()
+        );
+        Ok(())
+    }
 }
 
 /// Plain SGD with optional momentum and weight decay.
@@ -62,6 +100,21 @@ impl Optimizer for Sgd {
 
     fn set_lr(&mut self, lr: f32) {
         self.lr = lr;
+    }
+
+    fn state(&self) -> OptimizerState {
+        OptimizerState {
+            vectors: vec![("velocity".to_string(), self.velocity.clone())],
+            scalars: vec![],
+        }
+    }
+
+    fn restore(&mut self, state: &OptimizerState) -> Result<()> {
+        self.velocity = state
+            .vector("velocity")
+            .ok_or_else(|| anyhow::anyhow!("sgd restore: missing velocity vector"))?
+            .to_vec();
+        Ok(())
     }
 }
 
@@ -114,6 +167,28 @@ impl Optimizer for Adam {
 
     fn set_lr(&mut self, lr: f32) {
         self.lr = lr;
+    }
+
+    fn state(&self) -> OptimizerState {
+        OptimizerState {
+            vectors: vec![("m".to_string(), self.m.clone()), ("v".to_string(), self.v.clone())],
+            scalars: vec![("t".to_string(), self.t as f64)],
+        }
+    }
+
+    fn restore(&mut self, state: &OptimizerState) -> Result<()> {
+        self.m = state
+            .vector("m")
+            .ok_or_else(|| anyhow::anyhow!("adam restore: missing m vector"))?
+            .to_vec();
+        self.v = state
+            .vector("v")
+            .ok_or_else(|| anyhow::anyhow!("adam restore: missing v vector"))?
+            .to_vec();
+        anyhow::ensure!(self.m.len() == self.v.len(), "adam restore: m/v length mismatch");
+        let t = state.scalar("t").ok_or_else(|| anyhow::anyhow!("adam restore: missing t"))?;
+        self.t = t as u32;
+        Ok(())
     }
 }
 
@@ -189,6 +264,45 @@ mod tests {
         }
         // minimizer of 0.5(w-3)² + 0.5 w² is 1.5
         assert!((w[0] - 1.5).abs() < 1e-2, "{w:?}");
+    }
+
+    #[test]
+    fn state_snapshot_restore_replays_bitwise() {
+        // crash recovery resumes mid-run: a restored optimizer must
+        // continue the exact trajectory of the uninterrupted one
+        for name in ["sgd", "momentum", "adam"] {
+            let grad = |w: &[f32]| -> Vec<f32> {
+                w.iter().enumerate().map(|(i, &x)| x - i as f32).collect()
+            };
+            let mut orig = by_name(name, 0.07, 0.01).unwrap();
+            let mut w = vec![2.5f32; 6];
+            for _ in 0..4 {
+                let g = grad(&w);
+                orig.step(&mut w, &g);
+            }
+            let snap = orig.state();
+            let mut restored = by_name(name, 0.07, 0.01).unwrap();
+            restored.restore(&snap).unwrap();
+            let mut w2 = w.clone();
+            for _ in 0..4 {
+                let (ga, gb) = (grad(&w), grad(&w2));
+                orig.step(&mut w, &ga);
+                restored.step(&mut w2, &gb);
+            }
+            assert_eq!(
+                w.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                w2.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "{name}: restored trajectory diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn restore_rejects_missing_state() {
+        let mut a = by_name("adam", 0.01, 0.0).unwrap();
+        assert!(a.restore(&OptimizerState::default()).is_err());
+        let mut s = by_name("sgd", 0.01, 0.0).unwrap();
+        assert!(s.restore(&OptimizerState::default()).is_err(), "sgd wants its velocity");
     }
 
     #[test]

@@ -1,0 +1,177 @@
+//! The multi-process runtime's determinism pins.
+//!
+//! * tcp == inproc: a driver + worker-thread run over real localhost
+//!   sockets produces bitwise-identical weights and identical epoch
+//!   records to the in-process trainer, across every registered model and
+//!   both plan modes, with and without failure injection.
+//! * crash recovery: a worker killed mid-run is re-admitted, the run
+//!   rewinds to the last fully-acknowledged checkpoint, and (open-loop
+//!   schedule, no staleness) the final weights are STILL bitwise equal to
+//!   the uninterrupted in-process run.
+
+use std::net::TcpListener;
+use std::thread;
+use varco::config::{build_trainer, TrainConfig};
+use varco::coordinator::dist::{
+    run_driver, run_worker, CrashBehavior, DistRun, DriverOptions, WorkerOptions,
+};
+use varco::coordinator::ShardSet;
+use varco::metrics::RunReport;
+use varco::util::testing::TempDir;
+
+/// A small, fast config the in-process and multi-process runtimes both run.
+fn base_cfg(model: &str, plan: &str, dir: &TempDir) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.dataset = "karate-like".into();
+    cfg.nodes = 0;
+    cfg.q = 2;
+    cfg.model = model.into();
+    cfg.plan = plan.into();
+    cfg.comm = "fixed:2".into();
+    cfg.epochs = 3;
+    cfg.hidden = 4;
+    cfg.layers = 2;
+    cfg.eval_every = 1;
+    cfg.seed = 7;
+    cfg.ckpt_dir = dir.path().join("ckpt").to_string_lossy().into_owned();
+    cfg
+}
+
+/// Run the driver plus `q` worker threads over real localhost sockets.
+fn run_tcp(cfg: &TrainConfig) -> DistRun {
+    let mut cfg = cfg.clone();
+    cfg.transport = "tcp".into();
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind test listener");
+    cfg.driver_addr = listener.local_addr().unwrap().to_string();
+    let workers: Vec<_> = (0..cfg.q)
+        .map(|rank| {
+            let wcfg = cfg.clone();
+            thread::spawn(move || {
+                run_worker(&wcfg, rank, WorkerOptions { crash: CrashBehavior::Return })
+            })
+        })
+        .collect();
+    let run = run_driver(
+        &cfg,
+        DriverOptions { listener: Some(listener), spawn_workers: false, resume: false },
+    )
+    .expect("driver run");
+    for (rank, w) in workers.into_iter().enumerate() {
+        w.join().unwrap().unwrap_or_else(|e| panic!("worker {rank} failed: {e}"));
+    }
+    run
+}
+
+fn assert_reports_match(tcp: &RunReport, inproc: &RunReport) {
+    assert_eq!(tcp.records.len(), inproc.records.len(), "epoch counts differ");
+    for (t, r) in tcp.records.iter().zip(&inproc.records) {
+        assert_eq!(t.epoch, r.epoch);
+        assert_eq!(t.loss.to_bits(), r.loss.to_bits(), "loss differs at epoch {}", t.epoch);
+        assert_eq!(t.train_acc.to_bits(), r.train_acc.to_bits(), "epoch {}", t.epoch);
+        assert_eq!(t.val_acc.to_bits(), r.val_acc.to_bits(), "epoch {}", t.epoch);
+        assert_eq!(t.test_acc.to_bits(), r.test_acc.to_bits(), "epoch {}", t.epoch);
+        assert_eq!(t.rate, r.rate, "epoch {}", t.epoch);
+        assert_eq!(t.bytes_cum, r.bytes_cum, "byte accounting differs at epoch {}", t.epoch);
+    }
+    assert_eq!(tcp.stale_skipped, inproc.stale_skipped);
+}
+
+fn assert_weights_bitwise(tcp: &varco::engine::Weights, inproc: &varco::engine::Weights) {
+    let (a, b) = (tcp.flatten(), inproc.flatten());
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "weight {i} differs: {x} vs {y}");
+    }
+}
+
+#[test]
+fn tcp_matches_inproc_bitwise_across_models_and_plans() {
+    for model in ["sage", "gcn", "gin"] {
+        for plan in ["sparse", "dense"] {
+            let dir = TempDir::new().unwrap();
+            let cfg = base_cfg(model, plan, &dir);
+            let mut trainer = build_trainer(&cfg).expect("inproc trainer");
+            let inproc_report = trainer.run().expect("inproc run");
+            let dist = run_tcp(&cfg);
+            assert_weights_bitwise(&dist.weights, &trainer.weights);
+            assert_reports_match(&dist.report, &inproc_report);
+            assert_eq!(dist.report.restarts, 0, "{model}/{plan}");
+        }
+    }
+}
+
+#[test]
+fn tcp_matches_inproc_with_failure_injection() {
+    let dir = TempDir::new().unwrap();
+    let mut cfg = base_cfg("sage", "sparse", &dir);
+    cfg.drop_prob = 0.3;
+    let mut trainer = build_trainer(&cfg).expect("inproc trainer");
+    let inproc_report = trainer.run().expect("inproc run");
+    let dist = run_tcp(&cfg);
+    assert_weights_bitwise(&dist.weights, &trainer.weights);
+    assert_reports_match(&dist.report, &inproc_report);
+}
+
+#[test]
+fn crash_recovery_replays_bitwise_from_last_shard_set() {
+    let dir = TempDir::new().unwrap();
+    let mut cfg = base_cfg("sage", "sparse", &dir);
+    cfg.epochs = 6;
+    cfg.ckpt_every = 2; // shards after epochs 1, 3, 5
+    cfg.crash_at = "3:1".into(); // worker 1 dies on receiving the epoch-3 plan
+    cfg.max_restarts = 1;
+    cfg.heartbeat_ms = 50;
+    cfg.heartbeat_timeout_ms = 2_000;
+
+    // uninterrupted in-process reference (crash injection and checkpoint
+    // cadence do not perturb in-process training)
+    let mut trainer = build_trainer(&cfg).expect("inproc trainer");
+    let inproc_report = trainer.run().expect("inproc run");
+
+    let mut tcfg = cfg.clone();
+    tcfg.transport = "tcp".into();
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind test listener");
+    tcfg.driver_addr = listener.local_addr().unwrap().to_string();
+
+    // rank 0 survives; rank 1 crashes at epoch 3 and is brought back by
+    // this supervisor thread, exactly like an external process manager
+    let cfg0 = tcfg.clone();
+    let w0 = thread::spawn(move || {
+        run_worker(&cfg0, 0, WorkerOptions { crash: CrashBehavior::Return })
+    });
+    let cfg1 = tcfg.clone();
+    let w1 = thread::spawn(move || -> varco::Result<()> {
+        run_worker(&cfg1, 1, WorkerOptions { crash: CrashBehavior::Return })?;
+        let mut recfg = cfg1.clone();
+        recfg.crash_at = String::new();
+        run_worker(&recfg, 1, WorkerOptions { crash: CrashBehavior::Return })
+    });
+
+    let dist = run_driver(
+        &tcfg,
+        DriverOptions { listener: Some(listener), spawn_workers: false, resume: false },
+    )
+    .expect("driver survives the crash");
+    w0.join().unwrap().expect("worker 0");
+    w1.join().unwrap().expect("worker 1 (including its reincarnation)");
+
+    // recovery telemetry: one restart, resumed from the epoch-1 shard set
+    // (the epoch-3 set was never cut), so epoch 2 was replayed
+    assert_eq!(dist.report.restarts, 1);
+    assert_eq!(dist.report.recovered_epochs, 1);
+    assert_eq!(dist.report.heartbeat_timeouts, 0, "EOF should beat the heartbeat timer");
+    assert_eq!(dist.report.worker_last_ckpt, vec![Some(5), Some(5)]);
+    assert_eq!(dist.report.records.len(), 6);
+
+    // the replay is bitwise: same weights and records as the run that
+    // never crashed
+    assert_weights_bitwise(&dist.weights, &trainer.weights);
+    assert_reports_match(&dist.report, &inproc_report);
+
+    // workers persisted every acknowledged shard; the on-disk set
+    // reassembles for a whole-cluster restart
+    let ss = ShardSet::load(std::path::Path::new(&tcfg.ckpt_dir), "dist")
+        .expect("on-disk shard set loads");
+    assert_eq!(ss.checkpoint.epoch, 5);
+    assert_eq!(ss.checkpoint.flat_weights.len(), trainer.weights.param_count());
+}
