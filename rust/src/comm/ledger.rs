@@ -194,6 +194,26 @@ impl CommLedger {
         m
     }
 
+    /// Like [`Self::breakdown_by_link`], but skipping records of kind
+    /// `exclude`.  The link-aware rate controller's feedback wants halo
+    /// traffic only — the coordinator's fixed weight-sync charge rides on
+    /// links (i, 0)/(0, i) and would otherwise skew the allocation (and
+    /// differ from the dist workers' ledgers, which never see it).
+    pub fn breakdown_by_link_excluding(&self, exclude: &str) -> BTreeMap<(usize, usize), AggCell> {
+        let mut m: BTreeMap<(usize, usize), AggCell> = BTreeMap::new();
+        if let Detail::Entries(v) = &self.detail {
+            for e in v {
+                if e.kind == exclude {
+                    continue;
+                }
+                let cell = m.entry((e.from, e.to)).or_default();
+                cell.bytes += e.bytes;
+                cell.messages += 1;
+            }
+        }
+        m
+    }
+
     /// Conservation check: per-epoch sums equal record sums (property test).
     pub fn verify_conservation(&self) -> bool {
         let from_detail: usize = match &self.detail {

@@ -64,9 +64,19 @@ impl LinkModel {
         if links.is_empty() {
             return self.ledger_seconds(ledger, 1);
         }
-        links
-            .values()
-            .map(|c| self.alpha * c.messages as f64 + self.beta * c.bytes as f64)
+        self.bottleneck_seconds_over(links.values().map(|c| (c.messages, c.bytes)))
+    }
+
+    /// Bottleneck estimate over explicit `(messages, bytes)` cells — for
+    /// callers holding a report's per-link traffic rather than a live
+    /// ledger.  Returns 0 for an empty iterator.
+    pub fn bottleneck_seconds_over(
+        &self,
+        cells: impl IntoIterator<Item = (usize, usize)>,
+    ) -> f64 {
+        cells
+            .into_iter()
+            .map(|(msgs, bytes)| self.alpha * msgs as f64 + self.beta * bytes as f64)
             .fold(0.0, f64::max)
     }
 }

@@ -22,6 +22,8 @@
 //! the sequential oracle (`tests/parallel_equivalence.rs`).
 
 use super::CommMode;
+use crate::comm::LinkModel;
+use crate::Result;
 
 /// Which direction a message travels in the per-layer exchange.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -54,6 +56,17 @@ impl LayerFeedback {
     }
 }
 
+/// One directed link's traffic over one epoch, measured by the fabric
+/// ledger (sorted by `(from, to)` when assembled; merged in rank order
+/// for multi-process runs so the observation sequence is deterministic).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LinkCell {
+    pub from: usize,
+    pub to: usize,
+    pub bytes: usize,
+    pub msgs: usize,
+}
+
 /// One epoch's closed-loop feedback, assembled by the trainer at the
 /// epoch barrier (deterministically: worker contributions merged in rank
 /// order).
@@ -66,6 +79,9 @@ pub struct Feedback {
     pub layers: Vec<LayerFeedback>,
     /// the per-layer forward rate that produced them (None = no comm)
     pub rates: Vec<Option<f32>>,
+    /// per-(sender, receiver) epoch traffic from the detailed ledger
+    /// (empty under the aggregated ledger or when no controller asks)
+    pub links: Vec<LinkCell>,
 }
 
 impl Feedback {
@@ -92,6 +108,29 @@ pub trait RateController: Send + Sync {
     /// (the No-Comm baseline's local-normalization semantics).
     fn rate_for(&self, epoch: usize, layer: usize, kind: ChannelKind) -> Option<f32>;
 
+    /// Rate for a message on a specific directed link.  The default
+    /// ignores the link, so open-loop schedules and the uniform
+    /// [`BudgetController`] keep their per-(epoch, layer) behavior; a
+    /// link-aware controller returns per-(sender, receiver) rates here.
+    fn rate_for_link(
+        &self,
+        epoch: usize,
+        layer: usize,
+        kind: ChannelKind,
+        _from: usize,
+        _to: usize,
+    ) -> Option<f32> {
+        self.rate_for(epoch, layer, kind)
+    }
+
+    /// Whether `rate_for_link` can differ from `rate_for`.  When true the
+    /// trainer materializes the full per-(layer, sender, receiver) rate
+    /// matrix into each epoch plan (and ships it over the dist control
+    /// protocol) instead of the scalar per-layer rates.
+    fn link_aware(&self) -> bool {
+        false
+    }
+
     /// Representative rate for reporting (`EpochRecord::rate`).
     fn nominal_rate(&self, epoch: usize) -> Option<f32> {
         self.rate_for(epoch, 0, ChannelKind::Forward)
@@ -107,6 +146,27 @@ pub trait RateController: Send + Sync {
     /// End-of-epoch observation; called once per epoch, after the server
     /// step, with deterministically merged measurements.
     fn observe(&mut self, _fb: &Feedback) {}
+
+    /// Serialize all mutable state (for checkpoint shards).  Stateless
+    /// (open-loop) controllers return an empty blob.  Together with
+    /// `restore` this is what makes closed-loop crash recovery bitwise:
+    /// the driver snapshots the controller into the shard set and a
+    /// rewound run replays from exactly the checkpointed plan.
+    fn snapshot(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Restore state captured by `snapshot`.  The default accepts only an
+    /// empty blob (stateless controllers have nothing to restore).
+    fn restore(&mut self, bytes: &[u8]) -> Result<()> {
+        anyhow::ensure!(
+            bytes.is_empty(),
+            "controller {:?} is stateless but the snapshot carries {} bytes",
+            self.label(),
+            bytes.len()
+        );
+        Ok(())
+    }
 }
 
 /// The historical open-loop path: rates replayed from a [`CommMode`].
@@ -226,6 +286,139 @@ impl BudgetController {
     pub fn c_max(&self) -> f32 {
         self.c_max
     }
+
+    /// Per-layer bytes/epoch estimates at rate 1 (0.0 until observed).
+    pub fn full_estimates(&self) -> &[f64] {
+        &self.full_est
+    }
+
+    /// Estimated aggregate rate of the current plan: full-rate bytes over
+    /// planned bytes across layers (None before any observation).
+    pub fn planned_aggregate_rate(&self) -> Option<f64> {
+        let full: f64 = self.full_est.iter().sum();
+        let planned: f64 =
+            self.full_est.iter().zip(&self.plan).map(|(f, &r)| f / f64::from(r)).sum();
+        (full > 0.0 && planned > 0.0).then(|| full / planned)
+    }
+}
+
+// ---- snapshot codec (LE, strict) ---------------------------------------
+
+struct SnapReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> SnapReader<'a> {
+    fn new(buf: &'a [u8]) -> SnapReader<'a> {
+        SnapReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.buf.len() - self.pos >= n,
+            "controller snapshot: truncated {what} at offset {}",
+            self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self, what: &str) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn opt_f32(&mut self, what: &str) -> Result<Option<f32>> {
+        match self.u8(what)? {
+            0 => Ok(None),
+            1 => Ok(Some(self.f32(what)?)),
+            t => anyhow::bail!("controller snapshot: bad option tag {t} in {what}"),
+        }
+    }
+
+    fn done(&self, what: &str) -> Result<()> {
+        anyhow::ensure!(
+            self.pos == self.buf.len(),
+            "controller snapshot: {} trailing bytes after {what}",
+            self.buf.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+fn snap_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn snap_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn snap_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn snap_opt_f32(buf: &mut Vec<u8>, v: Option<f32>) {
+    match v {
+        Some(x) => {
+            buf.push(1);
+            snap_f32(buf, x);
+        }
+        None => buf.push(0),
+    }
+}
+
+impl BudgetController {
+    fn snapshot_into(&self, b: &mut Vec<u8>) {
+        snap_u64(b, self.plan.len() as u64);
+        for &r in &self.plan {
+            snap_f32(b, r);
+        }
+        snap_u64(b, self.spent as u64);
+        snap_u64(b, self.epochs_observed as u64);
+        snap_f64(b, self.overhead_est);
+        for &f in &self.full_est {
+            snap_f64(b, f);
+        }
+        b.push(u8::from(self.halted));
+        snap_opt_f32(b, self.last_rel_err);
+        snap_u64(b, self.violations as u64);
+    }
+
+    fn restore_from(&mut self, r: &mut SnapReader) -> Result<()> {
+        let n = r.u64("budget.plan.len")? as usize;
+        anyhow::ensure!(
+            n == self.plan.len(),
+            "budget snapshot has {n} layers, controller has {}",
+            self.plan.len()
+        );
+        for p in self.plan.iter_mut() {
+            *p = r.f32("budget.plan")?;
+        }
+        self.spent = r.u64("budget.spent")? as usize;
+        self.epochs_observed = r.u64("budget.epochs_observed")? as usize;
+        self.overhead_est = r.f64("budget.overhead_est")?;
+        for f in self.full_est.iter_mut() {
+            *f = r.f64("budget.full_est")?;
+        }
+        self.halted = r.u8("budget.halted")? != 0;
+        self.last_rel_err = r.opt_f32("budget.last_rel_err")?;
+        self.violations = r.u64("budget.violations")? as usize;
+        Ok(())
+    }
 }
 
 impl RateController for BudgetController {
@@ -322,6 +515,291 @@ impl RateController for BudgetController {
             self.last_rel_err = Some(rel);
         }
     }
+
+    fn snapshot(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        self.snapshot_into(&mut b);
+        b
+    }
+
+    fn restore(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut r = SnapReader::new(bytes);
+        self.restore_from(&mut r)?;
+        r.done("budget snapshot")
+    }
+}
+
+/// Link-aware budget controller: the uniform [`BudgetController`] decides
+/// *how many* bytes each epoch spends (budget pacing, per-layer split,
+/// Prop. 2 per-layer clamp, error backoff, hard halt); on top, a
+/// water-filling allocation redistributes those bytes across the
+/// (sender, receiver) links so the estimated per-link completion time
+/// `alpha * msgs + beta * bytes` is equalized — which minimizes
+/// [`LinkModel::bottleneck_seconds`] at the same total spend.  Hot links
+/// (partition-induced skew, CAGNET-style) compress harder, idle links
+/// spare their bytes (AdaQP-style assignment, arXiv 2306.01381).
+///
+/// Mechanics, per `observe`:
+///
+/// 1. Per-link full-byte estimates refresh from the ledger's epoch link
+///    cells: `F_ij = bytes_ij * r̄ * mult_ij`, where `r̄` is the
+///    byte-weighted aggregate of the uniform per-layer rates and
+///    `mult_ij` the multiplier that produced those bytes.
+/// 2. The uniform plan's next-epoch bytes per link,
+///    `u_ij = F_ij / r_next`, give the byte pool `U = Σ u_ij`.
+/// 3. Bisection on the water level λ solves
+///    `Σ clamp((λ − α·msgs_ij)/β, F_ij/c_max, F_ij) = U`; the clamp keeps
+///    every link's rate inside `[1, c_max]`.
+/// 4. The **aggregate** Prop. 2 clamp: if the allocation's estimated
+///    aggregate rate `ΣF / Σs` would exceed the previous epoch's, all
+///    allocations are scaled up (toward lighter compression) until it
+///    does not — heterogeneous per-link rates may individually rise, but
+///    the aggregate compression error keeps its non-increasing contract.
+/// 5. `rate_for_link` returns `inner_rate(layer) * (u_ij / s_ij)`,
+///    clamped to `[1, c_max]`.
+///
+/// Everything is f64 bisection with a fixed iteration count, so the
+/// allocation is a deterministic function of the observation sequence and
+/// parallel == sequential == tcp stays bitwise.
+pub struct LinkAwareBudgetController {
+    inner: BudgetController,
+    q: usize,
+    link: LinkModel,
+    /// full-byte estimate per directed link, dense `[from * q + to]`
+    link_full: Vec<f64>,
+    /// message-count estimate per directed link
+    link_msgs: Vec<f64>,
+    /// rate multiplier per directed link applied on top of the uniform plan
+    mult: Vec<f32>,
+    /// previous epoch's estimated aggregate rate (Prop. 2 ceiling)
+    last_agg_rate: Option<f64>,
+}
+
+impl LinkAwareBudgetController {
+    pub fn new(
+        budget_bytes: usize,
+        epochs: usize,
+        layers: usize,
+        c_max: f32,
+        q: usize,
+        link: LinkModel,
+    ) -> LinkAwareBudgetController {
+        let q = q.max(1);
+        LinkAwareBudgetController {
+            inner: BudgetController::new(budget_bytes, epochs, layers, c_max),
+            q,
+            link,
+            link_full: vec![0.0; q * q],
+            link_msgs: vec![0.0; q * q],
+            mult: vec![1.0; q * q],
+            last_agg_rate: None,
+        }
+    }
+
+    pub fn inner(&self) -> &BudgetController {
+        &self.inner
+    }
+
+    /// The current per-link rate multipliers, dense `[from * q + to]`.
+    pub fn multipliers(&self) -> &[f32] {
+        &self.mult
+    }
+
+    /// Estimated aggregate rate of the current link allocation.
+    pub fn aggregate_rate(&self) -> Option<f64> {
+        self.last_agg_rate
+    }
+
+    fn idx(&self, from: usize, to: usize) -> Option<usize> {
+        (from < self.q && to < self.q).then(|| from * self.q + to)
+    }
+
+    /// Recompute the per-link multipliers from the refreshed estimates.
+    fn replan_links(&mut self) {
+        let Some(r_next) = self.inner.planned_aggregate_rate() else {
+            return;
+        };
+        let c_max = f64::from(self.inner.c_max());
+        let alpha = self.link.alpha;
+        let beta = self.link.beta.max(1e-18);
+        // active links and the uniform plan's byte pool over them
+        let active: Vec<usize> =
+            (0..self.q * self.q).filter(|&i| self.link_full[i] > 0.0).collect();
+        if active.len() < 2 {
+            return; // nothing to redistribute
+        }
+        let pool: f64 = active.iter().map(|&i| self.link_full[i] / r_next).sum();
+        let lo: Vec<f64> = active.iter().map(|&i| self.link_full[i] / c_max).collect();
+        let hi: Vec<f64> = active.iter().map(|&i| self.link_full[i]).collect();
+        let pool = pool.clamp(lo.iter().sum::<f64>(), hi.iter().sum::<f64>());
+        // bisection on the water level: each link's bytes are the level
+        // minus its fixed latency cost, clamped into [lo, hi]
+        let fill = |lam: f64| -> Vec<f64> {
+            active
+                .iter()
+                .enumerate()
+                .map(|(k, &i)| {
+                    ((lam - alpha * self.link_msgs[i]) / beta).clamp(lo[k], hi[k])
+                })
+                .collect()
+        };
+        let mut lam_lo = f64::INFINITY;
+        let mut lam_hi = f64::NEG_INFINITY;
+        for (k, &i) in active.iter().enumerate() {
+            lam_lo = lam_lo.min(alpha * self.link_msgs[i] + beta * lo[k]);
+            lam_hi = lam_hi.max(alpha * self.link_msgs[i] + beta * hi[k]);
+        }
+        for _ in 0..64 {
+            let mid = 0.5 * (lam_lo + lam_hi);
+            if fill(mid).iter().sum::<f64>() < pool {
+                lam_lo = mid;
+            } else {
+                lam_hi = mid;
+            }
+        }
+        let mut alloc = fill(0.5 * (lam_lo + lam_hi));
+        // exact-pool rescale (bisection residue), then the aggregate
+        // Prop. 2 clamp: estimated aggregate rate must not rise
+        let total: f64 = alloc.iter().sum();
+        if total > 0.0 {
+            let s = pool / total;
+            for (k, a) in alloc.iter_mut().enumerate() {
+                *a = (*a * s).clamp(lo[k], hi[k]);
+            }
+        }
+        let full_tot: f64 = hi.iter().sum();
+        let agg = |alloc: &[f64]| -> f64 {
+            let spent: f64 = alloc.iter().sum();
+            if spent > 0.0 {
+                full_tot / spent
+            } else {
+                c_max
+            }
+        };
+        let mut rate = agg(&alloc);
+        if let Some(prev) = self.last_agg_rate {
+            if rate > prev {
+                let scale = rate / prev; // spend more to keep error falling
+                for (k, a) in alloc.iter_mut().enumerate() {
+                    *a = (*a * scale).min(hi[k]);
+                }
+                rate = agg(&alloc);
+            }
+        }
+        self.last_agg_rate = Some(rate.min(self.last_agg_rate.unwrap_or(f64::INFINITY)));
+        for (k, &i) in active.iter().enumerate() {
+            let uniform = self.link_full[i] / r_next;
+            self.mult[i] = if alloc[k] > 0.0 {
+                ((uniform / alloc[k]) as f32).clamp(1.0 / self.inner.c_max(), self.inner.c_max())
+            } else {
+                1.0
+            };
+        }
+    }
+}
+
+impl RateController for LinkAwareBudgetController {
+    fn label(&self) -> String {
+        format!("{}-linkaware", self.inner.label())
+    }
+
+    fn rate_for(&self, epoch: usize, layer: usize, kind: ChannelKind) -> Option<f32> {
+        self.inner.rate_for(epoch, layer, kind)
+    }
+
+    fn rate_for_link(
+        &self,
+        epoch: usize,
+        layer: usize,
+        kind: ChannelKind,
+        from: usize,
+        to: usize,
+    ) -> Option<f32> {
+        let base = self.inner.rate_for(epoch, layer, kind)?;
+        let mult = self.idx(from, to).map(|i| self.mult[i]).unwrap_or(1.0);
+        Some((base * mult).clamp(1.0, self.inner.c_max()))
+    }
+
+    fn link_aware(&self) -> bool {
+        true
+    }
+
+    fn nominal_rate(&self, epoch: usize) -> Option<f32> {
+        self.inner.nominal_rate(epoch)
+    }
+
+    fn wants_feedback(&self) -> bool {
+        true
+    }
+
+    fn observe(&mut self, fb: &Feedback) {
+        // refresh per-link estimates before the inner replan: the
+        // measured bytes were produced by the *current* multipliers
+        let wb: f64 = fb
+            .layers
+            .iter()
+            .zip(&fb.rates)
+            .filter_map(|(l, r)| r.map(|r| l.bytes as f64 * f64::from(r)))
+            .sum();
+        let bytes_tot: f64 = fb.layers.iter().map(|l| l.bytes as f64).sum();
+        let r_bar = if bytes_tot > 0.0 { wb / bytes_tot } else { 0.0 };
+        for cell in &fb.links {
+            let Some(i) = self.idx(cell.from, cell.to) else { continue };
+            if cell.bytes > 0 && r_bar > 0.0 {
+                self.link_full[i] = cell.bytes as f64 * r_bar * f64::from(self.mult[i]);
+                self.link_msgs[i] = cell.msgs as f64;
+            }
+        }
+        self.inner.observe(fb);
+        if !self.inner.halted() {
+            self.replan_links();
+        }
+    }
+
+    fn snapshot(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        self.inner.snapshot_into(&mut b);
+        snap_u64(&mut b, self.q as u64);
+        for &f in &self.link_full {
+            snap_f64(&mut b, f);
+        }
+        for &m in &self.link_msgs {
+            snap_f64(&mut b, m);
+        }
+        for &m in &self.mult {
+            snap_f32(&mut b, m);
+        }
+        match self.last_agg_rate {
+            Some(r) => {
+                b.push(1);
+                snap_f64(&mut b, r);
+            }
+            None => b.push(0),
+        }
+        b
+    }
+
+    fn restore(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut r = SnapReader::new(bytes);
+        self.inner.restore_from(&mut r)?;
+        let q = r.u64("linkaware.q")? as usize;
+        anyhow::ensure!(q == self.q, "linkaware snapshot is for q={q}, controller has q={}", self.q);
+        for f in self.link_full.iter_mut() {
+            *f = r.f64("linkaware.link_full")?;
+        }
+        for m in self.link_msgs.iter_mut() {
+            *m = r.f64("linkaware.link_msgs")?;
+        }
+        for m in self.mult.iter_mut() {
+            *m = r.f32("linkaware.mult")?;
+        }
+        self.last_agg_rate = match r.u8("linkaware.agg tag")? {
+            0 => None,
+            1 => Some(r.f64("linkaware.agg")?),
+            t => anyhow::bail!("controller snapshot: bad option tag {t} in linkaware.agg"),
+        };
+        r.done("linkaware snapshot")
+    }
 }
 
 #[cfg(test)]
@@ -338,6 +816,7 @@ mod tests {
                 .map(|&(bytes, err_sq, sig_sq)| LayerFeedback { bytes, err_sq, sig_sq })
                 .collect(),
             rates: rates.iter().map(|&r| Some(r)).collect(),
+            links: Vec::new(),
         }
     }
 
@@ -440,6 +919,183 @@ mod tests {
         assert_eq!(c.budget(), 5_000);
         assert_eq!(c.label(), "budget-5000B");
         assert_eq!(c.current_plan().len(), 2);
+    }
+
+    fn fbl(
+        epoch: usize,
+        total: usize,
+        per_layer: &[(usize, f32, f32)],
+        rates: &[f32],
+        links: &[(usize, usize, usize, usize)],
+    ) -> Feedback {
+        let mut f = fb(epoch, total, per_layer, rates);
+        f.links = links
+            .iter()
+            .map(|&(from, to, bytes, msgs)| LinkCell { from, to, bytes, msgs })
+            .collect();
+        f
+    }
+
+    #[test]
+    fn default_rate_for_link_ignores_the_link() {
+        let c = OpenLoopController::new(CommMode::Compressed(Scheduler::Fixed { rate: 4.0 }));
+        assert!(!c.link_aware());
+        assert_eq!(
+            c.rate_for_link(2, 1, ChannelKind::Forward, 0, 3),
+            c.rate_for(2, 1, ChannelKind::Forward)
+        );
+        let b = BudgetController::new(10_000, 5, 2, 32.0);
+        assert!(!b.link_aware());
+        assert_eq!(
+            b.rate_for_link(0, 1, ChannelKind::Backward, 1, 0),
+            b.rate_for(0, 1, ChannelKind::Backward)
+        );
+    }
+
+    #[test]
+    fn linkaware_hot_link_compresses_harder() {
+        let mut c =
+            LinkAwareBudgetController::new(1_000_000, 10, 1, 64.0, 2, LinkModel::ten_gbe());
+        assert!(c.link_aware());
+        assert!(c.label().ends_with("-linkaware"));
+        // before any feedback every link runs the uniform plan
+        assert_eq!(
+            c.rate_for_link(0, 0, ChannelKind::Forward, 0, 1),
+            c.rate_for(0, 0, ChannelKind::Forward)
+        );
+        // skewed partition: link 0->1 carries 3x the bytes of 1->0
+        c.observe(&fbl(
+            0,
+            2_000,
+            &[(2_000, 1.0, 10.0)],
+            &[64.0],
+            &[(0, 1, 1_500, 3), (1, 0, 500, 3)],
+        ));
+        let base = c.rate_for(1, 0, ChannelKind::Forward).unwrap();
+        assert!(base > 1.0 && base < 64.0, "plan should have descended, got {base}");
+        let hot = c.rate_for_link(1, 0, ChannelKind::Forward, 0, 1).unwrap();
+        let cold = c.rate_for_link(1, 0, ChannelKind::Forward, 1, 0).unwrap();
+        assert!(
+            hot > base && base > cold,
+            "water-fill must bracket the uniform rate: hot {hot} / base {base} / cold {cold}"
+        );
+        // the multipliers are what the allocation redistributed
+        let m = c.multipliers();
+        assert!(m[1] > 1.0 && m[2] < 1.0, "multipliers {m:?}");
+        // out-of-range ranks fall back to the uniform rate
+        assert_eq!(c.rate_for_link(1, 0, ChannelKind::Forward, 0, 9), Some(base));
+    }
+
+    #[test]
+    fn linkaware_aggregate_rate_never_rises_under_flapping_skew() {
+        // skew that flips every epoch would bounce the raw allocation's
+        // aggregate rate; the Prop. 2 clamp must keep the estimate (and
+        // with it the aggregate error contract) non-increasing
+        let mut c = LinkAwareBudgetController::new(200_000, 12, 1, 64.0, 2, LinkModel::ten_gbe());
+        let mut prev_agg: Option<f64> = None;
+        let mut r = 64.0f32;
+        for e in 0..10 {
+            let (a, b) = if e % 2 == 0 { (1_600, 400) } else { (400, 1_600) };
+            c.observe(&fbl(
+                e,
+                2_000,
+                &[(2_000, 1.0, 10.0)],
+                &[r],
+                &[(0, 1, a, 5), (1, 0, b, 5)],
+            ));
+            if let Some(cur) = c.aggregate_rate() {
+                if let Some(p) = prev_agg {
+                    assert!(cur <= p + 1e-9, "aggregate rate rose at epoch {e}: {p} -> {cur}");
+                }
+                prev_agg = Some(cur);
+            }
+            for m in c.multipliers() {
+                assert!((1.0 / 64.0..=64.0).contains(m), "multiplier out of range: {m}");
+            }
+            if let Some(rate) = c.rate_for(e + 1, 0, ChannelKind::Forward) {
+                for (from, to) in [(0, 1), (1, 0)] {
+                    let lr = c.rate_for_link(e + 1, 0, ChannelKind::Forward, from, to).unwrap();
+                    assert!((1.0..=64.0).contains(&lr), "link rate out of range: {lr}");
+                }
+                r = rate;
+            }
+        }
+        assert!(prev_agg.is_some(), "allocation never produced an aggregate estimate");
+    }
+
+    #[test]
+    fn budget_snapshot_restore_roundtrip() {
+        let mut a = BudgetController::new(50_000, 10, 2, 64.0);
+        for e in 0..3 {
+            let r: Vec<f32> = (0..2)
+                .map(|l| a.rate_for(e, l, ChannelKind::Forward).unwrap())
+                .collect();
+            a.observe(&fb(e, 2_000, &[(1_000, 1.0, 4.0), (1_000, 2.0, 4.0)], &r));
+        }
+        let snap = a.snapshot();
+        let mut b = BudgetController::new(50_000, 10, 2, 64.0);
+        b.restore(&snap).unwrap();
+        assert_eq!(b.spent(), a.spent());
+        assert_eq!(b.violations(), a.violations());
+        assert_eq!(b.current_plan(), a.current_plan());
+        assert_eq!(b.full_estimates(), a.full_estimates());
+        for l in 0..2 {
+            assert_eq!(
+                b.rate_for(3, l, ChannelKind::Forward),
+                a.rate_for(3, l, ChannelKind::Forward)
+            );
+        }
+        // truncated snapshots error instead of mis-restoring
+        assert!(b.restore(&snap[..snap.len() - 1]).is_err());
+        // wrong layer count errors
+        let mut w = BudgetController::new(50_000, 10, 3, 64.0);
+        assert!(w.restore(&snap).is_err());
+    }
+
+    #[test]
+    fn linkaware_snapshot_restore_roundtrip() {
+        let mk = || LinkAwareBudgetController::new(1_000_000, 10, 1, 64.0, 2, LinkModel::ten_gbe());
+        let mut a = mk();
+        let mut r = 64.0f32;
+        for e in 0..3 {
+            a.observe(&fbl(
+                e,
+                2_000,
+                &[(2_000, 1.0, 10.0)],
+                &[r],
+                &[(0, 1, 1_500, 3), (1, 0, 500, 3)],
+            ));
+            r = a.rate_for(e + 1, 0, ChannelKind::Forward).unwrap();
+        }
+        let snap = a.snapshot();
+        let mut b = mk();
+        b.restore(&snap).unwrap();
+        assert_eq!(b.multipliers(), a.multipliers());
+        assert_eq!(b.aggregate_rate(), a.aggregate_rate());
+        assert_eq!(b.inner().spent(), a.inner().spent());
+        for (from, to) in [(0, 1), (1, 0)] {
+            assert_eq!(
+                b.rate_for_link(3, 0, ChannelKind::Forward, from, to),
+                a.rate_for_link(3, 0, ChannelKind::Forward, from, to)
+            );
+        }
+        // and the restored controller keeps evolving identically
+        let next = fbl(3, 2_000, &[(2_000, 0.8, 10.0)], &[r], &[(0, 1, 1_200, 3), (1, 0, 800, 3)]);
+        a.observe(&next);
+        b.observe(&next);
+        assert_eq!(b.multipliers(), a.multipliers());
+        // a q=2 snapshot must not restore into a q=3 controller
+        let mut wrong =
+            LinkAwareBudgetController::new(1_000_000, 10, 1, 64.0, 3, LinkModel::ten_gbe());
+        assert!(wrong.restore(&snap).is_err());
+    }
+
+    #[test]
+    fn open_loop_snapshot_is_empty_and_restore_is_strict() {
+        let mut c = OpenLoopController::new(CommMode::Full);
+        assert!(c.snapshot().is_empty());
+        assert!(c.restore(&[]).is_ok());
+        assert!(c.restore(&[1, 2, 3]).is_err());
     }
 
     #[test]

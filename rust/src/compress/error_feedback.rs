@@ -248,6 +248,37 @@ mod tests {
     }
 
     #[test]
+    fn per_link_rate_transitions_rescale_only_that_channel() {
+        // a link-aware controller moves each (layer, sender, receiver)
+        // channel's rate independently: the hot link's transition must
+        // rescale *its* residual while the cold link's memory is untouched
+        let n = 128;
+        let x = vec![1.0f32; n];
+        let hot = plan_channel(0, 0, 1);
+        let cold = plan_channel(0, 0, 2);
+        let mut ef = ErrorFeedback::new();
+        for r in 0..6 {
+            ef.compress(hot, &x, 16.0, 100 + r);
+            ef.compress(cold, &x, 16.0, 500 + r);
+        }
+        let hot_before = ef.residual_norm(hot);
+        let cold_before = ef.residual_norm(cold);
+        // next plan: hot link drops to rate 2, cold link keeps rate 16
+        ef.compress(hot, &x, 2.0, 700);
+        ef.compress(cold, &x, 16.0, 701);
+        assert!(
+            ef.residual_norm(hot) < 0.5 * hot_before,
+            "hot-link residual not rescaled on its rate transition"
+        );
+        // the cold channel saw no transition: its residual stays at the
+        // rate-16 steady state (same signal, so the norm barely moves)
+        assert!(
+            ef.residual_norm(cold) > 0.5 * cold_before,
+            "cold-link residual must not be touched by the hot link's move"
+        );
+    }
+
+    #[test]
     fn rate_transition_rescales_residual_downward() {
         let n = 256;
         let x = vec![1.0f32; n];

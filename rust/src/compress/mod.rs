@@ -24,10 +24,11 @@ pub mod topk;
 pub mod wire;
 
 pub use controller::{
-    BudgetController, ChannelKind, Feedback, LayerFeedback, OpenLoopController, RateController,
+    BudgetController, ChannelKind, Feedback, LayerFeedback, LinkAwareBudgetController, LinkCell,
+    OpenLoopController, RateController,
 };
 pub use error_feedback::{plan_channel, ErrorFeedback};
-pub use scheduler::{CommMode, Scheduler};
+pub use scheduler::{CommMode, RateAlloc, Scheduler};
 pub use subset::RandomSubsetCompressor;
 
 use crate::Result;

@@ -42,6 +42,38 @@ impl CommMode {
     }
 }
 
+/// How a closed-loop budget run assigns rates across directed
+/// (sender, receiver) links — the optional trailing token of a
+/// `budget:BYTES[:CMAX][:uniform|linkaware]` comm spec.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RateAlloc {
+    /// one rate per (epoch, layer), shared by every link (the paper's
+    /// variable-rate scheme)
+    #[default]
+    Uniform,
+    /// per-(sender, receiver) water-filling on top of the uniform plan:
+    /// hot links compress harder so bottleneck seconds shrink at equal
+    /// total bytes ([`LinkAwareBudgetController`](super::LinkAwareBudgetController))
+    LinkAware,
+}
+
+impl RateAlloc {
+    pub fn parse(s: &str) -> Result<RateAlloc> {
+        match s {
+            "uniform" => Ok(RateAlloc::Uniform),
+            "linkaware" => Ok(RateAlloc::LinkAware),
+            _ => anyhow::bail!("bad rate allocation {s:?}; use uniform | linkaware"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            RateAlloc::Uniform => "uniform",
+            RateAlloc::LinkAware => "linkaware",
+        }
+    }
+}
+
 /// Rate schedulers; all clamp to [c_min, c_max] and are non-increasing.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Scheduler {

@@ -8,7 +8,8 @@
 //! q           = 2
 //! partitioner = random
 //! comm        = linear:5        # full | none | fixed:R | linear:A | exp
-//!                               # | step:E:F | budget:BYTES[:CMAX]
+//!                               # | step:E:F
+//!                               # | budget:BYTES[:CMAX][:uniform|linkaware]
 //! model       = sage            # sage | gcn | gin (model registry)
 //! engine      = native          # native | pjrt
 //! epochs      = 100
@@ -17,13 +18,19 @@
 //!
 //! `comm = budget:2m` installs a closed-loop [`BudgetController`] that
 //! spends 2 MB of wire bytes over the run (suffixes k/m/g accepted, an
-//! optional second field caps the starting rate, default 128); every
-//! other spec replays the named open-loop schedule.  `overlap = on`
+//! optional second field caps the starting rate, default 128); a
+//! trailing `linkaware` field swaps in the
+//! [`LinkAwareBudgetController`], which redistributes the same byte
+//! spend across (sender, receiver) links to minimize the estimated
+//! bottleneck-link time; every other spec replays the named open-loop
+//! schedule.  `overlap = on`
 //! pipelines interior compute with in-flight boundary payloads (bitwise
 //! identical results; native engine only).
 
 use crate::comm::LedgerMode;
-use crate::compress::{BudgetController, CommMode, RateController, Scheduler};
+use crate::compress::{
+    BudgetController, CommMode, LinkAwareBudgetController, RateAlloc, RateController, Scheduler,
+};
 use crate::coordinator::{RunMode, Trainer, TrainerOptions};
 use crate::engine::{ModelDims, WorkerEngine};
 use crate::graph::Dataset;
@@ -41,7 +48,7 @@ pub struct TrainConfig {
     pub q: usize,
     pub partitioner: String,
     /// comm spec: full | none | fixed:R | linear:A | exp | step:E:F
-    /// | budget:BYTES[:CMAX] (closed-loop byte budget)
+    /// | budget:BYTES[:CMAX][:uniform|linkaware] (closed-loop byte budget)
     pub comm: String,
     pub compressor: String,
     pub engine: String,
@@ -283,21 +290,32 @@ impl TrainConfig {
         }
     }
 
-    /// Parse a `budget:BYTES[:CMAX]` comm spec, if this is one.
-    pub fn budget_spec(&self) -> Result<Option<(usize, f32)>> {
+    /// Parse a `budget:BYTES[:CMAX][:uniform|linkaware]` comm spec, if
+    /// this is one.  The CMAX field is recognized by parsing as a number,
+    /// so `budget:2m:linkaware` (default CMAX) also works.
+    pub fn budget_spec(&self) -> Result<Option<(usize, f32, RateAlloc)>> {
         let Some(rest) = self.comm.strip_prefix("budget:") else {
             return Ok(None);
         };
         let mut it = rest.split(':');
         let bytes = parse_byte_size(it.next().unwrap_or(""))?;
-        let c_max: f32 = match it.next() {
-            Some(c) => c.parse()?,
-            None => 128.0,
-        };
+        let mut c_max = 128.0f32;
+        let mut alloc = RateAlloc::Uniform;
+        if let Some(tok) = it.next() {
+            match tok.parse::<f32>() {
+                Ok(c) => {
+                    c_max = c;
+                    if let Some(tok2) = it.next() {
+                        alloc = RateAlloc::parse(tok2)?;
+                    }
+                }
+                Err(_) => alloc = RateAlloc::parse(tok)?,
+            }
+        }
         anyhow::ensure!(it.next().is_none(), "bad budget spec {:?}", self.comm);
         anyhow::ensure!(bytes > 0, "budget must be > 0 bytes");
         anyhow::ensure!(c_max >= 1.0 && c_max.is_finite(), "budget c_max {c_max} must be >= 1");
-        Ok(Some((bytes, c_max)))
+        Ok(Some((bytes, c_max, alloc)))
     }
 
     /// Default artifact tag for (dataset, q) when not set explicitly.
@@ -505,18 +523,31 @@ pub fn build_trainer_with_dataset(cfg: &TrainConfig, dataset: &Dataset) -> Resul
     // records the starting rate (label/reporting comes from the controller)
     let (comm_mode, controller): (CommMode, Option<Box<dyn RateController>>) =
         match cfg.budget_spec()? {
-            Some((bytes, c_max)) => (
+            Some((bytes, c_max, RateAlloc::Uniform)) => (
                 CommMode::Compressed(Scheduler::Fixed { rate: c_max }),
                 Some(Box::new(BudgetController::new(bytes, cfg.epochs, cfg.layers, c_max))),
             ),
+            Some((bytes, c_max, RateAlloc::LinkAware)) => (
+                CommMode::Compressed(Scheduler::Fixed { rate: c_max }),
+                Some(Box::new(LinkAwareBudgetController::new(
+                    bytes,
+                    cfg.epochs,
+                    cfg.layers,
+                    c_max,
+                    cfg.q,
+                    crate::comm::LinkModel::ten_gbe(),
+                ))),
+            ),
             None => (cfg.comm_mode()?, None),
         };
+    let link_aware = controller.as_ref().is_some_and(|c| c.link_aware());
     let ledger_mode = match cfg.ledger.as_str() {
         "detailed" => LedgerMode::Detailed,
         "aggregated" => LedgerMode::Aggregated,
-        // budget runs can be long and only need aggregate feedback
+        // budget runs can be long and only need aggregate feedback — but
+        // a link-aware controller feeds on per-link ledger cells
         "" | "auto" => {
-            if controller.is_some() {
+            if controller.is_some() && !link_aware {
                 LedgerMode::Aggregated
             } else {
                 LedgerMode::Detailed
@@ -524,6 +555,11 @@ pub fn build_trainer_with_dataset(cfg: &TrainConfig, dataset: &Dataset) -> Resul
         }
         other => anyhow::bail!("unknown ledger mode {other:?}; known: auto, detailed, aggregated"),
     };
+    anyhow::ensure!(
+        !(link_aware && ledger_mode == LedgerMode::Aggregated),
+        "comm = {:?} needs per-link feedback; run with ledger = detailed (or auto)",
+        cfg.comm
+    );
 
     let opts = TrainerOptions {
         comm_mode,
@@ -682,9 +718,15 @@ mod tests {
     fn budget_spec_parsing() {
         let mut cfg = TrainConfig::default();
         cfg.comm = "budget:2m".into();
-        assert_eq!(cfg.budget_spec().unwrap(), Some((2_000_000, 128.0)));
+        assert_eq!(cfg.budget_spec().unwrap(), Some((2_000_000, 128.0, RateAlloc::Uniform)));
         cfg.comm = "budget:500k:64".into();
-        assert_eq!(cfg.budget_spec().unwrap(), Some((500_000, 64.0)));
+        assert_eq!(cfg.budget_spec().unwrap(), Some((500_000, 64.0, RateAlloc::Uniform)));
+        cfg.comm = "budget:500k:64:linkaware".into();
+        assert_eq!(cfg.budget_spec().unwrap(), Some((500_000, 64.0, RateAlloc::LinkAware)));
+        cfg.comm = "budget:2m:linkaware".into();
+        assert_eq!(cfg.budget_spec().unwrap(), Some((2_000_000, 128.0, RateAlloc::LinkAware)));
+        cfg.comm = "budget:2m:uniform".into();
+        assert_eq!(cfg.budget_spec().unwrap(), Some((2_000_000, 128.0, RateAlloc::Uniform)));
         cfg.comm = "fixed:4".into();
         assert_eq!(cfg.budget_spec().unwrap(), None);
         cfg.comm = "budget:0".into();
@@ -692,6 +734,10 @@ mod tests {
         cfg.comm = "budget:1k:0.5".into();
         assert!(cfg.budget_spec().is_err());
         cfg.comm = "budget:1k:2:9".into();
+        assert!(cfg.budget_spec().is_err());
+        cfg.comm = "budget:1k:2:linkaware:x".into();
+        assert!(cfg.budget_spec().is_err());
+        cfg.comm = "budget:1k:sideways".into();
         assert!(cfg.budget_spec().is_err());
         // budget specs are closed-loop: the open-loop parser rejects them
         cfg.comm = "budget:1k".into();

@@ -22,22 +22,25 @@
 //!    `Rewind` the survivors (reset data plane, reconnect only the
 //!    changed ranks), then resume broadcasting plans.
 //!
-//! Replayed epochs are bitwise identical to the originals under open-loop
-//! schedules (all per-message state is key-derived); closed-loop
-//! controllers observe replayed epochs twice and therefore land in the
-//! same loss neighborhood rather than on identical bits.
+//! Replayed epochs are bitwise identical to the originals: under
+//! open-loop schedules all per-message state is key-derived, and
+//! closed-loop controllers snapshot their mutable state into rank 0's
+//! residual slot of every shard set, so a rewound run replans from
+//! exactly the checkpointed controller rather than re-observing the
+//! replayed epochs twice.
 
 use super::protocol::{read_ctrl, write_ctrl, Ctrl};
 use super::{build_controller, config_hash, DistContext};
-use crate::compress::{LayerFeedback, RateController};
+use crate::compress::{LayerFeedback, LinkCell, RateController};
 use crate::config::TrainConfig;
 use crate::coordinator::checkpoint::{CheckpointShard, ShardSet};
 use crate::coordinator::eval::FullGraphEval;
-use crate::coordinator::trainer::{observe_epoch, plan_epoch, push_record};
+use crate::coordinator::trainer::{observe_epoch, plan_epoch, push_record, LinkRates};
 use crate::engine::Weights;
-use crate::metrics::RunReport;
+use crate::metrics::{LinkTraffic, RunReport};
 use crate::optim::Optimizer;
 use crate::Result;
+use std::collections::BTreeMap;
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::process::{Child, Command};
@@ -150,6 +153,12 @@ struct Driver<'a> {
     /// per-epoch stale-skip deltas; truncated on rewind so replays don't
     /// double-count
     stale_by_epoch: Vec<u64>,
+    /// per-epoch per-link cells merged rank-order from worker outcomes;
+    /// truncated on rewind alongside `stale_by_epoch`
+    links_by_epoch: Vec<Vec<LinkCell>>,
+    /// most recent per-link rate plan (link-aware controllers only),
+    /// surfaced as `RunReport::link_rates`
+    last_links: Option<LinkRates>,
     restarts: usize,
     recovered_epochs: usize,
     heartbeat_timeouts: usize,
@@ -346,7 +355,10 @@ impl<'a> Driver<'a> {
     /// controller loop, and append the epoch record.
     fn run_epoch(&mut self, epoch: usize) -> Phase<()> {
         let t0 = Instant::now();
-        let plan = plan_epoch(self.controller.as_ref(), epoch, self.layer_dims.len());
+        let plan = plan_epoch(self.controller.as_ref(), epoch, self.layer_dims.len(), self.q());
+        if plan.links.is_some() {
+            self.last_links = plan.links.clone();
+        }
         let flat_w = self.weights.flatten();
         self.broadcast(&Ctrl::Plan {
             epoch,
@@ -355,6 +367,7 @@ impl<'a> Driver<'a> {
             nominal: plan.nominal,
             feedback: plan.feedback,
             local_norm: plan.local_norm,
+            links: plan.links.as_ref().map(|l| l.rates.clone()).unwrap_or_default(),
             weights: flat_w,
         });
         if !self.fleet_intact() {
@@ -405,9 +418,19 @@ impl<'a> Driver<'a> {
         let mut epoch_bytes: usize = 0;
         let mut stale_delta: u64 = 0;
         let mut cells: Vec<Vec<LayerFeedback>> = Vec::with_capacity(self.q());
+        // merge per-link cells across ranks; the BTreeMap gives the same
+        // canonical (from, to) order the in-process ledger diff produces
+        let mut link_map: BTreeMap<(usize, usize), (usize, usize)> = BTreeMap::new();
         for (rank, out) in outs.into_iter().enumerate() {
-            let Some(Ctrl::Outcome { loss_weighted: lw, grads, feedback, bytes, stale_skipped, .. }) =
-                out
+            let Some(Ctrl::Outcome {
+                loss_weighted: lw,
+                grads,
+                feedback,
+                bytes,
+                stale_skipped,
+                links,
+                ..
+            }) = out
             else {
                 unreachable!("collected above");
             };
@@ -423,8 +446,17 @@ impl<'a> Driver<'a> {
             loss_weighted += lw;
             epoch_bytes += bytes as usize;
             stale_delta += stale_skipped;
+            for c in links {
+                let e = link_map.entry((c.from, c.to)).or_insert((0, 0));
+                e.0 += c.bytes;
+                e.1 += c.msgs;
+            }
             cells.push(feedback);
         }
+        let link_cells: Vec<LinkCell> = link_map
+            .into_iter()
+            .map(|((from, to), (bytes, msgs))| LinkCell { from, to, bytes, msgs })
+            .collect();
         let loss = loss_weighted / self.ctx.setup.total_train;
         // weight-sync accounting: same constant charge as the in-process
         // ledger (gradients up, weights down, per worker)
@@ -432,6 +464,14 @@ impl<'a> Driver<'a> {
         epoch_bytes += 2 * self.q() * wbytes;
         self.bytes_cum += epoch_bytes;
         self.stale_by_epoch.push(stale_delta);
+        // same conditional as the in-process trainer, so both closed-loop
+        // paths hand the controller identical observations
+        let fb_links = if plan.feedback && self.controller.link_aware() {
+            link_cells.clone()
+        } else {
+            Vec::new()
+        };
+        self.links_by_epoch.push(link_cells);
 
         let mut flat = self.weights.flatten();
         self.optimizer.step(&mut flat, &grad_acc);
@@ -442,6 +482,7 @@ impl<'a> Driver<'a> {
             epoch,
             epoch_bytes,
             cells.iter().map(|c| c.as_slice()),
+            fb_links,
         );
         let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
         if let Err(e) = push_record(
@@ -464,11 +505,15 @@ impl<'a> Driver<'a> {
     /// Ship per-rank shards after `epoch` and wait for every ack; only a
     /// fully acknowledged set becomes the recovery point.
     fn checkpoint(&mut self, epoch: usize) -> Phase<()> {
+        // rank 0's residual slot carries the controller snapshot; workers
+        // hold no controller state, so the other slots stay empty
+        let mut residuals = vec![Vec::new(); self.q()];
+        residuals[0] = self.controller.snapshot();
         let shards = ShardSet::make_shards(
             &self.ctx.spec,
             &self.weights.flatten(),
             &self.optimizer.state(),
-            &vec![Vec::new(); self.q()],
+            &residuals,
             epoch,
             self.cfg.seed,
             self.q(),
@@ -582,21 +627,30 @@ impl<'a> Driver<'a> {
                         self.cfg.weight_decay,
                     )?;
                     self.optimizer.restore(&ss.optimizer)?;
+                    // rewind the controller to the checkpointed plan so
+                    // replayed epochs are observed exactly once
+                    self.controller = build_controller(self.cfg)?;
+                    if let Some(blob) = ss.residuals.first() {
+                        self.controller.restore(blob)?;
+                    }
                     ss.checkpoint.epoch + 1
                 }
                 None => {
-                    // no checkpoint yet: restart training from scratch
+                    // no checkpoint yet: restart training from scratch,
+                    // controller included
                     self.weights = Weights::glorot(&self.ctx.spec, self.cfg.seed);
                     self.optimizer = crate::optim::by_name(
                         &self.cfg.optimizer,
                         self.cfg.lr,
                         self.cfg.weight_decay,
                     )?;
+                    self.controller = build_controller(self.cfg)?;
                     0
                 }
             };
             self.report.records.truncate(resume);
             self.stale_by_epoch.truncate(resume);
+            self.links_by_epoch.truncate(resume);
             self.bytes_cum = self.report.records.last().map(|r| r.bytes_cum).unwrap_or(0);
             match self.admission_barrier(resume, true) {
                 Ok(()) => {
@@ -692,8 +746,9 @@ pub fn run_driver(cfg: &TrainConfig, opts: DriverOptions) -> Result<DistRun> {
         model: ctx.spec.name.clone(),
         records: Vec::new(),
         stale_skipped: 0,
-        // per-link cells never leave the worker processes; dist reports
-        // carry aggregate bytes only (documented in README)
+        // filled at the end of the run from the per-epoch link cells the
+        // workers ship in their outcomes (halo traffic; the constant
+        // weight-sync charge has no (sender, receiver) link)
         link_bytes: Vec::new(),
         ..Default::default()
     };
@@ -712,6 +767,8 @@ pub fn run_driver(cfg: &TrainConfig, opts: DriverOptions) -> Result<DistRun> {
         report,
         bytes_cum: 0,
         stale_by_epoch: Vec::new(),
+        links_by_epoch: Vec::new(),
+        last_links: None,
         restarts: 0,
         recovered_epochs: 0,
         heartbeat_timeouts: 0,
@@ -743,6 +800,11 @@ pub fn run_driver(cfg: &TrainConfig, opts: DriverOptions) -> Result<DistRun> {
         start_epoch = ss.checkpoint.epoch + 1;
         driver.weights = ss.checkpoint.to_weights()?;
         driver.optimizer.restore(&ss.optimizer)?;
+        // legacy shard sets carry no controller snapshot; skip the empty
+        // blob so stateful controllers fall back to their fresh plan
+        if let Some(blob) = ss.residuals.first().filter(|b| !b.is_empty()) {
+            driver.controller.restore(blob)?;
+        }
         driver.last_shards = Some(ShardSet::make_shards(
             &driver.ctx.spec,
             &ss.checkpoint.flat_weights,
@@ -822,6 +884,21 @@ pub fn run_driver(cfg: &TrainConfig, opts: DriverOptions) -> Result<DistRun> {
 
     driver.shutdown();
     driver.report.stale_skipped = driver.stale_by_epoch.iter().sum::<u64>() as usize;
+    let mut link_sum: BTreeMap<(usize, usize), (usize, usize)> = BTreeMap::new();
+    for cells in &driver.links_by_epoch {
+        for c in cells {
+            let e = link_sum.entry((c.from, c.to)).or_insert((0, 0));
+            e.0 += c.bytes;
+            e.1 += c.msgs;
+        }
+    }
+    driver.report.link_bytes = link_sum
+        .into_iter()
+        .map(|((from, to), (bytes, messages))| LinkTraffic { from, to, bytes, messages })
+        .collect();
+    if let Some(lr) = &driver.last_links {
+        driver.report.link_rates = lr.to_report();
+    }
     driver.report.restarts = driver.restarts;
     driver.report.recovered_epochs = driver.recovered_epochs;
     driver.report.heartbeat_timeouts = driver.heartbeat_timeouts;

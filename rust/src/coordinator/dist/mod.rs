@@ -18,10 +18,11 @@
 //! in-flight epoch, re-admits (or respawns) the dead rank, restores
 //! weights + optimizer from the last fully-acknowledged checkpoint shard
 //! set, rewinds the run report, and replays from that epoch.  With
-//! `ckpt_every = 1` and an open-loop schedule the replay is bitwise
-//! identical to the uninterrupted run; closed-loop controllers observe
-//! replayed epochs twice, so those runs converge to the same loss
-//! neighborhood rather than the same bits (documented in README).
+//! `ckpt_every = 1` the replay is bitwise identical to the uninterrupted
+//! run for open-loop schedules AND closed-loop `budget:*` runs: the
+//! driver snapshots the rate controller into each shard set (rank 0's
+//! residual slot) and restores it on rewind, so replayed epochs are
+//! planned and observed exactly once (documented in README).
 //!
 //! Determinism across transports: for identical configs, a tcp run and an
 //! in-process run produce bitwise-identical weights.  Per-position f32
@@ -41,7 +42,10 @@ pub use driver::{run_driver, DistRun, DriverOptions};
 pub use worker::{run_worker, CrashBehavior, WorkerOptions};
 
 use crate::comm::TcpOptions;
-use crate::compress::{BudgetController, OpenLoopController, RateController};
+use crate::comm::LinkModel;
+use crate::compress::{
+    BudgetController, LinkAwareBudgetController, OpenLoopController, RateAlloc, RateController,
+};
 use crate::config::TrainConfig;
 use crate::coordinator::trainer::RunSetup;
 use crate::engine::{ModelDims, ModelSpec};
@@ -146,9 +150,17 @@ pub(crate) fn tcp_options(cfg: &TrainConfig) -> TcpOptions {
 /// `config::build_trainer_with_dataset`.
 pub(crate) fn build_controller(cfg: &TrainConfig) -> Result<Box<dyn RateController>> {
     Ok(match cfg.budget_spec()? {
-        Some((bytes, c_max)) => {
+        Some((bytes, c_max, RateAlloc::Uniform)) => {
             Box::new(BudgetController::new(bytes, cfg.epochs, cfg.layers, c_max))
         }
+        Some((bytes, c_max, RateAlloc::LinkAware)) => Box::new(LinkAwareBudgetController::new(
+            bytes,
+            cfg.epochs,
+            cfg.layers,
+            c_max,
+            cfg.q,
+            LinkModel::ten_gbe(),
+        )),
         None => Box::new(OpenLoopController::new(cfg.comm_mode()?)),
     })
 }

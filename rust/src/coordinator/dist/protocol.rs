@@ -25,7 +25,7 @@
 //! hostile peer produces a clear error instead of an allocation blow-up.
 
 use crate::comm::transport::frame::{read_frame, write_frame, TAG_CTRL};
-use crate::compress::LayerFeedback;
+use crate::compress::{LayerFeedback, LinkCell};
 use crate::Result;
 use std::io::{Read, Write};
 
@@ -68,6 +68,10 @@ pub enum Ctrl {
         nominal: Option<f32>,
         feedback: bool,
         local_norm: bool,
+        /// flat per-(layer, sender, receiver) rate matrix from a
+        /// link-aware controller (`layers * q * q`, <= 0 = no override);
+        /// empty for uniform-rate plans
+        links: Vec<f32>,
         weights: Vec<f32>,
     },
     /// worker -> driver: the epoch's result (or a compute error)
@@ -83,6 +87,9 @@ pub enum Ctrl {
         bytes: u64,
         /// stale-injection skip-counter delta over this epoch
         stale_skipped: u64,
+        /// per-link ledger-breakdown delta over this epoch (this rank's
+        /// halo sends; the driver merges ranks in order)
+        links: Vec<LinkCell>,
         error: Option<String>,
     },
     /// worker -> driver: liveness beacon on a fixed cadence
@@ -278,7 +285,7 @@ pub fn encode_ctrl(msg: &Ctrl) -> Vec<u8> {
             b.push(T_READY);
             put_u64(&mut b, *rank as u64);
         }
-        Ctrl::Plan { epoch, fwd, bwd, nominal, feedback, local_norm, weights } => {
+        Ctrl::Plan { epoch, fwd, bwd, nominal, feedback, local_norm, links, weights } => {
             b.push(T_PLAN);
             put_u64(&mut b, *epoch as u64);
             put_rates(&mut b, fwd);
@@ -286,9 +293,20 @@ pub fn encode_ctrl(msg: &Ctrl) -> Vec<u8> {
             put_opt_f32(&mut b, *nominal);
             b.push(u8::from(*feedback));
             b.push(u8::from(*local_norm));
+            put_f32s(&mut b, links);
             put_f32s(&mut b, weights);
         }
-        Ctrl::Outcome { rank, epoch, loss_weighted, grads, feedback, bytes, stale_skipped, error } => {
+        Ctrl::Outcome {
+            rank,
+            epoch,
+            loss_weighted,
+            grads,
+            feedback,
+            bytes,
+            stale_skipped,
+            links,
+            error,
+        } => {
             b.push(T_OUTCOME);
             put_u64(&mut b, *rank as u64);
             put_u64(&mut b, *epoch as u64);
@@ -302,6 +320,13 @@ pub fn encode_ctrl(msg: &Ctrl) -> Vec<u8> {
             }
             put_u64(&mut b, *bytes);
             put_u64(&mut b, *stale_skipped);
+            put_u64(&mut b, links.len() as u64);
+            for l in links {
+                put_u64(&mut b, l.from as u64);
+                put_u64(&mut b, l.to as u64);
+                put_u64(&mut b, l.bytes as u64);
+                put_u64(&mut b, l.msgs as u64);
+            }
             match error {
                 Some(e) => {
                     b.push(1);
@@ -360,6 +385,7 @@ pub fn decode_ctrl(buf: &[u8]) -> Result<Ctrl> {
             nominal: c.opt_f32("plan.nominal")?,
             feedback: c.u8("plan.feedback")? != 0,
             local_norm: c.u8("plan.local_norm")? != 0,
+            links: c.f32s("plan.links")?,
             weights: c.f32s("plan.weights")?,
         },
         T_OUTCOME => {
@@ -378,12 +404,32 @@ pub fn decode_ctrl(buf: &[u8]) -> Result<Ctrl> {
             }
             let bytes = c.u64("outcome.bytes")?;
             let stale_skipped = c.u64("outcome.stale_skipped")?;
+            let nl = c.usize_capped(MAX_ITEMS, "outcome.links")?;
+            let mut links = Vec::with_capacity(nl);
+            for _ in 0..nl {
+                links.push(LinkCell {
+                    from: c.u64("outcome.links.from")? as usize,
+                    to: c.u64("outcome.links.to")? as usize,
+                    bytes: c.u64("outcome.links.bytes")? as usize,
+                    msgs: c.u64("outcome.links.msgs")? as usize,
+                });
+            }
             let error = match c.u8("outcome.error")? {
                 0 => None,
                 1 => Some(c.str_("outcome.error")?),
                 t => anyhow::bail!("ctrl decode: bad option tag {t} in outcome.error"),
             };
-            Ctrl::Outcome { rank, epoch, loss_weighted, grads, feedback, bytes, stale_skipped, error }
+            Ctrl::Outcome {
+                rank,
+                epoch,
+                loss_weighted,
+                grads,
+                feedback,
+                bytes,
+                stale_skipped,
+                links,
+                error,
+            }
         }
         T_HEARTBEAT => Ctrl::Heartbeat { rank: c.u64("heartbeat.rank")? as usize },
         T_CHECKPOINT => Ctrl::Checkpoint {
@@ -450,6 +496,7 @@ mod tests {
             nominal: Some(0.5),
             feedback: true,
             local_norm: false,
+            links: vec![0.0, 2.0, 4.0, 0.0, 0.0, 1.0, 8.0, 0.0],
             weights: vec![1.5, -2.25, 0.0, f32::MIN_POSITIVE],
         });
         roundtrip(Ctrl::Outcome {
@@ -460,6 +507,7 @@ mod tests {
             feedback: vec![LayerFeedback { bytes: 40, err_sq: 0.125, sig_sq: 2.0 }],
             bytes: 1234,
             stale_skipped: 2,
+            links: vec![LinkCell { from: 0, to: 1, bytes: 640, msgs: 4 }],
             error: None,
         });
         roundtrip(Ctrl::Outcome {
@@ -470,6 +518,7 @@ mod tests {
             feedback: vec![],
             bytes: 0,
             stale_skipped: 0,
+            links: vec![],
             error: Some("link to worker 0 is down".into()),
         });
         roundtrip(Ctrl::Heartbeat { rank: 2 });
@@ -490,7 +539,22 @@ mod tests {
             nominal: Some(0.5),
             feedback: false,
             local_norm: false,
+            links: vec![0.0, 2.0],
             weights: vec![1.0, 2.0],
+        });
+        for cut in 1..body.len() {
+            assert!(decode_ctrl(&body[..cut]).is_err(), "truncation at {cut} must error");
+        }
+        let body = encode_ctrl(&Ctrl::Outcome {
+            rank: 0,
+            epoch: 1,
+            loss_weighted: 1.0,
+            grads: vec![0.5],
+            feedback: vec![LayerFeedback { bytes: 8, err_sq: 0.5, sig_sq: 1.0 }],
+            bytes: 8,
+            stale_skipped: 0,
+            links: vec![LinkCell { from: 0, to: 1, bytes: 8, msgs: 1 }],
+            error: None,
         });
         for cut in 1..body.len() {
             assert!(decode_ctrl(&body[..cut]).is_err(), "truncation at {cut} must error");

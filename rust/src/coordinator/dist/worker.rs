@@ -15,7 +15,7 @@ use super::{config_hash, tcp_options, DistContext};
 use crate::comm::{Fabric, FailurePolicy, LedgerMode, TcpTransport, Transport};
 use crate::config::TrainConfig;
 use crate::coordinator::checkpoint::CheckpointShard;
-use crate::coordinator::trainer::{dist_worker_epoch, EpochPlan};
+use crate::coordinator::trainer::{dist_worker_epoch, link_delta, EpochPlan, LinkRates};
 use crate::engine::native::NativeWorkerEngine;
 use crate::engine::Weights;
 use crate::util::Workspace;
@@ -202,7 +202,7 @@ pub fn run_worker(cfg: &TrainConfig, rank: usize, opts: WorkerOptions) -> Result
                 }
                 send_ctrl(&writer, &Ctrl::RewindAck { rank })?;
             }
-            Ctrl::Plan { epoch, fwd, bwd, nominal, feedback, local_norm, weights: flat } => {
+            Ctrl::Plan { epoch, fwd, bwd, nominal, feedback, local_norm, links, weights: flat } => {
                 if crash_at == Some((epoch, rank)) {
                     eprintln!("[varco worker {rank}] injected crash at epoch {epoch}");
                     match opts.crash {
@@ -216,9 +216,15 @@ pub fn run_worker(cfg: &TrainConfig, rank: usize, opts: WorkerOptions) -> Result
                     flat.len()
                 );
                 weights.set_from_flat(&flat);
-                let plan = EpochPlan { fwd, bwd, local_norm, nominal, feedback };
+                let links = (!links.is_empty())
+                    .then(|| LinkRates { q: cfg.q, rates: links });
+                let plan = EpochPlan { fwd, bwd, local_norm, nominal, feedback, links };
                 let bytes0 = fabric.total_bytes();
                 let stale0 = fabric.stale_skipped();
+                // per-link baseline at plan receipt, so an aborted partial
+                // epoch cannot inflate the replayed epoch's delta
+                let mut links0 =
+                    fabric.merged_ledger().breakdown_by_link_excluding("weights");
                 match dist_worker_epoch(
                     epoch,
                     &ctx.setup,
@@ -244,6 +250,7 @@ pub fn run_worker(cfg: &TrainConfig, rank: usize, opts: WorkerOptions) -> Result
                                 feedback: out.feedback,
                                 bytes: (fabric.total_bytes() - bytes0) as u64,
                                 stale_skipped: (fabric.stale_skipped() - stale0) as u64,
+                                links: link_delta(&fabric.merged_ledger(), &mut links0),
                                 error: None,
                             },
                         )?;
@@ -263,6 +270,7 @@ pub fn run_worker(cfg: &TrainConfig, rank: usize, opts: WorkerOptions) -> Result
                                 feedback: Vec::new(),
                                 bytes: 0,
                                 stale_skipped: 0,
+                                links: Vec::new(),
                                 error: Some(e.to_string()),
                             },
                         )?;

@@ -70,9 +70,12 @@
 //! parallel runtime stays bitwise equal to the sequential oracle), and
 //! `observe` closes the loop before the next epoch's plan is drawn.
 
-use crate::comm::{Endpoint, Fabric, FailurePolicy, LedgerMode, LinkModel, Message, MessageKind};
+use crate::comm::{
+    AggCell, Endpoint, Fabric, FailurePolicy, LedgerMode, LinkModel, Message, MessageKind,
+};
 use crate::compress::{
-    ChannelKind, CommMode, Compressor, Feedback, LayerFeedback, OpenLoopController, RateController,
+    ChannelKind, CommMode, Compressor, Feedback, LayerFeedback, LinkCell, OpenLoopController,
+    RateController,
 };
 use crate::coordinator::eval::FullGraphEval;
 use crate::engine::{LayerParams, ModelDims, ModelSpec, Weights, WorkerEngine};
@@ -86,7 +89,7 @@ use crate::tensor::Matrix;
 use crate::util::parallel::Gate;
 use crate::util::Workspace;
 use crate::Result;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Barrier, Mutex, RwLock};
 
@@ -214,6 +217,40 @@ fn msg_key(seed: u64, epoch: usize, layer: usize, from: usize, to: usize) -> u64
     k
 }
 
+/// Per-(layer, sender, receiver) rate matrix a link-aware controller
+/// publishes with the epoch plan.  A flat `layers * q * q` array keyed
+/// `[layer][from * q + to]`; entries <= 0 (the diagonal, layers that do
+/// not communicate) mean "no override — use the per-layer base rate".
+#[derive(Clone, Debug, PartialEq)]
+pub(crate) struct LinkRates {
+    pub(crate) q: usize,
+    pub(crate) rates: Vec<f32>,
+}
+
+impl LinkRates {
+    pub(crate) fn rate(&self, layer: usize, from: usize, to: usize) -> Option<f32> {
+        let v = *self.rates.get(layer * self.q * self.q + from * self.q + to)?;
+        (v > 0.0).then_some(v)
+    }
+
+    /// The populated entries, in report form (diagonal / silent layers
+    /// carry <= 0 and are skipped).
+    pub(crate) fn to_report(&self) -> Vec<crate::metrics::LinkRate> {
+        let qq = self.q * self.q;
+        self.rates
+            .iter()
+            .enumerate()
+            .filter(|&(_, &v)| v > 0.0)
+            .map(|(i, &v)| crate::metrics::LinkRate {
+                layer: i / qq,
+                from: (i % qq) / self.q,
+                to: i % self.q,
+                rate: v,
+            })
+            .collect()
+    }
+}
+
 /// One epoch's published rate decisions: a pure value shared by all
 /// workers, drawn from the controller by the coordinator *before* the
 /// epoch starts, so the barrier schedule is identical on every worker.
@@ -230,16 +267,52 @@ pub(crate) struct EpochPlan {
     pub(crate) nominal: Option<f32>,
     /// measure per-message bytes + channel error for the controller
     pub(crate) feedback: bool,
+    /// per-link rate overrides (None = uniform per-layer rates).  Both
+    /// directions of a channel — the forward message from -> to and the
+    /// cotangent return to -> from — compress at the FORWARD link's
+    /// entry, so the shared-key mask stays identical and backward remains
+    /// exact backprop through the forward compression.
+    pub(crate) links: Option<LinkRates>,
 }
 
-pub(crate) fn plan_epoch(ctrl: &dyn RateController, epoch: usize, layers: usize) -> EpochPlan {
+pub(crate) fn plan_epoch(
+    ctrl: &dyn RateController,
+    epoch: usize,
+    layers: usize,
+    q: usize,
+) -> EpochPlan {
     let fwd: Vec<Option<f32>> =
         (0..layers).map(|l| ctrl.rate_for(epoch, l, ChannelKind::Forward)).collect();
     let bwd: Vec<Option<f32>> =
         (0..layers).map(|l| ctrl.rate_for(epoch, l, ChannelKind::Backward)).collect();
     let local_norm =
         fwd.iter().all(|r| r.is_none()) && bwd.iter().all(|r| r.is_none());
-    EpochPlan { local_norm, nominal: ctrl.nominal_rate(epoch), feedback: ctrl.wants_feedback(), fwd, bwd }
+    let links = if ctrl.link_aware() {
+        let mut rates = vec![0.0f32; layers * q * q];
+        for (l, base) in fwd.iter().enumerate() {
+            let Some(base) = base else { continue };
+            for i in 0..q {
+                for j in 0..q {
+                    if i != j {
+                        rates[l * q * q + i * q + j] = ctrl
+                            .rate_for_link(epoch, l, ChannelKind::Forward, i, j)
+                            .unwrap_or(*base);
+                    }
+                }
+            }
+        }
+        Some(LinkRates { q, rates })
+    } else {
+        None
+    };
+    EpochPlan {
+        local_norm,
+        nominal: ctrl.nominal_rate(epoch),
+        feedback: ctrl.wants_feedback(),
+        fwd,
+        bwd,
+        links,
+    }
 }
 
 /// Close the epoch's control loop: merge per-worker feedback cells in the
@@ -254,6 +327,7 @@ pub(crate) fn observe_epoch<'a>(
     epoch: usize,
     epoch_bytes: usize,
     worker_cells: impl Iterator<Item = &'a [LayerFeedback]>,
+    links: Vec<LinkCell>,
 ) {
     if !plan.feedback {
         return;
@@ -269,7 +343,31 @@ pub(crate) fn observe_epoch<'a>(
         total_bytes: epoch_bytes,
         layers: merged,
         rates: plan.fwd.clone(),
+        links,
     });
+}
+
+/// This epoch's halo traffic per directed link: the delta of a ledger's
+/// cumulative weights-excluded per-link breakdown against `prev`, which
+/// is updated in place.  BTreeMap iteration keys the cells in (from, to)
+/// order — the same canonical order the dist driver's rank-ordered merge
+/// produces, so both feedback paths hand the controller identical
+/// observations.  Empty under an aggregated ledger (no link identity).
+pub(crate) fn link_delta(
+    ledger: &crate::comm::CommLedger,
+    prev: &mut BTreeMap<(usize, usize), AggCell>,
+) -> Vec<LinkCell> {
+    let now = ledger.breakdown_by_link_excluding("weights");
+    let mut out = Vec::new();
+    for (&(from, to), cell) in &now {
+        let p = prev.get(&(from, to)).copied().unwrap_or_default();
+        let (bytes, msgs) = (cell.bytes - p.bytes, cell.messages - p.messages);
+        if bytes > 0 || msgs > 0 {
+            out.push(LinkCell { from, to, bytes, msgs });
+        }
+    }
+    *prev = now;
+    out
 }
 
 /// One worker's borrowed view of the shared immutable run state.  Both run
@@ -299,7 +397,9 @@ impl<'a> WorkerCtx<'a> {
     /// The payload staging buffer comes from the worker's workspace, so
     /// steady-state sends do not allocate.  With `track`, returns the
     /// exact wire bytes plus channel error/signal mass of every message
-    /// (the budget controller's feedback; zeros otherwise).
+    /// (the budget controller's feedback; zeros otherwise).  Each message
+    /// compresses at `links`'s entry for the link it traverses when a
+    /// per-link plan is published, else at the per-layer `rate`.
     #[allow(clippy::too_many_arguments)]
     fn send_forward(
         &self,
@@ -309,6 +409,7 @@ impl<'a> WorkerCtx<'a> {
         layer: usize,
         h: &Matrix,
         rate: f32,
+        links: Option<&LinkRates>,
         f: usize,
         track: bool,
     ) -> LayerFeedback {
@@ -322,7 +423,8 @@ impl<'a> WorkerCtx<'a> {
                 payload.extend_from_slice(h.row(row as usize));
             }
             let key = msg_key(self.seed, epoch, layer, q, plan.to);
-            let compressed = self.compressor.compress(&payload, rate, key);
+            let r = links.and_then(|lr| lr.rate(layer, q, plan.to)).unwrap_or(rate);
+            let compressed = self.compressor.compress(&payload, r, key);
             if track {
                 let (err_sq, sig_sq) = self.compressor.channel_error(&payload, &compressed);
                 stats.err_sq += err_sq;
@@ -354,7 +456,8 @@ impl<'a> WorkerCtx<'a> {
                 payload.extend_from_slice(h.row(row as usize));
             }
             let key = msg_key(self.seed, epoch, layer, q, mirror.via) ^ 0xBEEF_CAFE;
-            let compressed = self.compressor.compress(&payload, rate, key);
+            let r = links.and_then(|lr| lr.rate(layer, q, mirror.via)).unwrap_or(rate);
+            let compressed = self.compressor.compress(&payload, r, key);
             let bytes = compressed.wire_bytes();
             ep.record_bytes(epoch, mirror.via, "replica", bytes);
             if track {
@@ -397,7 +500,8 @@ impl<'a> WorkerCtx<'a> {
 
     /// Return the cotangents of the received boundary rows to their owners,
     /// in the exact element order of the forward message owner->self and
-    /// compressed with the SAME key (identical mask).
+    /// compressed with the SAME key — and, under a per-link plan, the same
+    /// forward-link rate — so the mask is identical.
     #[allow(clippy::too_many_arguments)]
     fn send_backward(
         &self,
@@ -407,6 +511,7 @@ impl<'a> WorkerCtx<'a> {
         layer: usize,
         g_bnd: &Matrix,
         rate: f32,
+        links: Option<&LinkRates>,
         f: usize,
         track: bool,
     ) -> LayerFeedback {
@@ -434,7 +539,8 @@ impl<'a> WorkerCtx<'a> {
                 }
             }
             let key = msg_key(self.seed, epoch, layer, q, p);
-            let compressed = self.compressor.compress(&payload, rate, key);
+            let r = links.and_then(|lr| lr.rate(layer, q, p)).unwrap_or(rate);
+            let compressed = self.compressor.compress(&payload, r, key);
             if track {
                 let (err_sq, sig_sq) = self.compressor.channel_error(&payload, &compressed);
                 stats.err_sq += err_sq;
@@ -571,7 +677,7 @@ fn worker_epoch(
                 if err.is_none() {
                     let h_ref: &Matrix = h.as_ref().unwrap_or(&d.x);
                     match compute(gate, intra, || {
-                        let s = ctx.send_forward(endpoint, ws, epoch, l, h_ref, r, fi, plan.feedback);
+                        let s = ctx.send_forward(endpoint, ws, epoch, l, h_ref, r, plan.links.as_ref(), fi, plan.feedback);
                         engine.forward_interior(l, weights, h_ref, local_norm)?;
                         Ok(s)
                     }) {
@@ -609,7 +715,7 @@ fn worker_epoch(
                 // rows (the epoch is discarded by the coordinator anyway)
                 let h_ref: &Matrix = h.as_ref().unwrap_or(&d.x);
                 match compute(gate, intra, || {
-                    Ok(ctx.send_forward(endpoint, ws, epoch, l, h_ref, r, fi, plan.feedback))
+                    Ok(ctx.send_forward(endpoint, ws, epoch, l, h_ref, r, plan.links.as_ref(), fi, plan.feedback))
                 }) {
                     Ok(s) => feedback[l].merge(&s),
                     Err(e) => err = Some(e),
@@ -678,7 +784,7 @@ fn worker_epoch(
                     match compute(gate, intra, || {
                         let g_bnd = engine.backward_halo(l, weights, &g, local_norm)?;
                         let s = ctx
-                            .send_backward(endpoint, ws, epoch, l, &g_bnd, r, fi, plan.feedback);
+                            .send_backward(endpoint, ws, epoch, l, &g_bnd, r, plan.links.as_ref(), fi, plan.feedback);
                         engine.recycle(g_bnd);
                         let (gl, lg) = engine.backward_finish(l, weights, local_norm)?;
                         Ok((s, gl, lg))
@@ -720,7 +826,7 @@ fn worker_epoch(
         if let Some(r) = plan.bwd[l] {
             if err.is_none() {
                 match compute(gate, intra, || {
-                    Ok(ctx.send_backward(endpoint, ws, epoch, l, &g_bnd, r, fi, plan.feedback))
+                    Ok(ctx.send_backward(endpoint, ws, epoch, l, &g_bnd, r, plan.links.as_ref(), fi, plan.feedback))
                 }) {
                     Ok(s) => feedback[l].merge(&s),
                     Err(e) => err = Some(e),
@@ -922,7 +1028,7 @@ pub(crate) fn dist_worker_epoch(
     for (l, &(fi, _)) in layer_dims.iter().enumerate() {
         let h_bnd = if let Some(r) = plan.fwd[l] {
             let h_ref: &Matrix = h.as_ref().unwrap_or(&d.x);
-            let s = ctx.send_forward(endpoint, ws, epoch, l, h_ref, r, fi, plan.feedback);
+            let s = ctx.send_forward(endpoint, ws, epoch, l, h_ref, r, plan.links.as_ref(), fi, plan.feedback);
             feedback[l].merge(&s);
             let senders = setup.activation_senders(l, rank);
             let msgs = endpoint.recv_expected(MessageKind::Activation { layer: l }, &senders)?;
@@ -957,7 +1063,7 @@ pub(crate) fn dist_worker_epoch(
         engine.recycle(prev);
         lgrads[l] = Some(lg);
         if let Some(r) = plan.bwd[l] {
-            let s = ctx.send_backward(endpoint, ws, epoch, l, &g_bnd, r, fi, plan.feedback);
+            let s = ctx.send_backward(endpoint, ws, epoch, l, &g_bnd, r, plan.links.as_ref(), fi, plan.feedback);
             feedback[l].merge(&s);
             let senders = setup.gradient_senders(l, rank);
             let msgs = endpoint.recv_expected(MessageKind::Gradient { layer: l }, &senders)?;
@@ -996,6 +1102,12 @@ pub struct Trainer {
     eval: FullGraphEval,
     total_train: f32,
     plan_idx: HashMap<(usize, usize, usize), usize>,
+    /// cumulative weights-excluded per-link breakdown at the last
+    /// controller observation (per-epoch deltas feed link-aware
+    /// controllers; see [`link_delta`])
+    link_snapshot: BTreeMap<(usize, usize), AggCell>,
+    /// most recent published per-link rate plan (report surface)
+    last_links: Option<LinkRates>,
     pub grad_norm_trace: Vec<f32>,
     pub report: RunReport,
 }
@@ -1084,6 +1196,8 @@ impl Trainer {
             eval,
             total_train,
             plan_idx,
+            link_snapshot: BTreeMap::new(),
+            last_links: None,
             grad_norm_trace: Vec::new(),
             report,
         })
@@ -1197,13 +1311,18 @@ impl Trainer {
             grad_norm_trace,
             total_train,
             plan_idx,
+            link_snapshot,
+            last_links,
             ..
         } = self;
         let data: &[WorkerData] = data;
         let plan_idx: &HashMap<(usize, usize, usize), usize> = plan_idx;
         let q = engines.len();
         let layer_dims = spec.layer_dims();
-        let plan = plan_epoch(controller.as_ref(), epoch, layer_dims.len());
+        let plan = plan_epoch(controller.as_ref(), epoch, layer_dims.len(), q);
+        if plan.links.is_some() {
+            *last_links = plan.links.clone();
+        }
         let local_norm = plan.local_norm;
         let bytes0 = fabric.total_bytes();
         // per-(worker, layer) feedback cells, merged in rank order below —
@@ -1234,6 +1353,7 @@ impl Trainer {
                             l,
                             h_ref,
                             r,
+                            plan.links.as_ref(),
                             fi,
                             plan.feedback,
                         );
@@ -1266,6 +1386,7 @@ impl Trainer {
                             l,
                             h_ref,
                             r,
+                            plan.links.as_ref(),
                             fi,
                             plan.feedback,
                         );
@@ -1326,6 +1447,7 @@ impl Trainer {
                             l,
                             &g_bnd,
                             r,
+                            plan.links.as_ref(),
                             fi,
                             plan.feedback,
                         );
@@ -1362,6 +1484,7 @@ impl Trainer {
                         l,
                         &g_bnds[p],
                         r,
+                        plan.links.as_ref(),
                         fi,
                         plan.feedback,
                     );
@@ -1404,12 +1527,18 @@ impl Trainer {
         weights.set_from_flat(&flat_w);
 
         // ---- close the loop ----
+        let link_cells = if plan.feedback && controller.link_aware() {
+            link_delta(&fabric.merged_ledger(), link_snapshot)
+        } else {
+            Vec::new()
+        };
         observe_epoch(
             controller.as_mut(),
             &plan,
             epoch,
             fabric.total_bytes() - bytes0,
             fbs.iter().map(|v| v.as_slice()),
+            link_cells,
         );
         Ok((mean_loss, grad_acc))
     }
@@ -1423,6 +1552,9 @@ impl Trainer {
             RunMode::Parallel => self.run_parallel()?,
         }
         self.report.stale_skipped = self.fabric.stale_skipped();
+        if let Some(lr) = &self.last_links {
+            self.report.link_rates = lr.to_report();
+        }
         self.report.link_bytes = self
             .fabric
             .merged_ledger()
@@ -1484,6 +1616,8 @@ impl Trainer {
             eval,
             total_train,
             plan_idx,
+            link_snapshot,
+            last_links,
             grad_norm_trace,
             report,
         } = self;
@@ -1497,7 +1631,7 @@ impl Trainer {
         // the epoch's rate plan, published by the coordinator before the
         // workers are admitted; workers only ever read it between the
         // epoch-edge barriers, so there is no writer contention
-        let plan_lock = RwLock::new(plan_epoch(controller.as_ref(), 0, layer_dims.len()));
+        let plan_lock = RwLock::new(plan_epoch(controller.as_ref(), 0, layer_dims.len(), q));
         let threads = if opts.threads == 0 {
             crate::util::parallel::num_threads()
         } else {
@@ -1585,6 +1719,9 @@ impl Trainer {
                 // snapshot the published plan (workers are parked at the
                 // barrier, so nobody holds the read lock)
                 let cur_plan = plan_lock.read().unwrap().clone();
+                if cur_plan.links.is_some() {
+                    *last_links = cur_plan.links.clone();
+                }
                 let bytes0 = fabric.total_bytes();
                 sync.wait(); // workers enter the epoch
                 let t0 = std::time::Instant::now();
@@ -1645,16 +1782,22 @@ impl Trainer {
                 // ---- close the loop (rank-order merge shared with the
                 // sequential oracle) and publish the next epoch's plan
                 // before re-admitting workers
+                let link_cells = if cur_plan.feedback && controller.link_aware() {
+                    link_delta(&fabric.merged_ledger(), link_snapshot)
+                } else {
+                    Vec::new()
+                };
                 observe_epoch(
                     controller.as_mut(),
                     &cur_plan,
                     epoch,
                     fabric.total_bytes() - bytes0,
                     outs.iter().map(|o| o.feedback.as_slice()),
+                    link_cells,
                 );
                 if epoch + 1 < epochs {
                     *plan_lock.write().unwrap() =
-                        plan_epoch(controller.as_ref(), epoch + 1, layer_dims.len());
+                        plan_epoch(controller.as_ref(), epoch + 1, layer_dims.len(), q);
                 }
 
                 // same timing scope as the sequential path: the whole epoch

@@ -34,6 +34,18 @@ pub struct LinkTraffic {
     pub messages: usize,
 }
 
+/// One (layer, sender, receiver) channel's compression rate as chosen by
+/// a link-aware controller for the final epoch plan it published (empty
+/// for uniform-rate runs).  Rate is the forward-channel rate; the
+/// cotangent return reuses it so masks stay identical.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkRate {
+    pub layer: usize,
+    pub from: usize,
+    pub to: usize,
+    pub rate: f32,
+}
+
 /// A full training run's record.
 #[derive(Clone, Debug, Default)]
 pub struct RunReport {
@@ -52,6 +64,9 @@ pub struct RunReport {
     /// per-link byte/message totals (empty when the run used the
     /// aggregated ledger, which keeps no per-link cells)
     pub link_bytes: Vec<LinkTraffic>,
+    /// the last published per-(layer, sender, receiver) rate matrix
+    /// (empty unless a link-aware controller drove the run)
+    pub link_rates: Vec<LinkRate>,
     /// worker process restarts the driver performed (0 for in-process runs)
     pub restarts: usize,
     /// epochs re-executed because a crash rewound the run to the last
@@ -153,6 +168,22 @@ impl RunReport {
                 ),
             ),
             (
+                "link_rates",
+                Json::Arr(
+                    self.link_rates
+                        .iter()
+                        .map(|l| {
+                            Json::obj(vec![
+                                ("layer", Json::num(l.layer as f64)),
+                                ("from", Json::num(l.from as f64)),
+                                ("to", Json::num(l.to as f64)),
+                                ("rate", Json::num(l.rate as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
                 "records",
                 Json::Arr(
                     self.records
@@ -207,6 +238,23 @@ impl RunReport {
                                 to: l.get("to")?.as_usize()?,
                                 bytes: l.get("bytes")?.as_usize()?,
                                 messages: l.get("messages")?.as_usize()?,
+                            })
+                        })
+                        .collect()
+                })
+                .unwrap_or_default(),
+            // reports written before link-aware allocation carry none
+            link_rates: j
+                .get("link_rates")
+                .and_then(|v| v.as_arr())
+                .map(|arr| {
+                    arr.iter()
+                        .filter_map(|l| {
+                            Some(LinkRate {
+                                layer: l.get("layer")?.as_usize()?,
+                                from: l.get("from")?.as_usize()?,
+                                to: l.get("to")?.as_usize()?,
+                                rate: l.get("rate")?.as_f64()? as f32,
                             })
                         })
                         .collect()
@@ -321,6 +369,7 @@ mod tests {
         r.stale_skipped = 3;
         r.link_bytes =
             vec![LinkTraffic { from: 0, to: 1, bytes: 40, messages: 2 }];
+        r.link_rates = vec![LinkRate { layer: 1, from: 0, to: 1, rate: 3.5 }];
         let dir = crate::util::testing::TempDir::new().unwrap();
         let csv = dir.path().join("run.csv");
         let json = dir.path().join("run.json");
@@ -334,6 +383,7 @@ mod tests {
         assert_eq!(back.records, r.records);
         assert_eq!(back.stale_skipped, 3);
         assert_eq!(back.link_bytes, r.link_bytes);
+        assert_eq!(back.link_rates, r.link_rates);
     }
 
     #[test]
@@ -374,6 +424,7 @@ mod tests {
         let r = RunReport::from_json(&j).unwrap();
         assert_eq!(r.stale_skipped, 0);
         assert!(r.link_bytes.is_empty());
+        assert!(r.link_rates.is_empty());
     }
 
     #[test]

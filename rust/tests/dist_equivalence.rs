@@ -113,6 +113,45 @@ fn tcp_matches_inproc_with_failure_injection() {
 }
 
 #[test]
+fn tcp_matches_inproc_for_closed_loop_budgets() {
+    for comm in ["budget:60k", "budget:60k:linkaware"] {
+        let dir = TempDir::new().unwrap();
+        let mut cfg = base_cfg("sage", "sparse", &dir);
+        cfg.comm = comm.into();
+        cfg.epochs = 4;
+        // detailed ledger on both axes so per-link traffic is comparable
+        cfg.ledger = "detailed".into();
+        let mut trainer = build_trainer(&cfg).expect("inproc trainer");
+        let inproc_report = trainer.run().expect("inproc run");
+        let dist = run_tcp(&cfg);
+        assert_weights_bitwise(&dist.weights, &trainer.weights);
+        assert_reports_match(&dist.report, &inproc_report);
+        // dist runs now populate per-link traffic: the workers' merged
+        // halo cells must equal the in-process ledger's, weights-sync
+        // excluded (the dist data plane never carries it)
+        let inproc_links: Vec<(usize, usize, usize, usize)> = trainer
+            .ledger()
+            .breakdown_by_link_excluding("weights")
+            .into_iter()
+            .map(|((from, to), c)| (from, to, c.bytes, c.messages))
+            .collect();
+        let dist_links: Vec<(usize, usize, usize, usize)> = dist
+            .report
+            .link_bytes
+            .iter()
+            .map(|l| (l.from, l.to, l.bytes, l.messages))
+            .collect();
+        assert!(!dist_links.is_empty(), "{comm}: dist link_bytes must be populated");
+        assert_eq!(dist_links, inproc_links, "{comm}: per-link traffic");
+        // and both runtimes publish the same final per-link rate matrix
+        assert_eq!(dist.report.link_rates, inproc_report.link_rates, "{comm}: rate matrix");
+        if comm.ends_with("linkaware") {
+            assert!(!dist.report.link_rates.is_empty(), "{comm}: rate matrix missing");
+        }
+    }
+}
+
+#[test]
 fn crash_recovery_replays_bitwise_from_last_shard_set() {
     let dir = TempDir::new().unwrap();
     let mut cfg = base_cfg("sage", "sparse", &dir);
@@ -174,4 +213,59 @@ fn crash_recovery_replays_bitwise_from_last_shard_set() {
         .expect("on-disk shard set loads");
     assert_eq!(ss.checkpoint.epoch, 5);
     assert_eq!(ss.checkpoint.flat_weights.len(), trainer.weights.param_count());
+}
+
+#[test]
+fn crash_recovery_replays_closed_loop_budget_bitwise() {
+    // same crash script as above, but under the closed-loop link-aware
+    // budget controller: the driver snapshots the controller into every
+    // shard set (rank 0's residual slot) and restores it on rewind, so
+    // the replayed epoch is planned and observed from exactly the
+    // checkpointed state and the recovered run stays bitwise equal to
+    // the run that never crashed
+    let dir = TempDir::new().unwrap();
+    let mut cfg = base_cfg("sage", "sparse", &dir);
+    cfg.comm = "budget:60k:linkaware".into();
+    cfg.epochs = 6;
+    cfg.ckpt_every = 2; // shards after epochs 1, 3, 5
+    cfg.crash_at = "3:1".into(); // worker 1 dies on receiving the epoch-3 plan
+    cfg.max_restarts = 1;
+    cfg.heartbeat_ms = 50;
+    cfg.heartbeat_timeout_ms = 2_000;
+
+    let mut trainer = build_trainer(&cfg).expect("inproc trainer");
+    let inproc_report = trainer.run().expect("inproc run");
+
+    let mut tcfg = cfg.clone();
+    tcfg.transport = "tcp".into();
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind test listener");
+    tcfg.driver_addr = listener.local_addr().unwrap().to_string();
+
+    let cfg0 = tcfg.clone();
+    let w0 = thread::spawn(move || {
+        run_worker(&cfg0, 0, WorkerOptions { crash: CrashBehavior::Return })
+    });
+    let cfg1 = tcfg.clone();
+    let w1 = thread::spawn(move || -> varco::Result<()> {
+        run_worker(&cfg1, 1, WorkerOptions { crash: CrashBehavior::Return })?;
+        let mut recfg = cfg1.clone();
+        recfg.crash_at = String::new();
+        run_worker(&recfg, 1, WorkerOptions { crash: CrashBehavior::Return })
+    });
+
+    let dist = run_driver(
+        &tcfg,
+        DriverOptions { listener: Some(listener), spawn_workers: false, resume: false },
+    )
+    .expect("driver survives the crash");
+    w0.join().unwrap().expect("worker 0");
+    w1.join().unwrap().expect("worker 1 (including its reincarnation)");
+
+    assert_eq!(dist.report.restarts, 1);
+    assert_eq!(dist.report.recovered_epochs, 1, "rewound to the epoch-1 shard set");
+    assert_weights_bitwise(&dist.weights, &trainer.weights);
+    assert_reports_match(&dist.report, &inproc_report);
+    // the replayed run converges to the same per-link plan
+    assert_eq!(dist.report.link_rates, inproc_report.link_rates);
+    assert!(!dist.report.link_rates.is_empty());
 }

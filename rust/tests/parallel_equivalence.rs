@@ -292,7 +292,7 @@ fn assert_runs_identical(label: &str, ta: &mut Trainer, tb: &mut Trainer) {
 #[test]
 fn overlap_matches_barrier_bitwise_across_models_and_comm_modes() {
     for model in ["sage", "gcn", "gin"] {
-        for comm in ["fixed:4", "budget:120k"] {
+        for comm in ["fixed:4", "budget:120k", "budget:120k:linkaware"] {
             for mode in [RunMode::Parallel, RunMode::Sequential] {
                 let mut off = build_cfg(model, comm, mode, false);
                 let mut on = build_cfg(model, comm, mode, true);
@@ -304,6 +304,39 @@ fn overlap_matches_barrier_bitwise_across_models_and_comm_modes() {
             }
         }
     }
+}
+
+/// The link-aware controller's allocation is a deterministic function of
+/// the per-link ledger cells it observes; those are merged in rank order
+/// at the epoch barrier, so the parallel runtime must reproduce the
+/// sequential oracle bitwise — weights, plans, AND the per-link cells and
+/// final rate matrix themselves.
+#[test]
+fn linkaware_controller_parallel_matches_sequential() {
+    let mut ts = build_cfg("sage", "budget:120k:linkaware", RunMode::Sequential, false);
+    let mut tp = build_cfg("sage", "budget:120k:linkaware", RunMode::Parallel, false);
+    let rs = ts.run().unwrap();
+    let rp = tp.run().unwrap();
+    assert_eq!(
+        ts.weights.flatten(),
+        tp.weights.flatten(),
+        "linkaware: weights must match bit for bit"
+    );
+    for (a, b) in rs.records.iter().zip(&rp.records) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "linkaware epoch {} loss", a.epoch);
+        assert_eq!(a.rate, b.rate, "linkaware epoch {} planned rate", a.epoch);
+        assert_eq!(a.bytes_cum, b.bytes_cum, "linkaware epoch {} bytes", a.epoch);
+    }
+    // the controller's input: identical per-link halo cells, not just totals
+    assert_eq!(
+        ts.ledger().breakdown_by_link_excluding("weights"),
+        tp.ledger().breakdown_by_link_excluding("weights"),
+        "linkaware: per-link ledger cells"
+    );
+    // and its output: the same published per-link rate matrix
+    assert_eq!(rs.link_rates, rp.link_rates, "linkaware: final rate matrix");
+    assert!(!rs.link_rates.is_empty(), "linkaware run must publish a per-link rate matrix");
+    assert!(ts.fabric().is_quiescent() && tp.fabric().is_quiescent());
 }
 
 #[test]
