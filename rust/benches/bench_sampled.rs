@@ -1,0 +1,182 @@
+//! Sampled-training / historical-embedding bench: epoch wall time and
+//! bytes/epoch for the four training regimes — full-graph, full-graph +
+//! historical cache (staleness=2), mini-batch sampled, and sampled +
+//! historical cache — at an equal `comm=` compression rate.  Written to
+//! `BENCH_sampled.json` at the repo root (CI uploads it as an artifact).
+//!
+//! Two invariants are asserted while measuring, so a regression in either
+//! fails the bench run itself:
+//!
+//!  * full-graph halo bytes/epoch drop by >= 25% at staleness=2 vs
+//!    staleness=0 (with static full-graph plans the refresh schedule is a
+//!    whole-message period-3 alternation, so the expected drop is ~2/3);
+//!  * the staleness=2 run's final loss stays within 5% of the
+//!    staleness=0 run's — bounded staleness must not derail training.
+
+#[path = "harness.rs"]
+#[allow(dead_code)]
+mod harness;
+
+use varco::config::{build_trainer_with_dataset, TrainConfig};
+use varco::graph::Dataset;
+use varco::util::Json;
+
+const NODES: usize = 512;
+const Q: usize = 4;
+const HIDDEN: usize = 32;
+const LAYERS: usize = 3;
+
+struct Regime {
+    name: &'static str,
+    mode: &'static str,
+    batch_size: usize,
+    fanout: &'static str,
+    staleness: usize,
+}
+
+const REGIMES: [Regime; 4] = [
+    Regime { name: "full", mode: "full", batch_size: 512, fanout: "", staleness: 0 },
+    Regime { name: "full+hist", mode: "full", batch_size: 512, fanout: "", staleness: 2 },
+    Regime { name: "sampled", mode: "sampled", batch_size: 128, fanout: "10,10,10", staleness: 0 },
+    Regime {
+        name: "sampled+hist",
+        mode: "sampled",
+        batch_size: 128,
+        fanout: "10,10,10",
+        staleness: 2,
+    },
+];
+
+fn cfg_for(r: &Regime, epochs: usize) -> TrainConfig {
+    TrainConfig {
+        dataset: "synth-arxiv".into(),
+        nodes: NODES,
+        q: Q,
+        hidden: HIDDEN,
+        layers: LAYERS,
+        epochs,
+        comm: "fixed:4".into(),
+        seed: 0,
+        eval_every: usize::MAX - 1,
+        run_mode: "sequential".into(),
+        mode: r.mode.into(),
+        batch_size: r.batch_size,
+        fanout: r.fanout.into(),
+        staleness: r.staleness,
+        ..TrainConfig::default()
+    }
+}
+
+/// Halo traffic only: activation + gradient + historical refreshes.  The
+/// weight-sync constant is identical across regimes sharing a model and
+/// is not what sampling or the cache controls.
+fn halo_bytes(t: &varco::coordinator::Trainer) -> usize {
+    t.ledger()
+        .breakdown_by_kind()
+        .iter()
+        .filter(|(&k, _)| k != "weights")
+        .map(|(_, &bytes)| bytes)
+        .sum()
+}
+
+fn main() {
+    std::env::set_var("VARCO_THREADS", "1");
+    let epochs = std::env::var("VARCO_BENCH_EPOCHS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(6usize)
+        .max(2);
+
+    let ds = Dataset::load("synth-arxiv", NODES, 0).unwrap();
+
+    harness::section(&format!(
+        "epoch wall + halo bytes/epoch (synth-arxiv n={NODES} q={Q} comm=fixed:4, {epochs} epochs)"
+    ));
+    let mut rows = Vec::new();
+    let mut by_name: std::collections::HashMap<&str, (usize, f32)> =
+        std::collections::HashMap::new();
+    for r in &REGIMES {
+        let cfg = cfg_for(r, epochs);
+        let mut t = build_trainer_with_dataset(&cfg, &ds).unwrap();
+        let t0 = std::time::Instant::now();
+        let report = t.run().unwrap();
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3 / epochs as f64;
+        let halo = halo_bytes(&t);
+        let per_epoch = halo / epochs;
+        let final_loss = report.records.last().unwrap().loss;
+        by_name.insert(r.name, (per_epoch, final_loss));
+        println!(
+            "{:<14} {:>10} halo B/epoch  {:>8.1} ms/epoch  loss {:.4}  \
+             hits {:>6}  refresh rows {:>6}",
+            r.name, per_epoch, wall_ms, final_loss, report.hist_hits, report.hist_refresh_rows
+        );
+        rows.push(Json::obj(vec![
+            ("name", Json::str(r.name)),
+            ("mode", Json::str(r.mode)),
+            ("batch_size", Json::num(r.batch_size as f64)),
+            ("fanout", Json::str(if r.fanout.is_empty() { "inf" } else { r.fanout })),
+            ("staleness", Json::num(r.staleness as f64)),
+            ("halo_bytes_per_epoch", Json::num(per_epoch as f64)),
+            ("wall_ms_per_epoch", Json::num(wall_ms)),
+            ("final_loss", Json::num(final_loss as f64)),
+            ("batches", Json::num(report.batches as f64)),
+            ("hist_hits", Json::num(report.hist_hits as f64)),
+            ("hist_misses", Json::num(report.hist_misses as f64)),
+            ("hist_refresh_rows", Json::num(report.hist_refresh_rows as f64)),
+        ]));
+    }
+
+    // ---- acceptance asserts: bounded staleness pays for itself ----
+    let (full_b, full_loss) = by_name["full"];
+    let (hist_b, hist_loss) = by_name["full+hist"];
+    let drop = 1.0 - hist_b as f64 / full_b as f64;
+    assert!(
+        drop >= 0.25,
+        "staleness=2 must cut halo bytes/epoch by >= 25% vs staleness=0: \
+         {hist_b} vs {full_b} ({:.1}% drop)",
+        drop * 100.0
+    );
+    let rel = ((hist_loss - full_loss) / full_loss).abs();
+    assert!(
+        rel <= 0.05,
+        "staleness=2 final loss {hist_loss} strayed {:.1}% from staleness=0's {full_loss}",
+        rel * 100.0
+    );
+    println!(
+        "\nfull+hist halo bytes: -{:.1}% vs full (loss delta {:.2}%)",
+        drop * 100.0,
+        rel * 100.0
+    );
+
+    // sampled regimes: mini-batches shrink the halo by construction; warn
+    // (without failing) if they ever stop doing so, since fanout caps and
+    // batch draws are graph-dependent
+    let (sampled_b, _) = by_name["sampled"];
+    if sampled_b >= full_b {
+        println!("WARNING: sampled halo bytes/epoch {sampled_b} >= full-graph {full_b}");
+    }
+    let (sh_b, _) = by_name["sampled+hist"];
+    if sh_b >= sampled_b {
+        println!("WARNING: sampled+hist halo bytes/epoch {sh_b} >= sampled {sampled_b}");
+    }
+
+    let doc = Json::obj(vec![
+        ("schema", Json::str("varco-sampled-bench/1")),
+        ("generated_by", Json::str("cargo bench --bench bench_sampled")),
+        (
+            "config",
+            Json::obj(vec![
+                ("dataset", Json::str("synth-arxiv")),
+                ("nodes", Json::num(NODES as f64)),
+                ("q", Json::num(Q as f64)),
+                ("hidden", Json::num(HIDDEN as f64)),
+                ("layers", Json::num(LAYERS as f64)),
+                ("comm", Json::str("fixed:4")),
+                ("epochs", Json::num(epochs as f64)),
+            ]),
+        ),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_sampled.json", doc.to_string_pretty() + "\n").unwrap();
+    println!("\nwrote BENCH_sampled.json");
+}

@@ -36,6 +36,12 @@ pub enum MessageKind {
     Gradient { layer: usize },
     /// model weights to/from the parameter server
     Weights,
+    /// historical-embedding cache refresh for layer `l`: the subset of
+    /// boundary rows whose staleness bound expired this epoch (reads
+    /// inside the bound are served from the receiver's cache and ship
+    /// nothing).  Ledger kind "hist" so budget controllers and reports
+    /// can tell refreshes from synchronous halos.
+    HistRefresh { layer: usize },
 }
 
 impl MessageKind {
@@ -44,6 +50,7 @@ impl MessageKind {
             MessageKind::Activation { .. } => "activation",
             MessageKind::Gradient { .. } => "gradient",
             MessageKind::Weights => "weights",
+            MessageKind::HistRefresh { .. } => "hist",
         }
     }
 
@@ -54,6 +61,7 @@ impl MessageKind {
             MessageKind::Activation { layer } => (0, layer),
             MessageKind::Gradient { layer } => (1, layer),
             MessageKind::Weights => (2, 0),
+            MessageKind::HistRefresh { layer } => (3, layer),
         }
     }
 }

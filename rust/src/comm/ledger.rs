@@ -371,6 +371,44 @@ mod tests {
     }
 
     #[test]
+    fn hist_records_fold_identically_in_aggregated_mode() {
+        // historical-cache refreshes are ordinary wire messages of kind
+        // "hist": the aggregated ledger must fold them exactly like the
+        // detailed one (budget controllers read by_epoch_kind from either
+        // mode), and a cache hit records NOTHING — zero bytes can only
+        // come from zero records
+        let mut d = CommLedger::new();
+        let mut a = CommLedger::aggregated();
+        // epoch 0: refresh epoch — hist rows ship alongside gradients
+        // epoch 1: every boundary row served from cache — no records at all
+        // epoch 2: next refresh
+        for (epoch, from, to, kind, bytes) in [
+            (0, 0, 1, "hist", 120),
+            (0, 1, 0, "hist", 80),
+            (0, 1, 0, "gradient", 60),
+            (0, 0, 1, "weights", 400),
+            (2, 0, 1, "hist", 120),
+            (2, 0, 1, "weights", 400),
+        ] {
+            d.record(epoch, from, to, kind, bytes);
+            a.record(epoch, from, to, kind, bytes);
+        }
+        assert_eq!(a.breakdown_by_kind(), d.breakdown_by_kind());
+        assert_eq!(a.by_epoch_kind(), d.by_epoch_kind());
+        assert_eq!(a.breakdown_by_kind()["hist"], 320, "refreshes charge exact wire bytes");
+        assert_eq!(a.bytes_in_epoch(1), 0, "cache hits charge zero bytes");
+        assert!(a.by_epoch_kind().keys().all(|&(e, _)| e != 1));
+        // link-aware feedback: hist rides its (from, to) link like any
+        // halo kind; only the weight-sync constant is excluded
+        let links = d.breakdown_by_link_excluding("weights");
+        assert_eq!(links[&(0, 1)], AggCell { bytes: 240, messages: 2 });
+        assert_eq!(links[&(1, 0)], AggCell { bytes: 140, messages: 2 });
+        // aggregated mode has no link identity; callers fall back to
+        // aggregate totals (documented on breakdown_by_link)
+        assert!(a.breakdown_by_link_excluding("weights").is_empty());
+    }
+
+    #[test]
     fn merging_aggregated_into_detailed_collapses_target() {
         let mut d = CommLedger::new();
         d.record(0, 0, 1, "fwd", 10);

@@ -52,6 +52,7 @@ fn kind_code(kind: MessageKind) -> (u8, u32) {
         MessageKind::Activation { layer } => (0, layer as u32),
         MessageKind::Gradient { layer } => (1, layer as u32),
         MessageKind::Weights => (2, 0),
+        MessageKind::HistRefresh { layer } => (3, layer as u32),
     }
 }
 
@@ -60,6 +61,7 @@ fn kind_from_code(code: u8, layer: u32) -> crate::Result<MessageKind> {
         0 => MessageKind::Activation { layer: layer as usize },
         1 => MessageKind::Gradient { layer: layer as usize },
         2 => MessageKind::Weights,
+        3 => MessageKind::HistRefresh { layer: layer as usize },
         other => anyhow::bail!("frame: unknown message kind tag {other}"),
     })
 }
@@ -120,6 +122,7 @@ mod tests {
             (MessageKind::Activation { layer: 0 }, None),
             (MessageKind::Gradient { layer: 3 }, Some(1)),
             (MessageKind::Weights, None),
+            (MessageKind::HistRefresh { layer: 2 }, None),
         ] {
             let m = sample(kind, via);
             let got = decode_message(&encode_message(&m)).unwrap();

@@ -33,7 +33,7 @@ use crate::compress::{
 };
 use crate::coordinator::{RunMode, Trainer, TrainerOptions};
 use crate::engine::{ModelDims, WorkerEngine};
-use crate::graph::Dataset;
+use crate::graph::{Dataset, Fanout, SamplingConfig};
 use crate::model::build_spec;
 use crate::partition::WorkerGraph;
 use crate::Result;
@@ -110,6 +110,19 @@ pub struct TrainConfig {
     pub crash_at: String,
     /// total worker restarts the driver will attempt before giving up
     pub max_restarts: usize,
+    /// training mode: full (every epoch sees the whole graph, default) |
+    /// sampled (one seeded mini-batch of training nodes per epoch,
+    /// expanded with per-layer fanout neighbor sampling)
+    pub mode: String,
+    /// training nodes per mini-batch (sampled mode; clamps to |train|)
+    pub batch_size: usize,
+    /// per-layer neighbor caps for sampled mode, comma separated, one
+    /// entry per layer: "10,10,5" or "inf" entries ("" = inf every layer)
+    pub fanout: String,
+    /// historical-embedding staleness bound S: boundary activations may be
+    /// served from a local cache for up to S epochs between refreshes
+    /// (0 = synchronous halo exchange every epoch, bitwise today's path)
+    pub staleness: usize,
 }
 
 impl Default for TrainConfig {
@@ -151,6 +164,10 @@ impl Default for TrainConfig {
             ckpt_dir: "ckpt".into(),
             crash_at: String::new(),
             max_restarts: 1,
+            mode: "full".into(),
+            batch_size: 512,
+            fanout: String::new(),
+            staleness: 0,
         }
     }
 }
@@ -235,6 +252,28 @@ impl TrainConfig {
                 self.crash_at = value.into();
             }
             "max_restarts" => self.max_restarts = value.parse()?,
+            "mode" => {
+                anyhow::ensure!(
+                    value == "full" || value == "sampled",
+                    "mode must be full|sampled, got {value:?}"
+                );
+                self.mode = value.into();
+            }
+            "batch_size" => {
+                let v: usize = value.parse()?;
+                anyhow::ensure!(v >= 1, "batch_size must be >= 1");
+                self.batch_size = v;
+            }
+            "fanout" => {
+                // validate eagerly so a typo fails at the assignment site;
+                // the per-layer count is checked by the factory (it knows
+                // `layers`), and "" resets to the inf-every-layer default
+                if !value.is_empty() {
+                    Fanout::parse_list(value)?;
+                }
+                self.fanout = value.into();
+            }
+            "staleness" => self.staleness = value.parse()?,
             _ => anyhow::bail!("unknown config key {key:?}"),
         }
         Ok(())
@@ -347,7 +386,7 @@ impl TrainConfig {
              ledger = {}\noverlap = {}\nplan = {}\nreplication = {}\ntransport = {}\n\
              driver_addr = {}\nconnect_timeout_ms = {}\nread_timeout_ms = {}\nheartbeat_ms = {}\n\
              heartbeat_timeout_ms = {}\nckpt_every = {}\nckpt_dir = {}\ncrash_at = {}\n\
-             max_restarts = {}\n",
+             max_restarts = {}\nmode = {}\nbatch_size = {}\nfanout = {}\nstaleness = {}\n",
             self.dataset,
             self.nodes,
             self.q,
@@ -384,11 +423,15 @@ impl TrainConfig {
             self.ckpt_dir,
             self.crash_at,
             self.max_restarts,
+            self.mode,
+            self.batch_size,
+            self.fanout,
+            self.staleness,
         )
     }
 
     pub fn describe(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} q={} part={} comm={} model={} engine={} epochs={} hidden={} lr={} seed={} \
              plan={} replication={}",
             self.dataset,
@@ -403,7 +446,53 @@ impl TrainConfig {
             self.seed,
             self.plan,
             self.replication
-        )
+        );
+        if self.mode == "sampled" {
+            s.push_str(&format!(
+                " mode=sampled batch_size={} fanout={}",
+                self.batch_size,
+                if self.fanout.is_empty() { "inf" } else { &self.fanout }
+            ));
+        }
+        if self.staleness > 0 {
+            s.push_str(&format!(" staleness={}", self.staleness));
+        }
+        s
+    }
+
+    /// Resolved sampling config for `mode = sampled` (`None` for full).
+    /// An empty `fanout` means every neighbor at every layer; a non-empty
+    /// list must name exactly one fanout per layer and only applies to
+    /// sampled mode.
+    pub fn sampling_config(&self) -> Result<Option<SamplingConfig>> {
+        match self.mode.as_str() {
+            "sampled" => {
+                let fanouts = if self.fanout.is_empty() {
+                    vec![Fanout::All; self.layers]
+                } else {
+                    let f = Fanout::parse_list(&self.fanout)?;
+                    anyhow::ensure!(
+                        f.len() == self.layers,
+                        "fanout lists {} entries but layers = {}; give one fanout per layer \
+                         (inf allowed)",
+                        f.len(),
+                        self.layers
+                    );
+                    f
+                };
+                anyhow::ensure!(self.batch_size >= 1, "batch_size must be >= 1");
+                Ok(Some(SamplingConfig { batch_size: self.batch_size, fanouts }))
+            }
+            "full" => {
+                anyhow::ensure!(
+                    self.fanout.is_empty(),
+                    "fanout = {:?} only applies to mode = sampled",
+                    self.fanout
+                );
+                Ok(None)
+            }
+            other => anyhow::bail!("mode must be full|sampled, got {other:?}"),
+        }
     }
 }
 
@@ -582,6 +671,8 @@ pub fn build_trainer_with_dataset(cfg: &TrainConfig, dataset: &Dataset) -> Resul
         overlap: cfg.overlap,
         plan_mode: crate::partition::PlanMode::parse(&cfg.plan)?,
         replication: cfg.replication,
+        sampling: cfg.sampling_config()?,
+        staleness: cfg.staleness,
     };
     let mut trainer = Trainer::new(dataset, &partition, &worker_graphs, engines, spec, opts)?;
     trainer.report.partitioner = cfg.partitioner.clone();
@@ -848,5 +939,92 @@ mod tests {
         quick.replication = 9;
         let err = build_trainer(&quick).unwrap_err().to_string();
         assert!(err.contains("replication"), "{err}");
+    }
+
+    #[test]
+    fn sampling_keys_parse_with_clear_errors() {
+        let mut cfg = TrainConfig::default();
+        assert_eq!(cfg.mode, "full");
+        assert_eq!(cfg.batch_size, 512);
+        assert_eq!(cfg.fanout, "");
+        assert_eq!(cfg.staleness, 0);
+        cfg.set("mode", "sampled").unwrap();
+        cfg.set("batch_size", "64").unwrap();
+        cfg.set("fanout", "10, 5, inf").unwrap();
+        cfg.set("staleness", "2").unwrap();
+        assert_eq!(cfg.mode, "sampled");
+        assert_eq!(cfg.batch_size, 64);
+        assert_eq!(cfg.staleness, 2);
+        assert!(cfg.describe().contains("mode=sampled"));
+        assert!(cfg.describe().contains("staleness=2"));
+        // typos fail at the assignment site, not deep in the factory
+        assert!(cfg.set("mode", "minibatch").is_err());
+        assert!(cfg.set("batch_size", "0").is_err());
+        let err = cfg.set("fanout", "10,zero").unwrap_err().to_string();
+        assert!(err.contains("fanout"), "{err}");
+        assert!(cfg.set("fanout", "10,0").is_err());
+        // "" resets fanout to the inf-every-layer default
+        cfg.set("fanout", "").unwrap();
+        assert_eq!(cfg.fanout, "");
+    }
+
+    #[test]
+    fn sampling_config_resolution_checks_layer_count_and_mode() {
+        let mut cfg = TrainConfig::default();
+        assert_eq!(cfg.sampling_config().unwrap(), None);
+        // fanout without sampled mode is rejected (it would silently no-op)
+        cfg.fanout = "10,10,10".into();
+        let err = cfg.sampling_config().unwrap_err().to_string();
+        assert!(err.contains("mode = sampled"), "{err}");
+        cfg.mode = "sampled".into();
+        let sc = cfg.sampling_config().unwrap().unwrap();
+        assert_eq!(sc.batch_size, 512);
+        assert_eq!(sc.fanouts, vec![Fanout::Limit(10); 3]);
+        // one fanout per layer, counted against `layers`
+        cfg.fanout = "10,10".into();
+        let err = cfg.sampling_config().unwrap_err().to_string();
+        assert!(err.contains("fanout"), "{err}");
+        assert!(err.contains("layers"), "{err}");
+        // empty fanout = every neighbor at every layer
+        cfg.fanout.clear();
+        assert_eq!(cfg.sampling_config().unwrap().unwrap().fanouts, vec![Fanout::All; 3]);
+    }
+
+    #[test]
+    fn sampling_keys_roundtrip_through_config_string() {
+        let mut cfg = TrainConfig::default();
+        cfg.set("mode", "sampled").unwrap();
+        cfg.set("batch_size", "128").unwrap();
+        cfg.set("fanout", "10,10,5").unwrap();
+        cfg.set("staleness", "3").unwrap();
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("resolved.cfg");
+        std::fs::write(&path, cfg.to_config_string()).unwrap();
+        assert_eq!(TrainConfig::from_file(&path).unwrap(), cfg);
+        // the empty-fanout default survives the roundtrip too
+        cfg.set("fanout", "").unwrap();
+        std::fs::write(&path, cfg.to_config_string()).unwrap();
+        assert_eq!(TrainConfig::from_file(&path).unwrap(), cfg);
+    }
+
+    #[test]
+    fn build_trainer_sampled_with_history_end_to_end() {
+        let mut cfg = TrainConfig::default_quickstart();
+        cfg.epochs = 3;
+        cfg.comm = "fixed:4".into();
+        cfg.mode = "sampled".into();
+        cfg.batch_size = 8;
+        cfg.fanout = "4,4,4".into();
+        cfg.staleness = 2;
+        let mut t = build_trainer(&cfg).unwrap();
+        let report = t.run().unwrap();
+        assert_eq!(report.records.len(), 3);
+        assert_eq!(report.batches, 3, "one mini-batch per epoch");
+        assert!(report.hist_refresh_rows > 0, "sampled halos ride the hist cache");
+        assert!(t.fabric().is_quiescent());
+        // fanout length mismatches surface from the factory
+        cfg.fanout = "4,4".into();
+        let err = build_trainer(&cfg).unwrap_err().to_string();
+        assert!(err.contains("fanout"), "{err}");
     }
 }

@@ -134,6 +134,17 @@ fn fatal<T>(e: crate::Error) -> Phase<T> {
     Err(Interrupt::Fatal(e))
 }
 
+/// One epoch's historical-cache activity, merged across ranks.
+#[derive(Default)]
+struct HistEpoch {
+    hits: u64,
+    misses: u64,
+    refresh_rows: u64,
+    /// histogram: `ages[a]` = boundary rows served or refreshed at age
+    /// `a` epochs since their last refresh
+    ages: Vec<u64>,
+}
+
 struct Driver<'a> {
     cfg: &'a TrainConfig,
     ctx: DistContext,
@@ -156,6 +167,16 @@ struct Driver<'a> {
     /// per-epoch per-link cells merged rank-order from worker outcomes;
     /// truncated on rewind alongside `stale_by_epoch`
     links_by_epoch: Vec<Vec<LinkCell>>,
+    /// per-epoch historical-cache deltas merged across ranks; truncated
+    /// on rewind alongside `stale_by_epoch`
+    hist_by_epoch: Vec<HistEpoch>,
+    /// resolved sampling config (`mode=sampled`); the driver only needs
+    /// it for the per-epoch loss normalizer — workers rebuild the full
+    /// batch view themselves from (config, seed, epoch)
+    sampling: Option<crate::graph::SamplingConfig>,
+    /// replay-affecting cache resets caused by crash recovery: counted
+    /// per dead rank whenever stale replay or historical caching is on
+    stale_cache_resets: usize,
     /// most recent per-link rate plan (link-aware controllers only),
     /// surfaced as `RunReport::link_rates`
     last_links: Option<LinkRates>,
@@ -417,6 +438,7 @@ impl<'a> Driver<'a> {
         let mut loss_weighted = 0.0f32;
         let mut epoch_bytes: usize = 0;
         let mut stale_delta: u64 = 0;
+        let mut hist_delta = HistEpoch::default();
         let mut cells: Vec<Vec<LayerFeedback>> = Vec::with_capacity(self.q());
         // merge per-link cells across ranks; the BTreeMap gives the same
         // canonical (from, to) order the in-process ledger diff produces
@@ -428,6 +450,10 @@ impl<'a> Driver<'a> {
                 feedback,
                 bytes,
                 stale_skipped,
+                hist_hits,
+                hist_misses,
+                hist_refresh_rows,
+                hist_ages,
                 links,
                 ..
             }) = out
@@ -446,6 +472,15 @@ impl<'a> Driver<'a> {
             loss_weighted += lw;
             epoch_bytes += bytes as usize;
             stale_delta += stale_skipped;
+            hist_delta.hits += hist_hits;
+            hist_delta.misses += hist_misses;
+            hist_delta.refresh_rows += hist_refresh_rows;
+            if hist_ages.len() > hist_delta.ages.len() {
+                hist_delta.ages.resize(hist_ages.len(), 0);
+            }
+            for (slot, a) in hist_delta.ages.iter_mut().zip(&hist_ages) {
+                *slot += a;
+            }
             for c in links {
                 let e = link_map.entry((c.from, c.to)).or_insert((0, 0));
                 e.0 += c.bytes;
@@ -457,13 +492,29 @@ impl<'a> Driver<'a> {
             .into_iter()
             .map(|((from, to), (bytes, msgs))| LinkCell { from, to, bytes, msgs })
             .collect();
-        let loss = loss_weighted / self.ctx.setup.total_train;
+        // sampled mode: every rank normalized its local loss by this
+        // epoch's batch size, so the driver must match — draw_batch is a
+        // pure function of (split, batch_size, seed, epoch), identical to
+        // what each worker's view used
+        let total_train = match &self.sampling {
+            Some(sc) => (crate::graph::sample::draw_batch(
+                &self.ctx.dataset.split.train,
+                sc.batch_size,
+                self.cfg.seed,
+                epoch,
+            )
+            .len() as f32)
+                .max(1.0),
+            None => self.ctx.setup.total_train,
+        };
+        let loss = loss_weighted / total_train;
         // weight-sync accounting: same constant charge as the in-process
         // ledger (gradients up, weights down, per worker)
         let wbytes = param_count * 4;
         epoch_bytes += 2 * self.q() * wbytes;
         self.bytes_cum += epoch_bytes;
         self.stale_by_epoch.push(stale_delta);
+        self.hist_by_epoch.push(hist_delta);
         // same conditional as the in-process trainer, so both closed-loop
         // paths hand the controller identical observations
         let fb_links = if plan.feedback && self.controller.link_aware() {
@@ -588,6 +639,15 @@ impl<'a> Driver<'a> {
                 .collect();
             anyhow::ensure!(!dead.is_empty(), "recover invoked with every worker alive");
             self.restarts += dead.len();
+            // ROADMAP item 1: a dead rank takes its stale-replay payload
+            // cache (and, under staleness > 0, its historical-embedding
+            // cache) with it; the rewind directive makes every survivor
+            // reset too, so replayed epochs are fleet-wide consistent.
+            // Surface the cause so operators can see replay-affecting
+            // resets in the report.
+            if self.cfg.stale_prob > 0.0 || self.cfg.staleness > 0 {
+                self.stale_cache_resets += dead.len();
+            }
             anyhow::ensure!(
                 self.restarts <= self.cfg.max_restarts,
                 "worker(s) {dead:?} died at epoch {epoch_in_progress} and the restart budget \
@@ -651,6 +711,7 @@ impl<'a> Driver<'a> {
             self.report.records.truncate(resume);
             self.stale_by_epoch.truncate(resume);
             self.links_by_epoch.truncate(resume);
+            self.hist_by_epoch.truncate(resume);
             self.bytes_cum = self.report.records.last().map(|r| r.bytes_cum).unwrap_or(0);
             match self.admission_barrier(resume, true) {
                 Ok(()) => {
@@ -768,6 +829,9 @@ pub fn run_driver(cfg: &TrainConfig, opts: DriverOptions) -> Result<DistRun> {
         bytes_cum: 0,
         stale_by_epoch: Vec::new(),
         links_by_epoch: Vec::new(),
+        hist_by_epoch: Vec::new(),
+        sampling: cfg.sampling_config()?,
+        stale_cache_resets: 0,
         last_links: None,
         restarts: 0,
         recovered_epochs: 0,
@@ -884,6 +948,24 @@ pub fn run_driver(cfg: &TrainConfig, opts: DriverOptions) -> Result<DistRun> {
 
     driver.shutdown();
     driver.report.stale_skipped = driver.stale_by_epoch.iter().sum::<u64>() as usize;
+    if driver.sampling.is_some() {
+        // one deterministic batch per epoch, mirroring the in-process path
+        driver.report.batches = cfg.epochs;
+    }
+    let mut age_hist: Vec<usize> = Vec::new();
+    for h in &driver.hist_by_epoch {
+        driver.report.hist_hits += h.hits as usize;
+        driver.report.hist_misses += h.misses as usize;
+        driver.report.hist_refresh_rows += h.refresh_rows as usize;
+        if h.ages.len() > age_hist.len() {
+            age_hist.resize(h.ages.len(), 0);
+        }
+        for (slot, &a) in age_hist.iter_mut().zip(&h.ages) {
+            *slot += a as usize;
+        }
+    }
+    driver.report.hist_age_hist = age_hist;
+    driver.report.stale_cache_resets = driver.stale_cache_resets;
     let mut link_sum: BTreeMap<(usize, usize), (usize, usize)> = BTreeMap::new();
     for cells in &driver.links_by_epoch {
         for c in cells {

@@ -61,6 +61,8 @@ pub(crate) struct DistContext {
     pub(crate) spec: ModelSpec,
     pub(crate) setup: RunSetup,
     pub(crate) worker_graphs: Vec<WorkerGraph>,
+    /// full-graph part assignment — sampled mode restricts it per epoch
+    pub(crate) partition: crate::partition::Partition,
     pub(crate) q: usize,
 }
 
@@ -77,6 +79,14 @@ impl DistContext {
              (results are bitwise identical either way)"
         );
         anyhow::ensure!(cfg.layers >= 1, "layers must be >= 1");
+        anyhow::ensure!(
+            !(cfg.staleness > 0 && cfg.replication > 1),
+            "staleness > 0 is incompatible with replication > 1 (mirror refreshes would \
+             bypass the historical cache's ledger accounting)"
+        );
+        // resolve eagerly so fanout/mode mistakes fail at startup, not at
+        // the first sampled epoch
+        cfg.sampling_config()?;
         let dataset = Dataset::load(&cfg.dataset, cfg.nodes, cfg.seed)?;
         let partitioner = crate::partition::by_name(&cfg.partitioner, cfg.seed)?;
         let partition = partitioner.partition(&dataset.graph, cfg.q)?;
@@ -95,7 +105,7 @@ impl DistContext {
             crate::partition::PlanMode::parse(&cfg.plan)?,
             cfg.replication,
         )?;
-        Ok(DistContext { dataset, spec, setup, worker_graphs, q: cfg.q })
+        Ok(DistContext { dataset, spec, setup, worker_graphs, partition, q: cfg.q })
     }
 }
 
@@ -105,7 +115,7 @@ impl DistContext {
 /// must still hash-match the driver.
 pub fn config_hash(cfg: &TrainConfig) -> u64 {
     let canon = format!(
-        "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
+        "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
         cfg.dataset,
         cfg.nodes,
         cfg.q,
@@ -127,6 +137,10 @@ pub fn config_hash(cfg: &TrainConfig) -> u64 {
         cfg.overlap,
         cfg.plan,
         cfg.replication,
+        cfg.mode,
+        cfg.batch_size,
+        cfg.fanout,
+        cfg.staleness,
     );
     let mut h: u64 = 0xcbf29ce484222325;
     for b in canon.as_bytes() {

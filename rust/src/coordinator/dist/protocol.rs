@@ -87,6 +87,14 @@ pub enum Ctrl {
         bytes: u64,
         /// stale-injection skip-counter delta over this epoch
         stale_skipped: u64,
+        /// historical-cache hit/miss/refresh-row deltas over this epoch
+        /// (all zero unless the run has staleness > 0)
+        hist_hits: u64,
+        hist_misses: u64,
+        hist_refresh_rows: u64,
+        /// staleness-age histogram delta (slot 0 = refreshed rows, slot a
+        /// = rows served at age a); empty for staleness = 0 runs
+        hist_ages: Vec<u64>,
         /// per-link ledger-breakdown delta over this epoch (this rank's
         /// halo sends; the driver merges ranks in order)
         links: Vec<LinkCell>,
@@ -304,6 +312,10 @@ pub fn encode_ctrl(msg: &Ctrl) -> Vec<u8> {
             feedback,
             bytes,
             stale_skipped,
+            hist_hits,
+            hist_misses,
+            hist_refresh_rows,
+            hist_ages,
             links,
             error,
         } => {
@@ -320,6 +332,13 @@ pub fn encode_ctrl(msg: &Ctrl) -> Vec<u8> {
             }
             put_u64(&mut b, *bytes);
             put_u64(&mut b, *stale_skipped);
+            put_u64(&mut b, *hist_hits);
+            put_u64(&mut b, *hist_misses);
+            put_u64(&mut b, *hist_refresh_rows);
+            put_u64(&mut b, hist_ages.len() as u64);
+            for &a in hist_ages {
+                put_u64(&mut b, a);
+            }
             put_u64(&mut b, links.len() as u64);
             for l in links {
                 put_u64(&mut b, l.from as u64);
@@ -404,6 +423,14 @@ pub fn decode_ctrl(buf: &[u8]) -> Result<Ctrl> {
             }
             let bytes = c.u64("outcome.bytes")?;
             let stale_skipped = c.u64("outcome.stale_skipped")?;
+            let hist_hits = c.u64("outcome.hist_hits")?;
+            let hist_misses = c.u64("outcome.hist_misses")?;
+            let hist_refresh_rows = c.u64("outcome.hist_refresh_rows")?;
+            let na = c.usize_capped(MAX_ITEMS, "outcome.hist_ages")?;
+            let mut hist_ages = Vec::with_capacity(na);
+            for _ in 0..na {
+                hist_ages.push(c.u64("outcome.hist_ages")?);
+            }
             let nl = c.usize_capped(MAX_ITEMS, "outcome.links")?;
             let mut links = Vec::with_capacity(nl);
             for _ in 0..nl {
@@ -427,6 +454,10 @@ pub fn decode_ctrl(buf: &[u8]) -> Result<Ctrl> {
                 feedback,
                 bytes,
                 stale_skipped,
+                hist_hits,
+                hist_misses,
+                hist_refresh_rows,
+                hist_ages,
                 links,
                 error,
             }
@@ -507,6 +538,10 @@ mod tests {
             feedback: vec![LayerFeedback { bytes: 40, err_sq: 0.125, sig_sq: 2.0 }],
             bytes: 1234,
             stale_skipped: 2,
+            hist_hits: 17,
+            hist_misses: 1,
+            hist_refresh_rows: 9,
+            hist_ages: vec![9, 10, 7],
             links: vec![LinkCell { from: 0, to: 1, bytes: 640, msgs: 4 }],
             error: None,
         });
@@ -518,6 +553,10 @@ mod tests {
             feedback: vec![],
             bytes: 0,
             stale_skipped: 0,
+            hist_hits: 0,
+            hist_misses: 0,
+            hist_refresh_rows: 0,
+            hist_ages: vec![],
             links: vec![],
             error: Some("link to worker 0 is down".into()),
         });
@@ -553,6 +592,10 @@ mod tests {
             feedback: vec![LayerFeedback { bytes: 8, err_sq: 0.5, sig_sq: 1.0 }],
             bytes: 8,
             stale_skipped: 0,
+            hist_hits: 3,
+            hist_misses: 0,
+            hist_refresh_rows: 2,
+            hist_ages: vec![2, 3],
             links: vec![LinkCell { from: 0, to: 1, bytes: 8, msgs: 1 }],
             error: None,
         });

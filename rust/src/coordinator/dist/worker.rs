@@ -15,9 +15,10 @@ use super::{config_hash, tcp_options, DistContext};
 use crate::comm::{Fabric, FailurePolicy, LedgerMode, TcpTransport, Transport};
 use crate::config::TrainConfig;
 use crate::coordinator::checkpoint::CheckpointShard;
-use crate::coordinator::trainer::{dist_worker_epoch, link_delta, EpochPlan, LinkRates};
+use crate::coordinator::trainer::{dist_worker_epoch, link_delta, EpochPlan, LinkRates, RunSetup};
 use crate::engine::native::NativeWorkerEngine;
 use crate::engine::Weights;
+use crate::partition::{HistCache, HistStats, HistTracker, PlanRows};
 use crate::util::Workspace;
 use crate::Result;
 use std::net::TcpStream;
@@ -53,6 +54,21 @@ enum WireEvent {
     Ctrl(Ctrl),
     /// driver connection reached EOF or errored
     Closed,
+}
+
+/// This rank's deterministic replica of the historical-embedding state.
+/// Every worker evolves an identical [`HistTracker`] from the shared
+/// config, so sender and receiver agree on each epoch's refresh schedule
+/// without exchanging it; the cache holds only this rank's boundary rows.
+/// Cleared on `Welcome`/`Rewind` (all ranks reset together, so replicas
+/// stay consistent across a recovery — the first replayed epoch ships
+/// full refreshes).
+struct HistWorker {
+    tracker: HistTracker,
+    cache: HistCache,
+    /// plan-row identities the tracker schedules over; static for full
+    /// mode, rebuilt from each epoch's view under sampled mode
+    plan_rows: Vec<Vec<Vec<PlanRows>>>,
 }
 
 /// Reader thread body: every control frame becomes an event; Abort is
@@ -98,6 +114,13 @@ pub fn run_worker(cfg: &TrainConfig, rank: usize, opts: WorkerOptions) -> Result
         NativeWorkerEngine::new(ctx.worker_graphs[rank].clone(), ctx.spec.clone());
     let layer_dims = ctx.spec.layer_dims();
     let crash_at = cfg.crash_at_spec()?;
+    let sampling = cfg.sampling_config()?;
+    let plan_mode = crate::partition::PlanMode::parse(&cfg.plan)?;
+    let mut hist = (cfg.staleness > 0).then(|| HistWorker {
+        tracker: HistTracker::new(cfg.staleness),
+        cache: HistCache::new(),
+        plan_rows: ctx.setup.hist_plan_rows(&ctx.worker_graphs, |gid| gid),
+    });
 
     // data plane: bind an ephemeral port; the driver's Welcome carries
     // everyone's advertised address
@@ -187,6 +210,13 @@ pub fn run_worker(cfg: &TrainConfig, rank: usize, opts: WorkerOptions) -> Result
                 // rejoined while the driver was still pausing survivors;
                 // start from a clean plane either way
                 transport.reset();
+                // every rank resets its hist replica at every (re)admission,
+                // so the refresh schedule stays consistent fleet-wide: the
+                // first (re)played epoch ships full refreshes everywhere
+                if let Some(h) = hist.as_mut() {
+                    h.tracker.clear();
+                    h.cache.clear();
+                }
                 transport.connect_peers(&peers)?;
                 send_ctrl(&writer, &Ctrl::Ready { rank })?;
             }
@@ -194,6 +224,10 @@ pub fn run_worker(cfg: &TrainConfig, rank: usize, opts: WorkerOptions) -> Result
                 // recovery: forget the aborted epoch's queue and re-dial
                 // only the replaced ranks (survivor links are intact)
                 transport.reset();
+                if let Some(h) = hist.as_mut() {
+                    h.tracker.clear();
+                    h.cache.clear();
+                }
                 for (p, addr) in &peers {
                     if *p != rank {
                         transport.disconnect_peer(*p);
@@ -218,16 +252,56 @@ pub fn run_worker(cfg: &TrainConfig, rank: usize, opts: WorkerOptions) -> Result
                 weights.set_from_flat(&flat);
                 let links = (!links.is_empty())
                     .then(|| LinkRates { q: cfg.q, rates: links });
-                let plan = EpochPlan { fwd, bwd, local_norm, nominal, feedback, links };
+                // sampled mode: materialize this epoch's induced view — a
+                // pure function of (config, seed, epoch), so every rank
+                // (and any replay) rebuilds the same batch independently
+                let view_setup;
+                let setup = match &sampling {
+                    Some(sc) => {
+                        let view = crate::runtime::minibatch::build_view(
+                            &ctx.dataset,
+                            &ctx.partition.assignment,
+                            cfg.q,
+                            sc,
+                            cfg.seed,
+                            epoch,
+                        )?;
+                        let s = RunSetup::build(
+                            &view.dataset,
+                            &view.worker_graphs,
+                            &ctx.spec,
+                            plan_mode,
+                            cfg.replication,
+                        )?;
+                        if let Some(h) = hist.as_mut() {
+                            // cache lines key by full-graph node id, so a
+                            // boundary node keeps its history across batches
+                            h.plan_rows = s.hist_plan_rows(&view.worker_graphs, |local| {
+                                view.nodes[local as usize]
+                            });
+                        }
+                        engine =
+                            NativeWorkerEngine::new(view.worker_graphs[rank].clone(), ctx.spec.clone());
+                        view_setup = s;
+                        &view_setup
+                    }
+                    None => &ctx.setup,
+                };
+                let mut plan =
+                    EpochPlan { fwd, bwd, local_norm, nominal, feedback, links, hist: None };
+                if let Some(h) = hist.as_mut() {
+                    plan.hist = Some(Arc::new(h.tracker.schedule(epoch, &h.plan_rows)));
+                }
                 let bytes0 = fabric.total_bytes();
                 let stale0 = fabric.stale_skipped();
+                let hist0 = hist.as_ref().map(|h| h.cache.stats.clone());
                 // per-link baseline at plan receipt, so an aborted partial
                 // epoch cannot inflate the replayed epoch's delta
                 let mut links0 =
                     fabric.merged_ledger().breakdown_by_link_excluding("weights");
-                match dist_worker_epoch(
+                let result = dist_worker_epoch(
                     epoch,
-                    &ctx.setup,
+                    setup,
                     rank,
                     compressor.as_ref(),
                     cfg.seed,
@@ -237,9 +311,15 @@ pub fn run_worker(cfg: &TrainConfig, rank: usize, opts: WorkerOptions) -> Result
                     &weights,
                     &plan,
                     &layer_dims,
-                ) {
+                    hist.as_mut().map(|h| &mut h.cache),
+                );
+                match result {
                     Ok(out) => {
                         let flat_g = Weights { layers: out.grads, version: 0 }.flatten();
+                        let hs = match (&hist, &hist0) {
+                            (Some(h), Some(b)) => h.cache.stats.since(b),
+                            _ => HistStats::default(),
+                        };
                         send_ctrl(
                             &writer,
                             &Ctrl::Outcome {
@@ -250,6 +330,10 @@ pub fn run_worker(cfg: &TrainConfig, rank: usize, opts: WorkerOptions) -> Result
                                 feedback: out.feedback,
                                 bytes: (fabric.total_bytes() - bytes0) as u64,
                                 stale_skipped: (fabric.stale_skipped() - stale0) as u64,
+                                hist_hits: hs.hits as u64,
+                                hist_misses: hs.misses as u64,
+                                hist_refresh_rows: hs.refresh_rows as u64,
+                                hist_ages: hs.ages.iter().map(|&a| a as u64).collect(),
                                 links: link_delta(&fabric.merged_ledger(), &mut links0),
                                 error: None,
                             },
@@ -270,6 +354,10 @@ pub fn run_worker(cfg: &TrainConfig, rank: usize, opts: WorkerOptions) -> Result
                                 feedback: Vec::new(),
                                 bytes: 0,
                                 stale_skipped: 0,
+                                hist_hits: 0,
+                                hist_misses: 0,
+                                hist_refresh_rows: 0,
+                                hist_ages: Vec::new(),
                                 links: Vec::new(),
                                 error: Some(e.to_string()),
                             },

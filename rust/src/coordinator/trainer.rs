@@ -79,11 +79,12 @@ use crate::compress::{
 };
 use crate::coordinator::eval::FullGraphEval;
 use crate::engine::{LayerParams, ModelDims, ModelSpec, Weights, WorkerEngine};
-use crate::graph::Dataset;
+use crate::graph::{Dataset, SamplingConfig};
 use crate::metrics::{EpochRecord, LinkTraffic, RunReport};
 use crate::optim::Optimizer;
 use crate::partition::{
-    assign_routes, MirrorPlan, Partition, PlanMode, SendPlan, WorkerGraph, DISCARD_SLOT,
+    assign_routes, HistCache, HistSchedule, HistStats, HistTracker, MirrorPlan, Partition,
+    PlanMode, PlanRows, SendPlan, WorkerGraph, DISCARD_SLOT,
 };
 use crate::tensor::Matrix;
 use crate::util::parallel::Gate;
@@ -91,7 +92,7 @@ use crate::util::Workspace;
 use crate::Result;
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Barrier, Mutex, RwLock};
+use std::sync::{Arc, Barrier, Mutex, RwLock};
 
 /// How the epoch program executes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -160,6 +161,15 @@ pub struct TrainerOptions {
     /// owner→mirror refresh charge.  Routing/accounting only — weights
     /// are bitwise identical for every `r`.
     pub replication: usize,
+    /// mini-batch sampled training: one seeded batch + fanout-sampled
+    /// induced subgraph per epoch (`None` = full-graph epochs)
+    pub sampling: Option<SamplingConfig>,
+    /// historical-embedding staleness bound `S`: halo rows refresh over
+    /// the wire (ledger kind "hist") only when their last refresh is more
+    /// than `S` epochs old; within the bound they are served from a
+    /// per-worker cache at zero communication.  `0` = the synchronous
+    /// exchange, bit for bit (the cache machinery is never constructed).
+    pub staleness: usize,
 }
 
 impl Default for TrainerOptions {
@@ -181,6 +191,8 @@ impl Default for TrainerOptions {
             overlap: false,
             plan_mode: PlanMode::Sparse,
             replication: 1,
+            sampling: None,
+            staleness: 0,
         }
     }
 }
@@ -273,6 +285,12 @@ pub(crate) struct EpochPlan {
     /// entry, so the shared-key mask stays identical and backward remains
     /// exact backprop through the forward compression.
     pub(crate) links: Option<LinkRates>,
+    /// this epoch's historical-embedding refresh schedule (`None` when
+    /// `staleness = 0`).  Attached after [`plan_epoch`] by whoever owns
+    /// the [`HistTracker`]: the in-process coordinator, or each worker
+    /// process evolving its own deterministic replica.  Shared by Arc —
+    /// every worker thread clones the plan per epoch.
+    pub(crate) hist: Option<Arc<HistSchedule>>,
 }
 
 pub(crate) fn plan_epoch(
@@ -312,7 +330,45 @@ pub(crate) fn plan_epoch(
         fwd,
         bwd,
         links,
+        hist: None,
     }
+}
+
+/// Coordinator-side historical-embedding state: the refresh scheduler,
+/// one cache per receiver rank, and the plan-row identities the scheduler
+/// consumes (rebuilt per epoch under sampled mode, static otherwise).
+pub(crate) struct HistState {
+    pub(crate) tracker: HistTracker,
+    pub(crate) caches: Vec<Mutex<HistCache>>,
+    pub(crate) plan_rows: Vec<Vec<Vec<PlanRows>>>,
+}
+
+impl HistState {
+    pub(crate) fn new(staleness: usize, q: usize, plan_rows: Vec<Vec<Vec<PlanRows>>>) -> HistState {
+        HistState {
+            tracker: HistTracker::new(staleness),
+            caches: (0..q).map(|_| Mutex::new(HistCache::new())).collect(),
+            plan_rows,
+        }
+    }
+
+    /// Cumulative cache telemetry over all ranks (rank order).
+    pub(crate) fn merged_stats(&self) -> HistStats {
+        let mut out = HistStats::default();
+        for c in &self.caches {
+            out.merge(&c.lock().unwrap().stats);
+        }
+        out
+    }
+}
+
+/// Full-graph mini-batch context kept by a sampled-mode trainer: the
+/// whole dataset and partition assignment, from which each epoch's view
+/// is drawn.
+struct SampledState {
+    cfg: SamplingConfig,
+    dataset: Dataset,
+    assignment: Vec<u32>,
 }
 
 /// Close the epoch's control loop: merge per-worker feedback cells in the
@@ -400,6 +456,11 @@ impl<'a> WorkerCtx<'a> {
     /// (the budget controller's feedback; zeros otherwise).  Each message
     /// compresses at `links`'s entry for the link it traverses when a
     /// per-link plan is published, else at the per-layer `rate`.
+    ///
+    /// With a `hist` schedule, only each plan's expired rows ship — as
+    /// `HistRefresh` (ledger kind "hist") — and a plan with nothing to
+    /// refresh skips its message entirely; the receiver serves the rest
+    /// from its cache in `recv_forward`.
     #[allow(clippy::too_many_arguments)]
     fn send_forward(
         &self,
@@ -412,15 +473,32 @@ impl<'a> WorkerCtx<'a> {
         links: Option<&LinkRates>,
         f: usize,
         track: bool,
+        hist: Option<&HistSchedule>,
     ) -> LayerFeedback {
         let q = self.rank;
         let mut stats = LayerFeedback::default();
         let mut payload = ws.take_empty();
-        for plan in &self.data[q].plans[layer] {
+        for (pi, plan) in self.data[q].plans[layer].iter().enumerate() {
+            let sched = hist.map(|s| &s.plans[q][layer][pi]);
+            if let Some(s) = sched {
+                if s.ship.is_empty() {
+                    continue; // every row within its staleness bound
+                }
+            }
             payload.clear();
-            payload.reserve(plan.local_rows.len() * f);
-            for &row in &plan.local_rows {
-                payload.extend_from_slice(h.row(row as usize));
+            match sched {
+                Some(s) => {
+                    payload.reserve(s.ship.len() * f);
+                    for &i in &s.ship {
+                        payload.extend_from_slice(h.row(plan.local_rows[i as usize] as usize));
+                    }
+                }
+                None => {
+                    payload.reserve(plan.local_rows.len() * f);
+                    for &row in &plan.local_rows {
+                        payload.extend_from_slice(h.row(row as usize));
+                    }
+                }
             }
             let key = msg_key(self.seed, epoch, layer, q, plan.to);
             let r = links.and_then(|lr| lr.rate(layer, q, plan.to)).unwrap_or(rate);
@@ -430,13 +508,18 @@ impl<'a> WorkerCtx<'a> {
                 stats.err_sq += err_sq;
                 stats.sig_sq += sig_sq;
             }
+            let kind = if sched.is_some() {
+                MessageKind::HistRefresh { layer }
+            } else {
+                MessageKind::Activation { layer }
+            };
             let sent = ep.send(
                 epoch,
                 Message {
                     from: q,
                     to: plan.to,
                     via: (plan.via != q).then_some(plan.via),
-                    kind: MessageKind::Activation { layer },
+                    kind,
                     payload: compressed,
                 },
             );
@@ -472,26 +555,85 @@ impl<'a> WorkerCtx<'a> {
     /// boundary buffer (zeros where not communicated).  Both the boundary
     /// matrix and the per-message decode buffer are workspace-backed; the
     /// caller returns the matrix with `ws.put_matrix` once consumed.
+    ///
+    /// With a `hist` schedule, messages carry only each plan's refreshed
+    /// rows: those are decoded, scattered, and written into the cache
+    /// under this `epoch`; every other kept row is then served from the
+    /// cache at zero wire cost (a miss — impossible once epoch 0 has run,
+    /// unless a stale-injected refresh replayed garbage — leaves zeros,
+    /// exactly the stale-chain semantics of the full exchange).
     fn recv_forward(
         &self,
         msgs: Vec<Message>,
         ws: &mut Workspace,
+        epoch: usize,
         layer: usize,
         f: usize,
+        hist: Option<(&HistSchedule, &mut HistCache)>,
     ) -> Result<Matrix> {
         let p = self.rank;
         let mut out = ws.take_matrix_zeroed(self.data[p].n_boundary, f);
         let mut flat = ws.take_empty();
-        for msg in msgs {
-            let plan = self.plan(layer, msg.from, p)?;
-            flat.clear();
-            flat.resize(msg.payload.n, 0.0);
-            self.compressor.decompress(&msg.payload, &mut flat);
-            for (i, &slot) in plan.dst_slots.iter().enumerate() {
-                if slot == DISCARD_SLOT {
-                    continue; // dense-plan padding this receiver never reads
+        match hist {
+            None => {
+                for msg in msgs {
+                    let plan = self.plan(layer, msg.from, p)?;
+                    flat.clear();
+                    flat.resize(msg.payload.n, 0.0);
+                    self.compressor.decompress(&msg.payload, &mut flat);
+                    for (i, &slot) in plan.dst_slots.iter().enumerate() {
+                        if slot == DISCARD_SLOT {
+                            continue; // dense-plan padding this receiver never reads
+                        }
+                        out.row_mut(slot as usize).copy_from_slice(&flat[i * f..(i + 1) * f]);
+                    }
                 }
-                out.row_mut(slot as usize).copy_from_slice(&flat[i * f..(i + 1) * f]);
+            }
+            Some((sched, cache)) => {
+                for msg in msgs {
+                    let pi = *self.plan_idx.get(&(layer, msg.from, p)).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "refresh without plan {}->{p} at layer {layer}",
+                            msg.from
+                        )
+                    })?;
+                    let plan = &self.data[msg.from].plans[layer][pi];
+                    let ps = &sched.plans[msg.from][layer][pi];
+                    flat.clear();
+                    flat.resize(msg.payload.n, 0.0);
+                    self.compressor.decompress(&msg.payload, &mut flat);
+                    for (j, &i) in ps.ship.iter().enumerate() {
+                        let slot = plan.dst_slots[i as usize];
+                        debug_assert_ne!(slot, DISCARD_SLOT, "discard rows never ship");
+                        let row = &flat[j * f..(j + 1) * f];
+                        out.row_mut(slot as usize).copy_from_slice(row);
+                        cache.insert(layer, ps.gids[i as usize], epoch, row);
+                    }
+                }
+                // Serve the unshipped kept rows.  Walk every sender with a
+                // plan into p — a plan whose refresh set is empty sends no
+                // message at all, so `msgs` alone cannot drive this loop.
+                for from in 0..self.data.len() {
+                    if from == p {
+                        continue;
+                    }
+                    let Some(&pi) = self.plan_idx.get(&(layer, from, p)) else {
+                        continue;
+                    };
+                    let plan = &self.data[from].plans[layer][pi];
+                    let ps = &sched.plans[from][layer][pi];
+                    let mut ship = ps.ship.iter().peekable();
+                    for (i, &slot) in plan.dst_slots.iter().enumerate() {
+                        if ship.peek() == Some(&&(i as u32)) {
+                            ship.next();
+                            continue; // refreshed above
+                        }
+                        if slot == DISCARD_SLOT {
+                            continue;
+                        }
+                        cache.serve(layer, ps.gids[i], epoch, out.row_mut(slot as usize));
+                    }
+                }
             }
         }
         ws.put(flat);
@@ -502,6 +644,12 @@ impl<'a> WorkerCtx<'a> {
     /// in the exact element order of the forward message owner->self and
     /// compressed with the SAME key — and, under a per-link plan, the same
     /// forward-link rate — so the mask is identical.
+    ///
+    /// With a `hist` schedule, only the rows the forward pass actually
+    /// refreshed return cotangents (same ship set, same key — the
+    /// positional mask still matches the forward message exactly); rows
+    /// served from the cache get no gradient this epoch, the historical-
+    /// embedding trade the staleness bound licenses.
     #[allow(clippy::too_many_arguments)]
     fn send_backward(
         &self,
@@ -514,6 +662,7 @@ impl<'a> WorkerCtx<'a> {
         links: Option<&LinkRates>,
         f: usize,
         track: bool,
+        hist: Option<&HistSchedule>,
     ) -> LayerFeedback {
         let p = self.rank;
         let mut stats = LayerFeedback::default();
@@ -526,16 +675,34 @@ impl<'a> WorkerCtx<'a> {
                 continue;
             };
             let plan = &self.data[q].plans[layer][i];
+            let sched = hist.map(|s| &s.plans[q][layer][i]);
+            if let Some(s) = sched {
+                if s.ship.is_empty() {
+                    continue; // no refresh arrived, nothing to return
+                }
+            }
             payload.clear();
-            payload.reserve(plan.dst_slots.len() * f);
-            for &slot in &plan.dst_slots {
-                if slot == DISCARD_SLOT {
-                    // dense-plan padding: hold the forward element order
-                    // (the shared compression mask is positional) with
-                    // rows this receiver never consumed — exact zeros.
-                    payload.extend(std::iter::repeat(0.0).take(f));
-                } else {
-                    payload.extend_from_slice(g_bnd.row(slot as usize));
+            match sched {
+                Some(s) => {
+                    payload.reserve(s.ship.len() * f);
+                    for &i in &s.ship {
+                        // ship positions are always kept rows (live slots)
+                        payload
+                            .extend_from_slice(g_bnd.row(plan.dst_slots[i as usize] as usize));
+                    }
+                }
+                None => {
+                    payload.reserve(plan.dst_slots.len() * f);
+                    for &slot in &plan.dst_slots {
+                        if slot == DISCARD_SLOT {
+                            // dense-plan padding: hold the forward element order
+                            // (the shared compression mask is positional) with
+                            // rows this receiver never consumed — exact zeros.
+                            payload.extend(std::iter::repeat(0.0).take(f));
+                        } else {
+                            payload.extend_from_slice(g_bnd.row(slot as usize));
+                        }
+                    }
                 }
             }
             let key = msg_key(self.seed, epoch, layer, q, p);
@@ -565,6 +732,8 @@ impl<'a> WorkerCtx<'a> {
     }
 
     /// Accumulate returned cotangents into this worker's local cotangent.
+    /// With a `hist` schedule, each message carries only the refreshed
+    /// rows' cotangents, in ship order.
     fn recv_backward(
         &self,
         msgs: Vec<Message>,
@@ -572,26 +741,42 @@ impl<'a> WorkerCtx<'a> {
         layer: usize,
         g_local: &mut Matrix,
         f: usize,
+        hist: Option<&HistSchedule>,
     ) -> Result<()> {
         let q = self.rank;
         let mut flat = ws.take_empty();
         for msg in msgs {
-            let plan = self.plan(layer, q, msg.from)?;
+            let pi = *self.plan_idx.get(&(layer, q, msg.from)).ok_or_else(|| {
+                anyhow::anyhow!("message without plan {q}->{} at layer {layer}", msg.from)
+            })?;
+            let plan = &self.data[q].plans[layer][pi];
             flat.clear();
             flat.resize(msg.payload.n, 0.0);
             self.compressor.decompress(&msg.payload, &mut flat);
-            // discard slots are SKIPPED, not accumulated: adding their
-            // +0.0 padding could flip a stored -0.0 and break the bitwise
-            // dense==sparse equivalence the plan modes guarantee
-            for ((i, &row), &slot) in
-                plan.local_rows.iter().enumerate().zip(&plan.dst_slots)
-            {
-                if slot == DISCARD_SLOT {
-                    continue;
+            match hist.map(|s| &s.plans[q][layer][pi]) {
+                Some(ps) => {
+                    for (j, &i) in ps.ship.iter().enumerate() {
+                        let dst = g_local.row_mut(plan.local_rows[i as usize] as usize);
+                        for (d, &v) in dst.iter_mut().zip(&flat[j * f..(j + 1) * f]) {
+                            *d += v;
+                        }
+                    }
                 }
-                let dst = g_local.row_mut(row as usize);
-                for (d, &v) in dst.iter_mut().zip(&flat[i * f..(i + 1) * f]) {
-                    *d += v;
+                None => {
+                    // discard slots are SKIPPED, not accumulated: adding their
+                    // +0.0 padding could flip a stored -0.0 and break the bitwise
+                    // dense==sparse equivalence the plan modes guarantee
+                    for ((i, &row), &slot) in
+                        plan.local_rows.iter().enumerate().zip(&plan.dst_slots)
+                    {
+                        if slot == DISCARD_SLOT {
+                            continue;
+                        }
+                        let dst = g_local.row_mut(row as usize);
+                        for (d, &v) in dst.iter_mut().zip(&flat[i * f..(i + 1) * f]) {
+                            *d += v;
+                        }
+                    }
                 }
             }
         }
@@ -655,7 +840,12 @@ fn worker_epoch(
     gate: &Gate,
     intra: usize,
     overlap: bool,
+    hist: Option<(&HistSchedule, &Mutex<HistCache>)>,
 ) -> WorkerOut {
+    // overlap's kind-keyed drains don't know about refresh messages;
+    // Trainer::new rejects the combination, so hist is None here
+    debug_assert!(!(overlap && hist.is_some()), "overlap incompatible with staleness > 0");
+    let hsched = hist.map(|(s, _)| s);
     let local_norm = plan.local_norm;
     let d = &ctx.data[ctx.rank];
     let mut err: Option<crate::Error> = None;
@@ -677,7 +867,7 @@ fn worker_epoch(
                 if err.is_none() {
                     let h_ref: &Matrix = h.as_ref().unwrap_or(&d.x);
                     match compute(gate, intra, || {
-                        let s = ctx.send_forward(endpoint, ws, epoch, l, h_ref, r, plan.links.as_ref(), fi, plan.feedback);
+                        let s = ctx.send_forward(endpoint, ws, epoch, l, h_ref, r, plan.links.as_ref(), fi, plan.feedback, None);
                         engine.forward_interior(l, weights, h_ref, local_norm)?;
                         Ok(s)
                     }) {
@@ -692,7 +882,7 @@ fn worker_epoch(
                 if err.is_none() {
                     let h_ref: &Matrix = h.as_ref().unwrap_or(&d.x);
                     match compute(gate, intra, || {
-                        let hb = ctx.recv_forward(msgs, ws, l, fi)?;
+                        let hb = ctx.recv_forward(msgs, ws, epoch, l, fi, None)?;
                         let next = engine.forward_boundary(l, weights, h_ref, &hb, local_norm)?;
                         Ok((next, hb))
                     }) {
@@ -715,7 +905,7 @@ fn worker_epoch(
                 // rows (the epoch is discarded by the coordinator anyway)
                 let h_ref: &Matrix = h.as_ref().unwrap_or(&d.x);
                 match compute(gate, intra, || {
-                    Ok(ctx.send_forward(endpoint, ws, epoch, l, h_ref, r, plan.links.as_ref(), fi, plan.feedback))
+                    Ok(ctx.send_forward(endpoint, ws, epoch, l, h_ref, r, plan.links.as_ref(), fi, plan.feedback, hsched))
                 }) {
                     Ok(s) => feedback[l].merge(&s),
                     Err(e) => err = Some(e),
@@ -724,7 +914,10 @@ fn worker_epoch(
             xchg.wait();
             let msgs = endpoint.recv_all(); // always drain: keeps quiescence
             let hb = if err.is_none() {
-                match compute(gate, intra, || ctx.recv_forward(msgs, ws, l, fi)) {
+                match compute(gate, intra, || {
+                    let mut held = hist.map(|(s, c)| (s, c.lock().expect("cache lock")));
+                    ctx.recv_forward(msgs, ws, epoch, l, fi, held.as_mut().map(|(s, g)| (*s, &mut **g)))
+                }) {
                     Ok(m) => m,
                     Err(e) => {
                         err = Some(e);
@@ -784,7 +977,7 @@ fn worker_epoch(
                     match compute(gate, intra, || {
                         let g_bnd = engine.backward_halo(l, weights, &g, local_norm)?;
                         let s = ctx
-                            .send_backward(endpoint, ws, epoch, l, &g_bnd, r, plan.links.as_ref(), fi, plan.feedback);
+                            .send_backward(endpoint, ws, epoch, l, &g_bnd, r, plan.links.as_ref(), fi, plan.feedback, None);
                         engine.recycle(g_bnd);
                         let (gl, lg) = engine.backward_finish(l, weights, local_norm)?;
                         Ok((s, gl, lg))
@@ -802,7 +995,7 @@ fn worker_epoch(
                 let msgs = endpoint.try_recv_kind(MessageKind::Gradient { layer: l });
                 if err.is_none() {
                     if let Err(e) =
-                        compute(gate, intra, || ctx.recv_backward(msgs, ws, l, &mut g, fi))
+                        compute(gate, intra, || ctx.recv_backward(msgs, ws, l, &mut g, fi, None))
                     {
                         err = Some(e);
                     }
@@ -826,7 +1019,7 @@ fn worker_epoch(
         if let Some(r) = plan.bwd[l] {
             if err.is_none() {
                 match compute(gate, intra, || {
-                    Ok(ctx.send_backward(endpoint, ws, epoch, l, &g_bnd, r, plan.links.as_ref(), fi, plan.feedback))
+                    Ok(ctx.send_backward(endpoint, ws, epoch, l, &g_bnd, r, plan.links.as_ref(), fi, plan.feedback, hsched))
                 }) {
                     Ok(s) => feedback[l].merge(&s),
                     Err(e) => err = Some(e),
@@ -836,7 +1029,7 @@ fn worker_epoch(
             let msgs = endpoint.recv_all();
             if err.is_none() {
                 if let Err(e) =
-                    compute(gate, intra, || ctx.recv_backward(msgs, ws, l, &mut g, fi))
+                    compute(gate, intra, || ctx.recv_backward(msgs, ws, l, &mut g, fi, hsched))
                 {
                     err = Some(e);
                 }
@@ -985,6 +1178,43 @@ impl RunSetup {
     pub(crate) fn gradient_senders(&self, layer: usize, rank: usize) -> Vec<usize> {
         self.data[rank].plans[layer].iter().map(|p| p.to).filter(|&t| t != rank).collect()
     }
+
+    /// Per-sender refresh-tracking rows for the historical-embedding
+    /// scheduler: one [`PlanRows`] per send plan, carrying each plan row's
+    /// *global* node id (via `gid_of` — the identity on the full graph,
+    /// the view's node map under sampling, so a node keeps one cache line
+    /// no matter which batches it lands in) and whether the receiver
+    /// actually keeps the row (dense-plan padding never ships, never
+    /// ages).
+    pub(crate) fn hist_plan_rows(
+        &self,
+        worker_graphs: &[WorkerGraph],
+        gid_of: impl Fn(u32) -> u32,
+    ) -> Vec<Vec<Vec<PlanRows>>> {
+        self.data
+            .iter()
+            .zip(worker_graphs)
+            .map(|(d, wg)| {
+                d.plans
+                    .iter()
+                    .map(|plans| {
+                        plans
+                            .iter()
+                            .map(|p| PlanRows {
+                                to: p.to,
+                                gids: p
+                                    .local_rows
+                                    .iter()
+                                    .map(|&r| gid_of(wg.nodes[r as usize]))
+                                    .collect(),
+                                kept: p.dst_slots.iter().map(|&s| s != DISCARD_SLOT).collect(),
+                            })
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect()
+    }
 }
 
 /// One worker epoch over a [`Transport`]-backed endpoint, barrier-free:
@@ -1015,9 +1245,15 @@ pub(crate) fn dist_worker_epoch(
     weights: &Weights,
     plan: &EpochPlan,
     layer_dims: &[(usize, usize)],
+    mut hist_cache: Option<&mut HistCache>,
 ) -> Result<WorkerOut> {
     let ctx =
         WorkerCtx { rank, data: &setup.data, plan_idx: &setup.plan_idx, compressor, seed };
+    // the refresh schedule rides the epoch plan: every process replays the
+    // same deterministic tracker, so sender and receiver agree on ship
+    // sets without exchanging them
+    let hist_sched = plan.hist.as_deref();
+    debug_assert_eq!(hist_sched.is_some(), hist_cache.is_some(), "schedule and cache travel together");
     let d = &ctx.data[rank];
     let local_norm = plan.local_norm;
     let mut feedback = vec![LayerFeedback::default(); layer_dims.len()];
@@ -1028,11 +1264,21 @@ pub(crate) fn dist_worker_epoch(
     for (l, &(fi, _)) in layer_dims.iter().enumerate() {
         let h_bnd = if let Some(r) = plan.fwd[l] {
             let h_ref: &Matrix = h.as_ref().unwrap_or(&d.x);
-            let s = ctx.send_forward(endpoint, ws, epoch, l, h_ref, r, plan.links.as_ref(), fi, plan.feedback);
+            let s = ctx.send_forward(endpoint, ws, epoch, l, h_ref, r, plan.links.as_ref(), fi, plan.feedback, hist_sched);
             feedback[l].merge(&s);
-            let senders = setup.activation_senders(l, rank);
-            let msgs = endpoint.recv_expected(MessageKind::Activation { layer: l }, &senders)?;
-            ctx.recv_forward(msgs, ws, l, fi)?
+            // under hist, only senders with a non-empty refresh set post a
+            // message this epoch — awaiting the rest would deadlock
+            let (kind, senders) = match hist_sched {
+                Some(sched) => (
+                    MessageKind::HistRefresh { layer: l },
+                    sched.live_senders(l, &setup.activation_senders(l, rank), |from| {
+                        setup.plan_idx[&(l, from, rank)]
+                    }),
+                ),
+                None => (MessageKind::Activation { layer: l }, setup.activation_senders(l, rank)),
+            };
+            let msgs = endpoint.recv_expected(kind, &senders)?;
+            ctx.recv_forward(msgs, ws, epoch, l, fi, hist_sched.zip(hist_cache.as_deref_mut()))?
         } else {
             ws.take_matrix_zeroed(d.n_boundary, fi)
         };
@@ -1063,11 +1309,21 @@ pub(crate) fn dist_worker_epoch(
         engine.recycle(prev);
         lgrads[l] = Some(lg);
         if let Some(r) = plan.bwd[l] {
-            let s = ctx.send_backward(endpoint, ws, epoch, l, &g_bnd, r, plan.links.as_ref(), fi, plan.feedback);
+            let s = ctx.send_backward(endpoint, ws, epoch, l, &g_bnd, r, plan.links.as_ref(), fi, plan.feedback, hist_sched);
             feedback[l].merge(&s);
-            let senders = setup.gradient_senders(l, rank);
+            // under hist, cotangents return only along plans that shipped
+            // a refresh this epoch
+            let senders: Vec<usize> = match hist_sched {
+                Some(sched) => setup.data[rank].plans[l]
+                    .iter()
+                    .enumerate()
+                    .filter(|&(pi, p)| p.to != rank && !sched.plans[rank][l][pi].ship.is_empty())
+                    .map(|(_, p)| p.to)
+                    .collect(),
+                None => setup.gradient_senders(l, rank),
+            };
             let msgs = endpoint.recv_expected(MessageKind::Gradient { layer: l }, &senders)?;
-            ctx.recv_backward(msgs, ws, l, &mut g, fi)?;
+            ctx.recv_backward(msgs, ws, l, &mut g, fi, hist_sched)?;
         }
         engine.recycle(g_bnd);
     }
@@ -1108,6 +1364,12 @@ pub struct Trainer {
     link_snapshot: BTreeMap<(usize, usize), AggCell>,
     /// most recent published per-link rate plan (report surface)
     last_links: Option<LinkRates>,
+    /// `mode = sampled`: the full graph + assignment the per-epoch
+    /// mini-batch views restrict (None = full-graph training)
+    sampled: Option<SampledState>,
+    /// `staleness > 0`: refresh tracker + per-worker caches (None at S=0,
+    /// where the synchronous exchange runs untouched — bit for bit)
+    hist: Option<HistState>,
     pub grad_norm_trace: Vec<f32>,
     pub report: RunReport,
 }
@@ -1139,14 +1401,19 @@ impl Trainer {
                 spec.name == "sage"
                     && !opts.overlap
                     && opts.plan_mode == PlanMode::Dense
-                    && opts.replication == 1,
+                    && opts.replication == 1
+                    && opts.sampling.is_none()
+                    && opts.staleness == 0,
                 "the pjrt engine supports only the sage model with overlap=off, plan=dense, \
-                 replication=1 (got model={}, overlap={}, plan={}, replication={}); \
+                 replication=1, mode=full, staleness=0 (got model={}, overlap={}, plan={}, \
+                 replication={}, sampled={}, staleness={}); \
                  use engine=native for the full feature set",
                 spec.name,
                 opts.overlap,
                 opts.plan_mode.label(),
-                opts.replication
+                opts.replication,
+                opts.sampling.is_some(),
+                opts.staleness
             );
         }
         if opts.overlap {
@@ -1158,8 +1425,49 @@ impl Trainer {
                 );
             }
         }
-        let RunSetup { data, plan_idx, total_train } =
+        // the overlap pipeline drains Activation-keyed mailboxes and the
+        // replica reroute assumes every boundary row is in flight each
+        // epoch; both are incompatible with skipping refreshes
+        anyhow::ensure!(
+            !(opts.staleness > 0 && opts.overlap),
+            "staleness > 0 is incompatible with overlap=on; run with overlap=off"
+        );
+        anyhow::ensure!(
+            !(opts.staleness > 0 && opts.replication > 1),
+            "staleness > 0 is incompatible with replication > 1"
+        );
+        anyhow::ensure!(
+            !(opts.sampling.is_some() && opts.overlap),
+            "mode=sampled is incompatible with overlap=on; run with overlap=off"
+        );
+        if let Some(sc) = &opts.sampling {
+            anyhow::ensure!(
+                sc.fanouts.len() == spec.layer_dims().len(),
+                "fanout lists {} entries but the model has {} layers; give one fanout per layer",
+                sc.fanouts.len(),
+                spec.layer_dims().len()
+            );
+            anyhow::ensure!(sc.batch_size >= 1, "batch_size must be >= 1");
+        }
+        let setup =
             RunSetup::build(dataset, worker_graphs, &spec, opts.plan_mode, opts.replication)?;
+        // Historical-embedding state only exists at S > 0: at S=0 the
+        // synchronous exchange runs the untouched Activation path (message
+        // kinds feed the failure coins, so even constructing an empty
+        // schedule would change stale-injection draws).
+        let hist = (opts.staleness > 0).then(|| {
+            HistState::new(
+                opts.staleness,
+                partition.q,
+                setup.hist_plan_rows(worker_graphs, |gid| gid),
+            )
+        });
+        let sampled = opts.sampling.clone().map(|cfg| SampledState {
+            cfg,
+            dataset: dataset.clone(),
+            assignment: partition.assignment.clone(),
+        });
+        let RunSetup { data, plan_idx, total_train } = setup;
         let fabric =
             Fabric::with_policy_and_ledger(partition.q, opts.failure.clone(), opts.ledger_mode);
         let endpoints = fabric.endpoints();
@@ -1198,6 +1506,8 @@ impl Trainer {
             plan_idx,
             link_snapshot: BTreeMap::new(),
             last_links: None,
+            sampled,
+            hist,
             grad_norm_trace: Vec::new(),
             report,
         })
@@ -1313,13 +1623,19 @@ impl Trainer {
             plan_idx,
             link_snapshot,
             last_links,
+            hist,
             ..
         } = self;
         let data: &[WorkerData] = data;
         let plan_idx: &HashMap<(usize, usize, usize), usize> = plan_idx;
         let q = engines.len();
         let layer_dims = spec.layer_dims();
-        let plan = plan_epoch(controller.as_ref(), epoch, layer_dims.len(), q);
+        let mut plan = plan_epoch(controller.as_ref(), epoch, layer_dims.len(), q);
+        if let Some(hs) = hist.as_mut() {
+            plan.hist = Some(Arc::new(hs.tracker.schedule(epoch, &hs.plan_rows)));
+        }
+        let hist_sched = plan.hist.clone();
+        let hist_caches = hist.as_ref().map(|h| &h.caches);
         if plan.links.is_some() {
             *last_links = plan.links.clone();
         }
@@ -1356,6 +1672,7 @@ impl Trainer {
                             plan.links.as_ref(),
                             fi,
                             plan.feedback,
+                            None,
                         );
                         fbs[i][l].merge(&s);
                         engines[i].forward_interior(l, weights, h_ref, local_norm)?;
@@ -1363,7 +1680,7 @@ impl Trainer {
                     for p in 0..q {
                         let msgs =
                             endpoints[p].try_recv_kind(MessageKind::Activation { layer: l });
-                        let hb = ctx(p).recv_forward(msgs, &mut workspaces[p], l, fi)?;
+                        let hb = ctx(p).recv_forward(msgs, &mut workspaces[p], epoch, l, fi, None)?;
                         let h_ref: &Matrix = h[p].as_ref().unwrap_or(&data[p].x);
                         let next = engines[p].forward_boundary(l, weights, h_ref, &hb, local_norm)?;
                         if let Some(prev) = h[p].replace(next) {
@@ -1389,13 +1706,22 @@ impl Trainer {
                             plan.links.as_ref(),
                             fi,
                             plan.feedback,
+                            hist_sched.as_deref(),
                         );
                         fbs[i][l].merge(&s);
                     }
                     let mut out = Vec::with_capacity(q);
                     for p in 0..q {
                         let msgs = endpoints[p].recv_all();
-                        out.push(ctx(p).recv_forward(msgs, &mut workspaces[p], l, fi)?);
+                        let mut held = hist_caches.map(|c| c[p].lock().expect("cache lock"));
+                        out.push(ctx(p).recv_forward(
+                            msgs,
+                            &mut workspaces[p],
+                            epoch,
+                            l,
+                            fi,
+                            hist_sched.as_deref().zip(held.as_deref_mut()),
+                        )?);
                     }
                     out
                 }
@@ -1450,6 +1776,7 @@ impl Trainer {
                             plan.links.as_ref(),
                             fi,
                             plan.feedback,
+                            None,
                         );
                         fbs[i][l].merge(&s);
                         engines[i].recycle(g_bnd);
@@ -1461,7 +1788,7 @@ impl Trainer {
                     for i in 0..q {
                         let msgs =
                             endpoints[i].try_recv_kind(MessageKind::Gradient { layer: l });
-                        ctx(i).recv_backward(msgs, &mut workspaces[i], l, &mut g[i], fi)?;
+                        ctx(i).recv_backward(msgs, &mut workspaces[i], l, &mut g[i], fi, None)?;
                     }
                     continue;
                 }
@@ -1487,12 +1814,20 @@ impl Trainer {
                         plan.links.as_ref(),
                         fi,
                         plan.feedback,
+                        hist_sched.as_deref(),
                     );
                     fbs[p][l].merge(&s);
                 }
                 for i in 0..q {
                     let msgs = endpoints[i].recv_all();
-                    ctx(i).recv_backward(msgs, &mut workspaces[i], l, &mut g[i], fi)?;
+                    ctx(i).recv_backward(
+                        msgs,
+                        &mut workspaces[i],
+                        l,
+                        &mut g[i],
+                        fi,
+                        hist_sched.as_deref(),
+                    )?;
                 }
             }
             for (i, gb) in g_bnds.into_iter().enumerate() {
@@ -1547,9 +1882,27 @@ impl Trainer {
     /// decorated with the fabric's communication footprint (per-link byte
     /// breakdown in Detailed ledger mode, stale-skip count).
     pub fn run(&mut self) -> Result<RunReport> {
-        match self.opts.run_mode {
-            RunMode::Sequential => self.run_sequential()?,
-            RunMode::Parallel => self.run_parallel()?,
+        if self.sampled.is_some() {
+            // sampled mode rebuilds the epoch's view first, then drives
+            // the run mode's one-epoch program on it
+            self.run_sampled()?;
+        } else {
+            match self.opts.run_mode {
+                RunMode::Sequential => self.run_sequential()?,
+                RunMode::Parallel => self.run_parallel()?,
+            }
+        }
+        if self.sampled.is_some() {
+            // one mini-batch per epoch (by construction; the count is the
+            // report surface the smoke tests pin)
+            self.report.batches = self.opts.epochs;
+        }
+        if let Some(hs) = &self.hist {
+            let st = hs.merged_stats();
+            self.report.hist_hits = st.hits;
+            self.report.hist_misses = st.misses;
+            self.report.hist_refresh_rows = st.refresh_rows;
+            self.report.hist_age_hist = st.ages.clone();
         }
         self.report.stale_skipped = self.fabric.stale_skipped();
         if let Some(lr) = &self.last_links {
@@ -1594,6 +1947,236 @@ impl Trainer {
         Ok(())
     }
 
+    /// Sampled-mode driver: each epoch draws one deterministic mini-batch
+    /// view, swaps it in, and runs the selected run mode's one-epoch
+    /// program on it.  Fabric, endpoints, ledger, workspaces, controller,
+    /// and the full-graph evaluator all persist across views, so byte
+    /// accounting, stale-injection history, and rate control are
+    /// continuous — only the graph under the exchange changes.
+    fn run_sampled(&mut self) -> Result<()> {
+        for epoch in 0..self.opts.epochs {
+            // captured before the epoch: a closed-loop controller has
+            // already advanced its plan by the time the epoch returns
+            let nominal = self.controller.nominal_rate(epoch);
+            let t0 = std::time::Instant::now();
+            self.install_batch_view(epoch)?;
+            let loss = match self.opts.run_mode {
+                RunMode::Sequential => self.train_epoch(epoch)?.0,
+                RunMode::Parallel => self.train_epoch_parallel(epoch)?,
+            };
+            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+            push_record(
+                &mut self.report,
+                &self.eval,
+                &self.weights,
+                self.opts.eval_every,
+                self.opts.epochs,
+                nominal,
+                self.fabric.total_bytes(),
+                epoch,
+                loss,
+                wall_ms,
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Replace the trainer's per-worker world with epoch `epoch`'s
+    /// mini-batch view: fresh worker data, send plans, and engines over
+    /// the induced subgraph.  Under `staleness > 0` the refresh-tracking
+    /// plan rows are rebuilt with the view's global-id map, so a node
+    /// keeps one cache line across every batch it lands in.
+    fn install_batch_view(&mut self, epoch: usize) -> Result<()> {
+        let q = self.engines.len();
+        let ss = self.sampled.as_ref().expect("sampled mode");
+        let view = crate::runtime::minibatch::build_view(
+            &ss.dataset,
+            &ss.assignment,
+            q,
+            &ss.cfg,
+            self.opts.seed,
+            epoch,
+        )?;
+        let setup = RunSetup::build(
+            &view.dataset,
+            &view.worker_graphs,
+            &self.spec,
+            self.opts.plan_mode,
+            self.opts.replication,
+        )?;
+        if let Some(hs) = self.hist.as_mut() {
+            hs.plan_rows = setup
+                .hist_plan_rows(&view.worker_graphs, |local| view.nodes[local as usize]);
+        }
+        let RunSetup { data, plan_idx, total_train } = setup;
+        self.data = data;
+        self.plan_idx = plan_idx;
+        self.total_train = total_train;
+        // fresh engines per view (the induced shapes change every batch;
+        // pjrt's AOT cache is rejected up front, so this is always native)
+        let spec = self.spec.clone();
+        self.engines = view
+            .worker_graphs
+            .iter()
+            .map(|w| {
+                Box::new(crate::engine::native::NativeWorkerEngine::new(w.clone(), spec.clone()))
+                    as Box<dyn WorkerEngine>
+            })
+            .collect();
+        Ok(())
+    }
+
+    /// One parallel epoch over the *current* worker data: the same
+    /// fork/join program as [`run_parallel`] — identical barrier schedule,
+    /// rank-order reductions, and plan publication — scoped to a single
+    /// epoch so sampled mode can swap views between epochs.
+    fn train_epoch_parallel(&mut self, epoch: usize) -> Result<f32> {
+        let q = self.engines.len();
+        let Trainer {
+            engines,
+            endpoints,
+            data,
+            workspaces,
+            weights,
+            spec,
+            opts,
+            controller,
+            fabric,
+            grad_norm_trace,
+            total_train,
+            plan_idx,
+            link_snapshot,
+            last_links,
+            hist,
+            ..
+        } = self;
+        let data: &[WorkerData] = data;
+        let plan_idx: &HashMap<(usize, usize, usize), usize> = plan_idx;
+        let compressor: &dyn Compressor = opts.compressor.as_ref();
+        let seed = opts.seed;
+        let overlap = opts.overlap;
+        let total_train = *total_train;
+        let layer_dims = spec.layer_dims();
+        let mut plan = plan_epoch(controller.as_ref(), epoch, layer_dims.len(), q);
+        if let Some(hs) = hist.as_mut() {
+            plan.hist = Some(Arc::new(hs.tracker.schedule(epoch, &hs.plan_rows)));
+        }
+        if plan.links.is_some() {
+            *last_links = plan.links.clone();
+        }
+        let hist_caches = hist.as_ref().map(|h| &h.caches);
+        let threads = if opts.threads == 0 {
+            crate::util::parallel::num_threads()
+        } else {
+            opts.threads
+        };
+        let permits = if engines.iter().all(|e| e.supports_concurrency()) {
+            threads.clamp(1, q)
+        } else {
+            1
+        };
+        let gate = Gate::new(permits);
+        let intra = (crate::util::parallel::num_threads() / permits).max(1);
+        let slots: Vec<Mutex<Option<WorkerOut>>> = (0..q).map(|_| Mutex::new(None)).collect();
+        let xchg = Barrier::new(q);
+        let bytes0 = fabric.total_bytes();
+
+        std::thread::scope(|s| {
+            for (rank, ((engine, endpoint), ws)) in engines
+                .iter_mut()
+                .zip(endpoints.iter_mut())
+                .zip(workspaces.iter_mut())
+                .enumerate()
+            {
+                let ctx = WorkerCtx { rank, data, plan_idx, compressor, seed };
+                let (plan, xchg, gate, slots, layer_dims) =
+                    (&plan, &xchg, &gate, &slots, &layer_dims);
+                let cache = hist_caches.map(|c| &c[rank]);
+                let w: &Weights = weights;
+                s.spawn(move || {
+                    // errored workers still walk the barrier schedule, so
+                    // a single-epoch scope never deadlocks
+                    let out = worker_epoch(
+                        epoch,
+                        total_train,
+                        &ctx,
+                        &mut **engine,
+                        endpoint,
+                        &mut *ws,
+                        w,
+                        plan,
+                        layer_dims,
+                        xchg,
+                        gate,
+                        intra,
+                        overlap,
+                        plan.hist.as_deref().zip(cache),
+                    );
+                    *slots[rank].lock().unwrap() = Some(out);
+                });
+            }
+        });
+
+        let mut outs = Vec::with_capacity(q);
+        for (i, slot) in slots.iter().enumerate() {
+            let out = slot
+                .lock()
+                .unwrap()
+                .take()
+                .ok_or_else(|| anyhow::anyhow!("worker {i} produced no result at epoch {epoch}"))?;
+            outs.push(out);
+        }
+        for (i, out) in outs.iter_mut().enumerate() {
+            if let Some(e) = out.error.take() {
+                anyhow::bail!("worker {i} failed at epoch {epoch}: {e:#}");
+            }
+        }
+
+        // ---- server step (same reduction order as the sequential oracle:
+        // per layer, worker contributions in rank order) ----
+        let mut grad_acc = weights.zeros_like();
+        let mut loss_weighted = 0.0f32;
+        for out in &outs {
+            loss_weighted += out.loss_weighted;
+        }
+        for l in 0..layer_dims.len() {
+            for out in &outs {
+                grad_acc.layers[l].add_assign(&out.grads[l]);
+            }
+        }
+        let mean_loss = loss_weighted / total_train;
+        if opts.ledger_weights {
+            let wbytes = weights.param_count() * 4;
+            for i in 0..q {
+                // worker -> server gradients, server -> worker weights
+                fabric.record(epoch, i, 0, "weights", wbytes);
+                fabric.record(epoch, 0, i, "weights", wbytes);
+            }
+        }
+        if opts.track_grad_norm {
+            grad_norm_trace.push(grad_acc.norm());
+        }
+        let mut flat_w = weights.flatten();
+        let flat_g = grad_acc.flatten();
+        opts.optimizer.step(&mut flat_w, &flat_g);
+        weights.set_from_flat(&flat_w);
+
+        let link_cells = if plan.feedback && controller.link_aware() {
+            link_delta(&fabric.merged_ledger(), link_snapshot)
+        } else {
+            Vec::new()
+        };
+        observe_epoch(
+            controller.as_mut(),
+            &plan,
+            epoch,
+            fabric.total_bytes() - bytes0,
+            outs.iter().map(|o| o.feedback.as_slice()),
+            link_cells,
+        );
+        Ok(mean_loss)
+    }
+
     /// The fork/join epoch program: q persistent worker threads plus this
     /// coordinator thread.  Workers meet at `xchg` (workers only) inside
     /// an epoch and at `sync` (workers + coordinator) on epoch edges.
@@ -1618,8 +2201,10 @@ impl Trainer {
             plan_idx,
             link_snapshot,
             last_links,
+            hist,
             grad_norm_trace,
             report,
+            ..
         } = self;
         let data: &[WorkerData] = data;
         let plan_idx: &HashMap<(usize, usize, usize), usize> = plan_idx;
@@ -1628,10 +2213,25 @@ impl Trainer {
         let total_train = *total_train;
         let overlap = opts.overlap;
         let layer_dims = spec.layer_dims();
+        // split the hist borrows: the coordinator owns the tracker (it
+        // schedules refreshes into each published plan), worker threads
+        // share the per-rank caches
+        let (mut hist_tracker, hist_caches, hist_plan_rows) = match hist.as_mut() {
+            Some(HistState { tracker, caches, plan_rows }) => {
+                (Some(tracker), Some(&*caches), Some(&*plan_rows))
+            }
+            None => (None, None, None),
+        };
         // the epoch's rate plan, published by the coordinator before the
         // workers are admitted; workers only ever read it between the
         // epoch-edge barriers, so there is no writer contention
-        let plan_lock = RwLock::new(plan_epoch(controller.as_ref(), 0, layer_dims.len(), q));
+        let plan_lock = RwLock::new({
+            let mut p0 = plan_epoch(controller.as_ref(), 0, layer_dims.len(), q);
+            if let Some(t) = hist_tracker.as_mut() {
+                p0.hist = Some(Arc::new(t.schedule(0, hist_plan_rows.unwrap())));
+            }
+            p0
+        });
         let threads = if opts.threads == 0 {
             crate::util::parallel::num_threads()
         } else {
@@ -1674,6 +2274,7 @@ impl Trainer {
                     &plan_lock,
                     &layer_dims,
                 );
+                let cache = hist_caches.map(|c| &c[rank]);
                 s.spawn(move || {
                     for epoch in 0..epochs {
                         sync.wait();
@@ -1697,6 +2298,7 @@ impl Trainer {
                                 gate,
                                 intra,
                                 overlap,
+                                plan.hist.as_deref().zip(cache),
                             )
                         };
                         *slots[rank].lock().unwrap() = Some(out);
@@ -1796,8 +2398,11 @@ impl Trainer {
                     link_cells,
                 );
                 if epoch + 1 < epochs {
-                    *plan_lock.write().unwrap() =
-                        plan_epoch(controller.as_ref(), epoch + 1, layer_dims.len(), q);
+                    let mut next = plan_epoch(controller.as_ref(), epoch + 1, layer_dims.len(), q);
+                    if let Some(t) = hist_tracker.as_mut() {
+                        next.hist = Some(Arc::new(t.schedule(epoch + 1, hist_plan_rows.unwrap())));
+                    }
+                    *plan_lock.write().unwrap() = next;
                 }
 
                 // same timing scope as the sequential path: the whole epoch
@@ -2099,5 +2704,180 @@ mod tests {
             let err = Trainer::new(&ds, &part, &wgs, engines, dims, opts).unwrap_err();
             assert!(err.to_string().contains("replication"), "{err}");
         }
+    }
+
+    fn build_ext(
+        q: usize,
+        seed: u64,
+        epochs: usize,
+        staleness: usize,
+        sampling: Option<SamplingConfig>,
+        run_mode: RunMode,
+    ) -> Trainer {
+        let ds = Dataset::load("karate-like", 0, seed).unwrap();
+        let dims = ModelDims { f_in: ds.f_in(), hidden: 8, classes: ds.classes, layers: 3 };
+        let part = RandomPartitioner { seed }.partition(&ds.graph, q).unwrap();
+        let wgs = WorkerGraph::build_all(&ds.graph, &part).unwrap();
+        let engines: Vec<Box<dyn WorkerEngine>> = wgs
+            .iter()
+            .map(|w| Box::new(NativeWorkerEngine::new(w.clone(), dims)) as Box<dyn WorkerEngine>)
+            .collect();
+        let opts = TrainerOptions {
+            epochs,
+            seed,
+            optimizer: Box::new(crate::optim::Adam::new(0.02)),
+            staleness,
+            sampling,
+            run_mode,
+            ..Default::default()
+        };
+        Trainer::new(&ds, &part, &wgs, engines, dims, opts).unwrap()
+    }
+
+    #[test]
+    fn hist_ships_whole_plans_on_a_period_of_s_plus_1() {
+        let (seed, epochs) = (5u64, 6usize);
+        let mut full = build_ext(2, seed, epochs, 0, None, RunMode::Sequential);
+        let mut hist = build_ext(2, seed, epochs, 2, None, RunMode::Sequential);
+        assert!(full.hist.is_none(), "S=0 never constructs cache state");
+        full.run().unwrap();
+        let rh = hist.run().unwrap();
+        let ef = full.ledger().by_epoch_kind();
+        let eh = hist.ledger().by_epoch_kind();
+        for e in 0..epochs {
+            assert!(!eh.contains_key(&(e, "activation")), "hist replaces the sync halo");
+            // static plans: every row refreshes together at epochs 0, 3
+            let refreshed = e % 3 == 0;
+            assert_eq!(eh.contains_key(&(e, "hist")), refreshed, "epoch {e}");
+            assert_eq!(eh.contains_key(&(e, "gradient")), refreshed, "epoch {e}");
+            if refreshed {
+                // a whole-plan refresh is wire-identical to the sync epoch
+                let (h, f) = (eh[&(e, "hist")], ef[&(e, "activation")]);
+                assert_eq!((h.bytes, h.messages), (f.bytes, f.messages), "epoch {e}");
+            }
+        }
+        let halo = |m: &std::collections::BTreeMap<(usize, &'static str), AggCell>| -> usize {
+            m.iter().filter(|((_, k), _)| *k != "weights").map(|(_, c)| c.bytes).sum()
+        };
+        // 2 refresh epochs out of 6: halo bytes drop by exactly S/(S+1)
+        assert_eq!(halo(&eh) * 3, halo(&ef), "period-3 cadence = 1/3 the halo bytes");
+        // cache telemetry: serves always hit (epoch 0 refreshed everything)
+        assert!(rh.hist_hits > 0 && rh.hist_misses == 0, "{rh:?}");
+        assert!(rh.hist_refresh_rows > 0);
+        // age histogram: slot 0 = refreshes, slots 1..=S = served ages
+        assert_eq!(rh.hist_age_hist.len(), 3);
+        assert!(rh.hist_age_hist[1] > 0 && rh.hist_age_hist[2] > 0, "{:?}", rh.hist_age_hist);
+        assert!(hist.fabric().is_quiescent());
+    }
+
+    #[test]
+    fn hist_parallel_matches_sequential_bitwise() {
+        let mut seq = build_ext(2, 9, 5, 2, None, RunMode::Sequential);
+        let mut par = build_ext(2, 9, 5, 2, None, RunMode::Parallel);
+        let rs = seq.run().unwrap();
+        let rp = par.run().unwrap();
+        assert_eq!(weight_bits(&seq), weight_bits(&par));
+        assert_eq!(
+            (rs.hist_hits, rs.hist_misses, rs.hist_refresh_rows, rs.hist_age_hist.clone()),
+            (rp.hist_hits, rp.hist_misses, rp.hist_refresh_rows, rp.hist_age_hist.clone())
+        );
+        assert_eq!(seq.ledger().total_bytes(), par.ledger().total_bytes());
+    }
+
+    #[test]
+    fn sampled_covering_batch_at_staleness_zero_matches_the_full_path_bitwise() {
+        let seed = 3u64;
+        let ds = Dataset::load("karate-like", 0, seed).unwrap();
+        let dims = ModelDims { f_in: ds.f_in(), hidden: 8, classes: ds.classes, layers: 3 };
+        let part = RandomPartitioner { seed }.partition(&ds.graph, 2).unwrap();
+        let sc = SamplingConfig {
+            batch_size: ds.n(), // clamps to every training node
+            fanouts: vec![crate::graph::Fanout::All; 3],
+        };
+        let wgs = WorkerGraph::build_all(&ds.graph, &part).unwrap();
+        let engines: Vec<Box<dyn WorkerEngine>> = wgs
+            .iter()
+            .map(|w| Box::new(NativeWorkerEngine::new(w.clone(), dims)) as Box<dyn WorkerEngine>)
+            .collect();
+        let opts = TrainerOptions {
+            epochs: 1,
+            seed,
+            optimizer: Box::new(crate::optim::Adam::new(0.02)),
+            sampling: Some(sc.clone()),
+            ..Default::default()
+        };
+        let mut sampled = Trainer::new(&ds, &part, &wgs, engines, dims, opts).unwrap();
+        // oracle: a plain full-graph trainer over epoch 0's induced view
+        let view =
+            crate::runtime::minibatch::build_view(&ds, &part.assignment, 2, &sc, seed, 0).unwrap();
+        let engines2: Vec<Box<dyn WorkerEngine>> = view
+            .worker_graphs
+            .iter()
+            .map(|w| Box::new(NativeWorkerEngine::new(w.clone(), dims)) as Box<dyn WorkerEngine>)
+            .collect();
+        let opts2 = TrainerOptions {
+            epochs: 1,
+            seed,
+            optimizer: Box::new(crate::optim::Adam::new(0.02)),
+            ..Default::default()
+        };
+        let mut oracle =
+            Trainer::new(&view.dataset, &view.partition, &view.worker_graphs, engines2, dims, opts2)
+                .unwrap();
+        let rs = sampled.run().unwrap();
+        oracle.run().unwrap();
+        assert_eq!(
+            weight_bits(&sampled),
+            weight_bits(&oracle),
+            "covering batch at S=0 is the full epoch, bit for bit"
+        );
+        assert_eq!(rs.batches, 1);
+        assert_eq!(sampled.ledger().total_bytes(), oracle.ledger().total_bytes());
+    }
+
+    #[test]
+    fn sampled_with_history_reports_batches_and_cache_hits() {
+        let ds_n = Dataset::load("karate-like", 0, 21).unwrap().n();
+        // covering batches make consecutive views identical, so serves
+        // are guaranteed hits once epoch 0 has refreshed everything
+        let sc = SamplingConfig { batch_size: ds_n, fanouts: vec![crate::graph::Fanout::All; 3] };
+        let mut t = build_ext(2, 21, 3, 2, Some(sc), RunMode::Sequential);
+        let r = t.run().unwrap();
+        assert_eq!(r.batches, 3);
+        assert!(r.records.iter().all(|rec| rec.loss.is_finite()));
+        assert!(r.hist_refresh_rows > 0);
+        assert!(r.hist_hits > 0 && r.hist_misses == 0, "{r:?}");
+        assert!(t.fabric().is_quiescent());
+    }
+
+    #[test]
+    fn trainer_rejects_inconsistent_sampling_and_staleness_combos() {
+        let ds = Dataset::load("karate-like", 0, 1).unwrap();
+        let dims = ModelDims { f_in: ds.f_in(), hidden: 8, classes: ds.classes, layers: 3 };
+        let part = RandomPartitioner { seed: 1 }.partition(&ds.graph, 2).unwrap();
+        let wgs = WorkerGraph::build_all(&ds.graph, &part).unwrap();
+        let engines = || -> Vec<Box<dyn WorkerEngine>> {
+            wgs.iter()
+                .map(|w| {
+                    Box::new(NativeWorkerEngine::new(w.clone(), dims)) as Box<dyn WorkerEngine>
+                })
+                .collect()
+        };
+        // one fanout per layer, or a clear error
+        let sc = SamplingConfig {
+            batch_size: 4,
+            fanouts: vec![crate::graph::Fanout::Limit(2); 2],
+        };
+        let opts = TrainerOptions { sampling: Some(sc), ..Default::default() };
+        let err = Trainer::new(&ds, &part, &wgs, engines(), dims, opts).unwrap_err();
+        assert!(err.to_string().contains("fanout"), "{err}");
+        // the overlap pipeline cannot skip refreshes
+        let opts = TrainerOptions { staleness: 1, overlap: true, ..Default::default() };
+        let err = Trainer::new(&ds, &part, &wgs, engines(), dims, opts).unwrap_err();
+        assert!(err.to_string().contains("overlap"), "{err}");
+        // replica reroutes assume every boundary row is in flight
+        let opts = TrainerOptions { staleness: 1, replication: 2, ..Default::default() };
+        let err = Trainer::new(&ds, &part, &wgs, engines(), dims, opts).unwrap_err();
+        assert!(err.to_string().contains("replication"), "{err}");
     }
 }

@@ -12,6 +12,8 @@ pub mod datasets;
 pub mod features;
 pub mod generate;
 pub mod io;
+pub mod sample;
 
 pub use csr::Csr;
 pub use datasets::{Dataset, Split};
+pub use sample::{Fanout, SamplingConfig};

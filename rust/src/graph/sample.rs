@@ -1,0 +1,247 @@
+//! Deterministic mini-batch + fanout neighbor sampling (GraphSAGE-style).
+//!
+//! `mode = sampled` draws one seeded batch of training nodes per epoch and
+//! expands it layer by layer with per-layer fanout caps (CAGNET's sampled
+//! SAGE branch mirrors the same `batch_size`/fanout knobs).  Every draw is
+//! a pure function of `(seed, epoch)` — the batch — or
+//! `(seed, epoch, layer, node)` — that node's neighbor subset — so the
+//! parallel, sequential, and multi-process runtimes sample identically
+//! without sharing any RNG state.
+//!
+//! The sampled node set induces a subgraph (all edges among sampled
+//! nodes), which flows through the unchanged partition/WorkerGraph/
+//! SendPlan machinery: sampled halo exchanges ride the same wire codec,
+//! ledgers, and rate controllers as full-graph training.
+
+use crate::graph::Csr;
+use crate::util::Rng;
+use crate::Result;
+
+/// Per-layer neighbor cap: a positive count, or every neighbor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fanout {
+    /// keep the full neighborhood at this layer ("inf"/"all" in config)
+    All,
+    /// sample at most this many neighbors per frontier node
+    Limit(usize),
+}
+
+impl Fanout {
+    /// Parse a comma-separated fanout list: `"10,10,5"` or `"inf,25"`.
+    /// Entries must be positive integers or `inf`/`all`; the count is
+    /// checked against `layers` by the caller (it owns that context).
+    pub fn parse_list(s: &str) -> Result<Vec<Fanout>> {
+        let t = s.trim();
+        anyhow::ensure!(
+            !t.is_empty(),
+            "fanout must list one entry per layer, e.g. fanout=10,10,5 (or inf)"
+        );
+        t.split(',')
+            .map(|tok| {
+                let tok = tok.trim();
+                match tok {
+                    "inf" | "all" => Ok(Fanout::All),
+                    _ => {
+                        let v: usize = tok.parse().map_err(|_| {
+                            anyhow::anyhow!(
+                                "bad fanout entry {tok:?}: want a positive integer or inf"
+                            )
+                        })?;
+                        anyhow::ensure!(v >= 1, "fanout entries must be >= 1, got {tok:?}");
+                        Ok(Fanout::Limit(v))
+                    }
+                }
+            })
+            .collect()
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Fanout::All => "inf".into(),
+            Fanout::Limit(k) => k.to_string(),
+        }
+    }
+}
+
+/// Everything the sampler needs per run; epoch is passed per draw.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SamplingConfig {
+    pub batch_size: usize,
+    /// one entry per GNN layer, outermost (input-side) hop last
+    pub fanouts: Vec<Fanout>,
+}
+
+const BATCH_TAG: u64 = 0xBA7C_4A11;
+const FANOUT_TAG: u64 = 0xFA40_0075;
+
+/// Draw this epoch's batch of training nodes: `min(batch_size, |train|)`
+/// ids, sorted ascending, a pure function of `(seed, epoch)`.
+pub fn draw_batch(train_mask: &[bool], batch_size: usize, seed: u64, epoch: usize) -> Vec<u32> {
+    let train_ids: Vec<u32> = train_mask
+        .iter()
+        .enumerate()
+        .filter_map(|(i, &t)| t.then_some(i as u32))
+        .collect();
+    let m = batch_size.min(train_ids.len());
+    let mut picks = Vec::with_capacity(m);
+    Rng::new(seed)
+        .derive(BATCH_TAG)
+        .derive(epoch as u64)
+        .sample_indices_into(train_ids.len(), m, &mut picks);
+    let mut batch: Vec<u32> = picks.iter().map(|&i| train_ids[i as usize]).collect();
+    batch.sort_unstable();
+    batch
+}
+
+/// Expand the batch through `fanouts.len()` hops of neighbor sampling and
+/// return the full sampled node set, sorted ascending.  Each frontier
+/// node's neighbor subset is a pure function of
+/// `(seed, epoch, layer, node)`, so the expansion order never matters.
+pub fn sample_nodes(
+    g: &Csr,
+    batch: &[u32],
+    fanouts: &[Fanout],
+    seed: u64,
+    epoch: usize,
+) -> Vec<u32> {
+    let mut visited = vec![false; g.n];
+    let mut frontier: Vec<u32> = batch.to_vec();
+    for &u in &frontier {
+        visited[u as usize] = true;
+    }
+    let mut picks = Vec::new();
+    for (layer, fanout) in fanouts.iter().enumerate() {
+        let mut next = Vec::new();
+        for &u in &frontier {
+            let nbrs = g.neighbors(u as usize);
+            let mut admit = |v: u32| {
+                if !visited[v as usize] {
+                    visited[v as usize] = true;
+                    next.push(v);
+                }
+            };
+            match *fanout {
+                Fanout::Limit(k) if k < nbrs.len() => {
+                    Rng::new(seed)
+                        .derive(FANOUT_TAG)
+                        .derive(epoch as u64)
+                        .derive(layer as u64)
+                        .derive(u as u64)
+                        .sample_indices_into(nbrs.len(), k, &mut picks);
+                    picks.sort_unstable();
+                    for &i in &picks {
+                        admit(nbrs[i as usize]);
+                    }
+                }
+                _ => {
+                    for &v in nbrs {
+                        admit(v);
+                    }
+                }
+            }
+        }
+        next.sort_unstable();
+        frontier = next;
+    }
+    let mut nodes: Vec<u32> =
+        visited.iter().enumerate().filter_map(|(i, &v)| v.then_some(i as u32)).collect();
+    nodes.sort_unstable();
+    nodes
+}
+
+/// Induced subgraph on `nodes` (sorted ascending global ids): local id =
+/// position in `nodes`, edges = every full-graph edge with both endpoints
+/// sampled.  Keeping all intra-sample edges (rather than only sampled
+/// tree edges) preserves symmetry, which the GCN normalization and the
+/// boundary plans both assume.
+pub fn induce(g: &Csr, nodes: &[u32]) -> Csr {
+    let local = |gid: u32| nodes.binary_search(&gid).ok();
+    let mut edges = Vec::new();
+    for (lu, &u) in nodes.iter().enumerate() {
+        for &v in g.neighbors(u as usize) {
+            if u < v {
+                if let Some(lv) = local(v) {
+                    edges.push((lu as u32, lv as u32));
+                }
+            }
+        }
+    }
+    Csr::from_edges(nodes.len(), &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path_graph(n: usize) -> Csr {
+        let edges: Vec<(u32, u32)> = (0..n as u32 - 1).map(|i| (i, i + 1)).collect();
+        Csr::from_edges(n, &edges)
+    }
+
+    #[test]
+    fn fanout_parsing() {
+        assert_eq!(
+            Fanout::parse_list("10, 5,inf").unwrap(),
+            vec![Fanout::Limit(10), Fanout::Limit(5), Fanout::All]
+        );
+        assert_eq!(Fanout::parse_list("all").unwrap(), vec![Fanout::All]);
+        assert!(Fanout::parse_list("").is_err());
+        assert!(Fanout::parse_list("10,zero").is_err());
+        assert!(Fanout::parse_list("10,0").is_err());
+        assert!(Fanout::parse_list("10,-3").is_err());
+        assert_eq!(Fanout::Limit(7).label(), "7");
+        assert_eq!(Fanout::All.label(), "inf");
+    }
+
+    #[test]
+    fn batch_draws_are_deterministic_and_within_mask() {
+        let mask: Vec<bool> = (0..64).map(|i| i % 2 == 0).collect();
+        let a = draw_batch(&mask, 8, 3, 5);
+        let b = draw_batch(&mask, 8, 3, 5);
+        assert_eq!(a, b, "same (seed, epoch) must draw the same batch");
+        assert_eq!(a.len(), 8);
+        assert!(a.windows(2).all(|w| w[0] < w[1]), "sorted, unique");
+        assert!(a.iter().all(|&u| mask[u as usize]), "batch must be training nodes");
+        // different epochs draw different batches (with overwhelming odds)
+        assert_ne!(a, draw_batch(&mask, 8, 3, 6));
+        // oversized requests clamp to the full training set
+        assert_eq!(draw_batch(&mask, 999, 3, 0).len(), 32);
+    }
+
+    #[test]
+    fn infinite_fanout_reaches_the_full_k_hop_neighborhood() {
+        let g = path_graph(10);
+        let nodes = sample_nodes(&g, &[4], &[Fanout::All, Fanout::All], 0, 0);
+        // 2 hops from node 4 on a path: 2..=6
+        assert_eq!(nodes, vec![2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn limited_fanout_bounds_the_expansion() {
+        let g = path_graph(101);
+        for epoch in 0..4 {
+            let nodes = sample_nodes(&g, &[50], &[Fanout::Limit(1), Fanout::Limit(1)], 9, epoch);
+            // each hop admits at most one new node per frontier node
+            assert!(nodes.len() <= 1 + 1 + 1, "{nodes:?}");
+            assert!(nodes.contains(&50));
+            assert_eq!(
+                nodes,
+                sample_nodes(&g, &[50], &[Fanout::Limit(1), Fanout::Limit(1)], 9, epoch),
+                "per-node draws must be deterministic"
+            );
+        }
+    }
+
+    #[test]
+    fn induced_subgraph_keeps_exactly_the_intra_sample_edges() {
+        let g = path_graph(6);
+        let nodes = vec![1u32, 2, 4, 5];
+        let sub = induce(&g, &nodes);
+        assert_eq!(sub.n, 4);
+        // local 0=gid1, 1=gid2, 2=gid4, 3=gid5: edges (1,2) and (4,5) survive
+        assert!(sub.has_edge(0, 1));
+        assert!(sub.has_edge(2, 3));
+        assert!(!sub.has_edge(1, 2), "gid 2-4 are not adjacent in the path");
+        sub.validate().unwrap();
+    }
+}

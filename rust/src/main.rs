@@ -64,6 +64,7 @@ fn print_help() {
          \x20 dataset nodes q partitioner comm compressor model engine\n\
          \x20 artifact_tag artifacts_dir epochs hidden layers optimizer lr\n\
          \x20 seed eval_every drop_prob stale_prob overlap plan replication\n\
+         \x20 mode batch_size fanout staleness\n\
          \n\
          comm spec:  full | none | fixed:R | linear:A | exp | step:E:F\n\
          \x20           | budget:BYTES[:CMAX]\n\
@@ -76,6 +77,15 @@ fn print_help() {
          \x20           bit for bit at full rate, fewer bytes on the wire\n\
          replication: R >= 1 (default 1) — mirror boundary blocks on R\n\
          \x20           machines, charge each fetch to its cheapest replica\n\
+         mode:       full (default) | sampled — sampled draws one seeded\n\
+         \x20           mini-batch of batch_size train nodes per epoch and\n\
+         \x20           trains on the induced neighborhood subgraph\n\
+         fanout:     per-layer neighbor caps \"F1,F2,...\" (len = layers;\n\
+         \x20           \"inf\"/\"all\" = keep every neighbor; empty = inf\n\
+         \x20           everywhere; sampled mode only)\n\
+         staleness:  S >= 0 (default 0) — serve boundary rows from the\n\
+         \x20           historical-embedding cache for up to S epochs\n\
+         \x20           between refreshes; 0 = synchronous exchange\n\
          \n\
          MULTI-PROCESS KEYS (transport=tcp runs):\n\
          \x20 transport driver_addr connect_timeout_ms read_timeout_ms\n\

@@ -77,6 +77,22 @@ pub struct RunReport {
     /// per-rank epoch of the last checkpoint shard that rank acknowledged
     /// (None = that rank never checkpointed; empty for in-process runs)
     pub worker_last_ckpt: Vec<Option<usize>>,
+    /// mini-batches trained (sampled mode: one per epoch; 0 = full mode)
+    pub batches: usize,
+    /// boundary rows served from the historical-embedding cache without
+    /// any communication (staleness > 0 runs; 0 otherwise)
+    pub hist_hits: usize,
+    /// cache reads that found no stored row (the row stayed zero —
+    /// stale-chain semantics; normally 0 outside crash recovery)
+    pub hist_misses: usize,
+    /// boundary rows shipped as `"hist"` refreshes over the wire
+    pub hist_refresh_rows: usize,
+    /// staleness histogram: slot 0 = rows refreshed this epoch, slot a =
+    /// rows served at age a (1 <= a <= S); empty for staleness = 0 runs
+    pub hist_age_hist: Vec<usize>,
+    /// historical caches dropped because a worker crashed and its replays
+    /// restarted from a checkpoint (each reset forces full refreshes)
+    pub stale_cache_resets: usize,
 }
 
 impl RunReport {
@@ -139,6 +155,15 @@ impl RunReport {
             ("engine", Json::str(self.engine.clone())),
             ("model", Json::str(self.model.clone())),
             ("stale_skipped", Json::num(self.stale_skipped as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("hist_hits", Json::num(self.hist_hits as f64)),
+            ("hist_misses", Json::num(self.hist_misses as f64)),
+            ("hist_refresh_rows", Json::num(self.hist_refresh_rows as f64)),
+            (
+                "hist_age_hist",
+                Json::Arr(self.hist_age_hist.iter().map(|&v| Json::num(v as f64)).collect()),
+            ),
+            ("stale_cache_resets", Json::num(self.stale_cache_resets as f64)),
             ("restarts", Json::num(self.restarts as f64)),
             ("recovered_epochs", Json::num(self.recovered_epochs as f64)),
             ("heartbeat_timeouts", Json::num(self.heartbeat_timeouts as f64)),
@@ -276,6 +301,23 @@ impl RunReport {
                 .and_then(|v| v.as_arr())
                 .map(|arr| arr.iter().map(|e| e.as_usize()).collect())
                 .unwrap_or_default(),
+            // reports written before sampled/hist training carry none
+            batches: j.get("batches").and_then(|v| v.as_usize()).unwrap_or(0),
+            hist_hits: j.get("hist_hits").and_then(|v| v.as_usize()).unwrap_or(0),
+            hist_misses: j.get("hist_misses").and_then(|v| v.as_usize()).unwrap_or(0),
+            hist_refresh_rows: j
+                .get("hist_refresh_rows")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0),
+            hist_age_hist: j
+                .get("hist_age_hist")
+                .and_then(|v| v.as_arr())
+                .map(|arr| arr.iter().filter_map(|e| e.as_usize()).collect())
+                .unwrap_or_default(),
+            stale_cache_resets: j
+                .get("stale_cache_resets")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0),
         };
         for r in j.require("records")?.as_arr().unwrap_or(&[]) {
             report.records.push(EpochRecord {
@@ -425,6 +467,40 @@ mod tests {
         assert_eq!(r.stale_skipped, 0);
         assert!(r.link_bytes.is_empty());
         assert!(r.link_rates.is_empty());
+    }
+
+    #[test]
+    fn hist_telemetry_roundtrips() {
+        let mut r = RunReport { algorithm: "varco".into(), q: 2, ..Default::default() };
+        r.batches = 12;
+        r.hist_hits = 40;
+        r.hist_misses = 2;
+        r.hist_refresh_rows = 20;
+        r.hist_age_hist = vec![20, 25, 15];
+        r.stale_cache_resets = 1;
+        let back = RunReport::from_json(&r.to_json()).unwrap();
+        assert_eq!(back.batches, 12);
+        assert_eq!(back.hist_hits, 40);
+        assert_eq!(back.hist_misses, 2);
+        assert_eq!(back.hist_refresh_rows, 20);
+        assert_eq!(back.hist_age_hist, vec![20, 25, 15]);
+        assert_eq!(back.stale_cache_resets, 1);
+    }
+
+    #[test]
+    fn legacy_json_without_hist_telemetry_defaults_zero() {
+        let j = Json::parse(
+            r#"{"algorithm":"full-comm","dataset":"d","partitioner":"p","q":2,
+                "seed":0,"engine":"native","records":[]}"#,
+        )
+        .unwrap();
+        let r = RunReport::from_json(&j).unwrap();
+        assert_eq!(r.batches, 0);
+        assert_eq!(r.hist_hits, 0);
+        assert_eq!(r.hist_misses, 0);
+        assert_eq!(r.hist_refresh_rows, 0);
+        assert!(r.hist_age_hist.is_empty());
+        assert_eq!(r.stale_cache_resets, 0);
     }
 
     #[test]

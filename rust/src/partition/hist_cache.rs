@@ -1,0 +1,438 @@
+//! Historical-embedding halo cache (DistGNN-style delayed remote
+//! aggregates, arXiv 2104.06700) with a hard staleness bound.
+//!
+//! `staleness = S` lets a receiver serve a boundary row from its local
+//! cache for up to `S` epochs after its last refresh; only expired rows
+//! ship (as ledger kind `"hist"`), riding the existing compressor +
+//! error-feedback path.  `S = 0` disables the cache entirely — the
+//! trainer keeps today's synchronous exchange, bit for bit.
+//!
+//! Two pieces, split by which side of the wire they live on:
+//!
+//!  * [`HistTracker`] — the *schedule*: which plan rows expire at each
+//!    epoch.  It is a pure function of the plans and its own state, so
+//!    every party (coordinator, each worker process) evolves an identical
+//!    copy from the shared epoch plan without any extra wire traffic.
+//!  * [`HistCache`] — the *receiver state*: cached rows keyed by
+//!    (layer, global id), hit/miss/age accounting.
+//!
+//! The stale-injection machinery (`FailurePolicy::stale_prob`) is the
+//! semantic oracle: a cache hit returns exactly what a stale-replayed
+//! message would have delivered — the last refreshed payload, decoded.
+//! A unit test below pins that equivalence.
+
+use std::collections::HashMap;
+
+/// One send plan's identity for scheduling: its receiver plus, per plan
+/// row, the global node id and whether the row is real (dense plans pad
+/// with `DISCARD_SLOT` rows the receiver never reads — those never ship
+/// under hist and are never tracked).
+#[derive(Clone, Debug)]
+pub struct PlanRows {
+    pub to: usize,
+    /// global id per plan row, aligned with the plan's `local_rows`
+    pub gids: Vec<u32>,
+    /// `dst_slots[i] != DISCARD_SLOT`, aligned with `gids`
+    pub kept: Vec<bool>,
+}
+
+/// One plan's refresh set for one epoch.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HistPlanSched {
+    /// positions (into the plan's row list) that ship this epoch, sorted
+    /// ascending; empty = the whole message is skipped
+    pub ship: Vec<u32>,
+    /// global id per plan row (the receiver keys its cache by these)
+    pub gids: Vec<u32>,
+}
+
+/// The full refresh schedule for one epoch: `plans[sender][layer][i]`
+/// mirrors the trainer's `WorkerData::plans` indexing, so both sides of
+/// every exchange read the same entry.
+#[derive(Clone, Debug, Default)]
+pub struct HistSchedule {
+    pub plans: Vec<Vec<Vec<HistPlanSched>>>,
+}
+
+impl HistSchedule {
+    /// Senders in `candidates` whose plan `plan_of(from)` ships at least
+    /// one row this epoch — the hist-aware expected-sender filter for the
+    /// multi-process blocking receive.
+    pub fn live_senders(
+        &self,
+        layer: usize,
+        candidates: &[usize],
+        mut plan_of: impl FnMut(usize) -> usize,
+    ) -> Vec<usize> {
+        candidates
+            .iter()
+            .copied()
+            .filter(|&from| !self.plans[from][layer][plan_of(from)].ship.is_empty())
+            .collect()
+    }
+}
+
+/// Replicated refresh scheduler: `(receiver, layer, gid) -> last refresh
+/// epoch`.  A row ships when it has never shipped or its age reaches
+/// `staleness + 1`; with static plans that degenerates to a global
+/// period-(S+1) cadence, and with per-epoch sampled plans it refreshes
+/// exactly the rows whose bound expired.
+pub struct HistTracker {
+    staleness: usize,
+    last: HashMap<(usize, usize, u32), usize>,
+}
+
+impl HistTracker {
+    pub fn new(staleness: usize) -> HistTracker {
+        HistTracker { staleness, last: HashMap::new() }
+    }
+
+    pub fn staleness(&self) -> usize {
+        self.staleness
+    }
+
+    /// Advance to `epoch`: decide every plan row's ship/serve fate and
+    /// record the refreshes.  `plans[sender][layer][i]` must use the same
+    /// indexing as the trainer's per-worker plan lists.  Deterministic:
+    /// the map is only probed per row, never iterated.
+    pub fn schedule(&mut self, epoch: usize, plans: &[Vec<Vec<PlanRows>>]) -> HistSchedule {
+        let out = plans
+            .iter()
+            .map(|layers| {
+                layers
+                    .iter()
+                    .enumerate()
+                    .map(|(layer, plist)| {
+                        plist
+                            .iter()
+                            .map(|p| {
+                                let mut ship = Vec::new();
+                                for (i, (&gid, &kept)) in p.gids.iter().zip(&p.kept).enumerate() {
+                                    if !kept {
+                                        continue;
+                                    }
+                                    let key = (p.to, layer, gid);
+                                    let due = match self.last.get(&key) {
+                                        None => true,
+                                        Some(&e) => epoch >= e + self.staleness + 1,
+                                    };
+                                    if due {
+                                        self.last.insert(key, epoch);
+                                        ship.push(i as u32);
+                                    }
+                                }
+                                HistPlanSched { ship, gids: p.gids.clone() }
+                            })
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        HistSchedule { plans: out }
+    }
+
+    /// Forget all refresh history (crash recovery rewind): the next
+    /// schedule refreshes everything, like epoch 0.
+    pub fn clear(&mut self) {
+        self.last.clear();
+    }
+}
+
+/// Cumulative cache counters.  `ages[k]` counts boundary-row reads served
+/// at age `k`: index 0 = refreshed this epoch (shipped), `1..=S` = cache
+/// hits — the staleness histogram surfaced in `RunReport`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HistStats {
+    pub hits: usize,
+    pub misses: usize,
+    pub refresh_rows: usize,
+    pub ages: Vec<usize>,
+}
+
+impl HistStats {
+    fn bump_age(&mut self, age: usize) {
+        if self.ages.len() <= age {
+            self.ages.resize(age + 1, 0);
+        }
+        self.ages[age] += 1;
+    }
+
+    pub fn merge(&mut self, other: &HistStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.refresh_rows += other.refresh_rows;
+        if self.ages.len() < other.ages.len() {
+            self.ages.resize(other.ages.len(), 0);
+        }
+        for (a, &b) in self.ages.iter_mut().zip(&other.ages) {
+            *a += b;
+        }
+    }
+
+    /// Counters accumulated since `base` (per-epoch deltas for the dist
+    /// Outcome; `base` must be an earlier snapshot of `self`).
+    pub fn since(&self, base: &HistStats) -> HistStats {
+        let mut ages = self.ages.clone();
+        for (a, &b) in ages.iter_mut().zip(&base.ages) {
+            *a -= b;
+        }
+        HistStats {
+            hits: self.hits - base.hits,
+            misses: self.misses - base.misses,
+            refresh_rows: self.refresh_rows - base.refresh_rows,
+            ages,
+        }
+    }
+}
+
+/// Per-receiver historical-embedding store: the last refreshed value of
+/// every boundary row this worker has ever received, keyed (layer, gid).
+#[derive(Default)]
+pub struct HistCache {
+    rows: HashMap<(usize, u32), (usize, Vec<f32>)>,
+    pub stats: HistStats,
+}
+
+impl HistCache {
+    pub fn new() -> HistCache {
+        HistCache::default()
+    }
+
+    /// Store a freshly refreshed row (what the wire just delivered, after
+    /// decompression — so hits replay exactly the decoded payload).
+    pub fn insert(&mut self, layer: usize, gid: u32, epoch: usize, row: &[f32]) {
+        self.rows.insert((layer, gid), (epoch, row.to_vec()));
+        self.stats.refresh_rows += 1;
+        self.stats.bump_age(0);
+    }
+
+    /// Serve a within-bound read from the cache.  Returns `false` (and
+    /// leaves `out` untouched — the caller's zeros stand, mirroring a
+    /// dropped payload) when the row was never cached, which can happen
+    /// right after a recovery rewind cleared the store.
+    pub fn serve(&mut self, layer: usize, gid: u32, epoch: usize, out: &mut [f32]) -> bool {
+        match self.rows.get(&(layer, gid)) {
+            Some((at, row)) => {
+                out.copy_from_slice(row);
+                self.stats.hits += 1;
+                self.stats.bump_age(epoch.saturating_sub(*at));
+                true
+            }
+            None => {
+                self.stats.misses += 1;
+                false
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Drop every cached row (crash recovery rewind).  Stats survive —
+    /// they are cumulative run telemetry, not cache contents.
+    pub fn clear(&mut self) {
+        self.rows.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{Fabric, FailurePolicy, LedgerMode, Message, MessageKind};
+
+    fn one_plan(to: usize, gids: Vec<u32>, kept: Vec<bool>) -> Vec<Vec<Vec<PlanRows>>> {
+        vec![vec![vec![PlanRows { to, gids, kept }]]]
+    }
+
+    #[test]
+    fn static_plans_refresh_on_a_period_of_s_plus_1() {
+        let plans = one_plan(1, vec![10, 11, 12], vec![true; 3]);
+        let mut tr = HistTracker::new(2);
+        assert_eq!(tr.staleness(), 2);
+        for epoch in 0..7 {
+            let sched = &tr.schedule(epoch, &plans).plans[0][0][0];
+            if epoch % 3 == 0 {
+                assert_eq!(sched.ship, vec![0, 1, 2], "epoch {epoch}: full refresh");
+            } else {
+                assert!(sched.ship.is_empty(), "epoch {epoch}: all rows within bound");
+            }
+            assert_eq!(sched.gids, vec![10, 11, 12]);
+        }
+        // a rewind forgets history: the next epoch refreshes everything
+        tr.clear();
+        assert_eq!(tr.schedule(7, &plans).plans[0][0][0].ship, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn discard_rows_never_ship_and_receivers_are_independent() {
+        // dense-plan padding (kept = false) must not enter the schedule,
+        // and the same gid going to two receivers is tracked per receiver
+        let plans = vec![vec![vec![
+            PlanRows { to: 1, gids: vec![5, 6], kept: vec![true, false] },
+            PlanRows { to: 2, gids: vec![5], kept: vec![true] },
+        ]]];
+        let mut tr = HistTracker::new(1);
+        let s0 = tr.schedule(0, &plans);
+        assert_eq!(s0.plans[0][0][0].ship, vec![0], "padding row must not ship");
+        assert_eq!(s0.plans[0][0][1].ship, vec![0], "second receiver refreshes too");
+        // receiver 2 only: simulate a sampled epoch where the plan to 1
+        // disappears — receiver 2's clock must be unaffected
+        let only2 = vec![vec![vec![PlanRows { to: 2, gids: vec![5], kept: vec![true] }]]];
+        assert!(tr.schedule(1, &only2).plans[0][0][0].ship.is_empty());
+        assert_eq!(tr.schedule(2, &only2).plans[0][0][0].ship, vec![0]);
+    }
+
+    #[test]
+    fn changing_row_sets_refresh_only_new_or_expired_rows() {
+        let mut tr = HistTracker::new(2);
+        let a = one_plan(1, vec![1, 2], vec![true; 2]);
+        assert_eq!(tr.schedule(0, &a).plans[0][0][0].ship, vec![0, 1]);
+        // epoch 1 samples a different boundary: row 2 is fresh, row 3 new
+        let b = one_plan(1, vec![2, 3], vec![true; 2]);
+        assert_eq!(tr.schedule(1, &b).plans[0][0][0].ship, vec![1], "only the unseen gid ships");
+        // epoch 3: gid 2 (last refreshed at 0) expired, gid 3 (at 1) has not
+        let sched = tr.schedule(3, &b);
+        assert_eq!(sched.plans[0][0][0].ship, vec![0]);
+    }
+
+    #[test]
+    fn live_senders_filters_empty_refreshes() {
+        let plans = vec![
+            vec![vec![PlanRows { to: 2, gids: vec![1], kept: vec![true] }]],
+            vec![vec![PlanRows { to: 2, gids: vec![9], kept: vec![true] }]],
+            vec![vec![]],
+        ];
+        let mut tr = HistTracker::new(1);
+        let s0 = tr.schedule(0, &plans);
+        assert_eq!(s0.live_senders(0, &[0, 1], |_| 0), vec![0, 1]);
+        let s1 = tr.schedule(1, &plans);
+        assert_eq!(s1.live_senders(0, &[0, 1], |_| 0), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn cache_serves_hits_tracks_ages_and_survives_clear() {
+        let mut c = HistCache::new();
+        assert!(c.is_empty());
+        c.insert(0, 7, 0, &[1.0, 2.0]);
+        assert_eq!(c.len(), 1);
+        let mut out = [0.0f32; 2];
+        assert!(c.serve(0, 7, 2, &mut out), "within-bound read is a hit");
+        assert_eq!(out, [1.0, 2.0]);
+        assert!(!c.serve(1, 7, 2, &mut [0.0; 2]), "other layer is uncached");
+        assert!(!c.serve(0, 8, 2, &mut [0.0; 2]), "other gid is uncached");
+        // age histogram: one refresh (age 0), one hit at age 2
+        assert_eq!(c.stats, HistStats { hits: 1, misses: 2, refresh_rows: 1, ages: vec![1, 0, 1] });
+        // a rewind clears contents but keeps cumulative telemetry
+        c.clear();
+        assert!(c.is_empty());
+        assert!(!c.serve(0, 7, 3, &mut out), "cleared rows miss");
+        assert_eq!(c.stats.misses, 3);
+    }
+
+    #[test]
+    fn stats_merge_and_delta() {
+        let mut a = HistStats { hits: 2, misses: 1, refresh_rows: 4, ages: vec![4, 2] };
+        let base = a.clone();
+        a.merge(&HistStats { hits: 1, misses: 0, refresh_rows: 2, ages: vec![2, 0, 1] });
+        assert_eq!(a, HistStats { hits: 3, misses: 1, refresh_rows: 6, ages: vec![6, 2, 1] });
+        assert_eq!(
+            a.since(&base),
+            HistStats { hits: 1, misses: 0, refresh_rows: 2, ages: vec![2, 0, 1] }
+        );
+    }
+
+    /// The stale-injection machinery is the oracle for what a bounded-
+    /// staleness read returns: a cache hit must reproduce exactly the
+    /// payload a `stale_prob = 1` channel would have replayed — the last
+    /// refreshed transmission, decoded through the same codec.
+    #[test]
+    fn cache_hit_matches_stale_replay_oracle() {
+        let comp = crate::compress::by_name("subset").unwrap();
+        let fabric = Fabric::with_policy_and_ledger(
+            2,
+            FailurePolicy { drop_prob: 0.0, stale_prob: 1.0, seed: 9 },
+            LedgerMode::Detailed,
+        );
+        let mut eps = fabric.endpoints();
+        let kind = MessageKind::HistRefresh { layer: 0 };
+        let f = 8usize;
+        let v1: Vec<f32> = (0..f).map(|i| i as f32 * 0.5 - 1.0).collect();
+        let v2: Vec<f32> = (0..f).map(|i| i as f32 * -0.25 + 3.0).collect();
+        let send = |eps: &mut Vec<crate::comm::Endpoint>, epoch: usize, vals: &[f32], key: u64| {
+            let payload = comp.compress(vals, 2.0, key);
+            eps[0].send(epoch, Message { from: 0, to: 1, via: None, kind, payload });
+        };
+        // epoch 0: first transmission passes through; the receiver caches
+        // the decoded row — this is the "last refresh"
+        send(&mut eps, 0, &v1, 41);
+        let msg = eps[1].recv_all().pop().unwrap();
+        let mut decoded1 = vec![0.0f32; f];
+        comp.decompress(&msg.payload, &mut decoded1);
+        let mut cache = HistCache::new();
+        cache.insert(0, 123, 0, &decoded1);
+        // epoch 1: the channel is certainly stale — it replays epoch 0's
+        // payload even though the sender encoded fresh values
+        send(&mut eps, 1, &v2, 42);
+        let msg = eps[1].recv_all().pop().unwrap();
+        assert_eq!(fabric.staled(), 1, "the oracle must actually replay");
+        let mut replayed = vec![0.0f32; f];
+        comp.decompress(&msg.payload, &mut replayed);
+        let mut served = vec![0.0f32; f];
+        assert!(cache.serve(0, 123, 1, &mut served));
+        assert_eq!(served, replayed, "cache hit == stale-replay oracle");
+    }
+
+    /// Satellite invariant: cache hits charge zero wire bytes, refreshes
+    /// charge their exact wire bytes under ledger kind "hist", and the
+    /// budget controllers' feedback views account them consistently in
+    /// both ledger modes — the link view (`breakdown_by_link_excluding`
+    /// removes only "weights") keeps "hist" inside the halo traffic in
+    /// detailed mode, and aggregated mode preserves the exact per-kind
+    /// and per-epoch totals the byte-budget controller feeds on.
+    #[test]
+    fn hist_ledger_kind_accounts_refreshes_and_only_refreshes() {
+        for mode in [LedgerMode::Detailed, LedgerMode::Aggregated] {
+            let fabric = Fabric::with_policy_and_ledger(2, FailurePolicy::default(), mode);
+            let mut eps = fabric.endpoints();
+            let comp = crate::compress::by_name("subset").unwrap();
+            let payload = comp.compress(&[1.0, -2.0, 3.0, 4.0], 2.0, 7);
+            let wire = payload.wire_bytes();
+            eps[0].send(
+                0,
+                Message {
+                    from: 0,
+                    to: 1,
+                    via: None,
+                    kind: MessageKind::HistRefresh { layer: 1 },
+                    payload,
+                },
+            );
+            eps[1].recv_all();
+            // a cache hit is purely local: no send, no charge
+            let mut cache = HistCache::new();
+            cache.insert(1, 9, 0, &[1.0; 4]);
+            assert!(cache.serve(1, 9, 1, &mut [0.0; 4]));
+            let ledger = fabric.merged_ledger();
+            assert_eq!(ledger.total_bytes(), wire, "refresh charges exact wire bytes");
+            assert_eq!(ledger.breakdown_by_kind()["hist"], wire);
+            let cell = ledger.by_epoch_kind()[&(0, "hist")];
+            assert_eq!((cell.bytes, cell.messages), (wire, 1), "the hit added no message");
+            let halo = ledger.breakdown_by_link_excluding("weights");
+            match mode {
+                LedgerMode::Detailed => {
+                    assert_eq!(halo[&(0, 1)].bytes, wire, "hist stays in the halo link view");
+                    assert_eq!(halo[&(0, 1)].messages, 1);
+                }
+                // aggregated shards drop link identity by design; callers
+                // fall back to the per-kind totals asserted above
+                LedgerMode::Aggregated => assert!(halo.is_empty()),
+            }
+            assert!(ledger.verify_conservation());
+        }
+    }
+}

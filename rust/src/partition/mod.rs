@@ -11,12 +11,14 @@
 //! static AOT shapes require.
 
 pub mod hash;
+pub mod hist_cache;
 pub mod metis_like;
 pub mod random;
 pub mod replication;
 pub mod stats;
 pub mod worker_graph;
 
+pub use hist_cache::{HistCache, HistPlanSched, HistSchedule, HistStats, HistTracker, PlanRows};
 pub use replication::{assign_routes, replica_holders, MirrorPlan};
 pub use stats::PartitionStats;
 pub use worker_graph::{plan_stats, PlanMode, PlanStats, SendPlan, WorkerGraph, DISCARD_SLOT};
@@ -45,6 +47,20 @@ impl Partition {
         let want = assignment.len() / q;
         for (p, &c) in counts.iter().enumerate() {
             anyhow::ensure!(c == want, "part {p} has {c} nodes, want {want}");
+        }
+        Ok(Partition { q, assignment })
+    }
+
+    /// A partition with no balance requirement — the restriction of a
+    /// full-graph partition to a sampled node subset, where a batch rarely
+    /// touches every part equally (a part may even be empty).  Sampled
+    /// induced views go through here; the full-graph path keeps
+    /// [`Partition::new`]'s exactly-equal contract.
+    pub fn new_unbalanced(q: usize, assignment: Vec<u32>) -> Result<Partition> {
+        anyhow::ensure!(q >= 1, "q must be >= 1");
+        anyhow::ensure!(!assignment.is_empty(), "empty assignment");
+        for &p in &assignment {
+            anyhow::ensure!((p as usize) < q, "part id {p} out of range");
         }
         Ok(Partition { q, assignment })
     }
@@ -106,6 +122,18 @@ mod tests {
         assert!(Partition::new(2, vec![0, 0, 0, 1]).is_err());
         assert!(Partition::new(2, vec![0, 0, 2, 1]).is_err());
         assert!(Partition::new(2, vec![0, 0, 1]).is_err());
+    }
+
+    #[test]
+    fn unbalanced_partition_skips_only_the_balance_check() {
+        // a sampled batch's induced view: 3 nodes over q=2, one part heavy
+        let p = Partition::new_unbalanced(2, vec![0, 0, 1]).unwrap();
+        assert_eq!(p.parts(), vec![vec![0, 1], vec![2]]);
+        // empty parts are fine (the batch missed worker 1 entirely)...
+        assert!(Partition::new_unbalanced(2, vec![0, 0]).is_ok());
+        // ...but range and non-emptiness still hold
+        assert!(Partition::new_unbalanced(2, vec![0, 2]).is_err());
+        assert!(Partition::new_unbalanced(2, vec![]).is_err());
     }
 
     #[test]

@@ -1,0 +1,151 @@
+//! Per-epoch mini-batch views for `mode = sampled`.
+//!
+//! Each training epoch draws one deterministic batch of training nodes,
+//! expands it with per-layer fanout sampling, and materializes the
+//! induced subgraph as a complete [`Dataset`] + [`Partition`] +
+//! [`WorkerGraph`] stack — the same types the full-graph trainer runs
+//! on.  Nothing downstream (send plans, wire codec, ledgers, rate
+//! controllers) knows it is looking at a sample: the view is just a
+//! smaller graph whose part assignment is inherited from the full-graph
+//! partition, so every sampled node stays on the worker that owns it and
+//! sampled halo exchanges travel the same links the full exchanges would.
+//!
+//! Determinism: the view is a pure function of
+//! `(full dataset, assignment, q, sampling config, seed, epoch)` — no
+//! RNG state carries across epochs — so the sequential, parallel, and
+//! multi-process runtimes rebuild bit-identical views independently.
+
+use crate::graph::sample::{draw_batch, induce, sample_nodes, SamplingConfig};
+use crate::graph::{Dataset, Split};
+use crate::partition::{Partition, WorkerGraph};
+use crate::tensor::Matrix;
+use crate::Result;
+
+/// One epoch's sampled world: the induced dataset plus the restricted
+/// partition and its worker graphs, ready for `RunSetup::build`.
+pub struct MinibatchView {
+    /// this epoch's training nodes (global ids, sorted)
+    pub batch: Vec<u32>,
+    /// every sampled node (global ids, sorted); local id in the view =
+    /// position here, so `nodes[local]` maps view rows back to the full
+    /// graph (the historical cache keys its rows by these global ids)
+    pub nodes: Vec<u32>,
+    pub dataset: Dataset,
+    pub partition: Partition,
+    pub worker_graphs: Vec<WorkerGraph>,
+}
+
+/// Build epoch `epoch`'s view.  `assignment` is the *full-graph* part
+/// assignment; the view restricts it to the sampled nodes (unbalanced —
+/// a batch rarely covers every part equally).
+pub fn build_view(
+    full: &Dataset,
+    assignment: &[u32],
+    q: usize,
+    sampling: &SamplingConfig,
+    seed: u64,
+    epoch: usize,
+) -> Result<MinibatchView> {
+    anyhow::ensure!(assignment.len() == full.n(), "assignment size mismatch");
+    let batch = draw_batch(&full.split.train, sampling.batch_size, seed, epoch);
+    anyhow::ensure!(!batch.is_empty(), "dataset {} has no training nodes to sample", full.name);
+    let nodes = sample_nodes(&full.graph, &batch, &sampling.fanouts, seed, epoch);
+    let graph = induce(&full.graph, &nodes);
+
+    let f = full.f_in();
+    let mut features = Matrix::zeros(nodes.len(), f);
+    let mut labels = Vec::with_capacity(nodes.len());
+    // only batch nodes train on the view; sampled support nodes exist to
+    // feed aggregation, and eval stays on the full graph
+    let mut train = vec![false; nodes.len()];
+    for (local, &gid) in nodes.iter().enumerate() {
+        features.row_mut(local).copy_from_slice(full.features.row(gid as usize));
+        labels.push(full.labels[gid as usize]);
+        train[local] = batch.binary_search(&gid).is_ok();
+    }
+    let dataset = Dataset {
+        name: full.name.clone(),
+        graph,
+        features,
+        labels,
+        classes: full.classes,
+        split: Split { train, val: vec![false; nodes.len()], test: vec![false; nodes.len()] },
+    };
+
+    let local_assignment: Vec<u32> = nodes.iter().map(|&gid| assignment[gid as usize]).collect();
+    let partition = Partition::new_unbalanced(q, local_assignment)?;
+    let worker_graphs = WorkerGraph::build_all(&dataset.graph, &partition)?;
+    Ok(MinibatchView { batch, nodes, dataset, partition, worker_graphs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Fanout;
+
+    fn cfg(batch_size: usize, fanouts: Vec<Fanout>) -> SamplingConfig {
+        SamplingConfig { batch_size, fanouts }
+    }
+
+    fn karate() -> Dataset {
+        Dataset::load("karate-like", 0, 7).unwrap()
+    }
+
+    #[test]
+    fn views_are_pure_functions_of_seed_and_epoch() {
+        let ds = karate();
+        let assign: Vec<u32> = (0..ds.n() as u32).map(|i| i % 2).collect();
+        let sc = cfg(8, vec![Fanout::Limit(3), Fanout::Limit(3)]);
+        let a = build_view(&ds, &assign, 2, &sc, 11, 4).unwrap();
+        let b = build_view(&ds, &assign, 2, &sc, 11, 4).unwrap();
+        assert_eq!(a.batch, b.batch);
+        assert_eq!(a.nodes, b.nodes);
+        assert_eq!(a.dataset.features.data, b.dataset.features.data);
+        assert_eq!(a.partition.assignment, b.partition.assignment);
+        // different epochs sample different views
+        let c = build_view(&ds, &assign, 2, &sc, 11, 5).unwrap();
+        assert_ne!(a.batch, c.batch);
+    }
+
+    #[test]
+    fn view_gathers_rows_and_marks_only_the_batch_as_train() {
+        let ds = karate();
+        let assign: Vec<u32> = (0..ds.n() as u32).map(|i| i % 2).collect();
+        let v = build_view(&ds, &assign, 2, &cfg(4, vec![Fanout::All]), 3, 0).unwrap();
+        assert_eq!(v.dataset.n(), v.nodes.len());
+        assert_eq!(v.worker_graphs.len(), 2);
+        let n_train = v.dataset.split.train.iter().filter(|&&t| t).count();
+        assert_eq!(n_train, v.batch.len());
+        assert_eq!(v.batch.len(), 4);
+        for (local, &gid) in v.nodes.iter().enumerate() {
+            let g = gid as usize;
+            assert_eq!(v.dataset.features.row(local), ds.features.row(g), "row gather");
+            assert_eq!(v.dataset.labels[local], ds.labels[g]);
+            assert_eq!(v.partition.assignment[local], assign[g], "ownership inherited");
+            assert_eq!(
+                v.dataset.split.train[local],
+                v.batch.binary_search(&gid).is_ok(),
+                "train = batch membership"
+            );
+            assert!(!v.dataset.split.val[local] && !v.dataset.split.test[local]);
+        }
+        // every batch node is a training node of the full graph
+        assert!(v.batch.iter().all(|&u| ds.split.train[u as usize]));
+    }
+
+    #[test]
+    fn batch_covering_all_train_nodes_with_inf_fanout_is_the_training_halo() {
+        // the S=0 equivalence fixture: batch = every training node,
+        // fanout = inf per layer; the view is then the full k-hop closure
+        // of the training set, with train masks matching the full graph's
+        let ds = karate();
+        let assign: Vec<u32> = (0..ds.n() as u32).map(|i| i % 2).collect();
+        let n_train = ds.split.train.iter().filter(|&&t| t).count();
+        let v =
+            build_view(&ds, &assign, 2, &cfg(ds.n(), vec![Fanout::All, Fanout::All]), 9, 2).unwrap();
+        assert_eq!(v.batch.len(), n_train, "oversized batch clamps to |train|");
+        for (local, &gid) in v.nodes.iter().enumerate() {
+            assert_eq!(v.dataset.split.train[local], ds.split.train[gid as usize]);
+        }
+    }
+}

@@ -6,6 +6,7 @@
 //! parser reassigns ids (see /opt/xla-example/README.md).
 
 pub mod hlo_stats;
+pub mod minibatch;
 
 #[cfg(feature = "pjrt")]
 use crate::tensor::Matrix;

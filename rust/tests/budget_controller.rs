@@ -5,6 +5,7 @@
 //! now with the budget as an input measured in encoded wire bytes.
 
 use varco::compress::{BudgetController, CommMode, Scheduler};
+use varco::config::{build_trainer, TrainConfig};
 use varco::coordinator::{Trainer, TrainerOptions};
 use varco::engine::native::NativeWorkerEngine;
 use varco::engine::{ModelDims, WorkerEngine};
@@ -84,4 +85,81 @@ fn budget_at_fixed4_spend_matches_or_beats_fixed4_loss() {
         rates.last().copied().unwrap_or(f32::MAX) < rates[0],
         "rates never descended: {rates:?}"
     );
+}
+
+/// The historical-embedding cache's accounting contract, end to end:
+/// cache hits charge zero bytes (a served row never touches the wire),
+/// refreshes charge exact wire bytes, and the aggregated ledger — the
+/// budget controllers' feedback path — sees the identical per-(epoch,
+/// kind) cells the detailed ledger does, so `ledger=aggregated` and
+/// `ledger=detailed` runs train bitwise identically under staleness.
+#[test]
+fn hist_refreshes_account_consistently_under_aggregated_ledger() {
+    let build = |ledger: &str| {
+        let cfg = TrainConfig {
+            dataset: "karate-like".into(),
+            q: 2,
+            hidden: 8,
+            layers: 3,
+            epochs: 6,
+            seed: 7,
+            lr: 0.02,
+            comm: "fixed:2".into(),
+            staleness: 2,
+            ledger: ledger.into(),
+            ..Default::default()
+        };
+        build_trainer(&cfg).unwrap()
+    };
+    let mut td = build("detailed");
+    let mut ta = build("aggregated");
+    let rd = td.run().unwrap();
+    let ra = ta.run().unwrap();
+
+    assert_eq!(td.weights.flatten(), ta.weights.flatten(), "weights must match bit for bit");
+    assert_eq!(td.ledger().total_bytes(), ta.ledger().total_bytes());
+    assert_eq!(td.ledger().breakdown_by_kind(), ta.ledger().breakdown_by_kind());
+    assert_eq!(td.ledger().by_epoch_kind(), ta.ledger().by_epoch_kind());
+    assert_eq!(rd.hist_hits, ra.hist_hits);
+    assert!(ra.hist_hits > 0, "staleness=2 must serve cached rows");
+
+    // refreshes charge exact wire bytes: the per-entry sum of kind "hist"
+    // in the detailed ledger equals the aggregated run's "hist" total
+    let hist_entry_sum: usize = td
+        .ledger()
+        .entries()
+        .iter()
+        .filter(|e| e.kind == "hist")
+        .map(|e| e.bytes)
+        .sum();
+    assert!(hist_entry_sum > 0, "refreshes must flow");
+    assert_eq!(hist_entry_sum, ta.ledger().breakdown_by_kind()["hist"]);
+
+    // cache hits charge zero bytes: with full-graph static plans the
+    // schedule ships whole refreshes on a period of staleness+1, so the
+    // epochs in between must carry NO halo bytes at all (only the
+    // weight-sync constant)
+    let cells = ta.ledger().by_epoch_kind();
+    for epoch in 0..6usize {
+        let halo: usize = cells
+            .iter()
+            .filter(|(&(e, k), _)| e == epoch && k != "weights")
+            .map(|(_, c)| c.bytes)
+            .sum();
+        let refresh_epoch = epoch % 3 == 0; // staleness 2 -> period 3
+        assert_eq!(
+            halo > 0,
+            refresh_epoch,
+            "epoch {epoch}: halo bytes {halo} vs refresh_epoch={refresh_epoch}"
+        );
+    }
+
+    // link-aware feedback: the detailed run's per-link cells carry the
+    // hist refresh traffic on the links it actually crossed
+    let links = td.ledger().breakdown_by_link_excluding("weights");
+    let link_sum: usize = links.values().map(|c| c.bytes).sum();
+    let kinds = td.ledger().breakdown_by_kind();
+    let halo_total: usize =
+        kinds.iter().filter(|(&k, _)| k != "weights").map(|(_, &b)| b).sum();
+    assert_eq!(link_sum, halo_total, "per-link cells must cover every halo byte, hist included");
 }

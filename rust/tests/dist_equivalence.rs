@@ -152,6 +152,131 @@ fn tcp_matches_inproc_for_closed_loop_budgets() {
 }
 
 #[test]
+fn sampled_tcp_matches_inproc_bitwise() {
+    // mini-batch draws, fanout masks, and the historical-refresh schedule
+    // are all pure functions of (config, seed, epoch): every worker
+    // process rebuilds the same per-epoch view the in-process trainer
+    // installs, so sampled runs must agree bitwise across transports
+    for staleness in [0usize, 2] {
+        let dir = TempDir::new().unwrap();
+        let mut cfg = base_cfg("sage", "sparse", &dir);
+        cfg.mode = "sampled".into();
+        cfg.batch_size = 8;
+        cfg.fanout = "4,inf".into(); // layers = 2 in base_cfg
+        cfg.staleness = staleness;
+        cfg.epochs = 4;
+        let mut trainer = build_trainer(&cfg).expect("inproc trainer");
+        let inproc_report = trainer.run().expect("inproc run");
+        let dist = run_tcp(&cfg);
+        assert_weights_bitwise(&dist.weights, &trainer.weights);
+        assert_reports_match(&dist.report, &inproc_report);
+        assert_eq!(dist.report.batches, 4, "staleness={staleness}: one batch per epoch");
+        assert_eq!(dist.report.hist_hits, inproc_report.hist_hits, "staleness={staleness}");
+        assert_eq!(dist.report.hist_misses, inproc_report.hist_misses, "staleness={staleness}");
+        assert_eq!(
+            dist.report.hist_refresh_rows, inproc_report.hist_refresh_rows,
+            "staleness={staleness}"
+        );
+        assert_eq!(
+            dist.report.hist_age_hist, inproc_report.hist_age_hist,
+            "staleness={staleness}"
+        );
+        if staleness > 0 {
+            assert!(
+                dist.report.hist_refresh_rows > 0,
+                "staleness={staleness}: refreshes must flow"
+            );
+        }
+    }
+}
+
+#[test]
+fn crash_recovery_surfaces_stale_cache_resets() {
+    // ROADMAP item 1 regression: the stale-replay payload cache dies with
+    // a crashed worker (and every survivor resets on Rewind), which makes
+    // the replay non-bitwise — the report must surface that the recovery
+    // reset replay-affecting caches instead of silently pretending the
+    // rewind was exact
+    let dir = TempDir::new().unwrap();
+    let mut cfg = base_cfg("sage", "sparse", &dir);
+    cfg.stale_prob = 0.3;
+    cfg.epochs = 6;
+    cfg.ckpt_every = 1;
+    cfg.crash_at = "3:1".into();
+    cfg.max_restarts = 1;
+    cfg.heartbeat_ms = 50;
+    cfg.heartbeat_timeout_ms = 2_000;
+
+    let mut tcfg = cfg.clone();
+    tcfg.transport = "tcp".into();
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind test listener");
+    tcfg.driver_addr = listener.local_addr().unwrap().to_string();
+
+    let cfg0 = tcfg.clone();
+    let w0 = thread::spawn(move || {
+        run_worker(&cfg0, 0, WorkerOptions { crash: CrashBehavior::Return })
+    });
+    let cfg1 = tcfg.clone();
+    let w1 = thread::spawn(move || -> varco::Result<()> {
+        run_worker(&cfg1, 1, WorkerOptions { crash: CrashBehavior::Return })?;
+        let mut recfg = cfg1.clone();
+        recfg.crash_at = String::new();
+        run_worker(&recfg, 1, WorkerOptions { crash: CrashBehavior::Return })
+    });
+
+    let dist = run_driver(
+        &tcfg,
+        DriverOptions { listener: Some(listener), spawn_workers: false, resume: false },
+    )
+    .expect("driver survives the crash");
+    w0.join().unwrap().expect("worker 0");
+    w1.join().unwrap().expect("worker 1 (including its reincarnation)");
+
+    assert_eq!(dist.report.restarts, 1);
+    assert_eq!(dist.report.records.len(), 6, "the run still completes every epoch");
+    assert!(
+        dist.report.stale_cache_resets >= 1,
+        "a crash under stale replay must be reported as a cache reset (got {})",
+        dist.report.stale_cache_resets
+    );
+
+    // control: the same crash with no stale replay and no historical
+    // cache resets nothing replay-affecting
+    let dir2 = TempDir::new().unwrap();
+    let mut quiet = base_cfg("sage", "sparse", &dir2);
+    quiet.epochs = 4;
+    quiet.ckpt_every = 1;
+    quiet.crash_at = "2:1".into();
+    quiet.max_restarts = 1;
+    quiet.heartbeat_ms = 50;
+    quiet.heartbeat_timeout_ms = 2_000;
+    let mut qcfg = quiet.clone();
+    qcfg.transport = "tcp".into();
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind test listener");
+    qcfg.driver_addr = listener.local_addr().unwrap().to_string();
+    let q0 = qcfg.clone();
+    let w0 = thread::spawn(move || {
+        run_worker(&q0, 0, WorkerOptions { crash: CrashBehavior::Return })
+    });
+    let q1 = qcfg.clone();
+    let w1 = thread::spawn(move || -> varco::Result<()> {
+        run_worker(&q1, 1, WorkerOptions { crash: CrashBehavior::Return })?;
+        let mut recfg = q1.clone();
+        recfg.crash_at = String::new();
+        run_worker(&recfg, 1, WorkerOptions { crash: CrashBehavior::Return })
+    });
+    let quiet_run = run_driver(
+        &qcfg,
+        DriverOptions { listener: Some(listener), spawn_workers: false, resume: false },
+    )
+    .expect("driver survives the crash");
+    w0.join().unwrap().expect("worker 0");
+    w1.join().unwrap().expect("worker 1 (including its reincarnation)");
+    assert_eq!(quiet_run.report.restarts, 1);
+    assert_eq!(quiet_run.report.stale_cache_resets, 0, "nothing replay-affecting was reset");
+}
+
+#[test]
 fn crash_recovery_replays_bitwise_from_last_shard_set() {
     let dir = TempDir::new().unwrap();
     let mut cfg = base_cfg("sage", "sparse", &dir);

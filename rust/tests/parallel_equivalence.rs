@@ -443,6 +443,72 @@ fn replication_is_bitwise_invisible_to_training() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Sampler determinism: mini-batch draws and fanout sampling are key-derived
+// from (seed, epoch), never from RNG call order or thread interleaving, so a
+// sampled run — with or without the historical-embedding cache — must be
+// bitwise identical across run modes.
+// ---------------------------------------------------------------------------
+
+fn build_sampled(mode: RunMode, staleness: usize) -> Trainer {
+    let cfg = TrainConfig {
+        dataset: "karate-like".into(),
+        q: 4,
+        hidden: 8,
+        epochs: 8,
+        seed: 7,
+        lr: 0.02,
+        comm: "fixed:4".into(),
+        run_mode: mode.label().into(),
+        mode: "sampled".into(),
+        batch_size: 8,
+        fanout: "4,4,inf".into(),
+        staleness,
+        ..Default::default()
+    };
+    build_trainer(&cfg).unwrap()
+}
+
+#[test]
+fn sampled_parallel_matches_sequential_bitwise() {
+    for staleness in [0usize, 2] {
+        let label = format!("sampled/staleness={staleness}");
+        let mut seq = build_sampled(RunMode::Sequential, staleness);
+        let mut par = build_sampled(RunMode::Parallel, staleness);
+        let rs = seq.run().unwrap();
+        let rp = par.run().unwrap();
+        assert_eq!(
+            seq.weights.flatten(),
+            par.weights.flatten(),
+            "{label}: weights must match bit for bit"
+        );
+        for (a, b) in rs.records.iter().zip(&rp.records) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{label} epoch {} loss", a.epoch);
+            assert_eq!(a.bytes_cum, b.bytes_cum, "{label} epoch {} bytes", a.epoch);
+        }
+        assert_eq!(rs.batches, 8, "{label}: one batch per epoch");
+        assert_eq!(rp.batches, 8, "{label}");
+        if staleness > 0 {
+            assert!(rs.hist_refresh_rows > 0, "{label}: refreshes must flow");
+            assert_eq!(rs.hist_hits, rp.hist_hits, "{label}: cache hits");
+            assert_eq!(rs.hist_misses, rp.hist_misses, "{label}: cache misses");
+            assert_eq!(rs.hist_refresh_rows, rp.hist_refresh_rows, "{label}: refresh rows");
+            assert_eq!(rs.hist_age_hist, rp.hist_age_hist, "{label}: staleness histogram");
+        }
+        assert_eq!(
+            seq.ledger().total_bytes(),
+            par.ledger().total_bytes(),
+            "{label}: ledger total"
+        );
+        assert_eq!(
+            seq.ledger().breakdown_by_kind(),
+            par.ledger().breakdown_by_kind(),
+            "{label}: ledger breakdown"
+        );
+        assert!(seq.fabric().is_quiescent() && par.fabric().is_quiescent(), "{label}");
+    }
+}
+
 #[test]
 fn overlap_matches_barrier_under_failure_injection() {
     let build = |overlap: bool| {

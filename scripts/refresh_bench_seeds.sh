@@ -37,10 +37,14 @@ echo "== BENCH_commvolume.json (bytes/epoch, dense vs sparse plans)"
 VARCO_BENCH_EPOCHS="${VARCO_BENCH_EPOCHS:-5}" \
     cargo bench --bench bench_commvolume
 
+echo "== BENCH_sampled.json (full vs sampled vs historical-cache regimes)"
+VARCO_BENCH_EPOCHS="${VARCO_BENCH_EPOCHS:-6}" \
+    cargo bench --bench bench_sampled
+
 echo
 echo "done — review the diffs, then: git add BENCH_*.json"
-for f in BENCH_hotpath.json BENCH_wire.json BENCH_overlap.json BENCH_commvolume.json; do
-    if grep -q '"entries": \[\]' "$f" 2>/dev/null; then
+for f in BENCH_hotpath.json BENCH_wire.json BENCH_overlap.json BENCH_commvolume.json BENCH_sampled.json; do
+    if grep -q '"entries": \[\]\|"rows": \[\]' "$f" 2>/dev/null; then
         echo "warning: $f still has no entries — its bench may have been skipped" >&2
     fi
 done
