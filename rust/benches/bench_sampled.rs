@@ -17,14 +17,20 @@
 #[allow(dead_code)]
 mod harness;
 
-use varco::config::{build_trainer_with_dataset, TrainConfig};
+use varco::config::{build_trainer, build_trainer_with_dataset, TrainConfig};
+use varco::graph::io::write_shards;
 use varco::graph::Dataset;
+use varco::util::testing::TempDir;
 use varco::util::Json;
 
 const NODES: usize = 512;
 const Q: usize = 4;
 const HIDDEN: usize = 32;
 const LAYERS: usize = 3;
+
+/// Node count for the peak-RSS comparison: large enough that the resident
+/// feature matrix (n x 128 f32 = 8 MiB) dominates the process baseline.
+const RSS_NODES: usize = 16384;
 
 struct Regime {
     name: &'static str,
@@ -79,8 +85,60 @@ fn halo_bytes(t: &varco::coordinator::Trainer) -> usize {
         .sum()
 }
 
+/// Peak resident set size (high-water mark) of this process, in kB.
+/// Linux-only; `None` elsewhere (the RSS section is skipped).
+fn vmhwm_kb() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            return rest.trim().trim_end_matches("kB").trim().parse().ok();
+        }
+    }
+    None
+}
+
+/// The sampled training run both RSS children execute; only the store
+/// backend differs, so VmHWM isolates what the backend keeps resident.
+fn rss_cfg(which: &str) -> TrainConfig {
+    let mut cfg = TrainConfig {
+        dataset: "synth-arxiv".into(),
+        nodes: RSS_NODES,
+        q: Q,
+        hidden: 16,
+        layers: LAYERS,
+        epochs: 2,
+        comm: "fixed:4".into(),
+        seed: 0,
+        eval_every: usize::MAX - 1,
+        run_mode: "sequential".into(),
+        mode: "sampled".into(),
+        batch_size: 32,
+        fanout: "2,2,2".into(),
+        ..TrainConfig::default()
+    };
+    if which == "mmap" {
+        cfg.store = "mmap".into();
+        cfg.store_path = std::env::var("VARCO_RSS_SHARDS").expect("VARCO_RSS_SHARDS unset");
+    }
+    cfg
+}
+
+/// Child half of the RSS measurement: train, then report the final loss
+/// (for a cross-backend bitwise check) and this process's VmHWM.
+fn rss_child(which: &str) {
+    let cfg = rss_cfg(which);
+    let mut t = build_trainer(&cfg).unwrap();
+    let report = t.run().unwrap();
+    let loss = report.records.last().unwrap().loss;
+    println!("RSS_CHILD {} {}", loss.to_bits(), vmhwm_kb().unwrap_or(0));
+}
+
 fn main() {
     std::env::set_var("VARCO_THREADS", "1");
+    if let Ok(which) = std::env::var("VARCO_RSS_CHILD") {
+        rss_child(&which);
+        return;
+    }
     let epochs = std::env::var("VARCO_BENCH_EPOCHS")
         .ok()
         .and_then(|v| v.parse().ok())
@@ -160,6 +218,66 @@ fn main() {
         println!("WARNING: sampled+hist halo bytes/epoch {sh_b} >= sampled {sampled_b}");
     }
 
+    // ---- peak RSS: out-of-core (store=mmap) vs resident ----
+    // Each backend trains the same sampled run in its own child process
+    // (VmHWM is a per-process high-water mark, so the two measurements
+    // must not share an address space).  The shard build is charged to
+    // the parent.  Asserted: the out-of-core child peaks strictly below
+    // the resident one AND lands on the bitwise-identical final loss.
+    let mut rss_rows = Vec::new();
+    if vmhwm_kb().is_some() {
+        harness::section(&format!(
+            "peak RSS (VmHWM): store=resident vs store=mmap \
+             (synth-arxiv n={RSS_NODES} f=128, sampled batch=32 fanout=2,2,2)"
+        ));
+        let big = Dataset::load("synth-arxiv", RSS_NODES, 0).unwrap();
+        let shards = TempDir::new().unwrap();
+        write_shards(&big, shards.path(), 1024).unwrap();
+        drop(big);
+        let exe = std::env::current_exe().unwrap();
+        let mut measured: std::collections::HashMap<&str, (u32, usize)> =
+            std::collections::HashMap::new();
+        for which in ["resident", "mmap"] {
+            let out = std::process::Command::new(&exe)
+                .env("VARCO_RSS_CHILD", which)
+                .env("VARCO_RSS_SHARDS", shards.path())
+                .output()
+                .unwrap();
+            assert!(
+                out.status.success(),
+                "{which} RSS child failed:\n{}",
+                String::from_utf8_lossy(&out.stderr)
+            );
+            let stdout = String::from_utf8_lossy(&out.stdout);
+            let line = stdout
+                .lines()
+                .find(|l| l.starts_with("RSS_CHILD "))
+                .unwrap_or_else(|| panic!("{which} child printed no RSS_CHILD line:\n{stdout}"));
+            let mut it = line.split_whitespace().skip(1);
+            let loss_bits: u32 = it.next().unwrap().parse().unwrap();
+            let kb: usize = it.next().unwrap().parse().unwrap();
+            println!("{which:<10} VmHWM {kb:>8} kB");
+            measured.insert(which, (loss_bits, kb));
+            rss_rows.push(Json::obj(vec![
+                ("store", Json::str(which)),
+                ("vmhwm_kb", Json::num(kb as f64)),
+            ]));
+        }
+        let (r_loss, r_kb) = measured["resident"];
+        let (m_loss, m_kb) = measured["mmap"];
+        assert_eq!(m_loss, r_loss, "out-of-core training must be bitwise identical");
+        assert!(
+            m_kb < r_kb,
+            "store=mmap peak RSS ({m_kb} kB) must be strictly below resident ({r_kb} kB)"
+        );
+        println!(
+            "mmap peak RSS: -{:.1}% vs resident (identical final loss)",
+            (1.0 - m_kb as f64 / r_kb as f64) * 100.0
+        );
+    } else {
+        println!("\n(peak-RSS comparison skipped: /proc/self/status unavailable)");
+    }
+
     let doc = Json::obj(vec![
         ("schema", Json::str("varco-sampled-bench/1")),
         ("generated_by", Json::str("cargo bench --bench bench_sampled")),
@@ -176,6 +294,7 @@ fn main() {
             ]),
         ),
         ("rows", Json::Arr(rows)),
+        ("rss", Json::Arr(rss_rows)),
     ]);
     std::fs::write("BENCH_sampled.json", doc.to_string_pretty() + "\n").unwrap();
     println!("\nwrote BENCH_sampled.json");

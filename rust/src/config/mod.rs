@@ -33,11 +33,13 @@ use crate::compress::{
 };
 use crate::coordinator::{RunMode, Trainer, TrainerOptions};
 use crate::engine::{ModelDims, WorkerEngine};
+use crate::graph::store::{GraphStore, MmapStore, ResidentStore};
 use crate::graph::{Dataset, Fanout, SamplingConfig};
 use crate::model::build_spec;
 use crate::partition::WorkerGraph;
 use crate::Result;
 use std::path::Path;
+use std::sync::Arc;
 
 /// A full training-run configuration.
 #[derive(Clone, Debug, PartialEq)]
@@ -123,6 +125,13 @@ pub struct TrainConfig {
     /// served from a local cache for up to S epochs between refreshes
     /// (0 = synchronous halo exchange every epoch, bitwise today's path)
     pub staleness: usize,
+    /// graph storage backend: resident (generate/load the whole dataset
+    /// in memory, default) | mmap (out-of-core: memory-map the adjacency
+    /// and read feature rows on demand from a sharded directory built by
+    /// `varco dataset build --format shard`)
+    pub store: String,
+    /// shard directory for `store = mmap` ("" = required error)
+    pub store_path: String,
 }
 
 impl Default for TrainConfig {
@@ -168,6 +177,8 @@ impl Default for TrainConfig {
             batch_size: 512,
             fanout: String::new(),
             staleness: 0,
+            store: "resident".into(),
+            store_path: String::new(),
         }
     }
 }
@@ -274,6 +285,14 @@ impl TrainConfig {
                 self.fanout = value.into();
             }
             "staleness" => self.staleness = value.parse()?,
+            "store" => {
+                anyhow::ensure!(
+                    value == "resident" || value == "mmap",
+                    "store must be resident|mmap, got {value:?}"
+                );
+                self.store = value.into();
+            }
+            "store_path" => self.store_path = value.into(),
             _ => anyhow::bail!("unknown config key {key:?}"),
         }
         Ok(())
@@ -386,7 +405,8 @@ impl TrainConfig {
              ledger = {}\noverlap = {}\nplan = {}\nreplication = {}\ntransport = {}\n\
              driver_addr = {}\nconnect_timeout_ms = {}\nread_timeout_ms = {}\nheartbeat_ms = {}\n\
              heartbeat_timeout_ms = {}\nckpt_every = {}\nckpt_dir = {}\ncrash_at = {}\n\
-             max_restarts = {}\nmode = {}\nbatch_size = {}\nfanout = {}\nstaleness = {}\n",
+             max_restarts = {}\nmode = {}\nbatch_size = {}\nfanout = {}\nstaleness = {}\n\
+             store = {}\nstore_path = {}\n",
             self.dataset,
             self.nodes,
             self.q,
@@ -427,6 +447,8 @@ impl TrainConfig {
             self.batch_size,
             self.fanout,
             self.staleness,
+            self.store,
+            self.store_path,
         )
     }
 
@@ -456,6 +478,9 @@ impl TrainConfig {
         }
         if self.staleness > 0 {
             s.push_str(&format!(" staleness={}", self.staleness));
+        }
+        if self.store != "resident" {
+            s.push_str(&format!(" store={} store_path={}", self.store, self.store_path));
         }
         s
     }
@@ -532,15 +557,61 @@ pub fn parse_byte_size(s: &str) -> Result<usize> {
     Ok((base * mult as f64) as usize)
 }
 
+/// Open the graph store named by `cfg.store`.
+///
+/// * `resident` — generate/load the whole [`Dataset`] in memory (bitwise
+///   today's behavior).
+/// * `mmap` — open the sharded on-disk directory at `cfg.store_path`
+///   (built by `varco dataset build --format shard`); the manifest's
+///   dataset name must match `cfg.dataset`, and `cfg.nodes` (when set)
+///   must match the shard count, so a config never silently trains on
+///   the wrong shards.
+pub fn open_store(cfg: &TrainConfig) -> Result<Arc<dyn GraphStore>> {
+    match cfg.store.as_str() {
+        "resident" => {
+            let dataset = Dataset::load(&cfg.dataset, cfg.nodes, cfg.seed)?;
+            Ok(Arc::new(ResidentStore::new(dataset)))
+        }
+        "mmap" => {
+            anyhow::ensure!(
+                !cfg.store_path.is_empty(),
+                "store = mmap needs store_path = <shard directory> \
+                 (build one with `varco dataset build --format shard`)"
+            );
+            let store = MmapStore::open(Path::new(&cfg.store_path))?;
+            anyhow::ensure!(
+                store.name() == cfg.dataset,
+                "shard directory {} holds dataset {:?}, config says {:?}",
+                cfg.store_path,
+                store.name(),
+                cfg.dataset
+            );
+            anyhow::ensure!(
+                cfg.nodes == 0 || store.n_nodes() == cfg.nodes,
+                "shard directory {} holds {} nodes, config says {}",
+                cfg.store_path,
+                store.n_nodes(),
+                cfg.nodes
+            );
+            Ok(Arc::new(store))
+        }
+        other => anyhow::bail!("unknown store {other:?}; known: resident, mmap"),
+    }
+}
+
 /// Build a ready-to-run trainer from a config (the main factory).
 pub fn build_trainer(cfg: &TrainConfig) -> Result<Trainer> {
-    let dataset = Dataset::load(&cfg.dataset, cfg.nodes, cfg.seed)?;
-    build_trainer_with_dataset(cfg, &dataset)
+    build_trainer_from_store(cfg, open_store(cfg)?)
 }
 
 /// Same, with a caller-provided dataset (harnesses reuse one dataset
-/// across the whole algorithm grid).
+/// across the whole algorithm grid); always trains resident.
 pub fn build_trainer_with_dataset(cfg: &TrainConfig, dataset: &Dataset) -> Result<Trainer> {
+    build_trainer_from_store(cfg, Arc::new(ResidentStore::new(dataset.clone())))
+}
+
+/// Same, against an already-open [`GraphStore`] backend.
+pub fn build_trainer_from_store(cfg: &TrainConfig, store: Arc<dyn GraphStore>) -> Result<Trainer> {
     anyhow::ensure!(
         cfg.layers >= 1,
         "layers must be >= 1 (a GNN needs at least one layer)"
@@ -552,12 +623,12 @@ pub fn build_trainer_with_dataset(cfg: &TrainConfig, dataset: &Dataset) -> Resul
         cfg.transport
     );
     let partitioner = crate::partition::by_name(&cfg.partitioner, cfg.seed)?;
-    let partition = partitioner.partition(&dataset.graph, cfg.q)?;
-    let worker_graphs = WorkerGraph::build_all(&dataset.graph, &partition)?;
+    let partition = partitioner.partition(store.adj(), cfg.q)?;
+    let worker_graphs = WorkerGraph::build_all(store.adj(), &partition)?;
     let dims = ModelDims {
-        f_in: dataset.f_in(),
+        f_in: store.f_in(),
         hidden: cfg.hidden,
-        classes: dataset.classes,
+        classes: store.classes(),
         layers: cfg.layers,
     };
     let spec = build_spec(&cfg.model, &dims)?;
@@ -581,11 +652,11 @@ pub fn build_trainer_with_dataset(cfg: &TrainConfig, dataset: &Dataset) -> Resul
             let tag = cfg.resolved_artifact_tag();
             let mcfg = manifest.config(&tag)?;
             anyhow::ensure!(
-                mcfg.n_total == dataset.n() && mcfg.q == cfg.q,
+                mcfg.n_total == store.n_nodes() && mcfg.q == cfg.q,
                 "artifact {tag} is for n={} q={}, run has n={} q={}",
                 mcfg.n_total,
                 mcfg.q,
-                dataset.n(),
+                store.n_nodes(),
                 cfg.q
             );
             anyhow::ensure!(
@@ -674,7 +745,8 @@ pub fn build_trainer_with_dataset(cfg: &TrainConfig, dataset: &Dataset) -> Resul
         sampling: cfg.sampling_config()?,
         staleness: cfg.staleness,
     };
-    let mut trainer = Trainer::new(dataset, &partition, &worker_graphs, engines, spec, opts)?;
+    let mut trainer =
+        Trainer::with_store(store, &partition, &worker_graphs, engines, spec, opts)?;
     trainer.report.partitioner = cfg.partitioner.clone();
     Ok(trainer)
 }
@@ -1005,6 +1077,75 @@ mod tests {
         cfg.set("fanout", "").unwrap();
         std::fs::write(&path, cfg.to_config_string()).unwrap();
         assert_eq!(TrainConfig::from_file(&path).unwrap(), cfg);
+    }
+
+    #[test]
+    fn store_keys_parse_and_roundtrip() {
+        let mut cfg = TrainConfig::default();
+        assert_eq!(cfg.store, "resident");
+        assert_eq!(cfg.store_path, "");
+        cfg.set("store", "mmap").unwrap();
+        cfg.set("store_path", "/tmp/shards").unwrap();
+        assert_eq!(cfg.store, "mmap");
+        assert!(cfg.set("store", "tape").is_err());
+        assert!(cfg.describe().contains("store=mmap"));
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("resolved.cfg");
+        std::fs::write(&path, cfg.to_config_string()).unwrap();
+        assert_eq!(TrainConfig::from_file(&path).unwrap(), cfg);
+    }
+
+    #[test]
+    fn open_store_mmap_validates_path_and_dataset() {
+        let mut cfg = TrainConfig::default_quickstart();
+        cfg.store = "mmap".into();
+        // empty path is an actionable error, not a panic
+        let err = open_store(&cfg).unwrap_err().to_string();
+        assert!(err.contains("store_path"), "{err}");
+        // shards for the wrong dataset are rejected by name
+        let ds = Dataset::load("karate-like", 0, 1).unwrap();
+        let dir = TempDir::new().unwrap();
+        crate::graph::io::write_shards(&ds, dir.path(), 16).unwrap();
+        cfg.store_path = dir.path().to_string_lossy().into_owned();
+        cfg.dataset = "synth-arxiv".into();
+        let err = open_store(&cfg).unwrap_err().to_string();
+        assert!(err.contains("holds dataset"), "{err}");
+        cfg.dataset = "karate-like".into();
+        let store = open_store(&cfg).unwrap();
+        assert_eq!(store.backend(), "mmap");
+        assert_eq!(store.n_nodes(), ds.n());
+    }
+
+    #[test]
+    fn build_trainer_mmap_end_to_end() {
+        let ds = Dataset::load("karate-like", 0, 0).unwrap();
+        let dir = TempDir::new().unwrap();
+        crate::graph::io::write_shards(&ds, dir.path(), 16).unwrap();
+        let mut cfg = TrainConfig::default_quickstart();
+        cfg.epochs = 3;
+        cfg.comm = "fixed:4".into();
+        cfg.store = "mmap".into();
+        cfg.store_path = dir.path().to_string_lossy().into_owned();
+        let mut t = build_trainer(&cfg).unwrap();
+        let report = t.run().unwrap();
+        assert_eq!(report.records.len(), 3);
+        assert_eq!(report.store, "mmap");
+        assert!(report.store_shards > 0);
+        assert!(report.store_mapped_bytes > 0);
+        // resident run from the same config trains bitwise identically
+        cfg.store = "resident".into();
+        cfg.store_path.clear();
+        let mut r = build_trainer(&cfg).unwrap();
+        let resident = r.run().unwrap();
+        assert_eq!(resident.store, "resident");
+        for (a, b) in report.records.iter().zip(&resident.records) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.bytes_cum, b.bytes_cum);
+        }
+        assert_eq!(
+            t.weights.flatten().iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+            r.weights.flatten().iter().map(|f| f.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

@@ -30,7 +30,7 @@
 //! replayed epochs twice.
 
 use super::protocol::{read_ctrl, write_ctrl, Ctrl};
-use super::{build_controller, config_hash, DistContext};
+use super::{admission_hash, build_controller, DistContext};
 use crate::compress::{LayerFeedback, LinkCell, RateController};
 use crate::config::TrainConfig;
 use crate::coordinator::checkpoint::{CheckpointShard, ShardSet};
@@ -498,7 +498,7 @@ impl<'a> Driver<'a> {
         // what each worker's view used
         let total_train = match &self.sampling {
             Some(sc) => (crate::graph::sample::draw_batch(
-                &self.ctx.dataset.split.train,
+                &self.ctx.store.split().train,
                 sc.batch_size,
                 self.cfg.seed,
                 epoch,
@@ -795,16 +795,20 @@ pub fn run_driver(cfg: &TrainConfig, opts: DriverOptions) -> Result<DistRun> {
 
     let q = ctx.q;
     let layer_dims = ctx.spec.layer_dims();
-    let eval = FullGraphEval::new(&ctx.dataset, &ctx.spec);
+    let eval = FullGraphEval::from_store(ctx.store.clone(), &ctx.spec)?;
     let controller = build_controller(cfg)?;
+    let shards = ctx.store.shard_summary();
     let report = RunReport {
         algorithm: controller.label(),
-        dataset: ctx.dataset.name.clone(),
+        dataset: ctx.store.name().to_string(),
         partitioner: cfg.partitioner.clone(),
         q,
         seed: cfg.seed,
         engine: "native".into(),
         model: ctx.spec.name.clone(),
+        store: ctx.store.backend().to_string(),
+        store_shards: shards.as_ref().map(|s| s.shards).unwrap_or(0),
+        store_mapped_bytes: shards.as_ref().map(|s| s.mapped_bytes).unwrap_or(0),
         records: Vec::new(),
         stale_skipped: 0,
         // filled at the end of the run from the per-epoch link cells the
@@ -815,7 +819,7 @@ pub fn run_driver(cfg: &TrainConfig, opts: DriverOptions) -> Result<DistRun> {
     };
     let mut driver = Driver {
         cfg,
-        hash: config_hash(cfg),
+        hash: admission_hash(cfg)?,
         layer_dims,
         rx,
         slots: (0..q).map(|_| None).collect(),

@@ -49,15 +49,16 @@ use crate::compress::{
 use crate::config::TrainConfig;
 use crate::coordinator::trainer::RunSetup;
 use crate::engine::{ModelDims, ModelSpec};
-use crate::graph::Dataset;
+use crate::graph::store::GraphStore;
 use crate::model::build_spec;
 use crate::partition::WorkerGraph;
 use crate::Result;
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Everything a dist process deterministically rebuilds from the config.
 pub(crate) struct DistContext {
-    pub(crate) dataset: Dataset,
+    pub(crate) store: Arc<dyn GraphStore>,
     pub(crate) spec: ModelSpec,
     pub(crate) setup: RunSetup,
     pub(crate) worker_graphs: Vec<WorkerGraph>,
@@ -87,35 +88,40 @@ impl DistContext {
         // resolve eagerly so fanout/mode mistakes fail at startup, not at
         // the first sampled epoch
         cfg.sampling_config()?;
-        let dataset = Dataset::load(&cfg.dataset, cfg.nodes, cfg.seed)?;
+        let store = crate::config::open_store(cfg)?;
         let partitioner = crate::partition::by_name(&cfg.partitioner, cfg.seed)?;
-        let partition = partitioner.partition(&dataset.graph, cfg.q)?;
-        let worker_graphs = WorkerGraph::build_all(&dataset.graph, &partition)?;
+        let partition = partitioner.partition(store.adj(), cfg.q)?;
+        let worker_graphs = WorkerGraph::build_all(store.adj(), &partition)?;
         let dims = ModelDims {
-            f_in: dataset.f_in(),
+            f_in: store.f_in(),
             hidden: cfg.hidden,
-            classes: dataset.classes,
+            classes: store.classes(),
             layers: cfg.layers,
         };
         let spec = build_spec(&cfg.model, &dims)?;
-        let setup = RunSetup::build(
-            &dataset,
+        // sampled mode swaps in a mini-batch view before epoch 0, so the
+        // skeleton setup never materializes the full feature matrix
+        let setup = RunSetup::build_from_store(
+            store.as_ref(),
             &worker_graphs,
             &spec,
             crate::partition::PlanMode::parse(&cfg.plan)?,
             cfg.replication,
+            cfg.mode != "sampled",
         )?;
-        Ok(DistContext { dataset, spec, setup, worker_graphs, partition, q: cfg.q })
+        Ok(DistContext { store, spec, setup, worker_graphs, partition, q: cfg.q })
     }
 }
 
 /// FNV-1a over the training-semantic config fields.  Runtime plumbing
 /// (addresses, timeouts, checkpoint cadence, crash injection) is
 /// deliberately excluded: a respawned worker with crash injection cleared
-/// must still hash-match the driver.
+/// must still hash-match the driver.  `store_path` is runtime plumbing
+/// too — driver and workers may see the shards under different paths;
+/// shard *content* is admitted separately by [`admission_hash`].
 pub fn config_hash(cfg: &TrainConfig) -> u64 {
     let canon = format!(
-        "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
+        "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
         cfg.dataset,
         cfg.nodes,
         cfg.q,
@@ -141,6 +147,7 @@ pub fn config_hash(cfg: &TrainConfig) -> u64 {
         cfg.batch_size,
         cfg.fanout,
         cfg.staleness,
+        cfg.store,
     );
     let mut h: u64 = 0xcbf29ce484222325;
     for b in canon.as_bytes() {
@@ -148,6 +155,29 @@ pub fn config_hash(cfg: &TrainConfig) -> u64 {
         h = h.wrapping_mul(0x100000001b3);
     }
     h
+}
+
+/// The hash a worker must present to join a run: [`config_hash`] mixed
+/// with the shard manifest's content hash when the run trains out of
+/// core.  Every process verifies its shard directory at open, so a
+/// driver and a worker pointed at different (or stale) shard builds fail
+/// admission instead of silently training on diverged graphs.
+pub fn admission_hash(cfg: &TrainConfig) -> Result<u64> {
+    let mut h = config_hash(cfg);
+    if cfg.store == "mmap" {
+        anyhow::ensure!(
+            !cfg.store_path.is_empty(),
+            "store = mmap needs store_path = <shard directory>"
+        );
+        let manifest = crate::graph::io::ShardManifest::load(std::path::Path::new(
+            &cfg.store_path,
+        ))?;
+        for b in manifest.content_hash().to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    Ok(h)
 }
 
 /// Data-plane socket options from the config's timeout knobs.
@@ -200,6 +230,37 @@ mod tests {
         let mut d = a.clone();
         d.seed = 77;
         assert_ne!(config_hash(&a), config_hash(&d));
+    }
+
+    #[test]
+    fn admission_hash_tracks_shard_content_not_location() {
+        use crate::graph::{io::write_shards, Dataset};
+        use crate::util::testing::TempDir;
+        let ds = Dataset::load("karate-like", 0, 1).unwrap();
+        let dir_a = TempDir::new().unwrap();
+        let dir_b = TempDir::new().unwrap();
+        write_shards(&ds, dir_a.path(), 16).unwrap();
+        write_shards(&ds, dir_b.path(), 16).unwrap();
+        let mut cfg = TrainConfig::default_quickstart();
+        let resident = admission_hash(&cfg).unwrap();
+        assert_eq!(resident, config_hash(&cfg), "resident admission is the config hash");
+        cfg.store = "mmap".into();
+        assert_ne!(config_hash(&cfg), admission_hash(&TrainConfig::default_quickstart()).unwrap());
+        cfg.store_path = dir_a.path().to_string_lossy().into_owned();
+        let ha = admission_hash(&cfg).unwrap();
+        assert_ne!(ha, resident, "the store backend joins the admission hash");
+        // the same build in a different directory admits identically
+        cfg.store_path = dir_b.path().to_string_lossy().into_owned();
+        assert_eq!(admission_hash(&cfg).unwrap(), ha);
+        // a different shard build (other dataset seed) is rejected
+        let other = Dataset::load("karate-like", 0, 2).unwrap();
+        let dir_c = TempDir::new().unwrap();
+        write_shards(&other, dir_c.path(), 16).unwrap();
+        cfg.store_path = dir_c.path().to_string_lossy().into_owned();
+        assert_ne!(admission_hash(&cfg).unwrap(), ha);
+        // missing path is an error, not a silent resident fallback
+        cfg.store_path.clear();
+        assert!(admission_hash(&cfg).is_err());
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! the heartbeat and the directive loop share the socket.
 
 use super::protocol::{read_ctrl, write_ctrl, Ctrl};
-use super::{config_hash, tcp_options, DistContext};
+use super::{admission_hash, tcp_options, DistContext};
 use crate::comm::{Fabric, FailurePolicy, LedgerMode, TcpTransport, Transport};
 use crate::config::TrainConfig;
 use crate::coordinator::checkpoint::CheckpointShard;
@@ -159,7 +159,7 @@ pub fn run_worker(cfg: &TrainConfig, rank: usize, opts: WorkerOptions) -> Result
     let writer = Arc::new(Mutex::new(ctrl));
     send_ctrl(
         &writer,
-        &Ctrl::Join { rank, data_addr, config_hash: config_hash(cfg) },
+        &Ctrl::Join { rank, data_addr, config_hash: admission_hash(cfg)? },
     )?;
 
     let (tx, rx) = channel::<WireEvent>();
@@ -259,7 +259,7 @@ pub fn run_worker(cfg: &TrainConfig, rank: usize, opts: WorkerOptions) -> Result
                 let setup = match &sampling {
                     Some(sc) => {
                         let view = crate::runtime::minibatch::build_view(
-                            &ctx.dataset,
+                            ctx.store.as_ref(),
                             &ctx.partition.assignment,
                             cfg.q,
                             sc,

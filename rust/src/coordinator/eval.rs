@@ -6,16 +6,32 @@
 //! [`ModelSpec`] on the whole graph — it is NOT on the training hot path
 //! and is engine-independent, which also makes it the neutral referee
 //! between engines.
+//!
+//! The input layer streams: features come from a [`GraphStore`] and the
+//! layer-0 forward works in fixed row blocks, gathering only each block's
+//! own rows plus its neighbor union.  A resident backend pays one small
+//! scratch copy; an out-of-core backend never materializes the dense
+//! `n x f_in` matrix at all.  Both run the identical code path, so
+//! `store=mmap` evaluation is bitwise equal to `store=resident`.
 
+use std::sync::Arc;
+
+use crate::graph::store::{GraphStore, ResidentStore};
 use crate::graph::Dataset;
 use crate::model::{Aggregation, ModelSpec, Update, Weights};
 use crate::partition::worker_graph::SparseBlock;
 use crate::tensor::Matrix;
 use crate::Result;
 
+/// Rows per streamed layer-0 block.  Any value yields bitwise-identical
+/// logits (each output row accumulates independently in nz order); this
+/// only bounds the gather scratch.
+const EVAL_BLOCK_ROWS: usize = 512;
+
 /// Full-graph evaluator (owns the spec's normalized adjacency operators).
 pub struct FullGraphEval {
     spec: ModelSpec,
+    store: Arc<dyn GraphStore>,
     /// mean-normalized operator (rows sum to 1), built when any layer
     /// aggregates with `Mean`
     s_mean: Option<SparseBlock>,
@@ -23,7 +39,6 @@ pub struct FullGraphEval {
     s_gcn: Option<(SparseBlock, Vec<f32>)>,
     /// unit-weight sum operator (GIN)
     s_sum: Option<SparseBlock>,
-    features: Matrix,
     labels: Vec<u32>,
     m_train: Vec<f32>,
     m_val: Vec<f32>,
@@ -43,22 +58,47 @@ pub struct EvalResult {
 }
 
 impl FullGraphEval {
+    /// Resident-dataset convenience wrapper (clones `ds` into a store).
     pub fn new(ds: &Dataset, spec: impl Into<ModelSpec>) -> FullGraphEval {
+        FullGraphEval::from_store(Arc::new(ResidentStore::new(ds.clone())), spec)
+            .expect("resident store construction cannot fail")
+    }
+
+    /// Build the evaluator against any store backend.  Adjacency is read
+    /// once to build the normalized operators (nz values identical to the
+    /// old `Csr`-based construction: same neighbor order, same degrees).
+    pub fn from_store(
+        store: Arc<dyn GraphStore>,
+        spec: impl Into<ModelSpec>,
+    ) -> Result<FullGraphEval> {
         let spec = spec.into();
-        let g = &ds.graph;
+        let n = store.n_nodes();
         let need = |kind: Aggregation| spec.layers.iter().any(|l| l.agg == kind);
+
+        // one adjacency pass shared by every operator
+        let mut indptr = Vec::with_capacity(n + 1);
+        indptr.push(0u64);
+        let mut indices: Vec<u32> = Vec::new();
+        let mut nbrs = Vec::new();
+        for u in 0..n {
+            store.neighbors_into(u, &mut nbrs);
+            indices.extend_from_slice(&nbrs);
+            indptr.push(indices.len() as u64);
+        }
+        let degree = |u: usize| (indptr[u + 1] - indptr[u]) as usize;
         let block = |values: Vec<f32>| SparseBlock {
-            rows: g.n,
-            cols: g.n,
-            indptr: g.indptr.clone(),
-            indices: g.indices.clone(),
+            rows: n,
+            cols: n,
+            indptr: indptr.clone(),
+            indices: indices.clone(),
             values,
         };
+
         let s_mean = need(Aggregation::Mean).then(|| {
-            let mut values = Vec::with_capacity(g.indices.len());
-            for u in 0..g.n {
-                let deg = g.degree(u).max(1) as f32;
-                for _ in g.neighbors(u) {
+            let mut values = Vec::with_capacity(indices.len());
+            for u in 0..n {
+                let deg = degree(u).max(1) as f32;
+                for _ in 0..degree(u) {
                     values.push(1.0 / deg);
                 }
             }
@@ -66,38 +106,144 @@ impl FullGraphEval {
         });
         let s_gcn = need(Aggregation::GcnSym).then(|| {
             let inv_sqrt: Vec<f32> =
-                (0..g.n).map(|u| 1.0 / ((g.degree(u) + 1) as f32).sqrt()).collect();
-            let mut values = Vec::with_capacity(g.indices.len());
-            for u in 0..g.n {
-                for &v in g.neighbors(u) {
+                (0..n).map(|u| 1.0 / ((degree(u) + 1) as f32).sqrt()).collect();
+            let mut values = Vec::with_capacity(indices.len());
+            for u in 0..n {
+                let lo = indptr[u] as usize;
+                let hi = indptr[u + 1] as usize;
+                for &v in &indices[lo..hi] {
                     values.push(inv_sqrt[u] * inv_sqrt[v as usize]);
                 }
             }
-            let coeff: Vec<f32> = (0..g.n).map(|u| 1.0 / (g.degree(u) + 1) as f32).collect();
+            let coeff: Vec<f32> = (0..n).map(|u| 1.0 / (degree(u) + 1) as f32).collect();
             (block(values), coeff)
         });
-        let s_sum = need(Aggregation::GinSum).then(|| block(vec![1.0; g.indices.len()]));
-        let (m_train, m_val, m_test) = ds.split.as_f32();
-        FullGraphEval {
+        let s_sum = need(Aggregation::GinSum).then(|| block(vec![1.0; indices.len()]));
+
+        let all: Vec<u32> = (0..n as u32).collect();
+        let mut labels = Vec::new();
+        store.gather_labels(&all, &mut labels)?;
+        let (m_train, m_val, m_test) = store.split().as_f32();
+        Ok(FullGraphEval {
             spec,
+            store,
             s_mean,
             s_gcn,
             s_sum,
-            features: ds.features.clone(),
-            labels: ds.labels.clone(),
+            labels,
             n_train: m_train.iter().filter(|&&x| x > 0.0).count(),
             n_val: m_val.iter().filter(|&&x| x > 0.0).count(),
             n_test: m_test.iter().filter(|&&x| x > 0.0).count(),
             m_train,
             m_val,
             m_test,
+        })
+    }
+
+    fn op(&self, agg: Aggregation) -> &SparseBlock {
+        match agg {
+            Aggregation::Mean => self.s_mean.as_ref().expect("mean op built"),
+            Aggregation::GcnSym => &self.s_gcn.as_ref().expect("gcn op built").0,
+            Aggregation::GinSum => self.s_sum.as_ref().expect("sum op built"),
         }
     }
 
+    /// Streamed layer-0 forward: gather each block's own rows + neighbor
+    /// union, aggregate per output row in exact nz order, apply the
+    /// layer's update row-block-wise.  Per-row accumulation matches
+    /// `SparseBlock::spmm_into` element for element, so block size never
+    /// changes a bit of the output.
+    fn layer0(&self, weights: &Weights) -> Result<Matrix> {
+        let ls = &self.spec.layers[0];
+        let lw = &weights.layers[0];
+        let n = self.store.n_nodes();
+        let f = self.store.f_in();
+        let s = self.op(ls.agg);
+        let gcn_coeff = self.s_gcn.as_ref().map(|(_, c)| c);
+        let out_cols = match ls.update {
+            Update::SageLinear => lw.params[0].value.cols,
+            Update::GcnLinear => lw.params[0].value.cols,
+            Update::GinMlp => lw.params[3].value.cols,
+        };
+        let mut pre = Matrix::zeros(n, out_cols);
+        let mut x_own = Matrix::zeros(0, 0);
+        let mut x_nb = Matrix::zeros(0, 0);
+        let mut r0 = 0usize;
+        while r0 < n {
+            let r1 = (r0 + EVAL_BLOCK_ROWS).min(n);
+            let b = r1 - r0;
+            let own: Vec<u32> = (r0 as u32..r1 as u32).collect();
+            self.store.gather_rows(&own, &mut x_own)?;
+            // sorted-unique union of the block's aggregation columns
+            let lo = s.indptr[r0] as usize;
+            let hi = s.indptr[r1] as usize;
+            let mut cols: Vec<u32> = s.indices[lo..hi].to_vec();
+            cols.sort_unstable();
+            cols.dedup();
+            self.store.gather_rows(&cols, &mut x_nb)?;
+
+            let mut agg = Matrix::zeros(b, f);
+            for i in 0..b {
+                let r = r0 + i;
+                let out_row = agg.row_mut(i);
+                // GCN adds its self-loop term before the neighbor sum,
+                // exactly as the dense-path code did
+                if ls.agg == Aggregation::GcnSym {
+                    let c = gcn_coeff.expect("gcn coeff built")[r];
+                    for (o, &v) in out_row.iter_mut().zip(x_own.row(i)) {
+                        *o += c * v;
+                    }
+                }
+                let lo = s.indptr[r] as usize;
+                let hi = s.indptr[r + 1] as usize;
+                for (k, &c) in s.indices[lo..hi].iter().enumerate() {
+                    let w = s.values[lo + k];
+                    let pos = cols.binary_search(&c).expect("gathered column");
+                    for (o, &xv) in out_row.iter_mut().zip(x_nb.row(pos)) {
+                        *o += w * xv;
+                    }
+                }
+            }
+
+            let pre_block = match ls.update {
+                Update::SageLinear => {
+                    let mut p = x_own.matmul(&lw.params[0].value);
+                    p.add_assign(&agg.matmul(&lw.params[1].value));
+                    p.add_row_broadcast(&lw.params[2].value.data);
+                    p
+                }
+                Update::GcnLinear => {
+                    let mut p = agg.matmul(&lw.params[0].value);
+                    p.add_row_broadcast(&lw.params[1].value.data);
+                    p
+                }
+                Update::GinMlp => {
+                    let eps = lw.params[0].value.data[0];
+                    let sc = 1.0 + eps;
+                    let mut z = agg;
+                    for (zv, &hv) in z.data.iter_mut().zip(&x_own.data) {
+                        *zv += sc * hv;
+                    }
+                    let mut m = z.matmul(&lw.params[1].value);
+                    m.add_row_broadcast(&lw.params[2].value.data);
+                    m.relu();
+                    let mut p = m.matmul(&lw.params[3].value);
+                    p.add_row_broadcast(&lw.params[4].value.data);
+                    p
+                }
+            };
+            pre.data[r0 * out_cols..r1 * out_cols].copy_from_slice(&pre_block.data);
+            r0 = r1;
+        }
+        let mut h = pre;
+        self.spec.layers[0].act.apply(&mut h);
+        Ok(h)
+    }
+
     /// Exact centralized forward -> logits, per the spec's contract.
-    pub fn logits(&self, weights: &Weights) -> Matrix {
-        let mut h = self.features.clone();
-        for (l, ls) in self.spec.layers.iter().enumerate() {
+    pub fn logits(&self, weights: &Weights) -> Result<Matrix> {
+        let mut h = self.layer0(weights)?;
+        for (l, ls) in self.spec.layers.iter().enumerate().skip(1) {
             let mut agg = Matrix::zeros(h.rows, h.cols);
             match ls.agg {
                 Aggregation::Mean => {
@@ -148,12 +294,12 @@ impl FullGraphEval {
             ls.act.apply(&mut pre);
             h = pre;
         }
-        h
+        Ok(h)
     }
 
     /// Full evaluation: accuracies on the three splits + train loss.
     pub fn evaluate(&self, weights: &Weights) -> Result<EvalResult> {
-        let logits = self.logits(weights);
+        let logits = self.logits(weights)?;
         let out = crate::engine::native::loss_grad_dense(
             &logits,
             &self.labels,
@@ -173,7 +319,10 @@ impl FullGraphEval {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::io::write_shards;
+    use crate::graph::MmapStore;
     use crate::model::{build_spec, ModelDims, MODELS};
+    use crate::util::testing::TempDir;
 
     #[test]
     fn eval_counts_splits() {
@@ -211,5 +360,25 @@ mod tests {
         }
         acc /= 5.0;
         assert!((0.15..0.85).contains(&acc), "suspicious chance accuracy {acc}");
+    }
+
+    #[test]
+    fn mmap_store_eval_is_bitwise_equal_to_resident_for_every_model() {
+        let ds = Dataset::load("karate-like", 0, 6).unwrap();
+        let dir = TempDir::new().unwrap();
+        write_shards(&ds, dir.path(), 10).unwrap();
+        let ms: Arc<dyn GraphStore> = Arc::new(MmapStore::open(dir.path()).unwrap());
+        let dims = ModelDims { f_in: ds.f_in(), hidden: 8, classes: ds.classes, layers: 3 };
+        for &name in MODELS {
+            let spec = build_spec(name, &dims).unwrap();
+            let w = Weights::glorot(&spec, 11);
+            let resident = FullGraphEval::new(&ds, &spec);
+            let mmap = FullGraphEval::from_store(ms.clone(), &spec).unwrap();
+            let a = resident.logits(&w).unwrap();
+            let b = mmap.logits(&w).unwrap();
+            let bits = |m: &Matrix| m.data.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&a), bits(&b), "{name} logits must be bitwise equal");
+            assert_eq!(resident.evaluate(&w).unwrap(), mmap.evaluate(&w).unwrap(), "{name}");
+        }
     }
 }

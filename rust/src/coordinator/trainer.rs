@@ -79,6 +79,7 @@ use crate::compress::{
 };
 use crate::coordinator::eval::FullGraphEval;
 use crate::engine::{LayerParams, ModelDims, ModelSpec, Weights, WorkerEngine};
+use crate::graph::store::{GraphStore, ResidentStore};
 use crate::graph::{Dataset, SamplingConfig};
 use crate::metrics::{EpochRecord, LinkTraffic, RunReport};
 use crate::optim::Optimizer;
@@ -367,7 +368,7 @@ impl HistState {
 /// is drawn.
 struct SampledState {
     cfg: SamplingConfig,
-    dataset: Dataset,
+    store: Arc<dyn GraphStore>,
     assignment: Vec<u32>,
 }
 
@@ -1108,6 +1109,7 @@ pub(crate) struct RunSetup {
 }
 
 impl RunSetup {
+    /// Resident-dataset wrapper (always gathers features).
     pub(crate) fn build(
         dataset: &Dataset,
         worker_graphs: &[WorkerGraph],
@@ -1115,7 +1117,25 @@ impl RunSetup {
         plan_mode: PlanMode,
         replication: usize,
     ) -> Result<RunSetup> {
-        let (m_train, m_val, m_test) = dataset.split.as_f32();
+        RunSetup::build_from_store(dataset, worker_graphs, spec, plan_mode, replication, true)
+    }
+
+    /// Build the per-worker world from any [`GraphStore`] backend.
+    ///
+    /// `with_features = false` skips only the feature gather (each
+    /// worker's `x` stays 0x0) — labels, masks, and `count_train` are
+    /// always computed.  Sampled-mode trainers use this for the skeleton
+    /// setup that `install_batch_view` replaces before epoch 0, so an
+    /// out-of-core store never materializes the full feature matrix.
+    pub(crate) fn build_from_store(
+        store: &dyn GraphStore,
+        worker_graphs: &[WorkerGraph],
+        spec: &ModelSpec,
+        plan_mode: PlanMode,
+        replication: usize,
+        with_features: bool,
+    ) -> Result<RunSetup> {
+        let (m_train, m_val, m_test) = store.split().as_f32();
         // shape the per-layer send plans (sparse = tailored rows per
         // receiver; dense = broadcast union) and, for replication > 1,
         // reroute each fetch to its cheapest replica holder
@@ -1126,12 +1146,14 @@ impl RunSetup {
         let mut data = Vec::with_capacity(worker_graphs.len());
         for (wg, (wplans, wmirrors)) in worker_graphs.iter().zip(layered.into_iter().zip(mirrors)) {
             let nl = wg.n_local();
-            let mut x = Matrix::zeros(nl, dataset.f_in());
-            let mut labels = Vec::with_capacity(nl);
+            let mut x = Matrix::zeros(0, 0);
+            if with_features {
+                store.gather_rows(&wg.nodes, &mut x)?;
+            }
+            let mut labels = Vec::new();
+            store.gather_labels(&wg.nodes, &mut labels)?;
             let (mut tr, mut va, mut te) = (vec![0.0; nl], vec![0.0; nl], vec![0.0; nl]);
             for (li, &gid) in wg.nodes.iter().enumerate() {
-                x.row_mut(li).copy_from_slice(dataset.features.row(gid as usize));
-                labels.push(dataset.labels[gid as usize]);
                 tr[li] = m_train[gid as usize];
                 va[li] = m_val[gid as usize];
                 te[li] = m_test[gid as usize];
@@ -1383,12 +1405,32 @@ impl Trainer {
         worker_graphs: &[WorkerGraph],
         engines: Vec<Box<dyn WorkerEngine>>,
         spec: impl Into<ModelSpec>,
+        opts: TrainerOptions,
+    ) -> Result<Trainer> {
+        Trainer::with_store(
+            Arc::new(ResidentStore::new(dataset.clone())),
+            partition,
+            worker_graphs,
+            engines,
+            spec,
+            opts,
+        )
+    }
+
+    /// Assemble against any [`GraphStore`] backend (out-of-core front
+    /// door; `config::build_trainer` picks the backend from `store=`).
+    pub fn with_store(
+        store: Arc<dyn GraphStore>,
+        partition: &Partition,
+        worker_graphs: &[WorkerGraph],
+        engines: Vec<Box<dyn WorkerEngine>>,
+        spec: impl Into<ModelSpec>,
         mut opts: TrainerOptions,
     ) -> Result<Trainer> {
         let spec = spec.into();
         anyhow::ensure!(engines.len() == partition.q, "engine count != q");
-        anyhow::ensure!(spec.dims.f_in == dataset.f_in(), "f_in mismatch");
-        anyhow::ensure!(spec.dims.classes == dataset.classes, "classes mismatch");
+        anyhow::ensure!(spec.dims.f_in == store.f_in(), "f_in mismatch");
+        anyhow::ensure!(spec.dims.classes == store.classes(), "classes mismatch");
         if let CommMode::Compressed(sched) = &opts.comm_mode {
             sched.validate()?;
         }
@@ -1449,8 +1491,16 @@ impl Trainer {
             );
             anyhow::ensure!(sc.batch_size >= 1, "batch_size must be >= 1");
         }
-        let setup =
-            RunSetup::build(dataset, worker_graphs, &spec, opts.plan_mode, opts.replication)?;
+        // sampled mode swaps in a mini-batch view before epoch 0, so the
+        // skeleton setup never needs the full feature matrix resident
+        let setup = RunSetup::build_from_store(
+            store.as_ref(),
+            worker_graphs,
+            &spec,
+            opts.plan_mode,
+            opts.replication,
+            opts.sampling.is_none(),
+        )?;
         // Historical-embedding state only exists at S > 0: at S=0 the
         // synchronous exchange runs the untouched Activation path (message
         // kinds feed the failure coins, so even constructing an empty
@@ -1464,27 +1514,31 @@ impl Trainer {
         });
         let sampled = opts.sampling.clone().map(|cfg| SampledState {
             cfg,
-            dataset: dataset.clone(),
+            store: store.clone(),
             assignment: partition.assignment.clone(),
         });
         let RunSetup { data, plan_idx, total_train } = setup;
         let fabric =
             Fabric::with_policy_and_ledger(partition.q, opts.failure.clone(), opts.ledger_mode);
         let endpoints = fabric.endpoints();
-        let eval = FullGraphEval::new(dataset, &spec);
+        let eval = FullGraphEval::from_store(store.clone(), &spec)?;
         let weights = Weights::glorot(&spec, opts.seed);
         let controller: Box<dyn RateController> = opts
             .controller
             .take()
             .unwrap_or_else(|| Box::new(OpenLoopController::new(opts.comm_mode.clone())));
+        let shards = store.shard_summary();
         let report = RunReport {
             algorithm: controller.label(),
-            dataset: dataset.name.clone(),
+            dataset: store.name().to_string(),
             partitioner: String::new(),
             q: partition.q,
             seed: opts.seed,
             engine: engines.first().map(|e| e.name().to_string()).unwrap_or_default(),
             model: spec.name.clone(),
+            store: store.backend().to_string(),
+            store_shards: shards.as_ref().map(|s| s.shards).unwrap_or(0),
+            store_mapped_bytes: shards.as_ref().map(|s| s.mapped_bytes).unwrap_or(0),
             records: Vec::new(),
             stale_skipped: 0,
             link_bytes: Vec::new(),
@@ -1990,7 +2044,7 @@ impl Trainer {
         let q = self.engines.len();
         let ss = self.sampled.as_ref().expect("sampled mode");
         let view = crate::runtime::minibatch::build_view(
-            &ss.dataset,
+            ss.store.as_ref(),
             &ss.assignment,
             q,
             &ss.cfg,

@@ -1,25 +1,127 @@
-//! Binary dataset/graph serialization (little-endian, versioned header).
+//! Binary dataset/graph serialization.
 //!
-//! Lets expensive dataset builds be cached on disk and shared between the
-//! experiment harnesses (`varco dataset build` / `--cache`).
+//! Two formats live here:
+//!
+//!  * **v1 single-file** (`save_dataset` / `load_dataset`): the original
+//!    little-endian blob behind `varco dataset build` / `--cache`.  The
+//!    loader is hardened: every header-declared section length is checked
+//!    against the bytes actually remaining in the file *before* anything
+//!    is allocated, so a corrupt or truncated header produces a clear
+//!    error instead of an OOM-sized allocation.
+//!
+//!  * **v2 sharded directory** (`write_shards` / [`ShardManifest`]): the
+//!    out-of-core layout behind `store = mmap`.  Headerless raw
+//!    little-endian segments — `indptr.bin` ((n+1) x u64), `indices.bin`
+//!    (u32), `labels.bin` (u32), `split.bin` (one mask byte per node) —
+//!    plus fixed-stride feature shards `features_NNNN.bin`
+//!    (`rows_per_shard` rows of `f_in` f32s each; the last shard may be
+//!    short).  `manifest.json` records sizes and per-file FNV-1a hashes;
+//!    [`MmapStore::open`](crate::graph::store::MmapStore::open) verifies
+//!    both before mapping anything, and the manifest's combined content
+//!    hash joins the distributed admission hash so tcp workers can only
+//!    join a driver whose shards are byte-identical to theirs.
 
 use super::{Csr, Dataset, Split};
 use crate::tensor::Matrix;
+use crate::util::Json;
 use crate::Result;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"VARCODS\x01";
 
+/// Streaming FNV-1a (64-bit) — the repo's standing content-hash primitive.
+pub struct Fnv(u64);
+
+impl Fnv {
+    pub fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv {
+    fn default() -> Fnv {
+        Fnv::new()
+    }
+}
+
+/// Reader that tracks how many file bytes remain, so declared section
+/// lengths can be budget-checked before allocation.
+struct Bounded<R> {
+    r: R,
+    left: u64,
+}
+
+impl<R: Read> Bounded<R> {
+    fn take(&mut self, n: u64, what: &str) -> Result<()> {
+        anyhow::ensure!(
+            n <= self.left,
+            "corrupt dataset: {what} declares {n} bytes but only {} remain in the file",
+            self.left
+        );
+        self.left -= n;
+        Ok(())
+    }
+
+    fn exact(&mut self, buf: &mut [u8], what: &str) -> Result<()> {
+        self.take(buf.len() as u64, what)?;
+        self.r.read_exact(buf)?;
+        Ok(())
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.exact(&mut b, what)?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    /// Read a length-prefixed section of `n * width`-byte items.
+    fn section(&mut self, width: u64, what: &str) -> Result<Vec<u8>> {
+        let n = self.u64(what)?;
+        let bytes = n
+            .checked_mul(width)
+            .ok_or_else(|| anyhow::anyhow!("corrupt dataset: {what} length {n} overflows"))?;
+        self.take(bytes, what)?;
+        let mut buf = vec![0u8; bytes as usize];
+        self.r.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+
+    fn u64s(&mut self, what: &str) -> Result<Vec<u64>> {
+        let buf = self.section(8, what)?;
+        Ok(buf.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn u32s(&mut self, what: &str) -> Result<Vec<u32>> {
+        let buf = self.section(4, what)?;
+        Ok(buf.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn f32s(&mut self, what: &str) -> Result<Vec<f32>> {
+        let buf = self.section(4, what)?;
+        Ok(buf.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn bools(&mut self, what: &str) -> Result<Vec<bool>> {
+        let buf = self.section(1, what)?;
+        Ok(buf.into_iter().map(|b| b != 0).collect())
+    }
+}
+
 fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
     w.write_all(&v.to_le_bytes())?;
     Ok(())
-}
-
-fn read_u64(r: &mut impl Read) -> Result<u64> {
-    let mut b = [0u8; 8];
-    r.read_exact(&mut b)?;
-    Ok(u64::from_le_bytes(b))
 }
 
 fn write_u32s(w: &mut impl Write, xs: &[u32]) -> Result<()> {
@@ -30,13 +132,6 @@ fn write_u32s(w: &mut impl Write, xs: &[u32]) -> Result<()> {
     Ok(())
 }
 
-fn read_u32s(r: &mut impl Read) -> Result<Vec<u32>> {
-    let n = read_u64(r)? as usize;
-    let mut buf = vec![0u8; n * 4];
-    r.read_exact(&mut buf)?;
-    Ok(buf.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
-}
-
 fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
     write_u64(w, xs.len() as u64)?;
     for &x in xs {
@@ -45,25 +140,11 @@ fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
     Ok(())
 }
 
-fn read_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
-    let n = read_u64(r)? as usize;
-    let mut buf = vec![0u8; n * 4];
-    r.read_exact(&mut buf)?;
-    Ok(buf.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
-}
-
 fn write_bools(w: &mut impl Write, xs: &[bool]) -> Result<()> {
     write_u64(w, xs.len() as u64)?;
     let bytes: Vec<u8> = xs.iter().map(|&b| b as u8).collect();
     w.write_all(&bytes)?;
     Ok(())
-}
-
-fn read_bools(r: &mut impl Read) -> Result<Vec<bool>> {
-    let n = read_u64(r)? as usize;
-    let mut buf = vec![0u8; n];
-    r.read_exact(&mut buf)?;
-    Ok(buf.into_iter().map(|b| b != 0).collect())
 }
 
 pub fn save_dataset(ds: &Dataset, path: &Path) -> Result<()> {
@@ -92,28 +173,32 @@ pub fn save_dataset(ds: &Dataset, path: &Path) -> Result<()> {
 }
 
 pub fn load_dataset(path: &Path) -> Result<Dataset> {
-    let mut r = BufReader::new(std::fs::File::open(path)?);
+    let file = std::fs::File::open(path)?;
+    let file_len = file.metadata()?.len();
+    let mut r = Bounded { r: BufReader::new(file), left: file_len };
     let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
+    r.exact(&mut magic, "magic")?;
     anyhow::ensure!(&magic == MAGIC, "bad magic in {path:?}: not a varco dataset");
-    let name_len = read_u64(&mut r)? as usize;
-    let mut name_buf = vec![0u8; name_len];
-    r.read_exact(&mut name_buf)?;
-    let n = read_u64(&mut r)? as usize;
-    let classes = read_u64(&mut r)? as usize;
-    let indptr_len = read_u64(&mut r)? as usize;
-    let mut indptr = Vec::with_capacity(indptr_len);
-    for _ in 0..indptr_len {
-        indptr.push(read_u64(&mut r)?);
-    }
-    let indices = read_u32s(&mut r)?;
-    let rows = read_u64(&mut r)? as usize;
-    let cols = read_u64(&mut r)? as usize;
-    let data = read_f32s(&mut r)?;
-    let labels = read_u32s(&mut r)?;
-    let train = read_bools(&mut r)?;
-    let val = read_bools(&mut r)?;
-    let test = read_bools(&mut r)?;
+    let name_len = r.u64("name length")?;
+    r.take(name_len, "name")?;
+    let mut name_buf = vec![0u8; name_len as usize];
+    r.r.read_exact(&mut name_buf)?;
+    let n = r.u64("node count")? as usize;
+    let classes = r.u64("class count")? as usize;
+    let indptr = r.u64s("indptr")?;
+    let indices = r.u32s("indices")?;
+    let rows = r.u64("feature rows")? as usize;
+    let cols = r.u64("feature cols")? as usize;
+    let data = r.f32s("features")?;
+    anyhow::ensure!(
+        rows.checked_mul(cols) == Some(data.len()),
+        "corrupt dataset: feature shape {rows}x{cols} != {} values",
+        data.len()
+    );
+    let labels = r.u32s("labels")?;
+    let train = r.bools("train mask")?;
+    let val = r.bools("val mask")?;
+    let test = r.bools("test mask")?;
     let ds = Dataset {
         name: String::from_utf8(name_buf)?,
         graph: Csr { n, indptr, indices },
@@ -126,14 +211,240 @@ pub fn load_dataset(path: &Path) -> Result<Dataset> {
     Ok(ds)
 }
 
+// ---------------------------------------------------------------------------
+// v2: sharded out-of-core format
+// ---------------------------------------------------------------------------
+
+pub const SHARD_SCHEMA: &str = "varco-shards/2";
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+/// One file entry in the shard manifest.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardFile {
+    /// filename relative to the shard directory
+    pub path: String,
+    pub bytes: u64,
+    /// FNV-1a hash of the file's contents
+    pub hash: u64,
+}
+
+/// Manifest describing a sharded dataset directory.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardManifest {
+    pub name: String,
+    pub n: usize,
+    pub classes: usize,
+    pub f_in: usize,
+    pub num_edges: usize,
+    pub rows_per_shard: usize,
+    pub files: Vec<ShardFile>,
+}
+
+impl ShardManifest {
+    /// Combined content hash: a pure function of shard *contents* (file
+    /// names, sizes, hashes, and the graph's shape), independent of where
+    /// the directory lives on disk.
+    pub fn content_hash(&self) -> u64 {
+        let mut h = Fnv::new();
+        let head = format!(
+            "{}|{}|{}|{}|{}|{}",
+            self.name, self.n, self.classes, self.f_in, self.num_edges, self.rows_per_shard
+        );
+        h.update(head.as_bytes());
+        for f in &self.files {
+            h.update(format!("|{}|{}|{:016x}", f.path, f.bytes, f.hash).as_bytes());
+        }
+        h.finish()
+    }
+
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let files: Vec<Json> = self
+            .files
+            .iter()
+            .map(|f| {
+                Json::obj(vec![
+                    ("path", Json::str(&f.path)),
+                    ("bytes", Json::num(f.bytes as f64)),
+                    // u64 does not fit a JSON double; hashes travel as hex
+                    ("hash", Json::str(&format!("{:016x}", f.hash))),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("schema", Json::str(SHARD_SCHEMA)),
+            ("name", Json::str(&self.name)),
+            ("n", Json::num(self.n as f64)),
+            ("classes", Json::num(self.classes as f64)),
+            ("f_in", Json::num(self.f_in as f64)),
+            ("num_edges", Json::num(self.num_edges as f64)),
+            ("rows_per_shard", Json::num(self.rows_per_shard as f64)),
+            ("files", Json::Arr(files)),
+        ]);
+        std::fs::write(dir.join(MANIFEST_FILE), doc.to_string_pretty() + "\n")?;
+        Ok(())
+    }
+
+    pub fn load(dir: &Path) -> Result<ShardManifest> {
+        let path = dir.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read shard manifest {path:?}: {e}"))?;
+        let j = Json::parse(&text)?;
+        let schema = j.get("schema").and_then(|v| v.as_str()).unwrap_or_default();
+        anyhow::ensure!(
+            schema == SHARD_SCHEMA,
+            "unsupported shard manifest schema {schema:?} (want {SHARD_SCHEMA})"
+        );
+        let usize_field = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow::anyhow!("shard manifest missing field {k:?}"))
+        };
+        let name = j
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("shard manifest missing field \"name\""))?
+            .to_string();
+        let mut files = Vec::new();
+        let entries = match j.get("files") {
+            Some(Json::Arr(a)) => a,
+            _ => anyhow::bail!("shard manifest missing file list"),
+        };
+        for e in entries {
+            let path = e
+                .get("path")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow::anyhow!("manifest file entry missing path"))?;
+            anyhow::ensure!(
+                !path.contains('/') && !path.contains("..") && !path.is_empty(),
+                "manifest file entry {path:?} escapes the shard directory"
+            );
+            let bytes = e
+                .get("bytes")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow::anyhow!("manifest file entry missing bytes"))?
+                as u64;
+            let hash_hex = e
+                .get("hash")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow::anyhow!("manifest file entry missing hash"))?;
+            let hash = u64::from_str_radix(hash_hex, 16)
+                .map_err(|_| anyhow::anyhow!("manifest hash {hash_hex:?} is not hex"))?;
+            files.push(ShardFile { path: path.to_string(), bytes, hash });
+        }
+        let m = ShardManifest {
+            name,
+            n: usize_field("n")?,
+            classes: usize_field("classes")?,
+            f_in: usize_field("f_in")?,
+            num_edges: usize_field("num_edges")?,
+            rows_per_shard: usize_field("rows_per_shard")?,
+            files,
+        };
+        anyhow::ensure!(m.rows_per_shard > 0, "shard manifest rows_per_shard must be > 0");
+        anyhow::ensure!(m.f_in > 0, "shard manifest f_in must be > 0");
+        Ok(m)
+    }
+}
+
+/// Writer that hashes every byte it forwards.
+struct HashingWriter<W> {
+    w: W,
+    h: Fnv,
+    bytes: u64,
+}
+
+impl<W: Write> HashingWriter<W> {
+    fn new(w: W) -> HashingWriter<W> {
+        HashingWriter { w, h: Fnv::new(), bytes: 0 }
+    }
+
+    fn put(&mut self, bytes: &[u8]) -> Result<()> {
+        self.w.write_all(bytes)?;
+        self.h.update(bytes);
+        self.bytes += bytes.len() as u64;
+        Ok(())
+    }
+
+    fn done(mut self, path: &str) -> Result<ShardFile> {
+        self.w.flush()?;
+        Ok(ShardFile { path: path.to_string(), bytes: self.bytes, hash: self.h.finish() })
+    }
+}
+
+fn shard_file(dir: &Path, name: &str) -> Result<HashingWriter<BufWriter<std::fs::File>>> {
+    Ok(HashingWriter::new(BufWriter::new(std::fs::File::create(dir.join(name))?)))
+}
+
+/// Write `ds` as a v2 shard directory and return the manifest (also
+/// saved as `manifest.json` in `dir`).
+pub fn write_shards(ds: &Dataset, dir: &Path, rows_per_shard: usize) -> Result<ShardManifest> {
+    anyhow::ensure!(rows_per_shard > 0, "rows_per_shard must be > 0");
+    ds.validate()?;
+    std::fs::create_dir_all(dir)?;
+    let n = ds.graph.n;
+    let mut files = Vec::new();
+
+    let mut w = shard_file(dir, "indptr.bin")?;
+    for &p in &ds.graph.indptr {
+        w.put(&p.to_le_bytes())?;
+    }
+    files.push(w.done("indptr.bin")?);
+
+    let mut w = shard_file(dir, "indices.bin")?;
+    for &v in &ds.graph.indices {
+        w.put(&v.to_le_bytes())?;
+    }
+    files.push(w.done("indices.bin")?);
+
+    let mut w = shard_file(dir, "labels.bin")?;
+    for &y in &ds.labels {
+        w.put(&y.to_le_bytes())?;
+    }
+    files.push(w.done("labels.bin")?);
+
+    let mut w = shard_file(dir, "split.bin")?;
+    for i in 0..n {
+        let b = ds.split.train[i] as u8 | (ds.split.val[i] as u8) << 1 | (ds.split.test[i] as u8) << 2;
+        w.put(&[b])?;
+    }
+    files.push(w.done("split.bin")?);
+
+    let shards = if n == 0 { 0 } else { (n + rows_per_shard - 1) / rows_per_shard };
+    for s in 0..shards {
+        let name = format!("features_{s:04}.bin");
+        let mut w = shard_file(dir, &name)?;
+        let lo = s * rows_per_shard;
+        let hi = ((s + 1) * rows_per_shard).min(n);
+        for r in lo..hi {
+            for &x in ds.features.row(r) {
+                w.put(&x.to_le_bytes())?;
+            }
+        }
+        files.push(w.done(&name)?);
+    }
+
+    let manifest = ShardManifest {
+        name: ds.name.clone(),
+        n,
+        classes: ds.classes,
+        f_in: ds.f_in(),
+        num_edges: ds.graph.num_edges(),
+        rows_per_shard,
+        files,
+    };
+    manifest.save(dir)?;
+    Ok(manifest)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::testing::TempDir;
 
     #[test]
     fn round_trip_preserves_everything() {
         let ds = Dataset::load("karate-like", 0, 5).unwrap();
-        let dir = crate::util::testing::TempDir::new().unwrap();
+        let dir = TempDir::new().unwrap();
         let path = dir.path().join("ds.bin");
         save_dataset(&ds, &path).unwrap();
         let back = load_dataset(&path).unwrap();
@@ -147,7 +458,7 @@ mod tests {
 
     #[test]
     fn bad_magic_rejected() {
-        let dir = crate::util::testing::TempDir::new().unwrap();
+        let dir = TempDir::new().unwrap();
         let path = dir.path().join("junk.bin");
         std::fs::write(&path, b"notadataset....").unwrap();
         let err = load_dataset(&path).unwrap_err();
@@ -157,11 +468,94 @@ mod tests {
     #[test]
     fn truncated_file_errors_cleanly() {
         let ds = Dataset::load("karate-like", 0, 5).unwrap();
-        let dir = crate::util::testing::TempDir::new().unwrap();
+        let dir = TempDir::new().unwrap();
         let path = dir.path().join("ds.bin");
         save_dataset(&ds, &path).unwrap();
         let bytes = std::fs::read(&path).unwrap();
         std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
         assert!(load_dataset(&path).is_err());
+    }
+
+    #[test]
+    fn huge_declared_length_rejected_before_allocating() {
+        // corrupt the name-length header (bytes 8..16) to u64::MAX: the
+        // loader must reject on the remaining-bytes budget, not attempt a
+        // 2^64-byte allocation
+        let ds = Dataset::load("karate-like", 0, 5).unwrap();
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("ds.bin");
+        save_dataset(&ds, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_dataset(&path).unwrap_err();
+        assert!(err.to_string().contains("remain"), "{err}");
+    }
+
+    #[test]
+    fn huge_section_count_overflow_rejected() {
+        // a section count whose byte size overflows u64 must also fail
+        // cleanly; indptr length sits right after magic+name+n+classes
+        let ds = Dataset::load("karate-like", 0, 5).unwrap();
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("ds.bin");
+        save_dataset(&ds, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let off = 8 + 8 + ds.name.len() + 8 + 8; // -> indptr length field
+        bytes[off..off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_dataset(&path).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("overflow") || msg.contains("remain"), "{msg}");
+    }
+
+    #[test]
+    fn bit_flipped_adjacency_rejected_by_validation() {
+        // flip a neighbor id in the indices section: the loaded graph is
+        // no longer symmetric/in-range and validate() must catch it
+        let ds = Dataset::load("karate-like", 0, 5).unwrap();
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("ds.bin");
+        save_dataset(&ds, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let off = 8 + 8 + ds.name.len() + 8 + 8 + 8 + ds.graph.indptr.len() * 8 + 8;
+        bytes[off] ^= 0xFF; // karate-like has n=64, so v ^ 0xFF >= 191 is out of range
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load_dataset(&path).is_err());
+    }
+
+    #[test]
+    fn shard_write_matches_manifest() {
+        let ds = Dataset::load("karate-like", 0, 3).unwrap();
+        let dir = TempDir::new().unwrap();
+        let m = write_shards(&ds, dir.path(), 16).unwrap();
+        assert_eq!(m.n, ds.n());
+        assert_eq!(m.f_in, ds.f_in());
+        assert_eq!(m.num_edges, ds.graph.num_edges());
+        assert_eq!(m.files.iter().filter(|f| f.path.starts_with("features_")).count(), 4);
+        for f in &m.files {
+            let got = std::fs::metadata(dir.path().join(&f.path)).unwrap().len();
+            assert_eq!(got, f.bytes, "{}", f.path);
+        }
+        // manifest round-trips exactly, including the content hash
+        let back = ShardManifest::load(dir.path()).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.content_hash(), m.content_hash());
+    }
+
+    #[test]
+    fn shard_content_hash_tracks_contents_not_location() {
+        let ds = Dataset::load("karate-like", 0, 3).unwrap();
+        let a = TempDir::new().unwrap();
+        let b = TempDir::new().unwrap();
+        let ma = write_shards(&ds, a.path(), 16).unwrap();
+        let mb = write_shards(&ds, b.path(), 16).unwrap();
+        assert_eq!(ma.content_hash(), mb.content_hash(), "same bytes, different dirs");
+        let other = Dataset::load("karate-like", 0, 4).unwrap();
+        let c = TempDir::new().unwrap();
+        let mc = write_shards(&other, c.path(), 16).unwrap();
+        assert_ne!(ma.content_hash(), mc.content_hash(), "different features must differ");
+        let md = write_shards(&ds, c.path(), 8).unwrap();
+        assert_ne!(ma.content_hash(), md.content_hash(), "different sharding must differ");
     }
 }

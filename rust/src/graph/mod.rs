@@ -13,7 +13,9 @@ pub mod features;
 pub mod generate;
 pub mod io;
 pub mod sample;
+pub mod store;
 
 pub use csr::Csr;
 pub use datasets::{Dataset, Split};
 pub use sample::{Fanout, SamplingConfig};
+pub use store::{Adjacency, GraphStore, MmapStore, ResidentStore, ShardSummary};

@@ -13,6 +13,7 @@
 //! SendPlan machinery: sampled halo exchanges ride the same wire codec,
 //! ledgers, and rate controllers as full-graph training.
 
+use crate::graph::store::Adjacency;
 use crate::graph::Csr;
 use crate::util::Rng;
 use crate::Result;
@@ -98,22 +99,23 @@ pub fn draw_batch(train_mask: &[bool], batch_size: usize, seed: u64, epoch: usiz
 /// node's neighbor subset is a pure function of
 /// `(seed, epoch, layer, node)`, so the expansion order never matters.
 pub fn sample_nodes(
-    g: &Csr,
+    g: &dyn Adjacency,
     batch: &[u32],
     fanouts: &[Fanout],
     seed: u64,
     epoch: usize,
 ) -> Vec<u32> {
-    let mut visited = vec![false; g.n];
+    let mut visited = vec![false; g.n_nodes()];
     let mut frontier: Vec<u32> = batch.to_vec();
     for &u in &frontier {
         visited[u as usize] = true;
     }
     let mut picks = Vec::new();
+    let mut nbrs = Vec::new();
     for (layer, fanout) in fanouts.iter().enumerate() {
         let mut next = Vec::new();
         for &u in &frontier {
-            let nbrs = g.neighbors(u as usize);
+            g.neighbors_into(u as usize, &mut nbrs);
             let mut admit = |v: u32| {
                 if !visited[v as usize] {
                     visited[v as usize] = true;
@@ -134,7 +136,7 @@ pub fn sample_nodes(
                     }
                 }
                 _ => {
-                    for &v in nbrs {
+                    for &v in &nbrs {
                         admit(v);
                     }
                 }
@@ -154,11 +156,13 @@ pub fn sample_nodes(
 /// sampled.  Keeping all intra-sample edges (rather than only sampled
 /// tree edges) preserves symmetry, which the GCN normalization and the
 /// boundary plans both assume.
-pub fn induce(g: &Csr, nodes: &[u32]) -> Csr {
+pub fn induce(g: &dyn Adjacency, nodes: &[u32]) -> Csr {
     let local = |gid: u32| nodes.binary_search(&gid).ok();
     let mut edges = Vec::new();
+    let mut nbrs = Vec::new();
     for (lu, &u) in nodes.iter().enumerate() {
-        for &v in g.neighbors(u as usize) {
+        g.neighbors_into(u as usize, &mut nbrs);
+        for &v in &nbrs {
             if u < v {
                 if let Some(lv) = local(v) {
                     edges.push((lu as u32, lv as u32));

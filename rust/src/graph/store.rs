@@ -1,0 +1,659 @@
+//! Graph storage abstraction: adjacency + feature access behind a trait.
+//!
+//! Everything downstream of the dataset — partitioners, worker-graph
+//! construction, fanout sampling, mini-batch views, evaluation — used to
+//! take `&Csr` / `&Dataset` and therefore assumed the whole graph was
+//! resident in RAM.  [`Adjacency`] and [`GraphStore`] split that contract
+//! into the two things consumers actually need (neighbor lists and row
+//! gathers), so the same training stack runs against:
+//!
+//!  * [`ResidentStore`] — wraps today's in-memory [`Dataset`]; the bitwise
+//!    oracle and the default (`store = resident`);
+//!  * [`MmapStore`] — opens the sharded on-disk format written by
+//!    `varco dataset build --format shard` (see [`crate::graph::io`]).
+//!    CSR `indptr`/`indices` segments are memory-mapped; feature rows are
+//!    gathered with positioned reads (pread) so untouched rows never enter
+//!    the process's resident set, and labels/split masks (4+1 bytes per
+//!    node) are loaded eagerly.
+//!
+//! Bitwise contract: both backends must expose identical neighbor
+//! iteration order and identical f32 row bytes, so every consumer is
+//! backend-oblivious and the existing equivalence suites pin
+//! `store=mmap == store=resident` end to end.
+
+use std::fs::File;
+use std::path::{Path, PathBuf};
+
+use super::io::{Fnv, ShardManifest};
+use super::{Csr, Dataset, Split};
+use crate::tensor::Matrix;
+use crate::Result;
+
+/// Neighbor access for one undirected graph.  `neighbors_into` clears the
+/// buffer and fills it with the node's sorted neighbor list — the same
+/// order `Csr::neighbors` exposes, which every deterministic accumulation
+/// in the trainer depends on.
+pub trait Adjacency: Send + Sync {
+    fn n_nodes(&self) -> usize;
+    /// Undirected edge count (half the total adjacency length).
+    fn num_edges(&self) -> usize;
+    fn degree(&self, v: usize) -> usize;
+    fn neighbors_into(&self, v: usize, buf: &mut Vec<u32>);
+}
+
+/// Shard/backend telemetry surfaced through `varco describe` and the
+/// RunReport.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSummary {
+    /// number of fixed-stride feature shard files
+    pub shards: usize,
+    /// bytes of memory-mapped adjacency segments (indptr + indices)
+    pub mapped_bytes: usize,
+    /// manifest content hash (joins the dist admission hash)
+    pub content_hash: u64,
+}
+
+/// A full node-classification graph store: adjacency plus features,
+/// labels, and split masks.
+pub trait GraphStore: Adjacency {
+    fn name(&self) -> &str;
+    fn classes(&self) -> usize;
+    fn f_in(&self) -> usize;
+    fn split(&self) -> &Split;
+    /// Gather feature rows for global node ids `rows` into `out`
+    /// (reshaped to `rows.len() x f_in`).  Row `i` of `out` is the
+    /// feature vector of node `rows[i]`, byte-identical across backends.
+    fn gather_rows(&self, rows: &[u32], out: &mut Matrix) -> Result<()>;
+    /// Gather labels for `rows` (clears `out`).
+    fn gather_labels(&self, rows: &[u32], out: &mut Vec<u32>) -> Result<()>;
+    /// Backend tag: `"resident"` or `"mmap"`.
+    fn backend(&self) -> &'static str;
+    /// Shard telemetry; `None` for fully-resident backends.
+    fn shard_summary(&self) -> Option<ShardSummary> {
+        None
+    }
+    /// Manual supertrait upcast (`&dyn GraphStore -> &dyn Adjacency`
+    /// without relying on trait-object upcasting support).
+    fn adj(&self) -> &dyn Adjacency;
+}
+
+impl Adjacency for Csr {
+    fn n_nodes(&self) -> usize {
+        self.n
+    }
+
+    fn num_edges(&self) -> usize {
+        self.indices.len() / 2
+    }
+
+    fn degree(&self, v: usize) -> usize {
+        (self.indptr[v + 1] - self.indptr[v]) as usize
+    }
+
+    fn neighbors_into(&self, v: usize, buf: &mut Vec<u32>) {
+        buf.clear();
+        buf.extend_from_slice(self.neighbors(v));
+    }
+}
+
+impl Adjacency for Dataset {
+    fn n_nodes(&self) -> usize {
+        self.graph.n
+    }
+
+    fn num_edges(&self) -> usize {
+        self.graph.indices.len() / 2
+    }
+
+    fn degree(&self, v: usize) -> usize {
+        self.graph.degree(v)
+    }
+
+    fn neighbors_into(&self, v: usize, buf: &mut Vec<u32>) {
+        buf.clear();
+        buf.extend_from_slice(self.graph.neighbors(v));
+    }
+}
+
+impl GraphStore for Dataset {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn f_in(&self) -> usize {
+        self.features.cols
+    }
+
+    fn split(&self) -> &Split {
+        &self.split
+    }
+
+    fn gather_rows(&self, rows: &[u32], out: &mut Matrix) -> Result<()> {
+        let f = self.features.cols;
+        if out.rows != rows.len() || out.cols != f {
+            *out = Matrix::zeros(rows.len(), f);
+        }
+        for (i, &gid) in rows.iter().enumerate() {
+            anyhow::ensure!((gid as usize) < self.graph.n, "row {gid} out of range");
+            out.row_mut(i).copy_from_slice(self.features.row(gid as usize));
+        }
+        Ok(())
+    }
+
+    fn gather_labels(&self, rows: &[u32], out: &mut Vec<u32>) -> Result<()> {
+        out.clear();
+        for &gid in rows {
+            anyhow::ensure!((gid as usize) < self.graph.n, "row {gid} out of range");
+            out.push(self.labels[gid as usize]);
+        }
+        Ok(())
+    }
+
+    fn backend(&self) -> &'static str {
+        "resident"
+    }
+
+    fn adj(&self) -> &dyn Adjacency {
+        self
+    }
+}
+
+/// Fully in-memory backend wrapping a [`Dataset`] — the bitwise oracle.
+pub struct ResidentStore {
+    ds: Dataset,
+}
+
+impl ResidentStore {
+    pub fn new(ds: Dataset) -> ResidentStore {
+        ResidentStore { ds }
+    }
+
+    pub fn dataset(&self) -> &Dataset {
+        &self.ds
+    }
+}
+
+impl Adjacency for ResidentStore {
+    fn n_nodes(&self) -> usize {
+        self.ds.graph.n
+    }
+
+    fn num_edges(&self) -> usize {
+        self.ds.graph.indices.len() / 2
+    }
+
+    fn degree(&self, v: usize) -> usize {
+        self.ds.graph.degree(v)
+    }
+
+    fn neighbors_into(&self, v: usize, buf: &mut Vec<u32>) {
+        buf.clear();
+        buf.extend_from_slice(self.ds.graph.neighbors(v));
+    }
+}
+
+impl GraphStore for ResidentStore {
+    fn name(&self) -> &str {
+        &self.ds.name
+    }
+
+    fn classes(&self) -> usize {
+        self.ds.classes
+    }
+
+    fn f_in(&self) -> usize {
+        self.ds.features.cols
+    }
+
+    fn split(&self) -> &Split {
+        &self.ds.split
+    }
+
+    fn gather_rows(&self, rows: &[u32], out: &mut Matrix) -> Result<()> {
+        self.ds.gather_rows(rows, out)
+    }
+
+    fn gather_labels(&self, rows: &[u32], out: &mut Vec<u32>) -> Result<()> {
+        self.ds.gather_labels(rows, out)
+    }
+
+    fn backend(&self) -> &'static str {
+        "resident"
+    }
+
+    fn adj(&self) -> &dyn Adjacency {
+        self
+    }
+}
+
+/// Read-only memory mapping of an entire file (raw `mmap(2)`; the crate
+/// vendors no FFI helpers, so the two syscalls are declared directly).
+#[cfg(unix)]
+mod map {
+    use std::ffi::{c_int, c_void};
+    use std::fs::File;
+    use std::os::unix::io::AsRawFd;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    const PROT_READ: c_int = 1;
+    const MAP_PRIVATE: c_int = 2;
+
+    pub struct Map {
+        ptr: *mut c_void,
+        len: usize,
+    }
+
+    // The mapping is immutable (PROT_READ) for its whole lifetime.
+    unsafe impl Send for Map {}
+    unsafe impl Sync for Map {}
+
+    impl Map {
+        pub fn of(file: &File, len: usize) -> std::io::Result<Map> {
+            if len == 0 {
+                return Ok(Map { ptr: std::ptr::null_mut(), len: 0 });
+            }
+            let ptr = unsafe {
+                mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, file.as_raw_fd(), 0)
+            };
+            if ptr as isize == -1 {
+                return Err(std::io::Error::last_os_error());
+            }
+            Ok(Map { ptr, len })
+        }
+
+        pub fn bytes(&self) -> &[u8] {
+            if self.len == 0 {
+                &[]
+            } else {
+                unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+            }
+        }
+
+        pub fn len(&self) -> usize {
+            self.len
+        }
+    }
+
+    impl Drop for Map {
+        fn drop(&mut self) {
+            if self.len != 0 {
+                unsafe {
+                    munmap(self.ptr, self.len);
+                }
+            }
+        }
+    }
+}
+
+/// Portable fallback: load the file into memory (no mmap off unix).
+#[cfg(not(unix))]
+mod map {
+    use std::fs::File;
+    use std::io::Read;
+
+    pub struct Map {
+        data: Vec<u8>,
+    }
+
+    impl Map {
+        pub fn of(file: &File, len: usize) -> std::io::Result<Map> {
+            let mut data = vec![0u8; len];
+            let mut r: &File = file;
+            r.read_exact(&mut data)?;
+            Ok(Map { data })
+        }
+
+        pub fn bytes(&self) -> &[u8] {
+            &self.data
+        }
+
+        pub fn len(&self) -> usize {
+            self.data.len()
+        }
+    }
+}
+
+#[cfg(unix)]
+fn read_at(f: &File, buf: &mut [u8], off: u64) -> std::io::Result<()> {
+    std::os::unix::fs::FileExt::read_exact_at(f, buf, off)
+}
+
+#[cfg(not(unix))]
+fn read_at(f: &File, buf: &mut [u8], off: u64) -> std::io::Result<()> {
+    use std::io::{Read, Seek, SeekFrom};
+    let mut r: &File = f;
+    r.seek(SeekFrom::Start(off))?;
+    r.read_exact(buf)
+}
+
+/// Out-of-core backend over the sharded v2 format.
+///
+/// Adjacency segments are memory-mapped and decoded per access; feature
+/// rows are fetched with positioned reads so only rows a run actually
+/// gathers are ever paged into the process (the kernel's page cache holds
+/// the rest and is not charged to our RSS).  Labels and split masks are
+/// tiny and load eagerly.
+pub struct MmapStore {
+    name: String,
+    n: usize,
+    classes: usize,
+    f_in: usize,
+    num_edges: usize,
+    indptr: map::Map,
+    indices: map::Map,
+    labels: Vec<u32>,
+    split: Split,
+    rows_per_shard: usize,
+    shards: Vec<File>,
+    dir: PathBuf,
+    content_hash: u64,
+}
+
+impl MmapStore {
+    /// Open a shard directory, verifying every file's size and FNV
+    /// content hash against the manifest before trusting any byte.
+    pub fn open(dir: &Path) -> Result<MmapStore> {
+        let manifest = ShardManifest::load(dir)?;
+        // Streaming verification: a fixed 64 KiB buffer keeps the check
+        // RSS-flat even when feature shards dwarf memory.
+        let mut buf = vec![0u8; 64 * 1024];
+        for f in &manifest.files {
+            let path = dir.join(&f.path);
+            let meta = std::fs::metadata(&path)
+                .map_err(|e| anyhow::anyhow!("shard file {path:?} missing: {e}"))?;
+            anyhow::ensure!(
+                meta.len() == f.bytes,
+                "shard file {:?} is {} bytes, manifest says {}",
+                f.path,
+                meta.len(),
+                f.bytes
+            );
+            let mut h = Fnv::new();
+            let mut r = File::open(&path)?;
+            loop {
+                let k = std::io::Read::read(&mut r, &mut buf)?;
+                if k == 0 {
+                    break;
+                }
+                h.update(&buf[..k]);
+            }
+            anyhow::ensure!(
+                h.finish() == f.hash,
+                "shard file {:?} content hash mismatch (corrupt or stale shards; \
+                 rebuild with `varco dataset build --format shard`)",
+                f.path
+            );
+        }
+
+        let n = manifest.n;
+        let open_map = |name: &str, want: u64| -> Result<map::Map> {
+            let file = File::open(dir.join(name))?;
+            let m = map::Map::of(&file, want as usize)?;
+            Ok(m)
+        };
+        let indptr = open_map("indptr.bin", ((n + 1) * 8) as u64)?;
+        let last = {
+            let b = indptr.bytes();
+            let o = n * 8;
+            u64::from_le_bytes(b[o..o + 8].try_into().unwrap())
+        };
+        anyhow::ensure!(
+            last as usize == manifest.num_edges * 2,
+            "indptr tail {last} disagrees with manifest edge count {}",
+            manifest.num_edges
+        );
+        let indices = open_map("indices.bin", last * 4)?;
+
+        let labels_file = File::open(dir.join("labels.bin"))?;
+        let mut lbytes = vec![0u8; n * 4];
+        read_at(&labels_file, &mut lbytes, 0)?;
+        let labels: Vec<u32> =
+            lbytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+        anyhow::ensure!(
+            labels.iter().all(|&y| (y as usize) < manifest.classes),
+            "label out of range in shards"
+        );
+
+        let split_file = File::open(dir.join("split.bin"))?;
+        let mut sbytes = vec![0u8; n];
+        read_at(&split_file, &mut sbytes, 0)?;
+        let split = Split {
+            train: sbytes.iter().map(|&b| b & 1 != 0).collect(),
+            val: sbytes.iter().map(|&b| b & 2 != 0).collect(),
+            test: sbytes.iter().map(|&b| b & 4 != 0).collect(),
+        };
+
+        let mut shards = Vec::new();
+        for f in &manifest.files {
+            if f.path.starts_with("features_") {
+                shards.push(File::open(dir.join(&f.path))?);
+            }
+        }
+        anyhow::ensure!(!shards.is_empty() || n == 0, "manifest lists no feature shards");
+        let expect_shards = if n == 0 { 0 } else { (n + manifest.rows_per_shard - 1) / manifest.rows_per_shard };
+        anyhow::ensure!(
+            shards.len() == expect_shards,
+            "manifest lists {} feature shards, expected {expect_shards}",
+            shards.len()
+        );
+
+        Ok(MmapStore {
+            name: manifest.name.clone(),
+            n,
+            classes: manifest.classes,
+            f_in: manifest.f_in,
+            num_edges: manifest.num_edges,
+            indptr,
+            indices,
+            labels,
+            split,
+            rows_per_shard: manifest.rows_per_shard,
+            shards,
+            dir: dir.to_path_buf(),
+            content_hash: manifest.content_hash(),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    #[inline]
+    fn ip(&self, i: usize) -> u64 {
+        let b = self.indptr.bytes();
+        let o = i * 8;
+        u64::from_le_bytes(b[o..o + 8].try_into().unwrap())
+    }
+}
+
+impl Adjacency for MmapStore {
+    fn n_nodes(&self) -> usize {
+        self.n
+    }
+
+    fn num_edges(&self) -> usize {
+        self.num_edges
+    }
+
+    fn degree(&self, v: usize) -> usize {
+        (self.ip(v + 1) - self.ip(v)) as usize
+    }
+
+    fn neighbors_into(&self, v: usize, buf: &mut Vec<u32>) {
+        buf.clear();
+        let lo = self.ip(v) as usize;
+        let hi = self.ip(v + 1) as usize;
+        let b = self.indices.bytes();
+        buf.reserve(hi - lo);
+        for k in lo..hi {
+            let o = k * 4;
+            buf.push(u32::from_le_bytes(b[o..o + 4].try_into().unwrap()));
+        }
+    }
+}
+
+impl GraphStore for MmapStore {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn f_in(&self) -> usize {
+        self.f_in
+    }
+
+    fn split(&self) -> &Split {
+        &self.split
+    }
+
+    fn gather_rows(&self, rows: &[u32], out: &mut Matrix) -> Result<()> {
+        if out.rows != rows.len() || out.cols != self.f_in {
+            *out = Matrix::zeros(rows.len(), self.f_in);
+        }
+        let stride = self.f_in * 4;
+        let mut bytes = vec![0u8; stride];
+        for (i, &gid) in rows.iter().enumerate() {
+            let g = gid as usize;
+            anyhow::ensure!(g < self.n, "row {gid} out of range");
+            let shard = g / self.rows_per_shard;
+            let row_in = g % self.rows_per_shard;
+            read_at(&self.shards[shard], &mut bytes, (row_in * stride) as u64)?;
+            for (dst, c) in out.row_mut(i).iter_mut().zip(bytes.chunks_exact(4)) {
+                *dst = f32::from_le_bytes(c.try_into().unwrap());
+            }
+        }
+        Ok(())
+    }
+
+    fn gather_labels(&self, rows: &[u32], out: &mut Vec<u32>) -> Result<()> {
+        out.clear();
+        for &gid in rows {
+            anyhow::ensure!((gid as usize) < self.n, "row {gid} out of range");
+            out.push(self.labels[gid as usize]);
+        }
+        Ok(())
+    }
+
+    fn backend(&self) -> &'static str {
+        "mmap"
+    }
+
+    fn shard_summary(&self) -> Option<ShardSummary> {
+        Some(ShardSummary {
+            shards: self.shards.len(),
+            mapped_bytes: self.indptr.len() + self.indices.len(),
+            content_hash: self.content_hash,
+        })
+    }
+
+    fn adj(&self) -> &dyn Adjacency {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::io::write_shards;
+    use crate::util::testing::TempDir;
+
+    fn shard_fixture(rows_per_shard: usize) -> (TempDir, Dataset) {
+        let ds = Dataset::load("karate-like", 0, 5).unwrap();
+        let dir = TempDir::new().unwrap();
+        write_shards(&ds, dir.path(), rows_per_shard).unwrap();
+        (dir, ds)
+    }
+
+    #[test]
+    fn mmap_store_matches_resident_bitwise() {
+        let (dir, ds) = shard_fixture(10);
+        let ms = MmapStore::open(dir.path()).unwrap();
+        assert_eq!(ms.n_nodes(), ds.n());
+        assert_eq!(Adjacency::num_edges(&ms), ds.graph.num_edges());
+        assert_eq!(ms.classes(), ds.classes);
+        assert_eq!(ms.f_in(), ds.f_in());
+        assert_eq!(ms.split(), &ds.split);
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for v in 0..ds.n() {
+            assert_eq!(Adjacency::degree(&ms, v), ds.graph.degree(v), "degree {v}");
+            ms.neighbors_into(v, &mut a);
+            ds.neighbors_into(v, &mut b);
+            assert_eq!(a, b, "neighbors {v}");
+        }
+        // gather in shard-crossing and reversed orders
+        let rows: Vec<u32> = (0..ds.n() as u32).rev().collect();
+        let mut xm = Matrix::zeros(0, 0);
+        let mut xr = Matrix::zeros(0, 0);
+        ms.gather_rows(&rows, &mut xm).unwrap();
+        ds.gather_rows(&rows, &mut xr).unwrap();
+        assert_eq!(xm.data.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                   xr.data.iter().map(|f| f.to_bits()).collect::<Vec<_>>());
+        let mut lm = Vec::new();
+        let mut lr = Vec::new();
+        ms.gather_labels(&rows, &mut lm).unwrap();
+        ds.gather_labels(&rows, &mut lr).unwrap();
+        assert_eq!(lm, lr);
+    }
+
+    #[test]
+    fn shard_summary_reports_counts() {
+        let (dir, ds) = shard_fixture(10);
+        let ms = MmapStore::open(dir.path()).unwrap();
+        let s = ms.shard_summary().unwrap();
+        assert_eq!(s.shards, (ds.n() + 9) / 10);
+        assert_eq!(s.mapped_bytes, (ds.n() + 1) * 8 + ds.graph.indices.len() * 4);
+        assert_eq!(ms.backend(), "mmap");
+        assert_eq!(ds.backend(), "resident");
+        assert!(ds.shard_summary().is_none());
+    }
+
+    #[test]
+    fn bit_flip_in_any_shard_file_is_rejected() {
+        let (dir, _) = shard_fixture(16);
+        // flip one bit in the middle of the second feature shard
+        let victim = dir.path().join("features_0001.bin");
+        let mut bytes = std::fs::read(&victim).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&victim, &bytes).unwrap();
+        let err = MmapStore::open(dir.path()).unwrap_err();
+        assert!(err.to_string().contains("hash mismatch"), "{err}");
+    }
+
+    #[test]
+    fn truncated_shard_file_is_rejected() {
+        let (dir, _) = shard_fixture(16);
+        let victim = dir.path().join("indices.bin");
+        let bytes = std::fs::read(&victim).unwrap();
+        std::fs::write(&victim, &bytes[..bytes.len() - 4]).unwrap();
+        let err = MmapStore::open(dir.path()).unwrap_err();
+        assert!(err.to_string().contains("bytes"), "{err}");
+    }
+
+    #[test]
+    fn missing_shard_file_is_rejected() {
+        let (dir, _) = shard_fixture(16);
+        std::fs::remove_file(dir.path().join("labels.bin")).unwrap();
+        let err = MmapStore::open(dir.path()).unwrap_err();
+        assert!(err.to_string().contains("missing"), "{err}");
+    }
+}

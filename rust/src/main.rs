@@ -34,6 +34,7 @@ fn run(args: &[String]) -> Result<()> {
         Some("eval") => cmd_eval(&args[1..]),
         Some("partition-stats") => cmd_partition_stats(&args[1..]),
         Some("inspect-artifacts") => cmd_inspect_artifacts(&args[1..]),
+        Some("dataset") => cmd_dataset(&args[1..]),
         Some("datasets") => cmd_datasets(),
         Some("help") | None => {
             print_help();
@@ -58,13 +59,15 @@ fn print_help() {
          \x20 varco eval  --ckpt FILE --dataset D [--nodes N] [--seed S]\n\
          \x20 varco partition-stats --dataset D [--q N] [--partitioner P] [--nodes N]\n\
          \x20 varco inspect-artifacts [--artifacts_dir DIR]\n\
+         \x20 varco dataset build --format shard --out DIR [--dataset D]\n\
+         \x20              [--nodes N] [--seed S] [--rows-per-shard R]\n\
          \x20 varco datasets\n\
          \n\
          TRAIN KEYS (file and CLI share names):\n\
          \x20 dataset nodes q partitioner comm compressor model engine\n\
          \x20 artifact_tag artifacts_dir epochs hidden layers optimizer lr\n\
          \x20 seed eval_every drop_prob stale_prob overlap plan replication\n\
-         \x20 mode batch_size fanout staleness\n\
+         \x20 mode batch_size fanout staleness store store_path\n\
          \n\
          comm spec:  full | none | fixed:R | linear:A | exp | step:E:F\n\
          \x20           | budget:BYTES[:CMAX]\n\
@@ -86,6 +89,11 @@ fn print_help() {
          staleness:  S >= 0 (default 0) — serve boundary rows from the\n\
          \x20           historical-embedding cache for up to S epochs\n\
          \x20           between refreshes; 0 = synchronous exchange\n\
+         store:      resident (default) | mmap — out-of-core training:\n\
+         \x20           memory-map the adjacency and read feature rows on\n\
+         \x20           demand from the shard directory at store_path\n\
+         \x20           (build one with `varco dataset build --format shard`);\n\
+         \x20           bitwise identical weights to store=resident\n\
          \n\
          MULTI-PROCESS KEYS (transport=tcp runs):\n\
          \x20 transport driver_addr connect_timeout_ms read_timeout_ms\n\
@@ -146,6 +154,12 @@ fn cmd_train(args: &[String]) -> Result<()> {
         report.total_floats(),
         total_s
     );
+    if report.store == "mmap" {
+        println!(
+            "store: mmap ({} feature shards, {} adjacency bytes mapped)",
+            report.store_shards, report.store_mapped_bytes
+        );
+    }
     if report.stale_skipped > 0 {
         println!("stale messages skipped: {}", report.stale_skipped);
     }
@@ -236,6 +250,12 @@ fn cmd_driver(args: &[String]) -> Result<()> {
         report.total_bytes(),
         report.total_floats(),
     );
+    if report.store == "mmap" {
+        println!(
+            "store: mmap ({} feature shards, {} adjacency bytes mapped)",
+            report.store_shards, report.store_mapped_bytes
+        );
+    }
     if report.restarts > 0 {
         println!(
             "recovery: {} restart(s), {} epoch(s) replayed, {} heartbeat timeout(s)",
@@ -407,6 +427,70 @@ fn cmd_inspect_artifacts(args: &[String]) -> Result<()> {
             tag, c.n_total, c.q, c.n_local, c.f_in, c.hidden, c.classes, c.param_count
         );
     }
+    Ok(())
+}
+
+/// Dataset tooling.  `varco dataset build --format shard` materializes a
+/// registered dataset into the sharded on-disk format `store = mmap`
+/// trains from: mmap-able little-endian CSR adjacency segments plus
+/// fixed-stride feature shard files, described by a content-hashed
+/// manifest.
+fn cmd_dataset(args: &[String]) -> Result<()> {
+    anyhow::ensure!(
+        args.first().map(String::as_str) == Some("build"),
+        "usage: varco dataset build --format shard --out DIR [--dataset D] [--nodes N] \
+         [--seed S] [--rows-per-shard R]"
+    );
+    let mut dataset = "synth-arxiv".to_string();
+    let mut nodes = 0usize;
+    let mut seed = 0u64;
+    let mut format = String::new();
+    let mut out = String::new();
+    let mut rows_per_shard = 1024usize;
+    let mut i = 1;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--dataset" => {
+                i += 1;
+                dataset = args[i].clone();
+            }
+            "--nodes" => {
+                i += 1;
+                nodes = args[i].parse()?;
+            }
+            "--seed" => {
+                i += 1;
+                seed = args[i].parse()?;
+            }
+            "--format" => {
+                i += 1;
+                format = args[i].clone();
+            }
+            "--out" => {
+                i += 1;
+                out = args[i].clone();
+            }
+            "--rows-per-shard" => {
+                i += 1;
+                rows_per_shard = args[i].parse()?;
+            }
+            other => anyhow::bail!("unknown flag {other:?}"),
+        }
+        i += 1;
+    }
+    anyhow::ensure!(format == "shard", "--format shard is the only supported format");
+    anyhow::ensure!(!out.is_empty(), "--out DIR is required");
+    anyhow::ensure!(rows_per_shard >= 1, "--rows-per-shard must be >= 1");
+    let ds = Dataset::load(&dataset, nodes, seed)?;
+    let manifest = varco::graph::io::write_shards(&ds, Path::new(&out), rows_per_shard)?;
+    println!(
+        "wrote {} ({} nodes, {} files, content hash {:016x}) to {}",
+        manifest.name,
+        manifest.n,
+        manifest.files.len(),
+        manifest.content_hash(),
+        out
+    );
     Ok(())
 }
 

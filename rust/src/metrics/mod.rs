@@ -58,6 +58,13 @@ pub struct RunReport {
     /// registry name of the architecture ("" in hand-built reports,
     /// "sage" in reports written before the model registry)
     pub model: String,
+    /// graph store backend the run trained from ("resident" in reports
+    /// written before out-of-core storage)
+    pub store: String,
+    /// feature shard files backing an out-of-core store (0 = resident)
+    pub store_shards: usize,
+    /// adjacency bytes memory-mapped by an out-of-core store (0 = resident)
+    pub store_mapped_bytes: usize,
     pub records: Vec<EpochRecord>,
     /// stale-injected messages the fabric silently skipped
     pub stale_skipped: usize,
@@ -154,6 +161,9 @@ impl RunReport {
             ("seed", Json::num(self.seed as f64)),
             ("engine", Json::str(self.engine.clone())),
             ("model", Json::str(self.model.clone())),
+            ("store", Json::str(self.store.clone())),
+            ("store_shards", Json::num(self.store_shards as f64)),
+            ("store_mapped_bytes", Json::num(self.store_mapped_bytes as f64)),
             ("stale_skipped", Json::num(self.stale_skipped as f64)),
             ("batches", Json::num(self.batches as f64)),
             ("hist_hits", Json::num(self.hist_hits as f64)),
@@ -249,6 +259,17 @@ impl RunReport {
                 .and_then(|v| v.as_str())
                 .unwrap_or("sage")
                 .to_string(),
+            // reports written before out-of-core storage are resident runs
+            store: j
+                .get("store")
+                .and_then(|v| v.as_str())
+                .unwrap_or("resident")
+                .to_string(),
+            store_shards: j.get("store_shards").and_then(|v| v.as_usize()).unwrap_or(0),
+            store_mapped_bytes: j
+                .get("store_mapped_bytes")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0),
             records: Vec::new(),
             // reports written before the halo/replication PR carry neither
             stale_skipped: j.get("stale_skipped").and_then(|v| v.as_usize()).unwrap_or(0),
@@ -501,6 +522,31 @@ mod tests {
         assert_eq!(r.hist_refresh_rows, 0);
         assert!(r.hist_age_hist.is_empty());
         assert_eq!(r.stale_cache_resets, 0);
+    }
+
+    #[test]
+    fn store_telemetry_roundtrips() {
+        let mut r = RunReport { algorithm: "varco".into(), q: 2, ..Default::default() };
+        r.store = "mmap".into();
+        r.store_shards = 4;
+        r.store_mapped_bytes = 4096;
+        let back = RunReport::from_json(&r.to_json()).unwrap();
+        assert_eq!(back.store, "mmap");
+        assert_eq!(back.store_shards, 4);
+        assert_eq!(back.store_mapped_bytes, 4096);
+    }
+
+    #[test]
+    fn legacy_json_without_store_defaults_resident() {
+        let j = Json::parse(
+            r#"{"algorithm":"full-comm","dataset":"d","partitioner":"p","q":2,
+                "seed":0,"engine":"native","records":[]}"#,
+        )
+        .unwrap();
+        let r = RunReport::from_json(&j).unwrap();
+        assert_eq!(r.store, "resident");
+        assert_eq!(r.store_shards, 0);
+        assert_eq!(r.store_mapped_bytes, 0);
     }
 
     #[test]

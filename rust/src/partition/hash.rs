@@ -3,7 +3,7 @@
 //! then rank-balanced to exact equality.
 
 use super::{Partition, Partitioner};
-use crate::graph::Csr;
+use crate::graph::store::Adjacency;
 use crate::Result;
 
 pub struct HashPartitioner;
@@ -13,14 +13,15 @@ impl Partitioner for HashPartitioner {
         "hash"
     }
 
-    fn partition(&self, g: &Csr, q: usize) -> Result<Partition> {
-        anyhow::ensure!(g.n % q == 0, "n={} not divisible by q={q}", g.n);
+    fn partition(&self, g: &dyn Adjacency, q: usize) -> Result<Partition> {
+        let n = g.n_nodes();
+        anyhow::ensure!(n % q == 0, "n={n} not divisible by q={q}");
         // Fibonacci-hash each id, sort by hash, deal equal chunks: balanced
         // by construction, stable across runs, no seed.
-        let mut order: Vec<u32> = (0..g.n as u32).collect();
+        let mut order: Vec<u32> = (0..n as u32).collect();
         order.sort_by_key(|&i| (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
-        let size = g.n / q;
-        let mut assignment = vec![0u32; g.n];
+        let size = n / q;
+        let mut assignment = vec![0u32; n];
         for (rank, &node) in order.iter().enumerate() {
             assignment[node as usize] = (rank / size) as u32;
         }

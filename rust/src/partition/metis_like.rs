@@ -12,7 +12,7 @@
 //!      rebalance so every part has exactly n/q nodes.
 
 use super::{Partition, Partitioner};
-use crate::graph::Csr;
+use crate::graph::store::Adjacency;
 use crate::util::Rng;
 use crate::Result;
 
@@ -42,14 +42,21 @@ struct WGraph {
 }
 
 impl WGraph {
-    fn from_csr(g: &Csr) -> WGraph {
-        WGraph {
-            n: g.n,
-            indptr: g.indptr.clone(),
-            indices: g.indices.clone(),
-            eweights: vec![1; g.indices.len()],
-            nweights: vec![1; g.n],
+    /// Materialize unit-weight adjacency at the finest level in node
+    /// order — structurally identical to cloning a `Csr`'s arrays.
+    fn from_adjacency(g: &dyn Adjacency) -> WGraph {
+        let n = g.n_nodes();
+        let mut indptr = Vec::with_capacity(n + 1);
+        indptr.push(0u64);
+        let mut indices = Vec::with_capacity(2 * g.num_edges());
+        let mut nbrs = Vec::new();
+        for u in 0..n {
+            g.neighbors_into(u, &mut nbrs);
+            indices.extend_from_slice(&nbrs);
+            indptr.push(indices.len() as u64);
         }
+        let m = indices.len();
+        WGraph { n, indptr, indices, eweights: vec![1; m], nweights: vec![1; n] }
     }
 
     fn neighbors(&self, u: usize) -> (&[u32], &[u32]) {
@@ -298,12 +305,13 @@ impl Partitioner for MetisLike {
         "metis-like"
     }
 
-    fn partition(&self, g: &Csr, q: usize) -> Result<Partition> {
-        anyhow::ensure!(g.n % q == 0, "n={} not divisible by q={q}", g.n);
-        anyhow::ensure!(g.n >= q, "fewer nodes than parts");
+    fn partition(&self, g: &dyn Adjacency, q: usize) -> Result<Partition> {
+        let n = g.n_nodes();
+        anyhow::ensure!(n % q == 0, "n={n} not divisible by q={q}");
+        anyhow::ensure!(n >= q, "fewer nodes than parts");
         let mut rng = Rng::new(self.seed);
         // Phase 1: coarsen
-        let mut levels: Vec<WGraph> = vec![WGraph::from_csr(g)];
+        let mut levels: Vec<WGraph> = vec![WGraph::from_adjacency(g)];
         let mut maps: Vec<Vec<u32>> = Vec::new();
         let target = COARSE_TARGET.max(8 * q);
         while levels.last().unwrap().n > target {
@@ -347,6 +355,7 @@ impl Partitioner for MetisLike {
 mod tests {
     use super::*;
     use crate::graph::generate::{erdos_renyi, sbm};
+    use crate::graph::Csr;
     use crate::partition::random::RandomPartitioner;
 
     #[test]

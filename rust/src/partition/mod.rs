@@ -23,6 +23,7 @@ pub use replication::{assign_routes, replica_holders, MirrorPlan};
 pub use stats::PartitionStats;
 pub use worker_graph::{plan_stats, PlanMode, PlanStats, SendPlan, WorkerGraph, DISCARD_SLOT};
 
+use crate::graph::store::Adjacency;
 use crate::graph::Csr;
 use crate::Result;
 
@@ -97,9 +98,11 @@ impl Partition {
 }
 
 /// Strategy interface; implementations must return exactly-equal parts.
+/// Takes abstract adjacency so out-of-core stores partition without
+/// materializing a resident `Csr`.
 pub trait Partitioner {
     fn name(&self) -> &'static str;
-    fn partition(&self, g: &Csr, q: usize) -> Result<Partition>;
+    fn partition(&self, g: &dyn Adjacency, q: usize) -> Result<Partition>;
 }
 
 /// Look up a partitioner by config name.

@@ -1,7 +1,7 @@
 //! Random equal-size partitioning (the paper's hardest setting).
 
 use super::{Partition, Partitioner};
-use crate::graph::Csr;
+use crate::graph::store::Adjacency;
 use crate::util::Rng;
 use crate::Result;
 
@@ -15,12 +15,13 @@ impl Partitioner for RandomPartitioner {
         "random"
     }
 
-    fn partition(&self, g: &Csr, q: usize) -> Result<Partition> {
-        anyhow::ensure!(g.n % q == 0, "n={} not divisible by q={q}", g.n);
-        let mut order: Vec<u32> = (0..g.n as u32).collect();
+    fn partition(&self, g: &dyn Adjacency, q: usize) -> Result<Partition> {
+        let n = g.n_nodes();
+        anyhow::ensure!(n % q == 0, "n={n} not divisible by q={q}");
+        let mut order: Vec<u32> = (0..n as u32).collect();
         Rng::new(self.seed).shuffle(&mut order);
-        let size = g.n / q;
-        let mut assignment = vec![0u32; g.n];
+        let size = n / q;
+        let mut assignment = vec![0u32; n];
         for (rank, &node) in order.iter().enumerate() {
             assignment[node as usize] = (rank / size) as u32;
         }

@@ -11,7 +11,7 @@
 //! the full product).
 
 use super::Partition;
-use crate::graph::Csr;
+use crate::graph::store::Adjacency;
 use crate::tensor::Matrix;
 use crate::Result;
 
@@ -271,20 +271,24 @@ impl WorkerGraph {
         self.boundary.len()
     }
 
-    /// Build per-worker views for all parts.
-    pub fn build_all(g: &Csr, partition: &Partition) -> Result<Vec<WorkerGraph>> {
-        anyhow::ensure!(partition.n() == g.n, "partition size mismatch");
+    /// Build per-worker views for all parts.  Takes abstract adjacency so
+    /// the same construction runs against resident and mmap stores; the
+    /// scratch `nbrs` buffer preserves the exact neighbor iteration order
+    /// (and therefore every nnz accumulation order) of the old
+    /// `Csr::neighbors` slices.
+    pub fn build_all(g: &dyn Adjacency, partition: &Partition) -> Result<Vec<WorkerGraph>> {
+        anyhow::ensure!(partition.n() == g.n_nodes(), "partition size mismatch");
         let q = partition.q;
         let assignment = &partition.assignment;
+        let mut nbrs = Vec::new();
         // order each part interior-first (interior ascending, then halo
         // ascending), so every downstream row index is block-contiguous
         let mut parts: Vec<Vec<u32>> = Vec::with_capacity(q);
         let mut n_interior = Vec::with_capacity(q);
         for (part, nodes) in partition.parts().iter().enumerate() {
             let (interior, halo): (Vec<u32>, Vec<u32>) = nodes.iter().copied().partition(|&u| {
-                g.neighbors(u as usize)
-                    .iter()
-                    .all(|&v| assignment[v as usize] as usize == part)
+                g.neighbors_into(u as usize, &mut nbrs);
+                nbrs.iter().all(|&v| assignment[v as usize] as usize == part)
             });
             n_interior.push(interior.len());
             let mut ordered = interior;
@@ -292,7 +296,7 @@ impl WorkerGraph {
             parts.push(ordered);
         }
         // global -> (part, local index), in the reordered numbering
-        let mut local_of = vec![0u32; g.n];
+        let mut local_of = vec![0u32; g.n_nodes()];
         for nodes in &parts {
             for (li, &node) in nodes.iter().enumerate() {
                 local_of[node as usize] = li as u32;
@@ -302,11 +306,13 @@ impl WorkerGraph {
         let mut workers = Vec::with_capacity(q);
         for (part, nodes) in parts.iter().enumerate() {
             // boundary = sorted unique remote neighbors
-            let mut boundary: Vec<u32> = nodes
-                .iter()
-                .flat_map(|&u| g.neighbors(u as usize).iter().copied())
-                .filter(|&v| assignment[v as usize] as usize != part)
-                .collect();
+            let mut boundary: Vec<u32> = Vec::new();
+            for &u in nodes.iter() {
+                g.neighbors_into(u as usize, &mut nbrs);
+                boundary.extend(
+                    nbrs.iter().copied().filter(|&v| assignment[v as usize] as usize != part),
+                );
+            }
             boundary.sort_unstable();
             boundary.dedup();
             let slot_of: std::collections::HashMap<u32, u32> = boundary
@@ -337,7 +343,7 @@ impl WorkerGraph {
             let mut deg = Vec::with_capacity(nl);
             let mut deg_local_v = Vec::with_capacity(nl);
             for &u in nodes.iter() {
-                let nbrs = g.neighbors(u as usize);
+                g.neighbors_into(u as usize, &mut nbrs);
                 let deg_total = nbrs.len().max(1) as f32;
                 let local_nbrs: Vec<u32> = nbrs
                     .iter()
@@ -347,7 +353,7 @@ impl WorkerGraph {
                 let deg_local = local_nbrs.len().max(1) as f32;
                 deg.push(nbrs.len() as u32);
                 deg_local_v.push(local_nbrs.len() as u32);
-                for &v in nbrs {
+                for &v in &nbrs {
                     if assignment[v as usize] as usize == part {
                         ll.indices.push(local_of[v as usize]);
                         ll.values.push(1.0 / deg_total);
@@ -365,8 +371,7 @@ impl WorkerGraph {
                 ll_local.indptr.push(ll_local.indices.len() as u64);
             }
 
-            let deg_bnd: Vec<u32> =
-                boundary.iter().map(|&v| g.degree(v as usize) as u32).collect();
+            let deg_bnd: Vec<u32> = boundary.iter().map(|&v| g.degree(v as usize) as u32).collect();
             workers.push(WorkerGraph {
                 part,
                 nodes: nodes.clone(),
@@ -476,6 +481,7 @@ impl WorkerGraph {
 mod tests {
     use super::*;
     use crate::graph::generate::sbm;
+    use crate::graph::Csr;
     use crate::partition::random::RandomPartitioner;
     use crate::partition::Partitioner;
 

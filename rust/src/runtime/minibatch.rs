@@ -16,6 +16,7 @@
 //! multi-process runtimes rebuild bit-identical views independently.
 
 use crate::graph::sample::{draw_batch, induce, sample_nodes, SamplingConfig};
+use crate::graph::store::GraphStore;
 use crate::graph::{Dataset, Split};
 use crate::partition::{Partition, WorkerGraph};
 use crate::tensor::Matrix;
@@ -39,36 +40,37 @@ pub struct MinibatchView {
 /// assignment; the view restricts it to the sampled nodes (unbalanced —
 /// a batch rarely covers every part equally).
 pub fn build_view(
-    full: &Dataset,
+    full: &dyn GraphStore,
     assignment: &[u32],
     q: usize,
     sampling: &SamplingConfig,
     seed: u64,
     epoch: usize,
 ) -> Result<MinibatchView> {
-    anyhow::ensure!(assignment.len() == full.n(), "assignment size mismatch");
-    let batch = draw_batch(&full.split.train, sampling.batch_size, seed, epoch);
-    anyhow::ensure!(!batch.is_empty(), "dataset {} has no training nodes to sample", full.name);
-    let nodes = sample_nodes(&full.graph, &batch, &sampling.fanouts, seed, epoch);
-    let graph = induce(&full.graph, &nodes);
+    anyhow::ensure!(assignment.len() == full.n_nodes(), "assignment size mismatch");
+    let batch = draw_batch(&full.split().train, sampling.batch_size, seed, epoch);
+    anyhow::ensure!(!batch.is_empty(), "dataset {} has no training nodes to sample", full.name());
+    let nodes = sample_nodes(full.adj(), &batch, &sampling.fanouts, seed, epoch);
+    let graph = induce(full.adj(), &nodes);
 
-    let f = full.f_in();
-    let mut features = Matrix::zeros(nodes.len(), f);
+    // gather only the sampled rows — with an out-of-core store this (not
+    // the full n x f matrix) is all that ever becomes resident
+    let mut features = Matrix::zeros(0, 0);
+    full.gather_rows(&nodes, &mut features)?;
     let mut labels = Vec::with_capacity(nodes.len());
+    full.gather_labels(&nodes, &mut labels)?;
     // only batch nodes train on the view; sampled support nodes exist to
     // feed aggregation, and eval stays on the full graph
     let mut train = vec![false; nodes.len()];
     for (local, &gid) in nodes.iter().enumerate() {
-        features.row_mut(local).copy_from_slice(full.features.row(gid as usize));
-        labels.push(full.labels[gid as usize]);
         train[local] = batch.binary_search(&gid).is_ok();
     }
     let dataset = Dataset {
-        name: full.name.clone(),
+        name: full.name().to_string(),
         graph,
         features,
         labels,
-        classes: full.classes,
+        classes: full.classes(),
         split: Split { train, val: vec![false; nodes.len()], test: vec![false; nodes.len()] },
     };
 

@@ -135,7 +135,7 @@ fn centralized_engine_forward_matches_full_graph_eval() {
         let w = Weights::glorot(&spec, 9);
         let mut e = NativeWorkerEngine::new(wgs[0].clone(), spec.clone());
         let eval = varco::coordinator::FullGraphEval::new(&ds, &spec);
-        let want = eval.logits(&w);
+        let want = eval.logits(&w).unwrap();
         let mut h = ds.features.clone();
         for l in 0..spec.n_layers() {
             let hb = Matrix::zeros(0, spec.layers[l].f_in);

@@ -1,0 +1,258 @@
+//! Out-of-core storage equivalence pins.
+//!
+//! * `store = mmap` trains bitwise identically to `store = resident`:
+//!   same weights, same per-epoch records, same communication ledger —
+//!   across run modes (sequential/parallel), training modes (full and
+//!   sampled, with and without a historical cache), and transports
+//!   (in-process and tcp).  The shard directory is a storage decision,
+//!   never a numerical one.
+//! * admission: a worker presents `admission_hash` (config hash mixed
+//!   with the shard manifest's content hash), so a worker pointed at a
+//!   *different shard build* of the same-named dataset is refused by the
+//!   driver instead of silently training on diverged features.
+
+use std::net::TcpListener;
+use std::thread;
+use varco::config::{build_trainer, TrainConfig};
+use varco::coordinator::dist::protocol::{read_ctrl, Ctrl};
+use varco::coordinator::dist::{
+    admission_hash, run_driver, run_worker, CrashBehavior, DistRun, DriverOptions, WorkerOptions,
+};
+use varco::graph::io::write_shards;
+use varco::graph::Dataset;
+use varco::metrics::RunReport;
+use varco::util::testing::TempDir;
+
+/// A small, fast resident-store config (mirrors `dist_equivalence.rs`).
+fn base_cfg(dir: &TempDir) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.dataset = "karate-like".into();
+    cfg.nodes = 0;
+    cfg.q = 2;
+    cfg.model = "sage".into();
+    cfg.plan = "sparse".into();
+    cfg.comm = "fixed:2".into();
+    cfg.epochs = 3;
+    cfg.hidden = 4;
+    cfg.layers = 2;
+    cfg.eval_every = 1;
+    cfg.seed = 7;
+    cfg.ckpt_dir = dir.path().join("ckpt").to_string_lossy().into_owned();
+    cfg
+}
+
+/// Build the shard directory `cfg` would train from and return the
+/// matching `store = mmap` twin of `cfg`.
+fn mmap_twin(cfg: &TrainConfig, shards: &TempDir) -> TrainConfig {
+    let ds = Dataset::load(&cfg.dataset, cfg.nodes, cfg.seed).expect("dataset");
+    write_shards(&ds, shards.path(), 10).expect("write shards");
+    let mut m = cfg.clone();
+    m.store = "mmap".into();
+    m.store_path = shards.path().to_string_lossy().into_owned();
+    m
+}
+
+fn assert_reports_match(a: &RunReport, b: &RunReport) {
+    assert_eq!(a.records.len(), b.records.len(), "epoch counts differ");
+    for (t, r) in a.records.iter().zip(&b.records) {
+        assert_eq!(t.epoch, r.epoch);
+        assert_eq!(t.loss.to_bits(), r.loss.to_bits(), "loss differs at epoch {}", t.epoch);
+        assert_eq!(t.train_acc.to_bits(), r.train_acc.to_bits(), "epoch {}", t.epoch);
+        assert_eq!(t.val_acc.to_bits(), r.val_acc.to_bits(), "epoch {}", t.epoch);
+        assert_eq!(t.test_acc.to_bits(), r.test_acc.to_bits(), "epoch {}", t.epoch);
+        assert_eq!(t.rate, r.rate, "epoch {}", t.epoch);
+        assert_eq!(t.bytes_cum, r.bytes_cum, "byte accounting differs at epoch {}", t.epoch);
+    }
+    assert_eq!(a.stale_skipped, b.stale_skipped);
+    assert_eq!(a.batches, b.batches);
+    assert_eq!(a.hist_hits, b.hist_hits);
+    assert_eq!(a.hist_misses, b.hist_misses);
+    assert_eq!(a.hist_refresh_rows, b.hist_refresh_rows);
+    assert_eq!(a.hist_age_hist, b.hist_age_hist);
+}
+
+fn assert_weights_bitwise(a: &varco::engine::Weights, b: &varco::engine::Weights) {
+    let (a, b) = (a.flatten(), b.flatten());
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "weight {i} differs: {x} vs {y}");
+    }
+}
+
+/// Run the driver plus `q` worker threads over real localhost sockets.
+fn run_tcp(cfg: &TrainConfig) -> DistRun {
+    let mut cfg = cfg.clone();
+    cfg.transport = "tcp".into();
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind test listener");
+    cfg.driver_addr = listener.local_addr().unwrap().to_string();
+    let workers: Vec<_> = (0..cfg.q)
+        .map(|rank| {
+            let wcfg = cfg.clone();
+            thread::spawn(move || {
+                run_worker(&wcfg, rank, WorkerOptions { crash: CrashBehavior::Return })
+            })
+        })
+        .collect();
+    let run = run_driver(
+        &cfg,
+        DriverOptions { listener: Some(listener), spawn_workers: false, resume: false },
+    )
+    .expect("driver run");
+    for (rank, w) in workers.into_iter().enumerate() {
+        w.join().unwrap().unwrap_or_else(|e| panic!("worker {rank} failed: {e}"));
+    }
+    run
+}
+
+#[test]
+fn full_mode_mmap_matches_resident_across_run_modes() {
+    for run_mode in ["sequential", "parallel"] {
+        let dir = TempDir::new().unwrap();
+        let mut cfg = base_cfg(&dir);
+        cfg.run_mode = run_mode.into();
+        let shards = TempDir::new().unwrap();
+        let mcfg = mmap_twin(&cfg, &shards);
+
+        let mut resident = build_trainer(&cfg).expect("resident trainer");
+        let r_report = resident.run().expect("resident run");
+        let mut mmap = build_trainer(&mcfg).expect("mmap trainer");
+        let m_report = mmap.run().expect("mmap run");
+
+        assert_weights_bitwise(&mmap.weights, &resident.weights);
+        assert_reports_match(&m_report, &r_report);
+        assert_eq!(mmap.ledger().total_bytes(), resident.ledger().total_bytes(), "{run_mode}");
+        assert_eq!(
+            mmap.ledger().message_count(),
+            resident.ledger().message_count(),
+            "{run_mode}"
+        );
+
+        // backend telemetry distinguishes the two otherwise-identical runs
+        assert_eq!(r_report.store, "resident");
+        assert_eq!(r_report.store_shards, 0);
+        assert_eq!(m_report.store, "mmap", "{run_mode}");
+        assert!(m_report.store_shards > 0, "{run_mode}: shard count missing");
+        assert!(m_report.store_mapped_bytes > 0, "{run_mode}: mapped adjacency missing");
+    }
+}
+
+#[test]
+fn sampled_mmap_matches_resident_across_staleness() {
+    // mini-batch draws, fanout masks, and historical refreshes are pure
+    // functions of (config, seed, epoch); the batch view is materialized
+    // through GraphStore::gather_rows, so the backend must not show up
+    // in a single bit of the run
+    for staleness in [0usize, 2] {
+        let dir = TempDir::new().unwrap();
+        let mut cfg = base_cfg(&dir);
+        cfg.mode = "sampled".into();
+        cfg.batch_size = 8;
+        cfg.fanout = "4,inf".into(); // layers = 2 in base_cfg
+        cfg.staleness = staleness;
+        cfg.epochs = 4;
+        let shards = TempDir::new().unwrap();
+        let mcfg = mmap_twin(&cfg, &shards);
+
+        let mut resident = build_trainer(&cfg).expect("resident trainer");
+        let r_report = resident.run().expect("resident run");
+        let mut mmap = build_trainer(&mcfg).expect("mmap trainer");
+        let m_report = mmap.run().expect("mmap run");
+
+        assert_weights_bitwise(&mmap.weights, &resident.weights);
+        assert_reports_match(&m_report, &r_report);
+        assert_eq!(m_report.batches, 4, "staleness={staleness}: one batch per epoch");
+        if staleness > 0 {
+            assert!(m_report.hist_refresh_rows > 0, "staleness={staleness}: refreshes flow");
+        }
+    }
+}
+
+#[test]
+fn tcp_mmap_matches_resident_inproc_bitwise() {
+    // full mode: an out-of-core tcp fleet lands on exactly the resident
+    // in-process trainer's weights and records
+    let dir = TempDir::new().unwrap();
+    let cfg = base_cfg(&dir);
+    let shards = TempDir::new().unwrap();
+    let mcfg = mmap_twin(&cfg, &shards);
+
+    let mut resident = build_trainer(&cfg).expect("resident trainer");
+    let r_report = resident.run().expect("resident run");
+    let dist = run_tcp(&mcfg);
+    assert_weights_bitwise(&dist.weights, &resident.weights);
+    assert_reports_match(&dist.report, &r_report);
+    assert_eq!(dist.report.restarts, 0);
+    assert_eq!(dist.report.store, "mmap");
+    assert!(dist.report.store_shards > 0);
+}
+
+#[test]
+fn sampled_tcp_mmap_matches_resident_inproc_bitwise() {
+    // sampled + historical cache is the hardest case: every worker
+    // process opens the shard directory independently and rebuilds the
+    // same per-epoch batch view the resident in-process trainer installs
+    let dir = TempDir::new().unwrap();
+    let mut cfg = base_cfg(&dir);
+    cfg.mode = "sampled".into();
+    cfg.batch_size = 8;
+    cfg.fanout = "4,inf".into();
+    cfg.staleness = 2;
+    cfg.epochs = 4;
+    let shards = TempDir::new().unwrap();
+    let mcfg = mmap_twin(&cfg, &shards);
+
+    let mut resident = build_trainer(&cfg).expect("resident trainer");
+    let r_report = resident.run().expect("resident run");
+    let dist = run_tcp(&mcfg);
+    assert_weights_bitwise(&dist.weights, &resident.weights);
+    assert_reports_match(&dist.report, &r_report);
+    assert!(dist.report.hist_refresh_rows > 0, "refreshes must flow over tcp too");
+}
+
+#[test]
+fn worker_joins_with_shard_content_hash_and_mismatched_builds_differ() {
+    // the admission handshake, observed from the driver's side of the
+    // socket: a worker trained out of core presents config_hash mixed
+    // with its manifest's content hash, so two shard builds of the
+    // same-named dataset (here: different feature seeds) can never
+    // admit into the same run
+    let dir = TempDir::new().unwrap();
+    let cfg = base_cfg(&dir);
+
+    // the driver's build (seed 7) and a diverged build (seed 8): same
+    // dataset name, same node count — only the content differs
+    let driver_shards = TempDir::new().unwrap();
+    let driver_cfg = mmap_twin(&cfg, &driver_shards);
+    let other = Dataset::load(&cfg.dataset, cfg.nodes, cfg.seed + 1).expect("dataset");
+    let worker_shards = TempDir::new().unwrap();
+    write_shards(&other, worker_shards.path(), 10).expect("write shards");
+    let mut worker_cfg = driver_cfg.clone();
+    worker_cfg.store_path = worker_shards.path().to_string_lossy().into_owned();
+
+    let expect_driver = admission_hash(&driver_cfg).expect("driver admission hash");
+    let expect_worker = admission_hash(&worker_cfg).expect("worker admission hash");
+    assert_ne!(expect_driver, expect_worker, "diverged builds must hash apart");
+
+    // play the driver: accept the worker's control connection, read its
+    // Join, then hang up — exactly what rejection does (the real driver
+    // drops the writer; the worker sees EOF and dies)
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind test listener");
+    let mut wcfg = worker_cfg.clone();
+    wcfg.transport = "tcp".into();
+    wcfg.driver_addr = listener.local_addr().unwrap().to_string();
+    let w = thread::spawn(move || {
+        run_worker(&wcfg, 0, WorkerOptions { crash: CrashBehavior::Return })
+    });
+    let (mut conn, _) = listener.accept().expect("worker dials in");
+    match read_ctrl(&mut conn).expect("read join").expect("join frame") {
+        Ctrl::Join { rank, config_hash, .. } => {
+            assert_eq!(rank, 0);
+            assert_eq!(config_hash, expect_worker, "worker presents its shard-mixed hash");
+            assert_ne!(config_hash, expect_driver, "the driver would refuse this join");
+        }
+        other => panic!("expected Join, got {other:?}"),
+    }
+    drop(conn); // rejection: the connection closes without a Welcome
+    let res = w.join().unwrap();
+    assert!(res.is_err(), "a refused worker must fail, not train solo");
+}
